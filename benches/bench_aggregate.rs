@@ -1,0 +1,35 @@
+//! Server aggregation (Lemma 1 majority vote): weighted vs uniform-
+//! popcount paths across client counts — the L3 hot loop that closes
+//! every round. K=20 × m=10,177 is the paper's MNIST configuration.
+
+use pfed1bs::bench_harness::{black_box, Bench};
+use pfed1bs::sketch::bitpack::{majority_vote_uniform, majority_vote_weighted, pack_signs};
+use pfed1bs::util::rng::Rng;
+
+fn main() {
+    let mut b = Bench::new("aggregate");
+    let mut rng = Rng::new(5);
+
+    for (k, m) in [(20usize, 10_177usize), (20, 45_368), (100, 10_177), (5, 10_177)] {
+        let sketches: Vec<Vec<u64>> = (0..k)
+            .map(|_| {
+                let signs: Vec<f32> = (0..m)
+                    .map(|_| if rng.f32() < 0.5 { 1.0 } else { -1.0 })
+                    .collect();
+                pack_signs(&signs)
+            })
+            .collect();
+        let weights = vec![1.0f32 / k as f32; k];
+        b.bench_elems(&format!("weighted_vote_K{k}_m{m}"), (k * m) as u64, || {
+            black_box(majority_vote_weighted(
+                black_box(&sketches),
+                black_box(&weights),
+                m,
+            ));
+        });
+        b.bench_elems(&format!("uniform_vote_K{k}_m{m}"), (k * m) as u64, || {
+            black_box(majority_vote_uniform(black_box(&sketches), m));
+        });
+    }
+    b.report();
+}

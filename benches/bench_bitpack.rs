@@ -1,0 +1,31 @@
+//! One-bit transport primitives: pack/unpack at the sketch sizes each
+//! model variant ships per round (m = 10,177 / 45,368) and at the n-bit
+//! sizes the OBDA-style baselines ship.
+
+use pfed1bs::bench_harness::{black_box, Bench};
+use pfed1bs::sketch::bitpack::{pack_signs, unpack_signs};
+use pfed1bs::util::rng::Rng;
+
+fn main() {
+    let mut b = Bench::new("bitpack");
+    let mut rng = Rng::new(3);
+
+    for (m, label) in [
+        (10_177usize, "m_mlp784"),
+        (45_368, "m_mlp3072"),
+        (101_770, "n_mlp784"),
+        (453_682, "n_mlp3072"),
+    ] {
+        let signs: Vec<f32> = (0..m)
+            .map(|_| if rng.f32() < 0.5 { 1.0 } else { -1.0 })
+            .collect();
+        let packed = pack_signs(&signs);
+        b.bench_elems(&format!("pack_{label}({m})"), m as u64, || {
+            black_box(pack_signs(black_box(&signs)));
+        });
+        b.bench_elems(&format!("unpack_{label}({m})"), m as u64, || {
+            black_box(unpack_signs(black_box(&packed), m));
+        });
+    }
+    b.report();
+}

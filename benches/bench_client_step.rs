@@ -1,0 +1,91 @@
+//! Hot-path PJRT execute latency: client_step (task grad + fused SRHT
+//! regularizer), sgd_step (task grad only — the FHT-free control),
+//! sketch, and eval, per model variant. The client_step − sgd_step gap is
+//! the price of the paper's regularizer; the sketch row is one forward
+//! butterfly. Feeds EXPERIMENTS.md §Perf.
+
+use pfed1bs::bench_harness::{black_box, Bench};
+use pfed1bs::runtime::Runtime;
+use pfed1bs::sketch::SrhtOperator;
+use pfed1bs::util::rng::Rng;
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.txt").exists() {
+        eprintln!("skipping bench_client_step: run `make artifacts` first");
+        return;
+    }
+    let rt = Runtime::new("artifacts").expect("runtime");
+    let mut b = Bench::new("client_step");
+    // cargo bench passes `--bench`; keep only bare variant names
+    let variants: Vec<String> = std::env::args()
+        .skip(1)
+        .filter(|a| !a.starts_with('-'))
+        .collect();
+    let variants = if variants.is_empty() {
+        vec!["mlp784".to_string(), "mlp3072".to_string()]
+    } else {
+        variants
+    };
+
+    for variant in &variants {
+        let info = rt.manifest.get("client_step", variant).expect("manifest");
+        let op = SrhtOperator::from_seed(7, info.n, info.m);
+        let model = rt.model(variant, &op).expect("model");
+        let g = model.geom;
+        let mut rng = Rng::new(1);
+        let w: Vec<f32> = (0..g.n).map(|_| 0.1 * rng.normal()).collect();
+        let x: Vec<f32> = (0..g.train_batch * g.input_dim).map(|_| rng.normal()).collect();
+        let y: Vec<i32> = (0..g.train_batch).map(|_| rng.below(g.classes) as i32).collect();
+        let xe: Vec<f32> = (0..g.eval_batch * g.input_dim).map(|_| rng.normal()).collect();
+        let ye: Vec<i32> = (0..g.eval_batch).map(|_| rng.below(g.classes) as i32).collect();
+        let v = vec![1.0f32; g.m];
+
+        b.bench(&format!("{variant}/client_step"), || {
+            black_box(
+                model
+                    .client_step(&w, &x, &y, &v, 0.05, 5e-4, 1e-5, 1e4)
+                    .unwrap(),
+            );
+        });
+        b.bench(&format!("{variant}/sgd_step"), || {
+            black_box(model.sgd_step(&w, &x, &y, 0.05, 1e-5).unwrap());
+        });
+        b.bench(&format!("{variant}/sketch"), || {
+            black_box(model.sketch_sign(&w).unwrap());
+        });
+        b.bench(&format!("{variant}/eval_batch"), || {
+            black_box(model.eval_batch(&w, &xe, &ye).unwrap());
+        });
+        b.bench(&format!("{variant}/grad_norm"), || {
+            black_box(model.grad_norm(&w, &x, &y, &v, 5e-4, 1e-5, 1e4).unwrap());
+        });
+
+        // §Perf before/after: per-step cost when w stays device-resident
+        // across R=10 steps (client_round) vs the host-round-trip path
+        // (client_step called 10 times is the row above × 10).
+        b.bench(&format!("{variant}/client_round_R10 (per-round)"), || {
+            black_box(
+                model
+                    .client_round(
+                        &w,
+                        || (x.clone(), y.clone()),
+                        10,
+                        &v,
+                        0.05,
+                        5e-4,
+                        1e-5,
+                        1e4,
+                    )
+                    .unwrap(),
+            );
+        });
+        b.bench(&format!("{variant}/sgd_round_R10 (per-round)"), || {
+            black_box(
+                model
+                    .sgd_round(&w, || (x.clone(), y.clone()), 10, 0.05, 1e-5)
+                    .unwrap(),
+            );
+        });
+    }
+    b.report();
+}

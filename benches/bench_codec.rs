@@ -1,0 +1,40 @@
+//! Wire codec throughput: the encode/decode cost of each payload kind at
+//! the sizes that cross the simulated network every round, verifying the
+//! transport layer never becomes the L3 bottleneck.
+
+use pfed1bs::bench_harness::{black_box, Bench};
+use pfed1bs::comm::{decode, encode, Payload};
+use pfed1bs::util::rng::Rng;
+
+fn main() {
+    let mut b = Bench::new("codec");
+    let mut rng = Rng::new(9);
+
+    let dense = Payload::Dense((0..101_770).map(|_| rng.normal()).collect());
+    let signs = Payload::Signs(
+        (0..10_177)
+            .map(|_| if rng.f32() < 0.5 { 1.0 } else { -1.0 })
+            .collect(),
+    );
+    let scaled = Payload::ScaledSigns {
+        signs: (0..101_770)
+            .map(|_| if rng.f32() < 0.5 { 1.0 } else { -1.0 })
+            .collect(),
+        scale: 0.01,
+    };
+
+    for (p, label, elems) in [
+        (&dense, "dense_n101770", 101_770u64),
+        (&signs, "signs_m10177", 10_177),
+        (&scaled, "scaled_signs_n101770", 101_770),
+    ] {
+        let frame = encode(p);
+        b.bench_elems(&format!("encode_{label}"), elems, || {
+            black_box(encode(black_box(p)));
+        });
+        b.bench_elems(&format!("decode_{label}"), elems, || {
+            black_box(decode(black_box(&frame)).unwrap());
+        });
+    }
+    b.report();
+}

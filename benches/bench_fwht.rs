@@ -1,0 +1,63 @@
+//! FWHT / projection benchmark — the compute claim behind Appendix
+//! Fig. 3 and the paper's "Efficient Projection" section: the structured
+//! O(n log n) transform vs the O(mn) dense Gaussian projection, across
+//! the sizes used by the model variants (2^17, 2^19) plus a sweep.
+
+use pfed1bs::bench_harness::{black_box, Bench};
+use pfed1bs::sketch::{fwht_normalized, DenseGaussianOperator, SrhtOperator};
+use pfed1bs::util::rng::Rng;
+
+fn main() {
+    let mut b = Bench::new("fwht_projection");
+    let mut rng = Rng::new(7);
+
+    // raw transform sweep
+    for log2n in [10usize, 13, 16, 17, 19] {
+        let n = 1usize << log2n;
+        let mut x: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        b.bench_elems(&format!("fwht_2^{log2n}"), n as u64, || {
+            fwht_normalized(black_box(&mut x));
+        });
+    }
+
+    // full SRHT sketch (pad + D + FWHT + subsample + sign) at the two
+    // model geometries, vs the dense Gaussian projection the paper
+    // replaces (dense limited to a feasible size — it is O(mn))
+    for (n, label) in [(101_770usize, "mlp784"), (453_682, "mlp3072")] {
+        let m = n / 10;
+        let op = SrhtOperator::from_seed(1, n, m);
+        let w: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        b.bench_elems(&format!("srht_sketch_{label}(n={n})"), n as u64, || {
+            black_box(op.sketch_sign(black_box(&w)));
+        });
+        b.bench_elems(&format!("srht_adjoint_{label}"), n as u64, || {
+            let v: Vec<f32> = vec![1.0; m];
+            black_box(op.adjoint(black_box(&v)));
+        });
+    }
+
+    // dense Gaussian at a reduced size to keep the bench finite; the
+    // asymptotic O(mn) vs O(n log n) gap is the printed ratio
+    let n_small = 16_384usize;
+    let m_small = n_small / 10;
+    let dense = DenseGaussianOperator::from_seed(2, n_small, m_small);
+    let srht_small = SrhtOperator::from_seed(2, n_small, m_small);
+    let w_small: Vec<f32> = (0..n_small).map(|_| rng.normal()).collect();
+    let md = b
+        .bench_elems(&format!("dense_gaussian_sketch(n={n_small})"), n_small as u64, || {
+            black_box(dense.sketch_sign(black_box(&w_small)));
+        })
+        .mean_ns;
+    let ms = b
+        .bench_elems(&format!("srht_sketch(n={n_small})"), n_small as u64, || {
+            black_box(srht_small.sketch_sign(black_box(&w_small)));
+        })
+        .mean_ns;
+
+    b.report();
+    println!(
+        "\ndense/srht ratio at n={n_small}: {:.1}x (theory m/log2(n') = {:.1}x)",
+        md / ms,
+        (m_small as f64) / (n_small as f64).log2()
+    );
+}

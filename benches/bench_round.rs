@@ -1,0 +1,62 @@
+//! End-to-end round latency per algorithm (the Table-2 wall-clock story):
+//! one full communication round — downlink, R local steps × S clients on
+//! the PJRT runtime, compression, uplink, server aggregation — measured
+//! through the real coordinator path.
+
+use pfed1bs::algorithms::{self, Ctx};
+use pfed1bs::bench_harness::Bench;
+use pfed1bs::config::RunConfig;
+use pfed1bs::coordinator::Coordinator;
+use pfed1bs::data::DatasetName;
+use pfed1bs::experiments::Lab;
+use pfed1bs::util::rng::Rng;
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.txt").exists() {
+        eprintln!("skipping bench_round: run `make artifacts` first");
+        return;
+    }
+    let lab = Lab::new("artifacts").expect("lab");
+    let mut b = Bench::new("round");
+    // measure few iterations — a round is 100s of ms
+    b.measure = std::time::Duration::from_secs(4);
+    b.warmup = std::time::Duration::from_millis(500);
+
+    for alg_name in ["pfed1bs", "fedavg", "obda", "obcsaa", "zsignfed", "eden", "fedbat"] {
+        let mut cfg = RunConfig::preset(DatasetName::Mnist);
+        cfg.algorithm = alg_name.to_string();
+        cfg.local_steps = 5;
+        let model = lab.model_for(&cfg).expect("model");
+        let mut alg = algorithms::build(alg_name).expect("alg");
+        let mut coord = Coordinator::new(cfg.clone(), &model);
+        let mut rng = Rng::new(1);
+        {
+            let mut ctx = Ctx {
+                model: coord.model,
+                data: &coord.data,
+                cfg: &coord.cfg,
+                net: &mut coord.net,
+                rng: &mut rng,
+                projection: &coord.projection,
+            };
+            alg.init(&mut ctx).expect("init");
+        }
+        let selected: Vec<usize> = (0..cfg.participating).collect();
+        let weights = vec![1.0f32 / cfg.participating as f32; cfg.participating];
+        let mut t = 0usize;
+        b.bench(&format!("{alg_name}/round(S=20,R=5)"), || {
+            let mut ctx = Ctx {
+                model: coord.model,
+                data: &coord.data,
+                cfg: &coord.cfg,
+                net: &mut coord.net,
+                rng: &mut rng,
+                projection: &coord.projection,
+            };
+            alg.round(t, &selected, &weights, &mut ctx).expect("round");
+            coord.net.end_round();
+            t += 1;
+        });
+    }
+    b.report();
+}

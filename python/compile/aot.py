@@ -1,0 +1,124 @@
+"""AOT lowering driver: JAX -> HLO text artifacts for the rust runtime.
+
+Emits, for every model variant in ``model.VARIANTS``, one HLO-text file
+per artifact function plus a ``manifest.txt`` the rust side parses.
+
+HLO *text* (never ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. Lowered with ``return_tuple=True``
+so the rust side always unwraps a tuple. See /opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+Re-running is cheap: files are only rewritten when content changes, and
+`make artifacts` skips the whole step when inputs are older than outputs.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered, return_tuple: bool = True) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange).
+
+    ``return_tuple=False`` is used for the single-output ``*_w`` step
+    artifacts: a non-tuple root lets the rust runtime reuse the output
+    device buffer directly as the next step's input (w stays device-
+    resident across the whole local round — EXPERIMENTS.md §Perf).
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=return_tuple
+    )
+    return comp.as_hlo_text()
+
+
+def write_if_changed(path: str, content: str) -> bool:
+    if os.path.exists(path):
+        with open(path) as f:
+            if f.read() == content:
+                return False
+    with open(path, "w") as f:
+        f.write(content)
+    return True
+
+
+def lower_variant(variant: model.ModelVariant, out_dir: str, manifest: list) -> None:
+    shapes = model.example_shapes(variant)
+    fns = model.artifact_fns(variant)
+    for fn_name, args in shapes.items():
+        lowered = jax.jit(fns[fn_name]).lower(*args)
+        # *_w artifacts return one array and are lowered tuple-free
+        text = to_hlo_text(lowered, return_tuple=not fn_name.endswith("_w"))
+        fname = f"{fn_name}_{variant.name}.hlo.txt"
+        path = os.path.join(out_dir, fname)
+        changed = write_if_changed(path, text)
+        digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+        manifest.append(
+            dict(
+                artifact=fn_name,
+                variant=variant.name,
+                file=fname,
+                n=variant.n_params,
+                npad=variant.n_pad,
+                m=variant.sketch_dim,
+                input_dim=variant.input_dim,
+                classes=variant.classes,
+                train_batch=model.TRAIN_BATCH,
+                eval_batch=model.EVAL_BATCH,
+                sha256=digest,
+            )
+        )
+        status = "wrote" if changed else "unchanged"
+        print(f"  {status} {fname} ({len(text)} chars)", file=sys.stderr)
+
+
+def format_manifest(entries: list) -> str:
+    """Line-oriented ``key=value`` records; one artifact per line.
+
+    Deliberately not JSON/TOML: the rust side has no serde, and this stays
+    greppable. Field order is stable.
+    """
+    keys = [
+        "artifact", "variant", "file", "n", "npad", "m",
+        "input_dim", "classes", "train_batch", "eval_batch", "sha256",
+    ]
+    lines = ["# pfed1bs artifact manifest v1"]
+    for e in entries:
+        lines.append(" ".join(f"{k}={e[k]}" for k in keys))
+    return "\n".join(lines) + "\n"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="compat: ignored single-file target")
+    ap.add_argument(
+        "--variants", default=",".join(model.VARIANTS), help="comma-separated subset"
+    )
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest: list = []
+    for name in args.variants.split(","):
+        variant = model.VARIANTS[name]
+        print(
+            f"[aot] {name}: n={variant.n_params} n'={variant.n_pad} m={variant.sketch_dim}",
+            file=sys.stderr,
+        )
+        lower_variant(variant, args.out_dir, manifest)
+    write_if_changed(os.path.join(args.out_dir, "manifest.txt"), format_manifest(manifest))
+    print(f"[aot] manifest: {len(manifest)} artifacts", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,249 @@
+"""L1 Pallas kernels: SRHT one-bit sketching hot path.
+
+The compute hot-spot of pFed1BS is the structured projection
+
+    Phi w       = sqrt(n'/m) * S * H * D * pad(w)        (paper Eq. 16)
+    Phi^T v     = P_trunc * D * H * S'^T * v             (paper Eq. 18)
+    grad g~     = Phi^T ( tanh(gamma * Phi w) - v )      (paper Eq.  7)
+
+implemented here as Pallas kernels so that the whole pipeline — sign flip
+(D), the log2(n') butterfly stages of the Fast Hadamard Transform (H),
+subsampling (S), and the tanh/sign nonlinearity — runs as ONE fused pass
+over a VMEM-resident buffer.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the padded vector
+(n' <= 2^20, 4 MiB f32) fits VMEM whole, so every butterfly stage is a
+lane-aligned vadd/vsub over the same buffer with no HBM round trips; the
+diagonal D fuses into stage 0 and the subsample gather + sign fuse into
+the final store. ``interpret=True`` everywhere: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, so these kernels lower to plain HLO — the
+*structure* (single fused pass, static butterfly schedule) is what the
+AOT artifact inherits.
+
+All kernels are shape-polymorphic at trace time only: n, n', m are fixed
+per model variant when ``aot.py`` lowers the artifacts.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = [
+    "fwht_pallas",
+    "srht_forward_pallas",
+    "srht_adjoint_pallas",
+    "sketch_sign_pallas",
+    "reg_grad_pallas",
+]
+
+
+def _pad(w: jnp.ndarray, nprime: int) -> jnp.ndarray:
+    """Zero-pad to n'; no-op when n is already a power of two (avoids a
+    zero-length captured constant under pallas tracing)."""
+    n = w.shape[0]
+    if n == nprime:
+        return w
+    return jnp.zeros((nprime,), w.dtype).at[:n].set(w)
+
+
+def _trunc(y: jnp.ndarray, n: int) -> jnp.ndarray:
+    """First-n-coordinates truncation P_trunc; no-op when n == n'."""
+    if y.shape[0] == n:
+        return y
+    return y[:n]
+
+
+def _butterfly(x: jnp.ndarray, log2n: int) -> jnp.ndarray:
+    """Unrolled normalized FWHT butterfly over a flat power-of-two vector.
+
+    Stage s (h = 2^s) pairs lanes at stride h; each stage is one
+    vadd/vsub pass over the VMEM-resident buffer. The reshape/stack here
+    is how Mosaic expresses the sublane/lane shuffle — no data leaves the
+    register/VMEM tile between stages.
+    """
+    n = x.shape[0]
+    h = 1
+    for _ in range(log2n):
+        x = x.reshape(-1, 2, h)
+        a = x[:, 0, :]
+        b = x[:, 1, :]
+        x = jnp.stack([a + b, a - b], axis=1)
+        h *= 2
+    return x.reshape(n) * jnp.asarray(2.0 ** (-log2n / 2), x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# fwht
+
+
+def _fwht_kernel(x_ref, o_ref, *, log2n: int):
+    o_ref[...] = _butterfly(x_ref[...], log2n)
+
+
+def fwht_pallas(x: jnp.ndarray) -> jnp.ndarray:
+    """Normalized FWHT of a power-of-two-length vector (Pallas, fused)."""
+    n = x.shape[0]
+    assert n & (n - 1) == 0, f"fwht needs power-of-two length, got {n}"
+    log2n = n.bit_length() - 1
+    return pl.pallas_call(
+        functools.partial(_fwht_kernel, log2n=log2n),
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        interpret=True,
+    )(x)
+
+
+# ---------------------------------------------------------------------------
+# forward sketch  z = Phi w (real-valued)
+
+
+def _srht_fwd_kernel(w_ref, d_ref, s_ref, o_ref, *, nprime: int, log2n: int, scale: float):
+    w = w_ref[...]
+    # pad -> sign flip (D fuses into the load of stage 0)
+    x = _pad(w, nprime) * d_ref[...]
+    y = _butterfly(x, log2n)
+    # subsample gather + scaling fuse into the store
+    o_ref[...] = jnp.take(y, s_ref[...], axis=0) * jnp.asarray(scale, w.dtype)
+
+
+def srht_forward_pallas(
+    w: jnp.ndarray, dsign: jnp.ndarray, sidx: jnp.ndarray
+) -> jnp.ndarray:
+    """z = Phi w = sqrt(n'/m) * S H D pad(w), one fused VMEM pass."""
+    nprime = dsign.shape[0]
+    m = sidx.shape[0]
+    log2n = nprime.bit_length() - 1
+    return pl.pallas_call(
+        functools.partial(
+            _srht_fwd_kernel,
+            nprime=nprime,
+            log2n=log2n,
+            scale=math.sqrt(nprime / m),
+        ),
+        out_shape=jax.ShapeDtypeStruct((m,), w.dtype),
+        interpret=True,
+    )(w, dsign, sidx)
+
+
+# ---------------------------------------------------------------------------
+# adjoint  g = Phi^T v
+
+
+def _srht_adj_kernel(v_ref, d_ref, s_ref, o_ref, *, nprime: int, log2n: int, scale: float, n: int):
+    v = v_ref[...]
+    lifted = jnp.zeros((nprime,), v.dtype).at[s_ref[...]].set(
+        v * jnp.asarray(scale, v.dtype)
+    )
+    y = _butterfly(lifted, log2n) * d_ref[...]
+    o_ref[...] = _trunc(y, n)
+
+
+def srht_adjoint_pallas(
+    v: jnp.ndarray, dsign: jnp.ndarray, sidx: jnp.ndarray, n: int
+) -> jnp.ndarray:
+    """g = Phi^T v = P_trunc D H S'^T v, one fused VMEM pass (H^T = H)."""
+    nprime = dsign.shape[0]
+    m = sidx.shape[0]
+    log2n = nprime.bit_length() - 1
+    return pl.pallas_call(
+        functools.partial(
+            _srht_adj_kernel,
+            nprime=nprime,
+            log2n=log2n,
+            scale=math.sqrt(nprime / m),
+            n=n,
+        ),
+        out_shape=jax.ShapeDtypeStruct((n,), v.dtype),
+        interpret=True,
+    )(v, dsign, sidx)
+
+
+# ---------------------------------------------------------------------------
+# one-bit sketch  z = sign(Phi w)
+
+
+def _sketch_sign_kernel(w_ref, d_ref, s_ref, o_ref, *, nprime: int, log2n: int, scale: float):
+    w = w_ref[...]
+    x = _pad(w, nprime) * d_ref[...]
+    y = _butterfly(x, log2n)
+    z = jnp.take(y, s_ref[...], axis=0) * jnp.asarray(scale, w.dtype)
+    # sign with sign(0) := +1, fused into the store
+    o_ref[...] = jnp.where(z >= 0, 1.0, -1.0).astype(w.dtype)
+
+
+def sketch_sign_pallas(
+    w: jnp.ndarray, dsign: jnp.ndarray, sidx: jnp.ndarray
+) -> jnp.ndarray:
+    """One-bit sketch z = sign(Phi w) in {-1,+1}^m (f32; rust bit-packs)."""
+    nprime = dsign.shape[0]
+    m = sidx.shape[0]
+    log2n = nprime.bit_length() - 1
+    return pl.pallas_call(
+        functools.partial(
+            _sketch_sign_kernel,
+            nprime=nprime,
+            log2n=log2n,
+            scale=math.sqrt(nprime / m),
+        ),
+        out_shape=jax.ShapeDtypeStruct((m,), w.dtype),
+        interpret=True,
+    )(w, dsign, sidx)
+
+
+# ---------------------------------------------------------------------------
+# fused regularizer gradient  Phi^T (tanh(gamma Phi w) - v)
+
+
+def _reg_grad_kernel(
+    w_ref, v_ref, d_ref, s_ref, g_ref, o_ref, *, nprime: int, log2n: int, scale: float
+):
+    n = w_ref.shape[0]
+    w = w_ref[...]
+    d = d_ref[...]
+    s = s_ref[...]
+    gamma = g_ref[0]
+    sc = jnp.asarray(scale, w.dtype)
+    # forward: z = Phi w
+    x = _pad(w, nprime) * d
+    z = jnp.take(_butterfly(x, log2n), s, axis=0) * sc
+    # residual in sketch space
+    r = jnp.tanh(gamma * z) - v_ref[...]
+    # adjoint: Phi^T r — reuses the same VMEM buffer shape
+    lifted = jnp.zeros((nprime,), w.dtype).at[s].set(r * sc)
+    o_ref[...] = _trunc(_butterfly(lifted, log2n) * d, n)
+
+
+def reg_grad_pallas(
+    w: jnp.ndarray,
+    v: jnp.ndarray,
+    dsign: jnp.ndarray,
+    sidx: jnp.ndarray,
+    gamma: jnp.ndarray,
+) -> jnp.ndarray:
+    """grad g~(v, Phi w) = Phi^T(tanh(gamma Phi w) - v)  (paper Eq. 7).
+
+    Fully fused: forward butterfly, tanh residual, adjoint butterfly, and
+    the D / S (un)shuffles run as one kernel so the n'-sized workspace is
+    allocated once and never spills between the two transforms.
+
+    ``gamma`` is a shape-(1,) f32 array so the lowered artifact keeps the
+    smoothing temperature as a *runtime* parameter (sensitivity sweeps in
+    Appendix Table 1 need no recompilation).
+    """
+    nprime = dsign.shape[0]
+    m = sidx.shape[0]
+    log2n = nprime.bit_length() - 1
+    return pl.pallas_call(
+        functools.partial(
+            _reg_grad_kernel,
+            nprime=nprime,
+            log2n=log2n,
+            scale=math.sqrt(nprime / m),
+        ),
+        out_shape=jax.ShapeDtypeStruct((w.shape[0],), w.dtype),
+        interpret=True,
+    )(w, v, dsign, sidx, gamma.reshape(1))

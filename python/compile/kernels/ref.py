@@ -1,0 +1,126 @@
+"""Pure-jnp reference oracle for the SRHT one-bit sketching operators.
+
+Everything in this file is the *specification*: the Pallas kernels in
+``fht.py`` and the rust mirror in ``rust/src/sketch/`` are both tested
+against these functions. Keep this file boring and obviously-correct.
+
+The operator (paper, "Efficient Projection via Fast Hadamard Transform"):
+
+    Phi = sqrt(n'/m) * S * H * D * P_pad          (Eq. 16)
+    Phi^T v = P_trunc * D * H^T * S'^T * v        (Eq. 18)
+
+with H the *normalized* Walsh-Hadamard matrix (H H^T = I), D a diagonal
++-1 sign matrix, S a row-subsampling matrix selecting m of n' rows, and
+P_pad zero-padding from n to n' = 2^ceil(log2 n).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= n."""
+    return 1 << max(0, (n - 1).bit_length())
+
+
+def fwht_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """Normalized fast Walsh-Hadamard transform of a power-of-two vector.
+
+    Iterative butterfly in natural (Hadamard) order:
+    stage s pairs elements at stride 2^s. Output equals ``H_norm @ x``
+    where ``H_norm = H / sqrt(n)`` and H is the +-1 Sylvester Hadamard
+    matrix.
+    """
+    n = x.shape[0]
+    assert n & (n - 1) == 0, f"fwht needs power-of-two length, got {n}"
+    log2n = n.bit_length() - 1
+    h = 1
+    for _ in range(log2n):
+        x = x.reshape(-1, 2, h)
+        a = x[:, 0, :]
+        b = x[:, 1, :]
+        x = jnp.stack([a + b, a - b], axis=1)
+        h *= 2
+    return x.reshape(n) * jnp.asarray(2.0 ** (-log2n / 2), x.dtype)
+
+
+def hadamard_dense(n: int) -> np.ndarray:
+    """Dense normalized Sylvester-Hadamard matrix (tests only; O(n^2))."""
+    assert n & (n - 1) == 0
+    h = np.array([[1.0]])
+    while h.shape[0] < n:
+        h = np.block([[h, h], [h, -h]])
+    return h / math.sqrt(n)
+
+
+def srht_forward_ref(
+    w: jnp.ndarray, dsign: jnp.ndarray, sidx: jnp.ndarray
+) -> jnp.ndarray:
+    """z = Phi w = sqrt(n'/m) * S H D pad(w)   (real-valued sketch, Eq. 16)."""
+    n = w.shape[0]
+    nprime = dsign.shape[0]
+    m = sidx.shape[0]
+    wpad = jnp.zeros((nprime,), w.dtype).at[:n].set(w)
+    y = fwht_ref(wpad * dsign)
+    scale = jnp.asarray(math.sqrt(nprime / m), w.dtype)
+    return y[sidx] * scale
+
+
+def srht_adjoint_ref(
+    v: jnp.ndarray, dsign: jnp.ndarray, sidx: jnp.ndarray, n: int
+) -> jnp.ndarray:
+    """g = Phi^T v = P_trunc D H^T S'^T v   (Eq. 18).  H^T = H (symmetric)."""
+    nprime = dsign.shape[0]
+    m = sidx.shape[0]
+    scale = jnp.asarray(math.sqrt(nprime / m), v.dtype)
+    lifted = jnp.zeros((nprime,), v.dtype).at[sidx].set(v * scale)
+    return (fwht_ref(lifted) * dsign)[:n]
+
+
+def sketch_sign_ref(
+    w: jnp.ndarray, dsign: jnp.ndarray, sidx: jnp.ndarray
+) -> jnp.ndarray:
+    """One-bit sketch z = sign(Phi w), ties broken to +1 (sign(0)=+1)."""
+    z = srht_forward_ref(w, dsign, sidx)
+    return jnp.where(z >= 0, 1.0, -1.0).astype(w.dtype)
+
+
+def reg_grad_ref(
+    w: jnp.ndarray,
+    v: jnp.ndarray,
+    dsign: jnp.ndarray,
+    sidx: jnp.ndarray,
+    gamma,
+) -> jnp.ndarray:
+    """Gradient of the smoothed sign regularizer (paper Eq. 7):
+
+        grad g~(v, Phi w) = Phi^T ( tanh(gamma * Phi w) - v )
+    """
+    z = srht_forward_ref(w, dsign, sidx)
+    r = jnp.tanh(gamma * z) - v
+    return srht_adjoint_ref(r, dsign, sidx, w.shape[0])
+
+
+def reg_value_ref(
+    w: jnp.ndarray,
+    v: jnp.ndarray,
+    dsign: jnp.ndarray,
+    sidx: jnp.ndarray,
+    gamma,
+) -> jnp.ndarray:
+    """Smoothed regularizer value (paper Eq. 5):
+
+        g~(v, Phi w) = h_gamma(Phi w) - <v, Phi w>,
+        h_gamma(z)   = (1/gamma) * sum_i log cosh(gamma z_i)
+
+    log cosh is computed stably as |t| + log1p(exp(-2|t|)) - log 2.
+    """
+    z = srht_forward_ref(w, dsign, sidx)
+    t = gamma * z
+    at = jnp.abs(t)
+    logcosh = at + jnp.log1p(jnp.exp(-2.0 * at)) - jnp.log(2.0)
+    return jnp.sum(logcosh) / gamma - jnp.dot(v, z)

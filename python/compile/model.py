@@ -1,0 +1,261 @@
+"""L2: the pFed1BS client compute graph in JAX.
+
+Defines the model variants from the paper's experimental setup (a 2-layer
+MLP for the 784-dim datasets, a deeper MLP standing in for the VGG nets on
+the 3072-dim datasets — see DESIGN.md §2 for the substitution note), the
+smoothed personalized objective
+
+    F~_k(w; v) = f_k(w) + lambda * g~(v, Phi w) + (mu/2) ||w||^2   (Eq. 6)
+
+and the functions that ``aot.py`` lowers to HLO artifacts:
+
+    client_step   one SGD step on F~_k   (Algorithm 1, line 16)
+    sgd_step      one SGD step on f_k + (mu/2)||w||^2 (baselines; no FHT)
+    sketch        z = sign(Phi w)        (Algorithm 1, line 18)
+    eval_batch    (#correct, loss_sum) on a test batch
+    grad_norm     ||grad F~_k||^2        (Theorem 1 diagnostics)
+
+Models operate on a FLAT parameter vector w in R^n so that the sketching
+operator, the rust coordinator, and the communication codecs all see one
+contiguous buffer; (un)flattening happens inside the graph with static
+slices, which XLA folds away.
+
+Hyperparameters (eta, lambda, mu, gamma) are runtime f32 scalars — the
+sensitivity sweeps of Appendix Table 1 reuse one compiled artifact.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import fht
+from compile.kernels.ref import next_pow2
+
+TRAIN_BATCH = 32
+EVAL_BATCH = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelVariant:
+    """A fixed architecture + sketch geometry, one set of artifacts each."""
+
+    name: str
+    input_dim: int
+    hidden: Tuple[int, ...]
+    classes: int
+    sketch_ratio: float = 0.1  # m/n, paper fixes 0.1
+
+    @property
+    def layer_dims(self) -> List[Tuple[int, int]]:
+        dims = [self.input_dim, *self.hidden, self.classes]
+        return [(dims[i], dims[i + 1]) for i in range(len(dims) - 1)]
+
+    @property
+    def n_params(self) -> int:
+        return sum(i * o + o for i, o in self.layer_dims)
+
+    @property
+    def n_pad(self) -> int:
+        return next_pow2(self.n_params)
+
+    @property
+    def sketch_dim(self) -> int:
+        return int(self.sketch_ratio * self.n_params)
+
+
+# The three variants used across the paper's five datasets (DESIGN.md §6).
+# Hidden widths are sized so n' (next pow2 of n) stays one power of two
+# smaller than the naive choice — the FHT butterflies are memory-bound, so
+# this halves the regularizer's cost on this CPU testbed (DESIGN.md §6/§8):
+#   mlp784:  n=101,652  -> n' = 2^17
+#   mlp3072: n=453,682  -> n' = 2^19  (c100: 460,252 -> 2^19)
+VARIANTS = {
+    "mlp784": ModelVariant("mlp784", 784, (128,), 10),
+    "mlp3072": ModelVariant("mlp3072", 3072, (144, 72), 10),
+    "mlp3072c100": ModelVariant("mlp3072c100", 3072, (144, 72), 100),
+}
+
+
+def unflatten(variant: ModelVariant, w: jnp.ndarray):
+    """Flat parameter vector -> [(W, b), ...] with static slices."""
+    params = []
+    off = 0
+    for fan_in, fan_out in variant.layer_dims:
+        size = fan_in * fan_out
+        W = w[off : off + size].reshape(fan_in, fan_out)
+        off += size
+        b = w[off : off + fan_out]
+        off += fan_out
+        params.append((W, b))
+    assert off == variant.n_params
+    return params
+
+
+def forward(variant: ModelVariant, w: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """MLP forward pass: relu hidden layers, raw logits out."""
+    params = unflatten(variant, w)
+    h = x
+    for i, (W, b) in enumerate(params):
+        h = h @ W + b
+        if i + 1 < len(params):
+            h = jax.nn.relu(h)
+    return h
+
+
+def task_loss(variant: ModelVariant, w: jnp.ndarray, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Mean softmax cross-entropy over the batch (y: int32 labels)."""
+    logits = forward(variant, w, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[:, None].astype(jnp.int32), axis=-1)[:, 0]
+    return jnp.mean(nll)
+
+
+def client_step(
+    variant: ModelVariant,
+    w: jnp.ndarray,
+    x: jnp.ndarray,
+    y: jnp.ndarray,
+    v: jnp.ndarray,
+    dsign: jnp.ndarray,
+    sidx: jnp.ndarray,
+    eta: jnp.ndarray,
+    lam: jnp.ndarray,
+    mu: jnp.ndarray,
+    gamma: jnp.ndarray,
+):
+    """One local SGD step on the smoothed objective (Algorithm 1, line 16):
+
+        w <- w - eta * ( grad f_k(w; B) + lambda * Phi^T(tanh(gamma Phi w) - v)
+                         + mu * w )
+
+    The task gradient comes from autodiff; the regularizer gradient has the
+    closed form of Eq. 7 and is computed by the fused Pallas kernel (one
+    VMEM-resident forward+adjoint butterfly pass).
+    Returns (w', task_loss).
+    """
+    loss, g_task = jax.value_and_grad(lambda ww: task_loss(variant, ww, x, y))(w)
+    g_reg = fht.reg_grad_pallas(w, v, dsign, sidx, gamma)
+    w_new = w - eta * (g_task + lam * g_reg + mu * w)
+    return w_new, loss
+
+
+def sgd_step(
+    variant: ModelVariant,
+    w: jnp.ndarray,
+    x: jnp.ndarray,
+    y: jnp.ndarray,
+    eta: jnp.ndarray,
+    mu: jnp.ndarray,
+):
+    """Plain local SGD step (lambda = 0 path) used by every baseline.
+
+    Kept as a separate artifact so baselines do not pay the two FHT
+    butterflies of the regularizer; identical to ``client_step`` with
+    lam = 0 (covered by a pytest equivalence check).
+    """
+    loss, g_task = jax.value_and_grad(lambda ww: task_loss(variant, ww, x, y))(w)
+    w_new = w - eta * (g_task + mu * w)
+    return w_new, loss
+
+
+def client_step_w(variant: ModelVariant, w, x, y, v, dsign, sidx, eta, lam, mu, gamma):
+    """client_step returning ONLY w' — lowered WITHOUT a tuple root so the
+    rust runtime can feed the output device buffer straight back as the
+    next step's input, keeping w device-resident across all R local steps
+    (EXPERIMENTS.md §Perf: removes 2·n f32 host transfers per step)."""
+    w_new, _ = client_step(variant, w, x, y, v, dsign, sidx, eta, lam, mu, gamma)
+    return w_new
+
+
+def sgd_step_w(variant: ModelVariant, w, x, y, eta, mu):
+    """sgd_step returning only w' (single non-tuple output; see above)."""
+    w_new, _ = sgd_step(variant, w, x, y, eta, mu)
+    return w_new
+
+
+def sketch(variant: ModelVariant, w: jnp.ndarray, dsign: jnp.ndarray, sidx: jnp.ndarray):
+    """One-bit sketch z = sign(Phi w) in {-1,+1}^m (Algorithm 1, line 18)."""
+    return (fht.sketch_sign_pallas(w, dsign, sidx),)
+
+
+def eval_batch(variant: ModelVariant, w: jnp.ndarray, x: jnp.ndarray, y: jnp.ndarray):
+    """(#correct, summed NLL) over one eval batch; rust accumulates.
+
+    Rows with label < 0 are padding (the rust loader zero-fills the final
+    partial batch) and are masked out of both counts, so the accumulated
+    statistics are exact regardless of batch alignment.
+    """
+    y = y.astype(jnp.int32)
+    valid = (y >= 0).astype(jnp.float32)
+    logits = forward(variant, w, x)
+    pred = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    correct = jnp.sum((pred == y).astype(jnp.float32) * valid)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    safe_y = jnp.maximum(y, 0)
+    nll = -jnp.take_along_axis(logp, safe_y[:, None], axis=-1)[:, 0]
+    return correct, jnp.sum(nll * valid)
+
+
+def grad_norm(
+    variant: ModelVariant,
+    w: jnp.ndarray,
+    x: jnp.ndarray,
+    y: jnp.ndarray,
+    v: jnp.ndarray,
+    dsign: jnp.ndarray,
+    sidx: jnp.ndarray,
+    lam: jnp.ndarray,
+    mu: jnp.ndarray,
+    gamma: jnp.ndarray,
+):
+    """||grad F~_k(w; v)||^2 — the quantity bounded by Theorem 1.
+
+    Exposed as an artifact so the rust coordinator can log the
+    stationarity measure per round (``fig3-4 --diagnostics``).
+    """
+    g_task = jax.grad(lambda ww: task_loss(variant, ww, x, y))(w)
+    g_reg = fht.reg_grad_pallas(w, v, dsign, sidx, gamma)
+    g = g_task + lam * g_reg + mu * w
+    return (jnp.sum(g * g),)
+
+
+def example_shapes(variant: ModelVariant):
+    """ShapeDtypeStructs for lowering each artifact of this variant."""
+    f32, i32 = jnp.float32, jnp.int32
+    s = jax.ShapeDtypeStruct
+    n, npad, m, d = variant.n_params, variant.n_pad, variant.sketch_dim, variant.input_dim
+    w = s((n,), f32)
+    xb = s((TRAIN_BATCH, d), f32)
+    yb = s((TRAIN_BATCH,), i32)
+    xe = s((EVAL_BATCH, d), f32)
+    ye = s((EVAL_BATCH,), i32)
+    v = s((m,), f32)
+    dsign = s((npad,), f32)
+    sidx = s((m,), i32)
+    scalar = s((), f32)
+    return {
+        "client_step": (w, xb, yb, v, dsign, sidx, scalar, scalar, scalar, scalar),
+        "client_step_w": (w, xb, yb, v, dsign, sidx, scalar, scalar, scalar, scalar),
+        "sgd_step": (w, xb, yb, scalar, scalar),
+        "sgd_step_w": (w, xb, yb, scalar, scalar),
+        "sketch": (w, dsign, sidx),
+        "eval": (w, xe, ye),
+        "grad_norm": (w, xb, yb, v, dsign, sidx, scalar, scalar, scalar),
+    }
+
+
+def artifact_fns(variant: ModelVariant):
+    """name -> python callable, closed over the variant."""
+    return {
+        "client_step": lambda *a: client_step(variant, *a),
+        "client_step_w": lambda *a: client_step_w(variant, *a),
+        "sgd_step": lambda *a: sgd_step(variant, *a),
+        "sgd_step_w": lambda *a: sgd_step_w(variant, *a),
+        "sketch": lambda *a: sketch(variant, *a),
+        "eval": lambda *a: eval_batch(variant, *a),
+        "grad_norm": lambda *a: grad_norm(variant, *a),
+    }

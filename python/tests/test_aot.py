@@ -1,0 +1,140 @@
+"""AOT pipeline: artifacts exist, manifest is consistent, HLO is loadable.
+
+The cross-language numerical check (rust PJRT executes the artifact and
+matches the jax value) lives in rust/tests/; here we verify the python
+side of the contract: every manifest row points at a real file whose
+content hash matches, the HLO parameter/result shapes agree with
+``model.example_shapes``, and lowering is deterministic.
+"""
+
+import hashlib
+import os
+import re
+
+import pytest
+
+from compile import aot, model
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def manifest_rows():
+    path = os.path.join(ART, "manifest.txt")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    rows = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line or line.startswith("#"):
+                continue
+            rows.append(dict(kv.split("=", 1) for kv in line.split(" ")))
+    return rows
+
+
+def test_manifest_covers_all_variants_and_fns():
+    rows = manifest_rows()
+    got = {(r["artifact"], r["variant"]) for r in rows}
+    want = {
+        (fn, v)
+        for v in model.VARIANTS
+        for fn in (
+            "client_step",
+            "client_step_w",
+            "sgd_step",
+            "sgd_step_w",
+            "sketch",
+            "eval",
+            "grad_norm",
+        )
+    }
+    assert got == want
+
+
+def test_manifest_files_exist_and_hashes_match():
+    for r in manifest_rows():
+        path = os.path.join(ART, r["file"])
+        assert os.path.exists(path), r["file"]
+        with open(path) as f:
+            digest = hashlib.sha256(f.read().encode()).hexdigest()[:16]
+        assert digest == r["sha256"], f"stale artifact {r['file']}"
+
+
+def test_manifest_geometry_matches_variants():
+    for r in manifest_rows():
+        v = model.VARIANTS[r["variant"]]
+        assert int(r["n"]) == v.n_params
+        assert int(r["npad"]) == v.n_pad
+        assert int(r["m"]) == v.sketch_dim
+        assert int(r["input_dim"]) == v.input_dim
+        assert int(r["classes"]) == v.classes
+        assert int(r["train_batch"]) == model.TRAIN_BATCH
+        assert int(r["eval_batch"]) == model.EVAL_BATCH
+
+
+def test_hlo_entry_has_expected_parameter_count():
+    """client_step takes 10 parameters; check the HLO ENTRY signature."""
+    rows = [r for r in manifest_rows() if r["artifact"] == "client_step"]
+    for r in rows:
+        with open(os.path.join(ART, r["file"])) as f:
+            text = f.read()
+        entry = re.search(r"ENTRY .*?\{(.*?)ROOT", text, re.S)
+        assert entry is not None
+        params = re.findall(r"parameter\((\d+)\)", entry.group(1))
+        assert len(params) == 10, r["file"]
+        n = int(r["n"])
+        assert f"f32[{n}]" in text  # w in and w' out
+
+
+def test_lowering_is_deterministic():
+    v = model.ModelVariant("det", 16, (8,), 3)
+    import jax
+
+    shapes = model.example_shapes(v)["sgd_step"]
+    fn = model.artifact_fns(v)["sgd_step"]
+    a = aot.to_hlo_text(jax.jit(fn).lower(*shapes))
+    b = aot.to_hlo_text(jax.jit(fn).lower(*shapes))
+    assert a == b
+
+
+def test_hlo_text_parseable_header():
+    for r in manifest_rows()[:3]:
+        with open(os.path.join(ART, r["file"])) as f:
+            head = f.read(200)
+        assert head.startswith("HloModule"), r["file"]
+
+
+def test_step_w_artifacts_have_non_tuple_root():
+    """The *_w artifacts must be lowered WITHOUT a tuple root so the rust
+    runtime can chain their output buffer into the next step (§Perf)."""
+    for r in manifest_rows():
+        with open(os.path.join(ART, r["file"])) as f:
+            text = f.read()
+        # the root of the ENTRY computation is the last ROOT instruction
+        roots = re.findall(r"ROOT \S+ = (\S+)", text)
+        assert roots, r["file"]
+        ret = roots[-1]
+        if r["artifact"].endswith("_w"):
+            assert not ret.startswith("("), f"{r['file']} returns a tuple: {ret}"
+        else:
+            assert ret.startswith("("), f"{r['file']} should return a tuple: {ret}"
+
+
+def test_step_w_matches_client_step_w_component():
+    """client_step_w == first output of client_step, numerically."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    v = model.ModelVariant("tiny_w", 12, (8,), 4)
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(0.1 * rng.standard_normal(v.n_params), jnp.float32)
+    x = jnp.asarray(rng.standard_normal((8, 12)), jnp.float32)
+    y = jnp.asarray(rng.integers(0, 4, 8), jnp.int32)
+    d = jnp.asarray(rng.choice([-1.0, 1.0], v.n_pad), jnp.float32)
+    s = jnp.asarray(rng.choice(v.n_pad, v.sketch_dim, replace=False), jnp.int32)
+    vv = jnp.asarray(rng.choice([-1.0, 1.0], v.sketch_dim), jnp.float32)
+    args = (w, x, y, vv, d, s, jnp.float32(0.05), jnp.float32(1e-3),
+            jnp.float32(1e-5), jnp.float32(100.0))
+    w_a, _ = model.client_step(v, *args)
+    w_b = model.client_step_w(v, *args)
+    np.testing.assert_allclose(np.asarray(w_a), np.asarray(w_b), rtol=0, atol=0)

@@ -1,0 +1,243 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+This is the core correctness signal for the sketching hot path. Hypothesis
+sweeps sizes/dtypes/seeds; every kernel must agree with the oracle, and
+the oracle itself is validated against dense linear algebra.
+"""
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fht, ref
+
+
+def make_operator(rng, n, npow, m):
+    d = jnp.asarray(rng.choice([-1.0, 1.0], npow), jnp.float32)
+    s = jnp.asarray(rng.choice(npow, m, replace=False), jnp.int32)
+    return d, s
+
+
+def dense_phi(d, s, n):
+    """Materialize Phi = sqrt(n'/m) S H D P_pad as a dense matrix (tests)."""
+    npow, m = d.shape[0], s.shape[0]
+    H = ref.hadamard_dense(npow)
+    P = (H * np.asarray(d)[None, :])[np.asarray(s), :n]
+    return P * math.sqrt(npow / m)
+
+
+# ---------------------------------------------------------------------- fwht
+
+
+@settings(max_examples=20, deadline=None)
+@given(log2n=st.integers(0, 10), seed=st.integers(0, 2**31 - 1))
+def test_fwht_ref_matches_dense(log2n, seed):
+    n = 1 << log2n
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal(n).astype(np.float32)
+    want = ref.hadamard_dense(n) @ x
+    got = np.asarray(ref.fwht_ref(jnp.asarray(x)))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(log2n=st.integers(0, 12), seed=st.integers(0, 2**31 - 1))
+def test_fwht_pallas_matches_ref(log2n, seed):
+    n = 1 << log2n
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    np.testing.assert_allclose(
+        np.asarray(fht.fwht_pallas(x)), np.asarray(ref.fwht_ref(x)), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_fwht_is_involution():
+    """Normalized H is its own inverse: H(Hx) = x."""
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.standard_normal(512).astype(np.float32))
+    back = ref.fwht_ref(ref.fwht_ref(x))
+    np.testing.assert_allclose(np.asarray(back), np.asarray(x), rtol=1e-4, atol=1e-4)
+
+
+def test_fwht_preserves_l2_norm():
+    """Orthonormality: ||Hx|| = ||x||."""
+    rng = np.random.default_rng(8)
+    x = jnp.asarray(rng.standard_normal(2048).astype(np.float32))
+    assert abs(float(jnp.linalg.norm(ref.fwht_ref(x))) - float(jnp.linalg.norm(x))) < 1e-2
+
+
+def test_fwht_rejects_non_pow2():
+    with pytest.raises(AssertionError):
+        ref.fwht_ref(jnp.zeros((12,), jnp.float32))
+
+
+# ---------------------------------------------------------------------- srht
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(2, 500),
+    ratio=st.floats(0.05, 0.9),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_srht_forward_matches_dense(n, ratio, seed):
+    npow = ref.next_pow2(n)
+    m = max(1, int(ratio * n))
+    rng = np.random.default_rng(seed)
+    d, s = make_operator(rng, n, npow, m)
+    w = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    want = dense_phi(d, s, n) @ np.asarray(w)
+    got = np.asarray(ref.srht_forward_ref(w, d, s))
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+    got_pl = np.asarray(fht.srht_forward_pallas(w, d, s))
+    np.testing.assert_allclose(got_pl, got, rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(2, 500),
+    ratio=st.floats(0.05, 0.9),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_srht_adjoint_identity(n, ratio, seed):
+    """<Phi x, y> == <x, Phi^T y> for random x, y — the defining property."""
+    npow = ref.next_pow2(n)
+    m = max(1, int(ratio * n))
+    rng = np.random.default_rng(seed)
+    d, s = make_operator(rng, n, npow, m)
+    x = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    y = jnp.asarray(rng.standard_normal(m).astype(np.float32))
+    lhs = float(jnp.dot(ref.srht_forward_ref(x, d, s), y))
+    rhs = float(jnp.dot(x, ref.srht_adjoint_ref(y, d, s, n)))
+    scale = max(1.0, abs(lhs))
+    assert abs(lhs - rhs) / scale < 1e-3
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(4, 300), seed=st.integers(0, 2**31 - 1))
+def test_srht_adjoint_pallas_matches_ref(n, seed):
+    npow = ref.next_pow2(n)
+    m = max(1, n // 10)
+    rng = np.random.default_rng(seed)
+    d, s = make_operator(rng, n, npow, m)
+    v = jnp.asarray(rng.choice([-1.0, 1.0], m).astype(np.float32))
+    np.testing.assert_allclose(
+        np.asarray(fht.srht_adjoint_pallas(v, d, s, n)),
+        np.asarray(ref.srht_adjoint_ref(v, d, s, n)),
+        rtol=1e-5,
+        atol=1e-5,
+    )
+
+
+def test_spectral_norm_lemma2():
+    """Lemma 2: ||Phi|| = sqrt(n'/m) exactly (via dense SVD on small op)."""
+    rng = np.random.default_rng(3)
+    n, npow, m = 48, 64, 16
+    d, s = make_operator(rng, n, npow, m)
+    P = dense_phi(d, s, npow)[:, :]  # full n' columns: padded operator
+    sv = np.linalg.svd(P, compute_uv=False)
+    np.testing.assert_allclose(sv.max(), math.sqrt(npow / m), rtol=1e-5)
+
+
+def test_srht_linearity():
+    rng = np.random.default_rng(11)
+    n, npow, m = 100, 128, 10
+    d, s = make_operator(rng, n, npow, m)
+    a = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    b = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    lhs = ref.srht_forward_ref(2.0 * a + 3.0 * b, d, s)
+    rhs = 2.0 * ref.srht_forward_ref(a, d, s) + 3.0 * ref.srht_forward_ref(b, d, s)
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs), rtol=1e-3, atol=1e-3)
+
+
+# ----------------------------------------------------------------- reg grad
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.integers(8, 300),
+    gamma=st.floats(0.5, 1e4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_reg_grad_pallas_matches_ref(n, gamma, seed):
+    npow = ref.next_pow2(n)
+    m = max(1, n // 10)
+    rng = np.random.default_rng(seed)
+    d, s = make_operator(rng, n, npow, m)
+    w = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    v = jnp.asarray(rng.choice([-1.0, 1.0], m).astype(np.float32))
+    got = np.asarray(fht.reg_grad_pallas(w, v, d, s, jnp.array([gamma], jnp.float32)))
+    want = np.asarray(ref.reg_grad_ref(w, v, d, s, jnp.float32(gamma)))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_reg_grad_matches_autodiff_of_reg_value():
+    """Eq. 7 is the true gradient of Eq. 5: check against jax.grad."""
+    import jax
+
+    rng = np.random.default_rng(5)
+    n, npow, m = 120, 128, 12
+    d, s = make_operator(rng, n, npow, m)
+    w = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    v = jnp.asarray(rng.choice([-1.0, 1.0], m).astype(np.float32))
+    gamma = jnp.float32(3.0)
+    auto = jax.grad(lambda ww: ref.reg_value_ref(ww, v, d, s, gamma))(w)
+    closed = ref.reg_grad_ref(w, v, d, s, gamma)
+    np.testing.assert_allclose(np.asarray(auto), np.asarray(closed), rtol=1e-3, atol=1e-4)
+
+
+def test_reg_grad_zero_when_aligned():
+    """If v == sign(Phi w) and gamma is large, tanh(gamma z) ~ v so the
+    residual (and hence the pull) is near zero wherever |Phi w| >> 1/gamma."""
+    rng = np.random.default_rng(6)
+    n, npow, m = 100, 128, 10
+    d, s = make_operator(rng, n, npow, m)
+    w = jnp.asarray(10.0 * rng.standard_normal(n).astype(np.float32))
+    v = ref.sketch_sign_ref(w, d, s)
+    g = ref.reg_grad_ref(w, v, d, s, jnp.float32(1e4))
+    assert float(jnp.max(jnp.abs(g))) < 1e-3
+
+
+def test_sketch_sign_values():
+    rng = np.random.default_rng(9)
+    n, npow, m = 64, 64, 8
+    d, s = make_operator(rng, n, npow, m)
+    w = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    z = np.asarray(ref.sketch_sign_ref(w, d, s))
+    assert set(np.unique(z)).issubset({-1.0, 1.0})
+    zp = np.asarray(fht.sketch_sign_pallas(w, d, s))
+    np.testing.assert_array_equal(z, zp)
+
+
+# --------------------------------------------------------- server (Lemma 1)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    k=st.integers(1, 6),
+    m=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_majority_vote_is_optimal_aggregation(k, m, seed):
+    """Lemma 1: v* = sign(sum p_k z_k) minimizes sum p_k g(v, z_k) —
+    verified by brute force over all 2^m candidate v."""
+    rng = np.random.default_rng(seed)
+    z = rng.choice([-1.0, 1.0], (k, m))
+    p = rng.random(k) + 0.1
+    p /= p.sum()
+    agg = (p[:, None] * z).sum(0)
+    vstar = np.where(agg >= 0, 1.0, -1.0)
+
+    def obj(v):
+        # g(v, z) = || [v ⊙ z]_- ||_1  (Eq. 2)
+        return sum(pi * np.minimum(vi_zi, 0.0).__abs__().sum()
+                   for pi, vi_zi in ((p[i], v * z[i]) for i in range(k)))
+
+    best = min(
+        obj(np.array([(1.0 if (c >> b) & 1 else -1.0) for b in range(m)]))
+        for c in range(1 << m)
+    )
+    assert obj(vstar) <= best + 1e-9

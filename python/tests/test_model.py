@@ -1,0 +1,215 @@
+"""L2 correctness: client objective, gradients, and step semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def tiny_variant(classes=4):
+    return model.ModelVariant("tiny", 12, (8,), classes)
+
+
+def rand_inputs(variant, rng, batch=None):
+    b = batch or model.TRAIN_BATCH
+    w = jnp.asarray(0.1 * rng.standard_normal(variant.n_params), jnp.float32)
+    x = jnp.asarray(rng.standard_normal((b, variant.input_dim)), jnp.float32)
+    y = jnp.asarray(rng.integers(0, variant.classes, b), jnp.int32)
+    return w, x, y
+
+
+def rand_operator(variant, rng):
+    d = jnp.asarray(rng.choice([-1.0, 1.0], variant.n_pad), jnp.float32)
+    s = jnp.asarray(rng.choice(variant.n_pad, variant.sketch_dim, replace=False), jnp.int32)
+    v = jnp.asarray(rng.choice([-1.0, 1.0], variant.sketch_dim), jnp.float32)
+    return d, s, v
+
+
+# ----------------------------------------------------------------- plumbing
+
+
+def test_variant_param_counts():
+    assert model.VARIANTS["mlp784"].n_params == 784 * 128 + 128 + 128 * 10 + 10
+    assert model.VARIANTS["mlp784"].n_pad == 1 << 17
+    assert model.VARIANTS["mlp3072"].n_params == (
+        3072 * 144 + 144 + 144 * 72 + 72 + 72 * 10 + 10
+    )
+    assert model.VARIANTS["mlp3072"].n_pad == 1 << 19
+    assert model.VARIANTS["mlp3072c100"].classes == 100
+    for v in model.VARIANTS.values():
+        assert v.sketch_dim == int(0.1 * v.n_params)
+
+
+def test_unflatten_round_trip():
+    variant = tiny_variant()
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.standard_normal(variant.n_params), jnp.float32)
+    params = model.unflatten(variant, w)
+    flat = jnp.concatenate([jnp.concatenate([W.reshape(-1), b]) for W, b in params])
+    np.testing.assert_array_equal(np.asarray(flat), np.asarray(w))
+
+
+def test_forward_shapes():
+    variant = tiny_variant(classes=5)
+    rng = np.random.default_rng(1)
+    w, x, _ = rand_inputs(variant, rng, batch=7)
+    logits = model.forward(variant, w, x)
+    assert logits.shape == (7, 5)
+
+
+# ------------------------------------------------------------------- losses
+
+
+def test_task_loss_matches_manual_softmax():
+    variant = tiny_variant()
+    rng = np.random.default_rng(2)
+    w, x, y = rand_inputs(variant, rng, batch=16)
+    logits = np.asarray(model.forward(variant, w, x))
+    ex = np.exp(logits - logits.max(1, keepdims=True))
+    p = ex / ex.sum(1, keepdims=True)
+    want = -np.log(p[np.arange(16), np.asarray(y)]).mean()
+    got = float(model.task_loss(variant, w, x, y))
+    assert abs(got - want) < 1e-5
+
+
+def test_uniform_logits_loss_is_log_c():
+    variant = tiny_variant(classes=8)
+    w = jnp.zeros((variant.n_params,), jnp.float32)
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((4, variant.input_dim)), jnp.float32)
+    y = jnp.asarray([0, 1, 2, 3], jnp.int32)
+    assert abs(float(model.task_loss(variant, w, x, y)) - np.log(8.0)) < 1e-5
+
+
+# -------------------------------------------------------------------- steps
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_client_step_matches_manual_update(seed):
+    """w' must equal w - eta*(g_task + lam*Phi^T(tanh(gamma Phi w)-v) + mu*w)."""
+    variant = tiny_variant()
+    rng = np.random.default_rng(seed)
+    w, x, y = rand_inputs(variant, rng, batch=8)
+    d, s, v = rand_operator(variant, rng)
+    eta, lam, mu, gamma = 0.05, 3e-3, 1e-4, 100.0
+
+    w2, loss = model.client_step(
+        variant, w, x, y, v, d, s,
+        jnp.float32(eta), jnp.float32(lam), jnp.float32(mu), jnp.float32(gamma),
+    )
+    g_task = jax.grad(lambda ww: model.task_loss(variant, ww, x, y))(w)
+    g_reg = ref.reg_grad_ref(w, v, d, s, jnp.float32(gamma))
+    want = w - eta * (g_task + lam * g_reg + mu * w)
+    np.testing.assert_allclose(np.asarray(w2), np.asarray(want), rtol=1e-4, atol=1e-5)
+    assert abs(float(loss) - float(model.task_loss(variant, w, x, y))) < 1e-5
+
+
+def test_client_step_with_lam0_equals_sgd_step():
+    variant = tiny_variant()
+    rng = np.random.default_rng(10)
+    w, x, y = rand_inputs(variant, rng, batch=8)
+    d, s, v = rand_operator(variant, rng)
+    a, la = model.client_step(
+        variant, w, x, y, v, d, s,
+        jnp.float32(0.1), jnp.float32(0.0), jnp.float32(1e-5), jnp.float32(1e4),
+    )
+    b, lb = model.sgd_step(variant, w, x, y, jnp.float32(0.1), jnp.float32(1e-5))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)
+    assert float(la) == pytest.approx(float(lb), abs=1e-6)
+
+
+def test_client_step_descends_objective():
+    """A small-eta step must not increase the smoothed objective F~_k."""
+    variant = tiny_variant()
+    rng = np.random.default_rng(12)
+    w, x, y = rand_inputs(variant, rng, batch=32)
+    d, s, v = rand_operator(variant, rng)
+    eta, lam, mu, gamma = 0.01, 1e-3, 1e-5, 10.0
+
+    def objective(ww):
+        return (
+            float(model.task_loss(variant, ww, x, y))
+            + lam * float(ref.reg_value_ref(ww, v, d, s, jnp.float32(gamma)))
+            + 0.5 * mu * float(jnp.sum(ww * ww))
+        )
+
+    w2, _ = model.client_step(
+        variant, w, x, y, v, d, s,
+        jnp.float32(eta), jnp.float32(lam), jnp.float32(mu), jnp.float32(gamma),
+    )
+    assert objective(w2) <= objective(w) + 1e-6
+
+
+def test_sign_regularizer_pulls_sketch_toward_consensus():
+    """Repeated reg-only steps must reduce sign disagreement with v."""
+    variant = tiny_variant()
+    rng = np.random.default_rng(13)
+    w = jnp.asarray(0.1 * rng.standard_normal(variant.n_params), jnp.float32)
+    d, s, _ = rand_operator(variant, rng)
+    v = jnp.asarray(rng.choice([-1.0, 1.0], variant.sketch_dim), jnp.float32)
+
+    def disagreement(ww):
+        z = ref.sketch_sign_ref(ww, d, s)
+        return float(jnp.sum(z != v))
+
+    before = disagreement(w)
+    gamma = jnp.float32(50.0)
+    for _ in range(200):
+        g = ref.reg_grad_ref(w, v, d, s, gamma)
+        w = w - 0.01 * g
+    after = disagreement(w)
+    assert after <= before
+    assert after == 0  # reg-only dynamics can fully align signs
+
+
+# --------------------------------------------------------------------- eval
+
+
+def test_eval_batch_counts():
+    variant = tiny_variant()
+    rng = np.random.default_rng(14)
+    w, x, y = rand_inputs(variant, rng, batch=64)
+    correct, loss_sum = model.eval_batch(variant, w, x, y)
+    logits = np.asarray(model.forward(variant, w, x))
+    want = (logits.argmax(1) == np.asarray(y)).sum()
+    assert float(correct) == want
+    assert float(loss_sum) == pytest.approx(
+        float(model.task_loss(variant, w, x, y)) * 64, rel=1e-5
+    )
+
+
+def test_grad_norm_matches_manual():
+    variant = tiny_variant()
+    rng = np.random.default_rng(15)
+    w, x, y = rand_inputs(variant, rng, batch=8)
+    d, s, v = rand_operator(variant, rng)
+    lam, mu, gamma = 2e-3, 1e-4, 50.0
+    (gn,) = model.grad_norm(
+        variant, w, x, y, v, d, s,
+        jnp.float32(lam), jnp.float32(mu), jnp.float32(gamma),
+    )
+    g_task = jax.grad(lambda ww: model.task_loss(variant, ww, x, y))(w)
+    g = g_task + lam * ref.reg_grad_ref(w, v, d, s, jnp.float32(gamma)) + mu * w
+    assert float(gn) == pytest.approx(float(jnp.sum(g * g)), rel=1e-4)
+
+
+def test_eval_batch_masks_padding():
+    """Rows with label -1 contribute neither correct counts nor loss."""
+    variant = tiny_variant()
+    rng = np.random.default_rng(16)
+    w, x, y = rand_inputs(variant, rng, batch=64)
+    c_full, l_full = model.eval_batch(variant, w, x, y)
+    y_masked = np.asarray(y).copy()
+    y_masked[32:] = -1
+    c_half, l_half = model.eval_batch(variant, w, x, jnp.asarray(y_masked))
+    c_head, l_head = model.eval_batch(
+        variant, w, x[:32], jnp.asarray(y_masked[:32])
+    )
+    assert float(c_half) == pytest.approx(float(c_head))
+    assert float(l_half) == pytest.approx(float(l_head), rel=1e-5)
+    assert float(c_half) <= float(c_full)

@@ -1,0 +1,159 @@
+//! Shared client-side routines: local SGD loops over the AOT artifacts,
+//! parameter initialization, and update-vector helpers used by several
+//! baselines.
+
+use anyhow::Result;
+
+use crate::algorithms::Ctx;
+use crate::data::BatchIter;
+use crate::util::rng::Rng;
+
+/// Glorot-style init of the flat parameter vector. All algorithms start
+/// from the same seed-derived w⁰ so comparisons share initial conditions.
+pub fn init_params(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed ^ 0x494E_4954); // "INIT"
+    let mut w = vec![0.0f32; n];
+    // layer-agnostic small init; the MLP layers slice this buffer
+    rng.fill_normal(&mut w, 0.05);
+    w
+}
+
+/// R plain local SGD steps from `w` on client `k`'s data (every baseline's
+/// ClientUpdate), with w device-resident across the steps (§Perf).
+/// Returns the round-start task loss (batch 0) — the Fig.-4 metric.
+pub fn local_sgd(ctx: &mut Ctx, k: usize, w: &mut Vec<f32>, round: u64) -> Result<f64> {
+    let cfg = ctx.cfg;
+    let client = &ctx.data.clients[k];
+    let mut batches = BatchIter::new(
+        client,
+        ctx.model.geom.train_batch,
+        ctx.rng.fork(hash3(k as u64, round, 0x5347_4400)),
+    );
+    let (w_new, loss) = ctx.model.sgd_round(
+        w,
+        || {
+            let (x, y) = batches.next_batch();
+            (x.to_vec(), y.to_vec())
+        },
+        cfg.local_steps,
+        cfg.eta,
+        cfg.mu,
+    )?;
+    *w = w_new;
+    Ok(loss as f64)
+}
+
+/// R pFed1BS local steps (Algorithm 1 lines 11–17): SGD on the smoothed
+/// personalized objective F̃_k(·; v), w device-resident across the steps.
+/// `v` is the current consensus in {−1,0,+1}^m (0s only in round 0).
+/// Returns the round-start task loss (batch 0).
+pub fn local_pfed_steps(
+    ctx: &mut Ctx,
+    k: usize,
+    w: &mut Vec<f32>,
+    v: &[f32],
+    round: u64,
+) -> Result<f64> {
+    let cfg = ctx.cfg;
+    let client = &ctx.data.clients[k];
+    let mut batches = BatchIter::new(
+        client,
+        ctx.model.geom.train_batch,
+        ctx.rng.fork(hash3(k as u64, round, 0x5046_4544)),
+    );
+    let (w_new, loss) = ctx.model.client_round(
+        w,
+        || {
+            let (x, y) = batches.next_batch();
+            (x.to_vec(), y.to_vec())
+        },
+        cfg.local_steps,
+        v,
+        cfg.eta,
+        cfg.lambda,
+        cfg.mu,
+        cfg.gamma,
+    )?;
+    *w = w_new;
+    Ok(loss as f64)
+}
+
+/// Δ = a − b elementwise.
+pub fn delta(a: &[f32], b: &[f32]) -> Vec<f32> {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(&x, &y)| x - y).collect()
+}
+
+/// w += s · u elementwise.
+pub fn axpy(w: &mut [f32], s: f32, u: &[f32]) {
+    debug_assert_eq!(w.len(), u.len());
+    for (wi, &ui) in w.iter_mut().zip(u) {
+        *wi += s * ui;
+    }
+}
+
+/// mean of |x|.
+pub fn mean_abs(x: &[f32]) -> f32 {
+    if x.is_empty() {
+        return 0.0;
+    }
+    (x.iter().map(|&v| v.abs() as f64).sum::<f64>() / x.len() as f64) as f32
+}
+
+/// Weighted mean of several vectors: Σ pᵢ·vᵢ. Panics on empty input.
+pub fn weighted_mean(vectors: &[Vec<f32>], weights: &[f32]) -> Vec<f32> {
+    assert!(!vectors.is_empty());
+    assert_eq!(vectors.len(), weights.len());
+    let n = vectors[0].len();
+    let mut out = vec![0.0f32; n];
+    for (v, &p) in vectors.iter().zip(weights) {
+        debug_assert_eq!(v.len(), n);
+        for (o, &x) in out.iter_mut().zip(v) {
+            *o += p * x;
+        }
+    }
+    out
+}
+
+fn hash3(a: u64, b: u64, c: u64) -> u64 {
+    let mut h = a ^ 0x9E37_79B9_7F4A_7C15;
+    h = h.wrapping_mul(0xBF58_476D_1CE4_E5B9) ^ b.rotate_left(17);
+    h = h.wrapping_mul(0x94D0_49BB_1331_11EB) ^ c.rotate_left(31);
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_is_deterministic_and_scaled() {
+        let a = init_params(1000, 7);
+        let b = init_params(1000, 7);
+        assert_eq!(a, b);
+        let c = init_params(1000, 8);
+        assert_ne!(a, c);
+        let rms =
+            (a.iter().map(|&x| (x as f64).powi(2)).sum::<f64>() / a.len() as f64).sqrt();
+        assert!((rms - 0.05).abs() < 0.01, "rms {rms}");
+    }
+
+    #[test]
+    fn vector_helpers() {
+        let a = [3.0f32, 4.0, 5.0];
+        let b = [1.0f32, 1.0, 1.0];
+        assert_eq!(delta(&a, &b), vec![2.0, 3.0, 4.0]);
+        let mut w = [0.0f32; 3];
+        axpy(&mut w, 2.0, &b);
+        assert_eq!(w, [2.0, 2.0, 2.0]);
+        assert!((mean_abs(&[-2.0, 2.0]) - 2.0).abs() < 1e-6);
+        assert_eq!(mean_abs(&[]), 0.0);
+    }
+
+    #[test]
+    fn weighted_mean_basic() {
+        let vs = vec![vec![1.0f32, 0.0], vec![0.0f32, 1.0]];
+        let out = weighted_mean(&vs, &[0.25, 0.75]);
+        assert_eq!(out, vec![0.25, 0.75]);
+    }
+}

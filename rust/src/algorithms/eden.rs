@@ -1,0 +1,109 @@
+//! EDEN (Vargaftik et al. 2022): communication-efficient distributed mean
+//! estimation via random rotation + scalar quantization.
+//!
+//! Re-implementation fidelity (1-bit configuration): each client rotates
+//! its update with the shared structured rotation H·D (the same FWHT
+//! substrate as the paper's sketch, no subsampling), quantizes every
+//! rotated coordinate to ±1, and computes the scale that makes the
+//! estimate unbiased for a rotation-invariant distribution:
+//!     α = E|y| (mean absolute rotated coordinate)
+//! so  E[α·sign(y)] ≈ y  coordinate-wise after averaging. The server
+//! de-rotates the scaled signs and averages. Uplink: n' bits + one f32.
+//! Downlink: full-precision model (EDEN is a DME/uplink scheme).
+
+use anyhow::Result;
+
+use crate::algorithms::common::{axpy, delta, init_params, local_sgd, mean_abs};
+use crate::algorithms::{Algorithm, Capabilities, Ctx, RoundOutcome};
+use crate::comm::Payload;
+use crate::sketch::SrhtOperator;
+
+pub struct Eden {
+    w: Vec<f32>,
+    /// shared rotation (built at init from the run seed)
+    rot: Option<SrhtOperator>,
+}
+
+impl Eden {
+    pub fn new() -> Self {
+        Eden { w: Vec::new(), rot: None }
+    }
+}
+
+impl Default for Eden {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Algorithm for Eden {
+    fn name(&self) -> &'static str {
+        "eden"
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        Capabilities {
+            upload_dim_reduction: false,
+            upload_one_bit: true,
+            download_dim_reduction: false,
+            download_one_bit: false,
+            personalization: false,
+        }
+    }
+
+    fn init(&mut self, ctx: &mut Ctx) -> Result<()> {
+        let n = ctx.model.geom.n;
+        self.w = init_params(n, ctx.cfg.seed);
+        // m is irrelevant for the rotation; reuse the SRHT plumbing
+        self.rot = Some(SrhtOperator::from_seed(
+            ctx.cfg.seed ^ 0xEDE7,
+            n,
+            1.max(n / 10),
+        ));
+        Ok(())
+    }
+
+    fn round(
+        &mut self,
+        t: usize,
+        selected: &[usize],
+        weights: &[f32],
+        ctx: &mut Ctx,
+    ) -> Result<RoundOutcome> {
+        let rot = self.rot.as_ref().expect("init not called");
+        ctx.net
+            .broadcast_downlink(&Payload::Dense(self.w.clone()), selected.len())?;
+
+        let mut est_rotated = vec![0.0f32; rot.npad];
+        let mut loss_sum = 0.0f64;
+        for (&k, &p) in selected.iter().zip(weights) {
+            let mut wk = self.w.clone();
+            loss_sum += local_sgd(ctx, k, &mut wk, t as u64)?;
+            let d = delta(&wk, &self.w);
+            let y = rot.rotate(&d); // H·D·pad(Δ), length n'
+            let alpha = mean_abs(&y);
+            let signs: Vec<f32> = y.iter().map(|&x| if x >= 0.0 { 1.0 } else { -1.0 }).collect();
+            let delivered = ctx
+                .net
+                .send_uplink(&Payload::ScaledSigns { signs, scale: alpha })?;
+            let Payload::ScaledSigns { signs, scale } = delivered else {
+                anyhow::bail!("payload type changed in transit")
+            };
+            for (e, &s) in est_rotated.iter_mut().zip(&signs) {
+                *e += p * scale * s;
+            }
+        }
+
+        // server: de-rotate the aggregated estimate and step
+        let dhat = rot.rotate_inverse(&est_rotated);
+        axpy(&mut self.w, 1.0, &dhat);
+
+        Ok(RoundOutcome {
+            train_loss: loss_sum / selected.len() as f64,
+        })
+    }
+
+    fn model_for(&self, _k: usize) -> &[f32] {
+        &self.w
+    }
+}

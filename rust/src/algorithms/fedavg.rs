@@ -1,0 +1,94 @@
+//! FedAvg (McMahan et al. 2017) — the uncompressed reference point.
+//!
+//! Per round: full-precision model broadcast to each participant (32n
+//! bits each), R local SGD steps, full-precision upload, weighted server
+//! average over the participants.
+
+use anyhow::Result;
+
+use crate::algorithms::common::{init_params, local_sgd, weighted_mean};
+use crate::algorithms::{Algorithm, Capabilities, Ctx, RoundOutcome};
+use crate::comm::Payload;
+
+pub struct FedAvg {
+    w: Vec<f32>,
+}
+
+impl FedAvg {
+    pub fn new() -> Self {
+        FedAvg { w: Vec::new() }
+    }
+}
+
+impl Default for FedAvg {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Algorithm for FedAvg {
+    fn name(&self) -> &'static str {
+        "fedavg"
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        Capabilities {
+            upload_dim_reduction: false,
+            upload_one_bit: false,
+            download_dim_reduction: false,
+            download_one_bit: false,
+            personalization: false,
+        }
+    }
+
+    fn init(&mut self, ctx: &mut Ctx) -> Result<()> {
+        self.w = init_params(ctx.model.geom.n, ctx.cfg.seed);
+        Ok(())
+    }
+
+    fn round(
+        &mut self,
+        t: usize,
+        selected: &[usize],
+        weights: &[f32],
+        ctx: &mut Ctx,
+    ) -> Result<RoundOutcome> {
+        let _ = t;
+        // downlink: full model to each participant
+        ctx.net
+            .broadcast_downlink(&Payload::Dense(self.w.clone()), selected.len())?;
+
+        let mut locals: Vec<Vec<f32>> = Vec::with_capacity(selected.len());
+        let mut loss_sum = 0.0f64;
+        for &k in selected {
+            let mut wk = self.w.clone();
+            loss_sum += local_sgd(ctx, k, &mut wk, t as u64)?;
+            // uplink: full model back
+            let delivered = ctx.net.send_uplink(&Payload::Dense(wk))?;
+            let Payload::Dense(wk) = delivered else {
+                anyhow::bail!("payload type changed in transit")
+            };
+            locals.push(wk);
+        }
+
+        // server: w ← Σ p_k w_k
+        self.w = weighted_mean(&locals, weights);
+        Ok(RoundOutcome {
+            train_loss: loss_sum / selected.len() as f64,
+        })
+    }
+
+    fn model_for(&self, _k: usize) -> &[f32] {
+        &self.w
+    }
+
+    fn snapshot(&self) -> (Vec<Vec<f32>>, Vec<f32>) {
+        (vec![self.w.clone()], Vec::new())
+    }
+
+    fn restore(&mut self, models: Vec<Vec<f32>>, _consensus: Vec<f32>) -> Result<()> {
+        anyhow::ensure!(models.len() == 1, "fedavg checkpoint holds one global model");
+        self.w = models.into_iter().next().unwrap();
+        Ok(())
+    }
+}

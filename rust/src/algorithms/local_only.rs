@@ -1,0 +1,70 @@
+//! LocalOnly ablation: pure local training, zero communication.
+//!
+//! Upper-bounds what personalization alone achieves without any
+//! collaboration — pFed1BS should beat it when the consensus carries
+//! useful signal (and must never pay more communication).
+
+use anyhow::Result;
+
+use crate::algorithms::common::{init_params, local_sgd};
+use crate::algorithms::{Algorithm, Capabilities, Ctx, RoundOutcome};
+
+pub struct LocalOnly {
+    wks: Vec<Vec<f32>>,
+}
+
+impl LocalOnly {
+    pub fn new() -> Self {
+        LocalOnly { wks: Vec::new() }
+    }
+}
+
+impl Default for LocalOnly {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Algorithm for LocalOnly {
+    fn name(&self) -> &'static str {
+        "local"
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        Capabilities {
+            upload_dim_reduction: false,
+            upload_one_bit: false,
+            download_dim_reduction: false,
+            download_one_bit: false,
+            personalization: true,
+        }
+    }
+
+    fn init(&mut self, ctx: &mut Ctx) -> Result<()> {
+        let w0 = init_params(ctx.model.geom.n, ctx.cfg.seed);
+        self.wks = (0..ctx.data.num_clients()).map(|_| w0.clone()).collect();
+        Ok(())
+    }
+
+    fn round(
+        &mut self,
+        t: usize,
+        selected: &[usize],
+        _weights: &[f32],
+        ctx: &mut Ctx,
+    ) -> Result<RoundOutcome> {
+        let mut loss_sum = 0.0f64;
+        for &k in selected {
+            let mut w = std::mem::take(&mut self.wks[k]);
+            loss_sum += local_sgd(ctx, k, &mut w, t as u64)?;
+            self.wks[k] = w;
+        }
+        Ok(RoundOutcome {
+            train_loss: loss_sum / selected.len() as f64,
+        })
+    }
+
+    fn model_for(&self, k: usize) -> &[f32] {
+        &self.wks[k]
+    }
+}

@@ -1,0 +1,108 @@
+//! OBCSAA (Fan et al. 2022): 1-bit compressed-sensing uplink, full-
+//! precision downlink (Table 1 row 3).
+//!
+//! Re-implementation fidelity: clients upload the one-bit compressed
+//! sketch sign(Φ Δ_k) (m bits) plus a 32-bit magnitude; the server
+//! reconstructs with the adjoint estimator Δ̂ ∝ Φᵀ(Σ p_k z_k) — the first
+//! iterate of BIHT and the standard one-bit-CS proxy when the support is
+//! unknown — rescaled to the clients' reported update norm, then applies
+//! it and broadcasts the full-precision model (uncompressed downlink, as
+//! in the paper's table row).
+
+use anyhow::Result;
+
+use crate::algorithms::common::{axpy, delta, init_params, local_sgd};
+use crate::algorithms::{Algorithm, Capabilities, Ctx, RoundOutcome};
+use crate::comm::Payload;
+use crate::util::stats::l2_norm;
+
+pub struct Obcsaa {
+    w: Vec<f32>,
+}
+
+impl Obcsaa {
+    pub fn new() -> Self {
+        Obcsaa { w: Vec::new() }
+    }
+}
+
+impl Default for Obcsaa {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Algorithm for Obcsaa {
+    fn name(&self) -> &'static str {
+        "obcsaa"
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        Capabilities {
+            upload_dim_reduction: true,
+            upload_one_bit: true,
+            download_dim_reduction: false,
+            download_one_bit: false,
+            personalization: false,
+        }
+    }
+
+    fn init(&mut self, ctx: &mut Ctx) -> Result<()> {
+        self.w = init_params(ctx.model.geom.n, ctx.cfg.seed);
+        Ok(())
+    }
+
+    fn round(
+        &mut self,
+        t: usize,
+        selected: &[usize],
+        weights: &[f32],
+        ctx: &mut Ctx,
+    ) -> Result<RoundOutcome> {
+        let m = ctx.model.geom.m;
+        // downlink: full-precision model to each participant
+        ctx.net
+            .broadcast_downlink(&Payload::Dense(self.w.clone()), selected.len())?;
+
+        let mut agg = vec![0.0f32; m];
+        let mut norm_acc = 0.0f64;
+        let mut loss_sum = 0.0f64;
+        for (&k, &p) in selected.iter().zip(weights) {
+            let mut wk = self.w.clone();
+            loss_sum += local_sgd(ctx, k, &mut wk, t as u64)?;
+            let d = delta(&wk, &self.w);
+            let z = ctx.projection.sketch_sign(&d);
+            let norm = l2_norm(&d) as f32;
+            let delivered = ctx
+                .net
+                .send_uplink(&Payload::ScaledSigns { signs: z, scale: norm })?;
+            let Payload::ScaledSigns { signs, scale } = delivered else {
+                anyhow::bail!("payload type changed in transit")
+            };
+            norm_acc += (p * scale) as f64;
+            for (a, &s) in agg.iter_mut().zip(&signs) {
+                *a += p * s;
+            }
+        }
+
+        // one-bit CS reconstruction: adjoint estimate, rescaled to the
+        // weighted-mean update norm
+        let mut dhat = ctx.projection.adjoint(&agg);
+        let dn = l2_norm(&dhat);
+        if dn > 0.0 {
+            let s = (norm_acc / dn) as f32;
+            for v in dhat.iter_mut() {
+                *v *= s;
+            }
+        }
+        axpy(&mut self.w, 1.0, &dhat);
+
+        Ok(RoundOutcome {
+            train_loss: loss_sum / selected.len() as f64,
+        })
+    }
+
+    fn model_for(&self, _k: usize) -> &[f32] {
+        &self.w
+    }
+}

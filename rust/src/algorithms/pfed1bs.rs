@@ -1,0 +1,223 @@
+//! pFed1BS — the paper's Algorithm 1.
+//!
+//! Per round t:
+//!   1. server broadcasts the m-bit consensus v^t to the S^t participants
+//!      (one-bit, dimension-reduced downlink);
+//!   2. every participant runs R local SGD steps on the smoothed
+//!      personalized objective F̃_k(w; v^t) (HLO `client_step`, whose
+//!      regularizer gradient is the fused Pallas SRHT kernel);
+//!   3. every participant uploads z_k = sign(Φ w_k^{t+1}) — m bits;
+//!   4. the server aggregates v^{t+1} = sign(Σ p_k z_k) — the exact
+//!      minimizer of the server objective (Lemma 1) — as a packed
+//!      majority vote.
+//!
+//! v⁰ = 0 (Algorithm 1 line 2): round 0 has no meaningful consensus, so
+//! the broadcast is skipped (the paper's initialization makes the
+//! regularizer's ⟨v,Φw⟩ term vanish; h_γ still regularizes).
+//!
+//! The `--projection dense` ablation (Appendix Fig. 3) swaps the SRHT for
+//! a dense Gaussian Φ: the local step then decomposes into the plain HLO
+//! `sgd_step` plus the regularizer gradient computed through the rust
+//! dense operator — mathematically the same single-step update (both
+//! gradients evaluated at the same iterate).
+
+use anyhow::Result;
+
+use crate::algorithms::common::{axpy, init_params, local_pfed_steps};
+use crate::algorithms::{Algorithm, Capabilities, Ctx, RoundOutcome};
+use crate::comm::Payload;
+use crate::config::ProjectionKind;
+use crate::data::BatchIter;
+use crate::sketch::bitpack::{majority_vote_weighted, pack_signs, unpack_signs};
+use crate::sketch::Projection;
+
+pub struct PFed1BS {
+    /// personalized models w_k, all K clients
+    wks: Vec<Vec<f32>>,
+    /// consensus vector v^t ∈ {−1,0,+1}^m (0 only at t=0)
+    v: Vec<f32>,
+    projection_kind: ProjectionKind,
+}
+
+impl PFed1BS {
+    pub fn new() -> Self {
+        PFed1BS {
+            wks: Vec::new(),
+            v: Vec::new(),
+            projection_kind: ProjectionKind::Fht,
+        }
+    }
+
+    /// R local steps + sketch for one client; dispatches on projection.
+    fn client_update(
+        &mut self,
+        ctx: &mut Ctx,
+        k: usize,
+        round: usize,
+    ) -> Result<(Vec<f32>, f64)> {
+        let mut w = std::mem::take(&mut self.wks[k]);
+        let loss = match self.projection_kind {
+            ProjectionKind::Fht => {
+                // fused HLO path: regularizer inside client_step
+                local_pfed_steps(ctx, k, &mut w, &self.v, round as u64)?
+            }
+            ProjectionKind::DenseGaussian => {
+                // ablation path: task+l2 step via HLO, dense reg grad in rust
+                dense_reg_steps(ctx, k, &mut w, &self.v, round as u64)?
+            }
+        };
+        // one-bit sketch of the updated personalized model
+        let z = match (self.projection_kind, ctx.projection) {
+            (ProjectionKind::Fht, _) => ctx.model.sketch_sign(&w)?,
+            (ProjectionKind::DenseGaussian, proj) => proj.sketch_sign(&w),
+        };
+        self.wks[k] = w;
+        Ok((z, loss))
+    }
+}
+
+impl Default for PFed1BS {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Dense-Gaussian ablation local loop (Appendix Fig. 3): the update
+///   w ← w − η(∇f̂ + μw) − ηλ·Φᵀ(tanh(γΦw) − v)
+/// with both gradients at the same iterate — identical semantics to the
+/// fused HLO step, different Φ.
+fn dense_reg_steps(
+    ctx: &mut Ctx,
+    k: usize,
+    w: &mut Vec<f32>,
+    v: &[f32],
+    round: u64,
+) -> Result<f64> {
+    let cfg = ctx.cfg;
+    let client = &ctx.data.clients[k];
+    let mut batches = BatchIter::new(
+        client,
+        ctx.model.geom.train_batch,
+        ctx.rng.fork(round.wrapping_mul(0x9E37).wrapping_add(k as u64)),
+    );
+    let mut loss_sum = 0.0f64;
+    for _ in 0..cfg.local_steps {
+        let (x, y) = batches.next_batch();
+        // regularizer gradient at the current iterate (before the step)
+        let z = ctx.projection.forward(w);
+        let resid: Vec<f32> = z
+            .iter()
+            .zip(v)
+            .map(|(&zi, &vi)| (cfg.gamma * zi).tanh() - vi)
+            .collect();
+        let reg = ctx.projection.adjoint(&resid);
+        let (mut w_new, loss) = ctx.model.sgd_step(w, x, y, cfg.eta, cfg.mu)?;
+        axpy(&mut w_new, -cfg.eta * cfg.lambda, &reg);
+        *w = w_new;
+        loss_sum += loss as f64;
+    }
+    Ok(loss_sum / cfg.local_steps as f64)
+}
+
+impl Algorithm for PFed1BS {
+    fn name(&self) -> &'static str {
+        "pfed1bs"
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        Capabilities {
+            upload_dim_reduction: true,
+            upload_one_bit: true,
+            download_dim_reduction: true,
+            download_one_bit: true,
+            personalization: true,
+        }
+    }
+
+    fn init(&mut self, ctx: &mut Ctx) -> Result<()> {
+        let n = ctx.model.geom.n;
+        let m = ctx.model.geom.m;
+        self.projection_kind = ctx.cfg.projection;
+        if let (ProjectionKind::DenseGaussian, Projection::Srht(_)) =
+            (self.projection_kind, ctx.projection)
+        {
+            anyhow::bail!("config says dense projection but ctx carries SRHT");
+        }
+        let w0 = init_params(n, ctx.cfg.seed);
+        self.wks = (0..ctx.data.num_clients()).map(|_| w0.clone()).collect();
+        self.v = vec![0.0f32; m]; // v^0 = 0 (Algorithm 1 line 2)
+        Ok(())
+    }
+
+    fn round(
+        &mut self,
+        t: usize,
+        selected: &[usize],
+        weights: &[f32],
+        ctx: &mut Ctx,
+    ) -> Result<RoundOutcome> {
+        let m = ctx.model.geom.m;
+
+        // (1) downlink: broadcast v^t (skip at t=0 where v=0 by init)
+        if t > 0 {
+            let payload = Payload::Signs(self.v.clone());
+            let delivered = ctx.net.broadcast_downlink(&payload, selected.len())?;
+            // all participants receive the same consensus (possibly
+            // bit-flipped under a noisy channel) — use the first copy
+            if let Some(Payload::Signs(v)) = delivered.into_iter().next() {
+                self.v = v;
+            }
+        }
+
+        // (2)+(3) client updates and one-bit uplinks
+        let mut sketches: Vec<Vec<u64>> = Vec::with_capacity(selected.len());
+        let mut loss_sum = 0.0f64;
+        for &k in selected {
+            let (z, loss) = self.client_update(ctx, k, t)?;
+            loss_sum += loss;
+            let delivered = ctx.net.send_uplink(&Payload::Signs(z))?;
+            let Payload::Signs(z) = delivered else {
+                anyhow::bail!("uplink payload type changed in transit")
+            };
+            sketches.push(pack_signs(&z));
+        }
+
+        // (4) server: weighted majority vote (Lemma 1)
+        let vote = majority_vote_weighted(&sketches, weights, m);
+        self.v = unpack_signs(&vote, m);
+
+        Ok(RoundOutcome {
+            train_loss: loss_sum / selected.len() as f64,
+        })
+    }
+
+    fn model_for(&self, k: usize) -> &[f32] {
+        &self.wks[k]
+    }
+
+    fn consensus(&self) -> Option<&[f32]> {
+        Some(&self.v)
+    }
+
+    fn snapshot(&self) -> (Vec<Vec<f32>>, Vec<f32>) {
+        (self.wks.clone(), self.v.clone())
+    }
+
+    fn restore(&mut self, models: Vec<Vec<f32>>, consensus: Vec<f32>) -> Result<()> {
+        anyhow::ensure!(
+            models.len() == self.wks.len(),
+            "checkpoint has {} client models, run has {}",
+            models.len(),
+            self.wks.len()
+        );
+        anyhow::ensure!(
+            consensus.len() == self.v.len(),
+            "checkpoint consensus length {} != m {}",
+            consensus.len(),
+            self.v.len()
+        );
+        self.wks = models;
+        self.v = consensus;
+        Ok(())
+    }
+}

@@ -1,0 +1,175 @@
+//! Micro-benchmark harness (criterion is unavailable offline —
+//! DESIGN.md §2): warmup, adaptive iteration count, robust statistics,
+//! and a table printer shared by every `benches/bench_*.rs` target.
+//!
+//! Usage inside a `harness = false` bench:
+//! ```no_run
+//! use pfed1bs::bench_harness::Bench;
+//! let mut b = Bench::new("fwht");
+//! let mut x = vec![1.0f32; 1 << 16];
+//! b.bench("fwht_64k", || pfed1bs::sketch::fwht_normalized(&mut x));
+//! b.report();
+//! ```
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::{mad, mean, percentile};
+
+/// One benchmark's timing summary (nanoseconds).
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub mad_ns: f64,
+    /// optional throughput denominator (elements per iteration)
+    pub elements: Option<u64>,
+}
+
+impl Measurement {
+    pub fn throughput_melem_s(&self) -> Option<f64> {
+        self.elements
+            .map(|e| e as f64 / (self.mean_ns / 1e9) / 1e6)
+    }
+}
+
+/// Config + accumulated measurements for one bench binary.
+pub struct Bench {
+    pub suite: String,
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub max_iters: usize,
+    results: Vec<Measurement>,
+}
+
+impl Bench {
+    pub fn new(suite: &str) -> Bench {
+        // honor a quick mode for CI-ish runs: PFED1BS_BENCH_QUICK=1
+        let quick = std::env::var("PFED1BS_BENCH_QUICK").is_ok();
+        Bench {
+            suite: suite.to_string(),
+            warmup: if quick { Duration::from_millis(50) } else { Duration::from_millis(300) },
+            measure: if quick { Duration::from_millis(200) } else { Duration::from_secs(2) },
+            max_iters: 1_000_000,
+            results: Vec::new(),
+        }
+    }
+
+    /// Benchmark a closure; returns the measurement (also stored).
+    pub fn bench<F: FnMut()>(&mut self, name: &str, f: F) -> &Measurement {
+        self.bench_with_elements(name, None, f)
+    }
+
+    /// Benchmark with a throughput denominator.
+    pub fn bench_elems<F: FnMut()>(&mut self, name: &str, elements: u64, f: F) -> &Measurement {
+        self.bench_with_elements(name, Some(elements), f)
+    }
+
+    fn bench_with_elements<F: FnMut()>(
+        &mut self,
+        name: &str,
+        elements: Option<u64>,
+        mut f: F,
+    ) -> &Measurement {
+        // warmup
+        let start = Instant::now();
+        while start.elapsed() < self.warmup {
+            f();
+        }
+        // measure
+        let mut samples_ns: Vec<f64> = Vec::new();
+        let start = Instant::now();
+        while start.elapsed() < self.measure && samples_ns.len() < self.max_iters {
+            let t0 = Instant::now();
+            f();
+            samples_ns.push(t0.elapsed().as_nanos() as f64);
+        }
+        let m = Measurement {
+            name: name.to_string(),
+            iters: samples_ns.len(),
+            mean_ns: mean(&samples_ns),
+            p50_ns: percentile(&samples_ns, 50.0),
+            p99_ns: percentile(&samples_ns, 99.0),
+            mad_ns: mad(&samples_ns),
+            elements,
+        };
+        self.results.push(m);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+
+    /// Print an aligned table of all measurements.
+    pub fn report(&self) {
+        println!("\n== bench suite: {} ==", self.suite);
+        println!(
+            "{:<40} {:>10} {:>12} {:>12} {:>12} {:>12}",
+            "name", "iters", "mean", "p50", "p99", "throughput"
+        );
+        for m in &self.results {
+            println!(
+                "{:<40} {:>10} {:>12} {:>12} {:>12} {:>12}",
+                m.name,
+                m.iters,
+                fmt_ns(m.mean_ns),
+                fmt_ns(m.p50_ns),
+                fmt_ns(m.p99_ns),
+                m.throughput_melem_s()
+                    .map(|t| format!("{t:.1} Me/s"))
+                    .unwrap_or_else(|| "-".into()),
+            );
+        }
+    }
+}
+
+/// Human-format nanoseconds.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+/// Prevent the optimizer from deleting a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        std::env::set_var("PFED1BS_BENCH_QUICK", "1");
+        let mut b = Bench::new("test");
+        let mut acc = 0u64;
+        let m = b.bench_elems("noop_loop", 1000, || {
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+        });
+        assert!(m.iters > 0);
+        assert!(m.mean_ns > 0.0);
+        assert!(m.throughput_melem_s().unwrap() > 0.0);
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn fmt_ns_ranges() {
+        assert!(fmt_ns(500.0).contains("ns"));
+        assert!(fmt_ns(5_000.0).contains("µs"));
+        assert!(fmt_ns(5_000_000.0).contains("ms"));
+        assert!(fmt_ns(5e9).contains(" s"));
+    }
+}

@@ -1,0 +1,208 @@
+//! Wire codecs: how each algorithm serializes its payloads.
+//!
+//! Every algorithm's uplink/downlink traffic goes through a codec so the
+//! ledger measures *actual encoded bytes*, not a formula. Encoded frames
+//! are self-describing: 1 tag byte + u32 element count + payload.
+
+use anyhow::{bail, Result};
+
+use crate::sketch::bitpack::{pack_signs, packed_bytes, unpack_signs};
+
+/// A decoded payload.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Payload {
+    /// full-precision vector (FedAvg and full-model downlinks)
+    Dense(Vec<f32>),
+    /// ±1 sign vector (OBDA/zSignFed uplinks, pFed1BS both directions)
+    Signs(Vec<f32>),
+    /// sign vector with one f32 scale (EDEN/FedBAT: α·sign(x))
+    ScaledSigns { signs: Vec<f32>, scale: f32 },
+}
+
+impl Payload {
+    pub fn len(&self) -> usize {
+        match self {
+            Payload::Dense(v) | Payload::Signs(v) => v.len(),
+            Payload::ScaledSigns { signs, .. } => signs.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+const TAG_DENSE: u8 = 1;
+const TAG_SIGNS: u8 = 2;
+const TAG_SCALED: u8 = 3;
+
+/// Encode a payload to its wire frame.
+pub fn encode(p: &Payload) -> Vec<u8> {
+    match p {
+        Payload::Dense(v) => {
+            let mut out = Vec::with_capacity(5 + 4 * v.len());
+            out.push(TAG_DENSE);
+            out.extend_from_slice(&(v.len() as u32).to_le_bytes());
+            for x in v {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+            out
+        }
+        Payload::Signs(v) => {
+            let words = pack_signs(v);
+            let mut out = Vec::with_capacity(5 + words.len() * 8);
+            out.push(TAG_SIGNS);
+            out.extend_from_slice(&(v.len() as u32).to_le_bytes());
+            for w in words {
+                out.extend_from_slice(&w.to_le_bytes());
+            }
+            out
+        }
+        Payload::ScaledSigns { signs, scale } => {
+            let words = pack_signs(signs);
+            let mut out = Vec::with_capacity(9 + words.len() * 8);
+            out.push(TAG_SCALED);
+            out.extend_from_slice(&(signs.len() as u32).to_le_bytes());
+            out.extend_from_slice(&scale.to_le_bytes());
+            for w in words {
+                out.extend_from_slice(&w.to_le_bytes());
+            }
+            out
+        }
+    }
+}
+
+/// Decode a wire frame back to a payload.
+pub fn decode(bytes: &[u8]) -> Result<Payload> {
+    if bytes.len() < 5 {
+        bail!("frame too short ({} bytes)", bytes.len());
+    }
+    let tag = bytes[0];
+    let len = u32::from_le_bytes(bytes[1..5].try_into().unwrap()) as usize;
+    match tag {
+        TAG_DENSE => {
+            let need = 5 + 4 * len;
+            if bytes.len() != need {
+                bail!("dense frame: expected {need} bytes, got {}", bytes.len());
+            }
+            let v = bytes[5..]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            Ok(Payload::Dense(v))
+        }
+        TAG_SIGNS => {
+            let need = 5 + packed_bytes(len);
+            if bytes.len() != need {
+                bail!("signs frame: expected {need} bytes, got {}", bytes.len());
+            }
+            let words: Vec<u64> = bytes[5..]
+                .chunks_exact(8)
+                .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            Ok(Payload::Signs(unpack_signs(&words, len)))
+        }
+        TAG_SCALED => {
+            let need = 9 + packed_bytes(len);
+            if bytes.len() != need {
+                bail!("scaled frame: expected {need} bytes, got {}", bytes.len());
+            }
+            let scale = f32::from_le_bytes(bytes[5..9].try_into().unwrap());
+            let words: Vec<u64> = bytes[9..]
+                .chunks_exact(8)
+                .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            Ok(Payload::ScaledSigns { signs: unpack_signs(&words, len), scale })
+        }
+        t => bail!("unknown payload tag {t}"),
+    }
+}
+
+/// Frame size without encoding (for planning / assertions).
+pub fn frame_bytes(p: &Payload) -> usize {
+    match p {
+        Payload::Dense(v) => 5 + 4 * v.len(),
+        Payload::Signs(v) => 5 + packed_bytes(v.len()),
+        Payload::ScaledSigns { signs, .. } => 9 + packed_bytes(signs.len()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+    use crate::util::rng::Rng;
+
+    fn rand_signs(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| if rng.f32() < 0.5 { 1.0 } else { -1.0 }).collect()
+    }
+
+    #[test]
+    fn dense_round_trip() {
+        check("codec_dense_round_trip", 30, |rng| {
+            let n = rng.below(1000);
+            let v: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let p = Payload::Dense(v);
+            let bytes = encode(&p);
+            if bytes.len() != frame_bytes(&p) {
+                return Err("frame_bytes mismatch".into());
+            }
+            if decode(&bytes).map_err(|e| e.to_string())? != p {
+                return Err("round trip".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn signs_round_trip_and_compression() {
+        check("codec_signs_round_trip", 30, |rng| {
+            let n = rng.below(2000) + 1;
+            let p = Payload::Signs(rand_signs(rng, n));
+            let bytes = encode(&p);
+            if decode(&bytes).map_err(|e| e.to_string())? != p {
+                return Err("round trip".into());
+            }
+            // ~32x smaller than dense for large n
+            if n >= 640 && bytes.len() * 16 > 4 * n + 5 {
+                return Err(format!("poor compression: {} bytes for n={n}", bytes.len()));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn scaled_signs_round_trip() {
+        let mut rng = Rng::new(3);
+        let p = Payload::ScaledSigns { signs: rand_signs(&mut rng, 100), scale: 0.0123 };
+        assert_eq!(decode(&encode(&p)).unwrap(), p);
+    }
+
+    #[test]
+    fn exact_wire_sizes() {
+        // the communication-cost claims in Table 2 rest on these sizes
+        assert_eq!(encode(&Payload::Dense(vec![0.0; 100])).len(), 5 + 400);
+        assert_eq!(encode(&Payload::Signs(vec![1.0; 64])).len(), 5 + 8);
+        assert_eq!(encode(&Payload::Signs(vec![1.0; 65])).len(), 5 + 16);
+        assert_eq!(
+            encode(&Payload::ScaledSigns { signs: vec![1.0; 64], scale: 1.0 }).len(),
+            9 + 8
+        );
+    }
+
+    #[test]
+    fn corrupt_frames_rejected() {
+        assert!(decode(&[]).is_err());
+        assert!(decode(&[9, 0, 0, 0, 0]).is_err()); // bad tag
+        let mut ok = encode(&Payload::Dense(vec![1.0, 2.0]));
+        ok.pop(); // truncate
+        assert!(decode(&ok).is_err());
+    }
+
+    #[test]
+    fn empty_payloads() {
+        let p = Payload::Dense(vec![]);
+        assert_eq!(decode(&encode(&p)).unwrap(), p);
+        assert!(p.is_empty());
+    }
+}

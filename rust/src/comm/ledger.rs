@@ -1,0 +1,147 @@
+//! Communication ledger: exact per-round byte accounting.
+//!
+//! Table 2's "Cost (MB)" column comes from here. Convention (verified in
+//! DESIGN.md §5 against the paper's own reduction percentages): uplink is
+//! counted per participating client, downlink is counted per participating
+//! client too (the broadcast is delivered S times).
+
+/// Direction of a message.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Direction {
+    Uplink,
+    Downlink,
+}
+
+/// Byte counters for one communication round.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct RoundBytes {
+    pub uplink: u64,
+    pub downlink: u64,
+    pub uplink_msgs: u32,
+    pub downlink_msgs: u32,
+}
+
+impl RoundBytes {
+    pub fn total(&self) -> u64 {
+        self.uplink + self.downlink
+    }
+
+    pub fn total_mb(&self) -> f64 {
+        self.total() as f64 / (1024.0 * 1024.0)
+    }
+}
+
+/// Accumulating ledger across rounds.
+#[derive(Clone, Debug, Default)]
+pub struct Ledger {
+    rounds: Vec<RoundBytes>,
+    current: RoundBytes,
+}
+
+impl Ledger {
+    pub fn new() -> Self {
+        Ledger::default()
+    }
+
+    /// Record one message of `bytes` in `dir` within the current round.
+    pub fn record(&mut self, dir: Direction, bytes: usize) {
+        match dir {
+            Direction::Uplink => {
+                self.current.uplink += bytes as u64;
+                self.current.uplink_msgs += 1;
+            }
+            Direction::Downlink => {
+                self.current.downlink += bytes as u64;
+                self.current.downlink_msgs += 1;
+            }
+        }
+    }
+
+    /// Close the current round and start a new one; returns the closed one.
+    pub fn end_round(&mut self) -> RoundBytes {
+        let done = self.current;
+        self.rounds.push(done);
+        self.current = RoundBytes::default();
+        done
+    }
+
+    pub fn rounds(&self) -> &[RoundBytes] {
+        &self.rounds
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.rounds.iter().map(|r| r.total()).sum::<u64>() + self.current.total()
+    }
+
+    /// Mean per-round cost in MB over completed rounds (Table 2 metric).
+    pub fn mean_round_mb(&self) -> f64 {
+        if self.rounds.is_empty() {
+            return 0.0;
+        }
+        self.rounds.iter().map(|r| r.total_mb()).sum::<f64>() / self.rounds.len() as f64
+    }
+
+    /// Percent reduction vs a reference per-round cost (the ↓xx.x% column).
+    pub fn reduction_vs(&self, reference_mb: f64) -> f64 {
+        if reference_mb <= 0.0 {
+            return 0.0;
+        }
+        100.0 * (1.0 - self.mean_round_mb() / reference_mb)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_rounds() {
+        let mut l = Ledger::new();
+        l.record(Direction::Uplink, 100);
+        l.record(Direction::Uplink, 50);
+        l.record(Direction::Downlink, 25);
+        let r = l.end_round();
+        assert_eq!(r.uplink, 150);
+        assert_eq!(r.downlink, 25);
+        assert_eq!(r.uplink_msgs, 2);
+        assert_eq!(r.downlink_msgs, 1);
+        assert_eq!(r.total(), 175);
+        assert_eq!(l.rounds().len(), 1);
+    }
+
+    #[test]
+    fn mean_round_mb() {
+        let mut l = Ledger::new();
+        l.record(Direction::Uplink, 1024 * 1024);
+        l.end_round();
+        l.record(Direction::Uplink, 3 * 1024 * 1024);
+        l.end_round();
+        assert!((l.mean_round_mb() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reduction_percentage() {
+        let mut l = Ledger::new();
+        l.record(Direction::Uplink, 1024 * 1024); // 1 MB/round
+        l.end_round();
+        // vs 32 MB reference: 96.875% reduction (the OBDA ratio)
+        assert!((l.reduction_vs(32.0) - 96.875).abs() < 1e-6);
+    }
+
+    #[test]
+    fn totals_include_open_round() {
+        let mut l = Ledger::new();
+        l.record(Direction::Downlink, 10);
+        assert_eq!(l.total_bytes(), 10);
+        l.end_round();
+        l.record(Direction::Uplink, 5);
+        assert_eq!(l.total_bytes(), 15);
+    }
+
+    #[test]
+    fn empty_ledger_is_zero() {
+        let l = Ledger::new();
+        assert_eq!(l.mean_round_mb(), 0.0);
+        assert_eq!(l.total_bytes(), 0);
+    }
+}

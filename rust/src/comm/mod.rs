@@ -1,0 +1,10 @@
+//! Simulated bidirectional communication substrate: wire codecs, exact
+//! byte ledger, and an in-process network with optional bit-flip noise.
+
+pub mod codec;
+pub mod ledger;
+pub mod network;
+
+pub use codec::{decode, encode, frame_bytes, Payload};
+pub use ledger::{Direction, Ledger, RoundBytes};
+pub use network::SimNetwork;

@@ -1,0 +1,124 @@
+//! Config-file parser: `key = value` lines, `#` comments, optional
+//! `[section]` headers that prefix keys as `section.key` (flattened TOML
+//! subset — serde/toml are unavailable offline, DESIGN.md §2).
+
+use anyhow::{bail, Context, Result};
+
+/// Parse a config file into ordered (key, value) pairs.
+pub fn parse_file(path: &str) -> Result<Vec<(String, String)>> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    parse_str(&text).with_context(|| format!("parsing {path}"))
+}
+
+/// Parse config text. Later keys override earlier ones downstream (the
+/// consumer applies them in order).
+pub fn parse_str(text: &str) -> Result<Vec<(String, String)>> {
+    let mut out = Vec::new();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let Some(name) = rest.strip_suffix(']') else {
+                bail!("line {}: unterminated section header `{raw}`", lineno + 1);
+            };
+            section = name.trim().to_string();
+            continue;
+        }
+        let Some((key, val)) = line.split_once('=') else {
+            bail!("line {}: expected `key = value`, got `{raw}`", lineno + 1);
+        };
+        let key = key.trim();
+        if key.is_empty() {
+            bail!("line {}: empty key", lineno + 1);
+        }
+        let full_key = if section.is_empty() {
+            key.to_string()
+        } else {
+            format!("{section}.{key}")
+        };
+        out.push((full_key, unquote(val.trim())));
+    }
+    Ok(out)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // `#` starts a comment unless inside quotes
+    let mut in_quote = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_quote = !in_quote,
+            '#' if !in_quote => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn unquote(v: &str) -> String {
+    if v.len() >= 2 && v.starts_with('"') && v.ends_with('"') {
+        v[1..v.len() - 1].to_string()
+    } else {
+        v.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_pairs() {
+        let kv = parse_str("a = 1\nb=two\n  c  =  3.5  ").unwrap();
+        assert_eq!(
+            kv,
+            vec![
+                ("a".into(), "1".into()),
+                ("b".into(), "two".into()),
+                ("c".into(), "3.5".into())
+            ]
+        );
+    }
+
+    #[test]
+    fn comments_and_blanks() {
+        let kv = parse_str("# header\n\na = 1  # trailing\n   \n").unwrap();
+        assert_eq!(kv, vec![("a".into(), "1".into())]);
+    }
+
+    #[test]
+    fn sections_prefix_keys() {
+        let kv = parse_str("[train]\nrounds = 10\n[data]\nseed = 3").unwrap();
+        assert_eq!(
+            kv,
+            vec![
+                ("train.rounds".into(), "10".into()),
+                ("data.seed".into(), "3".into())
+            ]
+        );
+    }
+
+    #[test]
+    fn quoted_values_keep_hashes() {
+        let kv = parse_str("path = \"a#b\"").unwrap();
+        assert_eq!(kv, vec![("path".into(), "a#b".into())]);
+    }
+
+    #[test]
+    fn errors_report_line_numbers() {
+        let err = parse_str("ok = 1\nnot a pair").unwrap_err().to_string();
+        assert!(err.contains("line 2"), "{err}");
+        let err = parse_str("[oops").unwrap_err().to_string();
+        assert!(err.contains("unterminated"), "{err}");
+        assert!(parse_str("= nokey").is_err());
+    }
+
+    #[test]
+    fn order_preserved_for_override_semantics() {
+        let kv = parse_str("a = 1\na = 2").unwrap();
+        assert_eq!(kv[0].1, "1");
+        assert_eq!(kv[1].1, "2");
+    }
+}

@@ -1,0 +1,263 @@
+//! Training checkpoints: persist and resume federated state.
+//!
+//! A deployment-grade coordinator must survive restarts: checkpoints
+//! capture the round counter, the consensus vector v, every client's
+//! personalized model, and the RNG-relevant seed, in a self-describing
+//! little-endian binary format (no serde in the offline mirror).
+//!
+//! Layout (all little-endian):
+//!   magic  b"PF1B"            4 B
+//!   version u32               4 B
+//!   round   u64               8 B
+//!   seed    u64               8 B
+//!   m       u32               4 B      (consensus length; 0 = none)
+//!   v       f32 × m
+//!   k       u32               4 B      (number of client models)
+//!   n       u32               4 B      (params per model; uniform)
+//!   w_k     f32 × n, k times
+//!   crc     u32               4 B      (FNV-1a over all preceding bytes)
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+const MAGIC: &[u8; 4] = b"PF1B";
+const VERSION: u32 = 1;
+
+/// Federated training state snapshot.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    pub round: u64,
+    pub seed: u64,
+    /// consensus vector v (empty when the algorithm has none)
+    pub consensus: Vec<f32>,
+    /// per-client personalized models (global algorithms store one)
+    pub models: Vec<Vec<f32>>,
+}
+
+impl Checkpoint {
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir).ok();
+        }
+        let bytes = self.encode()?;
+        // atomic-ish: write to temp then rename
+        let tmp = path.with_extension("tmp");
+        std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?
+            .write_all(&bytes)?;
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
+        let mut bytes = Vec::new();
+        std::fs::File::open(path.as_ref())
+            .with_context(|| format!("opening {}", path.as_ref().display()))?
+            .read_to_end(&mut bytes)?;
+        Self::decode(&bytes)
+    }
+
+    pub fn encode(&self) -> Result<Vec<u8>> {
+        let n = self.models.first().map(|m| m.len()).unwrap_or(0);
+        if self.models.iter().any(|m| m.len() != n) {
+            bail!("all client models must have equal length");
+        }
+        let mut out = Vec::with_capacity(
+            36 + 4 * self.consensus.len() + self.models.len() * 4 * n,
+        );
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&self.round.to_le_bytes());
+        out.extend_from_slice(&self.seed.to_le_bytes());
+        out.extend_from_slice(&(self.consensus.len() as u32).to_le_bytes());
+        for x in &self.consensus {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+        out.extend_from_slice(&(self.models.len() as u32).to_le_bytes());
+        out.extend_from_slice(&(n as u32).to_le_bytes());
+        for m in &self.models {
+            for x in m {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        let crc = fnv1a(&out);
+        out.extend_from_slice(&crc.to_le_bytes());
+        Ok(out)
+    }
+
+    pub fn decode(bytes: &[u8]) -> Result<Checkpoint> {
+        if bytes.len() < 36 {
+            bail!("checkpoint too short ({} bytes)", bytes.len());
+        }
+        let (body, crc_bytes) = bytes.split_at(bytes.len() - 4);
+        let want = u32::from_le_bytes(crc_bytes.try_into().unwrap());
+        if fnv1a(body) != want {
+            bail!("checkpoint CRC mismatch — file corrupt or truncated");
+        }
+        let mut cur = Cursor { b: body, pos: 0 };
+        if cur.take(4)? != MAGIC {
+            bail!("bad checkpoint magic");
+        }
+        let version = cur.u32()?;
+        if version != VERSION {
+            bail!("unsupported checkpoint version {version}");
+        }
+        let round = cur.u64()?;
+        let seed = cur.u64()?;
+        let m = cur.u32()? as usize;
+        let consensus = cur.f32s(m)?;
+        let k = cur.u32()? as usize;
+        let n = cur.u32()? as usize;
+        let mut models = Vec::with_capacity(k);
+        for _ in 0..k {
+            models.push(cur.f32s(n)?);
+        }
+        if cur.pos != body.len() {
+            bail!("trailing bytes in checkpoint");
+        }
+        Ok(Checkpoint { round, seed, consensus, models })
+    }
+}
+
+struct Cursor<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.b.len() {
+            bail!("checkpoint truncated at offset {}", self.pos);
+        }
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
+        let raw = self.take(4 * n)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+}
+
+fn fnv1a(bytes: &[u8]) -> u32 {
+    let mut h = 0x811c_9dc5u32;
+    for &b in bytes {
+        h ^= b as u32;
+        h = h.wrapping_mul(0x0100_0193);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    fn sample() -> Checkpoint {
+        Checkpoint {
+            round: 42,
+            seed: 17,
+            consensus: vec![1.0, -1.0, 1.0],
+            models: vec![vec![0.1, 0.2], vec![-0.3, 0.4]],
+        }
+    }
+
+    #[test]
+    fn encode_decode_round_trip() {
+        let c = sample();
+        assert_eq!(Checkpoint::decode(&c.encode().unwrap()).unwrap(), c);
+    }
+
+    #[test]
+    fn file_round_trip() {
+        let dir = std::env::temp_dir().join("pfed1bs_ckpt_test");
+        let path = dir.join("state.ckpt");
+        let c = sample();
+        c.save(&path).unwrap();
+        assert_eq!(Checkpoint::load(&path).unwrap(), c);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let mut bytes = sample().encode().unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        assert!(Checkpoint::decode(&bytes).is_err());
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let bytes = sample().encode().unwrap();
+        assert!(Checkpoint::decode(&bytes[..bytes.len() - 5]).is_err());
+        assert!(Checkpoint::decode(&[]).is_err());
+    }
+
+    #[test]
+    fn bad_magic_and_version() {
+        let mut bytes = sample().encode().unwrap();
+        bytes[0] = b'X';
+        // fix CRC so the magic check (not the CRC) fires
+        let n = bytes.len();
+        let crc = super::fnv1a(&bytes[..n - 4]);
+        bytes[n - 4..].copy_from_slice(&crc.to_le_bytes());
+        assert!(Checkpoint::decode(&bytes).unwrap_err().to_string().contains("magic"));
+    }
+
+    #[test]
+    fn uneven_models_rejected() {
+        let c = Checkpoint {
+            round: 0,
+            seed: 0,
+            consensus: vec![],
+            models: vec![vec![1.0], vec![1.0, 2.0]],
+        };
+        assert!(c.encode().is_err());
+    }
+
+    #[test]
+    fn empty_state_round_trips() {
+        let c = Checkpoint { round: 0, seed: 0, consensus: vec![], models: vec![] };
+        assert_eq!(Checkpoint::decode(&c.encode().unwrap()).unwrap(), c);
+    }
+
+    #[test]
+    fn prop_arbitrary_states_round_trip() {
+        check("checkpoint_round_trip", 30, |rng| {
+            let m = rng.below(100);
+            let k = rng.below(5);
+            let n = rng.below(200);
+            let c = Checkpoint {
+                round: rng.next_u64(),
+                seed: rng.next_u64(),
+                consensus: (0..m)
+                    .map(|_| if rng.f32() < 0.5 { 1.0 } else { -1.0 })
+                    .collect(),
+                models: (0..k)
+                    .map(|_| (0..n).map(|_| rng.normal()).collect())
+                    .collect(),
+            };
+            let back = Checkpoint::decode(&c.encode().map_err(|e| e.to_string())?)
+                .map_err(|e| e.to_string())?;
+            if back != c {
+                return Err("round trip mismatch".into());
+            }
+            Ok(())
+        });
+    }
+}

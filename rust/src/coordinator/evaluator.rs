@@ -1,0 +1,82 @@
+//! Personalized evaluation: every client's model on its own held-out
+//! test distribution, aggregated across clients — the paper's Top-1
+//! metric ("aggregated across all clients' personalized models").
+//!
+//! Padding rows in the final partial batch carry label −1 and are masked
+//! *inside* the eval HLO artifact (see `model.eval_batch`), so the
+//! accumulated (correct, loss_sum) statistics here are exact.
+
+use anyhow::Result;
+
+use crate::algorithms::Algorithm;
+use crate::data::{EvalBatches, FederatedData};
+use crate::runtime::ModelRuntime;
+
+/// Accuracy + mean loss over all clients.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EvalResult {
+    pub accuracy: f64,
+    pub mean_loss: f64,
+    pub samples: usize,
+}
+
+/// Evaluate `alg`'s per-client models over every client's test shard.
+pub fn evaluate(
+    model: &ModelRuntime,
+    data: &FederatedData,
+    alg: &dyn Algorithm,
+) -> Result<EvalResult> {
+    let mut correct = 0.0f64;
+    let mut loss_sum = 0.0f64;
+    let mut total = 0usize;
+    for (k, client) in data.clients.iter().enumerate() {
+        let w = alg.model_for(k);
+        let mut batches = EvalBatches::new(client, model.geom.eval_batch);
+        while let Some((x, y, valid)) = batches.next_batch() {
+            let (c, l) = model.eval_batch(w, &x, &y)?;
+            correct += c as f64;
+            loss_sum += l as f64;
+            total += valid;
+        }
+    }
+    Ok(EvalResult {
+        accuracy: correct / total.max(1) as f64,
+        mean_loss: loss_sum / total.max(1) as f64,
+        samples: total,
+    })
+}
+
+/// Per-client accuracies (heterogeneity diagnostics + fairness spread).
+pub fn evaluate_per_client(
+    model: &ModelRuntime,
+    data: &FederatedData,
+    alg: &dyn Algorithm,
+) -> Result<Vec<EvalResult>> {
+    let mut out = Vec::with_capacity(data.num_clients());
+    for (k, client) in data.clients.iter().enumerate() {
+        let w = alg.model_for(k);
+        let mut correct = 0.0f64;
+        let mut loss_sum = 0.0f64;
+        let mut total = 0usize;
+        let mut batches = EvalBatches::new(client, model.geom.eval_batch);
+        while let Some((x, y, valid)) = batches.next_batch() {
+            let (c, l) = model.eval_batch(w, &x, &y)?;
+            correct += c as f64;
+            loss_sum += l as f64;
+            total += valid;
+        }
+        out.push(EvalResult {
+            accuracy: correct / total.max(1) as f64,
+            mean_loss: loss_sum / total.max(1) as f64,
+            samples: total,
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    // evaluate() needs a live PJRT runtime; covered end-to-end by
+    // rust/tests/integration_training.rs. The padding mask itself is
+    // unit-tested in python/tests/test_model.py::test_eval_batch_masks_padding.
+}

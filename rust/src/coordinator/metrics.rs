@@ -1,0 +1,167 @@
+//! Training history: per-round records and CSV emission for the figure
+//! regenerators (Figs. 3/4, Appendix Figs. 1–3 plot these files).
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::comm::RoundBytes;
+
+/// One communication round's record.
+#[derive(Clone, Debug)]
+pub struct RoundRecord {
+    pub round: usize,
+    /// mean task loss over local steps this round (Fig. 4)
+    pub train_loss: f64,
+    /// personalized test accuracy, when evaluated this round (Fig. 3)
+    pub test_acc: Option<f64>,
+    pub test_loss: Option<f64>,
+    pub bytes: RoundBytes,
+    pub duration_ms: f64,
+    /// mean ‖∇F̃_k‖² diagnostic (Theorem 1), when requested
+    pub grad_norm: Option<f64>,
+}
+
+/// Full run history + summary.
+#[derive(Clone, Debug, Default)]
+pub struct History {
+    pub records: Vec<RoundRecord>,
+}
+
+impl History {
+    pub fn push(&mut self, r: RoundRecord) {
+        self.records.push(r);
+    }
+
+    /// Final accuracy: the last evaluated round.
+    pub fn final_accuracy(&self) -> Option<f64> {
+        self.records.iter().rev().find_map(|r| r.test_acc)
+    }
+
+    pub fn final_test_loss(&self) -> Option<f64> {
+        self.records.iter().rev().find_map(|r| r.test_loss)
+    }
+
+    /// Best accuracy across evaluations.
+    pub fn best_accuracy(&self) -> Option<f64> {
+        self.records
+            .iter()
+            .filter_map(|r| r.test_acc)
+            .fold(None, |acc, x| Some(acc.map_or(x, |a: f64| a.max(x))))
+    }
+
+    /// Mean per-round communication (MB) — the Table 2 cost metric.
+    pub fn mean_round_mb(&self) -> f64 {
+        if self.records.is_empty() {
+            return 0.0;
+        }
+        self.records.iter().map(|r| r.bytes.total_mb()).sum::<f64>()
+            / self.records.len() as f64
+    }
+
+    pub fn total_mb(&self) -> f64 {
+        self.records.iter().map(|r| r.bytes.total_mb()).sum()
+    }
+
+    /// Rounds to first reach `target` accuracy (communication-efficiency
+    /// crossover metric).
+    pub fn rounds_to_accuracy(&self, target: f64) -> Option<usize> {
+        self.records
+            .iter()
+            .find(|r| r.test_acc.map(|a| a >= target).unwrap_or(false))
+            .map(|r| r.round)
+    }
+
+    /// Write `round,train_loss,test_acc,test_loss,uplink_bytes,
+    /// downlink_bytes,duration_ms,grad_norm` CSV.
+    pub fn write_csv(&self, path: impl AsRef<Path>, header_comment: &str) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir).ok();
+        }
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        if !header_comment.is_empty() {
+            writeln!(f, "# {header_comment}")?;
+        }
+        writeln!(
+            f,
+            "round,train_loss,test_acc,test_loss,uplink_bytes,downlink_bytes,duration_ms,grad_norm"
+        )?;
+        for r in &self.records {
+            writeln!(
+                f,
+                "{},{:.6},{},{},{},{},{:.3},{}",
+                r.round,
+                r.train_loss,
+                fmt_opt(r.test_acc),
+                fmt_opt(r.test_loss),
+                r.bytes.uplink,
+                r.bytes.downlink,
+                r.duration_ms,
+                fmt_opt(r.grad_norm),
+            )?;
+        }
+        Ok(())
+    }
+}
+
+fn fmt_opt(v: Option<f64>) -> String {
+    v.map(|x| format!("{x:.6}")).unwrap_or_default()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(round: usize, acc: Option<f64>) -> RoundRecord {
+        RoundRecord {
+            round,
+            train_loss: 1.0 / (round + 1) as f64,
+            test_acc: acc,
+            test_loss: acc.map(|a| 1.0 - a),
+            bytes: RoundBytes { uplink: 100, downlink: 50, uplink_msgs: 2, downlink_msgs: 1 },
+            duration_ms: 5.0,
+            grad_norm: None,
+        }
+    }
+
+    #[test]
+    fn summaries() {
+        let mut h = History::default();
+        h.push(rec(0, None));
+        h.push(rec(1, Some(0.5)));
+        h.push(rec(2, Some(0.8)));
+        h.push(rec(3, None));
+        assert_eq!(h.final_accuracy(), Some(0.8));
+        assert_eq!(h.best_accuracy(), Some(0.8));
+        assert_eq!(h.rounds_to_accuracy(0.6), Some(2));
+        assert_eq!(h.rounds_to_accuracy(0.9), None);
+        assert!(h.mean_round_mb() > 0.0);
+        assert!((h.total_mb() - 4.0 * 150.0 / (1024.0 * 1024.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn csv_round_trip_shape() {
+        let mut h = History::default();
+        h.push(rec(0, Some(0.25)));
+        let dir = std::env::temp_dir().join("pfed1bs_test_metrics");
+        let path = dir.join("hist.csv");
+        h.write_csv(&path, "unit test").unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert!(lines[0].starts_with("# unit test"));
+        assert!(lines[1].starts_with("round,train_loss"));
+        assert_eq!(lines.len(), 3);
+        assert!(lines[2].starts_with("0,"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn empty_history() {
+        let h = History::default();
+        assert_eq!(h.final_accuracy(), None);
+        assert_eq!(h.mean_round_mb(), 0.0);
+    }
+}

@@ -1,0 +1,227 @@
+//! The federated round loop — Algorithm 1's outer `for t = 0..T`.
+//!
+//! Owns everything mutable (network, RNG, algorithm state), samples the
+//! participant set S^t uniformly without replacement (the setting of
+//! Lemma 6 / Theorem 1), normalizes the aggregation weights p_k over the
+//! subset, dispatches the round to the algorithm, and records metrics.
+
+pub mod checkpoint;
+pub mod evaluator;
+pub mod metrics;
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::algorithms::{Algorithm, Ctx};
+use crate::comm::SimNetwork;
+use crate::config::{ProjectionKind, RunConfig};
+use crate::data::{generate, FederatedData};
+use crate::runtime::ModelRuntime;
+use crate::sketch::{DenseGaussianOperator, Projection, SrhtOperator};
+use crate::util::rng::Rng;
+
+pub use checkpoint::Checkpoint;
+pub use evaluator::{evaluate, evaluate_per_client, EvalResult};
+pub use metrics::{History, RoundRecord};
+
+/// Result of a full training run.
+pub struct RunResult {
+    pub history: History,
+    pub final_accuracy: f64,
+    pub final_loss: f64,
+    pub mean_round_mb: f64,
+    pub algorithm: String,
+}
+
+/// Drives one (algorithm × dataset × seed) training run.
+pub struct Coordinator<'a> {
+    pub cfg: RunConfig,
+    pub data: FederatedData,
+    pub model: &'a ModelRuntime,
+    pub net: SimNetwork,
+    pub projection: Projection,
+    /// when set, save a checkpoint to `.0` every `.1` rounds
+    pub checkpoint: Option<(String, usize)>,
+    rng: Rng,
+}
+
+impl<'a> Coordinator<'a> {
+    /// Build coordinator state for `cfg` against an already-loaded model
+    /// runtime (model runtimes are expensive to compile, so experiment
+    /// sweeps share them across runs).
+    pub fn new(cfg: RunConfig, model: &'a ModelRuntime) -> Coordinator<'a> {
+        let spec = cfg.dataset.spec();
+        let data = generate(&spec, cfg.clients, &cfg.make_partition(), cfg.seed);
+        let projection = match cfg.projection {
+            ProjectionKind::Fht => Projection::Srht(SrhtOperator::from_seed(
+                cfg.seed,
+                model.geom.n,
+                model.geom.m,
+            )),
+            ProjectionKind::DenseGaussian => Projection::Dense(DenseGaussianOperator::from_seed(
+                cfg.seed,
+                model.geom.n,
+                model.geom.m,
+            )),
+        };
+        let net = SimNetwork::new(cfg.seed);
+        let rng = Rng::new(cfg.seed ^ 0x434F_4F52); // "COOR"
+        Coordinator { cfg, data, model, net, projection, checkpoint: None, rng }
+    }
+
+    /// The shared SRHT realization for this run's seed (what the HLO
+    /// artifacts must be fed). Panics if configured for dense projection.
+    pub fn srht_operator(cfg: &RunConfig, n: usize, m: usize) -> SrhtOperator {
+        SrhtOperator::from_seed(cfg.seed, n, m)
+    }
+
+    /// Sample S^t uniformly without replacement and normalize p_k over it.
+    fn sample_round(&mut self) -> (Vec<usize>, Vec<f32>) {
+        let selected = self
+            .rng
+            .sample_without_replacement(self.cfg.clients, self.cfg.participating);
+        let raw: Vec<f32> = selected.iter().map(|&k| self.data.weights[k]).collect();
+        let total: f32 = raw.iter().sum();
+        let weights = raw.iter().map(|&p| p / total).collect();
+        (selected, weights)
+    }
+
+    /// Run the full T-round training loop.
+    pub fn run(&mut self, alg: &mut dyn Algorithm) -> Result<RunResult> {
+        self.run_with_diagnostics(alg, false)
+    }
+
+    /// As `run`, optionally recording the Theorem-1 gradient-norm
+    /// diagnostic each eval round (extra forward/backward cost).
+    pub fn run_with_diagnostics(
+        &mut self,
+        alg: &mut dyn Algorithm,
+        grad_diag: bool,
+    ) -> Result<RunResult> {
+        {
+            let mut ctx = Ctx {
+                model: self.model,
+                data: &self.data,
+                cfg: &self.cfg,
+                net: &mut self.net,
+                rng: &mut self.rng,
+                projection: &self.projection,
+            };
+            alg.init(&mut ctx)?;
+        }
+
+        let mut history = History::default();
+        for t in 0..self.cfg.rounds {
+            let started = Instant::now();
+            let (selected, weights) = self.sample_round();
+            let outcome = {
+                let mut ctx = Ctx {
+                    model: self.model,
+                    data: &self.data,
+                    cfg: &self.cfg,
+                    net: &mut self.net,
+                    rng: &mut self.rng,
+                    projection: &self.projection,
+                };
+                alg.round(t, &selected, &weights, &mut ctx)?
+            };
+            let bytes = self.net.end_round();
+
+            let is_eval_round =
+                t % self.cfg.eval_every == 0 || t + 1 == self.cfg.rounds;
+            let (test_acc, test_loss) = if is_eval_round {
+                let ev = evaluate(self.model, &self.data, alg)?;
+                (Some(ev.accuracy), Some(ev.mean_loss))
+            } else {
+                (None, None)
+            };
+
+            let grad_norm = if grad_diag && is_eval_round {
+                Some(self.gradient_diagnostic(alg, &selected)?)
+            } else {
+                None
+            };
+
+            history.push(RoundRecord {
+                round: t,
+                train_loss: outcome.train_loss,
+                test_acc,
+                test_loss,
+                bytes,
+                duration_ms: started.elapsed().as_secs_f64() * 1e3,
+                grad_norm,
+            });
+            if let Some((path, every)) = &self.checkpoint {
+                if (t + 1) % every == 0 || t + 1 == self.cfg.rounds {
+                    let (models, consensus) = alg.snapshot();
+                    if !models.is_empty() {
+                        Checkpoint {
+                            round: t as u64 + 1,
+                            seed: self.cfg.seed,
+                            consensus,
+                            models,
+                        }
+                        .save(path)?;
+                        crate::debug!("checkpoint saved to {path} at round {t}");
+                    }
+                }
+            }
+            crate::info!(
+                "[{}] round {t}/{}: train_loss={:.4}{} bytes={}",
+                alg.name(),
+                self.cfg.rounds,
+                outcome.train_loss,
+                test_acc
+                    .map(|a| format!(" acc={:.4}", a))
+                    .unwrap_or_default(),
+                bytes.total(),
+            );
+        }
+
+        Ok(RunResult {
+            final_accuracy: history.final_accuracy().unwrap_or(0.0),
+            final_loss: history.final_test_loss().unwrap_or(f64::NAN),
+            mean_round_mb: history.mean_round_mb(),
+            algorithm: alg.name().to_string(),
+            history,
+        })
+    }
+
+    /// Σ_k p_k ‖∇F̃_k(w_k; v)‖² over the sampled clients on one fresh
+    /// batch each — the Theorem-1 stationarity measure.
+    fn gradient_diagnostic(
+        &mut self,
+        alg: &dyn Algorithm,
+        selected: &[usize],
+    ) -> Result<f64> {
+        let Some(v) = alg.consensus() else {
+            return Ok(f64::NAN); // only meaningful for pFed1BS
+        };
+        let v = v.to_vec();
+        let mut acc = 0.0f64;
+        let mut wsum = 0.0f64;
+        for &k in selected {
+            let client = &self.data.clients[k];
+            let mut batches = crate::data::BatchIter::new(
+                client,
+                self.model.geom.train_batch,
+                self.rng.fork(k as u64 ^ 0xD1A6),
+            );
+            let (x, y) = batches.next_batch();
+            let gn = self.model.grad_norm(
+                alg.model_for(k),
+                x,
+                y,
+                &v,
+                self.cfg.lambda,
+                self.cfg.mu,
+                self.cfg.gamma,
+            )?;
+            let p = self.data.weights[k] as f64;
+            acc += p * gn as f64;
+            wsum += p;
+        }
+        Ok(acc / wsum.max(1e-12))
+    }
+}

@@ -1,0 +1,191 @@
+//! Mini-batch iteration over a client's local shard.
+//!
+//! Matches the paper's local SGD loop: every epoch reshuffles the shard
+//! and deals fixed-size batches (wrapping into the next epoch so the HLO
+//! artifact's static batch shape is always filled).
+
+use crate::data::synth::ClientData;
+use crate::util::rng::Rng;
+
+/// Infinite shuffled batch stream over one client's training data.
+pub struct BatchIter<'a> {
+    data: &'a ClientData,
+    batch: usize,
+    order: Vec<usize>,
+    cursor: usize,
+    rng: Rng,
+    /// scratch reused across `next_batch` calls (no per-step allocation)
+    x_buf: Vec<f32>,
+    y_buf: Vec<i32>,
+}
+
+impl<'a> BatchIter<'a> {
+    pub fn new(data: &'a ClientData, batch: usize, rng: Rng) -> Self {
+        assert!(batch > 0);
+        assert!(data.train_len() > 0, "client has no training data");
+        let mut it = BatchIter {
+            data,
+            batch,
+            order: (0..data.train_len()).collect(),
+            cursor: 0,
+            rng,
+            x_buf: vec![0.0; batch * data.input_dim],
+            y_buf: vec![0; batch],
+        };
+        it.reshuffle();
+        it
+    }
+
+    fn reshuffle(&mut self) {
+        self.rng.shuffle(&mut self.order);
+        self.cursor = 0;
+    }
+
+    /// Next batch as (x: [batch * d], y: [batch]) borrowed from internal
+    /// scratch — valid until the next call.
+    pub fn next_batch(&mut self) -> (&[f32], &[i32]) {
+        let d = self.data.input_dim;
+        for slot in 0..self.batch {
+            if self.cursor == self.order.len() {
+                self.reshuffle();
+            }
+            let idx = self.order[self.cursor];
+            self.cursor += 1;
+            self.x_buf[slot * d..(slot + 1) * d]
+                .copy_from_slice(&self.data.train_x[idx * d..(idx + 1) * d]);
+            self.y_buf[slot] = self.data.train_y[idx];
+        }
+        (&self.x_buf, &self.y_buf)
+    }
+}
+
+/// Fixed-size eval batches over test data, zero-padding the final batch
+/// (padding rows carry label -1 which can never be predicted, and the
+/// evaluator subtracts the padding from the denominator).
+pub struct EvalBatches<'a> {
+    data: &'a ClientData,
+    batch: usize,
+    cursor: usize,
+}
+
+impl<'a> EvalBatches<'a> {
+    pub fn new(data: &'a ClientData, batch: usize) -> Self {
+        EvalBatches { data, batch, cursor: 0 }
+    }
+
+    /// (x, y, valid_rows) or None when exhausted.
+    pub fn next_batch(&mut self) -> Option<(Vec<f32>, Vec<i32>, usize)> {
+        let d = self.data.input_dim;
+        let total = self.data.test_len();
+        if self.cursor >= total {
+            return None;
+        }
+        let valid = (total - self.cursor).min(self.batch);
+        let mut x = vec![0.0f32; self.batch * d];
+        let mut y = vec![-1i32; self.batch];
+        for slot in 0..valid {
+            let idx = self.cursor + slot;
+            x[slot * d..(slot + 1) * d]
+                .copy_from_slice(&self.data.test_x[idx * d..(idx + 1) * d]);
+            y[slot] = self.data.test_y[idx];
+        }
+        self.cursor += valid;
+        Some((x, y, valid))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::partition::Partition;
+    use crate::data::synth::{generate, DatasetName, DatasetSpec};
+
+    fn client() -> ClientData {
+        let spec = DatasetSpec {
+            name: DatasetName::Mnist,
+            input_dim: 4,
+            classes: 3,
+            noise: 0.1,
+            proto_scale: 1.0,
+            shift_scale: 0.1,
+            train_per_client: 10,
+            test_per_client: 7,
+        };
+        generate(&spec, 1, &Partition::Iid, 0).clients.remove(0)
+    }
+
+    #[test]
+    fn batches_have_fixed_shape() {
+        let c = client();
+        let mut it = BatchIter::new(&c, 4, Rng::new(0));
+        for _ in 0..10 {
+            let (x, y) = it.next_batch();
+            assert_eq!(x.len(), 16);
+            assert_eq!(y.len(), 4);
+            assert!(y.iter().all(|&l| (0..3).contains(&l)));
+        }
+    }
+
+    #[test]
+    fn epoch_covers_every_sample() {
+        let c = client(); // 10 samples
+        let mut it = BatchIter::new(&c, 5, Rng::new(1));
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..2 {
+            let (x, _) = it.next_batch();
+            for row in 0..5 {
+                // identify sample by its bytes
+                let key: Vec<u32> = x[row * 4..(row + 1) * 4]
+                    .iter()
+                    .map(|f| f.to_bits())
+                    .collect();
+                seen.insert(key);
+            }
+        }
+        assert_eq!(seen.len(), 10, "one epoch must cover all samples");
+    }
+
+    #[test]
+    fn batch_labels_match_rows() {
+        let c = client();
+        let mut it = BatchIter::new(&c, 3, Rng::new(2));
+        let (x, y) = it.next_batch();
+        // find each row in the training set and check its label
+        for row in 0..3 {
+            let bytes = &x[row * 4..(row + 1) * 4];
+            let found = (0..c.train_len()).find(|&i| {
+                c.train_x[i * 4..(i + 1) * 4]
+                    .iter()
+                    .zip(bytes)
+                    .all(|(a, b)| a == b)
+            });
+            let idx = found.expect("batch row not found in training data");
+            assert_eq!(c.train_y[idx], y[row]);
+        }
+    }
+
+    #[test]
+    fn eval_batches_cover_exactly_once_with_padding() {
+        let c = client(); // 7 test samples
+        let mut it = EvalBatches::new(&c, 4);
+        let b1 = it.next_batch().unwrap();
+        assert_eq!(b1.2, 4);
+        let b2 = it.next_batch().unwrap();
+        assert_eq!(b2.2, 3);
+        assert_eq!(b2.1[3], -1, "padding label must be -1");
+        assert!(it.next_batch().is_none());
+    }
+
+    #[test]
+    fn deterministic_batches_for_same_rng() {
+        let c = client();
+        let mut a = BatchIter::new(&c, 4, Rng::new(9));
+        let mut b = BatchIter::new(&c, 4, Rng::new(9));
+        for _ in 0..5 {
+            let (xa, ya) = { let (x, y) = a.next_batch(); (x.to_vec(), y.to_vec()) };
+            let (xb, yb) = b.next_batch();
+            assert_eq!(xa, xb);
+            assert_eq!(ya, yb);
+        }
+    }
+}

@@ -1,0 +1,11 @@
+//! Non-i.i.d. federated data substrate: synthetic dataset family
+//! (paper-dataset stand-ins, DESIGN.md §2), label-skew/Dirichlet
+//! partitioners, and batch iteration.
+
+pub mod loader;
+pub mod partition;
+pub mod synth;
+
+pub use loader::{BatchIter, EvalBatches};
+pub use partition::Partition;
+pub use synth::{generate, ClientData, DatasetName, DatasetSpec, FederatedData};

@@ -1,0 +1,195 @@
+//! Non-i.i.d. partitioners: which classes each client observes.
+//!
+//! The paper's main experiments use hard label-skew ("partitioning data
+//! among 20 clients based on labels" — 2 classes per client for the
+//! 10-class datasets). The Dirichlet partitioner parameterizes a
+//! *continuum* of heterogeneity for the `heterogeneity_sweep` example
+//! (α → 0 approaches one-class clients, α → ∞ approaches i.i.d.).
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub enum Partition {
+    /// Every client receives `per_client` distinct classes; shards are
+    /// dealt so all classes are covered as evenly as possible.
+    LabelShards { per_client: usize },
+    /// Client k observes class c with probability from a symmetric
+    /// Dirichlet(alpha) draw; classes below `min_share` are dropped, and
+    /// every client keeps at least one class.
+    Dirichlet { alpha: f64, min_share: f64 },
+    /// Every client sees every class (i.i.d. control).
+    Iid,
+}
+
+impl Partition {
+    /// Returns, for each client, the sorted list of classes it observes.
+    /// Guarantees: non-empty per client; classes < `classes`; under
+    /// LabelShards the global shard multiset is balanced.
+    pub fn assign(&self, num_clients: usize, classes: usize, rng: &mut Rng) -> Vec<Vec<usize>> {
+        match self {
+            Partition::Iid => (0..num_clients).map(|_| (0..classes).collect()).collect(),
+            Partition::LabelShards { per_client } => {
+                label_shards(num_clients, classes, *per_client, rng)
+            }
+            Partition::Dirichlet { alpha, min_share } => {
+                dirichlet(num_clients, classes, *alpha, *min_share, rng)
+            }
+        }
+    }
+
+    pub fn describe(&self) -> String {
+        match self {
+            Partition::LabelShards { per_client } => format!("label-shards({per_client}/client)"),
+            Partition::Dirichlet { alpha, .. } => format!("dirichlet(alpha={alpha})"),
+            Partition::Iid => "iid".to_string(),
+        }
+    }
+}
+
+fn label_shards(
+    num_clients: usize,
+    classes: usize,
+    per_client: usize,
+    rng: &mut Rng,
+) -> Vec<Vec<usize>> {
+    let per_client = per_client.min(classes).max(1);
+    let total_shards = num_clients * per_client;
+    // balanced shard pool: each class appears floor or ceil(total/classes)
+    let mut pool: Vec<usize> = (0..total_shards).map(|i| i % classes).collect();
+    rng.shuffle(&mut pool);
+
+    let mut out: Vec<Vec<usize>> = vec![Vec::new(); num_clients];
+    // deal avoiding duplicate classes within a client where possible
+    for k in 0..num_clients {
+        for _ in 0..per_client {
+            // find first pool entry not already held by this client
+            let pos = pool
+                .iter()
+                .position(|c| !out[k].contains(c))
+                .unwrap_or(0);
+            out[k].push(pool.swap_remove(pos));
+        }
+        out[k].sort_unstable();
+        out[k].dedup();
+    }
+    out
+}
+
+fn dirichlet(
+    num_clients: usize,
+    classes: usize,
+    alpha: f64,
+    min_share: f64,
+    rng: &mut Rng,
+) -> Vec<Vec<usize>> {
+    (0..num_clients)
+        .map(|_| {
+            let probs = rng.dirichlet(alpha, classes);
+            let mut kept: Vec<usize> = probs
+                .iter()
+                .enumerate()
+                .filter(|(_, &p)| p >= min_share)
+                .map(|(c, _)| c)
+                .collect();
+            if kept.is_empty() {
+                // keep the argmax class
+                let argmax = probs
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(c, _)| c)
+                    .unwrap_or(0);
+                kept.push(argmax);
+            }
+            kept
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn label_shards_paper_setting() {
+        // 20 clients x 2 classes over 10 classes: every class appears 4x
+        let mut rng = Rng::new(1);
+        let assign = Partition::LabelShards { per_client: 2 }.assign(20, 10, &mut rng);
+        assert_eq!(assign.len(), 20);
+        let mut counts = vec![0usize; 10];
+        for a in &assign {
+            assert!(!a.is_empty() && a.len() <= 2);
+            for &c in a {
+                counts[c] += 1;
+            }
+        }
+        // balanced pool ⇒ every class appears; dedup within client can
+        // shave at most a few
+        assert!(counts.iter().all(|&c| c >= 2), "{counts:?}");
+    }
+
+    #[test]
+    fn label_shards_properties() {
+        check("label_shards_valid", 40, |rng| {
+            let k = rng.below(30) + 1;
+            let classes = rng.below(20) + 1;
+            let pc = rng.below(classes) + 1;
+            let assign =
+                Partition::LabelShards { per_client: pc }.assign(k, classes, rng);
+            if assign.len() != k {
+                return Err("wrong client count".into());
+            }
+            for a in &assign {
+                if a.is_empty() {
+                    return Err("empty client".into());
+                }
+                let mut s = a.clone();
+                s.dedup();
+                if s.len() != a.len() {
+                    return Err("duplicate class within client".into());
+                }
+                if a.iter().any(|&c| c >= classes) {
+                    return Err("class out of range".into());
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn dirichlet_small_alpha_is_skewed() {
+        let mut rng = Rng::new(2);
+        let assign = Partition::Dirichlet { alpha: 0.1, min_share: 0.05 }
+            .assign(50, 10, &mut rng);
+        let avg: f64 = assign.iter().map(|a| a.len() as f64).sum::<f64>() / 50.0;
+        assert!(avg < 5.0, "alpha=0.1 should be skewed, avg classes {avg}");
+        assert!(assign.iter().all(|a| !a.is_empty()));
+    }
+
+    #[test]
+    fn dirichlet_large_alpha_is_broad() {
+        let mut rng = Rng::new(3);
+        let assign = Partition::Dirichlet { alpha: 100.0, min_share: 0.02 }
+            .assign(50, 10, &mut rng);
+        let avg: f64 = assign.iter().map(|a| a.len() as f64).sum::<f64>() / 50.0;
+        assert!(avg > 8.0, "alpha=100 should be near-iid, avg classes {avg}");
+    }
+
+    #[test]
+    fn iid_sees_everything() {
+        let mut rng = Rng::new(4);
+        let assign = Partition::Iid.assign(5, 7, &mut rng);
+        for a in assign {
+            assert_eq!(a, (0..7).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn describe_strings() {
+        assert!(Partition::LabelShards { per_client: 2 }.describe().contains("2"));
+        assert!(Partition::Dirichlet { alpha: 0.5, min_share: 0.0 }
+            .describe()
+            .contains("0.5"));
+    }
+}

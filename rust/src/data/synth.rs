@@ -1,0 +1,401 @@
+//! Synthetic federated dataset family — the stand-in for MNIST / FMNIST /
+//! CIFAR-10 / CIFAR-100 / SVHN (no network access in this environment;
+//! DESIGN.md §2 documents the substitution).
+//!
+//! Generative model (prototype clusters):
+//!   * every class c has a global prototype  p_c ~ proto_scale · N(0, I/√d)
+//!   * every client k has a domain shift     s_k ~ shift_scale · N(0, I/√d)
+//!     (the paper's "diverse user behaviors and environments")
+//!   * a sample of class c on client k is    x = p_c + s_k + noise · N(0, I)
+//!
+//! The paper's phenomenon needs exactly two ingredients, both present:
+//! label-skew across clients (partition.rs) and per-client distribution
+//! shift — under these, a single global model (especially a 1-bit
+//! compressed one) underperforms personalized models on each client's own
+//! test distribution. The five presets form the same difficulty ladder as
+//! the real datasets (higher noise / more classes / higher dim ⇒ harder).
+
+use crate::data::partition::Partition;
+use crate::util::rng::Rng;
+
+/// Which paper dataset a synthetic workload emulates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DatasetName {
+    Mnist,
+    Fmnist,
+    Cifar10,
+    Cifar100,
+    Svhn,
+}
+
+impl DatasetName {
+    pub fn parse(s: &str) -> Option<DatasetName> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "mnist" => DatasetName::Mnist,
+            "fmnist" | "fashion-mnist" | "fashionmnist" => DatasetName::Fmnist,
+            "cifar10" | "cifar-10" => DatasetName::Cifar10,
+            "cifar100" | "cifar-100" => DatasetName::Cifar100,
+            "svhn" => DatasetName::Svhn,
+            _ => return None,
+        })
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            DatasetName::Mnist => "mnist",
+            DatasetName::Fmnist => "fmnist",
+            DatasetName::Cifar10 => "cifar10",
+            DatasetName::Cifar100 => "cifar100",
+            DatasetName::Svhn => "svhn",
+        }
+    }
+
+    pub fn all() -> [DatasetName; 5] {
+        [
+            DatasetName::Mnist,
+            DatasetName::Fmnist,
+            DatasetName::Cifar10,
+            DatasetName::Cifar100,
+            DatasetName::Svhn,
+        ]
+    }
+
+    /// Which AOT model variant serves this dataset (DESIGN.md §6).
+    pub fn model_variant(&self) -> &'static str {
+        match self {
+            DatasetName::Mnist | DatasetName::Fmnist => "mlp784",
+            DatasetName::Cifar10 | DatasetName::Svhn => "mlp3072",
+            DatasetName::Cifar100 => "mlp3072c100",
+        }
+    }
+
+    pub fn spec(&self) -> DatasetSpec {
+        match self {
+            // difficulty ladder: mnist easiest … cifar100 hardest
+            DatasetName::Mnist => DatasetSpec {
+                name: *self,
+                input_dim: 784,
+                classes: 10,
+                noise: 0.90,
+                proto_scale: 3.2,
+                shift_scale: 0.55,
+                train_per_client: 300,
+                test_per_client: 200,
+            },
+            DatasetName::Fmnist => DatasetSpec {
+                name: *self,
+                input_dim: 784,
+                classes: 10,
+                noise: 1.35,
+                proto_scale: 2.2,
+                shift_scale: 0.65,
+                train_per_client: 300,
+                test_per_client: 200,
+            },
+            DatasetName::Svhn => DatasetSpec {
+                name: *self,
+                input_dim: 3072,
+                classes: 10,
+                noise: 1.00,
+                proto_scale: 2.9,
+                shift_scale: 0.55,
+                train_per_client: 300,
+                test_per_client: 120,
+            },
+            DatasetName::Cifar10 => DatasetSpec {
+                name: *self,
+                input_dim: 3072,
+                classes: 10,
+                noise: 1.50,
+                proto_scale: 2.0,
+                shift_scale: 0.75,
+                train_per_client: 300,
+                test_per_client: 120,
+            },
+            DatasetName::Cifar100 => DatasetSpec {
+                name: *self,
+                input_dim: 3072,
+                classes: 100,
+                noise: 1.20,
+                proto_scale: 2.0,
+                shift_scale: 0.55,
+                train_per_client: 400,
+                test_per_client: 120,
+            },
+        }
+    }
+}
+
+/// Geometry + generative parameters for a synthetic dataset.
+#[derive(Clone, Copy, Debug)]
+pub struct DatasetSpec {
+    pub name: DatasetName,
+    pub input_dim: usize,
+    pub classes: usize,
+    /// per-coordinate sample noise sigma
+    pub noise: f32,
+    /// prototype magnitude (inter-class margin)
+    pub proto_scale: f32,
+    /// per-client domain-shift magnitude (drives personalization gains)
+    pub shift_scale: f32,
+    pub train_per_client: usize,
+    pub test_per_client: usize,
+}
+
+/// One client's private shard: train + held-out test from the SAME local
+/// distribution (the paper's personalized evaluation protocol).
+#[derive(Clone, Debug)]
+pub struct ClientData {
+    /// row-major [samples, input_dim]
+    pub train_x: Vec<f32>,
+    pub train_y: Vec<i32>,
+    pub test_x: Vec<f32>,
+    pub test_y: Vec<i32>,
+    /// classes this client observes (label-skew partition)
+    pub classes: Vec<usize>,
+    pub input_dim: usize,
+}
+
+impl ClientData {
+    pub fn train_len(&self) -> usize {
+        self.train_y.len()
+    }
+
+    pub fn test_len(&self) -> usize {
+        self.test_y.len()
+    }
+}
+
+/// A fully materialized federated dataset.
+#[derive(Clone, Debug)]
+pub struct FederatedData {
+    pub spec: DatasetSpec,
+    pub clients: Vec<ClientData>,
+    /// aggregation weights p_k = N_k / Σ N_i (paper's convention)
+    pub weights: Vec<f32>,
+}
+
+impl FederatedData {
+    pub fn num_clients(&self) -> usize {
+        self.clients.len()
+    }
+}
+
+/// Generate the federated dataset for `num_clients` under `partition`.
+pub fn generate(
+    spec: &DatasetSpec,
+    num_clients: usize,
+    partition: &Partition,
+    seed: u64,
+) -> FederatedData {
+    let mut rng = Rng::new(seed ^ 0x4441_5441_u64); // "DATA"
+    let d = spec.input_dim;
+    let inv_sqrt_d = 1.0 / (d as f32).sqrt();
+
+    // global class prototypes
+    let mut protos: Vec<Vec<f32>> = Vec::with_capacity(spec.classes);
+    for _ in 0..spec.classes {
+        let mut p = vec![0.0f32; d];
+        rng.fill_normal(&mut p, spec.proto_scale * inv_sqrt_d);
+        protos.push(p);
+    }
+
+    let class_assignment = partition.assign(num_clients, spec.classes, &mut rng);
+
+    let mut clients = Vec::with_capacity(num_clients);
+    for k in 0..num_clients {
+        let mut crng = rng.fork(k as u64);
+        // client domain shift
+        let mut shift = vec![0.0f32; d];
+        crng.fill_normal(&mut shift, spec.shift_scale * inv_sqrt_d);
+
+        let classes = &class_assignment[k];
+        assert!(!classes.is_empty(), "client {k} got no classes");
+
+        let gen_split = |crng: &mut Rng, count: usize| -> (Vec<f32>, Vec<i32>) {
+            let mut xs = Vec::with_capacity(count * d);
+            let mut ys = Vec::with_capacity(count);
+            for i in 0..count {
+                // round-robin over the client's classes keeps shards
+                // class-balanced (paper partitions whole label shards)
+                let c = classes[i % classes.len()];
+                let proto = &protos[c];
+                for j in 0..d {
+                    // isotropic noise: its projection on any discriminant
+                    // direction has std = spec.noise, comparable to the
+                    // O(proto_scale) class separation — the ratio sets the
+                    // Bayes error, i.e. the dataset's difficulty rung
+                    xs.push(proto[j] + shift[j] + spec.noise * crng.normal());
+                }
+                ys.push(c as i32);
+            }
+            (xs, ys)
+        };
+
+        let (train_x, train_y) = gen_split(&mut crng, spec.train_per_client);
+        let (test_x, test_y) = gen_split(&mut crng, spec.test_per_client);
+        clients.push(ClientData {
+            train_x,
+            train_y,
+            test_x,
+            test_y,
+            classes: classes.clone(),
+            input_dim: d,
+        });
+    }
+
+    let total: f32 = clients.iter().map(|c| c.train_len() as f32).sum();
+    let weights = clients
+        .iter()
+        .map(|c| c.train_len() as f32 / total)
+        .collect();
+    FederatedData {
+        spec: *spec,
+        clients,
+        weights,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::partition::Partition;
+
+    fn small_spec() -> DatasetSpec {
+        DatasetSpec {
+            name: DatasetName::Mnist,
+            input_dim: 16,
+            classes: 10,
+            noise: 0.5,
+            proto_scale: 2.0,
+            shift_scale: 0.5,
+            train_per_client: 40,
+            test_per_client: 10,
+        }
+    }
+
+    #[test]
+    fn dataset_name_parsing() {
+        assert_eq!(DatasetName::parse("MNIST"), Some(DatasetName::Mnist));
+        assert_eq!(DatasetName::parse("cifar-100"), Some(DatasetName::Cifar100));
+        assert_eq!(DatasetName::parse("bogus"), None);
+        for n in DatasetName::all() {
+            assert_eq!(DatasetName::parse(n.as_str()), Some(n));
+        }
+    }
+
+    #[test]
+    fn variant_mapping_matches_design() {
+        assert_eq!(DatasetName::Mnist.model_variant(), "mlp784");
+        assert_eq!(DatasetName::Fmnist.model_variant(), "mlp784");
+        assert_eq!(DatasetName::Cifar10.model_variant(), "mlp3072");
+        assert_eq!(DatasetName::Svhn.model_variant(), "mlp3072");
+        assert_eq!(DatasetName::Cifar100.model_variant(), "mlp3072c100");
+    }
+
+    #[test]
+    fn shapes_and_weights() {
+        let spec = small_spec();
+        let fd = generate(&spec, 8, &Partition::LabelShards { per_client: 2 }, 1);
+        assert_eq!(fd.num_clients(), 8);
+        for c in &fd.clients {
+            assert_eq!(c.train_x.len(), 40 * 16);
+            assert_eq!(c.train_y.len(), 40);
+            assert_eq!(c.test_x.len(), 10 * 16);
+            assert_eq!(c.classes.len(), 2);
+        }
+        let wsum: f32 = fd.weights.iter().sum();
+        assert!((wsum - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn labels_respect_partition() {
+        let spec = small_spec();
+        let fd = generate(&spec, 10, &Partition::LabelShards { per_client: 2 }, 2);
+        for c in &fd.clients {
+            for &y in c.train_y.iter().chain(&c.test_y) {
+                assert!(c.classes.contains(&(y as usize)), "label {y} not in {:?}", c.classes);
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let spec = small_spec();
+        let a = generate(&spec, 4, &Partition::LabelShards { per_client: 2 }, 3);
+        let b = generate(&spec, 4, &Partition::LabelShards { per_client: 2 }, 3);
+        assert_eq!(a.clients[0].train_x, b.clients[0].train_x);
+        assert_eq!(a.clients[3].test_y, b.clients[3].test_y);
+        let c = generate(&spec, 4, &Partition::LabelShards { per_client: 2 }, 4);
+        assert_ne!(a.clients[0].train_x, c.clients[0].train_x);
+    }
+
+    #[test]
+    fn class_separation_exceeds_noise() {
+        // prototypes should be separated enough that a local model can
+        // learn: mean intra-class distance < mean inter-class distance
+        let spec = small_spec();
+        let fd = generate(&spec, 2, &Partition::LabelShards { per_client: 2 }, 5);
+        let c = &fd.clients[0];
+        let d = c.input_dim;
+        let sample = |i: usize| &c.train_x[i * d..(i + 1) * d];
+        let dist = |a: &[f32], b: &[f32]| -> f64 {
+            a.iter()
+                .zip(b)
+                .map(|(&x, &y)| ((x - y) as f64).powi(2))
+                .sum::<f64>()
+                .sqrt()
+        };
+        let mut intra = (0.0, 0usize);
+        let mut inter = (0.0, 0usize);
+        for i in 0..c.train_len() {
+            for j in (i + 1)..c.train_len() {
+                let dd = dist(sample(i), sample(j));
+                if c.train_y[i] == c.train_y[j] {
+                    intra = (intra.0 + dd, intra.1 + 1);
+                } else {
+                    inter = (inter.0 + dd, inter.1 + 1);
+                }
+            }
+        }
+        let intra_mean = intra.0 / intra.1 as f64;
+        let inter_mean = inter.0 / inter.1 as f64;
+        assert!(
+            inter_mean > 1.15 * intra_mean,
+            "separation too weak: intra {intra_mean} inter {inter_mean}"
+        );
+    }
+
+    #[test]
+    fn client_shift_differentiates_clients() {
+        // same class on two clients should differ by more than noise alone
+        let spec = small_spec();
+        let fd = generate(&spec, 10, &Partition::LabelShards { per_client: 10 }, 6);
+        let d = spec.input_dim;
+        // class 0 mean on each client
+        let mean_of = |k: usize| -> Vec<f64> {
+            let c = &fd.clients[k];
+            let mut acc = vec![0.0f64; d];
+            let mut cnt = 0;
+            for (i, &y) in c.train_y.iter().enumerate() {
+                if y == 0 {
+                    for j in 0..d {
+                        acc[j] += c.train_x[i * d + j] as f64;
+                    }
+                    cnt += 1;
+                }
+            }
+            acc.iter_mut().for_each(|a| *a /= cnt.max(1) as f64);
+            acc
+        };
+        let m0 = mean_of(0);
+        let m1 = mean_of(1);
+        let shift_dist: f64 = m0
+            .iter()
+            .zip(&m1)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+            .sqrt();
+        assert!(shift_dist > 0.05, "client means too close: {shift_dist}");
+    }
+}

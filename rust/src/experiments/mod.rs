@@ -1,0 +1,43 @@
+//! Regenerators for every table and figure in the paper's evaluation
+//! (experiment index in DESIGN.md §5):
+//!
+//! | paper artifact | module | CLI |
+//! |---|---|---|
+//! | Table 1 (capability matrix)   | `table1`      | `pfed1bs table1` |
+//! | Table 2 (acc + MB/round)      | `table2`      | `pfed1bs table2` |
+//! | Fig. 3/4 (MNIST curves)       | `convergence` | `pfed1bs fig3-4` |
+//! | Appendix Fig. 1 (S sweep)     | `ablations`   | `pfed1bs fig-a1` |
+//! | Appendix Fig. 2 (R sweep)     | `ablations`   | `pfed1bs fig-a2` |
+//! | Appendix Fig. 3 (FHT/dense)   | `ablations`   | `pfed1bs fig-a3` |
+//! | Appendix Table 1 (λ/μ/γ)      | `sensitivity` | `pfed1bs table-a1` |
+
+pub mod ablations;
+pub mod convergence;
+pub mod runner;
+pub mod sensitivity;
+pub mod table2;
+
+use crate::algorithms;
+
+/// Table 1: print the capability matrix straight from the algorithms'
+/// self-declared capabilities (kept in sync by the unit test in
+/// `algorithms::tests::capability_matrix_matches_table1`).
+pub fn print_table1() {
+    let check = |b: bool| if b { "✓" } else { "×" };
+    println!("| Algorithm | Up Dim.Red. | Up 1-bit | Down Dim.Red. | Down 1-bit | Personalization |");
+    println!("|---|---|---|---|---|---|");
+    for name in algorithms::all_names() {
+        let alg = algorithms::build(name).expect("registered");
+        let c = alg.capabilities();
+        println!(
+            "| {name} | {} | {} | {} | {} | {} |",
+            check(c.upload_dim_reduction),
+            check(c.upload_one_bit),
+            check(c.download_dim_reduction),
+            check(c.download_one_bit),
+            check(c.personalization),
+        );
+    }
+}
+
+pub use runner::{aggregate, seed_list, Lab};

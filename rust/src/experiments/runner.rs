@@ -1,0 +1,113 @@
+//! Experiment lab: shares one PJRT client and per-variant compiled
+//! executables across a sweep, binding a fresh SRHT realization per run
+//! seed (two device uploads instead of a multi-second recompile).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::algorithms;
+use crate::config::RunConfig;
+use crate::coordinator::{Coordinator, RunResult};
+use crate::runtime::{ModelExecutables, ModelRuntime, Runtime};
+use crate::sketch::SrhtOperator;
+use crate::util::stats::{mean, stddev};
+
+pub struct Lab {
+    pub runtime: Runtime,
+    cache: RefCell<HashMap<String, Arc<ModelExecutables>>>,
+}
+
+impl Lab {
+    pub fn new(artifacts_dir: &str) -> Result<Lab> {
+        Ok(Lab {
+            runtime: Runtime::new(artifacts_dir)?,
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Compiled executables for a variant (cached).
+    pub fn executables(&self, variant: &str) -> Result<Arc<ModelExecutables>> {
+        if let Some(e) = self.cache.borrow().get(variant) {
+            return Ok(e.clone());
+        }
+        crate::info!("compiling artifacts for variant `{variant}` …");
+        let exes = self.runtime.load_variant(variant)?;
+        self.cache
+            .borrow_mut()
+            .insert(variant.to_string(), exes.clone());
+        Ok(exes)
+    }
+
+    /// A model runtime bound to the run's seed-derived SRHT operator.
+    pub fn model_for(&self, cfg: &RunConfig) -> Result<ModelRuntime> {
+        let exes = self.executables(cfg.dataset.model_variant())?;
+        let op = SrhtOperator::from_seed(cfg.seed, exes.geom.n, exes.geom.m);
+        ModelRuntime::bind(exes, &op)
+    }
+
+    /// One full training run.
+    pub fn run(&self, cfg: RunConfig) -> Result<RunResult> {
+        self.run_with_diagnostics(cfg, false)
+    }
+
+    pub fn run_with_diagnostics(&self, cfg: RunConfig, diag: bool) -> Result<RunResult> {
+        let model = self.model_for(&cfg)?;
+        let mut alg = algorithms::build(&cfg.algorithm)?;
+        let mut coord = Coordinator::new(cfg, &model);
+        coord.run_with_diagnostics(alg.as_mut(), diag)
+    }
+
+    /// Repeat a run across seeds; returns per-seed results.
+    pub fn run_seeds(&self, base: &RunConfig, seeds: &[u64]) -> Result<Vec<RunResult>> {
+        seeds
+            .iter()
+            .map(|&s| {
+                let mut cfg = base.clone();
+                cfg.seed = s;
+                self.run(cfg)
+            })
+            .collect()
+    }
+}
+
+/// mean ± std accuracy/cost across seeds.
+#[derive(Clone, Debug)]
+pub struct Aggregate {
+    pub acc_mean: f64,
+    pub acc_std: f64,
+    pub cost_mb_mean: f64,
+    pub runs: usize,
+}
+
+pub fn aggregate(results: &[RunResult]) -> Aggregate {
+    let accs: Vec<f64> = results.iter().map(|r| r.final_accuracy).collect();
+    let costs: Vec<f64> = results.iter().map(|r| r.mean_round_mb).collect();
+    Aggregate {
+        acc_mean: mean(&accs),
+        acc_std: stddev(&accs),
+        cost_mb_mean: mean(&costs),
+        runs: results.len(),
+    }
+}
+
+/// Default seed list for `--seeds k`.
+pub fn seed_list(base: u64, k: usize) -> Vec<u64> {
+    (0..k as u64).map(|i| base.wrapping_add(100 * i + 1)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seed_list_distinct() {
+        let s = seed_list(17, 5);
+        assert_eq!(s.len(), 5);
+        let mut d = s.clone();
+        d.dedup();
+        assert_eq!(d.len(), 5);
+    }
+}

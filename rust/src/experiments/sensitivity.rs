@@ -1,0 +1,75 @@
+//! Appendix Table 1 regenerator: hyperparameter sensitivity of pFed1BS
+//! (λ across six orders of magnitude, μ, γ) on CIFAR-10 (non-i.i.d.).
+//! Hyperparameters are runtime scalars in the AOT artifacts, so the whole
+//! sweep reuses one compiled executable set.
+
+use std::io::Write;
+
+use anyhow::Result;
+
+use crate::config::RunConfig;
+use crate::data::DatasetName;
+use crate::experiments::runner::{aggregate, seed_list, Lab};
+
+pub struct SensitivityOptions {
+    pub dataset: DatasetName,
+    pub rounds: usize,
+    pub seeds: usize,
+    pub seed: u64,
+    pub results_dir: String,
+}
+
+impl Default for SensitivityOptions {
+    fn default() -> Self {
+        SensitivityOptions {
+            dataset: DatasetName::Cifar10,
+            rounds: 0,
+            seeds: 2,
+            seed: 17,
+            results_dir: "results".into(),
+        }
+    }
+}
+
+/// The paper's grid (Appendix Table 1).
+pub fn paper_grid() -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    (
+        vec![5e-7, 5e-6, 5e-5, 5e-4, 5e-2, 5e-1], // lambda
+        vec![1e-6, 1e-5, 1e-4, 1e-3, 1e-2, 1e-1], // mu
+        vec![1e1, 1e2, 1e3, 1e4, 1e5, 1e6],       // gamma
+    )
+}
+
+pub fn run(lab: &Lab, opts: &SensitivityOptions) -> Result<()> {
+    let (lambdas, mus, gammas) = paper_grid();
+    let dir = format!("{}/table_a1", opts.results_dir);
+    std::fs::create_dir_all(&dir).ok();
+
+    let mut csv = String::from("param,value,acc_mean,acc_std,runs\n");
+    for (param, values) in [("lambda", lambdas), ("mu", mus), ("gamma", gammas)] {
+        for &v in &values {
+            let mut cfg = RunConfig::preset(opts.dataset);
+            cfg.algorithm = "pfed1bs".into();
+            if opts.rounds > 0 {
+                cfg.rounds = opts.rounds;
+            }
+            match param {
+                "lambda" => cfg.lambda = v,
+                "mu" => cfg.mu = v,
+                "gamma" => cfg.gamma = v,
+                _ => unreachable!(),
+            }
+            let seeds = seed_list(opts.seed, opts.seeds);
+            eprintln!("[table-a1] {param}={v:e} ({} seeds)…", seeds.len());
+            let results = lab.run_seeds(&cfg, &seeds)?;
+            let agg = aggregate(&results);
+            csv.push_str(&format!(
+                "{param},{v:e},{:.6},{:.6},{}\n",
+                agg.acc_mean, agg.acc_std, agg.runs
+            ));
+        }
+    }
+    std::fs::File::create(format!("{dir}/sensitivity.csv"))?.write_all(csv.as_bytes())?;
+    println!("\n=== Appendix Table 1 (sensitivity, {}) ===\n{csv}", opts.dataset.as_str());
+    Ok(())
+}

@@ -1,0 +1,196 @@
+//! Table 2 regenerator: Top-1 accuracy (%) and per-round communication
+//! cost (MB) for every algorithm × dataset, with the ↓% reduction column
+//! computed against FedAvg exactly as the paper prints it.
+
+use std::io::Write;
+
+use anyhow::Result;
+
+use crate::algorithms::all_names;
+use crate::config::RunConfig;
+use crate::data::DatasetName;
+use crate::experiments::runner::{aggregate, seed_list, Aggregate, Lab};
+
+/// One (algorithm, dataset) cell.
+#[derive(Clone, Debug)]
+pub struct Cell {
+    pub algorithm: String,
+    pub dataset: DatasetName,
+    pub agg: Aggregate,
+}
+
+pub struct Table2Options {
+    pub datasets: Vec<DatasetName>,
+    pub algorithms: Vec<String>,
+    pub seeds: usize,
+    /// override preset rounds (0 = keep preset)
+    pub rounds: usize,
+    pub results_dir: String,
+}
+
+impl Default for Table2Options {
+    fn default() -> Self {
+        Table2Options {
+            datasets: DatasetName::all().to_vec(),
+            algorithms: all_names().iter().map(|s| s.to_string()).collect(),
+            seeds: 3,
+            rounds: 0,
+            results_dir: "results".into(),
+        }
+    }
+}
+
+pub fn run(lab: &Lab, opts: &Table2Options) -> Result<Vec<Cell>> {
+    let mut cells = Vec::new();
+    for &dataset in &opts.datasets {
+        for alg in &opts.algorithms {
+            let mut cfg = RunConfig::preset(dataset);
+            cfg.algorithm = alg.clone();
+            if opts.rounds > 0 {
+                cfg.rounds = opts.rounds;
+            }
+            let seeds = seed_list(cfg.seed, opts.seeds);
+            eprintln!("[table2] {} × {} ({} seeds)…", alg, dataset.as_str(), seeds.len());
+            let results = lab.run_seeds(&cfg, &seeds)?;
+            cells.push(Cell {
+                algorithm: alg.clone(),
+                dataset,
+                agg: aggregate(&results),
+            });
+        }
+    }
+    write_outputs(&cells, opts)?;
+    Ok(cells)
+}
+
+fn cost_of(cells: &[Cell], alg: &str, ds: DatasetName) -> Option<f64> {
+    cells
+        .iter()
+        .find(|c| c.algorithm == alg && c.dataset == ds)
+        .map(|c| c.agg.cost_mb_mean)
+}
+
+/// Render the markdown table (the paper's Table 2 layout).
+pub fn render_markdown(cells: &[Cell], datasets: &[DatasetName], algorithms: &[String]) -> String {
+    let mut out = String::new();
+    out.push_str("| Method |");
+    for d in datasets {
+        out.push_str(&format!(" {} Acc. (%) | Cost (MB) |", d.as_str()));
+    }
+    out.push('\n');
+    out.push_str("|---|");
+    for _ in datasets {
+        out.push_str("---|---|");
+    }
+    out.push('\n');
+    for alg in algorithms {
+        out.push_str(&format!("| {alg} |"));
+        for &d in datasets {
+            let Some(cell) = cells
+                .iter()
+                .find(|c| &c.algorithm == alg && c.dataset == d)
+            else {
+                out.push_str(" – | – |");
+                continue;
+            };
+            let fed = cost_of(cells, "fedavg", d);
+            let reduction = fed
+                .filter(|&f| f > 0.0 && alg != "fedavg")
+                .map(|f| format!(" ↓{:.2}%", 100.0 * (1.0 - cell.agg.cost_mb_mean / f)))
+                .unwrap_or_default();
+            out.push_str(&format!(
+                " {:.2} ± {:.2} | {:.2}{} |",
+                100.0 * cell.agg.acc_mean,
+                100.0 * cell.agg.acc_std,
+                cell.agg.cost_mb_mean,
+                reduction
+            ));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+fn write_outputs(cells: &[Cell], opts: &Table2Options) -> Result<()> {
+    std::fs::create_dir_all(&opts.results_dir).ok();
+    // CSV
+    let csv_path = format!("{}/table2.csv", opts.results_dir);
+    let mut f = std::fs::File::create(&csv_path)?;
+    writeln!(f, "algorithm,dataset,acc_mean,acc_std,cost_mb,runs")?;
+    for c in cells {
+        writeln!(
+            f,
+            "{},{},{:.6},{:.6},{:.6},{}",
+            c.algorithm,
+            c.dataset.as_str(),
+            c.agg.acc_mean,
+            c.agg.acc_std,
+            c.agg.cost_mb_mean,
+            c.agg.runs
+        )?;
+    }
+    // Markdown
+    let datasets: Vec<DatasetName> = {
+        let mut ds = Vec::new();
+        for c in cells {
+            if !ds.contains(&c.dataset) {
+                ds.push(c.dataset);
+            }
+        }
+        ds
+    };
+    let algorithms: Vec<String> = {
+        let mut al = Vec::new();
+        for c in cells {
+            if !al.contains(&c.algorithm) {
+                al.push(c.algorithm.clone());
+            }
+        }
+        al
+    };
+    let md = render_markdown(cells, &datasets, &algorithms);
+    std::fs::write(format!("{}/table2.md", opts.results_dir), &md)?;
+    println!("\n=== Table 2 (accuracy % / cost MB per round) ===\n{md}");
+    println!("written: {csv_path} and table2.md");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::runner::Aggregate;
+
+    fn cell(alg: &str, ds: DatasetName, acc: f64, cost: f64) -> Cell {
+        Cell {
+            algorithm: alg.into(),
+            dataset: ds,
+            agg: Aggregate { acc_mean: acc, acc_std: 0.01, cost_mb_mean: cost, runs: 3 },
+        }
+    }
+
+    #[test]
+    fn markdown_contains_reduction_vs_fedavg() {
+        let cells = vec![
+            cell("fedavg", DatasetName::Mnist, 0.97, 32.0),
+            cell("pfed1bs", DatasetName::Mnist, 0.975, 0.1),
+        ];
+        let md = render_markdown(
+            &cells,
+            &[DatasetName::Mnist],
+            &["fedavg".into(), "pfed1bs".into()],
+        );
+        assert!(md.contains("↓99.69%"), "{md}");
+        assert!(md.contains("97.50"), "{md}");
+    }
+
+    #[test]
+    fn missing_cells_render_dashes() {
+        let cells = vec![cell("fedavg", DatasetName::Mnist, 0.9, 32.0)];
+        let md = render_markdown(
+            &cells,
+            &[DatasetName::Mnist],
+            &["fedavg".into(), "pfed1bs".into()],
+        );
+        assert!(md.contains("–"));
+    }
+}

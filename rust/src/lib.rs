@@ -1,0 +1,35 @@
+//! # pFed1BS — Personalized Federated Learning via One-Bit Random Sketching
+//!
+//! Rust implementation of the AAAI 2026 paper's system: the L3
+//! coordinator (federated orchestration, one-bit bidirectional transport,
+//! Lemma-1 server aggregation, all baselines) over AOT-compiled JAX/Pallas
+//! compute artifacts executed through PJRT (the `xla` crate).
+//!
+//! Layer map (DESIGN.md §1):
+//! * [`runtime`] — loads `artifacts/*.hlo.txt` (L2/L1 output) and executes
+//!   client steps / sketches / eval on the CPU PJRT client.
+//! * [`algorithms`] — pFed1BS (Algorithm 1) plus FedAvg, OBDA, OBCSAA,
+//!   zSignFed, EDEN, FedBAT baselines behind one trait.
+//! * [`coordinator`] — round loop, partial participation, personalized
+//!   evaluation, metrics.
+//! * [`sketch`] — rust mirror of the SRHT operator, bit packing, majority
+//!   vote.
+//! * [`comm`] — wire codecs, byte ledger, simulated network.
+//! * [`data`] — synthetic non-i.i.d. federated datasets (DESIGN.md §2).
+//! * [`experiments`] — regenerators for every table/figure in the paper.
+//! * [`analysis`] — the paper's Theorem-1 constants/bounds made
+//!   executable (`pfed1bs bound`).
+//! * Substrates in [`util`], [`config`], [`bench_harness`] replace crates
+//!   unavailable in the offline mirror (clap/criterion/serde/proptest).
+
+pub mod algorithms;
+pub mod analysis;
+pub mod bench_harness;
+pub mod comm;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod runtime;
+pub mod sketch;
+pub mod util;

@@ -1,0 +1,242 @@
+//! pFed1BS leader binary.
+//!
+//! Subcommands map 1:1 to the paper's evaluation artifacts (DESIGN.md §5):
+//!
+//! ```text
+//! pfed1bs train     --alg pfed1bs --dataset mnist [--rounds N --seed S …]
+//! pfed1bs table1                      # capability matrix (paper Table 1)
+//! pfed1bs table2    [--datasets a,b --algs x,y --seeds k --rounds N]
+//! pfed1bs fig3-4    [--rounds N --diagnostics]
+//! pfed1bs fig-a1    [--values 5,10,15,20]
+//! pfed1bs fig-a2    [--values 5,10,20,25,30]
+//! pfed1bs fig-a3
+//! pfed1bs table-a1  [--seeds k --rounds N]
+//! pfed1bs info                        # artifact manifest summary
+//! ```
+
+use anyhow::{bail, Result};
+
+use pfed1bs::config::RunConfig;
+use pfed1bs::data::DatasetName;
+use pfed1bs::experiments::{self, runner::Lab};
+use pfed1bs::util::cli::Args;
+
+fn main() {
+    pfed1bs::util::log::init_from_env();
+    if let Err(e) = real_main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn real_main() -> Result<()> {
+    let args = Args::from_env()?;
+    let sub = args.subcommand.clone().unwrap_or_else(|| "help".into());
+    match sub.as_str() {
+        "train" => cmd_train(&args),
+        "table1" => {
+            experiments::print_table1();
+            Ok(())
+        }
+        "table2" => cmd_table2(&args),
+        "fig3-4" | "fig34" => cmd_fig34(&args),
+        "fig-a1" => cmd_fig_a1(&args),
+        "fig-a2" => cmd_fig_a2(&args),
+        "fig-a3" => cmd_fig_a3(&args),
+        "table-a1" => cmd_table_a1(&args),
+        "bound" => cmd_bound(&args),
+        "info" => cmd_info(&args),
+        "help" | "--help" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => bail!("unknown subcommand `{other}` — try `pfed1bs help`"),
+    }
+}
+
+const HELP: &str = "\
+pfed1bs — Personalized Federated Learning via One-Bit Random Sketching (AAAI 2026)
+
+USAGE: pfed1bs <subcommand> [--key value …]
+
+subcommands:
+  train      one training run        (--alg --dataset --rounds --seed …)
+  table1     capability matrix       (paper Table 1)
+  table2     accuracy + comm cost    (paper Table 2)
+  fig3-4     MNIST convergence curves (paper Figs. 3 & 4)
+  fig-a1     participation sweep S   (appendix Fig. 1)
+  fig-a2     local-steps sweep R     (appendix Fig. 2)
+  fig-a3     FHT vs dense Gaussian   (appendix Fig. 3)
+  table-a1   λ/μ/γ sensitivity       (appendix Table 1)
+  bound      Theorem-1 constants + predicted neighborhood for a config
+  info       artifact manifest summary
+
+common options: --artifacts-dir artifacts  --results-dir results
+                --seed N  --seeds K  --rounds N  --dataset name
+run `make artifacts` once before any subcommand.
+";
+
+fn artifacts_dir(args: &Args) -> String {
+    args.str_or("artifacts-dir", "artifacts")
+}
+
+fn parse_datasets(spec: &str) -> Result<Vec<DatasetName>> {
+    spec.split(',')
+        .map(|s| {
+            DatasetName::parse(s.trim())
+                .ok_or_else(|| anyhow::anyhow!("unknown dataset `{s}`"))
+        })
+        .collect()
+}
+
+fn parse_usizes(spec: &str) -> Result<Vec<usize>> {
+    spec.split(',')
+        .map(|s| s.trim().parse::<usize>().map_err(|e| anyhow::anyhow!("{s}: {e}")))
+        .collect()
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let dataset = DatasetName::parse(&args.str_or("dataset", "mnist"))
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset"))?;
+    let mut cfg = RunConfig::preset(dataset);
+    cfg.apply_args(args)?;
+    args.reject_unknown()?;
+    let lab = Lab::new(&cfg.artifacts_dir)?;
+    println!("run: {}", cfg.summary());
+    let results_dir = cfg.results_dir.clone();
+    let alg_name = cfg.algorithm.clone();
+    let result = lab.run_with_diagnostics(cfg.clone(), args.flag("diagnostics"))?;
+    let csv = format!("{results_dir}/train_{alg_name}_{}.csv", dataset.as_str());
+    result.history.write_csv(&csv, &cfg.summary())?;
+    println!(
+        "final: acc={:.4} loss={:.4} mean_round_mb={:.4}  (history: {csv})",
+        result.final_accuracy, result.final_loss, result.mean_round_mb
+    );
+    Ok(())
+}
+
+fn cmd_table2(args: &Args) -> Result<()> {
+    let mut opts = experiments::table2::Table2Options {
+        seeds: args.parse_or("seeds", 3usize)?,
+        rounds: args.parse_or("rounds", 0usize)?,
+        results_dir: args.str_or("results-dir", "results"),
+        ..Default::default()
+    };
+    if let Some(ds) = args.get("datasets") {
+        opts.datasets = parse_datasets(ds)?;
+    }
+    if let Some(al) = args.get("algs") {
+        opts.algorithms = al.split(',').map(|s| s.trim().to_string()).collect();
+    }
+    let lab = Lab::new(&artifacts_dir(args))?;
+    args.reject_unknown()?;
+    experiments::table2::run(&lab, &opts)?;
+    Ok(())
+}
+
+fn cmd_fig34(args: &Args) -> Result<()> {
+    let mut opts = experiments::convergence::ConvergenceOptions {
+        rounds: args.parse_or("rounds", 0usize)?,
+        seed: args.parse_or("seed", 17u64)?,
+        diagnostics: args.flag("diagnostics"),
+        results_dir: args.str_or("results-dir", "results"),
+        ..Default::default()
+    };
+    if let Some(ds) = args.get("dataset") {
+        opts.dataset = DatasetName::parse(ds).ok_or_else(|| anyhow::anyhow!("unknown dataset"))?;
+    }
+    if let Some(al) = args.get("algs") {
+        opts.algorithms = al.split(',').map(|s| s.trim().to_string()).collect();
+    }
+    let lab = Lab::new(&artifacts_dir(args))?;
+    args.reject_unknown()?;
+    experiments::convergence::run(&lab, &opts)
+}
+
+fn ablation_opts(args: &Args) -> Result<experiments::ablations::AblationOptions> {
+    let mut opts = experiments::ablations::AblationOptions {
+        rounds: args.parse_or("rounds", 0usize)?,
+        seed: args.parse_or("seed", 17u64)?,
+        results_dir: args.str_or("results-dir", "results"),
+        ..Default::default()
+    };
+    if let Some(ds) = args.get("dataset") {
+        opts.dataset = DatasetName::parse(ds).ok_or_else(|| anyhow::anyhow!("unknown dataset"))?;
+    }
+    Ok(opts)
+}
+
+fn cmd_fig_a1(args: &Args) -> Result<()> {
+    let opts = ablation_opts(args)?;
+    let values = parse_usizes(&args.str_or("values", "5,10,15,20"))?;
+    let lab = Lab::new(&artifacts_dir(args))?;
+    args.reject_unknown()?;
+    experiments::ablations::participation(&lab, &opts, &values)
+}
+
+fn cmd_fig_a2(args: &Args) -> Result<()> {
+    let opts = ablation_opts(args)?;
+    let values = parse_usizes(&args.str_or("values", "5,10,20,25,30"))?;
+    let lab = Lab::new(&artifacts_dir(args))?;
+    args.reject_unknown()?;
+    experiments::ablations::local_steps(&lab, &opts, &values)
+}
+
+fn cmd_fig_a3(args: &Args) -> Result<()> {
+    let opts = ablation_opts(args)?;
+    let lab = Lab::new(&artifacts_dir(args))?;
+    args.reject_unknown()?;
+    experiments::ablations::projection(&lab, &opts)
+}
+
+fn cmd_table_a1(args: &Args) -> Result<()> {
+    let mut opts = experiments::sensitivity::SensitivityOptions {
+        rounds: args.parse_or("rounds", 0usize)?,
+        seeds: args.parse_or("seeds", 2usize)?,
+        seed: args.parse_or("seed", 17u64)?,
+        results_dir: args.str_or("results-dir", "results"),
+        ..Default::default()
+    };
+    if let Some(ds) = args.get("dataset") {
+        opts.dataset = DatasetName::parse(ds).ok_or_else(|| anyhow::anyhow!("unknown dataset"))?;
+    }
+    let lab = Lab::new(&artifacts_dir(args))?;
+    args.reject_unknown()?;
+    experiments::sensitivity::run(&lab, &opts)
+}
+
+fn cmd_bound(args: &Args) -> Result<()> {
+    let dataset = DatasetName::parse(&args.str_or("dataset", "mnist"))
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset"))?;
+    let mut cfg = RunConfig::preset(dataset);
+    cfg.apply_args(args)?;
+    args.reject_unknown()?;
+    let manifest = pfed1bs::runtime::Manifest::load(&cfg.artifacts_dir)?;
+    let info = manifest.get("client_step", dataset.model_variant())?;
+    let geom = pfed1bs::runtime::Geometry {
+        n: info.n,
+        npad: info.npad,
+        m: info.m,
+        input_dim: info.input_dim,
+        classes: info.classes,
+        train_batch: info.train_batch,
+        eval_batch: info.eval_batch,
+    };
+    print!("{}", pfed1bs::analysis::report(&cfg, &geom));
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let manifest = pfed1bs::runtime::Manifest::load(artifacts_dir(args))?;
+    args.reject_unknown()?;
+    println!("artifacts: {} records", manifest.len());
+    for variant in manifest.variants() {
+        let info = manifest.get("client_step", &variant)?;
+        println!(
+            "  {variant}: n={} n'={} m={} d={} classes={} batch={} eval_batch={}",
+            info.n, info.npad, info.m, info.input_dim, info.classes,
+            info.train_batch, info.eval_batch
+        );
+    }
+    Ok(())
+}

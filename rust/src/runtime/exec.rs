@@ -1,0 +1,424 @@
+//! PJRT execution runtime: load HLO-text artifacts, compile once, execute
+//! on the request path.
+//!
+//! Interchange contract (see /opt/xla-example/README.md and aot.py):
+//! HLO *text* → `HloModuleProto::from_text_file` → `XlaComputation` →
+//! `client.compile`. Every artifact returns a tuple (lowered with
+//! `return_tuple=True`), so outputs always `to_tuple()`.
+//!
+//! Two-level design:
+//! * [`ModelExecutables`] — the five compiled executables of one model
+//!   variant. Compilation costs seconds; experiment sweeps share these
+//!   across runs through an `Arc`.
+//! * [`ModelRuntime`] — executables + the run's SRHT operator realization
+//!   (dsign: n′ f32, sidx: m i32) uploaded to device ONCE and reused by
+//!   every `client_step`/`sketch` via `execute_b`; re-uploading dsign per
+//!   step would copy 1–4 MiB per local step (EXPERIMENTS.md §Perf).
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Context, Result};
+use xla::{HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use crate::runtime::manifest::{ArtifactInfo, Manifest};
+use crate::sketch::SrhtOperator;
+
+/// Geometry of one model variant, read from the manifest.
+#[derive(Clone, Copy, Debug)]
+pub struct Geometry {
+    pub n: usize,
+    pub npad: usize,
+    pub m: usize,
+    pub input_dim: usize,
+    pub classes: usize,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+}
+
+impl Geometry {
+    fn from_info(info: &ArtifactInfo) -> Geometry {
+        Geometry {
+            n: info.n,
+            npad: info.npad,
+            m: info.m,
+            input_dim: info.input_dim,
+            classes: info.classes,
+            train_batch: info.train_batch,
+            eval_batch: info.eval_batch,
+        }
+    }
+}
+
+/// Shared PJRT client + manifest.
+pub struct Runtime {
+    pub client: PjRtClient,
+    pub manifest: Manifest,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and read the artifact manifest.
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let client = PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        let manifest = Manifest::load(artifacts_dir)?;
+        Ok(Runtime { client, manifest })
+    }
+
+    fn compile(&self, info: &ArtifactInfo) -> Result<PjRtLoadedExecutable> {
+        let path = self.manifest.path_for(info);
+        let proto = HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))
+    }
+
+    /// Compile all executables of a model variant (expensive; share the
+    /// result across runs via the returned Arc).
+    pub fn load_variant(&self, variant: &str) -> Result<Arc<ModelExecutables>> {
+        let info = self.manifest.get("client_step", variant)?;
+        let geom = Geometry::from_info(info);
+        Ok(Arc::new(ModelExecutables {
+            client: self.client.clone(),
+            geom,
+            variant: variant.to_string(),
+            client_step: self.compile(info)?,
+            client_step_w: self.compile(self.manifest.get("client_step_w", variant)?)?,
+            sgd_step: self.compile(self.manifest.get("sgd_step", variant)?)?,
+            sgd_step_w: self.compile(self.manifest.get("sgd_step_w", variant)?)?,
+            sketch: self.compile(self.manifest.get("sketch", variant)?)?,
+            eval: self.compile(self.manifest.get("eval", variant)?)?,
+            grad_norm: self.compile(self.manifest.get("grad_norm", variant)?)?,
+        }))
+    }
+
+    /// Convenience: compile a variant and bind an operator in one call.
+    pub fn model(&self, variant: &str, operator: &SrhtOperator) -> Result<ModelRuntime> {
+        ModelRuntime::bind(self.load_variant(variant)?, operator)
+    }
+}
+
+/// The five compiled executables of one model variant.
+pub struct ModelExecutables {
+    client: PjRtClient,
+    pub geom: Geometry,
+    pub variant: String,
+    client_step: PjRtLoadedExecutable,
+    /// single-output variant: w' as a non-tuple root (device-resident loop)
+    client_step_w: PjRtLoadedExecutable,
+    sgd_step: PjRtLoadedExecutable,
+    sgd_step_w: PjRtLoadedExecutable,
+    sketch: PjRtLoadedExecutable,
+    eval: PjRtLoadedExecutable,
+    grad_norm: PjRtLoadedExecutable,
+}
+
+/// Executables + the bound SRHT operator realization (device-resident).
+pub struct ModelRuntime {
+    exes: Arc<ModelExecutables>,
+    pub geom: Geometry,
+    pub variant: String,
+    dsign_buf: PjRtBuffer,
+    sidx_buf: PjRtBuffer,
+}
+
+impl ModelRuntime {
+    /// Bind an operator realization to compiled executables (cheap: two
+    /// host→device uploads).
+    pub fn bind(exes: Arc<ModelExecutables>, operator: &SrhtOperator) -> Result<ModelRuntime> {
+        let geom = exes.geom;
+        if operator.npad != geom.npad || operator.m != geom.m || operator.n != geom.n {
+            bail!(
+                "operator geometry (n={}, n'={}, m={}) does not match artifact (n={}, n'={}, m={})",
+                operator.n, operator.npad, operator.m, geom.n, geom.npad, geom.m
+            );
+        }
+        let dsign_buf = exes
+            .client
+            .buffer_from_host_buffer(&operator.dsign, &[geom.npad], None)
+            .map_err(|e| anyhow!("uploading dsign: {e:?}"))?;
+        let sidx_i32: Vec<i32> = operator.sidx.iter().map(|&i| i as i32).collect();
+        let sidx_buf = exes
+            .client
+            .buffer_from_host_buffer(&sidx_i32, &[geom.m], None)
+            .map_err(|e| anyhow!("uploading sidx: {e:?}"))?;
+        Ok(ModelRuntime {
+            variant: exes.variant.clone(),
+            geom,
+            exes,
+            dsign_buf,
+            sidx_buf,
+        })
+    }
+
+    fn buf_f32(&self, data: &[f32], dims: &[usize]) -> Result<PjRtBuffer> {
+        self.exes
+            .client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("host->device f32 {dims:?}: {e:?}"))
+    }
+
+    fn buf_i32(&self, data: &[i32], dims: &[usize]) -> Result<PjRtBuffer> {
+        self.exes
+            .client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("host->device i32 {dims:?}: {e:?}"))
+    }
+
+    fn scalar(&self, x: f32) -> Result<PjRtBuffer> {
+        self.exes
+            .client
+            .buffer_from_host_buffer(&[x], &[], None)
+            .map_err(|e| anyhow!("host->device scalar: {e:?}"))
+    }
+
+    fn run(&self, exe: &PjRtLoadedExecutable, args: &[&PjRtBuffer]) -> Result<Vec<Literal>> {
+        let out = exe.execute_b(args).map_err(|e| anyhow!("execute: {e:?}"))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("device->host: {e:?}"))?;
+        lit.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))
+    }
+
+    fn vec_f32(lit: &Literal) -> Result<Vec<f32>> {
+        lit.to_vec::<f32>().map_err(|e| anyhow!("literal->vec: {e:?}"))
+    }
+
+    fn scalar_f32(lit: &Literal) -> Result<f32> {
+        lit.get_first_element::<f32>()
+            .map_err(|e| anyhow!("literal->scalar: {e:?}"))
+    }
+
+    /// One pFed1BS local step (Algorithm 1 line 16). Returns (w', loss).
+    #[allow(clippy::too_many_arguments)]
+    pub fn client_step(
+        &self,
+        w: &[f32],
+        x: &[f32],
+        y: &[i32],
+        v: &[f32],
+        eta: f32,
+        lambda: f32,
+        mu: f32,
+        gamma: f32,
+    ) -> Result<(Vec<f32>, f32)> {
+        let g = &self.geom;
+        debug_assert_eq!(w.len(), g.n);
+        debug_assert_eq!(x.len(), g.train_batch * g.input_dim);
+        debug_assert_eq!(y.len(), g.train_batch);
+        debug_assert_eq!(v.len(), g.m);
+        let wb = self.buf_f32(w, &[g.n])?;
+        let xb = self.buf_f32(x, &[g.train_batch, g.input_dim])?;
+        let yb = self.buf_i32(y, &[g.train_batch])?;
+        let vb = self.buf_f32(v, &[g.m])?;
+        let args = [
+            &wb,
+            &xb,
+            &yb,
+            &vb,
+            &self.dsign_buf,
+            &self.sidx_buf,
+            &self.scalar(eta)?,
+            &self.scalar(lambda)?,
+            &self.scalar(mu)?,
+            &self.scalar(gamma)?,
+        ];
+        let out = self.run(&self.exes.client_step, &args)?;
+        if out.len() != 2 {
+            bail!("client_step returned {} outputs, want 2", out.len());
+        }
+        Ok((Self::vec_f32(&out[0])?, Self::scalar_f32(&out[1])?))
+    }
+
+    /// Plain local SGD step (baselines). Returns (w', loss).
+    pub fn sgd_step(
+        &self,
+        w: &[f32],
+        x: &[f32],
+        y: &[i32],
+        eta: f32,
+        mu: f32,
+    ) -> Result<(Vec<f32>, f32)> {
+        let g = &self.geom;
+        let wb = self.buf_f32(w, &[g.n])?;
+        let xb = self.buf_f32(x, &[g.train_batch, g.input_dim])?;
+        let yb = self.buf_i32(y, &[g.train_batch])?;
+        let args = [&wb, &xb, &yb, &self.scalar(eta)?, &self.scalar(mu)?];
+        let out = self.run(&self.exes.sgd_step, &args)?;
+        if out.len() != 2 {
+            bail!("sgd_step returned {} outputs, want 2", out.len());
+        }
+        Ok((Self::vec_f32(&out[0])?, Self::scalar_f32(&out[1])?))
+    }
+
+    /// R pFed1BS local steps with w DEVICE-RESIDENT throughout: step r's
+    /// output buffer (non-tuple root) feeds step r+1's input directly,
+    /// eliminating 2·n f32 host transfers per step (§Perf: measured
+    /// before/after in EXPERIMENTS.md). The first step runs through the
+    /// tuple-rooted `client_step` to obtain the round's train loss.
+    ///
+    /// `next_batch` is called R times and must yield (x, y) of the
+    /// artifact's train-batch shape.
+    #[allow(clippy::too_many_arguments)]
+    pub fn client_round(
+        &self,
+        w: &[f32],
+        mut next_batch: impl FnMut() -> (Vec<f32>, Vec<i32>),
+        r_steps: usize,
+        v: &[f32],
+        eta: f32,
+        lambda: f32,
+        mu: f32,
+        gamma: f32,
+    ) -> Result<(Vec<f32>, f32)> {
+        assert!(r_steps >= 1);
+        let g = &self.geom;
+        let vb = self.buf_f32(v, &[g.m])?;
+        let scalars = [
+            self.scalar(eta)?,
+            self.scalar(lambda)?,
+            self.scalar(mu)?,
+            self.scalar(gamma)?,
+        ];
+        // step 0: tuple-rooted artifact → loss; w' comes back to host once
+        let (x0, y0) = next_batch();
+        let (w_host, loss) = self.client_step(w, &x0, &y0, v, eta, lambda, mu, gamma)?;
+        let mut w_dev = self.buf_f32(&w_host, &[g.n])?;
+        // steps 1..R: non-tuple artifact, output buffer loops back
+        for _ in 1..r_steps {
+            let (x, y) = next_batch();
+            let xb = self.buf_f32(&x, &[g.train_batch, g.input_dim])?;
+            let yb = self.buf_i32(&y, &[g.train_batch])?;
+            let args = [
+                &w_dev,
+                &xb,
+                &yb,
+                &vb,
+                &self.dsign_buf,
+                &self.sidx_buf,
+                &scalars[0],
+                &scalars[1],
+                &scalars[2],
+                &scalars[3],
+            ];
+            let mut out = self
+                .exes
+                .client_step_w
+                .execute_b(&args)
+                .map_err(|e| anyhow!("client_step_w execute: {e:?}"))?;
+            w_dev = out
+                .get_mut(0)
+                .and_then(|v| {
+                    if v.is_empty() {
+                        None
+                    } else {
+                        Some(v.remove(0))
+                    }
+                })
+                .ok_or_else(|| anyhow!("client_step_w returned no buffer"))?;
+        }
+        let lit = w_dev
+            .to_literal_sync()
+            .map_err(|e| anyhow!("device->host: {e:?}"))?;
+        Ok((Self::vec_f32(&lit)?, loss))
+    }
+
+    /// R plain SGD steps with device-resident w (baselines' ClientUpdate;
+    /// same optimization as `client_round`).
+    pub fn sgd_round(
+        &self,
+        w: &[f32],
+        mut next_batch: impl FnMut() -> (Vec<f32>, Vec<i32>),
+        r_steps: usize,
+        eta: f32,
+        mu: f32,
+    ) -> Result<(Vec<f32>, f32)> {
+        assert!(r_steps >= 1);
+        let g = &self.geom;
+        let scalars = [self.scalar(eta)?, self.scalar(mu)?];
+        let (x0, y0) = next_batch();
+        let (w_host, loss) = self.sgd_step(w, &x0, &y0, eta, mu)?;
+        let mut w_dev = self.buf_f32(&w_host, &[g.n])?;
+        for _ in 1..r_steps {
+            let (x, y) = next_batch();
+            let xb = self.buf_f32(&x, &[g.train_batch, g.input_dim])?;
+            let yb = self.buf_i32(&y, &[g.train_batch])?;
+            let args = [&w_dev, &xb, &yb, &scalars[0], &scalars[1]];
+            let mut out = self
+                .exes
+                .sgd_step_w
+                .execute_b(&args)
+                .map_err(|e| anyhow!("sgd_step_w execute: {e:?}"))?;
+            w_dev = out
+                .get_mut(0)
+                .and_then(|v| {
+                    if v.is_empty() {
+                        None
+                    } else {
+                        Some(v.remove(0))
+                    }
+                })
+                .ok_or_else(|| anyhow!("sgd_step_w returned no buffer"))?;
+        }
+        let lit = w_dev
+            .to_literal_sync()
+            .map_err(|e| anyhow!("device->host: {e:?}"))?;
+        Ok((Self::vec_f32(&lit)?, loss))
+    }
+
+    /// z = sign(Φw) ∈ {−1,+1}^m (Algorithm 1 line 18).
+    pub fn sketch_sign(&self, w: &[f32]) -> Result<Vec<f32>> {
+        let wb = self.buf_f32(w, &[self.geom.n])?;
+        let out = self.run(&self.exes.sketch, &[&wb, &self.dsign_buf, &self.sidx_buf])?;
+        Self::vec_f32(&out[0])
+    }
+
+    /// (#correct, loss_sum) over one eval batch (padding labels < 0 are
+    /// masked inside the artifact).
+    pub fn eval_batch(&self, w: &[f32], x: &[f32], y: &[i32]) -> Result<(f32, f32)> {
+        let g = &self.geom;
+        let wb = self.buf_f32(w, &[g.n])?;
+        let xb = self.buf_f32(x, &[g.eval_batch, g.input_dim])?;
+        let yb = self.buf_i32(y, &[g.eval_batch])?;
+        let out = self.run(&self.exes.eval, &[&wb, &xb, &yb])?;
+        if out.len() != 2 {
+            bail!("eval returned {} outputs, want 2", out.len());
+        }
+        Ok((Self::scalar_f32(&out[0])?, Self::scalar_f32(&out[1])?))
+    }
+
+    /// ‖∇F̃_k(w; v)‖² on one batch (Theorem 1 diagnostic).
+    #[allow(clippy::too_many_arguments)]
+    pub fn grad_norm(
+        &self,
+        w: &[f32],
+        x: &[f32],
+        y: &[i32],
+        v: &[f32],
+        lambda: f32,
+        mu: f32,
+        gamma: f32,
+    ) -> Result<f32> {
+        let g = &self.geom;
+        let wb = self.buf_f32(w, &[g.n])?;
+        let xb = self.buf_f32(x, &[g.train_batch, g.input_dim])?;
+        let yb = self.buf_i32(y, &[g.train_batch])?;
+        let vb = self.buf_f32(v, &[g.m])?;
+        let args = [
+            &wb,
+            &xb,
+            &yb,
+            &vb,
+            &self.dsign_buf,
+            &self.sidx_buf,
+            &self.scalar(lambda)?,
+            &self.scalar(mu)?,
+            &self.scalar(gamma)?,
+        ];
+        let out = self.run(&self.exes.grad_norm, &args)?;
+        Self::scalar_f32(&out[0])
+    }
+}

@@ -1,0 +1,167 @@
+//! Parser for `artifacts/manifest.txt` (written by `python -m compile.aot`).
+//!
+//! Line-oriented `key=value` records — the contract between the build-time
+//! python layer and the rust runtime. The manifest carries the geometry
+//! (n, n', m, batch sizes) the coordinator needs *before* loading any HLO.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// One artifact record.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactInfo {
+    pub artifact: String,
+    pub variant: String,
+    pub file: String,
+    pub n: usize,
+    pub npad: usize,
+    pub m: usize,
+    pub input_dim: usize,
+    pub classes: usize,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    pub sha256: String,
+}
+
+/// Parsed manifest, indexed by (artifact, variant).
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    entries: HashMap<(String, String), ArtifactInfo>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let mut entries = HashMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut kv: HashMap<&str, &str> = HashMap::new();
+            for tok in line.split_whitespace() {
+                let Some((k, v)) = tok.split_once('=') else {
+                    bail!("manifest line {}: bad token `{tok}`", lineno + 1);
+                };
+                kv.insert(k, v);
+            }
+            let get = |k: &str| -> Result<&str> {
+                kv.get(k)
+                    .copied()
+                    .with_context(|| format!("manifest line {}: missing `{k}`", lineno + 1))
+            };
+            let num = |k: &str| -> Result<usize> {
+                get(k)?
+                    .parse()
+                    .with_context(|| format!("manifest line {}: bad number for `{k}`", lineno + 1))
+            };
+            let info = ArtifactInfo {
+                artifact: get("artifact")?.to_string(),
+                variant: get("variant")?.to_string(),
+                file: get("file")?.to_string(),
+                n: num("n")?,
+                npad: num("npad")?,
+                m: num("m")?,
+                input_dim: num("input_dim")?,
+                classes: num("classes")?,
+                train_batch: num("train_batch")?,
+                eval_batch: num("eval_batch")?,
+                sha256: get("sha256")?.to_string(),
+            };
+            let key = (info.artifact.clone(), info.variant.clone());
+            if entries.insert(key, info).is_some() {
+                bail!("manifest line {}: duplicate record", lineno + 1);
+            }
+        }
+        Ok(Manifest { dir, entries })
+    }
+
+    pub fn get(&self, artifact: &str, variant: &str) -> Result<&ArtifactInfo> {
+        self.entries
+            .get(&(artifact.to_string(), variant.to_string()))
+            .with_context(|| {
+                format!("artifact `{artifact}` for variant `{variant}` not in manifest")
+            })
+    }
+
+    pub fn variants(&self) -> Vec<String> {
+        let mut vs: Vec<String> = self
+            .entries
+            .keys()
+            .map(|(_, v)| v.clone())
+            .collect();
+        vs.sort();
+        vs.dedup();
+        vs
+    }
+
+    pub fn path_for(&self, info: &ArtifactInfo) -> PathBuf {
+        self.dir.join(&info.file)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# pfed1bs artifact manifest v1
+artifact=client_step variant=mlp784 file=client_step_mlp784.hlo.txt n=159010 npad=262144 m=15901 input_dim=784 classes=10 train_batch=32 eval_batch=256 sha256=abc
+artifact=eval variant=mlp784 file=eval_mlp784.hlo.txt n=159010 npad=262144 m=15901 input_dim=784 classes=10 train_batch=32 eval_batch=256 sha256=def
+";
+
+    #[test]
+    fn parses_records() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        assert_eq!(m.len(), 2);
+        let cs = m.get("client_step", "mlp784").unwrap();
+        assert_eq!(cs.n, 159010);
+        assert_eq!(cs.npad, 262144);
+        assert_eq!(cs.m, 15901);
+        assert_eq!(m.variants(), vec!["mlp784".to_string()]);
+        assert!(m.path_for(cs).ends_with("client_step_mlp784.hlo.txt"));
+    }
+
+    #[test]
+    fn missing_artifact_is_error() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        assert!(m.get("sketch", "mlp784").is_err());
+        assert!(m.get("client_step", "bogus").is_err());
+    }
+
+    #[test]
+    fn malformed_lines_rejected() {
+        assert!(Manifest::parse("garbage line", PathBuf::new()).is_err());
+        assert!(Manifest::parse("artifact=a", PathBuf::new()).is_err()); // missing fields
+        let dup = format!("{SAMPLE}\nartifact=eval variant=mlp784 file=f n=1 npad=1 m=1 input_dim=1 classes=1 train_batch=1 eval_batch=1 sha256=x");
+        assert!(Manifest::parse(&dup, PathBuf::new()).is_err());
+    }
+
+    #[test]
+    fn comments_and_blanks_skipped() {
+        let m = Manifest::parse("# only comments\n\n", PathBuf::new()).unwrap();
+        assert!(m.is_empty());
+    }
+}

@@ -1,0 +1,10 @@
+//! L3 ↔ L2 bridge: PJRT client, artifact manifest, compiled executables.
+//!
+//! Python runs only at build time (`make artifacts`); everything here
+//! consumes the AOT HLO text it produced.
+
+pub mod exec;
+pub mod manifest;
+
+pub use exec::{Geometry, ModelExecutables, ModelRuntime, Runtime};
+pub use manifest::{ArtifactInfo, Manifest};

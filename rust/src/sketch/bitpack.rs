@@ -1,0 +1,282 @@
+//! One-bit packing and the server's weighted majority vote (Lemma 1).
+//!
+//! Sign vectors in {−1,+1}^m are transported as ⌈m/64⌉ u64 words (bit 1 ⇔
+//! +1). The server aggregation v = sign(Σ pₖ zₖ) runs either on unpacked
+//! f32 accumulators (general weights) or fully packed via popcount when
+//! weights are uniform — the packed path is the optimized hot loop used
+//! by `benches/bench_aggregate.rs`.
+
+/// Pack a ±1 f32 sign vector into u64 words (bit set ⇔ value >= 0).
+pub fn pack_signs(signs: &[f32]) -> Vec<u64> {
+    let words = signs.len().div_ceil(64);
+    let mut out = vec![0u64; words];
+    for (i, &s) in signs.iter().enumerate() {
+        if s >= 0.0 {
+            out[i / 64] |= 1u64 << (i % 64);
+        }
+    }
+    out
+}
+
+/// Unpack to ±1 f32 of length `m`.
+pub fn unpack_signs(words: &[u64], m: usize) -> Vec<f32> {
+    assert!(words.len() * 64 >= m, "not enough words for m={m}");
+    (0..m)
+        .map(|i| {
+            if words[i / 64] >> (i % 64) & 1 == 1 {
+                1.0
+            } else {
+                -1.0
+            }
+        })
+        .collect()
+}
+
+/// Exact number of payload bytes for an m-bit sign message.
+pub fn packed_bytes(m: usize) -> usize {
+    m.div_ceil(64) * 8
+}
+
+/// Weighted majority vote v = sign(Σ pₖ zₖ) over packed sketches
+/// (Lemma 1: the exact minimizer of the server objective, Eq. 13/14).
+/// Ties (Σ = 0) break toward +1, matching `sign(0) = +1` everywhere else.
+pub fn majority_vote_weighted(sketches: &[Vec<u64>], weights: &[f32], m: usize) -> Vec<u64> {
+    assert_eq!(sketches.len(), weights.len());
+    let words = m.div_ceil(64);
+    let mut acc = vec![0.0f32; m];
+    for (z, &p) in sketches.iter().zip(weights) {
+        debug_assert!(z.len() >= words);
+        for (i, a) in acc.iter_mut().enumerate() {
+            let bit = z[i / 64] >> (i % 64) & 1;
+            *a += if bit == 1 { p } else { -p };
+        }
+    }
+    let mut out = vec![0u64; words];
+    for (i, &a) in acc.iter().enumerate() {
+        if a >= 0.0 {
+            out[i / 64] |= 1u64 << (i % 64);
+        }
+    }
+    out
+}
+
+/// Uniform-weight majority vote on packed words via per-bit counters —
+/// the optimized path: one popcount-style pass, no f32 accumulator array
+/// walk per client bit. For K clients bit i wins (+1) iff
+/// #,{k: bit set} * 2 >= K (ties toward +1).
+pub fn majority_vote_uniform(sketches: &[Vec<u64>], m: usize) -> Vec<u64> {
+    let k = sketches.len();
+    assert!(k > 0);
+    let words = m.div_ceil(64);
+    let mut out = vec![0u64; words];
+    // Column-major counting with a u16 counter per bit, processed one
+    // 64-bit lane at a time to stay cache-friendly.
+    let mut counts = vec![0u16; 64];
+    for w in 0..words {
+        counts.iter_mut().for_each(|c| *c = 0);
+        for z in sketches {
+            let word = z[w];
+            // unrolled bit-scatter: only set bits touch the counter
+            let mut rem = word;
+            while rem != 0 {
+                let b = rem.trailing_zeros() as usize;
+                counts[b] += 1;
+                rem &= rem - 1;
+            }
+        }
+        let mut res = 0u64;
+        for (b, &c) in counts.iter().enumerate() {
+            if 2 * c as usize >= k {
+                res |= 1u64 << b;
+            }
+        }
+        out[w] = res;
+    }
+    // mask tail bits beyond m so equality checks are well-defined
+    let tail = m % 64;
+    if tail != 0 {
+        let mask = (1u64 << tail) - 1;
+        *out.last_mut().unwrap() &= mask;
+        // ties toward +1 for padding bits are irrelevant; keep them zero
+    }
+    out
+}
+
+/// Hamming distance between two packed sign vectors (first m bits).
+pub fn hamming_packed(a: &[u64], b: &[u64], m: usize) -> usize {
+    let words = m.div_ceil(64);
+    let mut dist = 0usize;
+    for w in 0..words {
+        let mut x = a[w] ^ b[w];
+        if w == words - 1 && m % 64 != 0 {
+            x &= (1u64 << (m % 64)) - 1;
+        }
+        dist += x.count_ones() as usize;
+    }
+    dist
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn pack_round_trip_property() {
+        check("bitpack_round_trip", 50, |rng| {
+            let m = rng.below(500) + 1;
+            let signs: Vec<f32> = (0..m)
+                .map(|_| if rng.f32() < 0.5 { 1.0 } else { -1.0 })
+                .collect();
+            let packed = pack_signs(&signs);
+            if packed.len() != m.div_ceil(64) {
+                return Err("wrong word count".into());
+            }
+            let back = unpack_signs(&packed, m);
+            if back != signs {
+                return Err("round trip mismatch".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn packed_bytes_exact() {
+        assert_eq!(packed_bytes(1), 8);
+        assert_eq!(packed_bytes(64), 8);
+        assert_eq!(packed_bytes(65), 16);
+        assert_eq!(packed_bytes(15901), 15901usize.div_ceil(64) * 8);
+    }
+
+    #[test]
+    fn zero_is_packed_as_plus_one() {
+        let packed = pack_signs(&[0.0, -1.0, 1.0]);
+        let back = unpack_signs(&packed, 3);
+        assert_eq!(back, vec![1.0, -1.0, 1.0]);
+    }
+
+    #[test]
+    fn weighted_vote_matches_unpacked_reference() {
+        check("majority_vote_weighted_ref", 40, |rng| {
+            let k = rng.below(8) + 1;
+            let m = rng.below(300) + 1;
+            let sketches: Vec<Vec<f32>> = (0..k)
+                .map(|_| {
+                    (0..m)
+                        .map(|_| if rng.f32() < 0.5 { 1.0 } else { -1.0 })
+                        .collect()
+                })
+                .collect();
+            let mut weights: Vec<f32> = (0..k).map(|_| rng.f32() + 0.01).collect();
+            let total: f32 = weights.iter().sum();
+            weights.iter_mut().for_each(|w| *w /= total);
+
+            // reference: accumulate in f64 then sign
+            let mut acc = vec![0.0f64; m];
+            for (z, &p) in sketches.iter().zip(&weights) {
+                for i in 0..m {
+                    acc[i] += p as f64 * z[i] as f64;
+                }
+            }
+            let want: Vec<f32> = acc.iter().map(|&a| if a >= 0.0 { 1.0 } else { -1.0 }).collect();
+
+            let packed: Vec<Vec<u64>> = sketches.iter().map(|z| pack_signs(z)).collect();
+            let got = unpack_signs(&majority_vote_weighted(&packed, &weights, m), m);
+            // f32-vs-f64 accumulation can disagree only at near-exact ties
+            let mismatches = got
+                .iter()
+                .zip(&want)
+                .enumerate()
+                .filter(|(i, (g, w))| g != w && acc[*i].abs() > 1e-5)
+                .count();
+            if mismatches > 0 {
+                return Err(format!("{mismatches} non-tie mismatches"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn uniform_vote_matches_weighted_with_equal_weights() {
+        check("majority_vote_uniform_eq", 40, |rng| {
+            // odd K only: exact ties are resolved identically but f32
+            // accumulation of ±1/K may land on either side of 0.0
+            let k = 2 * rng.below(5) + 1;
+            let m = rng.below(500) + 1;
+            let packed: Vec<Vec<u64>> = (0..k)
+                .map(|_| {
+                    let signs: Vec<f32> = (0..m)
+                        .map(|_| if rng.f32() < 0.5 { 1.0 } else { -1.0 })
+                        .collect();
+                    pack_signs(&signs)
+                })
+                .collect();
+            let w = vec![1.0f32 / k as f32; k];
+            let a = majority_vote_uniform(&packed, m);
+            let b = majority_vote_weighted(&packed, &w, m);
+            if unpack_signs(&a, m) != unpack_signs(&b, m) {
+                return Err("uniform != weighted".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn vote_is_lemma1_optimal_brute_force() {
+        // check v* minimizes sum_k p_k g(v, z_k) over all v in {±1}^m
+        check("vote_lemma1_optimal", 20, |rng| {
+            let k = rng.below(5) + 1;
+            let m = rng.below(6) + 1;
+            let sketches: Vec<Vec<f32>> = (0..k)
+                .map(|_| {
+                    (0..m)
+                        .map(|_| if rng.f32() < 0.5 { 1.0 } else { -1.0 })
+                        .collect()
+                })
+                .collect();
+            let weights = vec![1.0f32 / k as f32; k];
+            let packed: Vec<Vec<u64>> = sketches.iter().map(|z| pack_signs(z)).collect();
+            let vstar = unpack_signs(&majority_vote_weighted(&packed, &weights, m), m);
+
+            let g = |v: &[f32]| -> f64 {
+                // one-sided l1: sum_k p_k || [v ⊙ z_k]_- ||_1   (Eq. 2)
+                sketches
+                    .iter()
+                    .zip(&weights)
+                    .map(|(z, &p)| {
+                        p as f64
+                            * v.iter()
+                                .zip(z)
+                                .map(|(&vi, &zi)| (vi * zi).min(0.0).abs() as f64)
+                                .sum::<f64>()
+                    })
+                    .sum()
+            };
+            let star = g(&vstar);
+            for c in 0..(1usize << m) {
+                let cand: Vec<f32> = (0..m)
+                    .map(|b| if c >> b & 1 == 1 { 1.0 } else { -1.0 })
+                    .collect();
+                if g(&cand) < star - 1e-9 {
+                    return Err(format!("candidate {cand:?} beats vote {vstar:?}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn hamming_distance() {
+        let a = pack_signs(&[1.0, 1.0, -1.0, 1.0]);
+        let b = pack_signs(&[1.0, -1.0, -1.0, -1.0]);
+        assert_eq!(hamming_packed(&a, &b, 4), 2);
+        assert_eq!(hamming_packed(&a, &a, 4), 0);
+    }
+
+    #[test]
+    fn single_client_vote_is_identity() {
+        let z = pack_signs(&[1.0, -1.0, 1.0, -1.0, -1.0]);
+        let v = majority_vote_uniform(&[z.clone()], 5);
+        assert_eq!(unpack_signs(&v, 5), unpack_signs(&z, 5));
+    }
+}

@@ -1,0 +1,157 @@
+//! In-place Fast Walsh–Hadamard Transform — the rust mirror of the L1
+//! Pallas kernel (`python/compile/kernels/fht.py`).
+//!
+//! Used on the request path by the *baselines* (OBCSAA/EDEN rotate update
+//! vectors), by the server-side diagnostics, and by tests/benches that
+//! cross-check the HLO artifacts bit-for-bit. O(n log n) butterflies over
+//! one buffer; `fwht_normalized` matches the orthonormal H = Hadamard/√n
+//! used everywhere in the paper.
+
+/// Unnormalized in-place FWHT (Sylvester/natural order).
+///
+/// `x.len()` must be a power of two. After this, `x = H_unnorm * x` where
+/// `H_unnorm` has entries ±1.
+pub fn fwht_inplace(x: &mut [f32]) {
+    let n = x.len();
+    assert!(n.is_power_of_two(), "fwht needs power-of-two length, got {n}");
+    let mut h = 1;
+    while h < n {
+        let stride = h * 2;
+        let mut base = 0;
+        while base < n {
+            for i in base..base + h {
+                let a = x[i];
+                let b = x[i + h];
+                x[i] = a + b;
+                x[i + h] = a - b;
+            }
+            base += stride;
+        }
+        h = stride;
+    }
+}
+
+/// Normalized in-place FWHT: `x <- (H/sqrt(n)) x`; involution (applying
+/// twice returns the input) and isometry (preserves the l2 norm).
+pub fn fwht_normalized(x: &mut [f32]) {
+    let n = x.len();
+    fwht_inplace(x);
+    let scale = 1.0 / (n as f32).sqrt();
+    for v in x.iter_mut() {
+        *v *= scale;
+    }
+}
+
+/// Dense normalized Hadamard matrix row `r` dotted with `x` — O(n) oracle
+/// used only by tests (entry H[r,c] = (-1)^{popcount(r & c)} / sqrt(n)).
+pub fn hadamard_row_dot(r: usize, x: &[f32]) -> f64 {
+    let n = x.len();
+    debug_assert!(n.is_power_of_two());
+    let mut acc = 0.0f64;
+    for (c, &v) in x.iter().enumerate() {
+        let sign = if ((r & c).count_ones() & 1) == 1 { -1.0 } else { 1.0 };
+        acc += sign * v as f64;
+    }
+    acc / (n as f64).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn matches_dense_definition() {
+        let mut rng = Rng::new(1);
+        for log2n in 0..=8 {
+            let n = 1usize << log2n;
+            let x: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let mut y = x.clone();
+            fwht_normalized(&mut y);
+            for r in 0..n {
+                let want = hadamard_row_dot(r, &x);
+                assert!(
+                    (y[r] as f64 - want).abs() < 1e-3,
+                    "n={n} row={r}: {} vs {want}",
+                    y[r]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn involution_property() {
+        check("fwht_involution", 50, |rng| {
+            let log2n = rng.below(12);
+            let n = 1usize << log2n;
+            let x: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let mut y = x.clone();
+            fwht_normalized(&mut y);
+            fwht_normalized(&mut y);
+            for i in 0..n {
+                if (y[i] - x[i]).abs() > 1e-3 * x[i].abs().max(1.0) {
+                    return Err(format!("i={i}: {} vs {}", y[i], x[i]));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn isometry_property() {
+        check("fwht_isometry", 50, |rng| {
+            let n = 1usize << (rng.below(10) + 1);
+            let x: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let before = crate::util::stats::l2_norm(&x);
+            let mut y = x;
+            fwht_normalized(&mut y);
+            let after = crate::util::stats::l2_norm(&y);
+            if (before - after).abs() > 1e-2 * before.max(1.0) {
+                return Err(format!("norm {before} -> {after}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn linearity_property() {
+        check("fwht_linearity", 30, |rng| {
+            let n = 1usize << (rng.below(8) + 1);
+            let a: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let b: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let mut sum: Vec<f32> = a.iter().zip(&b).map(|(x, y)| 2.0 * x + 3.0 * y).collect();
+            fwht_normalized(&mut sum);
+            let mut ha = a;
+            let mut hb = b;
+            fwht_normalized(&mut ha);
+            fwht_normalized(&mut hb);
+            for i in 0..n {
+                let want = 2.0 * ha[i] + 3.0 * hb[i];
+                if (sum[i] - want).abs() > 1e-3 * want.abs().max(1.0) {
+                    return Err(format!("i={i}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn trivial_sizes() {
+        let mut one = [5.0f32];
+        fwht_normalized(&mut one);
+        assert_eq!(one[0], 5.0);
+        let mut two = [1.0f32, 2.0];
+        fwht_normalized(&mut two);
+        let s = 1.0 / 2.0f32.sqrt();
+        assert!((two[0] - 3.0 * s).abs() < 1e-6);
+        assert!((two[1] + 1.0 * s).abs() < 1e-6);
+    }
+
+    #[test]
+    #[should_panic(expected = "power-of-two")]
+    fn rejects_non_pow2() {
+        let mut x = vec![0.0f32; 12];
+        fwht_inplace(&mut x);
+    }
+}

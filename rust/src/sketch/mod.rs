@@ -1,0 +1,17 @@
+//! The paper's sketching substrate, mirrored in rust.
+//!
+//! The HLO artifacts own the pFed1BS hot path; this module provides the
+//! identical operator for baselines, server-side work, the dense-Gaussian
+//! ablation (Appendix Fig. 3), bit-packing for the one-bit transport, and
+//! the Lemma-1 majority vote.
+
+pub mod bitpack;
+pub mod fwht;
+pub mod srht;
+
+pub use bitpack::{
+    hamming_packed, majority_vote_uniform, majority_vote_weighted, pack_signs, packed_bytes,
+    unpack_signs,
+};
+pub use fwht::{fwht_inplace, fwht_normalized};
+pub use srht::{DenseGaussianOperator, Projection, SrhtOperator};

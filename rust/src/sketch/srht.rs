@@ -1,0 +1,374 @@
+//! The SRHT sketching operator Φ = √(n′/m)·S·H·D·P_pad (paper Eq. 16/18).
+//!
+//! This is the rust mirror of the L1 Pallas kernels: the *same* (D, S)
+//! realization is shared with the HLO artifacts by passing `dsign`/`sidx`
+//! as runtime inputs, so rust and XLA compute the identical operator —
+//! `rust/tests/integration_runtime.rs` checks bit-for-bit agreement.
+//!
+//! On the pFed1BS hot path the sketch runs inside the HLO artifact; this
+//! mirror serves the baselines (OBCSAA's compressed-sensing uplink, EDEN's
+//! rotation), server-side reconstruction, and the dense-Gaussian ablation
+//! of Appendix Fig. 3.
+
+use crate::sketch::fwht::fwht_normalized;
+use crate::util::rng::Rng;
+
+/// A concrete realization of the structured projection.
+#[derive(Clone, Debug)]
+pub struct SrhtOperator {
+    /// original dimension n
+    pub n: usize,
+    /// padded power-of-two dimension n'
+    pub npad: usize,
+    /// sketch dimension m
+    pub m: usize,
+    /// diagonal Rademacher signs (length n')
+    pub dsign: Vec<f32>,
+    /// subsampled row indices (length m, distinct, < n')
+    pub sidx: Vec<u32>,
+    /// √(n′/m)
+    pub scale: f32,
+}
+
+impl SrhtOperator {
+    /// Build from a seed. The same seed on server and clients yields the
+    /// same operator — the paper's "server broadcasts random seed I".
+    pub fn from_seed(seed: u64, n: usize, m: usize) -> SrhtOperator {
+        assert!(n > 0 && m > 0 && m <= n, "need 0 < m <= n (got n={n}, m={m})");
+        let npad = n.next_power_of_two();
+        let mut rng = Rng::new(seed ^ 0x5349_4754_4852_u64); // "SRHT"
+        let dsign = rng.rademacher(npad);
+        let sidx: Vec<u32> = rng
+            .sample_without_replacement(npad, m)
+            .into_iter()
+            .map(|i| i as u32)
+            .collect();
+        let scale = ((npad as f64 / m as f64).sqrt()) as f32;
+        SrhtOperator { n, npad, m, dsign, sidx, scale }
+    }
+
+    /// Forward sketch z = Φw ∈ R^m (real-valued).
+    pub fn forward(&self, w: &[f32]) -> Vec<f32> {
+        let mut buf = self.forward_padded(w);
+        self.subsample(&mut buf)
+    }
+
+    /// One-bit sketch z = sign(Φw) ∈ {−1,+1}^m, sign(0) := +1.
+    pub fn sketch_sign(&self, w: &[f32]) -> Vec<f32> {
+        self.forward(w)
+            .into_iter()
+            .map(|z| if z >= 0.0 { 1.0 } else { -1.0 })
+            .collect()
+    }
+
+    /// Adjoint g = Φᵀv ∈ R^n.
+    pub fn adjoint(&self, v: &[f32]) -> Vec<f32> {
+        assert_eq!(v.len(), self.m);
+        let mut buf = vec![0.0f32; self.npad];
+        for (&idx, &val) in self.sidx.iter().zip(v) {
+            buf[idx as usize] = val * self.scale;
+        }
+        fwht_normalized(&mut buf);
+        for (b, &d) in buf.iter_mut().zip(&self.dsign) {
+            *b *= d;
+        }
+        buf.truncate(self.n);
+        buf
+    }
+
+    /// H·D·pad(w) without subsampling — the full rotated vector. EDEN
+    /// needs all n' rotated coordinates, not just the m sampled ones.
+    pub fn rotate(&self, w: &[f32]) -> Vec<f32> {
+        self.forward_padded(w)
+    }
+
+    /// Inverse of `rotate` (D·H·y, truncated) — exact because H and D are
+    /// involutions.
+    pub fn rotate_inverse(&self, y: &[f32]) -> Vec<f32> {
+        assert_eq!(y.len(), self.npad);
+        let mut buf = y.to_vec();
+        fwht_normalized(&mut buf);
+        for (b, &d) in buf.iter_mut().zip(&self.dsign) {
+            *b *= d;
+        }
+        buf.truncate(self.n);
+        buf
+    }
+
+    fn forward_padded(&self, w: &[f32]) -> Vec<f32> {
+        assert_eq!(w.len(), self.n, "expected n={} got {}", self.n, w.len());
+        let mut buf = vec![0.0f32; self.npad];
+        for ((b, &x), &d) in buf.iter_mut().zip(w).zip(&self.dsign) {
+            *b = x * d;
+        }
+        fwht_normalized(&mut buf);
+        buf
+    }
+
+    fn subsample(&self, buf: &mut [f32]) -> Vec<f32> {
+        self.sidx
+            .iter()
+            .map(|&i| buf[i as usize] * self.scale)
+            .collect()
+    }
+}
+
+/// Dense Gaussian projection baseline for Appendix Fig. 3: Φ_gauss with
+/// i.i.d. N(0, 1/m) entries — the O(mn) apply (and O(mn) memory) that
+/// the paper's FHT replaces. The matrix is materialized lazily on first
+/// use (row-major, m×n f32 — ~4 GiB for mlp784; this testbed has 34 GiB),
+/// using an Irwin–Hall(4) normal approximation so materialization is
+/// generation-bandwidth- not transcendental-bound. The O(mn) apply cost
+/// is exactly the point of the ablation: see `benches/bench_fwht.rs`.
+#[derive(Clone, Debug)]
+pub struct DenseGaussianOperator {
+    pub n: usize,
+    pub m: usize,
+    seed: u64,
+    rows: std::rc::Rc<std::cell::OnceCell<Vec<f32>>>,
+}
+
+impl DenseGaussianOperator {
+    pub fn from_seed(seed: u64, n: usize, m: usize) -> Self {
+        DenseGaussianOperator {
+            n,
+            m,
+            seed,
+            rows: std::rc::Rc::new(std::cell::OnceCell::new()),
+        }
+    }
+
+    fn matrix(&self) -> &[f32] {
+        self.rows.get_or_init(|| {
+            let mut rng = Rng::new(self.seed ^ 0xDE45_E000);
+            let inv = 1.0 / (self.m as f32).sqrt();
+            let total = self.m * self.n;
+            let mut g = Vec::with_capacity(total);
+            // Irwin–Hall(4): (Σ₄ U(0,1) − 2)·√3 ≈ N(0,1); one u64 draw
+            // per entry (four 16-bit uniforms) makes materializing the
+            // ~10⁹-entry matrix generation-bandwidth-bound rather than
+            // transcendental-bound. Documented deviation from exact
+            // Gaussian: tails truncate at ±3.46σ — irrelevant for the
+            // accuracy-parity ablation this operator exists for.
+            const SQRT3: f32 = 1.732_050_8;
+            const U16_INV: f32 = 1.0 / 65536.0;
+            for _ in 0..total {
+                let bits = rng.next_u64();
+                let s = ((bits & 0xFFFF) as f32
+                    + ((bits >> 16) & 0xFFFF) as f32
+                    + ((bits >> 32) & 0xFFFF) as f32
+                    + ((bits >> 48) & 0xFFFF) as f32)
+                    * U16_INV;
+                g.push((s - 2.0) * SQRT3 * inv);
+            }
+            g
+        })
+    }
+
+    /// z = Gw — one dense matvec, O(mn).
+    pub fn forward(&self, w: &[f32]) -> Vec<f32> {
+        assert_eq!(w.len(), self.n);
+        let mat = self.matrix();
+        (0..self.m)
+            .map(|r| {
+                let row = &mat[r * self.n..(r + 1) * self.n];
+                let mut acc = 0.0f32;
+                for (a, b) in row.iter().zip(w) {
+                    acc += a * b;
+                }
+                acc
+            })
+            .collect()
+    }
+
+    /// g = Gᵀv — O(mn).
+    pub fn adjoint(&self, v: &[f32]) -> Vec<f32> {
+        assert_eq!(v.len(), self.m);
+        let mat = self.matrix();
+        let mut out = vec![0.0f32; self.n];
+        for (r, &vr) in v.iter().enumerate() {
+            if vr == 0.0 {
+                continue;
+            }
+            let row = &mat[r * self.n..(r + 1) * self.n];
+            for (o, &a) in out.iter_mut().zip(row) {
+                *o += a * vr;
+            }
+        }
+        out
+    }
+
+    pub fn sketch_sign(&self, w: &[f32]) -> Vec<f32> {
+        self.forward(w)
+            .into_iter()
+            .map(|z| if z >= 0.0 { 1.0 } else { -1.0 })
+            .collect()
+    }
+}
+
+/// Either projection, so algorithms can be generic over Appendix Fig. 3.
+#[derive(Clone, Debug)]
+pub enum Projection {
+    Srht(SrhtOperator),
+    Dense(DenseGaussianOperator),
+}
+
+impl Projection {
+    pub fn m(&self) -> usize {
+        match self {
+            Projection::Srht(op) => op.m,
+            Projection::Dense(op) => op.m,
+        }
+    }
+
+    pub fn forward(&self, w: &[f32]) -> Vec<f32> {
+        match self {
+            Projection::Srht(op) => op.forward(w),
+            Projection::Dense(op) => op.forward(w),
+        }
+    }
+
+    pub fn adjoint(&self, v: &[f32]) -> Vec<f32> {
+        match self {
+            Projection::Srht(op) => op.adjoint(v),
+            Projection::Dense(op) => op.adjoint(v),
+        }
+    }
+
+    pub fn sketch_sign(&self, w: &[f32]) -> Vec<f32> {
+        match self {
+            Projection::Srht(op) => op.sketch_sign(w),
+            Projection::Dense(op) => op.sketch_sign(w),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+    use crate::util::stats::dot;
+
+    #[test]
+    fn geometry() {
+        let op = SrhtOperator::from_seed(7, 1000, 100);
+        assert_eq!(op.npad, 1024);
+        assert_eq!(op.dsign.len(), 1024);
+        assert_eq!(op.sidx.len(), 100);
+        let mut sorted = op.sidx.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 100, "subsample indices must be distinct");
+        assert!((op.scale - (1024.0f32 / 100.0).sqrt()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn same_seed_same_operator() {
+        let a = SrhtOperator::from_seed(42, 500, 50);
+        let b = SrhtOperator::from_seed(42, 500, 50);
+        assert_eq!(a.dsign, b.dsign);
+        assert_eq!(a.sidx, b.sidx);
+    }
+
+    #[test]
+    fn adjoint_identity_property() {
+        // <Phi x, y> == <x, Phi^T y>
+        check("srht_adjoint_identity", 40, |rng| {
+            let n = rng.below(800) + 2;
+            let m = rng.below(n.min(200)) + 1;
+            let op = SrhtOperator::from_seed(rng.next_u64(), n, m);
+            let x: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let y: Vec<f32> = (0..m).map(|_| rng.normal()).collect();
+            let lhs = dot(&op.forward(&x), &y);
+            let rhs = dot(&x, &op.adjoint(&y));
+            if (lhs - rhs).abs() > 1e-3 * lhs.abs().max(1.0) {
+                return Err(format!("lhs {lhs} rhs {rhs}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn linearity_property() {
+        check("srht_linearity", 30, |rng| {
+            let n = rng.below(500) + 2;
+            let m = (n / 10).max(1);
+            let op = SrhtOperator::from_seed(rng.next_u64(), n, m);
+            let a: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let b: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let combo: Vec<f32> = a.iter().zip(&b).map(|(x, y)| 2.0 * x - y).collect();
+            let lhs = op.forward(&combo);
+            let fa = op.forward(&a);
+            let fb = op.forward(&b);
+            for i in 0..m {
+                let want = 2.0 * fa[i] - fb[i];
+                if (lhs[i] - want).abs() > 1e-3 * want.abs().max(1.0) {
+                    return Err(format!("i={i}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn spectral_norm_bound_lemma2() {
+        // ||Phi w|| <= sqrt(n'/m) ||w|| for all w; equality is attainable.
+        check("srht_norm_bound", 30, |rng| {
+            let n = rng.below(400) + 2;
+            let m = (n / 5).max(1);
+            let op = SrhtOperator::from_seed(rng.next_u64(), n, m);
+            let w: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let zn = crate::util::stats::l2_norm(&op.forward(&w));
+            let wn = crate::util::stats::l2_norm(&w);
+            let bound = (op.npad as f64 / op.m as f64).sqrt() * wn;
+            if zn > bound * (1.0 + 1e-4) {
+                return Err(format!("||Phi w||={zn} > bound {bound}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn rotate_inverse_round_trip() {
+        let mut rng = Rng::new(3);
+        let n = 300;
+        let op = SrhtOperator::from_seed(5, n, 30);
+        let w: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let back = op.rotate_inverse(&op.rotate(&w));
+        for i in 0..n {
+            assert!((back[i] - w[i]).abs() < 1e-4, "i={i}");
+        }
+    }
+
+    #[test]
+    fn sign_sketch_is_pm_one() {
+        let mut rng = Rng::new(4);
+        let op = SrhtOperator::from_seed(6, 128, 16);
+        let w: Vec<f32> = (0..128).map(|_| rng.normal()).collect();
+        assert!(op.sketch_sign(&w).iter().all(|&z| z == 1.0 || z == -1.0));
+    }
+
+    #[test]
+    fn dense_gaussian_adjoint_identity() {
+        let mut rng = Rng::new(8);
+        let (n, m) = (200, 20);
+        let op = DenseGaussianOperator::from_seed(9, n, m);
+        let x: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let y: Vec<f32> = (0..m).map(|_| rng.normal()).collect();
+        let lhs = dot(&op.forward(&x), &y);
+        let rhs = dot(&x, &op.adjoint(&y));
+        assert!((lhs - rhs).abs() < 1e-3 * lhs.abs().max(1.0), "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn dense_gaussian_norm_concentration() {
+        // E||Gw||^2 = ||w||^2 with 1/m variance rows — loose 30% check.
+        let mut rng = Rng::new(10);
+        let (n, m) = (400, 200);
+        let op = DenseGaussianOperator::from_seed(11, n, m);
+        let w: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let zn = crate::util::stats::l2_norm(&op.forward(&w));
+        let wn = crate::util::stats::l2_norm(&w);
+        assert!((zn / wn - 1.0).abs() < 0.3, "ratio {}", zn / wn);
+    }
+}

@@ -1,0 +1,186 @@
+//! Minimal argv parser (clap is unavailable offline — DESIGN.md §2).
+//!
+//! Grammar: `pfed1bs <subcommand> [--key value | --key=value | --flag] ...`
+//! Unknown keys are an error (catches typos in experiment scripts).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed command line: one positional subcommand + key/value options.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    opts: BTreeMap<String, String>,
+    /// keys the program has read — for unknown-option detection
+    seen: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of argv tokens (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                let (key, val) = if let Some((k, v)) = stripped.split_once('=') {
+                    (k.to_string(), v.to_string())
+                } else if it
+                    .peek()
+                    .map(|nxt| !nxt.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    (stripped.to_string(), it.next().unwrap())
+                } else {
+                    // bare flag
+                    (stripped.to_string(), "true".to_string())
+                };
+                if key.is_empty() {
+                    bail!("empty option name in `{tok}`");
+                }
+                if args.opts.insert(key.clone(), val).is_some() {
+                    bail!("duplicate option --{key}");
+                }
+            } else if args.subcommand.is_none() {
+                args.subcommand = Some(tok);
+            } else {
+                bail!("unexpected positional argument `{tok}`");
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    fn mark(&self, key: &str) {
+        self.seen.borrow_mut().push(key.to_string());
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.mark(key);
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<T>()
+                .map_err(|e| anyhow::anyhow!("--{key}={v}: {e}")),
+        }
+    }
+
+    pub fn required(&self, key: &str) -> Result<&str> {
+        self.get(key).with_context(|| format!("missing required --{key}"))
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Error if any provided option was never read by the program.
+    pub fn reject_unknown(&self) -> Result<()> {
+        let seen = self.seen.borrow();
+        let unknown: Vec<&String> = self
+            .opts
+            .keys()
+            .filter(|k| !seen.iter().any(|s| s == *k))
+            .collect();
+        if !unknown.is_empty() {
+            bail!(
+                "unknown option(s): {}",
+                unknown
+                    .iter()
+                    .map(|k| format!("--{k}"))
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            );
+        }
+        Ok(())
+    }
+
+    /// All options as (key, value). Marks every key as seen: callers of
+    /// `all()` (e.g. `RunConfig::apply_args`) do their own unknown-key
+    /// validation.
+    pub fn all(&self) -> impl Iterator<Item = (&str, &str)> {
+        for k in self.opts.keys() {
+            self.mark(k);
+        }
+        self.opts.iter().map(|(k, v)| (k.as_str(), v.as_str()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Result<Args> {
+        Args::parse(toks.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse(&["train", "--alg", "pfed1bs", "--rounds=30", "--verbose"]).unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.get("alg"), Some("pfed1bs"));
+        assert_eq!(a.parse_or("rounds", 0usize).unwrap(), 30);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn negative_number_values() {
+        // a value starting with '-' but not '--' is consumed as a value
+        let a = parse(&["x", "--shift", "-0.5"]).unwrap();
+        assert_eq!(a.parse_or("shift", 0.0f64).unwrap(), -0.5);
+    }
+
+    #[test]
+    fn duplicate_option_rejected() {
+        assert!(parse(&["x", "--a", "1", "--a", "2"]).is_err());
+    }
+
+    #[test]
+    fn extra_positional_rejected() {
+        assert!(parse(&["x", "y"]).is_err());
+    }
+
+    #[test]
+    fn defaults_and_required() {
+        let a = parse(&["t"]).unwrap();
+        assert_eq!(a.str_or("missing", "dflt"), "dflt");
+        assert!(a.required("gone").is_err());
+        assert_eq!(a.parse_or("k", 7u32).unwrap(), 7);
+    }
+
+    #[test]
+    fn bad_parse_reports_key() {
+        let a = parse(&["t", "--rounds", "abc"]).unwrap();
+        let err = a.parse_or("rounds", 0usize).unwrap_err().to_string();
+        assert!(err.contains("rounds"), "{err}");
+    }
+
+    #[test]
+    fn reject_unknown_flags_typos() {
+        let a = parse(&["t", "--roundz", "5"]).unwrap();
+        let _ = a.parse_or("rounds", 0usize);
+        assert!(a.reject_unknown().is_err());
+    }
+
+    #[test]
+    fn flag_forms() {
+        let a = parse(&["t", "--x=true", "--y=yes", "--z=false"]).unwrap();
+        assert!(a.flag("x"));
+        assert!(a.flag("y"));
+        assert!(!a.flag("z"));
+    }
+}

@@ -1,0 +1,85 @@
+//! Leveled stderr logger controlled by `PFED1BS_LOG` (error|warn|info|debug|trace).
+//!
+//! Deliberately tiny: no timestamps by default (experiments capture their
+//! own timings), one global level read once.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::Once;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(2);
+static INIT: Once = Once::new();
+
+pub fn init_from_env() {
+    INIT.call_once(|| {
+        if let Ok(v) = std::env::var("PFED1BS_LOG") {
+            set_level(match v.to_ascii_lowercase().as_str() {
+                "error" => Level::Error,
+                "warn" => Level::Warn,
+                "info" => Level::Info,
+                "debug" => Level::Debug,
+                "trace" => Level::Trace,
+                _ => Level::Info,
+            });
+        }
+    });
+}
+
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+pub fn enabled(l: Level) -> bool {
+    (l as u8) <= LEVEL.load(Ordering::Relaxed)
+}
+
+pub fn log(l: Level, msg: std::fmt::Arguments) {
+    if enabled(l) {
+        eprintln!("[{}] {}", tag(l), msg);
+    }
+}
+
+fn tag(l: Level) -> &'static str {
+    match l {
+        Level::Error => "error",
+        Level::Warn => "warn",
+        Level::Info => "info",
+        Level::Debug => "debug",
+        Level::Trace => "trace",
+    }
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => { $crate::util::log::log($crate::util::log::Level::Info, format_args!($($arg)*)) };
+}
+#[macro_export]
+macro_rules! warn_ {
+    ($($arg:tt)*) => { $crate::util::log::log($crate::util::log::Level::Warn, format_args!($($arg)*)) };
+}
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => { $crate::util::log::log($crate::util::log::Level::Debug, format_args!($($arg)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_gating() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info); // restore default for other tests
+    }
+}

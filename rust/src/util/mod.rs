@@ -1,0 +1,9 @@
+//! Tooling substrates built in-tree because the offline crate mirror only
+//! carries the `xla` dependency closure (DESIGN.md §2): PRNG, CLI parsing,
+//! statistics, logging, property-test driver.
+
+pub mod cli;
+pub mod log;
+pub mod proptest;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,92 @@
+//! Tiny property-testing driver (proptest is unavailable offline).
+//!
+//! `check(seed, cases, |rng| ...)` runs a closure over many seeded RNG
+//! streams; on failure it reports the failing case index and the child
+//! seed so the case can be replayed deterministically:
+//!
+//! ```
+//! use pfed1bs::util::proptest::check;
+//! check("sort_idempotent", 100, |rng| {
+//!     let mut v: Vec<u32> = (0..rng.below(50)).map(|_| rng.next_u32()).collect();
+//!     v.sort_unstable();
+//!     let w = { let mut w = v.clone(); w.sort_unstable(); w };
+//!     if v == w { Ok(()) } else { Err("not idempotent".into()) }
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Run `cases` random trials of `prop`; panic with replay info on failure.
+///
+/// The per-case RNG is derived from the property name so adding cases to
+/// one property does not shift the random streams of another.
+pub fn check<F>(name: &str, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let base = fnv1a(name.as_bytes());
+    for case in 0..cases {
+        let child_seed = base ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Rng::new(child_seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property `{name}` failed at case {case}/{cases} \
+                 (replay seed {child_seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Replay a single failing case by seed.
+pub fn replay<F>(seed: u64, mut prop: F) -> Result<(), String>
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    prop(&mut rng)
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut ran = 0;
+        check("always_ok", 25, |_| {
+            ran += 1;
+            Ok(())
+        });
+        assert_eq!(ran, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "replay seed")]
+    fn failing_property_reports_seed() {
+        check("always_fails", 3, |_| Err("boom".into()));
+    }
+
+    #[test]
+    fn replay_reproduces_stream() {
+        let mut first: Option<u64> = None;
+        let _ = replay(0xdead_beef, |rng| {
+            first = Some(rng.next_u64());
+            Ok(())
+        });
+        let mut second: Option<u64> = None;
+        let _ = replay(0xdead_beef, |rng| {
+            second = Some(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

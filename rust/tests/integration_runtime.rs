@@ -1,0 +1,123 @@
+//! Cross-language integration: the rust SRHT mirror and the AOT HLO
+//! artifacts must realize the *same* operator, and the artifact outputs
+//! must satisfy the paper's algebraic identities.
+//!
+//! Requires `make artifacts` (skips gracefully otherwise).
+//!
+//! Note: PJRT handles are not Send/Sync (the xla crate wraps raw
+//! pointers), so each #[test] — which cargo runs on its own thread —
+//! builds its own client; checks are grouped to amortize compilation.
+
+use pfed1bs::runtime::{ModelRuntime, Runtime};
+use pfed1bs::sketch::SrhtOperator;
+use pfed1bs::util::rng::Rng;
+
+fn artifacts_available() -> bool {
+    std::path::Path::new("artifacts/manifest.txt").exists()
+}
+
+fn load_model() -> (ModelRuntime, SrhtOperator) {
+    let rt = Runtime::new("artifacts").expect("runtime");
+    let info = rt.manifest.get("client_step", "mlp784").expect("manifest");
+    let op = SrhtOperator::from_seed(999, info.n, info.m);
+    let model = rt.model("mlp784", &op).expect("model");
+    (model, op)
+}
+
+fn rand_w(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| 0.1 * rng.normal()).collect()
+}
+
+#[test]
+fn hlo_artifacts_agree_with_rust_mirror_and_each_other() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let (m, op) = load_model();
+    let g = m.geom;
+    let mut rng = Rng::new(1);
+
+    // (a) HLO sketch == rust mirror sketch, bit-for-bit (up to exact-zero
+    // crossings where f32 summation order may differ)
+    for trial in 0..3 {
+        let w = rand_w(&mut rng, g.n);
+        let hlo = m.sketch_sign(&w).expect("hlo sketch");
+        let rust = op.sketch_sign(&w);
+        let diff = hlo.iter().zip(&rust).filter(|(a, b)| a != b).count();
+        assert!(
+            diff <= g.m / 1000,
+            "trial {trial}: {diff}/{} sketch bits differ",
+            g.m
+        );
+    }
+
+    // (b) client_step with lambda=0 == sgd_step exactly
+    let w = rand_w(&mut rng, g.n);
+    let x: Vec<f32> = (0..g.train_batch * g.input_dim).map(|_| rng.normal()).collect();
+    let y: Vec<i32> = (0..g.train_batch).map(|_| rng.below(g.classes) as i32).collect();
+    let v = vec![1.0f32; g.m];
+    let (a, la) = m.client_step(&w, &x, &y, &v, 0.1, 0.0, 1e-5, 1e4).unwrap();
+    let (b, lb) = m.sgd_step(&w, &x, &y, 0.1, 1e-5).unwrap();
+    assert!((la - lb).abs() < 1e-5);
+    let max_diff = a.iter().zip(&b).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max);
+    assert!(max_diff < 1e-5, "lambda=0 mismatch {max_diff}");
+
+    // (c) geometry mismatch rejected
+    let rt = Runtime::new("artifacts").expect("runtime");
+    let bad_op = SrhtOperator::from_seed(1, 100, 10);
+    assert!(rt.model("mlp784", &bad_op).is_err());
+}
+
+#[test]
+fn client_step_descends_and_grad_norm_shrinks() {
+    if !artifacts_available() {
+        return;
+    }
+    let (m, _) = load_model();
+    let g = m.geom;
+    let mut rng = Rng::new(2);
+    let mut w = rand_w(&mut rng, g.n);
+    let x: Vec<f32> = (0..g.train_batch * g.input_dim).map(|_| rng.normal()).collect();
+    let y: Vec<i32> = (0..g.train_batch).map(|_| rng.below(g.classes) as i32).collect();
+    let v = vec![0.0f32; g.m];
+
+    let (w1, loss1) = m.client_step(&w, &x, &y, &v, 0.05, 5e-4, 1e-5, 1e4).unwrap();
+    assert_eq!(w1.len(), g.n);
+    assert!(loss1.is_finite() && loss1 > 0.0);
+    assert!(w1.iter().zip(&w).any(|(a, b)| a != b), "step must move w");
+    let (_, loss2) = m.client_step(&w1, &x, &y, &v, 0.05, 5e-4, 1e-5, 1e4).unwrap();
+    assert!(loss2 <= loss1 + 1e-3, "same-batch loss went up: {loss1} -> {loss2}");
+
+    // Theorem-1 diagnostic: same-batch gradient norm shrinks with training
+    let gn0 = m.grad_norm(&w, &x, &y, &v, 5e-4, 1e-5, 1e4).unwrap();
+    assert!(gn0.is_finite() && gn0 > 0.0);
+    for _ in 0..20 {
+        let (w_next, _) = m.client_step(&w, &x, &y, &v, 0.05, 5e-4, 1e-5, 1e4).unwrap();
+        w = w_next;
+    }
+    let gn1 = m.grad_norm(&w, &x, &y, &v, 5e-4, 1e-5, 1e4).unwrap();
+    assert!(gn1 < gn0, "gradient norm did not shrink: {gn0} -> {gn1}");
+}
+
+#[test]
+fn eval_batch_masks_padding_rows() {
+    if !artifacts_available() {
+        return;
+    }
+    let (m, _) = load_model();
+    let g = m.geom;
+    let mut rng = Rng::new(4);
+    let w = rand_w(&mut rng, g.n);
+    let x: Vec<f32> = (0..g.eval_batch * g.input_dim).map(|_| rng.normal()).collect();
+    let mut y: Vec<i32> = (0..g.eval_batch).map(|_| rng.below(g.classes) as i32).collect();
+
+    let (c_full, l_full) = m.eval_batch(&w, &x, &y).unwrap();
+    for yi in y.iter_mut().skip(g.eval_batch / 2) {
+        *yi = -1;
+    }
+    let (c_half, l_half) = m.eval_batch(&w, &x, &y).unwrap();
+    assert!(c_half <= c_full);
+    assert!(l_half <= l_full + 1e-3);
+    assert!(c_half <= (g.eval_batch / 2) as f32);
+}

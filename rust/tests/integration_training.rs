@@ -1,0 +1,154 @@
+//! End-to-end training integration: every algorithm must run rounds
+//! against the real PJRT runtime, learn above chance on a short horizon,
+//! and produce communication-ledger numbers consistent with its Table-1
+//! capability row.
+//!
+//! Requires `make artifacts` (skips gracefully otherwise). PJRT handles
+//! are not Send/Sync, so each #[test] builds its own Lab; checks are
+//! grouped to amortize the multi-second artifact compilation.
+
+use pfed1bs::algorithms;
+use pfed1bs::config::RunConfig;
+use pfed1bs::coordinator::{evaluate, Coordinator};
+use pfed1bs::data::DatasetName;
+use pfed1bs::experiments::Lab;
+
+fn artifacts_available() -> bool {
+    std::path::Path::new("artifacts/manifest.txt").exists()
+}
+
+fn short_cfg(alg: &str) -> RunConfig {
+    let mut cfg = RunConfig::preset(DatasetName::Mnist);
+    cfg.algorithm = alg.to_string();
+    cfg.rounds = 4;
+    cfg.local_steps = 5;
+    cfg.eval_every = 3;
+    cfg.seed = 41;
+    cfg
+}
+
+#[test]
+fn all_algorithms_learn_and_ledger_matches_capabilities() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let lab = Lab::new("artifacts").expect("lab");
+
+    // (a) every algorithm learns above its chance floor in 4 rounds
+    let mut results = std::collections::HashMap::new();
+    for alg in ["pfed1bs", "local", "fedavg", "obcsaa", "zsignfed", "eden", "fedbat", "obda"] {
+        let result = lab.run(short_cfg(alg)).unwrap_or_else(|e| panic!("{alg}: {e:#}"));
+        let floor = match alg {
+            "pfed1bs" | "local" => 0.60,
+            // the stochastic-sign estimators start slowly (zSignFed
+            // reaches ~0.83 at the 100-round preset; see EXPERIMENTS.md)
+            "zsignfed" | "fedbat" => 0.10,
+            _ => 0.15,
+        };
+        assert!(
+            result.final_accuracy > floor,
+            "{alg}: accuracy {:.3} <= {floor}",
+            result.final_accuracy
+        );
+        assert_eq!(result.history.records.len(), 4);
+        results.insert(alg, result);
+    }
+
+    // (b) the paper's central short-horizon claim
+    assert!(
+        results["pfed1bs"].final_accuracy > results["obda"].final_accuracy,
+        "pfed1bs must beat the one-bit global baseline under label skew"
+    );
+
+    // (c) measured costs ordered per the capability matrix
+    let p = &results["pfed1bs"];
+    let o = &results["obda"];
+    let f = &results["fedavg"];
+    assert!(p.mean_round_mb < o.mean_round_mb / 4.0);
+    assert!(o.mean_round_mb < f.mean_round_mb / 8.0);
+    assert!(results["local"].mean_round_mb == 0.0);
+
+    // (d) pFed1BS bytes exactly = S·(uplink m-bit frame) + S·(downlink
+    // m-bit frame); round 0 skips the downlink (v⁰ = 0)
+    let cfg = short_cfg("pfed1bs");
+    let m = lab.executables("mlp784").unwrap().geom.m;
+    let per_msg = (5 + m.div_ceil(64) * 8) as u64;
+    let last = p.history.records.last().unwrap().bytes;
+    assert_eq!(last.total(), 2 * cfg.participating as u64 * per_msg);
+    let first = p.history.records.first().unwrap().bytes;
+    assert_eq!(first.total(), cfg.participating as u64 * per_msg);
+
+    // (e) FedAvg bytes exactly = 2 directions × S × dense frame
+    let n = lab.executables("mlp784").unwrap().geom.n;
+    let dense_msg = (5 + 4 * n) as u64;
+    let f_last = f.history.records.last().unwrap().bytes;
+    assert_eq!(f_last.total(), 2 * cfg.participating as u64 * dense_msg);
+}
+
+#[test]
+fn determinism_and_dense_projection_ablation() {
+    if !artifacts_available() {
+        return;
+    }
+    let lab = Lab::new("artifacts").expect("lab");
+
+    // same seed ⇒ identical trajectory
+    let a = lab.run(short_cfg("pfed1bs")).unwrap();
+    let b = lab.run(short_cfg("pfed1bs")).unwrap();
+    assert_eq!(a.final_accuracy, b.final_accuracy);
+    let la: Vec<f64> = a.history.records.iter().map(|r| r.train_loss).collect();
+    let lb: Vec<f64> = b.history.records.iter().map(|r| r.train_loss).collect();
+    assert_eq!(la, lb, "training trajectory must be seed-deterministic");
+
+    // Appendix Fig. 3: dense Gaussian projection tracks the FHT. The
+    // dense apply is O(mn) (that is the paper's whole point), so this
+    // check runs a minimal federation: 3 clients, 2 rounds, 2 steps.
+    let mut cfg_f = short_cfg("pfed1bs");
+    cfg_f.clients = 3;
+    cfg_f.participating = 3;
+    cfg_f.rounds = 2;
+    cfg_f.local_steps = 2;
+    cfg_f.eval_every = 1;
+    let mut cfg_d = cfg_f.clone();
+    cfg_d.projection = pfed1bs::config::ProjectionKind::DenseGaussian;
+    let f = lab.run(cfg_f).unwrap();
+    let d = lab.run(cfg_d).unwrap();
+    assert!(
+        (f.final_accuracy - d.final_accuracy).abs() < 0.15,
+        "fht {:.3} vs dense {:.3}",
+        f.final_accuracy,
+        d.final_accuracy
+    );
+}
+
+#[test]
+fn noisy_uplink_and_partial_participation() {
+    if !artifacts_available() {
+        return;
+    }
+    let lab = Lab::new("artifacts").expect("lab");
+
+    // 5% of sketch bits flip in transit: the 20-client majority vote must
+    // absorb it
+    let cfg = short_cfg("pfed1bs");
+    let model = lab.model_for(&cfg).unwrap();
+    let mut alg = algorithms::build("pfed1bs").unwrap();
+    let mut coord = Coordinator::new(cfg, &model);
+    coord.net.bit_flip_prob = 0.05;
+    let result = coord.run(alg.as_mut()).unwrap();
+    assert!(
+        result.final_accuracy > 0.6,
+        "accuracy {:.3} under 5% bit flips",
+        result.final_accuracy
+    );
+    let ev = evaluate(coord.model, &coord.data, alg.as_ref()).unwrap();
+    assert!((ev.accuracy - result.final_accuracy).abs() < 1e-9);
+
+    // S=5 of K=20 (Appendix Fig. 1 setting) still learns
+    let mut cfg = short_cfg("pfed1bs");
+    cfg.participating = 5;
+    cfg.rounds = 6;
+    let result = lab.run(cfg).unwrap();
+    assert!(result.final_accuracy > 0.5, "acc {:.3}", result.final_accuracy);
+}

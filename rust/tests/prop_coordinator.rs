@@ -1,0 +1,225 @@
+//! Property tests over coordinator-level invariants that do NOT need the
+//! PJRT runtime: client sampling, weight normalization, ledger symmetry,
+//! vote stability, codec/transport round trips, partition coverage.
+//! (Runtime-dependent invariants live in integration_training.rs.)
+
+use pfed1bs::comm::{encode, Payload, SimNetwork};
+use pfed1bs::data::{generate, DatasetName, DatasetSpec, Partition};
+use pfed1bs::sketch::bitpack::{majority_vote_weighted, pack_signs, unpack_signs};
+use pfed1bs::sketch::SrhtOperator;
+use pfed1bs::util::proptest::check;
+use pfed1bs::util::rng::Rng;
+
+fn small_spec(classes: usize) -> DatasetSpec {
+    DatasetSpec {
+        name: DatasetName::Mnist,
+        input_dim: 8,
+        classes,
+        noise: 0.5,
+        proto_scale: 2.0,
+        shift_scale: 0.3,
+        train_per_client: 12,
+        test_per_client: 6,
+        }
+}
+
+#[test]
+fn prop_sampled_clients_unique_and_weights_normalized() {
+    check("sampling_weights", 100, |rng| {
+        let k = rng.below(40) + 1;
+        let s = rng.below(k) + 1;
+        let selected = rng.sample_without_replacement(k, s);
+        let mut dedup = selected.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        if dedup.len() != s {
+            return Err("duplicate clients in a round".into());
+        }
+        // normalize arbitrary positive weights over the subset
+        let raw: Vec<f32> = selected.iter().map(|_| rng.f32() + 0.01).collect();
+        let total: f32 = raw.iter().sum();
+        let weights: Vec<f32> = raw.iter().map(|&p| p / total).collect();
+        let sum: f32 = weights.iter().sum();
+        if (sum - 1.0).abs() > 1e-4 {
+            return Err(format!("weights sum {sum}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_every_selected_client_updated_exactly_once() {
+    // the coordinator hands each selected id to the algorithm exactly
+    // once per round; model this with a counting 'algorithm'
+    check("one_update_per_client", 50, |rng| {
+        let k = rng.below(30) + 2;
+        let s = rng.below(k) + 1;
+        let mut counts = vec![0usize; k];
+        for &kid in &rng.sample_without_replacement(k, s) {
+            counts[kid] += 1;
+        }
+        if counts.iter().any(|&c| c > 1) {
+            return Err("client updated twice".into());
+        }
+        if counts.iter().filter(|&&c| c == 1).count() != s {
+            return Err("wrong update count".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_transport_preserves_sign_payloads_and_meters_bytes() {
+    check("transport_round_trip", 50, |rng| {
+        let m = rng.below(2000) + 1;
+        let signs: Vec<f32> = (0..m)
+            .map(|_| if rng.f32() < 0.5 { 1.0 } else { -1.0 })
+            .collect();
+        let mut net = SimNetwork::new(rng.next_u64());
+        let sent = Payload::Signs(signs);
+        let got = net.send_uplink(&sent).map_err(|e| e.to_string())?;
+        if got != sent {
+            return Err("clean channel altered payload".into());
+        }
+        let bytes = net.end_round();
+        if bytes.uplink != encode(&sent).len() as u64 {
+            return Err("ledger bytes != frame bytes".into());
+        }
+        if bytes.downlink != 0 {
+            return Err("phantom downlink".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_vote_unanimous_is_identity_and_stable_under_duplicates() {
+    check("vote_stability", 50, |rng| {
+        let m = rng.below(300) + 1;
+        let z: Vec<f32> = (0..m)
+            .map(|_| if rng.f32() < 0.5 { 1.0 } else { -1.0 })
+            .collect();
+        let packed = pack_signs(&z);
+        // unanimous clients: vote == the sketch, any weights
+        let kk = rng.below(6) + 1;
+        let sketches: Vec<Vec<u64>> = (0..kk).map(|_| packed.clone()).collect();
+        let mut w: Vec<f32> = (0..kk).map(|_| rng.f32() + 0.01).collect();
+        let t: f32 = w.iter().sum();
+        w.iter_mut().for_each(|x| *x /= t);
+        let vote = unpack_signs(&majority_vote_weighted(&sketches, &w, m), m);
+        if vote != z {
+            return Err("unanimous vote changed bits".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_vote_flips_with_weighted_majority() {
+    check("vote_majority_semantics", 50, |rng| {
+        let m = rng.below(100) + 1;
+        let plus = vec![1.0f32; m];
+        let minus = vec![-1.0f32; m];
+        let p_plus = rng.f32() * 0.98 + 0.01;
+        let weights = vec![p_plus, 1.0 - p_plus];
+        let sketches = vec![pack_signs(&plus), pack_signs(&minus)];
+        let vote = unpack_signs(&majority_vote_weighted(&sketches, &weights, m), m);
+        let want = if p_plus >= 0.5 { 1.0 } else { -1.0 };
+        if vote.iter().any(|&v| v != want) {
+            return Err(format!("p_plus={p_plus} vote wrong"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_partitions_cover_and_respect_bounds() {
+    check("partition_bounds", 40, |rng| {
+        let clients = rng.below(25) + 1;
+        let classes = rng.below(15) + 1;
+        let spec = small_spec(classes);
+        let per_client = rng.below(classes) + 1;
+        let fd = generate(
+            &spec,
+            clients,
+            &Partition::LabelShards { per_client },
+            rng.next_u64(),
+        );
+        if fd.num_clients() != clients {
+            return Err("client count".into());
+        }
+        let wsum: f32 = fd.weights.iter().sum();
+        if (wsum - 1.0).abs() > 1e-4 {
+            return Err(format!("weights sum {wsum}"));
+        }
+        for c in &fd.clients {
+            if c.train_len() != spec.train_per_client {
+                return Err("train size".into());
+            }
+            for &y in &c.train_y {
+                if !(0..classes as i32).contains(&y) {
+                    return Err(format!("label {y} out of range"));
+                }
+                if !c.classes.contains(&(y as usize)) {
+                    return Err("label outside client's shard".into());
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_srht_sketch_agreement_between_two_honest_parties() {
+    // the paper's seed-broadcast protocol: server and client building the
+    // operator from the same seed must produce identical sketches
+    check("seed_agreement", 30, |rng| {
+        let n = rng.below(500) + 10;
+        let m = (n / 10).max(1);
+        let seed = rng.next_u64();
+        let w: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let a = SrhtOperator::from_seed(seed, n, m).sketch_sign(&w);
+        let b = SrhtOperator::from_seed(seed, n, m).sketch_sign(&w);
+        if a != b {
+            return Err("same seed produced different sketches".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_bit_flip_noise_rate_is_calibrated() {
+    check("noise_rate", 10, |rng| {
+        let p = rng.f64() * 0.3;
+        let mut net = SimNetwork::new(rng.next_u64()).with_bit_flips(p);
+        let n = 20_000;
+        let sent = Payload::Signs(vec![1.0; n]);
+        let Payload::Signs(got) = net.send_uplink(&sent).map_err(|e| e.to_string())? else {
+            return Err("type".into());
+        };
+        let flipped = got.iter().filter(|&&s| s < 0.0).count() as f64 / n as f64;
+        if (flipped - p).abs() > 0.02 {
+            return Err(format!("flip rate {flipped} vs p={p}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rng_streams_disjoint_across_clients_and_rounds() {
+    check("stream_disjoint", 20, |rng| {
+        let mut root = Rng::new(rng.next_u64());
+        let a: Vec<u64> = {
+            let mut r = root.fork(1);
+            (0..16).map(|_| r.next_u64()).collect()
+        };
+        let b: Vec<u64> = {
+            let mut r = root.fork(2);
+            (0..16).map(|_| r.next_u64()).collect()
+        };
+        if a == b {
+            return Err("forked streams identical".into());
+        }
+        Ok(())
+    });
+}
