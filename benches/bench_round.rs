@@ -1,15 +1,19 @@
 //! End-to-end round latency per algorithm (the Table-2 wall-clock story):
 //! one full communication round — downlink, R local steps × S clients on
 //! the PJRT runtime, compression, uplink, server aggregation — measured
-//! through the real coordinator path.
+//! through the real coordinator protocol path.
+//!
+//! The client phase is the scaling surface: the pfed1bs/fedavg rows are
+//! repeated across a thread sweep (1 / 2 / all cores) to show client-
+//! phase wall-clock improving with thread count while staying
+//! bit-identical (rust/tests/integration_training.rs asserts identity).
 
-use pfed1bs::algorithms::{self, Ctx};
+use pfed1bs::algorithms;
 use pfed1bs::bench_harness::Bench;
 use pfed1bs::config::RunConfig;
 use pfed1bs::coordinator::Coordinator;
 use pfed1bs::data::DatasetName;
 use pfed1bs::experiments::Lab;
-use pfed1bs::util::rng::Rng;
 
 fn main() {
     if !std::path::Path::new("artifacts/manifest.txt").exists() {
@@ -22,41 +26,38 @@ fn main() {
     b.measure = std::time::Duration::from_secs(4);
     b.warmup = std::time::Duration::from_millis(500);
 
+    let cores = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    let mut sweeps: Vec<usize> = vec![1, 2, cores];
+    sweeps.sort_unstable();
+    sweeps.dedup();
+
     for alg_name in ["pfed1bs", "fedavg", "obda", "obcsaa", "zsignfed", "eden", "fedbat"] {
-        let mut cfg = RunConfig::preset(DatasetName::Mnist);
-        cfg.algorithm = alg_name.to_string();
-        cfg.local_steps = 5;
-        let model = lab.model_for(&cfg).expect("model");
-        let mut alg = algorithms::build(alg_name).expect("alg");
-        let mut coord = Coordinator::new(cfg.clone(), &model);
-        let mut rng = Rng::new(1);
-        {
-            let mut ctx = Ctx {
-                model: coord.model,
-                data: &coord.data,
-                cfg: &coord.cfg,
-                net: &mut coord.net,
-                rng: &mut rng,
-                projection: &coord.projection,
-            };
-            alg.init(&mut ctx).expect("init");
+        // the two headline algorithms get the full thread sweep
+        let threads: &[usize] = if alg_name == "pfed1bs" || alg_name == "fedavg" {
+            &sweeps
+        } else {
+            &sweeps[..1]
+        };
+        for &nthreads in threads {
+            let mut cfg = RunConfig::preset(DatasetName::Mnist);
+            cfg.algorithm = alg_name.to_string();
+            cfg.local_steps = 5;
+            cfg.client_threads = nthreads;
+            let model = lab.model_for(&cfg).expect("model");
+            let mut alg = algorithms::build(alg_name).expect("alg");
+            let mut coord = Coordinator::new(cfg.clone(), &model);
+            coord.init_algorithm(alg.as_mut()).expect("init");
+            let selected: Vec<usize> = (0..cfg.participating).collect();
+            let weights = vec![1.0f32 / cfg.participating as f32; cfg.participating];
+            let mut t = 0usize;
+            b.bench(&format!("{alg_name}/round(S=20,R=5,threads={nthreads})"), || {
+                coord
+                    .run_round(alg.as_mut(), t, &selected, &weights)
+                    .expect("round");
+                coord.net.end_round();
+                t += 1;
+            });
         }
-        let selected: Vec<usize> = (0..cfg.participating).collect();
-        let weights = vec![1.0f32 / cfg.participating as f32; cfg.participating];
-        let mut t = 0usize;
-        b.bench(&format!("{alg_name}/round(S=20,R=5)"), || {
-            let mut ctx = Ctx {
-                model: coord.model,
-                data: &coord.data,
-                cfg: &coord.cfg,
-                net: &mut coord.net,
-                rng: &mut rng,
-                projection: &coord.projection,
-            };
-            alg.round(t, &selected, &weights, &mut ctx).expect("round");
-            coord.net.end_round();
-            t += 1;
-        });
     }
     b.report();
 }

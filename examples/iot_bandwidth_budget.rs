@@ -5,8 +5,9 @@
 //! communication budget in MB, which algorithm reaches the best
 //! personalized accuracy?* Every algorithm trains until it exhausts the
 //! budget (not a fixed round count), so heavyweight methods get few
-//! rounds and one-bit methods get many. Optionally adds uplink bit-flip
-//! noise to model a lossy radio.
+//! rounds and one-bit methods get many. Optionally adds per-link
+//! bit-flip noise to model lossy radios (each client's channel corrupts
+//! independently).
 //!
 //! ```bash
 //! cargo run --release --example iot_bandwidth_budget [BUDGET_MB] [FLIP_PROB]
@@ -37,35 +38,17 @@ fn main() -> Result<()> {
         let mut coord = Coordinator::new(cfg, &model);
         coord.net.bit_flip_prob = flip;
 
-        // budget-terminated manual round loop
+        // budget-terminated manual round loop over the phased protocol
         let budget_bytes = (budget_mb * 1024.0 * 1024.0) as u64;
         let mut rounds = 0usize;
-        {
-            let mut ctx = pfed1bs::algorithms::Ctx {
-                model: coord.model,
-                data: &coord.data,
-                cfg: &coord.cfg,
-                net: &mut coord.net,
-                rng: &mut pfed1bs::util::rng::Rng::new(coord.cfg.seed),
-                projection: &coord.projection,
-            };
-            alg.init(&mut ctx)?;
-        }
+        coord.init_algorithm(alg.as_mut())?;
         let mut rng = pfed1bs::util::rng::Rng::new(coord.cfg.seed ^ 0xB0D6E7);
         while coord.net.ledger.total_bytes() < budget_bytes && rounds < 150 {
             let selected = rng.sample_without_replacement(coord.cfg.clients, coord.cfg.participating);
             let raw: Vec<f32> = selected.iter().map(|&k| coord.data.weights[k]).collect();
             let total: f32 = raw.iter().sum();
             let weights: Vec<f32> = raw.iter().map(|&p| p / total).collect();
-            let mut ctx = pfed1bs::algorithms::Ctx {
-                model: coord.model,
-                data: &coord.data,
-                cfg: &coord.cfg,
-                net: &mut coord.net,
-                rng: &mut rng,
-                projection: &coord.projection,
-            };
-            alg.round(rounds, &selected, &weights, &mut ctx)?;
+            coord.run_round(alg.as_mut(), rounds, &selected, &weights)?;
             coord.net.end_round();
             rounds += 1;
         }

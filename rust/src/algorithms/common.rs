@@ -4,7 +4,7 @@
 
 use anyhow::Result;
 
-use crate::algorithms::Ctx;
+use crate::algorithms::ClientCtx;
 use crate::data::BatchIter;
 use crate::util::rng::Rng;
 
@@ -20,8 +20,10 @@ pub fn init_params(n: usize, seed: u64) -> Vec<f32> {
 
 /// R plain local SGD steps from `w` on client `k`'s data (every baseline's
 /// ClientUpdate), with w device-resident across the steps (§Perf).
+/// Batches draw from a sub-stream forked off the client's own RNG, so the
+/// trajectory is a pure function of (seed, k, round) — parallel-safe.
 /// Returns the round-start task loss (batch 0) — the Fig.-4 metric.
-pub fn local_sgd(ctx: &mut Ctx, k: usize, w: &mut Vec<f32>, round: u64) -> Result<f64> {
+pub fn local_sgd(ctx: &mut ClientCtx, k: usize, w: &mut Vec<f32>, round: u64) -> Result<f64> {
     let cfg = ctx.cfg;
     let client = &ctx.data.clients[k];
     let mut batches = BatchIter::new(
@@ -48,7 +50,7 @@ pub fn local_sgd(ctx: &mut Ctx, k: usize, w: &mut Vec<f32>, round: u64) -> Resul
 /// `v` is the current consensus in {−1,0,+1}^m (0s only in round 0).
 /// Returns the round-start task loss (batch 0).
 pub fn local_pfed_steps(
-    ctx: &mut Ctx,
+    ctx: &mut ClientCtx,
     k: usize,
     w: &mut Vec<f32>,
     v: &[f32],
@@ -115,7 +117,8 @@ pub fn weighted_mean(vectors: &[Vec<f32>], weights: &[f32]) -> Vec<f32> {
     out
 }
 
-fn hash3(a: u64, b: u64, c: u64) -> u64 {
+/// Mix three words into one stream tag (client id × round × purpose).
+pub fn hash3(a: u64, b: u64, c: u64) -> u64 {
     let mut h = a ^ 0x9E37_79B9_7F4A_7C15;
     h = h.wrapping_mul(0xBF58_476D_1CE4_E5B9) ^ b.rotate_left(17);
     h = h.wrapping_mul(0x94D0_49BB_1331_11EB) ^ c.rotate_left(31);

@@ -14,7 +14,10 @@
 use anyhow::Result;
 
 use crate::algorithms::common::{axpy, delta, init_params, local_sgd, mean_abs};
-use crate::algorithms::{Algorithm, Capabilities, Ctx, RoundOutcome};
+use crate::algorithms::{
+    Algorithm, Capabilities, ClientCtx, ClientOutput, ClientStats, Downlink, InitCtx,
+    RoundOutcome, ServerCtx, Uplink,
+};
 use crate::comm::Payload;
 use crate::sketch::SrhtOperator;
 
@@ -27,6 +30,10 @@ pub struct Eden {
 impl Eden {
     pub fn new() -> Self {
         Eden { w: Vec::new(), rot: None }
+    }
+
+    fn rot(&self) -> &SrhtOperator {
+        self.rot.as_ref().expect("init not called")
     }
 }
 
@@ -51,7 +58,7 @@ impl Algorithm for Eden {
         }
     }
 
-    fn init(&mut self, ctx: &mut Ctx) -> Result<()> {
+    fn init(&mut self, ctx: &InitCtx) -> Result<()> {
         let n = ctx.model.geom.n;
         self.w = init_params(n, ctx.cfg.seed);
         // m is irrelevant for the rotation; reuse the SRHT plumbing
@@ -63,44 +70,58 @@ impl Algorithm for Eden {
         Ok(())
     }
 
-    fn round(
-        &mut self,
-        t: usize,
-        selected: &[usize],
-        weights: &[f32],
-        ctx: &mut Ctx,
-    ) -> Result<RoundOutcome> {
-        let rot = self.rot.as_ref().expect("init not called");
-        ctx.net
-            .broadcast_downlink(&Payload::Dense(self.w.clone()), selected.len())?;
+    fn server_broadcast(&self, t: usize) -> Option<Downlink> {
+        Some(Downlink::new(t, Payload::Dense(self.w.clone())))
+    }
 
+    fn client_round(
+        &self,
+        t: usize,
+        k: usize,
+        downlink: Option<&Downlink>,
+        ctx: &mut ClientCtx,
+    ) -> Result<ClientOutput> {
+        let Some(Downlink { payload: Payload::Dense(w0), .. }) = downlink else {
+            anyhow::bail!("eden requires a dense model downlink");
+        };
+        let mut wk = w0.clone();
+        let loss = local_sgd(ctx, k, &mut wk, t as u64)?;
+        let d = delta(&wk, w0);
+        let y = self.rot().rotate(&d); // H·D·pad(Δ), length n'
+        let alpha = mean_abs(&y);
+        let signs: Vec<f32> = y.iter().map(|&x| if x >= 0.0 { 1.0 } else { -1.0 }).collect();
+        Ok(ClientOutput {
+            client: k,
+            uplink: Some(Uplink::new(t, Payload::ScaledSigns { signs, scale: alpha })),
+            state: None,
+            stats: ClientStats { loss },
+        })
+    }
+
+    fn server_aggregate(
+        &mut self,
+        _t: usize,
+        _selected: &[usize],
+        weights: &[f32],
+        outputs: Vec<ClientOutput>,
+        _ctx: &ServerCtx,
+    ) -> Result<RoundOutcome> {
+        let rot = self.rot();
         let mut est_rotated = vec![0.0f32; rot.npad];
-        let mut loss_sum = 0.0f64;
-        for (&k, &p) in selected.iter().zip(weights) {
-            let mut wk = self.w.clone();
-            loss_sum += local_sgd(ctx, k, &mut wk, t as u64)?;
-            let d = delta(&wk, &self.w);
-            let y = rot.rotate(&d); // H·D·pad(Δ), length n'
-            let alpha = mean_abs(&y);
-            let signs: Vec<f32> = y.iter().map(|&x| if x >= 0.0 { 1.0 } else { -1.0 }).collect();
-            let delivered = ctx
-                .net
-                .send_uplink(&Payload::ScaledSigns { signs, scale: alpha })?;
-            let Payload::ScaledSigns { signs, scale } = delivered else {
-                anyhow::bail!("payload type changed in transit")
+        for (out, &p) in outputs.iter().zip(weights) {
+            let Some(Uplink { payload: Payload::ScaledSigns { signs, scale }, .. }) =
+                &out.uplink
+            else {
+                anyhow::bail!("eden uplink must be a scaled-sign payload");
             };
-            for (e, &s) in est_rotated.iter_mut().zip(&signs) {
+            for (e, &s) in est_rotated.iter_mut().zip(signs) {
                 *e += p * scale * s;
             }
         }
-
         // server: de-rotate the aggregated estimate and step
         let dhat = rot.rotate_inverse(&est_rotated);
         axpy(&mut self.w, 1.0, &dhat);
-
-        Ok(RoundOutcome {
-            train_loss: loss_sum / selected.len() as f64,
-        })
+        Ok(RoundOutcome::from_outputs(&outputs))
     }
 
     fn model_for(&self, _k: usize) -> &[f32] {

@@ -1,13 +1,16 @@
 //! FedAvg (McMahan et al. 2017) — the uncompressed reference point.
 //!
 //! Per round: full-precision model broadcast to each participant (32n
-//! bits each), R local SGD steps, full-precision upload, weighted server
-//! average over the participants.
+//! bits each), R local SGD steps from the *delivered* copy, full-
+//! precision upload, weighted server average over the delivered uploads.
 
 use anyhow::Result;
 
 use crate::algorithms::common::{init_params, local_sgd, weighted_mean};
-use crate::algorithms::{Algorithm, Capabilities, Ctx, RoundOutcome};
+use crate::algorithms::{
+    Algorithm, Capabilities, ClientCtx, ClientOutput, ClientStats, Downlink, InitCtx,
+    RoundOutcome, ServerCtx, Uplink,
+};
 use crate::comm::Payload;
 
 pub struct FedAvg {
@@ -41,41 +44,54 @@ impl Algorithm for FedAvg {
         }
     }
 
-    fn init(&mut self, ctx: &mut Ctx) -> Result<()> {
+    fn init(&mut self, ctx: &InitCtx) -> Result<()> {
         self.w = init_params(ctx.model.geom.n, ctx.cfg.seed);
         Ok(())
     }
 
-    fn round(
-        &mut self,
-        t: usize,
-        selected: &[usize],
-        weights: &[f32],
-        ctx: &mut Ctx,
-    ) -> Result<RoundOutcome> {
-        let _ = t;
-        // downlink: full model to each participant
-        ctx.net
-            .broadcast_downlink(&Payload::Dense(self.w.clone()), selected.len())?;
+    fn server_broadcast(&self, t: usize) -> Option<Downlink> {
+        // full model to each participant, every round
+        Some(Downlink::new(t, Payload::Dense(self.w.clone())))
+    }
 
-        let mut locals: Vec<Vec<f32>> = Vec::with_capacity(selected.len());
-        let mut loss_sum = 0.0f64;
-        for &k in selected {
-            let mut wk = self.w.clone();
-            loss_sum += local_sgd(ctx, k, &mut wk, t as u64)?;
-            // uplink: full model back
-            let delivered = ctx.net.send_uplink(&Payload::Dense(wk))?;
-            let Payload::Dense(wk) = delivered else {
-                anyhow::bail!("payload type changed in transit")
+    fn client_round(
+        &self,
+        t: usize,
+        k: usize,
+        downlink: Option<&Downlink>,
+        ctx: &mut ClientCtx,
+    ) -> Result<ClientOutput> {
+        let Some(Downlink { payload: Payload::Dense(w0), .. }) = downlink else {
+            anyhow::bail!("fedavg requires a dense model downlink");
+        };
+        let mut wk = w0.clone();
+        let loss = local_sgd(ctx, k, &mut wk, t as u64)?;
+        Ok(ClientOutput {
+            client: k,
+            uplink: Some(Uplink::new(t, Payload::Dense(wk))),
+            state: None,
+            stats: ClientStats { loss },
+        })
+    }
+
+    fn server_aggregate(
+        &mut self,
+        _t: usize,
+        _selected: &[usize],
+        weights: &[f32],
+        mut outputs: Vec<ClientOutput>,
+        _ctx: &ServerCtx,
+    ) -> Result<RoundOutcome> {
+        let mut locals: Vec<Vec<f32>> = Vec::with_capacity(outputs.len());
+        for out in outputs.iter_mut() {
+            let Some(Uplink { payload: Payload::Dense(wk), .. }) = out.uplink.take() else {
+                anyhow::bail!("fedavg uplink must be a dense payload");
             };
             locals.push(wk);
         }
-
         // server: w ← Σ p_k w_k
         self.w = weighted_mean(&locals, weights);
-        Ok(RoundOutcome {
-            train_loss: loss_sum / selected.len() as f64,
-        })
+        Ok(RoundOutcome::from_outputs(&outputs))
     }
 
     fn model_for(&self, _k: usize) -> &[f32] {

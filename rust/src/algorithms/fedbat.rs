@@ -8,12 +8,16 @@
 //! closed form with *stochastic* sign assignment near zero (FedBAT's
 //! stochastic binarization), preserving unbiasedness:
 //!     P[+α] = (1 + Δ/α_clip)/2   for |Δ| ≤ α_clip.
-//! Uplink: n bits + one f32 scale. Downlink: full-precision model.
+//! Uplink: n bits + one f32 scale. Downlink: full-precision model. The
+//! stochastic draws use the client's own RNG stream (parallel-safe).
 
 use anyhow::Result;
 
 use crate::algorithms::common::{axpy, delta, init_params, local_sgd, mean_abs};
-use crate::algorithms::{Algorithm, Capabilities, Ctx, RoundOutcome};
+use crate::algorithms::{
+    Algorithm, Capabilities, ClientCtx, ClientOutput, ClientStats, Downlink, InitCtx,
+    RoundOutcome, ServerCtx, Uplink,
+};
 use crate::comm::Payload;
 
 pub struct FedBat {
@@ -47,59 +51,73 @@ impl Algorithm for FedBat {
         }
     }
 
-    fn init(&mut self, ctx: &mut Ctx) -> Result<()> {
+    fn init(&mut self, ctx: &InitCtx) -> Result<()> {
         self.w = init_params(ctx.model.geom.n, ctx.cfg.seed);
         Ok(())
     }
 
-    fn round(
-        &mut self,
-        t: usize,
-        selected: &[usize],
-        weights: &[f32],
-        ctx: &mut Ctx,
-    ) -> Result<RoundOutcome> {
-        let n = ctx.model.geom.n;
-        ctx.net
-            .broadcast_downlink(&Payload::Dense(self.w.clone()), selected.len())?;
+    fn server_broadcast(&self, t: usize) -> Option<Downlink> {
+        Some(Downlink::new(t, Payload::Dense(self.w.clone())))
+    }
 
-        let mut est = vec![0.0f32; n];
-        let mut loss_sum = 0.0f64;
-        for (&k, &p) in selected.iter().zip(weights) {
-            let mut wk = self.w.clone();
-            loss_sum += local_sgd(ctx, k, &mut wk, t as u64)?;
-            let d = delta(&wk, &self.w);
-            let alpha = mean_abs(&d).max(1e-12);
-            // stochastic binarization: unbiased for |Δ| ≤ clip
-            let clip = 2.0 * alpha;
-            let signs: Vec<f32> = d
-                .iter()
-                .map(|&x| {
-                    let xc = x.clamp(-clip, clip);
-                    let p_plus = 0.5 * (1.0 + xc / clip);
-                    if ctx.rng.f32() < p_plus {
-                        1.0
-                    } else {
-                        -1.0
-                    }
-                })
-                .collect();
-            // scale `clip` makes E[clip·sign] = Δ (clamped)
-            let delivered = ctx
-                .net
-                .send_uplink(&Payload::ScaledSigns { signs, scale: clip })?;
-            let Payload::ScaledSigns { signs, scale } = delivered else {
-                anyhow::bail!("payload type changed in transit")
+    fn client_round(
+        &self,
+        t: usize,
+        k: usize,
+        downlink: Option<&Downlink>,
+        ctx: &mut ClientCtx,
+    ) -> Result<ClientOutput> {
+        let Some(Downlink { payload: Payload::Dense(w0), .. }) = downlink else {
+            anyhow::bail!("fedbat requires a dense model downlink");
+        };
+        let mut wk = w0.clone();
+        let loss = local_sgd(ctx, k, &mut wk, t as u64)?;
+        let d = delta(&wk, w0);
+        let alpha = mean_abs(&d).max(1e-12);
+        // stochastic binarization: unbiased for |Δ| ≤ clip
+        let clip = 2.0 * alpha;
+        let signs: Vec<f32> = d
+            .iter()
+            .map(|&x| {
+                let xc = x.clamp(-clip, clip);
+                let p_plus = 0.5 * (1.0 + xc / clip);
+                if ctx.rng.f32() < p_plus {
+                    1.0
+                } else {
+                    -1.0
+                }
+            })
+            .collect();
+        // scale `clip` makes E[clip·sign] = Δ (clamped)
+        Ok(ClientOutput {
+            client: k,
+            uplink: Some(Uplink::new(t, Payload::ScaledSigns { signs, scale: clip })),
+            state: None,
+            stats: ClientStats { loss },
+        })
+    }
+
+    fn server_aggregate(
+        &mut self,
+        _t: usize,
+        _selected: &[usize],
+        weights: &[f32],
+        outputs: Vec<ClientOutput>,
+        _ctx: &ServerCtx,
+    ) -> Result<RoundOutcome> {
+        let mut est = vec![0.0f32; self.w.len()];
+        for (out, &p) in outputs.iter().zip(weights) {
+            let Some(Uplink { payload: Payload::ScaledSigns { signs, scale }, .. }) =
+                &out.uplink
+            else {
+                anyhow::bail!("fedbat uplink must be a scaled-sign payload");
             };
-            for (e, &s) in est.iter_mut().zip(&signs) {
+            for (e, &s) in est.iter_mut().zip(signs) {
                 *e += p * scale * s;
             }
         }
-
         axpy(&mut self.w, 1.0, &est);
-        Ok(RoundOutcome {
-            train_loss: loss_sum / selected.len() as f64,
-        })
+        Ok(RoundOutcome::from_outputs(&outputs))
     }
 
     fn model_for(&self, _k: usize) -> &[f32] {

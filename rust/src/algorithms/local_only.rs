@@ -2,12 +2,17 @@
 //!
 //! Upper-bounds what personalization alone achieves without any
 //! collaboration — pFed1BS should beat it when the consensus carries
-//! useful signal (and must never pay more communication).
+//! useful signal (and must never pay more communication). In protocol
+//! terms: no downlink, no uplink — the client phase only advances the
+//! personalized state, which the aggregate phase writes back.
 
 use anyhow::Result;
 
 use crate::algorithms::common::{init_params, local_sgd};
-use crate::algorithms::{Algorithm, Capabilities, Ctx, RoundOutcome};
+use crate::algorithms::{
+    Algorithm, Capabilities, ClientCtx, ClientOutput, ClientStats, Downlink, InitCtx,
+    RoundOutcome, ServerCtx,
+};
 
 pub struct LocalOnly {
     wks: Vec<Vec<f32>>,
@@ -40,28 +45,47 @@ impl Algorithm for LocalOnly {
         }
     }
 
-    fn init(&mut self, ctx: &mut Ctx) -> Result<()> {
+    fn init(&mut self, ctx: &InitCtx) -> Result<()> {
         let w0 = init_params(ctx.model.geom.n, ctx.cfg.seed);
         self.wks = (0..ctx.data.num_clients()).map(|_| w0.clone()).collect();
         Ok(())
     }
 
-    fn round(
-        &mut self,
+    fn server_broadcast(&self, _t: usize) -> Option<Downlink> {
+        None
+    }
+
+    fn client_round(
+        &self,
         t: usize,
-        selected: &[usize],
-        _weights: &[f32],
-        ctx: &mut Ctx,
-    ) -> Result<RoundOutcome> {
-        let mut loss_sum = 0.0f64;
-        for &k in selected {
-            let mut w = std::mem::take(&mut self.wks[k]);
-            loss_sum += local_sgd(ctx, k, &mut w, t as u64)?;
-            self.wks[k] = w;
-        }
-        Ok(RoundOutcome {
-            train_loss: loss_sum / selected.len() as f64,
+        k: usize,
+        _downlink: Option<&Downlink>,
+        ctx: &mut ClientCtx,
+    ) -> Result<ClientOutput> {
+        let mut w = self.wks[k].clone();
+        let loss = local_sgd(ctx, k, &mut w, t as u64)?;
+        Ok(ClientOutput {
+            client: k,
+            uplink: None,
+            state: Some(w),
+            stats: ClientStats { loss },
         })
+    }
+
+    fn server_aggregate(
+        &mut self,
+        _t: usize,
+        _selected: &[usize],
+        _weights: &[f32],
+        mut outputs: Vec<ClientOutput>,
+        _ctx: &ServerCtx,
+    ) -> Result<RoundOutcome> {
+        for out in outputs.iter_mut() {
+            if let Some(w) = out.state.take() {
+                self.wks[out.client] = w;
+            }
+        }
+        Ok(RoundOutcome::from_outputs(&outputs))
     }
 
     fn model_for(&self, k: usize) -> &[f32] {

@@ -6,6 +6,33 @@
 //! and the same metered transport, so accuracy and communication numbers
 //! are directly comparable. Each file documents the fidelity of its
 //! re-implementation relative to the cited paper.
+//!
+//! # The phased round protocol (DESIGN.md §3)
+//!
+//! A communication round is an explicit message-passing protocol, not a
+//! monolithic callback. The coordinator owns the transport; algorithms
+//! implement four phases:
+//!
+//! 1. [`Algorithm::server_broadcast`] — compose the round's [`Downlink`]
+//!    (or `None`: pFed1BS round 0, OBDA, LocalOnly). The coordinator
+//!    transports one copy per participant through that client's channel,
+//!    so each recipient gets independently metered (and, under a noisy
+//!    channel, independently corrupted) delivery. The server's own state
+//!    is never routed through a channel.
+//! 2. [`Algorithm::client_round`] — one client's local work, `&self` +
+//!    an owned per-client RNG stream, so the coordinator executes all
+//!    participants data-parallel with results bit-identical to serial.
+//!    Returns a [`ClientOutput`]: optional [`Uplink`], optional updated
+//!    personalized state, and [`ClientStats`].
+//! 3. [`Algorithm::server_aggregate`] — consume the channel-delivered
+//!    uplinks (`&mut self`), update server/global state, and report the
+//!    [`RoundOutcome`].
+//! 4. [`Algorithm::server_notify`] — optional end-of-round broadcast
+//!    (OBDA ships the majority vote back so clients stay in sync).
+//!
+//! To add an algorithm, implement the four phases plus `model_for`, keep
+//! every byte you logically transmit inside a `Payload`, and register it
+//! in [`build`]. See DESIGN.md §4 for a walkthrough.
 
 pub mod common;
 pub mod eden;
@@ -19,7 +46,7 @@ pub mod zsignfed;
 
 use anyhow::Result;
 
-use crate::comm::SimNetwork;
+pub use crate::comm::{Downlink, Uplink};
 use crate::config::RunConfig;
 use crate::data::FederatedData;
 use crate::runtime::ModelRuntime;
@@ -36,16 +63,56 @@ pub struct Capabilities {
     pub personalization: bool,
 }
 
-/// Everything an algorithm touches during a round. The coordinator owns
-/// all of it; algorithms keep only their model state.
-pub struct Ctx<'a> {
+/// One-time-setup context: everything visible once geometry is known.
+pub struct InitCtx<'a> {
     pub model: &'a ModelRuntime,
     pub data: &'a FederatedData,
     pub cfg: &'a RunConfig,
-    pub net: &'a mut SimNetwork,
-    pub rng: &'a mut Rng,
     /// rust-side mirror of Φ (baselines + the dense-Gaussian ablation)
     pub projection: &'a Projection,
+}
+
+/// Per-client execution context for the data-parallel client phase.
+/// Owns this client's RNG stream (forked by the coordinator in selection
+/// order before the parallel section, so results are independent of
+/// thread count and scheduling).
+pub struct ClientCtx<'a> {
+    pub model: &'a ModelRuntime,
+    pub data: &'a FederatedData,
+    pub cfg: &'a RunConfig,
+    pub projection: &'a Projection,
+    pub rng: Rng,
+}
+
+/// Server-side aggregation context. Deliberately excludes the model
+/// runtime: server math is pure rust, which keeps the aggregation phase
+/// unit-testable without PJRT artifacts.
+pub struct ServerCtx<'a> {
+    pub cfg: &'a RunConfig,
+    pub projection: &'a Projection,
+}
+
+/// Per-client statistics reported from the client phase.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ClientStats {
+    /// round-start task loss on this client (Fig. 4 metric)
+    pub loss: f64,
+}
+
+/// Everything one client hands back at the end of its round phase.
+#[derive(Clone, Debug)]
+pub struct ClientOutput {
+    /// which client produced this (selection order is preserved by the
+    /// coordinator, so `outputs[i].client == selected[i]`)
+    pub client: usize,
+    /// message to the server; `None` = silent round (LocalOnly). The
+    /// coordinator replaces the payload with the channel-delivered copy
+    /// before `server_aggregate` sees it.
+    pub uplink: Option<Uplink>,
+    /// updated personalized state for algorithms that keep per-client
+    /// models; written back by `server_aggregate`, never transmitted
+    pub state: Option<Vec<f32>>,
+    pub stats: ClientStats,
 }
 
 /// Per-round result reported back to the coordinator.
@@ -55,23 +122,63 @@ pub struct RoundOutcome {
     pub train_loss: f64,
 }
 
-/// A federated learning algorithm under test.
-pub trait Algorithm {
+impl RoundOutcome {
+    /// Mean round-start loss over the participants. Empty participant
+    /// sets are rejected by `RunConfig::validate` before any round runs;
+    /// an empty slice here defensively yields 0.0 rather than NaN.
+    pub fn from_outputs(outputs: &[ClientOutput]) -> RoundOutcome {
+        if outputs.is_empty() {
+            return RoundOutcome { train_loss: 0.0 };
+        }
+        let sum: f64 = outputs.iter().map(|o| o.stats.loss).sum();
+        RoundOutcome { train_loss: sum / outputs.len() as f64 }
+    }
+}
+
+/// A federated learning algorithm under test, expressed as the phased
+/// message protocol of Algorithm 1 (module docs above). `Send + Sync`
+/// because the client phase runs data-parallel over `&self`.
+pub trait Algorithm: Send + Sync {
     fn name(&self) -> &'static str;
     fn capabilities(&self) -> Capabilities;
 
     /// One-time setup once geometry is known.
-    fn init(&mut self, ctx: &mut Ctx) -> Result<()>;
+    fn init(&mut self, ctx: &InitCtx) -> Result<()>;
 
-    /// Run communication round `t` over `selected` client ids with
-    /// aggregation weights `weights` (p_k normalized over the subset).
-    fn round(
+    /// Phase 1: compose round `t`'s broadcast (`None` = no downlink).
+    fn server_broadcast(&self, t: usize) -> Option<Downlink>;
+
+    /// Phase 2: client `k`'s local round. `downlink` is the copy this
+    /// client's channel delivered (possibly corrupted; `None` when the
+    /// server sent nothing). Must not touch state of other clients.
+    fn client_round(
+        &self,
+        t: usize,
+        k: usize,
+        downlink: Option<&Downlink>,
+        ctx: &mut ClientCtx,
+    ) -> Result<ClientOutput>;
+
+    /// Phase 3: aggregate the delivered uplinks of round `t`. `outputs`
+    /// preserves selection order and carries the weights' alignment:
+    /// `outputs[i]` corresponds to `selected[i]` / `weights[i]` (p_k
+    /// normalized over the subset).
+    fn server_aggregate(
         &mut self,
         t: usize,
         selected: &[usize],
         weights: &[f32],
-        ctx: &mut Ctx,
+        outputs: Vec<ClientOutput>,
+        ctx: &ServerCtx,
     ) -> Result<RoundOutcome>;
+
+    /// Phase 4 (optional): end-of-round broadcast, metered per recipient
+    /// like the pre-round broadcast. Delivered copies are discarded by
+    /// the simulated stateless clients (OBDA uses this to ship the
+    /// majority vote back).
+    fn server_notify(&self, _t: usize) -> Option<Downlink> {
+        None
+    }
 
     /// The parameter vector used to evaluate client k (personalized
     /// algorithms return per-client models; global ones return the shared
@@ -153,5 +260,18 @@ mod tests {
                 && p.download_one_bit
                 && p.personalization
         );
+    }
+
+    #[test]
+    fn round_outcome_mean_loss() {
+        let out = |loss: f64| ClientOutput {
+            client: 0,
+            uplink: None,
+            state: None,
+            stats: ClientStats { loss },
+        };
+        let o = RoundOutcome::from_outputs(&[out(1.0), out(3.0)]);
+        assert!((o.train_loss - 2.0).abs() < 1e-12);
+        assert_eq!(RoundOutcome::from_outputs(&[]).train_loss, 0.0);
     }
 }

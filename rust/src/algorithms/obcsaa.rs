@@ -12,7 +12,10 @@
 use anyhow::Result;
 
 use crate::algorithms::common::{axpy, delta, init_params, local_sgd};
-use crate::algorithms::{Algorithm, Capabilities, Ctx, RoundOutcome};
+use crate::algorithms::{
+    Algorithm, Capabilities, ClientCtx, ClientOutput, ClientStats, Downlink, InitCtx,
+    RoundOutcome, ServerCtx, Uplink,
+};
 use crate::comm::Payload;
 use crate::util::stats::l2_norm;
 
@@ -47,40 +50,58 @@ impl Algorithm for Obcsaa {
         }
     }
 
-    fn init(&mut self, ctx: &mut Ctx) -> Result<()> {
+    fn init(&mut self, ctx: &InitCtx) -> Result<()> {
         self.w = init_params(ctx.model.geom.n, ctx.cfg.seed);
         Ok(())
     }
 
-    fn round(
-        &mut self,
-        t: usize,
-        selected: &[usize],
-        weights: &[f32],
-        ctx: &mut Ctx,
-    ) -> Result<RoundOutcome> {
-        let m = ctx.model.geom.m;
-        // downlink: full-precision model to each participant
-        ctx.net
-            .broadcast_downlink(&Payload::Dense(self.w.clone()), selected.len())?;
+    fn server_broadcast(&self, t: usize) -> Option<Downlink> {
+        // full-precision model to each participant
+        Some(Downlink::new(t, Payload::Dense(self.w.clone())))
+    }
 
+    fn client_round(
+        &self,
+        t: usize,
+        k: usize,
+        downlink: Option<&Downlink>,
+        ctx: &mut ClientCtx,
+    ) -> Result<ClientOutput> {
+        let Some(Downlink { payload: Payload::Dense(w0), .. }) = downlink else {
+            anyhow::bail!("obcsaa requires a dense model downlink");
+        };
+        let mut wk = w0.clone();
+        let loss = local_sgd(ctx, k, &mut wk, t as u64)?;
+        let d = delta(&wk, w0);
+        let z = ctx.projection.sketch_sign(&d);
+        let norm = l2_norm(&d) as f32;
+        Ok(ClientOutput {
+            client: k,
+            uplink: Some(Uplink::new(t, Payload::ScaledSigns { signs: z, scale: norm })),
+            state: None,
+            stats: ClientStats { loss },
+        })
+    }
+
+    fn server_aggregate(
+        &mut self,
+        _t: usize,
+        _selected: &[usize],
+        weights: &[f32],
+        outputs: Vec<ClientOutput>,
+        ctx: &ServerCtx,
+    ) -> Result<RoundOutcome> {
+        let m = ctx.projection.m();
         let mut agg = vec![0.0f32; m];
         let mut norm_acc = 0.0f64;
-        let mut loss_sum = 0.0f64;
-        for (&k, &p) in selected.iter().zip(weights) {
-            let mut wk = self.w.clone();
-            loss_sum += local_sgd(ctx, k, &mut wk, t as u64)?;
-            let d = delta(&wk, &self.w);
-            let z = ctx.projection.sketch_sign(&d);
-            let norm = l2_norm(&d) as f32;
-            let delivered = ctx
-                .net
-                .send_uplink(&Payload::ScaledSigns { signs: z, scale: norm })?;
-            let Payload::ScaledSigns { signs, scale } = delivered else {
-                anyhow::bail!("payload type changed in transit")
+        for (out, &p) in outputs.iter().zip(weights) {
+            let Some(Uplink { payload: Payload::ScaledSigns { signs, scale }, .. }) =
+                &out.uplink
+            else {
+                anyhow::bail!("obcsaa uplink must be a scaled-sign payload");
             };
             norm_acc += (p * scale) as f64;
-            for (a, &s) in agg.iter_mut().zip(&signs) {
+            for (a, &s) in agg.iter_mut().zip(signs) {
                 *a += p * s;
             }
         }
@@ -96,10 +117,7 @@ impl Algorithm for Obcsaa {
             }
         }
         axpy(&mut self.w, 1.0, &dhat);
-
-        Ok(RoundOutcome {
-            train_loss: loss_sum / selected.len() as f64,
-        })
+        Ok(RoundOutcome::from_outputs(&outputs))
     }
 
     fn model_for(&self, _k: usize) -> &[f32] {

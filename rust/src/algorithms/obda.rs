@@ -8,23 +8,30 @@
 //! the paper's analog sign aggregation) and applies a *scaled* sign step,
 //! with the scale estimated from the clients' mean |Δ| (each client adds
 //! one f32 — 32 bits — to its uplink; without this, fixed-lr signSGD is a
-//! strawman). The server then broadcasts the n-bit vote so clients stay
-//! in sync — the 1-bit downlink of Table 1.
+//! strawman). The server then ships the n-bit vote back through
+//! `server_notify` so clients stay in sync — the 1-bit downlink of
+//! Table 1. There is no pre-round broadcast: clients start each round
+//! from the model they reconstructed at the previous round's end.
 
 use anyhow::Result;
 
 use crate::algorithms::common::{axpy, delta, init_params, local_sgd, mean_abs};
-use crate::algorithms::{Algorithm, Capabilities, Ctx, RoundOutcome};
+use crate::algorithms::{
+    Algorithm, Capabilities, ClientCtx, ClientOutput, ClientStats, Downlink, InitCtx,
+    RoundOutcome, ServerCtx, Uplink,
+};
 use crate::comm::Payload;
 use crate::sketch::bitpack::{majority_vote_weighted, pack_signs, unpack_signs};
 
 pub struct Obda {
     w: Vec<f32>,
+    /// last round's (vote, scale), broadcast via `server_notify`
+    last_vote: Option<(Vec<f32>, f32)>,
 }
 
 impl Obda {
     pub fn new() -> Self {
-        Obda { w: Vec::new() }
+        Obda { w: Vec::new(), last_vote: None }
     }
 }
 
@@ -49,48 +56,71 @@ impl Algorithm for Obda {
         }
     }
 
-    fn init(&mut self, ctx: &mut Ctx) -> Result<()> {
+    fn init(&mut self, ctx: &InitCtx) -> Result<()> {
         self.w = init_params(ctx.model.geom.n, ctx.cfg.seed);
+        self.last_vote = None;
         Ok(())
     }
 
-    fn round(
-        &mut self,
+    fn server_broadcast(&self, _t: usize) -> Option<Downlink> {
+        None // the 1-bit downlink is the post-round vote (server_notify)
+    }
+
+    fn client_round(
+        &self,
         t: usize,
-        selected: &[usize],
+        k: usize,
+        _downlink: Option<&Downlink>,
+        ctx: &mut ClientCtx,
+    ) -> Result<ClientOutput> {
+        let mut wk = self.w.clone();
+        let loss = local_sgd(ctx, k, &mut wk, t as u64)?;
+        let d = delta(&wk, &self.w);
+        let signs: Vec<f32> = d.iter().map(|&x| if x >= 0.0 { 1.0 } else { -1.0 }).collect();
+        // uplink: n-bit sign vector + one f32 magnitude estimate
+        Ok(ClientOutput {
+            client: k,
+            uplink: Some(Uplink::new(
+                t,
+                Payload::ScaledSigns { signs, scale: mean_abs(&d) },
+            )),
+            state: None,
+            stats: ClientStats { loss },
+        })
+    }
+
+    fn server_aggregate(
+        &mut self,
+        _t: usize,
+        _selected: &[usize],
         weights: &[f32],
-        ctx: &mut Ctx,
+        outputs: Vec<ClientOutput>,
+        _ctx: &ServerCtx,
     ) -> Result<RoundOutcome> {
-        let n = ctx.model.geom.n;
-        let mut sketches: Vec<Vec<u64>> = Vec::with_capacity(selected.len());
+        let n = self.w.len();
+        let mut sketches: Vec<Vec<u64>> = Vec::with_capacity(outputs.len());
         let mut scale_acc = 0.0f32;
-        let mut loss_sum = 0.0f64;
-        for (&k, &p) in selected.iter().zip(weights) {
-            let mut wk = self.w.clone();
-            loss_sum += local_sgd(ctx, k, &mut wk, t as u64)?;
-            let d = delta(&wk, &self.w);
-            let signs: Vec<f32> = d.iter().map(|&x| if x >= 0.0 { 1.0 } else { -1.0 }).collect();
-            // uplink: n-bit sign vector + one f32 magnitude estimate
-            let delivered = ctx
-                .net
-                .send_uplink(&Payload::ScaledSigns { signs, scale: mean_abs(&d) })?;
-            let Payload::ScaledSigns { signs, scale } = delivered else {
-                anyhow::bail!("payload type changed in transit")
+        for (out, &p) in outputs.iter().zip(weights) {
+            let Some(Uplink { payload: Payload::ScaledSigns { signs, scale }, .. }) =
+                &out.uplink
+            else {
+                anyhow::bail!("obda uplink must be a scaled-sign payload");
             };
             scale_acc += p * scale;
-            sketches.push(pack_signs(&signs));
+            sketches.push(pack_signs(signs));
         }
 
         // server: weighted majority vote, scaled sign step
         let vote = unpack_signs(&majority_vote_weighted(&sketches, weights, n), n);
         axpy(&mut self.w, scale_acc, &vote);
+        self.last_vote = Some((vote, scale_acc));
+        Ok(RoundOutcome::from_outputs(&outputs))
+    }
 
-        // downlink: broadcast the n-bit vote (clients apply the same step)
-        ctx.net
-            .broadcast_downlink(&Payload::ScaledSigns { signs: vote, scale: scale_acc }, selected.len())?;
-
-        Ok(RoundOutcome {
-            train_loss: loss_sum / selected.len() as f64,
+    fn server_notify(&self, t: usize) -> Option<Downlink> {
+        // broadcast the n-bit vote (clients apply the same step)
+        self.last_vote.as_ref().map(|(vote, scale)| {
+            Downlink::new(t, Payload::ScaledSigns { signs: vote.clone(), scale: *scale })
         })
     }
 

@@ -1,15 +1,20 @@
-//! pFed1BS — the paper's Algorithm 1.
+//! pFed1BS — the paper's Algorithm 1, phrased as the phased protocol.
 //!
 //! Per round t:
-//!   1. server broadcasts the m-bit consensus v^t to the S^t participants
-//!      (one-bit, dimension-reduced downlink);
-//!   2. every participant runs R local SGD steps on the smoothed
-//!      personalized objective F̃_k(w; v^t) (HLO `client_step`, whose
-//!      regularizer gradient is the fused Pallas SRHT kernel);
-//!   3. every participant uploads z_k = sign(Φ w_k^{t+1}) — m bits;
-//!   4. the server aggregates v^{t+1} = sign(Σ p_k z_k) — the exact
+//!   1. `server_broadcast`: the m-bit consensus v^t goes out to the S^t
+//!      participants (one-bit, dimension-reduced downlink); the
+//!      coordinator delivers each participant an independent copy
+//!      through its own channel. The server's v is NEVER replaced by a
+//!      channel-corrupted delivery — under the noisy-channel mode each
+//!      client trains against the copy *it* received, while the server
+//!      keeps the clean v (the bug the monolithic round() had);
+//!   2. `client_round`: R local SGD steps on the smoothed personalized
+//!      objective F̃_k(w; v^t) (HLO `client_step`, whose regularizer
+//!      gradient is the fused Pallas SRHT kernel), then upload
+//!      z_k = sign(Φ w_k^{t+1}) — m bits;
+//!   3. `server_aggregate`: v^{t+1} = sign(Σ p_k z_k) — the exact
 //!      minimizer of the server objective (Lemma 1) — as a packed
-//!      majority vote.
+//!      majority vote over the *delivered* (possibly noisy) uplinks.
 //!
 //! v⁰ = 0 (Algorithm 1 line 2): round 0 has no meaningful consensus, so
 //! the broadcast is skipped (the paper's initialization makes the
@@ -24,7 +29,10 @@
 use anyhow::Result;
 
 use crate::algorithms::common::{axpy, init_params, local_pfed_steps};
-use crate::algorithms::{Algorithm, Capabilities, Ctx, RoundOutcome};
+use crate::algorithms::{
+    Algorithm, Capabilities, ClientCtx, ClientOutput, ClientStats, Downlink, InitCtx,
+    RoundOutcome, ServerCtx, Uplink,
+};
 use crate::comm::Payload;
 use crate::config::ProjectionKind;
 use crate::data::BatchIter;
@@ -34,7 +42,8 @@ use crate::sketch::Projection;
 pub struct PFed1BS {
     /// personalized models w_k, all K clients
     wks: Vec<Vec<f32>>,
-    /// consensus vector v^t ∈ {−1,0,+1}^m (0 only at t=0)
+    /// consensus vector v^t ∈ {−1,0,+1}^m (0 only at t=0); server-side
+    /// state, never overwritten by a channel delivery
     v: Vec<f32>,
     projection_kind: ProjectionKind,
 }
@@ -48,31 +57,12 @@ impl PFed1BS {
         }
     }
 
-    /// R local steps + sketch for one client; dispatches on projection.
-    fn client_update(
-        &mut self,
-        ctx: &mut Ctx,
-        k: usize,
-        round: usize,
-    ) -> Result<(Vec<f32>, f64)> {
-        let mut w = std::mem::take(&mut self.wks[k]);
-        let loss = match self.projection_kind {
-            ProjectionKind::Fht => {
-                // fused HLO path: regularizer inside client_step
-                local_pfed_steps(ctx, k, &mut w, &self.v, round as u64)?
-            }
-            ProjectionKind::DenseGaussian => {
-                // ablation path: task+l2 step via HLO, dense reg grad in rust
-                dense_reg_steps(ctx, k, &mut w, &self.v, round as u64)?
-            }
-        };
-        // one-bit sketch of the updated personalized model
-        let z = match (self.projection_kind, ctx.projection) {
-            (ProjectionKind::Fht, _) => ctx.model.sketch_sign(&w)?,
-            (ProjectionKind::DenseGaussian, proj) => proj.sketch_sign(&w),
-        };
-        self.wks[k] = w;
-        Ok((z, loss))
+    /// Construct with explicit protocol state: the server-phase methods
+    /// (`server_broadcast`, `server_aggregate`) are pure rust, so tests
+    /// can drive them against hand-built state without the PJRT `init`
+    /// path.
+    pub fn with_state(wks: Vec<Vec<f32>>, v: Vec<f32>) -> Self {
+        PFed1BS { wks, v, projection_kind: ProjectionKind::Fht }
     }
 }
 
@@ -87,7 +77,7 @@ impl Default for PFed1BS {
 /// with both gradients at the same iterate — identical semantics to the
 /// fused HLO step, different Φ.
 fn dense_reg_steps(
-    ctx: &mut Ctx,
+    ctx: &mut ClientCtx,
     k: usize,
     w: &mut Vec<f32>,
     v: &[f32],
@@ -134,7 +124,7 @@ impl Algorithm for PFed1BS {
         }
     }
 
-    fn init(&mut self, ctx: &mut Ctx) -> Result<()> {
+    fn init(&mut self, ctx: &InitCtx) -> Result<()> {
         let n = ctx.model.geom.n;
         let m = ctx.model.geom.m;
         self.projection_kind = ctx.cfg.projection;
@@ -149,46 +139,81 @@ impl Algorithm for PFed1BS {
         Ok(())
     }
 
-    fn round(
-        &mut self,
+    fn server_broadcast(&self, t: usize) -> Option<Downlink> {
+        // skip at t=0 where v=0 by init; the payload is a CLONE of the
+        // server state, so no delivery can corrupt self.v
+        (t > 0).then(|| Downlink::new(t, Payload::Signs(self.v.clone())))
+    }
+
+    fn client_round(
+        &self,
         t: usize,
-        selected: &[usize],
-        weights: &[f32],
-        ctx: &mut Ctx,
-    ) -> Result<RoundOutcome> {
-        let m = ctx.model.geom.m;
-
-        // (1) downlink: broadcast v^t (skip at t=0 where v=0 by init)
-        if t > 0 {
-            let payload = Payload::Signs(self.v.clone());
-            let delivered = ctx.net.broadcast_downlink(&payload, selected.len())?;
-            // all participants receive the same consensus (possibly
-            // bit-flipped under a noisy channel) — use the first copy
-            if let Some(Payload::Signs(v)) = delivered.into_iter().next() {
-                self.v = v;
+        k: usize,
+        downlink: Option<&Downlink>,
+        ctx: &mut ClientCtx,
+    ) -> Result<ClientOutput> {
+        // the consensus THIS client received (its own channel's delivery,
+        // independently corrupted under noise); zeros when nothing came
+        let zeros;
+        let v: &[f32] = match downlink {
+            Some(d) => {
+                let Payload::Signs(v) = &d.payload else {
+                    anyhow::bail!("pfed1bs downlink must be a sign payload");
+                };
+                v
             }
-        }
+            None => {
+                zeros = vec![0.0f32; self.v.len()];
+                &zeros
+            }
+        };
+        let mut w = self.wks[k].clone();
+        let loss = match self.projection_kind {
+            ProjectionKind::Fht => {
+                // fused HLO path: regularizer inside client_step
+                local_pfed_steps(ctx, k, &mut w, v, t as u64)?
+            }
+            ProjectionKind::DenseGaussian => {
+                // ablation path: task+l2 step via HLO, dense reg grad in rust
+                dense_reg_steps(ctx, k, &mut w, v, t as u64)?
+            }
+        };
+        // one-bit sketch of the updated personalized model
+        let z = match self.projection_kind {
+            ProjectionKind::Fht => ctx.model.sketch_sign(&w)?,
+            ProjectionKind::DenseGaussian => ctx.projection.sketch_sign(&w),
+        };
+        Ok(ClientOutput {
+            client: k,
+            uplink: Some(Uplink::new(t, Payload::Signs(z))),
+            state: Some(w),
+            stats: ClientStats { loss },
+        })
+    }
 
-        // (2)+(3) client updates and one-bit uplinks
-        let mut sketches: Vec<Vec<u64>> = Vec::with_capacity(selected.len());
-        let mut loss_sum = 0.0f64;
-        for &k in selected {
-            let (z, loss) = self.client_update(ctx, k, t)?;
-            loss_sum += loss;
-            let delivered = ctx.net.send_uplink(&Payload::Signs(z))?;
-            let Payload::Signs(z) = delivered else {
-                anyhow::bail!("uplink payload type changed in transit")
+    fn server_aggregate(
+        &mut self,
+        _t: usize,
+        _selected: &[usize],
+        weights: &[f32],
+        mut outputs: Vec<ClientOutput>,
+        _ctx: &ServerCtx,
+    ) -> Result<RoundOutcome> {
+        let m = self.v.len();
+        let mut sketches: Vec<Vec<u64>> = Vec::with_capacity(outputs.len());
+        for out in outputs.iter_mut() {
+            if let Some(w) = out.state.take() {
+                self.wks[out.client] = w;
+            }
+            let Some(Uplink { payload: Payload::Signs(z), .. }) = &out.uplink else {
+                anyhow::bail!("pfed1bs uplink must be a sign payload");
             };
-            sketches.push(pack_signs(&z));
+            sketches.push(pack_signs(z));
         }
-
-        // (4) server: weighted majority vote (Lemma 1)
+        // weighted majority vote (Lemma 1) over the delivered sketches
         let vote = majority_vote_weighted(&sketches, weights, m);
         self.v = unpack_signs(&vote, m);
-
-        Ok(RoundOutcome {
-            train_loss: loss_sum / selected.len() as f64,
-        })
+        Ok(RoundOutcome::from_outputs(&outputs))
     }
 
     fn model_for(&self, k: usize) -> &[f32] {

@@ -7,12 +7,17 @@
 //! |Δ| ≤ c, so the server's c·(weighted mean of signs) is an unbiased
 //! estimate of the clamped update. c is set per client to
 //! `zsign_noise · max|Δ_k|` and shipped as one f32. Downlink is the
-//! full-precision model (as in the paper's comparison setting).
+//! full-precision model (as in the paper's comparison setting). The
+//! perturbation draws come from the client's own RNG stream, so the
+//! parallel client phase stays deterministic.
 
 use anyhow::Result;
 
 use crate::algorithms::common::{axpy, delta, init_params, local_sgd, mean_abs};
-use crate::algorithms::{Algorithm, Capabilities, Ctx, RoundOutcome};
+use crate::algorithms::{
+    Algorithm, Capabilities, ClientCtx, ClientOutput, ClientStats, Downlink, InitCtx,
+    RoundOutcome, ServerCtx, Uplink,
+};
 use crate::comm::Payload;
 
 pub struct ZSignFed {
@@ -46,61 +51,75 @@ impl Algorithm for ZSignFed {
         }
     }
 
-    fn init(&mut self, ctx: &mut Ctx) -> Result<()> {
+    fn init(&mut self, ctx: &InitCtx) -> Result<()> {
         self.w = init_params(ctx.model.geom.n, ctx.cfg.seed);
         Ok(())
     }
 
-    fn round(
-        &mut self,
-        t: usize,
-        selected: &[usize],
-        weights: &[f32],
-        ctx: &mut Ctx,
-    ) -> Result<RoundOutcome> {
-        let n = ctx.model.geom.n;
-        ctx.net
-            .broadcast_downlink(&Payload::Dense(self.w.clone()), selected.len())?;
+    fn server_broadcast(&self, t: usize) -> Option<Downlink> {
+        Some(Downlink::new(t, Payload::Dense(self.w.clone())))
+    }
 
-        let mut est = vec![0.0f32; n];
-        let mut loss_sum = 0.0f64;
-        for (&k, &p) in selected.iter().zip(weights) {
-            let mut wk = self.w.clone();
-            loss_sum += local_sgd(ctx, k, &mut wk, t as u64)?;
-            let d = delta(&wk, &self.w);
-            // perturbation scale from the MEAN |Δ|: with c = max|Δ| the
-            // unbiased estimator's per-coordinate variance is c², which
-            // for ~10^5-dim updates is ~400× the signal and diverges —
-            // mean-based c keeps E[sign(Δ+u)]·c ≈ Δ on the bulk of the
-            // coordinates at bounded variance (clipped tail bias).
-            let c = (ctx.cfg.zsign_noise * mean_abs(&d)).max(1e-12);
-            let signs: Vec<f32> = d
-                .iter()
-                .map(|&x| {
-                    let u = ctx.rng.range_f32(-c, c);
-                    if x + u >= 0.0 {
-                        1.0
-                    } else {
-                        -1.0
-                    }
-                })
-                .collect();
-            let delivered = ctx
-                .net
-                .send_uplink(&Payload::ScaledSigns { signs, scale: c })?;
-            let Payload::ScaledSigns { signs, scale } = delivered else {
-                anyhow::bail!("payload type changed in transit")
+    fn client_round(
+        &self,
+        t: usize,
+        k: usize,
+        downlink: Option<&Downlink>,
+        ctx: &mut ClientCtx,
+    ) -> Result<ClientOutput> {
+        let Some(Downlink { payload: Payload::Dense(w0), .. }) = downlink else {
+            anyhow::bail!("zsignfed requires a dense model downlink");
+        };
+        let mut wk = w0.clone();
+        let loss = local_sgd(ctx, k, &mut wk, t as u64)?;
+        let d = delta(&wk, w0);
+        // perturbation scale from the MEAN |Δ|: with c = max|Δ| the
+        // unbiased estimator's per-coordinate variance is c², which
+        // for ~10^5-dim updates is ~400× the signal and diverges —
+        // mean-based c keeps E[sign(Δ+u)]·c ≈ Δ on the bulk of the
+        // coordinates at bounded variance (clipped tail bias).
+        let c = (ctx.cfg.zsign_noise * mean_abs(&d)).max(1e-12);
+        let signs: Vec<f32> = d
+            .iter()
+            .map(|&x| {
+                let u = ctx.rng.range_f32(-c, c);
+                if x + u >= 0.0 {
+                    1.0
+                } else {
+                    -1.0
+                }
+            })
+            .collect();
+        Ok(ClientOutput {
+            client: k,
+            uplink: Some(Uplink::new(t, Payload::ScaledSigns { signs, scale: c })),
+            state: None,
+            stats: ClientStats { loss },
+        })
+    }
+
+    fn server_aggregate(
+        &mut self,
+        _t: usize,
+        _selected: &[usize],
+        weights: &[f32],
+        outputs: Vec<ClientOutput>,
+        _ctx: &ServerCtx,
+    ) -> Result<RoundOutcome> {
+        let mut est = vec![0.0f32; self.w.len()];
+        for (out, &p) in outputs.iter().zip(weights) {
+            let Some(Uplink { payload: Payload::ScaledSigns { signs, scale }, .. }) =
+                &out.uplink
+            else {
+                anyhow::bail!("zsignfed uplink must be a scaled-sign payload");
             };
             // server accumulates the unbiased per-client estimate c·z_k
-            for (e, &s) in est.iter_mut().zip(&signs) {
+            for (e, &s) in est.iter_mut().zip(signs) {
                 *e += p * scale * s;
             }
         }
-
         axpy(&mut self.w, 1.0, &est);
-        Ok(RoundOutcome {
-            train_loss: loss_sum / selected.len() as f64,
-        })
+        Ok(RoundOutcome::from_outputs(&outputs))
     }
 
     fn model_for(&self, _k: usize) -> &[f32] {

@@ -29,6 +29,16 @@ impl RoundBytes {
     pub fn total_mb(&self) -> f64 {
         self.total() as f64 / (1024.0 * 1024.0)
     }
+
+    /// Fold another counter into this one. Integer sums commute and are
+    /// exact, so merging per-client shards in any order yields totals
+    /// byte-identical to serial metering (DESIGN.md §5).
+    pub fn absorb(&mut self, other: RoundBytes) {
+        self.uplink += other.uplink;
+        self.downlink += other.downlink;
+        self.uplink_msgs += other.uplink_msgs;
+        self.downlink_msgs += other.downlink_msgs;
+    }
 }
 
 /// Accumulating ledger across rounds.
@@ -55,6 +65,11 @@ impl Ledger {
                 self.current.downlink_msgs += 1;
             }
         }
+    }
+
+    /// Fold a per-client channel shard into the current round.
+    pub fn merge_shard(&mut self, shard: RoundBytes) {
+        self.current.absorb(shard);
     }
 
     /// Close the current round and start a new one; returns the closed one.
@@ -143,5 +158,29 @@ mod tests {
         let l = Ledger::new();
         assert_eq!(l.mean_round_mb(), 0.0);
         assert_eq!(l.total_bytes(), 0);
+    }
+
+    #[test]
+    fn shard_merge_equals_serial_recording() {
+        // two clients metered on separate shards vs one serial ledger
+        let mut shard_a = RoundBytes::default();
+        shard_a.uplink += 100;
+        shard_a.uplink_msgs += 1;
+        shard_a.downlink += 40;
+        shard_a.downlink_msgs += 1;
+        let mut shard_b = RoundBytes::default();
+        shard_b.uplink += 7;
+        shard_b.uplink_msgs += 1;
+
+        let mut sharded = Ledger::new();
+        sharded.merge_shard(shard_b); // merge order must not matter
+        sharded.merge_shard(shard_a);
+
+        let mut serial = Ledger::new();
+        serial.record(Direction::Uplink, 100);
+        serial.record(Direction::Downlink, 40);
+        serial.record(Direction::Uplink, 7);
+
+        assert_eq!(sharded.end_round(), serial.end_round());
     }
 }

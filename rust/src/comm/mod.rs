@@ -1,10 +1,14 @@
-//! Simulated bidirectional communication substrate: wire codecs, exact
-//! byte ledger, and an in-process network with optional bit-flip noise.
+//! Simulated bidirectional communication substrate: wire codecs, typed
+//! protocol messages, exact per-client byte shards merged into one
+//! ledger, and an in-process network with independent per-link bit-flip
+//! noise (DESIGN.md §5).
 
 pub mod codec;
 pub mod ledger;
 pub mod network;
+pub mod protocol;
 
 pub use codec::{decode, encode, frame_bytes, Payload};
 pub use ledger::{Direction, Ledger, RoundBytes};
-pub use network::SimNetwork;
+pub use network::{Channel, SimNetwork};
+pub use protocol::{Downlink, Uplink};

@@ -1,24 +1,91 @@
-//! Simulated server<->client transport.
+//! Simulated server<->client transport: one metered channel per client.
 //!
 //! All traffic is encoded to real wire frames (codec.rs) and metered by
-//! the ledger before being "delivered" — so byte counts are measurements,
-//! not formulas, and any future swap to a socket transport keeps the same
-//! call sites. Optionally injects bit-flip noise into one-bit frames to
-//! model the unreliable links of the paper's motivating IoT/V2X settings
-//! (used by the `iot_bandwidth_budget` example's noisy-channel mode).
+//! the recipient's channel shard before being "delivered" — so byte
+//! counts are measurements, not formulas, and any future swap to a
+//! socket transport keeps the same call sites. Each client link carries
+//! its own noise RNG: under bit-flip noise (the unreliable IoT/V2X links
+//! of the paper's motivating setting) every recipient of a broadcast
+//! receives an *independently* corrupted copy, and the sender's own
+//! state is never touched. Per-round byte accounting merges the
+//! per-client shards into the [`Ledger`]; integer sums commute, so the
+//! merged totals are byte-identical to serial metering (DESIGN.md §5).
 
 use anyhow::Result;
 
 use crate::comm::codec::{decode, encode, Payload};
-use crate::comm::ledger::{Direction, Ledger};
-use crate::util::rng::Rng;
+use crate::comm::ledger::{Direction, Ledger, RoundBytes};
+use crate::util::rng::{splitmix64, Rng};
 
-/// In-process simulated network with exact byte metering.
+/// One client's link to the server: its own byte shard and noise stream.
+#[derive(Clone, Debug)]
+pub struct Channel {
+    shard: RoundBytes,
+    rng: Rng,
+}
+
+impl Channel {
+    fn new(seed: u64, client: usize) -> Channel {
+        // independent, client-indexed noise stream: per-link corruption
+        // must not depend on delivery order or on other links
+        let mut s = seed
+            ^ 0x4E45_5457_u64 // "NETW"
+            ^ (client as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        Channel { shard: RoundBytes::default(), rng: Rng::new(splitmix64(&mut s)) }
+    }
+
+    /// Bytes metered on this link in the current (open) round.
+    pub fn shard(&self) -> RoundBytes {
+        self.shard
+    }
+
+    fn take_shard(&mut self) -> RoundBytes {
+        std::mem::take(&mut self.shard)
+    }
+
+    fn transmit(&mut self, dir: Direction, payload: &Payload, flip_prob: f64) -> Result<Payload> {
+        let frame = encode(payload);
+        match dir {
+            Direction::Uplink => {
+                self.shard.uplink += frame.len() as u64;
+                self.shard.uplink_msgs += 1;
+            }
+            Direction::Downlink => {
+                self.shard.downlink += frame.len() as u64;
+                self.shard.downlink_msgs += 1;
+            }
+        }
+        let mut delivered = decode(&frame)?;
+        if flip_prob > 0.0 {
+            self.corrupt(&mut delivered, flip_prob);
+        }
+        Ok(delivered)
+    }
+
+    fn corrupt(&mut self, payload: &mut Payload, p: f64) {
+        let flip = |rng: &mut Rng, signs: &mut [f32]| {
+            for s in signs.iter_mut() {
+                if rng.f64() < p {
+                    *s = -*s;
+                }
+            }
+        };
+        match payload {
+            Payload::Signs(v) => flip(&mut self.rng, v),
+            Payload::ScaledSigns { signs, .. } => flip(&mut self.rng, signs),
+            Payload::Dense(_) => {} // full-precision links modeled clean
+        }
+    }
+}
+
+/// In-process simulated network: per-client channels with exact byte
+/// metering, merged into one ledger at round end.
 pub struct SimNetwork {
     pub ledger: Ledger,
     /// probability that each bit of a one-bit payload flips in transit
     pub bit_flip_prob: f64,
-    rng: Rng,
+    seed: u64,
+    channels: Vec<Channel>,
 }
 
 impl SimNetwork {
@@ -26,7 +93,8 @@ impl SimNetwork {
         SimNetwork {
             ledger: Ledger::new(),
             bit_flip_prob: 0.0,
-            rng: Rng::new(seed ^ 0x4E45_5457_u64), // "NETW"
+            seed,
+            channels: Vec::new(),
         }
     }
 
@@ -35,53 +103,44 @@ impl SimNetwork {
         self
     }
 
-    /// Client k -> server.
-    pub fn send_uplink(&mut self, payload: &Payload) -> Result<Payload> {
-        self.transmit(Direction::Uplink, payload)
+    /// The channel of client `k` (links materialize deterministically on
+    /// first use; the stream depends only on the seed and `k`).
+    pub fn channel(&mut self, k: usize) -> &mut Channel {
+        while self.channels.len() <= k {
+            let next = self.channels.len();
+            self.channels.push(Channel::new(self.seed, next));
+        }
+        &mut self.channels[k]
     }
 
-    /// Server -> one client (a broadcast is one call per recipient; the
-    /// paper's accounting counts delivered copies — DESIGN.md §5).
-    pub fn send_downlink(&mut self, payload: &Payload) -> Result<Payload> {
-        self.transmit(Direction::Downlink, payload)
+    /// Server -> client `k`. A broadcast is one call per recipient (the
+    /// paper's accounting counts delivered copies — DESIGN.md §5), each
+    /// corrupted independently by that recipient's link.
+    pub fn downlink_to(&mut self, k: usize, payload: &Payload) -> Result<Payload> {
+        let p = self.bit_flip_prob;
+        self.channel(k).transmit(Direction::Downlink, payload, p)
     }
 
-    /// Broadcast to `recipients` clients; returns the delivered payloads.
-    pub fn broadcast_downlink(
-        &mut self,
-        payload: &Payload,
-        recipients: usize,
-    ) -> Result<Vec<Payload>> {
-        (0..recipients).map(|_| self.send_downlink(payload)).collect()
+    /// Client `k` -> server.
+    pub fn uplink_from(&mut self, k: usize, payload: &Payload) -> Result<Payload> {
+        let p = self.bit_flip_prob;
+        self.channel(k).transmit(Direction::Uplink, payload, p)
     }
 
-    pub fn end_round(&mut self) -> crate::comm::ledger::RoundBytes {
+    /// Merge every channel's shard and close the round; returns the
+    /// round's merged totals.
+    pub fn end_round(&mut self) -> RoundBytes {
+        for ch in &mut self.channels {
+            let shard = ch.take_shard();
+            self.ledger.merge_shard(shard);
+        }
         self.ledger.end_round()
     }
 
-    fn transmit(&mut self, dir: Direction, payload: &Payload) -> Result<Payload> {
-        let frame = encode(payload);
-        self.ledger.record(dir, frame.len());
-        let mut delivered = decode(&frame)?;
-        if self.bit_flip_prob > 0.0 {
-            self.corrupt(&mut delivered);
-        }
-        Ok(delivered)
-    }
-
-    fn corrupt(&mut self, payload: &mut Payload) {
-        let flip = |rng: &mut Rng, signs: &mut [f32], p: f64| {
-            for s in signs.iter_mut() {
-                if rng.f64() < p {
-                    *s = -*s;
-                }
-            }
-        };
-        match payload {
-            Payload::Signs(v) => flip(&mut self.rng, v, self.bit_flip_prob),
-            Payload::ScaledSigns { signs, .. } => flip(&mut self.rng, signs, self.bit_flip_prob),
-            Payload::Dense(_) => {} // full-precision links modeled clean
-        }
+    /// Total bytes across closed rounds plus all open shards.
+    pub fn total_bytes(&self) -> u64 {
+        self.ledger.total_bytes()
+            + self.channels.iter().map(|c| c.shard.total()).sum::<u64>()
     }
 }
 
@@ -94,8 +153,8 @@ mod tests {
         let mut net = SimNetwork::new(0);
         let up = Payload::Signs(vec![1.0; 128]);
         let down = Payload::Dense(vec![0.5; 10]);
-        net.send_uplink(&up).unwrap();
-        net.send_downlink(&down).unwrap();
+        net.uplink_from(0, &up).unwrap();
+        net.downlink_to(1, &down).unwrap();
         let r = net.end_round();
         assert_eq!(r.uplink, 5 + 16); // 128 bits -> 16 bytes + header
         assert_eq!(r.downlink, 5 + 40);
@@ -105,7 +164,7 @@ mod tests {
     fn clean_channel_is_lossless() {
         let mut net = SimNetwork::new(1);
         let p = Payload::ScaledSigns { signs: vec![1.0, -1.0, 1.0], scale: 2.0 };
-        let got = net.send_uplink(&p).unwrap();
+        let got = net.uplink_from(3, &p).unwrap();
         assert_eq!(got, p);
     }
 
@@ -113,10 +172,34 @@ mod tests {
     fn broadcast_counts_per_recipient() {
         let mut net = SimNetwork::new(2);
         let v = Payload::Signs(vec![1.0; 64]);
-        net.broadcast_downlink(&v, 20).unwrap();
+        for k in 0..20 {
+            net.downlink_to(k, &v).unwrap();
+        }
         let r = net.end_round();
         assert_eq!(r.downlink_msgs, 20);
         assert_eq!(r.downlink, 20 * (5 + 8));
+    }
+
+    #[test]
+    fn shards_meter_per_client_and_merge_exactly() {
+        let mut net = SimNetwork::new(7);
+        let sig = Payload::Signs(vec![1.0; 64]); // 5 + 8 bytes
+        net.uplink_from(0, &sig).unwrap();
+        net.uplink_from(0, &sig).unwrap();
+        net.uplink_from(1, &sig).unwrap();
+        net.downlink_to(1, &sig).unwrap();
+        assert_eq!(net.channel(0).shard().uplink_msgs, 2);
+        assert_eq!(net.channel(0).shard().uplink, 2 * 13);
+        assert_eq!(net.channel(1).shard().uplink_msgs, 1);
+        assert_eq!(net.channel(1).shard().downlink_msgs, 1);
+        assert_eq!(net.total_bytes(), 4 * 13);
+        let r = net.end_round();
+        assert_eq!(r.uplink, 3 * 13);
+        assert_eq!(r.downlink, 13);
+        assert_eq!(r.uplink_msgs, 3);
+        assert_eq!(r.downlink_msgs, 1);
+        // shards reset after the merge
+        assert_eq!(net.channel(0).shard(), RoundBytes::default());
     }
 
     #[test]
@@ -124,7 +207,7 @@ mod tests {
         let mut net = SimNetwork::new(3).with_bit_flips(0.25);
         let n = 10_000;
         let sent = Payload::Signs(vec![1.0; n]);
-        let got = match net.send_uplink(&sent).unwrap() {
+        let got = match net.uplink_from(0, &sent).unwrap() {
             Payload::Signs(v) => v,
             _ => unreachable!(),
         };
@@ -134,9 +217,26 @@ mod tests {
     }
 
     #[test]
+    fn recipients_receive_independently_corrupted_copies() {
+        // the IoT/V2X setting: per-link noise is independent, so two
+        // recipients of the same broadcast see different corruption
+        let mut net = SimNetwork::new(4).with_bit_flips(0.5);
+        let sent = Payload::Signs(vec![1.0; 256]);
+        let a = net.downlink_to(0, &sent).unwrap();
+        let b = net.downlink_to(1, &sent).unwrap();
+        assert_ne!(a, b, "two links produced identical corruption");
+        assert_ne!(a, sent);
+        assert_ne!(b, sent);
+        // and a link's stream is deterministic in (seed, k) alone
+        let mut net2 = SimNetwork::new(4).with_bit_flips(0.5);
+        let b2 = net2.downlink_to(1, &sent).unwrap();
+        assert_eq!(b, b2);
+    }
+
+    #[test]
     fn dense_payloads_not_corrupted() {
         let mut net = SimNetwork::new(4).with_bit_flips(0.5);
         let p = Payload::Dense(vec![1.0, 2.0, 3.0]);
-        assert_eq!(net.send_downlink(&p).unwrap(), p);
+        assert_eq!(net.downlink_to(0, &p).unwrap(), p);
     }
 }

@@ -1,0 +1,57 @@
+//! Typed protocol messages of the phased round API (DESIGN.md §3).
+//!
+//! Algorithm 1 is an explicit message-passing protocol: the server
+//! broadcasts a [`Downlink`] to every participant, each client answers
+//! with an [`Uplink`]. Wrapping [`Payload`] in direction-typed envelopes
+//! keeps the sketch/transport boundary explicit (the FedSKETCH lesson):
+//! a future socket or sharded-server transport replaces how these
+//! messages move without touching any algorithm.
+
+use crate::comm::codec::Payload;
+
+/// Server → client message for one round. The coordinator transports it
+/// through the recipient's channel, so each participant receives its own
+/// (independently noise-corrupted, per-recipient-metered) copy.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Downlink {
+    /// round t this broadcast belongs to
+    pub round: usize,
+    pub payload: Payload,
+}
+
+impl Downlink {
+    pub fn new(round: usize, payload: Payload) -> Downlink {
+        Downlink { round, payload }
+    }
+}
+
+/// Client → server message for one round. Produced by the client phase;
+/// the coordinator replaces `payload` with the channel-delivered copy
+/// before the server aggregation phase sees it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Uplink {
+    /// round t this upload belongs to
+    pub round: usize,
+    pub payload: Payload,
+}
+
+impl Uplink {
+    pub fn new(round: usize, payload: Payload) -> Uplink {
+        Uplink { round, payload }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn messages_carry_round_and_payload() {
+        let d = Downlink::new(3, Payload::Signs(vec![1.0, -1.0]));
+        assert_eq!(d.round, 3);
+        assert_eq!(d.payload.len(), 2);
+        let u = Uplink::new(3, Payload::Dense(vec![0.5]));
+        assert_eq!(u.round, 3);
+        assert_eq!(u.payload, Payload::Dense(vec![0.5]));
+    }
+}

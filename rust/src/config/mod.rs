@@ -70,6 +70,10 @@ pub struct RunConfig {
     pub server_lr: f32,
     /// zSignFed perturbation scale
     pub zsign_noise: f32,
+    /// worker threads for the data-parallel client phase (0 = auto:
+    /// `PFED1BS_CLIENT_THREADS` env var, else available parallelism);
+    /// results are bit-identical for any value
+    pub client_threads: usize,
     pub artifacts_dir: String,
     pub results_dir: String,
 }
@@ -108,6 +112,7 @@ impl RunConfig {
             server_lr: 0.02,
             // c = zsign_noise · mean|Δ| (see zsignfed.rs on why mean)
             zsign_noise: 2.0,
+            client_threads: 0,
             artifacts_dir: "artifacts".to_string(),
             results_dir: "results".to_string(),
         }
@@ -168,6 +173,7 @@ impl RunConfig {
             "eval-every" | "eval_every" => self.eval_every = num!(),
             "server-lr" | "server_lr" => self.server_lr = num!(),
             "zsign-noise" | "zsign_noise" => self.zsign_noise = num!(),
+            "threads" | "client-threads" | "client_threads" => self.client_threads = num!(),
             "artifacts-dir" | "artifacts_dir" => self.artifacts_dir = val.to_string(),
             "results-dir" | "results_dir" => self.results_dir = val.to_string(),
             other => bail!("unknown config key `{other}`"),
@@ -257,14 +263,21 @@ mod tests {
     fn overrides_apply() {
         let mut c = RunConfig::preset(DatasetName::Mnist);
         c.apply_pairs(
-            [("rounds", "5"), ("alg", "fedavg"), ("lambda", "0.01"), ("s", "7")]
-                .into_iter(),
+            [
+                ("rounds", "5"),
+                ("alg", "fedavg"),
+                ("lambda", "0.01"),
+                ("s", "7"),
+                ("threads", "4"),
+            ]
+            .into_iter(),
         )
         .unwrap();
         assert_eq!(c.rounds, 5);
         assert_eq!(c.algorithm, "fedavg");
         assert!((c.lambda - 0.01).abs() < 1e-9);
         assert_eq!(c.participating, 7);
+        assert_eq!(c.client_threads, 4);
     }
 
     #[test]

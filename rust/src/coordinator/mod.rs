@@ -1,20 +1,36 @@
-//! The federated round loop — Algorithm 1's outer `for t = 0..T`.
+//! The federated round loop — Algorithm 1's outer `for t = 0..T` — and
+//! the owner of the transport (DESIGN.md §3).
 //!
 //! Owns everything mutable (network, RNG, algorithm state), samples the
 //! participant set S^t uniformly without replacement (the setting of
 //! Lemma 6 / Theorem 1), normalizes the aggregation weights p_k over the
-//! subset, dispatches the round to the algorithm, and records metrics.
+//! subset, and drives the phased protocol per round:
+//!
+//! 1. `server_broadcast` → one metered, independently-noisy delivery per
+//!    participant through that client's channel;
+//! 2. `client_round` for every participant, data-parallel over scoped
+//!    threads (bit-identical to serial for any thread count: each client
+//!    gets an RNG stream forked in selection order beforehand);
+//! 3. each uplink transported through its sender's channel;
+//! 4. `server_aggregate` over the delivered uplinks;
+//! 5. optional `server_notify` broadcast (OBDA's vote downlink).
+//!
+//! Algorithms never see the network; a future socket or sharded-server
+//! transport replaces step 1/3/5 internals without touching them.
 
 pub mod checkpoint;
 pub mod evaluator;
 pub mod metrics;
+pub mod parallel;
 
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
-use crate::algorithms::{Algorithm, Ctx};
-use crate::comm::SimNetwork;
+use crate::algorithms::{
+    Algorithm, ClientCtx, ClientOutput, InitCtx, RoundOutcome, ServerCtx,
+};
+use crate::comm::{Downlink, SimNetwork};
 use crate::config::{ProjectionKind, RunConfig};
 use crate::data::{generate, FederatedData};
 use crate::runtime::ModelRuntime;
@@ -33,6 +49,25 @@ pub struct RunResult {
     pub mean_round_mb: f64,
     pub algorithm: String,
 }
+
+/// One client's pre-forked inputs for the parallel phase.
+struct ClientTask {
+    k: usize,
+    rng: Rng,
+    downlink: Option<Downlink>,
+}
+
+/// Scopes the one thread-safety assertion the type system cannot see:
+/// the `xla` PJRT wrapper types hold raw FFI pointers, which suppresses
+/// the auto traits, but PJRT clients and loaded executables are
+/// documented thread-safe for concurrent `Execute` calls — and the
+/// client phase only ever calls `&self` execution methods on the
+/// runtime. Everything else captured by the parallel closure is checked
+/// by the compiler (`par_map` requires `F: Sync`).
+struct SyncRuntime<'a>(&'a ModelRuntime);
+// SAFETY: see the struct docs — shared-reference use of the PJRT
+// execution methods is concurrency-safe per the PJRT API contract.
+unsafe impl Sync for SyncRuntime<'_> {}
 
 /// Drives one (algorithm × dataset × seed) training run.
 pub struct Coordinator<'a> {
@@ -76,6 +111,16 @@ impl<'a> Coordinator<'a> {
         SrhtOperator::from_seed(cfg.seed, n, m)
     }
 
+    /// One-time algorithm setup against this coordinator's geometry.
+    pub fn init_algorithm(&self, alg: &mut dyn Algorithm) -> Result<()> {
+        alg.init(&InitCtx {
+            model: self.model,
+            data: &self.data,
+            cfg: &self.cfg,
+            projection: &self.projection,
+        })
+    }
+
     /// Sample S^t uniformly without replacement and normalize p_k over it.
     fn sample_round(&mut self) -> (Vec<usize>, Vec<f32>) {
         let selected = self
@@ -85,6 +130,87 @@ impl<'a> Coordinator<'a> {
         let total: f32 = raw.iter().sum();
         let weights = raw.iter().map(|&p| p / total).collect();
         (selected, weights)
+    }
+
+    /// Drive one full protocol round `t` over `selected` (does not close
+    /// the ledger round — callers pair this with `net.end_round()`).
+    pub fn run_round(
+        &mut self,
+        alg: &mut dyn Algorithm,
+        t: usize,
+        selected: &[usize],
+        weights: &[f32],
+    ) -> Result<RoundOutcome> {
+        anyhow::ensure!(
+            !selected.is_empty(),
+            "round {t}: empty participant set (validate the config before running)"
+        );
+        anyhow::ensure!(
+            selected.len() == weights.len(),
+            "round {t}: {} participants but {} weights",
+            selected.len(),
+            weights.len()
+        );
+
+        // phase 1: broadcast — one independent delivery per participant
+        let broadcast = alg.server_broadcast(t);
+        let mut tasks: Vec<ClientTask> = Vec::with_capacity(selected.len());
+        for &k in selected {
+            let downlink = match &broadcast {
+                Some(d) => Some(Downlink::new(d.round, self.net.downlink_to(k, &d.payload)?)),
+                None => None,
+            };
+            // fork per-client streams in selection order, before the
+            // parallel section: determinism for any thread count
+            let rng = self.rng.fork(client_stream_tag(t, k));
+            tasks.push(ClientTask { k, rng, downlink });
+        }
+
+        // phase 2: data-parallel client rounds. The closure is `Sync`-
+        // checked by `par_map`; only the PJRT handle needs the scoped
+        // `SyncRuntime` assertion.
+        let threads = parallel::thread_count(self.cfg.client_threads);
+        let model = SyncRuntime(self.model);
+        let data = &self.data;
+        let cfg = &self.cfg;
+        let projection = &self.projection;
+        let alg_shared: &dyn Algorithm = alg;
+        let results = parallel::par_map(tasks, threads, |_, task: ClientTask| {
+            let ClientTask { k, rng, downlink } = task;
+            let mut ctx = ClientCtx { model: model.0, data, cfg, projection, rng };
+            alg_shared.client_round(t, k, downlink.as_ref(), &mut ctx)
+        });
+        let mut outputs: Vec<ClientOutput> = results
+            .into_iter()
+            .collect::<Result<_>>()
+            .with_context(|| format!("client phase of round {t}"))?;
+
+        // phase 3: transport the uplinks (serial: metering + noise are
+        // per-channel and cheap next to the client compute)
+        for out in outputs.iter_mut() {
+            if let Some(up) = out.uplink.as_mut() {
+                let delivered = self.net.uplink_from(out.client, &up.payload)?;
+                up.payload = delivered;
+            }
+        }
+
+        // phase 4: server aggregation over delivered uplinks
+        let outcome = alg.server_aggregate(
+            t,
+            selected,
+            weights,
+            outputs,
+            &ServerCtx { cfg: &self.cfg, projection: &self.projection },
+        )?;
+
+        // phase 5: optional end-of-round broadcast (metered per
+        // recipient; the simulated stateless clients discard it)
+        if let Some(note) = alg.server_notify(t) {
+            for &k in selected {
+                self.net.downlink_to(k, &note.payload)?;
+            }
+        }
+        Ok(outcome)
     }
 
     /// Run the full T-round training loop.
@@ -99,33 +225,16 @@ impl<'a> Coordinator<'a> {
         alg: &mut dyn Algorithm,
         grad_diag: bool,
     ) -> Result<RunResult> {
-        {
-            let mut ctx = Ctx {
-                model: self.model,
-                data: &self.data,
-                cfg: &self.cfg,
-                net: &mut self.net,
-                rng: &mut self.rng,
-                projection: &self.projection,
-            };
-            alg.init(&mut ctx)?;
-        }
+        // catch degenerate configs (participating = 0, …) here with a
+        // clear error instead of a NaN/panic deep in the round loop
+        self.cfg.validate().context("invalid run configuration")?;
+        self.init_algorithm(alg)?;
 
         let mut history = History::default();
         for t in 0..self.cfg.rounds {
             let started = Instant::now();
             let (selected, weights) = self.sample_round();
-            let outcome = {
-                let mut ctx = Ctx {
-                    model: self.model,
-                    data: &self.data,
-                    cfg: &self.cfg,
-                    net: &mut self.net,
-                    rng: &mut self.rng,
-                    projection: &self.projection,
-                };
-                alg.round(t, &selected, &weights, &mut ctx)?
-            };
+            let outcome = self.run_round(alg, t, &selected, &weights)?;
             let bytes = self.net.end_round();
 
             let is_eval_round =
@@ -224,4 +333,9 @@ impl<'a> Coordinator<'a> {
         }
         Ok(acc / wsum.max(1e-12))
     }
+}
+
+/// Stream tag for client `k`'s round-`t` RNG fork.
+fn client_stream_tag(t: usize, k: usize) -> u64 {
+    crate::algorithms::common::hash3(k as u64, t as u64, 0x434C_4953) // "CLIS"
 }

@@ -1,0 +1,104 @@
+//! Deterministic data-parallel execution of the client phase.
+//!
+//! rayon is unavailable in the offline mirror (DESIGN.md §2), so this is
+//! a minimal scoped-thread work-stealing map: a shared atomic cursor
+//! hands out item indices, each result lands in its own slot, and the
+//! output order is the input order. Because every item is a pure
+//! function of its pre-forked inputs (per-client RNG streams are forked
+//! by the coordinator in selection order *before* the parallel section),
+//! the results are bit-identical for any thread count — `threads == 1`
+//! runs inline without spawning.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Resolve the client-phase worker count: a positive config value wins,
+/// then the `PFED1BS_CLIENT_THREADS` environment variable, then the
+/// machine's available parallelism.
+pub fn thread_count(cfg_threads: usize) -> usize {
+    if cfg_threads > 0 {
+        return cfg_threads;
+    }
+    if let Some(n) = std::env::var("PFED1BS_CLIENT_THREADS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+    {
+        return n;
+    }
+    std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+}
+
+/// Map `f` over `items` on up to `threads` workers; `out[i] = f(i,
+/// items[i])` with output order independent of scheduling.
+///
+/// Fully safe: `F: Sync` makes the compiler check every capture. A
+/// caller holding a reference that is thread-safe in practice but not
+/// statically `Sync` (the coordinator's PJRT model handle) wraps that
+/// one field in its own documented `unsafe impl Sync` newtype rather
+/// than suppressing checking for the whole environment.
+pub fn par_map<T, R, F>(items: Vec<T>, threads: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, T) -> R + Sync,
+{
+    let n = items.len();
+    if threads <= 1 || n <= 1 {
+        return items.into_iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let queue: Vec<Mutex<Option<T>>> = items.into_iter().map(|t| Mutex::new(Some(t))).collect();
+    let slots: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let cursor = AtomicUsize::new(0);
+    let (f_ref, queue_ref, slots_ref, cursor_ref) = (&f, &queue, &slots, &cursor);
+    std::thread::scope(|scope| {
+        for _ in 0..threads.min(n) {
+            scope.spawn(move || loop {
+                let i = cursor_ref.fetch_add(1, Ordering::Relaxed);
+                if i >= queue_ref.len() {
+                    break;
+                }
+                let item = queue_ref[i].lock().unwrap().take().expect("item taken twice");
+                let result = f_ref(i, item);
+                *slots_ref[i].lock().unwrap() = Some(result);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|slot| slot.into_inner().unwrap().expect("worker died before filling slot"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order_and_matches_serial_for_any_thread_count() {
+        let items: Vec<u64> = (0..57).collect();
+        let serial: Vec<u64> = par_map(items.clone(), 1, |i, x| x * 3 + i as u64);
+        for threads in [2, 4, 16] {
+            let parallel: Vec<u64> = par_map(items.clone(), threads, |i, x| x * 3 + i as u64);
+            assert_eq!(parallel, serial, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn more_workers_than_items_is_fine() {
+        let out: Vec<usize> = par_map(vec![7usize, 8], 32, |_, x| x + 1);
+        assert_eq!(out, vec![8, 9]);
+    }
+
+    #[test]
+    fn empty_input_yields_empty_output() {
+        let out: Vec<u32> = par_map(Vec::<u32>::new(), 4, |_, x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn thread_count_prefers_config() {
+        assert_eq!(thread_count(3), 3);
+        assert!(thread_count(0) >= 1);
+    }
+}

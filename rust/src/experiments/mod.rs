@@ -1,5 +1,5 @@
 //! Regenerators for every table and figure in the paper's evaluation
-//! (experiment index in DESIGN.md §5):
+//! (experiment index in DESIGN.md §7):
 //!
 //! | paper artifact | module | CLI |
 //! |---|---|---|

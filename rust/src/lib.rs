@@ -9,8 +9,10 @@
 //! * [`runtime`] — loads `artifacts/*.hlo.txt` (L2/L1 output) and executes
 //!   client steps / sketches / eval on the CPU PJRT client.
 //! * [`algorithms`] — pFed1BS (Algorithm 1) plus FedAvg, OBDA, OBCSAA,
-//!   zSignFed, EDEN, FedBAT baselines behind one trait.
-//! * [`coordinator`] — round loop, partial participation, personalized
+//!   zSignFed, EDEN, FedBAT baselines behind the phased client/server
+//!   message protocol (DESIGN.md §3).
+//! * [`coordinator`] — round loop and transport owner: partial
+//!   participation, data-parallel client phase, personalized
 //!   evaluation, metrics.
 //! * [`sketch`] — rust mirror of the SRHT operator, bit packing, majority
 //!   vote.

@@ -1,6 +1,6 @@
 //! pFed1BS leader binary.
 //!
-//! Subcommands map 1:1 to the paper's evaluation artifacts (DESIGN.md §5):
+//! Subcommands map 1:1 to the paper's evaluation artifacts (DESIGN.md §7):
 //!
 //! ```text
 //! pfed1bs train     --alg pfed1bs --dataset mnist [--rounds N --seed S …]

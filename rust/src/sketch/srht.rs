@@ -125,7 +125,10 @@ pub struct DenseGaussianOperator {
     pub n: usize,
     pub m: usize,
     seed: u64,
-    rows: std::rc::Rc<std::cell::OnceCell<Vec<f32>>>,
+    // Arc<OnceLock>, not Rc<OnceCell>: clients sketch concurrently during
+    // the parallel round phase, and first-touch materialization must be
+    // race-free (OnceLock serializes the single initializer).
+    rows: std::sync::Arc<std::sync::OnceLock<Vec<f32>>>,
 }
 
 impl DenseGaussianOperator {
@@ -134,7 +137,7 @@ impl DenseGaussianOperator {
             n,
             m,
             seed,
-            rows: std::rc::Rc::new(std::cell::OnceCell::new()),
+            rows: std::sync::Arc::new(std::sync::OnceLock::new()),
         }
     }
 

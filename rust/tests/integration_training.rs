@@ -12,6 +12,7 @@ use pfed1bs::config::RunConfig;
 use pfed1bs::coordinator::{evaluate, Coordinator};
 use pfed1bs::data::DatasetName;
 use pfed1bs::experiments::Lab;
+use pfed1bs::sketch::bitpack::packed_bytes;
 
 fn artifacts_available() -> bool {
     std::path::Path::new("artifacts/manifest.txt").exists()
@@ -120,6 +121,82 @@ fn determinism_and_dense_projection_ablation() {
         f.final_accuracy,
         d.final_accuracy
     );
+}
+
+#[test]
+fn per_round_byte_totals_match_known_good_values() {
+    // Byte metering must be invariant under the phased-protocol refactor:
+    // these are the exact pre-refactor per-round uplink/downlink totals,
+    // derived from the wire-frame sizes each algorithm transmits.
+    if !artifacts_available() {
+        return;
+    }
+    let lab = Lab::new("artifacts").expect("lab");
+    let geom = lab.executables("mlp784").unwrap().geom;
+    let (n, m) = (geom.n, geom.m);
+    // EDEN rotates with its own SRHT realization over n, so its uplink
+    // length is n padded to the next power of two
+    let npad = n.next_power_of_two();
+    let dense = |len: usize| (5 + 4 * len) as u64;
+    let signs = |len: usize| (5 + packed_bytes(len)) as u64;
+    let scaled = |len: usize| (9 + packed_bytes(len)) as u64;
+
+    // (alg, uplink frame, downlink frame, downlink skipped at round 0)
+    let expectations: [(&str, u64, u64, bool); 8] = [
+        ("pfed1bs", signs(m), signs(m), true),
+        ("fedavg", dense(n), dense(n), false),
+        ("obda", scaled(n), scaled(n), false),
+        ("obcsaa", scaled(m), dense(n), false),
+        ("zsignfed", scaled(n), dense(n), false),
+        ("eden", scaled(npad), dense(n), false),
+        ("fedbat", scaled(n), dense(n), false),
+        ("local", 0, 0, false),
+    ];
+    for (alg, up_frame, down_frame, skip_r0) in expectations {
+        let mut cfg = short_cfg(alg);
+        cfg.rounds = 2;
+        let s = cfg.participating as u64;
+        let result = lab.run(cfg).unwrap_or_else(|e| panic!("{alg}: {e:#}"));
+        for (t, rec) in result.history.records.iter().enumerate() {
+            assert_eq!(rec.bytes.uplink, s * up_frame, "{alg} round {t} uplink");
+            let expect_down = if t == 0 && skip_r0 { 0 } else { s * down_frame };
+            assert_eq!(rec.bytes.downlink, expect_down, "{alg} round {t} downlink");
+            let expect_up_msgs = if up_frame == 0 { 0 } else { s as u32 };
+            let expect_down_msgs = if expect_down == 0 { 0 } else { s as u32 };
+            assert_eq!(rec.bytes.uplink_msgs, expect_up_msgs, "{alg} round {t} up msgs");
+            assert_eq!(rec.bytes.downlink_msgs, expect_down_msgs, "{alg} round {t} down msgs");
+        }
+    }
+}
+
+#[test]
+fn parallel_client_phase_is_bit_identical_to_serial() {
+    // the data-parallel client phase must produce exactly the results of
+    // a forced single-thread round: same losses, bytes, and model state
+    if !artifacts_available() {
+        return;
+    }
+    let lab = Lab::new("artifacts").expect("lab");
+    for alg_name in ["pfed1bs", "fedavg"] {
+        let mut snaps = Vec::new();
+        for threads in [1usize, 4] {
+            let mut cfg = short_cfg(alg_name);
+            cfg.rounds = 3;
+            cfg.client_threads = threads;
+            let model = lab.model_for(&cfg).unwrap();
+            let mut alg = algorithms::build(alg_name).unwrap();
+            let mut coord = Coordinator::new(cfg, &model);
+            let result = coord.run(alg.as_mut()).unwrap();
+            let losses: Vec<f64> =
+                result.history.records.iter().map(|r| r.train_loss).collect();
+            let bytes: Vec<_> = result.history.records.iter().map(|r| r.bytes).collect();
+            snaps.push((losses, bytes, result.final_accuracy, alg.snapshot()));
+        }
+        assert_eq!(snaps[0].0, snaps[1].0, "{alg_name}: losses differ across thread counts");
+        assert_eq!(snaps[0].1, snaps[1].1, "{alg_name}: byte counts differ");
+        assert_eq!(snaps[0].2, snaps[1].2, "{alg_name}: final accuracy differs");
+        assert_eq!(snaps[0].3, snaps[1].3, "{alg_name}: model state differs");
+    }
 }
 
 #[test]

@@ -1,12 +1,15 @@
 //! Property tests over coordinator-level invariants that do NOT need the
-//! PJRT runtime: client sampling, weight normalization, ledger symmetry,
-//! vote stability, codec/transport round trips, partition coverage.
+//! PJRT runtime: client sampling, weight normalization, ledger shard
+//! merging, vote stability, codec/transport round trips, partition
+//! coverage, and the pFed1BS noisy-downlink protocol regression.
 //! (Runtime-dependent invariants live in integration_training.rs.)
 
-use pfed1bs::comm::{encode, Payload, SimNetwork};
+use pfed1bs::algorithms::{Algorithm, ClientOutput, ClientStats, ServerCtx, Uplink};
+use pfed1bs::comm::{encode, Direction, Ledger, Payload, SimNetwork};
+use pfed1bs::config::RunConfig;
 use pfed1bs::data::{generate, DatasetName, DatasetSpec, Partition};
 use pfed1bs::sketch::bitpack::{majority_vote_weighted, pack_signs, unpack_signs};
-use pfed1bs::sketch::SrhtOperator;
+use pfed1bs::sketch::{Projection, SrhtOperator};
 use pfed1bs::util::proptest::check;
 use pfed1bs::util::rng::Rng;
 
@@ -77,7 +80,7 @@ fn prop_transport_preserves_sign_payloads_and_meters_bytes() {
             .collect();
         let mut net = SimNetwork::new(rng.next_u64());
         let sent = Payload::Signs(signs);
-        let got = net.send_uplink(&sent).map_err(|e| e.to_string())?;
+        let got = net.uplink_from(0, &sent).map_err(|e| e.to_string())?;
         if got != sent {
             return Err("clean channel altered payload".into());
         }
@@ -194,7 +197,7 @@ fn prop_bit_flip_noise_rate_is_calibrated() {
         let mut net = SimNetwork::new(rng.next_u64()).with_bit_flips(p);
         let n = 20_000;
         let sent = Payload::Signs(vec![1.0; n]);
-        let Payload::Signs(got) = net.send_uplink(&sent).map_err(|e| e.to_string())? else {
+        let Payload::Signs(got) = net.uplink_from(0, &sent).map_err(|e| e.to_string())? else {
             return Err("type".into());
         };
         let flipped = got.iter().filter(|&&s| s < 0.0).count() as f64 / n as f64;
@@ -203,6 +206,83 @@ fn prop_bit_flip_noise_rate_is_calibrated() {
         }
         Ok(())
     });
+}
+
+#[test]
+fn prop_sharded_metering_equals_serial_ledger() {
+    // for random traffic patterns, the merged per-client shards must be
+    // byte- and message-count-identical to one serial ledger
+    check("ledger_shard_merge", 30, |rng| {
+        let clients = rng.below(6) + 1;
+        let mut net = SimNetwork::new(rng.next_u64());
+        let mut serial = Ledger::new();
+        for _ in 0..rng.below(40) {
+            let k = rng.below(clients);
+            let len = rng.below(300) + 1;
+            let payload = match rng.below(3) {
+                0 => Payload::Dense(vec![0.5; len]),
+                1 => Payload::Signs(vec![1.0; len]),
+                _ => Payload::ScaledSigns { signs: vec![-1.0; len], scale: 2.0 },
+            };
+            let frame = encode(&payload).len();
+            if rng.f32() < 0.5 {
+                net.uplink_from(k, &payload).map_err(|e| e.to_string())?;
+                serial.record(Direction::Uplink, frame);
+            } else {
+                net.downlink_to(k, &payload).map_err(|e| e.to_string())?;
+                serial.record(Direction::Downlink, frame);
+            }
+        }
+        let merged = net.end_round();
+        let reference = serial.end_round();
+        if merged != reference {
+            return Err(format!("merged {merged:?} != serial {reference:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn regression_noisy_downlink_never_corrupts_server_consensus() {
+    // the monolithic round() overwrote the server's v with the first
+    // bit-flipped delivered copy and handed every client that same
+    // corruption; the phased protocol must (a) keep the server's v
+    // noise-free and (b) deliver independently corrupted copies
+    let m = 256;
+    let n = 64;
+    // protocol-level state without the PJRT init path
+    let mut alg = pfed1bs::algorithms::pfed1bs::PFed1BS::with_state(
+        vec![vec![0.0f32; n]; 4],
+        vec![1.0f32; m],
+    );
+
+    let down = alg.server_broadcast(1).expect("t>0 broadcasts the consensus");
+    let mut net = SimNetwork::new(99).with_bit_flips(0.25);
+    let d0 = net.downlink_to(0, &down.payload).unwrap();
+    let d1 = net.downlink_to(1, &down.payload).unwrap();
+    assert_ne!(d0, d1, "clients must receive independently corrupted copies");
+    assert_ne!(d0, down.payload);
+    assert_eq!(
+        alg.consensus().unwrap(),
+        vec![1.0f32; m].as_slice(),
+        "server consensus must be untouched by channel corruption"
+    );
+
+    // the next consensus is the vote over DELIVERED uplinks only — the
+    // corrupted downlink copies play no role in server state
+    let outputs: Vec<ClientOutput> = (0..2)
+        .map(|k| ClientOutput {
+            client: k,
+            uplink: Some(Uplink::new(1, Payload::Signs(vec![-1.0f32; m]))),
+            state: None,
+            stats: ClientStats::default(),
+        })
+        .collect();
+    let cfg = RunConfig::preset(DatasetName::Mnist);
+    let projection = Projection::Srht(SrhtOperator::from_seed(1, n, m.min(n)));
+    let ctx = ServerCtx { cfg: &cfg, projection: &projection };
+    alg.server_aggregate(1, &[0, 1], &[0.5, 0.5], outputs, &ctx).unwrap();
+    assert_eq!(alg.consensus().unwrap(), vec![-1.0f32; m].as_slice());
 }
 
 #[test]
