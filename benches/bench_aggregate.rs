@@ -1,9 +1,15 @@
 //! Server aggregation (Lemma 1 majority vote): weighted vs uniform-
 //! popcount paths across client counts — the L3 hot loop that closes
 //! every round. K=20 × m=10,177 is the paper's MNIST configuration.
+//!
+//! The `*_packed` rows vote directly over borrowed `SignVec` words, as
+//! `server_aggregate` now does — no unpack/re-pack round trip anywhere.
+//! The `*_repack` row reproduces the pre-SignVec server path (uplinks
+//! decoded to f32 ±1 lanes, re-packed from scratch before the vote) so
+//! the saving stays measurable.
 
 use pfed1bs::bench_harness::{black_box, Bench};
-use pfed1bs::sketch::bitpack::{majority_vote_uniform, majority_vote_weighted, pack_signs};
+use pfed1bs::sketch::bitpack::{majority_vote_uniform, majority_vote_weighted, SignVec};
 use pfed1bs::util::rng::Rng;
 
 fn main() {
@@ -11,24 +17,36 @@ fn main() {
     let mut rng = Rng::new(5);
 
     for (k, m) in [(20usize, 10_177usize), (20, 45_368), (100, 10_177), (5, 10_177)] {
-        let sketches: Vec<Vec<u64>> = (0..k)
+        let lanes: Vec<Vec<f32>> = (0..k)
             .map(|_| {
-                let signs: Vec<f32> = (0..m)
+                (0..m)
                     .map(|_| if rng.f32() < 0.5 { 1.0 } else { -1.0 })
-                    .collect();
-                pack_signs(&signs)
+                    .collect()
             })
             .collect();
+        let sketches: Vec<SignVec> = lanes.iter().map(|z| SignVec::from_signs(z)).collect();
+        let borrowed: Vec<&SignVec> = sketches.iter().collect();
         let weights = vec![1.0f32 / k as f32; k];
-        b.bench_elems(&format!("weighted_vote_K{k}_m{m}"), (k * m) as u64, || {
+
+        // packed end-to-end: borrow the delivered words, vote, done —
+        // the exact shape of PFed1BS::server_aggregate
+        b.bench_elems(&format!("weighted_vote_packed_K{k}_m{m}"), (k * m) as u64, || {
             black_box(majority_vote_weighted(
-                black_box(&sketches),
+                black_box(&borrowed),
                 black_box(&weights),
                 m,
             ));
         });
-        b.bench_elems(&format!("uniform_vote_K{k}_m{m}"), (k * m) as u64, || {
-            black_box(majority_vote_uniform(black_box(&sketches), m));
+        b.bench_elems(&format!("uniform_vote_packed_K{k}_m{m}"), (k * m) as u64, || {
+            black_box(majority_vote_uniform(black_box(&borrowed), m));
+        });
+
+        // the old server path: re-pack every client's f32 lanes each
+        // round before voting (kept as the baseline being beaten)
+        b.bench_elems(&format!("weighted_vote_repack_K{k}_m{m}"), (k * m) as u64, || {
+            let packed: Vec<SignVec> =
+                black_box(&lanes).iter().map(|z| SignVec::from_signs(z)).collect();
+            black_box(majority_vote_weighted(&packed, black_box(&weights), m));
         });
     }
     b.report();

@@ -1,9 +1,11 @@
 //! One-bit transport primitives: pack/unpack at the sketch sizes each
 //! model variant ships per round (m = 10,177 / 45,368) and at the n-bit
-//! sizes the OBDA-style baselines ship.
+//! sizes the OBDA-style baselines ship, plus the packed-word paths that
+//! stay in `SignVec` form end-to-end (hamming popcount, masked-XOR bit
+//! flips) and never touch f32 lanes.
 
 use pfed1bs::bench_harness::{black_box, Bench};
-use pfed1bs::sketch::bitpack::{pack_signs, unpack_signs};
+use pfed1bs::sketch::bitpack::{pack_signs, unpack_signs, SignVec};
 use pfed1bs::util::rng::Rng;
 
 fn main() {
@@ -25,6 +27,20 @@ fn main() {
         });
         b.bench_elems(&format!("unpack_{label}({m})"), m as u64, || {
             black_box(unpack_signs(black_box(&packed), m));
+        });
+
+        // packed-only paths: no f32 lane materialization anywhere
+        let a = SignVec::from_signs(&signs);
+        let mut c = a.clone();
+        c.flip_bits_where(|i| i % 7 == 0);
+        b.bench_elems(&format!("hamming_{label}({m})"), m as u64, || {
+            black_box(black_box(&a).hamming(black_box(&c)));
+        });
+        b.bench_elems(&format!("flip_mask_{label}({m})"), m as u64, || {
+            // the SimNetwork corruption shape: one predicate per live
+            // bit, folded into per-word XOR masks
+            c.flip_bits_where(|i| i % 13 == 0);
+            black_box(&c);
         });
     }
     b.report();

@@ -1,31 +1,30 @@
 //! Wire codec throughput: the encode/decode cost of each payload kind at
 //! the sizes that cross the simulated network every round, verifying the
-//! transport layer never becomes the L3 bottleneck.
+//! transport layer never becomes the L3 bottleneck. With payloads
+//! carrying packed `SignVec`s, sign-frame encode/decode is a
+//! near-memcpy of u64 words — the n-bit row (OBDA scale) makes that
+//! visible next to the dense f32 row of the same element count.
 
 use pfed1bs::bench_harness::{black_box, Bench};
 use pfed1bs::comm::{decode, encode, Payload};
+use pfed1bs::sketch::bitpack::SignVec;
 use pfed1bs::util::rng::Rng;
 
 fn main() {
     let mut b = Bench::new("codec");
     let mut rng = Rng::new(9);
 
+    let mut rand_signs = |n: usize| SignVec::from_fn(n, |_| rng.f32() < 0.5);
+
+    let signs_m = Payload::Signs(rand_signs(10_177));
+    let signs_n = Payload::Signs(rand_signs(101_770));
+    let scaled = Payload::ScaledSigns { signs: rand_signs(101_770), scale: 0.01 };
     let dense = Payload::Dense((0..101_770).map(|_| rng.normal()).collect());
-    let signs = Payload::Signs(
-        (0..10_177)
-            .map(|_| if rng.f32() < 0.5 { 1.0 } else { -1.0 })
-            .collect(),
-    );
-    let scaled = Payload::ScaledSigns {
-        signs: (0..101_770)
-            .map(|_| if rng.f32() < 0.5 { 1.0 } else { -1.0 })
-            .collect(),
-        scale: 0.01,
-    };
 
     for (p, label, elems) in [
         (&dense, "dense_n101770", 101_770u64),
-        (&signs, "signs_m10177", 10_177),
+        (&signs_m, "signs_m10177", 10_177),
+        (&signs_n, "signs_n101770", 101_770),
         (&scaled, "scaled_signs_n101770", 101_770),
     ] {
         let frame = encode(p);

@@ -19,6 +19,7 @@ use crate::algorithms::{
     RoundOutcome, ServerCtx, Uplink,
 };
 use crate::comm::Payload;
+use crate::sketch::bitpack::SignVec;
 use crate::sketch::SrhtOperator;
 
 pub struct Eden {
@@ -89,7 +90,7 @@ impl Algorithm for Eden {
         let d = delta(&wk, w0);
         let y = self.rot().rotate(&d); // H·D·pad(Δ), length n'
         let alpha = mean_abs(&y);
-        let signs: Vec<f32> = y.iter().map(|&x| if x >= 0.0 { 1.0 } else { -1.0 }).collect();
+        let signs = SignVec::from_signs(&y);
         Ok(ClientOutput {
             client: k,
             uplink: Some(Uplink::new(t, Payload::ScaledSigns { signs, scale: alpha })),
@@ -114,7 +115,7 @@ impl Algorithm for Eden {
             else {
                 anyhow::bail!("eden uplink must be a scaled-sign payload");
             };
-            for (e, &s) in est_rotated.iter_mut().zip(signs) {
+            for (e, s) in est_rotated.iter_mut().zip(signs.iter_signs()) {
                 *e += p * scale * s;
             }
         }

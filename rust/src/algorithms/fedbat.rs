@@ -19,6 +19,7 @@ use crate::algorithms::{
     RoundOutcome, ServerCtx, Uplink,
 };
 use crate::comm::Payload;
+use crate::sketch::bitpack::SignVec;
 
 pub struct FedBat {
     w: Vec<f32>,
@@ -76,18 +77,13 @@ impl Algorithm for FedBat {
         let alpha = mean_abs(&d).max(1e-12);
         // stochastic binarization: unbiased for |Δ| ≤ clip
         let clip = 2.0 * alpha;
-        let signs: Vec<f32> = d
-            .iter()
-            .map(|&x| {
-                let xc = x.clamp(-clip, clip);
-                let p_plus = 0.5 * (1.0 + xc / clip);
-                if ctx.rng.f32() < p_plus {
-                    1.0
-                } else {
-                    -1.0
-                }
-            })
-            .collect();
+        // packed directly: from_fn draws in ascending coordinate order,
+        // so the stochastic-binarization stream is unchanged
+        let signs = SignVec::from_fn(d.len(), |i| {
+            let xc = d[i].clamp(-clip, clip);
+            let p_plus = 0.5 * (1.0 + xc / clip);
+            ctx.rng.f32() < p_plus
+        });
         // scale `clip` makes E[clip·sign] = Δ (clamped)
         Ok(ClientOutput {
             client: k,
@@ -112,7 +108,7 @@ impl Algorithm for FedBat {
             else {
                 anyhow::bail!("fedbat uplink must be a scaled-sign payload");
             };
-            for (e, &s) in est.iter_mut().zip(signs) {
+            for (e, s) in est.iter_mut().zip(signs.iter_signs()) {
                 *e += p * scale * s;
             }
         }

@@ -185,8 +185,17 @@ pub trait Algorithm: Send + Sync {
     /// model).
     fn model_for(&self, k: usize) -> &[f32];
 
-    /// Optional: the current consensus vector (pFed1BS diagnostics).
+    /// Optional: the current consensus vector as ±1/0 f32 lanes (the
+    /// compute-boundary form the HLO diagnostics need).
     fn consensus(&self) -> Option<&[f32]> {
+        None
+    }
+
+    /// Optional: the current consensus in its packed one-bit form — the
+    /// representation the server actually votes into. The coordinator
+    /// uses it for the per-round consensus-flip metric
+    /// (`hamming_packed`, DESIGN.md §8) without any unpack.
+    fn consensus_packed(&self) -> Option<&crate::sketch::bitpack::SignVec> {
         None
     }
 

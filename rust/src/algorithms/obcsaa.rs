@@ -73,7 +73,7 @@ impl Algorithm for Obcsaa {
         let mut wk = w0.clone();
         let loss = local_sgd(ctx, k, &mut wk, t as u64)?;
         let d = delta(&wk, w0);
-        let z = ctx.projection.sketch_sign(&d);
+        let z = ctx.projection.sketch_sign_packed(&d);
         let norm = l2_norm(&d) as f32;
         Ok(ClientOutput {
             client: k,
@@ -101,7 +101,8 @@ impl Algorithm for Obcsaa {
                 anyhow::bail!("obcsaa uplink must be a scaled-sign payload");
             };
             norm_acc += (p * scale) as f64;
-            for (a, &s) in agg.iter_mut().zip(signs) {
+            // accumulate the packed bits as ±1 lanes (compute boundary)
+            for (a, s) in agg.iter_mut().zip(signs.iter_signs()) {
                 *a += p * s;
             }
         }

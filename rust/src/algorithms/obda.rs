@@ -15,18 +15,19 @@
 
 use anyhow::Result;
 
-use crate::algorithms::common::{axpy, delta, init_params, local_sgd, mean_abs};
+use crate::algorithms::common::{delta, init_params, local_sgd, mean_abs};
 use crate::algorithms::{
     Algorithm, Capabilities, ClientCtx, ClientOutput, ClientStats, Downlink, InitCtx,
     RoundOutcome, ServerCtx, Uplink,
 };
 use crate::comm::Payload;
-use crate::sketch::bitpack::{majority_vote_weighted, pack_signs, unpack_signs};
+use crate::sketch::bitpack::{majority_vote_weighted, SignVec};
 
 pub struct Obda {
     w: Vec<f32>,
-    /// last round's (vote, scale), broadcast via `server_notify`
-    last_vote: Option<(Vec<f32>, f32)>,
+    /// last round's (packed vote, scale), broadcast via `server_notify`
+    /// without re-packing
+    last_vote: Option<(SignVec, f32)>,
 }
 
 impl Obda {
@@ -76,8 +77,8 @@ impl Algorithm for Obda {
         let mut wk = self.w.clone();
         let loss = local_sgd(ctx, k, &mut wk, t as u64)?;
         let d = delta(&wk, &self.w);
-        let signs: Vec<f32> = d.iter().map(|&x| if x >= 0.0 { 1.0 } else { -1.0 }).collect();
-        // uplink: n-bit sign vector + one f32 magnitude estimate
+        let signs = SignVec::from_signs(&d);
+        // uplink: n-bit packed sign vector + one f32 magnitude estimate
         Ok(ClientOutput {
             client: k,
             uplink: Some(Uplink::new(
@@ -98,7 +99,7 @@ impl Algorithm for Obda {
         _ctx: &ServerCtx,
     ) -> Result<RoundOutcome> {
         let n = self.w.len();
-        let mut sketches: Vec<Vec<u64>> = Vec::with_capacity(outputs.len());
+        let mut sketches: Vec<&SignVec> = Vec::with_capacity(outputs.len());
         let mut scale_acc = 0.0f32;
         for (out, &p) in outputs.iter().zip(weights) {
             let Some(Uplink { payload: Payload::ScaledSigns { signs, scale }, .. }) =
@@ -107,18 +108,21 @@ impl Algorithm for Obda {
                 anyhow::bail!("obda uplink must be a scaled-sign payload");
             };
             scale_acc += p * scale;
-            sketches.push(pack_signs(signs));
+            sketches.push(signs); // borrow the delivered words, no re-pack
         }
 
-        // server: weighted majority vote, scaled sign step
-        let vote = unpack_signs(&majority_vote_weighted(&sketches, weights, n), n);
-        axpy(&mut self.w, scale_acc, &vote);
+        // server: weighted majority vote, scaled sign step applied
+        // straight off the packed vote bits
+        let vote = majority_vote_weighted(&sketches, weights, n);
+        for (wi, s) in self.w.iter_mut().zip(vote.iter_signs()) {
+            *wi += scale_acc * s;
+        }
         self.last_vote = Some((vote, scale_acc));
         Ok(RoundOutcome::from_outputs(&outputs))
     }
 
     fn server_notify(&self, t: usize) -> Option<Downlink> {
-        // broadcast the n-bit vote (clients apply the same step)
+        // broadcast the n-bit packed vote (clients apply the same step)
         self.last_vote.as_ref().map(|(vote, scale)| {
             Downlink::new(t, Payload::ScaledSigns { signs: vote.clone(), scale: *scale })
         })

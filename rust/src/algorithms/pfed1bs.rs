@@ -36,15 +36,21 @@ use crate::algorithms::{
 use crate::comm::Payload;
 use crate::config::ProjectionKind;
 use crate::data::BatchIter;
-use crate::sketch::bitpack::{majority_vote_weighted, pack_signs, unpack_signs};
+use crate::sketch::bitpack::{majority_vote_weighted, SignVec};
 use crate::sketch::Projection;
 
 pub struct PFed1BS {
     /// personalized models w_k, all K clients
     wks: Vec<Vec<f32>>,
-    /// consensus vector v^t ∈ {−1,0,+1}^m (0 only at t=0); server-side
-    /// state, never overwritten by a channel delivery
+    /// consensus vector v^t ∈ {−1,0,+1}^m (0 only at t=0) as f32 lanes
+    /// — the compute-boundary form the HLO client step consumes;
+    /// server-side state, never overwritten by a channel delivery
     v: Vec<f32>,
+    /// the same consensus in packed form: the majority vote's direct
+    /// output, broadcast without any per-round re-pack (DESIGN.md §8).
+    /// Note v⁰ = 0 packs to all-+1 bits — irrelevant because round 0
+    /// never broadcasts.
+    v_packed: SignVec,
     projection_kind: ProjectionKind,
 }
 
@@ -53,6 +59,7 @@ impl PFed1BS {
         PFed1BS {
             wks: Vec::new(),
             v: Vec::new(),
+            v_packed: SignVec::default(),
             projection_kind: ProjectionKind::Fht,
         }
     }
@@ -62,7 +69,8 @@ impl PFed1BS {
     /// can drive them against hand-built state without the PJRT `init`
     /// path.
     pub fn with_state(wks: Vec<Vec<f32>>, v: Vec<f32>) -> Self {
-        PFed1BS { wks, v, projection_kind: ProjectionKind::Fht }
+        let v_packed = SignVec::from_signs(&v);
+        PFed1BS { wks, v, v_packed, projection_kind: ProjectionKind::Fht }
     }
 }
 
@@ -136,13 +144,15 @@ impl Algorithm for PFed1BS {
         let w0 = init_params(n, ctx.cfg.seed);
         self.wks = (0..ctx.data.num_clients()).map(|_| w0.clone()).collect();
         self.v = vec![0.0f32; m]; // v^0 = 0 (Algorithm 1 line 2)
+        self.v_packed = SignVec::from_signs(&self.v);
         Ok(())
     }
 
     fn server_broadcast(&self, t: usize) -> Option<Downlink> {
         // skip at t=0 where v=0 by init; the payload is a CLONE of the
-        // server state, so no delivery can corrupt self.v
-        (t > 0).then(|| Downlink::new(t, Payload::Signs(self.v.clone())))
+        // packed server state (a word-level memcpy), so no delivery can
+        // corrupt self.v
+        (t > 0).then(|| Downlink::new(t, Payload::Signs(self.v_packed.clone())))
     }
 
     fn client_round(
@@ -153,20 +163,19 @@ impl Algorithm for PFed1BS {
         ctx: &mut ClientCtx,
     ) -> Result<ClientOutput> {
         // the consensus THIS client received (its own channel's delivery,
-        // independently corrupted under noise); zeros when nothing came
-        let zeros;
-        let v: &[f32] = match downlink {
+        // independently corrupted under noise); zeros when nothing came.
+        // The one unpack on the client side happens here, at the compute
+        // boundary: the HLO client step consumes f32 lanes.
+        let v: Vec<f32> = match downlink {
             Some(d) => {
                 let Payload::Signs(v) = &d.payload else {
                     anyhow::bail!("pfed1bs downlink must be a sign payload");
                 };
-                v
+                v.to_signs()
             }
-            None => {
-                zeros = vec![0.0f32; self.v.len()];
-                &zeros
-            }
+            None => vec![0.0f32; self.v.len()],
         };
+        let v = v.as_slice();
         let mut w = self.wks[k].clone();
         let loss = match self.projection_kind {
             ProjectionKind::Fht => {
@@ -178,10 +187,11 @@ impl Algorithm for PFed1BS {
                 dense_reg_steps(ctx, k, &mut w, v, t as u64)?
             }
         };
-        // one-bit sketch of the updated personalized model
+        // one-bit sketch of the updated personalized model, packed at
+        // the compression boundary — the payload ships as u64 words
         let z = match self.projection_kind {
-            ProjectionKind::Fht => ctx.model.sketch_sign(&w)?,
-            ProjectionKind::DenseGaussian => ctx.projection.sketch_sign(&w),
+            ProjectionKind::Fht => ctx.model.sketch_sign_packed(&w)?,
+            ProjectionKind::DenseGaussian => ctx.projection.sketch_sign_packed(&w),
         };
         Ok(ClientOutput {
             client: k,
@@ -200,19 +210,26 @@ impl Algorithm for PFed1BS {
         _ctx: &ServerCtx,
     ) -> Result<RoundOutcome> {
         let m = self.v.len();
-        let mut sketches: Vec<Vec<u64>> = Vec::with_capacity(outputs.len());
         for out in outputs.iter_mut() {
             if let Some(w) = out.state.take() {
                 self.wks[out.client] = w;
             }
+        }
+        // borrow the delivered packed words directly — no per-round
+        // re-pack of any client sketch
+        let mut sketches: Vec<&SignVec> = Vec::with_capacity(outputs.len());
+        for out in &outputs {
             let Some(Uplink { payload: Payload::Signs(z), .. }) = &out.uplink else {
                 anyhow::bail!("pfed1bs uplink must be a sign payload");
             };
-            sketches.push(pack_signs(z));
+            sketches.push(z);
         }
-        // weighted majority vote (Lemma 1) over the delivered sketches
+        // weighted majority vote (Lemma 1) over the delivered sketches;
+        // the vote output IS the next packed consensus, unpacked once
+        // for the compute boundary
         let vote = majority_vote_weighted(&sketches, weights, m);
-        self.v = unpack_signs(&vote, m);
+        self.v = vote.to_signs();
+        self.v_packed = vote;
         Ok(RoundOutcome::from_outputs(&outputs))
     }
 
@@ -222,6 +239,10 @@ impl Algorithm for PFed1BS {
 
     fn consensus(&self) -> Option<&[f32]> {
         Some(&self.v)
+    }
+
+    fn consensus_packed(&self) -> Option<&SignVec> {
+        (!self.v_packed.is_empty()).then_some(&self.v_packed)
     }
 
     fn snapshot(&self) -> (Vec<Vec<f32>>, Vec<f32>) {
@@ -242,6 +263,7 @@ impl Algorithm for PFed1BS {
             self.v.len()
         );
         self.wks = models;
+        self.v_packed = SignVec::from_signs(&consensus);
         self.v = consensus;
         Ok(())
     }

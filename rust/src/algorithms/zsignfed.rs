@@ -19,6 +19,7 @@ use crate::algorithms::{
     RoundOutcome, ServerCtx, Uplink,
 };
 use crate::comm::Payload;
+use crate::sketch::bitpack::SignVec;
 
 pub struct ZSignFed {
     w: Vec<f32>,
@@ -79,17 +80,12 @@ impl Algorithm for ZSignFed {
         // mean-based c keeps E[sign(Δ+u)]·c ≈ Δ on the bulk of the
         // coordinates at bounded variance (clipped tail bias).
         let c = (ctx.cfg.zsign_noise * mean_abs(&d)).max(1e-12);
-        let signs: Vec<f32> = d
-            .iter()
-            .map(|&x| {
-                let u = ctx.rng.range_f32(-c, c);
-                if x + u >= 0.0 {
-                    1.0
-                } else {
-                    -1.0
-                }
-            })
-            .collect();
+        // packed directly: from_fn draws in ascending coordinate order,
+        // so the perturbation stream matches a ±1-lane construction
+        let signs = SignVec::from_fn(d.len(), |i| {
+            let u = ctx.rng.range_f32(-c, c);
+            d[i] + u >= 0.0
+        });
         Ok(ClientOutput {
             client: k,
             uplink: Some(Uplink::new(t, Payload::ScaledSigns { signs, scale: c })),
@@ -113,8 +109,9 @@ impl Algorithm for ZSignFed {
             else {
                 anyhow::bail!("zsignfed uplink must be a scaled-sign payload");
             };
-            // server accumulates the unbiased per-client estimate c·z_k
-            for (e, &s) in est.iter_mut().zip(signs) {
+            // server accumulates the unbiased per-client estimate c·z_k,
+            // reading the packed bits as ±1 lanes at the compute boundary
+            for (e, s) in est.iter_mut().zip(signs.iter_signs()) {
                 *e += p * scale * s;
             }
         }

@@ -3,27 +3,37 @@
 //! Every algorithm's uplink/downlink traffic goes through a codec so the
 //! ledger measures *actual encoded bytes*, not a formula. Encoded frames
 //! are self-describing: 1 tag byte + u32 element count + payload.
+//!
+//! One-bit payloads carry a packed [`SignVec`] (DESIGN.md §8), so
+//! encode/decode of sign traffic is a near-memcpy of the u64 words — no
+//! ±1 f32 lanes are materialized at the transport boundary. The wire
+//! format itself is unchanged from the f32-lane era (little-endian
+//! words, bit set ⇔ +1, `sign(0) := +1`): the byte-exact golden tests
+//! below pin it, because the Table 2 communication-cost claims rest on
+//! these exact frames.
 
 use anyhow::{bail, Result};
 
-use crate::sketch::bitpack::{pack_signs, packed_bytes, unpack_signs};
+use crate::sketch::bitpack::{packed_bytes, SignVec};
 
 /// A decoded payload.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Payload {
     /// full-precision vector (FedAvg and full-model downlinks)
     Dense(Vec<f32>),
-    /// ±1 sign vector (OBDA/zSignFed uplinks, pFed1BS both directions)
-    Signs(Vec<f32>),
-    /// sign vector with one f32 scale (EDEN/FedBAT: α·sign(x))
-    ScaledSigns { signs: Vec<f32>, scale: f32 },
+    /// packed ±1 sign vector (OBDA/zSignFed uplinks, pFed1BS both
+    /// directions)
+    Signs(SignVec),
+    /// packed sign vector with one f32 scale (EDEN/FedBAT: α·sign(x))
+    ScaledSigns { signs: SignVec, scale: f32 },
 }
 
 impl Payload {
     pub fn len(&self) -> usize {
         match self {
-            Payload::Dense(v) | Payload::Signs(v) => v.len(),
-            Payload::ScaledSigns { signs, .. } => signs.len(),
+            Payload::Dense(v) => v.len(),
+            Payload::Signs(z) => z.m(),
+            Payload::ScaledSigns { signs, .. } => signs.m(),
         }
     }
 
@@ -35,6 +45,20 @@ impl Payload {
 const TAG_DENSE: u8 = 1;
 const TAG_SIGNS: u8 = 2;
 const TAG_SCALED: u8 = 3;
+
+fn put_words(out: &mut Vec<u8>, z: &SignVec) {
+    for w in z.words() {
+        out.extend_from_slice(&w.to_le_bytes());
+    }
+}
+
+fn get_words(bytes: &[u8], m: usize) -> SignVec {
+    let words: Vec<u64> = bytes
+        .chunks_exact(8)
+        .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    SignVec::from_words(words, m)
+}
 
 /// Encode a payload to its wire frame.
 pub fn encode(p: &Payload) -> Vec<u8> {
@@ -48,31 +72,28 @@ pub fn encode(p: &Payload) -> Vec<u8> {
             }
             out
         }
-        Payload::Signs(v) => {
-            let words = pack_signs(v);
-            let mut out = Vec::with_capacity(5 + words.len() * 8);
+        Payload::Signs(z) => {
+            let mut out = Vec::with_capacity(5 + z.byte_len());
             out.push(TAG_SIGNS);
-            out.extend_from_slice(&(v.len() as u32).to_le_bytes());
-            for w in words {
-                out.extend_from_slice(&w.to_le_bytes());
-            }
+            out.extend_from_slice(&(z.m() as u32).to_le_bytes());
+            put_words(&mut out, z);
             out
         }
         Payload::ScaledSigns { signs, scale } => {
-            let words = pack_signs(signs);
-            let mut out = Vec::with_capacity(9 + words.len() * 8);
+            let mut out = Vec::with_capacity(9 + signs.byte_len());
             out.push(TAG_SCALED);
-            out.extend_from_slice(&(signs.len() as u32).to_le_bytes());
+            out.extend_from_slice(&(signs.m() as u32).to_le_bytes());
             out.extend_from_slice(&scale.to_le_bytes());
-            for w in words {
-                out.extend_from_slice(&w.to_le_bytes());
-            }
+            put_words(&mut out, signs);
             out
         }
     }
 }
 
-/// Decode a wire frame back to a payload.
+/// Decode a wire frame back to a payload. Returns `Err` (never panics,
+/// never reads past the frame) on malformed input: unknown tags,
+/// truncated or over-long frames. Sign frames with garbage bits beyond
+/// m are canonicalized (tail masked) on adoption.
 pub fn decode(bytes: &[u8]) -> Result<Payload> {
     if bytes.len() < 5 {
         bail!("frame too short ({} bytes)", bytes.len());
@@ -96,11 +117,7 @@ pub fn decode(bytes: &[u8]) -> Result<Payload> {
             if bytes.len() != need {
                 bail!("signs frame: expected {need} bytes, got {}", bytes.len());
             }
-            let words: Vec<u64> = bytes[5..]
-                .chunks_exact(8)
-                .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
-                .collect();
-            Ok(Payload::Signs(unpack_signs(&words, len)))
+            Ok(Payload::Signs(get_words(&bytes[5..], len)))
         }
         TAG_SCALED => {
             let need = 9 + packed_bytes(len);
@@ -108,11 +125,7 @@ pub fn decode(bytes: &[u8]) -> Result<Payload> {
                 bail!("scaled frame: expected {need} bytes, got {}", bytes.len());
             }
             let scale = f32::from_le_bytes(bytes[5..9].try_into().unwrap());
-            let words: Vec<u64> = bytes[9..]
-                .chunks_exact(8)
-                .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
-                .collect();
-            Ok(Payload::ScaledSigns { signs: unpack_signs(&words, len), scale })
+            Ok(Payload::ScaledSigns { signs: get_words(&bytes[9..], len), scale })
         }
         t => bail!("unknown payload tag {t}"),
     }
@@ -122,8 +135,8 @@ pub fn decode(bytes: &[u8]) -> Result<Payload> {
 pub fn frame_bytes(p: &Payload) -> usize {
     match p {
         Payload::Dense(v) => 5 + 4 * v.len(),
-        Payload::Signs(v) => 5 + packed_bytes(v.len()),
-        Payload::ScaledSigns { signs, .. } => 9 + packed_bytes(signs.len()),
+        Payload::Signs(z) => 5 + packed_bytes(z.m()),
+        Payload::ScaledSigns { signs, .. } => 9 + packed_bytes(signs.m()),
     }
 }
 
@@ -133,8 +146,16 @@ mod tests {
     use crate::util::proptest::check;
     use crate::util::rng::Rng;
 
-    fn rand_signs(rng: &mut Rng, n: usize) -> Vec<f32> {
+    fn rand_sign_lanes(rng: &mut Rng, n: usize) -> Vec<f32> {
         (0..n).map(|_| if rng.f32() < 0.5 { 1.0 } else { -1.0 }).collect()
+    }
+
+    fn rand_signs(rng: &mut Rng, n: usize) -> SignVec {
+        SignVec::from_fn(n, |_| rng.f32() < 0.5)
+    }
+
+    fn hex(bytes: &[u8]) -> String {
+        bytes.iter().map(|b| format!("{b:02x}")).collect()
     }
 
     #[test]
@@ -179,15 +200,84 @@ mod tests {
     }
 
     #[test]
+    fn packed_and_lane_constructions_encode_identically() {
+        // the SignVec refactor must not move a single wire byte: packing
+        // at construction and packing-at-encode are the same frame
+        check("codec_pack_equivalence", 30, |rng| {
+            let n = rng.below(300) + 1;
+            let lanes = rand_sign_lanes(rng, n);
+            let a = encode(&Payload::Signs(SignVec::from_signs(&lanes)));
+            let b = encode(&Payload::Signs(SignVec::from_fn(n, |i| lanes[i] >= 0.0)));
+            if a != b {
+                return Err("construction path changed wire bytes".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
     fn exact_wire_sizes() {
         // the communication-cost claims in Table 2 rest on these sizes
+        let ones = |n: usize| SignVec::from_signs(&vec![1.0f32; n]);
         assert_eq!(encode(&Payload::Dense(vec![0.0; 100])).len(), 5 + 400);
-        assert_eq!(encode(&Payload::Signs(vec![1.0; 64])).len(), 5 + 8);
-        assert_eq!(encode(&Payload::Signs(vec![1.0; 65])).len(), 5 + 16);
+        assert_eq!(encode(&Payload::Signs(ones(64))).len(), 5 + 8);
+        assert_eq!(encode(&Payload::Signs(ones(65))).len(), 5 + 16);
         assert_eq!(
-            encode(&Payload::ScaledSigns { signs: vec![1.0; 64], scale: 1.0 }).len(),
+            encode(&Payload::ScaledSigns { signs: ones(64), scale: 1.0 }).len(),
             9 + 8
         );
+    }
+
+    /// Byte-exact golden frames for all three tags, including the
+    /// tail-bit cases m = 63 / 64 / 65. These hex strings are the wire
+    /// format: any change here is a protocol break and invalidates the
+    /// Table 2 communication-cost accounting. Do not regenerate them
+    /// from the encoder under test — they are written out by hand.
+    #[test]
+    fn golden_wire_frames() {
+        let cases: [(Payload, &str); 5] = [
+            // tag 1 (dense), [1.0, -2.5]:
+            // 01 | len=2 le | 1.0 = 0x3f800000 le | -2.5 = 0xc0200000 le
+            (Payload::Dense(vec![1.0, -2.5]), "01020000000000803f000020c0"),
+            // tag 2 (signs), m=63, +1 at i % 3 == 0:
+            // word0 = Σ_{k=0..20} 8^k = (2^63−1)/7 = 0x1249249249249249
+            // (le bytes 49 92 24 49 92 24 49 12); bit 63 is beyond m and
+            // stays clear
+            (
+                Payload::Signs(SignVec::from_fn(63, |i| i % 3 == 0)),
+                "023f0000004992244992244912",
+            ),
+            // tag 2 (signs), m=64, all +1: exactly one full word
+            (
+                Payload::Signs(SignVec::from_signs(&[1.0f32; 64])),
+                "0240000000ffffffffffffffff",
+            ),
+            // tag 2 (signs), m=65, +1 at even i: word0 = 0x5555…,
+            // one bit spills into word1 (bit 64 set, 63 padding zeros)
+            (
+                Payload::Signs(SignVec::from_fn(65, |i| i % 2 == 0)),
+                "024100000055555555555555550100000000000000",
+            ),
+            // tag 3 (scaled signs), m=65, scale=0.5, +1 at odd i:
+            // 03 | len=0x41 le | 0.5 = 0x3f000000 le | word0 = 0xaaaa…,
+            // word1 = 0 (bit 64 is even → −1)
+            (
+                Payload::ScaledSigns {
+                    signs: SignVec::from_fn(65, |i| i % 2 == 1),
+                    scale: 0.5,
+                },
+                "03410000000000003faaaaaaaaaaaaaaaa0000000000000000",
+            ),
+        ];
+        for (p, want) in &cases {
+            assert_eq!(&hex(&encode(p)), want, "golden frame encode: {p:?}");
+            let bytes: Vec<u8> = (0..want.len())
+                .step_by(2)
+                .map(|i| u8::from_str_radix(&want[i..i + 2], 16).unwrap())
+                .collect();
+            assert_eq!(&decode(&bytes).unwrap(), p, "golden frame decode");
+            assert_eq!(frame_bytes(p), bytes.len());
+        }
     }
 
     #[test]
@@ -197,6 +287,72 @@ mod tests {
         let mut ok = encode(&Payload::Dense(vec![1.0, 2.0]));
         ok.pop(); // truncate
         assert!(decode(&ok).is_err());
+    }
+
+    #[test]
+    fn decode_never_panics_on_arbitrary_bytes() {
+        // fuzz-style: decode must return Err (or a length-consistent Ok)
+        // on arbitrary byte strings — no panic, no over-read
+        check("codec_fuzz_arbitrary", 300, |rng| {
+            let len = rng.below(80);
+            let bytes: Vec<u8> = (0..len).map(|_| rng.next_u32() as u8).collect();
+            match decode(&bytes) {
+                Err(_) => Ok(()),
+                Ok(p) => {
+                    // an accidental valid frame must account for every
+                    // input byte — anything else means an over- or
+                    // under-read of the buffer
+                    if frame_bytes(&p) == bytes.len() {
+                        Ok(())
+                    } else {
+                        Err(format!(
+                            "decoded {} bytes as a {}-byte frame",
+                            bytes.len(),
+                            frame_bytes(&p)
+                        ))
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn decode_rejects_truncations_and_survives_mutations() {
+        check("codec_fuzz_mutations", 150, |rng| {
+            // a random valid frame of a random kind
+            let n = rng.below(200) + 1;
+            let p = match rng.below(3) {
+                0 => Payload::Dense((0..n).map(|_| rng.normal()).collect()),
+                1 => Payload::Signs(rand_signs(rng, n)),
+                _ => Payload::ScaledSigns { signs: rand_signs(rng, n), scale: rng.f32() },
+            };
+            let frame = encode(&p);
+
+            // every strict truncation must be rejected (the header's
+            // exact-length contract)
+            let cut = rng.below(frame.len());
+            if decode(&frame[..cut]).is_ok() {
+                return Err(format!("truncation to {cut} bytes accepted"));
+            }
+
+            // a single-byte mutation must never panic; header mutations
+            // that happen to stay self-consistent may decode as a
+            // different (valid) payload, but must account for exactly
+            // the frame's bytes
+            let idx = rng.below(frame.len());
+            let mut mutated = frame.clone();
+            mutated[idx] ^= 1u8 << rng.below(8);
+            match decode(&mutated) {
+                Err(_) => Ok(()),
+                Ok(q) => {
+                    if frame_bytes(&q) == mutated.len() {
+                        Ok(())
+                    } else {
+                        Err("mutated frame decoded inconsistently".into())
+                    }
+                }
+            }
+        });
     }
 
     #[test]

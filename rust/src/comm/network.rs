@@ -7,9 +7,13 @@
 //! its own noise RNG: under bit-flip noise (the unreliable IoT/V2X links
 //! of the paper's motivating setting) every recipient of a broadcast
 //! receives an *independently* corrupted copy, and the sender's own
-//! state is never touched. Per-round byte accounting merges the
-//! per-client shards into the [`Ledger`]; integer sums commute, so the
-//! merged totals are byte-identical to serial metering (DESIGN.md §5).
+//! state is never touched. Corruption operates directly on the packed
+//! [`SignVec`] words via masked XOR (one RNG draw per live bit, in bit
+//! order, so the noise stream is identical to a ±1-lane walk); padding
+//! bits beyond m are never flipped. Per-round byte accounting merges
+//! the per-client shards into the [`Ledger`]; integer sums commute, so
+//! the merged totals are byte-identical to serial metering
+//! (DESIGN.md §5).
 
 use anyhow::Result;
 
@@ -63,16 +67,12 @@ impl Channel {
     }
 
     fn corrupt(&mut self, payload: &mut Payload, p: f64) {
-        let flip = |rng: &mut Rng, signs: &mut [f32]| {
-            for s in signs.iter_mut() {
-                if rng.f64() < p {
-                    *s = -*s;
-                }
-            }
-        };
+        // masked XOR on the packed words: each live bit draws once from
+        // this link's stream (ascending bit order); tail bits stay zero
+        let rng = &mut self.rng;
         match payload {
-            Payload::Signs(v) => flip(&mut self.rng, v),
-            Payload::ScaledSigns { signs, .. } => flip(&mut self.rng, signs),
+            Payload::Signs(z) => z.flip_bits_where(|_| rng.f64() < p),
+            Payload::ScaledSigns { signs, .. } => signs.flip_bits_where(|_| rng.f64() < p),
             Payload::Dense(_) => {} // full-precision links modeled clean
         }
     }
@@ -147,11 +147,16 @@ impl SimNetwork {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sketch::bitpack::SignVec;
+
+    fn ones(n: usize) -> Payload {
+        Payload::Signs(SignVec::from_signs(&vec![1.0f32; n]))
+    }
 
     #[test]
     fn metering_matches_frames() {
         let mut net = SimNetwork::new(0);
-        let up = Payload::Signs(vec![1.0; 128]);
+        let up = ones(128);
         let down = Payload::Dense(vec![0.5; 10]);
         net.uplink_from(0, &up).unwrap();
         net.downlink_to(1, &down).unwrap();
@@ -163,7 +168,10 @@ mod tests {
     #[test]
     fn clean_channel_is_lossless() {
         let mut net = SimNetwork::new(1);
-        let p = Payload::ScaledSigns { signs: vec![1.0, -1.0, 1.0], scale: 2.0 };
+        let p = Payload::ScaledSigns {
+            signs: SignVec::from_signs(&[1.0, -1.0, 1.0]),
+            scale: 2.0,
+        };
         let got = net.uplink_from(3, &p).unwrap();
         assert_eq!(got, p);
     }
@@ -171,7 +179,7 @@ mod tests {
     #[test]
     fn broadcast_counts_per_recipient() {
         let mut net = SimNetwork::new(2);
-        let v = Payload::Signs(vec![1.0; 64]);
+        let v = ones(64);
         for k in 0..20 {
             net.downlink_to(k, &v).unwrap();
         }
@@ -183,7 +191,7 @@ mod tests {
     #[test]
     fn shards_meter_per_client_and_merge_exactly() {
         let mut net = SimNetwork::new(7);
-        let sig = Payload::Signs(vec![1.0; 64]); // 5 + 8 bytes
+        let sig = ones(64); // 5 + 8 bytes
         net.uplink_from(0, &sig).unwrap();
         net.uplink_from(0, &sig).unwrap();
         net.uplink_from(1, &sig).unwrap();
@@ -206,14 +214,31 @@ mod tests {
     fn noisy_channel_flips_about_p_bits() {
         let mut net = SimNetwork::new(3).with_bit_flips(0.25);
         let n = 10_000;
-        let sent = Payload::Signs(vec![1.0; n]);
+        let sent = ones(n);
         let got = match net.uplink_from(0, &sent).unwrap() {
             Payload::Signs(v) => v,
             _ => unreachable!(),
         };
-        let flipped = got.iter().filter(|&&s| s < 0.0).count();
+        let flipped = got.iter_signs().filter(|&s| s < 0.0).count();
         let frac = flipped as f64 / n as f64;
         assert!((frac - 0.25).abs() < 0.03, "flip rate {frac}");
+    }
+
+    #[test]
+    fn packed_corruption_never_touches_padding_bits() {
+        // m=65: one live bit in the tail word, 63 padding bits. With
+        // p=1.0 every live bit flips and every padding bit must stay 0,
+        // or downstream word-level equality/popcounts would drift.
+        let mut net = SimNetwork::new(5).with_bit_flips(1.0);
+        let sent = ones(65);
+        let got = match net.downlink_to(0, &sent).unwrap() {
+            Payload::Signs(v) => v,
+            _ => unreachable!(),
+        };
+        assert_eq!(got, SignVec::from_signs(&[-1.0f32; 65]));
+        assert_eq!(got.words()[1], 0, "corruption leaked into tail padding");
+        let Payload::Signs(sent_sv) = &sent else { unreachable!() };
+        assert_eq!(sent_sv.hamming(&got), 65);
     }
 
     #[test]
@@ -221,7 +246,7 @@ mod tests {
         // the IoT/V2X setting: per-link noise is independent, so two
         // recipients of the same broadcast see different corruption
         let mut net = SimNetwork::new(4).with_bit_flips(0.5);
-        let sent = Payload::Signs(vec![1.0; 256]);
+        let sent = ones(256);
         let a = net.downlink_to(0, &sent).unwrap();
         let b = net.downlink_to(1, &sent).unwrap();
         assert_ne!(a, b, "two links produced identical corruption");

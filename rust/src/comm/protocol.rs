@@ -44,10 +44,11 @@ impl Uplink {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sketch::bitpack::SignVec;
 
     #[test]
     fn messages_carry_round_and_payload() {
-        let d = Downlink::new(3, Payload::Signs(vec![1.0, -1.0]));
+        let d = Downlink::new(3, Payload::Signs(SignVec::from_signs(&[1.0, -1.0])));
         assert_eq!(d.round, 3);
         assert_eq!(d.payload.len(), 2);
         let u = Uplink::new(3, Payload::Dense(vec![0.5]));

@@ -21,6 +21,11 @@ pub struct RoundRecord {
     pub duration_ms: f64,
     /// mean ‖∇F̃_k‖² diagnostic (Theorem 1), when requested
     pub grad_norm: Option<f64>,
+    /// Hamming distance between this round's consensus v^{t+1} and the
+    /// previous round's, computed on the packed words (`hamming_packed`
+    /// popcount — DESIGN.md §8). `None` for algorithms without a
+    /// consensus and for the first consensus-bearing round.
+    pub consensus_flips: Option<usize>,
 }
 
 /// Full run history + summary.
@@ -74,7 +79,7 @@ impl History {
     }
 
     /// Write `round,train_loss,test_acc,test_loss,uplink_bytes,
-    /// downlink_bytes,duration_ms,grad_norm` CSV.
+    /// downlink_bytes,duration_ms,grad_norm,consensus_flips` CSV.
     pub fn write_csv(&self, path: impl AsRef<Path>, header_comment: &str) -> Result<()> {
         let path = path.as_ref();
         if let Some(dir) = path.parent() {
@@ -87,12 +92,12 @@ impl History {
         }
         writeln!(
             f,
-            "round,train_loss,test_acc,test_loss,uplink_bytes,downlink_bytes,duration_ms,grad_norm"
+            "round,train_loss,test_acc,test_loss,uplink_bytes,downlink_bytes,duration_ms,grad_norm,consensus_flips"
         )?;
         for r in &self.records {
             writeln!(
                 f,
-                "{},{:.6},{},{},{},{},{:.3},{}",
+                "{},{:.6},{},{},{},{},{:.3},{},{}",
                 r.round,
                 r.train_loss,
                 fmt_opt(r.test_acc),
@@ -101,6 +106,9 @@ impl History {
                 r.bytes.downlink,
                 r.duration_ms,
                 fmt_opt(r.grad_norm),
+                r.consensus_flips
+                    .map(|x| x.to_string())
+                    .unwrap_or_default(),
             )?;
         }
         Ok(())
@@ -124,6 +132,7 @@ mod tests {
             bytes: RoundBytes { uplink: 100, downlink: 50, uplink_msgs: 2, downlink_msgs: 1 },
             duration_ms: 5.0,
             grad_norm: None,
+            consensus_flips: if round > 0 { Some(round * 3) } else { None },
         }
     }
 
@@ -153,6 +162,7 @@ mod tests {
         let lines: Vec<&str> = text.lines().collect();
         assert!(lines[0].starts_with("# unit test"));
         assert!(lines[1].starts_with("round,train_loss"));
+        assert!(lines[1].ends_with("grad_norm,consensus_flips"));
         assert_eq!(lines.len(), 3);
         assert!(lines[2].starts_with("0,"));
         std::fs::remove_dir_all(&dir).ok();

@@ -34,7 +34,7 @@ use crate::comm::{Downlink, SimNetwork};
 use crate::config::{ProjectionKind, RunConfig};
 use crate::data::{generate, FederatedData};
 use crate::runtime::ModelRuntime;
-use crate::sketch::{DenseGaussianOperator, Projection, SrhtOperator};
+use crate::sketch::{DenseGaussianOperator, Projection, SignVec, SrhtOperator};
 use crate::util::rng::Rng;
 
 pub use checkpoint::Checkpoint;
@@ -231,11 +231,20 @@ impl<'a> Coordinator<'a> {
         self.init_algorithm(alg)?;
 
         let mut history = History::default();
+        // previous round's packed consensus, for the Hamming-flip
+        // diagnostic (popcount over the packed words — no unpack)
+        let mut prev_consensus: Option<SignVec> = None;
         for t in 0..self.cfg.rounds {
             let started = Instant::now();
             let (selected, weights) = self.sample_round();
             let outcome = self.run_round(alg, t, &selected, &weights)?;
             let bytes = self.net.end_round();
+
+            let consensus_flips = alg.consensus_packed().and_then(|cur| {
+                let flips = prev_consensus.as_ref().map(|prev| prev.hamming(cur));
+                prev_consensus = Some(cur.clone());
+                flips
+            });
 
             let is_eval_round =
                 t % self.cfg.eval_every == 0 || t + 1 == self.cfg.rounds;
@@ -260,6 +269,7 @@ impl<'a> Coordinator<'a> {
                 bytes,
                 duration_ms: started.elapsed().as_secs_f64() * 1e3,
                 grad_norm,
+                consensus_flips,
             });
             if let Some((path, every)) = &self.checkpoint {
                 if (t + 1) % every == 0 || t + 1 == self.cfg.rounds {

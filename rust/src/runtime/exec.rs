@@ -376,6 +376,13 @@ impl ModelRuntime {
         Self::vec_f32(&out[0])
     }
 
+    /// z = sign(Φw) packed to u64 words — the transport-ready form. The
+    /// HLO artifact emits f32 ±1 lanes; this is the single pack at the
+    /// compute/transport boundary (DESIGN.md §8).
+    pub fn sketch_sign_packed(&self, w: &[f32]) -> Result<crate::sketch::bitpack::SignVec> {
+        Ok(crate::sketch::bitpack::SignVec::from_signs(&self.sketch_sign(w)?))
+    }
+
     /// (#correct, loss_sum) over one eval batch (padding labels < 0 are
     /// masked inside the artifact).
     pub fn eval_batch(&self, w: &[f32], x: &[f32], y: &[i32]) -> Result<(f32, f32)> {

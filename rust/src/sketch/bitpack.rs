@@ -1,10 +1,146 @@
-//! One-bit packing and the server's weighted majority vote (Lemma 1).
+//! Packed one-bit sign vectors ([`SignVec`]) and the server's weighted
+//! majority vote (Lemma 1).
 //!
-//! Sign vectors in {−1,+1}^m are transported as ⌈m/64⌉ u64 words (bit 1 ⇔
-//! +1). The server aggregation v = sign(Σ pₖ zₖ) runs either on unpacked
-//! f32 accumulators (general weights) or fully packed via popcount when
-//! weights are uniform — the packed path is the optimized hot loop used
-//! by `benches/bench_aggregate.rs`.
+//! A sign vector z ∈ {−1,+1}^m is stored as ⌈m/64⌉ u64 words (bit set ⇔
+//! +1, with the `sign(0) := +1` convention used everywhere in the
+//! system) and stays packed end-to-end: algorithms build a `SignVec`
+//! once at the compression boundary, the codec memcpys its words onto
+//! the wire, the simulated network corrupts bits with masked XOR, and
+//! the majority vote borrows client words directly. f32 ±1 lanes exist
+//! only at the compute boundary (the HLO client step and server-side
+//! reconstruction) — see DESIGN.md §8 for which layers own the
+//! pack/unpack boundaries.
+//!
+//! Invariant: bits at positions ≥ m in the last word are always zero
+//! ("canonical tail"), so derived equality and word-level popcounts are
+//! semantic — every constructor masks the tail.
+
+use std::borrow::Borrow;
+
+/// A packed ±1 sign vector: ⌈m/64⌉ u64 words plus the logical length m.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct SignVec {
+    words: Vec<u64>,
+    m: usize,
+}
+
+impl SignVec {
+    /// Pack a ±1 (or arbitrary f32) vector; `sign(0) := +1`.
+    pub fn from_signs(signs: &[f32]) -> SignVec {
+        SignVec { words: pack_signs(signs), m: signs.len() }
+    }
+
+    /// Build bit-by-bit. `sign_is_plus(i)` is called exactly once per
+    /// index, in ascending order 0..m — callers drive RNG streams
+    /// through the closure and rely on that order for determinism.
+    pub fn from_fn(m: usize, mut sign_is_plus: impl FnMut(usize) -> bool) -> SignVec {
+        let mut words = vec![0u64; m.div_ceil(64)];
+        for i in 0..m {
+            if sign_is_plus(i) {
+                words[i / 64] |= 1u64 << (i % 64);
+            }
+        }
+        SignVec { words, m }
+    }
+
+    /// Adopt raw words (e.g. straight off the wire). The tail is masked
+    /// to keep equality semantic even if the source carried garbage
+    /// bits beyond m.
+    pub fn from_words(mut words: Vec<u64>, m: usize) -> SignVec {
+        assert_eq!(
+            words.len(),
+            m.div_ceil(64),
+            "need {} words for m={m}, got {}",
+            m.div_ceil(64),
+            words.len()
+        );
+        mask_tail(&mut words, m);
+        SignVec { words, m }
+    }
+
+    /// Logical length m (number of signs).
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    pub fn len(&self) -> usize {
+        self.m
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.m == 0
+    }
+
+    /// The packed words (tail bits beyond m are zero).
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    /// Exact payload bytes when serialized (whole words).
+    pub fn byte_len(&self) -> usize {
+        self.words.len() * 8
+    }
+
+    /// Bit i (true ⇔ +1).
+    #[inline]
+    pub fn bit(&self, i: usize) -> bool {
+        debug_assert!(i < self.m);
+        self.words[i / 64] >> (i % 64) & 1 == 1
+    }
+
+    /// Sign i as ±1.0.
+    #[inline]
+    pub fn sign(&self, i: usize) -> f32 {
+        if self.bit(i) {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    /// Unpack to ±1.0 f32 lanes (compute-boundary use only).
+    pub fn to_signs(&self) -> Vec<f32> {
+        unpack_signs(&self.words, self.m)
+    }
+
+    /// Iterate the signs as ±1.0 without materializing an f32 vector.
+    pub fn iter_signs(&self) -> impl Iterator<Item = f32> + '_ {
+        (0..self.m).map(move |i| self.sign(i))
+    }
+
+    /// Hamming distance to `other` (consensus-distance diagnostic).
+    pub fn hamming(&self, other: &SignVec) -> usize {
+        assert_eq!(self.m, other.m, "hamming over mismatched lengths");
+        hamming_packed(&self.words, &other.words, self.m)
+    }
+
+    /// Flip the bits selected by `flip(i)` via per-word masked XOR.
+    /// `flip` is called once per index in ascending order 0..m (so an
+    /// RNG-driven closure consumes exactly the stream a ±1-lane walk
+    /// would), and bits beyond m are never touched.
+    pub fn flip_bits_where(&mut self, mut flip: impl FnMut(usize) -> bool) {
+        let m = self.m;
+        for (w, word) in self.words.iter_mut().enumerate() {
+            let bits = (m - w * 64).min(64);
+            let mut mask = 0u64;
+            for b in 0..bits {
+                if flip(w * 64 + b) {
+                    mask |= 1u64 << b;
+                }
+            }
+            *word ^= mask;
+        }
+    }
+}
+
+fn mask_tail(words: &mut [u64], m: usize) {
+    let tail = m % 64;
+    if tail != 0 {
+        if let Some(last) = words.last_mut() {
+            *last &= (1u64 << tail) - 1;
+        }
+    }
+}
 
 /// Pack a ±1 f32 sign vector into u64 words (bit set ⇔ value >= 0).
 pub fn pack_signs(signs: &[f32]) -> Vec<u64> {
@@ -39,15 +175,23 @@ pub fn packed_bytes(m: usize) -> usize {
 
 /// Weighted majority vote v = sign(Σ pₖ zₖ) over packed sketches
 /// (Lemma 1: the exact minimizer of the server objective, Eq. 13/14).
-/// Ties (Σ = 0) break toward +1, matching `sign(0) = +1` everywhere else.
-pub fn majority_vote_weighted(sketches: &[Vec<u64>], weights: &[f32], m: usize) -> Vec<u64> {
+/// Ties (Σ = 0) break toward +1, matching `sign(0) = +1` everywhere
+/// else. Generic over `Borrow<SignVec>` so the server can vote directly
+/// over `&SignVec`s borrowed from delivered uplinks — no per-round
+/// re-pack or copy of the client words.
+pub fn majority_vote_weighted<S: Borrow<SignVec>>(
+    sketches: &[S],
+    weights: &[f32],
+    m: usize,
+) -> SignVec {
     assert_eq!(sketches.len(), weights.len());
     let words = m.div_ceil(64);
     let mut acc = vec![0.0f32; m];
     for (z, &p) in sketches.iter().zip(weights) {
-        debug_assert!(z.len() >= words);
+        let z = z.borrow();
+        debug_assert_eq!(z.m(), m, "sketch length mismatch in vote");
         for (i, a) in acc.iter_mut().enumerate() {
-            let bit = z[i / 64] >> (i % 64) & 1;
+            let bit = z.words()[i / 64] >> (i % 64) & 1;
             *a += if bit == 1 { p } else { -p };
         }
     }
@@ -57,14 +201,14 @@ pub fn majority_vote_weighted(sketches: &[Vec<u64>], weights: &[f32], m: usize) 
             out[i / 64] |= 1u64 << (i % 64);
         }
     }
-    out
+    SignVec { words: out, m }
 }
 
 /// Uniform-weight majority vote on packed words via per-bit counters —
 /// the optimized path: one popcount-style pass, no f32 accumulator array
 /// walk per client bit. For K clients bit i wins (+1) iff
 /// #,{k: bit set} * 2 >= K (ties toward +1).
-pub fn majority_vote_uniform(sketches: &[Vec<u64>], m: usize) -> Vec<u64> {
+pub fn majority_vote_uniform<S: Borrow<SignVec>>(sketches: &[S], m: usize) -> SignVec {
     let k = sketches.len();
     assert!(k > 0);
     let words = m.div_ceil(64);
@@ -75,7 +219,7 @@ pub fn majority_vote_uniform(sketches: &[Vec<u64>], m: usize) -> Vec<u64> {
     for w in 0..words {
         counts.iter_mut().for_each(|c| *c = 0);
         for z in sketches {
-            let word = z[w];
+            let word = z.borrow().words()[w];
             // unrolled bit-scatter: only set bits touch the counter
             let mut rem = word;
             while rem != 0 {
@@ -92,17 +236,15 @@ pub fn majority_vote_uniform(sketches: &[Vec<u64>], m: usize) -> Vec<u64> {
         }
         out[w] = res;
     }
-    // mask tail bits beyond m so equality checks are well-defined
-    let tail = m % 64;
-    if tail != 0 {
-        let mask = (1u64 << tail) - 1;
-        *out.last_mut().unwrap() &= mask;
-        // ties toward +1 for padding bits are irrelevant; keep them zero
-    }
-    out
+    // mask tail bits beyond m so the canonical-tail invariant holds
+    // (padding-bit ties toward +1 are irrelevant; keep them zero)
+    mask_tail(&mut out, m);
+    SignVec { words: out, m }
 }
 
 /// Hamming distance between two packed sign vectors (first m bits).
+/// Word-level primitive: garbage bits beyond m are masked out, so
+/// callers may pass raw (non-canonical) word buffers.
 pub fn hamming_packed(a: &[u64], b: &[u64], m: usize) -> usize {
     let words = m.div_ceil(64);
     let mut dist = 0usize;
@@ -121,23 +263,66 @@ mod tests {
     use super::*;
     use crate::util::proptest::check;
 
+    fn rand_signs(rng: &mut crate::util::rng::Rng, m: usize) -> Vec<f32> {
+        (0..m)
+            .map(|_| if rng.f32() < 0.5 { 1.0 } else { -1.0 })
+            .collect()
+    }
+
     #[test]
     fn pack_round_trip_property() {
         check("bitpack_round_trip", 50, |rng| {
             let m = rng.below(500) + 1;
-            let signs: Vec<f32> = (0..m)
-                .map(|_| if rng.f32() < 0.5 { 1.0 } else { -1.0 })
-                .collect();
-            let packed = pack_signs(&signs);
-            if packed.len() != m.div_ceil(64) {
+            let signs = rand_signs(rng, m);
+            let packed = SignVec::from_signs(&signs);
+            if packed.words().len() != m.div_ceil(64) {
                 return Err("wrong word count".into());
             }
-            let back = unpack_signs(&packed, m);
-            if back != signs {
+            if packed.m() != m || packed.byte_len() != packed_bytes(m) {
+                return Err("wrong geometry".into());
+            }
+            if packed.to_signs() != signs {
                 return Err("round trip mismatch".into());
+            }
+            if packed.iter_signs().collect::<Vec<f32>>() != signs {
+                return Err("iter_signs mismatch".into());
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn from_fn_matches_from_signs() {
+        check("signvec_from_fn", 50, |rng| {
+            let m = rng.below(400) + 1;
+            let signs = rand_signs(rng, m);
+            let a = SignVec::from_signs(&signs);
+            let mut order = Vec::new();
+            let b = SignVec::from_fn(m, |i| {
+                order.push(i);
+                signs[i] >= 0.0
+            });
+            if a != b {
+                return Err("from_fn disagrees with from_signs".into());
+            }
+            if order != (0..m).collect::<Vec<usize>>() {
+                return Err("from_fn did not call in ascending index order".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn from_words_masks_garbage_tail() {
+        // a wire frame may carry arbitrary bits beyond m; adopting the
+        // words must canonicalize so equality stays semantic
+        let dirty = vec![u64::MAX];
+        let sv = SignVec::from_words(dirty, 3);
+        assert_eq!(sv.words(), &[0b111u64]);
+        assert_eq!(sv, SignVec::from_signs(&[1.0, 1.0, 1.0]));
+        // exact multiples of 64 have no tail to mask
+        let full = SignVec::from_words(vec![u64::MAX], 64);
+        assert_eq!(full.words(), &[u64::MAX]);
     }
 
     #[test]
@@ -150,9 +335,35 @@ mod tests {
 
     #[test]
     fn zero_is_packed_as_plus_one() {
-        let packed = pack_signs(&[0.0, -1.0, 1.0]);
-        let back = unpack_signs(&packed, 3);
-        assert_eq!(back, vec![1.0, -1.0, 1.0]);
+        let packed = SignVec::from_signs(&[0.0, -1.0, 1.0]);
+        assert_eq!(packed.to_signs(), vec![1.0, -1.0, 1.0]);
+        assert!(packed.bit(0), "sign(0) := +1");
+    }
+
+    #[test]
+    fn flip_bits_where_is_exact_and_tail_safe() {
+        check("signvec_flip_mask", 40, |rng| {
+            let m = rng.below(300) + 1;
+            let signs = rand_signs(rng, m);
+            let mut sv = SignVec::from_signs(&signs);
+            let flips: Vec<bool> = (0..m).map(|_| rng.f32() < 0.3).collect();
+            sv.flip_bits_where(|i| flips[i]);
+            // reference: flip the f32 lanes
+            let want: Vec<f32> = signs
+                .iter()
+                .zip(&flips)
+                .map(|(&s, &f)| if f { -s } else { s })
+                .collect();
+            if sv.to_signs() != want {
+                return Err("flip pattern mismatch".into());
+            }
+            // canonical tail must survive arbitrary flips
+            let tail = m % 64;
+            if tail != 0 && sv.words().last().unwrap() >> tail != 0 {
+                return Err("flip touched tail bits beyond m".into());
+            }
+            Ok(())
+        });
     }
 
     #[test]
@@ -160,13 +371,7 @@ mod tests {
         check("majority_vote_weighted_ref", 40, |rng| {
             let k = rng.below(8) + 1;
             let m = rng.below(300) + 1;
-            let sketches: Vec<Vec<f32>> = (0..k)
-                .map(|_| {
-                    (0..m)
-                        .map(|_| if rng.f32() < 0.5 { 1.0 } else { -1.0 })
-                        .collect()
-                })
-                .collect();
+            let sketches: Vec<Vec<f32>> = (0..k).map(|_| rand_signs(rng, m)).collect();
             let mut weights: Vec<f32> = (0..k).map(|_| rng.f32() + 0.01).collect();
             let total: f32 = weights.iter().sum();
             weights.iter_mut().for_each(|w| *w /= total);
@@ -180,8 +385,8 @@ mod tests {
             }
             let want: Vec<f32> = acc.iter().map(|&a| if a >= 0.0 { 1.0 } else { -1.0 }).collect();
 
-            let packed: Vec<Vec<u64>> = sketches.iter().map(|z| pack_signs(z)).collect();
-            let got = unpack_signs(&majority_vote_weighted(&packed, &weights, m), m);
+            let packed: Vec<SignVec> = sketches.iter().map(|z| SignVec::from_signs(z)).collect();
+            let got = majority_vote_weighted(&packed, &weights, m).to_signs();
             // f32-vs-f64 accumulation can disagree only at near-exact ties
             let mismatches = got
                 .iter()
@@ -203,22 +408,38 @@ mod tests {
             // accumulation of ±1/K may land on either side of 0.0
             let k = 2 * rng.below(5) + 1;
             let m = rng.below(500) + 1;
-            let packed: Vec<Vec<u64>> = (0..k)
-                .map(|_| {
-                    let signs: Vec<f32> = (0..m)
-                        .map(|_| if rng.f32() < 0.5 { 1.0 } else { -1.0 })
-                        .collect();
-                    pack_signs(&signs)
-                })
+            let packed: Vec<SignVec> = (0..k)
+                .map(|_| SignVec::from_signs(&rand_signs(rng, m)))
                 .collect();
             let w = vec![1.0f32 / k as f32; k];
             let a = majority_vote_uniform(&packed, m);
             let b = majority_vote_weighted(&packed, &w, m);
-            if unpack_signs(&a, m) != unpack_signs(&b, m) {
+            if a != b {
                 return Err("uniform != weighted".into());
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn votes_accept_borrowed_sketches() {
+        // the server path: vote directly over &SignVec borrowed from
+        // delivered uplinks, no copy or re-pack
+        let owned: Vec<SignVec> = vec![
+            SignVec::from_signs(&[1.0, -1.0, 1.0]),
+            SignVec::from_signs(&[1.0, 1.0, -1.0]),
+            SignVec::from_signs(&[1.0, -1.0, -1.0]),
+        ];
+        let borrowed: Vec<&SignVec> = owned.iter().collect();
+        let w = vec![1.0f32 / 3.0; 3];
+        assert_eq!(
+            majority_vote_weighted(&borrowed, &w, 3),
+            majority_vote_weighted(&owned, &w, 3)
+        );
+        assert_eq!(
+            majority_vote_uniform(&borrowed, 3).to_signs(),
+            vec![1.0, -1.0, -1.0]
+        );
     }
 
     #[test]
@@ -227,16 +448,10 @@ mod tests {
         check("vote_lemma1_optimal", 20, |rng| {
             let k = rng.below(5) + 1;
             let m = rng.below(6) + 1;
-            let sketches: Vec<Vec<f32>> = (0..k)
-                .map(|_| {
-                    (0..m)
-                        .map(|_| if rng.f32() < 0.5 { 1.0 } else { -1.0 })
-                        .collect()
-                })
-                .collect();
+            let sketches: Vec<Vec<f32>> = (0..k).map(|_| rand_signs(rng, m)).collect();
             let weights = vec![1.0f32 / k as f32; k];
-            let packed: Vec<Vec<u64>> = sketches.iter().map(|z| pack_signs(z)).collect();
-            let vstar = unpack_signs(&majority_vote_weighted(&packed, &weights, m), m);
+            let packed: Vec<SignVec> = sketches.iter().map(|z| SignVec::from_signs(z)).collect();
+            let vstar = majority_vote_weighted(&packed, &weights, m).to_signs();
 
             let g = |v: &[f32]| -> f64 {
                 // one-sided l1: sum_k p_k || [v ⊙ z_k]_- ||_1   (Eq. 2)
@@ -266,17 +481,43 @@ mod tests {
     }
 
     #[test]
+    fn hamming_matches_unpacked_reference_with_dirty_tails() {
+        // the word-level primitive must count only the first m bits even
+        // when the tail words carry garbage
+        check("hamming_packed_ref", 50, |rng| {
+            let m = rng.below(300) + 1;
+            let words = m.div_ceil(64);
+            let a: Vec<u64> = (0..words).map(|_| rng.next_u64()).collect();
+            let b: Vec<u64> = (0..words).map(|_| rng.next_u64()).collect();
+            // reference: compare the unpacked f32 lanes over exactly m bits
+            let ua = unpack_signs(&a, m);
+            let ub = unpack_signs(&b, m);
+            let want = ua.iter().zip(&ub).filter(|(x, y)| x != y).count();
+            if hamming_packed(&a, &b, m) != want {
+                return Err(format!("hamming_packed != {want} (m={m})"));
+            }
+            // the canonicalizing SignVec path must agree
+            let sa = SignVec::from_words(a, m);
+            let sb = SignVec::from_words(b, m);
+            if sa.hamming(&sb) != want {
+                return Err("SignVec::hamming disagrees".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
     fn hamming_distance() {
-        let a = pack_signs(&[1.0, 1.0, -1.0, 1.0]);
-        let b = pack_signs(&[1.0, -1.0, -1.0, -1.0]);
-        assert_eq!(hamming_packed(&a, &b, 4), 2);
-        assert_eq!(hamming_packed(&a, &a, 4), 0);
+        let a = SignVec::from_signs(&[1.0, 1.0, -1.0, 1.0]);
+        let b = SignVec::from_signs(&[1.0, -1.0, -1.0, -1.0]);
+        assert_eq!(a.hamming(&b), 2);
+        assert_eq!(a.hamming(&a), 0);
     }
 
     #[test]
     fn single_client_vote_is_identity() {
-        let z = pack_signs(&[1.0, -1.0, 1.0, -1.0, -1.0]);
+        let z = SignVec::from_signs(&[1.0, -1.0, 1.0, -1.0, -1.0]);
         let v = majority_vote_uniform(&[z.clone()], 5);
-        assert_eq!(unpack_signs(&v, 5), unpack_signs(&z, 5));
+        assert_eq!(v, z);
     }
 }

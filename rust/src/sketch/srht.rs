@@ -10,8 +10,29 @@
 //! rotation), server-side reconstruction, and the dense-Gaussian ablation
 //! of Appendix Fig. 3.
 
+use std::cell::RefCell;
+
+use crate::sketch::bitpack::SignVec;
 use crate::sketch::fwht::fwht_normalized;
 use crate::util::rng::Rng;
+
+thread_local! {
+    // Per-thread n'-sized FWHT workspace. forward/adjoint run on every
+    // baseline client step and every dense-ablation regularizer step,
+    // and the per-call `vec![0.0; npad]` was pure allocator traffic;
+    // one thread-local buffer serves the data-parallel client phase
+    // without sharing (each scoped worker gets its own).
+    static FWHT_SCRATCH: RefCell<Vec<f32>> = RefCell::new(Vec::new());
+}
+
+fn with_scratch<R>(npad: usize, f: impl FnOnce(&mut [f32]) -> R) -> R {
+    FWHT_SCRATCH.with(|cell| {
+        let mut buf = cell.borrow_mut();
+        buf.clear();
+        buf.resize(npad, 0.0);
+        f(&mut buf)
+    })
+}
 
 /// A concrete realization of the structured projection.
 #[derive(Clone, Debug)]
@@ -47,10 +68,13 @@ impl SrhtOperator {
         SrhtOperator { n, npad, m, dsign, sidx, scale }
     }
 
-    /// Forward sketch z = Φw ∈ R^m (real-valued).
+    /// Forward sketch z = Φw ∈ R^m (real-valued). Runs in the
+    /// thread-local scratch buffer — no per-call n'-sized allocation.
     pub fn forward(&self, w: &[f32]) -> Vec<f32> {
-        let mut buf = self.forward_padded(w);
-        self.subsample(&mut buf)
+        with_scratch(self.npad, |buf| {
+            self.forward_padded_into(w, buf);
+            self.subsample(buf)
+        })
     }
 
     /// One-bit sketch z = sign(Φw) ∈ {−1,+1}^m, sign(0) := +1.
@@ -61,19 +85,32 @@ impl SrhtOperator {
             .collect()
     }
 
-    /// Adjoint g = Φᵀv ∈ R^n.
+    /// One-bit sketch packed straight from the rotated scratch buffer:
+    /// the transport-ready form, with no f32 ±1 lane vector in between.
+    pub fn sketch_sign_packed(&self, w: &[f32]) -> SignVec {
+        with_scratch(self.npad, |buf| {
+            self.forward_padded_into(w, buf);
+            // same comparison as `sketch_sign`: sign of the *scaled*
+            // coordinate (scale > 0, kept for exact f32 parity)
+            SignVec::from_fn(self.m, |j| buf[self.sidx[j] as usize] * self.scale >= 0.0)
+        })
+    }
+
+    /// Adjoint g = Φᵀv ∈ R^n. Uses the thread-local scratch for the
+    /// n'-sized FWHT workspace; only the n-sized result is allocated.
     pub fn adjoint(&self, v: &[f32]) -> Vec<f32> {
         assert_eq!(v.len(), self.m);
-        let mut buf = vec![0.0f32; self.npad];
-        for (&idx, &val) in self.sidx.iter().zip(v) {
-            buf[idx as usize] = val * self.scale;
-        }
-        fwht_normalized(&mut buf);
-        for (b, &d) in buf.iter_mut().zip(&self.dsign) {
-            *b *= d;
-        }
-        buf.truncate(self.n);
-        buf
+        with_scratch(self.npad, |buf| {
+            for (&idx, &val) in self.sidx.iter().zip(v) {
+                buf[idx as usize] = val * self.scale;
+            }
+            fwht_normalized(buf);
+            buf.iter()
+                .zip(&self.dsign)
+                .take(self.n)
+                .map(|(&b, &d)| b * d)
+                .collect()
+        })
     }
 
     /// H·D·pad(w) without subsampling — the full rotated vector. EDEN
@@ -95,17 +132,25 @@ impl SrhtOperator {
         buf
     }
 
+    /// Allocating variant for callers that keep the full rotated vector
+    /// (`rotate`). Hot paths go through `forward_padded_into` + scratch.
     fn forward_padded(&self, w: &[f32]) -> Vec<f32> {
-        assert_eq!(w.len(), self.n, "expected n={} got {}", self.n, w.len());
         let mut buf = vec![0.0f32; self.npad];
-        for ((b, &x), &d) in buf.iter_mut().zip(w).zip(&self.dsign) {
-            *b = x * d;
-        }
-        fwht_normalized(&mut buf);
+        self.forward_padded_into(w, &mut buf);
         buf
     }
 
-    fn subsample(&self, buf: &mut [f32]) -> Vec<f32> {
+    /// H·D·pad(w) into a caller-provided zeroed buffer of length n'.
+    fn forward_padded_into(&self, w: &[f32], buf: &mut [f32]) {
+        assert_eq!(w.len(), self.n, "expected n={} got {}", self.n, w.len());
+        debug_assert_eq!(buf.len(), self.npad);
+        for ((b, &x), &d) in buf.iter_mut().zip(w).zip(&self.dsign) {
+            *b = x * d;
+        }
+        fwht_normalized(buf);
+    }
+
+    fn subsample(&self, buf: &[f32]) -> Vec<f32> {
         self.sidx
             .iter()
             .map(|&i| buf[i as usize] * self.scale)
@@ -207,6 +252,10 @@ impl DenseGaussianOperator {
             .map(|z| if z >= 0.0 { 1.0 } else { -1.0 })
             .collect()
     }
+
+    pub fn sketch_sign_packed(&self, w: &[f32]) -> SignVec {
+        SignVec::from_signs(&self.forward(w))
+    }
 }
 
 /// Either projection, so algorithms can be generic over Appendix Fig. 3.
@@ -242,6 +291,15 @@ impl Projection {
         match self {
             Projection::Srht(op) => op.sketch_sign(w),
             Projection::Dense(op) => op.sketch_sign(w),
+        }
+    }
+
+    /// The transport-ready packed one-bit sketch (same signs as
+    /// `sketch_sign`, without materializing the f32 ±1 lanes for SRHT).
+    pub fn sketch_sign_packed(&self, w: &[f32]) -> SignVec {
+        match self {
+            Projection::Srht(op) => op.sketch_sign_packed(w),
+            Projection::Dense(op) => op.sketch_sign_packed(w),
         }
     }
 }
@@ -349,6 +407,42 @@ mod tests {
         let op = SrhtOperator::from_seed(6, 128, 16);
         let w: Vec<f32> = (0..128).map(|_| rng.normal()).collect();
         assert!(op.sketch_sign(&w).iter().all(|&z| z == 1.0 || z == -1.0));
+    }
+
+    #[test]
+    fn packed_sketch_matches_unpacked_for_both_projections() {
+        check("sketch_sign_packed_parity", 30, |rng| {
+            let n = rng.below(400) + 2;
+            let m = (n / 4).max(1);
+            let w: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let srht = SrhtOperator::from_seed(rng.next_u64(), n, m);
+            if srht.sketch_sign_packed(&w).to_signs() != srht.sketch_sign(&w) {
+                return Err("srht packed sketch disagrees".into());
+            }
+            let dense = DenseGaussianOperator::from_seed(rng.next_u64(), n.min(64), 8);
+            let ws = &w[..n.min(64)];
+            if dense.sketch_sign_packed(ws).to_signs() != dense.sketch_sign(ws) {
+                return Err("dense packed sketch disagrees".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn scratch_reuse_is_pure() {
+        // back-to-back forward/adjoint calls share the thread-local
+        // scratch; results must be independent of call history
+        let mut rng = Rng::new(21);
+        let op = SrhtOperator::from_seed(22, 300, 40);
+        let a: Vec<f32> = (0..300).map(|_| rng.normal()).collect();
+        let b: Vec<f32> = (0..300).map(|_| rng.normal()).collect();
+        let fa = op.forward(&a);
+        let _ = op.forward(&b); // dirty the scratch with other data
+        assert_eq!(op.forward(&a), fa, "forward not pure under scratch reuse");
+        let v: Vec<f32> = (0..40).map(|_| rng.normal()).collect();
+        let ga = op.adjoint(&v);
+        let _ = op.forward(&b);
+        assert_eq!(op.adjoint(&v), ga, "adjoint not pure under scratch reuse");
     }
 
     #[test]

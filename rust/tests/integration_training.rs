@@ -169,6 +169,88 @@ fn per_round_byte_totals_match_known_good_values() {
     }
 }
 
+/// Golden-trace regression: a seeded 5-round pFed1BS run has its
+/// per-round losses (exact f64 bits) and final consensus bit-vector
+/// (exact packed words) pinned to `tests/golden/pfed1bs_trace.golden`.
+/// Once a trace is committed, any later run must reproduce it
+/// bit-for-bit — so representation changes (e.g. f32 sign lanes →
+/// packed `SignVec`) are machine-checked for trajectory identity, not
+/// desk-checked. Within one run the test also cross-checks 1-thread vs
+/// 4-thread execution, which must be bit-identical regardless of the
+/// golden.
+///
+/// Recording is explicit opt-in only: `PFED1BS_UPDATE_GOLDEN=1 cargo
+/// test --release golden_trace` writes the file (use the tier-1
+/// release profile); **commit it** to arm the comparison. When the
+/// golden is absent and the flag unset, the test does NOT record — it
+/// warns loudly and still enforces the thread-count identity, so a
+/// debug-profile run can never plant a golden that a release run then
+/// compares against. (The no-artifacts complement that always compares
+/// against hand-computed words is
+/// `golden_protocol_vote_and_wire_bytes_without_runtime` in
+/// prop_coordinator.rs.)
+#[test]
+fn golden_trace_pfed1bs_losses_and_consensus_bits() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let lab = Lab::new("artifacts").expect("lab");
+    let mut traces: Vec<String> = Vec::new();
+    for threads in [1usize, 4] {
+        let mut cfg = short_cfg("pfed1bs");
+        cfg.rounds = 5;
+        cfg.seed = 1234;
+        cfg.client_threads = threads;
+        let model = lab.model_for(&cfg).unwrap();
+        let mut alg = algorithms::build("pfed1bs").unwrap();
+        let mut coord = Coordinator::new(cfg, &model);
+        let result = coord.run(alg.as_mut()).unwrap();
+        let mut lines: Vec<String> = result
+            .history
+            .records
+            .iter()
+            .map(|r| format!("round {} loss_bits {:016x}", r.round, r.train_loss.to_bits()))
+            .collect();
+        let v = alg.consensus_packed().expect("pfed1bs exposes its packed consensus");
+        let hex: String = v.words().iter().map(|w| format!("{w:016x}")).collect();
+        lines.push(format!("consensus m {} words {hex}", v.m()));
+        traces.push(lines.join("\n") + "\n");
+    }
+    assert_eq!(
+        traces[0], traces[1],
+        "1-thread and 4-thread traces must be bit-identical"
+    );
+
+    let path = std::path::Path::new("tests/golden/pfed1bs_trace.golden");
+    if std::env::var("PFED1BS_UPDATE_GOLDEN").is_ok() {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(path, &traces[0]).unwrap();
+        eprintln!(
+            "recorded golden trace to {} — COMMIT THIS FILE to arm the \
+             bit-identity comparison",
+            path.display()
+        );
+    } else if path.exists() {
+        let want = std::fs::read_to_string(path).expect("read golden trace");
+        assert_eq!(
+            traces[0], want,
+            "pFed1BS trajectory diverged from the committed golden trace: \
+             losses and consensus bits must be bit-identical across \
+             refactors (PFED1BS_UPDATE_GOLDEN=1 re-records after an \
+             intentional semantic change)"
+        );
+    } else {
+        eprintln!(
+            "WARNING: no golden trace committed at {} — only the \
+             thread-identity cross-check ran; record one with \
+             PFED1BS_UPDATE_GOLDEN=1 cargo test --release golden_trace \
+             and commit it",
+            path.display()
+        );
+    }
+}
+
 #[test]
 fn parallel_client_phase_is_bit_identical_to_serial() {
     // the data-parallel client phase must produce exactly the results of

@@ -8,7 +8,7 @@ use pfed1bs::algorithms::{Algorithm, ClientOutput, ClientStats, ServerCtx, Uplin
 use pfed1bs::comm::{encode, Direction, Ledger, Payload, SimNetwork};
 use pfed1bs::config::RunConfig;
 use pfed1bs::data::{generate, DatasetName, DatasetSpec, Partition};
-use pfed1bs::sketch::bitpack::{majority_vote_weighted, pack_signs, unpack_signs};
+use pfed1bs::sketch::bitpack::{majority_vote_weighted, SignVec};
 use pfed1bs::sketch::{Projection, SrhtOperator};
 use pfed1bs::util::proptest::check;
 use pfed1bs::util::rng::Rng;
@@ -79,7 +79,7 @@ fn prop_transport_preserves_sign_payloads_and_meters_bytes() {
             .map(|_| if rng.f32() < 0.5 { 1.0 } else { -1.0 })
             .collect();
         let mut net = SimNetwork::new(rng.next_u64());
-        let sent = Payload::Signs(signs);
+        let sent = Payload::Signs(SignVec::from_signs(&signs));
         let got = net.uplink_from(0, &sent).map_err(|e| e.to_string())?;
         if got != sent {
             return Err("clean channel altered payload".into());
@@ -102,14 +102,14 @@ fn prop_vote_unanimous_is_identity_and_stable_under_duplicates() {
         let z: Vec<f32> = (0..m)
             .map(|_| if rng.f32() < 0.5 { 1.0 } else { -1.0 })
             .collect();
-        let packed = pack_signs(&z);
+        let packed = SignVec::from_signs(&z);
         // unanimous clients: vote == the sketch, any weights
         let kk = rng.below(6) + 1;
-        let sketches: Vec<Vec<u64>> = (0..kk).map(|_| packed.clone()).collect();
+        let sketches: Vec<SignVec> = (0..kk).map(|_| packed.clone()).collect();
         let mut w: Vec<f32> = (0..kk).map(|_| rng.f32() + 0.01).collect();
         let t: f32 = w.iter().sum();
         w.iter_mut().for_each(|x| *x /= t);
-        let vote = unpack_signs(&majority_vote_weighted(&sketches, &w, m), m);
+        let vote = majority_vote_weighted(&sketches, &w, m).to_signs();
         if vote != z {
             return Err("unanimous vote changed bits".into());
         }
@@ -125,8 +125,8 @@ fn prop_vote_flips_with_weighted_majority() {
         let minus = vec![-1.0f32; m];
         let p_plus = rng.f32() * 0.98 + 0.01;
         let weights = vec![p_plus, 1.0 - p_plus];
-        let sketches = vec![pack_signs(&plus), pack_signs(&minus)];
-        let vote = unpack_signs(&majority_vote_weighted(&sketches, &weights, m), m);
+        let sketches = vec![SignVec::from_signs(&plus), SignVec::from_signs(&minus)];
+        let vote = majority_vote_weighted(&sketches, &weights, m).to_signs();
         let want = if p_plus >= 0.5 { 1.0 } else { -1.0 };
         if vote.iter().any(|&v| v != want) {
             return Err(format!("p_plus={p_plus} vote wrong"));
@@ -196,11 +196,14 @@ fn prop_bit_flip_noise_rate_is_calibrated() {
         let p = rng.f64() * 0.3;
         let mut net = SimNetwork::new(rng.next_u64()).with_bit_flips(p);
         let n = 20_000;
-        let sent = Payload::Signs(vec![1.0; n]);
+        let sent = Payload::Signs(SignVec::from_signs(&vec![1.0; n]));
         let Payload::Signs(got) = net.uplink_from(0, &sent).map_err(|e| e.to_string())? else {
             return Err("type".into());
         };
-        let flipped = got.iter().filter(|&&s| s < 0.0).count() as f64 / n as f64;
+        // the packed masked-XOR corruption must still flip ~p of the bits
+        let flipped = (n - got.words().iter().map(|w| w.count_ones() as usize).sum::<usize>())
+            as f64
+            / n as f64;
         if (flipped - p).abs() > 0.02 {
             return Err(format!("flip rate {flipped} vs p={p}"));
         }
@@ -221,8 +224,11 @@ fn prop_sharded_metering_equals_serial_ledger() {
             let len = rng.below(300) + 1;
             let payload = match rng.below(3) {
                 0 => Payload::Dense(vec![0.5; len]),
-                1 => Payload::Signs(vec![1.0; len]),
-                _ => Payload::ScaledSigns { signs: vec![-1.0; len], scale: 2.0 },
+                1 => Payload::Signs(SignVec::from_signs(&vec![1.0; len])),
+                _ => Payload::ScaledSigns {
+                    signs: SignVec::from_signs(&vec![-1.0; len]),
+                    scale: 2.0,
+                },
             };
             let frame = encode(&payload).len();
             if rng.f32() < 0.5 {
@@ -273,7 +279,7 @@ fn regression_noisy_downlink_never_corrupts_server_consensus() {
     let outputs: Vec<ClientOutput> = (0..2)
         .map(|k| ClientOutput {
             client: k,
-            uplink: Some(Uplink::new(1, Payload::Signs(vec![-1.0f32; m]))),
+            uplink: Some(Uplink::new(1, Payload::Signs(SignVec::from_signs(&vec![-1.0f32; m])))),
             state: None,
             stats: ClientStats::default(),
         })
@@ -283,6 +289,81 @@ fn regression_noisy_downlink_never_corrupts_server_consensus() {
     let ctx = ServerCtx { cfg: &cfg, projection: &projection };
     alg.server_aggregate(1, &[0, 1], &[0.5, 0.5], outputs, &ctx).unwrap();
     assert_eq!(alg.consensus().unwrap(), vec![-1.0f32; m].as_slice());
+    // the packed mirror (what the next broadcast ships) must agree
+    assert_eq!(
+        alg.consensus_packed().unwrap().to_signs(),
+        vec![-1.0f32; m]
+    );
+}
+
+/// Protocol-level golden, runnable with no PJRT artifacts: a hand-built
+/// pFed1BS aggregation whose consensus is analytically determined, with
+/// the exact packed words asserted bit-for-bit. Weights are chosen
+/// binary-exact (0.5/0.25/0.25) so the f32 vote accumulator has a
+/// mathematically unambiguous sign at every bit (the only tie,
+/// −0.5+0.25+0.25 = 0.0, is exact in f32 and breaks toward +1 by the
+/// `sign(0) := +1` convention). Unlike the artifact-gated golden-trace
+/// test, this one runs everywhere CI runs — the server vote, transport
+/// round trip, and byte metering cannot drift silently.
+#[test]
+fn golden_protocol_vote_and_wire_bytes_without_runtime() {
+    let m = 130; // three words, 2-bit tail
+    let n = 16;
+    let mut alg = pfed1bs::algorithms::pfed1bs::PFed1BS::with_state(
+        vec![vec![0.0f32; n]; 3],
+        vec![1.0f32; m],
+    );
+
+    // client sketches: z0 = +1 at even i, z1 = +1 at i % 3 == 0, z2 = +1
+    let z0 = SignVec::from_fn(m, |i| i % 2 == 0);
+    let z1 = SignVec::from_fn(m, |i| i % 3 == 0);
+    let z2 = SignVec::from_fn(m, |_| true);
+    // transport each through its own clean channel (exact metering)
+    let mut net = SimNetwork::new(7);
+    let outputs: Vec<ClientOutput> = [z0, z1, z2]
+        .into_iter()
+        .enumerate()
+        .map(|(k, z)| {
+            let delivered = net.uplink_from(k, &Payload::Signs(z)).unwrap();
+            ClientOutput {
+                client: k,
+                uplink: Some(Uplink::new(1, delivered)),
+                state: None,
+                stats: ClientStats::default(),
+            }
+        })
+        .collect();
+    let bytes = net.end_round();
+    assert_eq!(bytes.uplink, 3 * (5 + 24), "130 bits -> 3 words -> 24 bytes + header");
+    assert_eq!(bytes.uplink_msgs, 3);
+
+    // weighted vote with p = [0.5, 0.25, 0.25]:
+    //   i even, i%3==0 : +0.5 +0.25 +0.25 = +1.0  -> +1
+    //   i even, i%3!=0 : +0.5 -0.25 +0.25 = +0.5  -> +1
+    //   i odd,  i%3==0 : -0.5 +0.25 +0.25 =  0.0  -> +1 (tie toward +1)
+    //   i odd,  i%3!=0 : -0.5 -0.25 +0.25 = -0.5  -> -1
+    let cfg = RunConfig::preset(DatasetName::Mnist);
+    let projection = Projection::Srht(SrhtOperator::from_seed(1, n, n));
+    let ctx = ServerCtx { cfg: &cfg, projection: &projection };
+    alg.server_aggregate(1, &[0, 1, 2], &[0.5, 0.25, 0.25], outputs, &ctx).unwrap();
+
+    // i.e. bit set iff i is even or divisible by 3
+    let want = SignVec::from_fn(m, |i| i % 2 == 0 || i % 3 == 0);
+    let got = alg.consensus_packed().unwrap();
+    assert_eq!(got, &want, "vote words diverged from the analytic consensus");
+    // and the exact packed words, spelled out: bit clear iff i ∈ {1, 5}
+    // mod 6 — per 6-bit block the pattern is 0b011101 = 0x1D, the block
+    // straddling word boundaries; pin the first word and the 2-bit tail.
+    let w0 = (0..64u64).fold(0u64, |acc, i| {
+        if i % 2 == 0 || i % 3 == 0 {
+            acc | 1u64 << i
+        } else {
+            acc
+        }
+    });
+    assert_eq!(got.words()[0], w0);
+    // bits 128, 129: i=128 even -> 1; i=129 odd, 129%3==0 -> 1 (tie)
+    assert_eq!(got.words()[2], 0b11);
 }
 
 #[test]
