@@ -2,14 +2,21 @@
 //! popcount paths across client counts — the L3 hot loop that closes
 //! every round. K=20 × m=10,177 is the paper's MNIST configuration.
 //!
-//! The `*_packed` rows vote directly over borrowed `SignVec` words, as
-//! `server_aggregate` now does — no unpack/re-pack round trip anywhere.
-//! The `*_repack` row reproduces the pre-SignVec server path (uplinks
-//! decoded to f32 ±1 lanes, re-packed from scratch before the vote) so
-//! the saving stays measurable.
+//! The `*_packed` rows vote directly over borrowed `SignVec` words — no
+//! unpack/re-pack round trip anywhere. The `*_repack` row reproduces the
+//! pre-SignVec server path (uplinks decoded to f32 ±1 lanes, re-packed
+//! from scratch before the vote) so the saving stays measurable.
+//!
+//! The `streaming_absorb` rows are the event engine's actual server
+//! path: one O(m) `VoteAccumulator`, each sketch folded on arrival —
+//! O(m) state however large K grows, vs the batch rows' O(K·m) resident
+//! cohort. The `sharded_merge` rows split the same fold across 1/4/16
+//! shards and merge (exact), the shape a shard-parallel server takes.
 
 use pfed1bs::bench_harness::{black_box, Bench};
-use pfed1bs::sketch::bitpack::{majority_vote_uniform, majority_vote_weighted, SignVec};
+use pfed1bs::sketch::bitpack::{
+    majority_vote_uniform, majority_vote_weighted, SignVec, VoteAccumulator,
+};
 use pfed1bs::util::rng::Rng;
 
 fn main() {
@@ -29,7 +36,7 @@ fn main() {
         let weights = vec![1.0f32 / k as f32; k];
 
         // packed end-to-end: borrow the delivered words, vote, done —
-        // the exact shape of PFed1BS::server_aggregate
+        // the batch reference the streaming tally is tested against
         b.bench_elems(&format!("weighted_vote_packed_K{k}_m{m}"), (k * m) as u64, || {
             black_box(majority_vote_weighted(
                 black_box(&borrowed),
@@ -48,6 +55,37 @@ fn main() {
                 black_box(&lanes).iter().map(|z| SignVec::from_signs(z)).collect();
             black_box(majority_vote_weighted(&packed, black_box(&weights), m));
         });
+
+        // the streaming server: absorb each delivered sketch into one
+        // O(m) tally, then sign it — what run_round_plan actually does
+        b.bench_elems(&format!("streaming_absorb_K{k}_m{m}"), (k * m) as u64, || {
+            let mut acc = VoteAccumulator::new(m);
+            for (z, &p) in sketches.iter().zip(&weights) {
+                acc.absorb(black_box(z), p as f64);
+            }
+            black_box(acc.finish());
+        });
+
+        // shard-parallel fold shape: S independent shards, merged in
+        // canonical shard order (exact — bit-identical to 1 shard)
+        for shards in [1usize, 4, 16] {
+            b.bench_elems(
+                &format!("sharded_merge_S{shards}_K{k}_m{m}"),
+                (k * m) as u64,
+                || {
+                    let mut parts: Vec<VoteAccumulator> =
+                        (0..shards).map(|_| VoteAccumulator::new(m)).collect();
+                    for (i, (z, &p)) in sketches.iter().zip(&weights).enumerate() {
+                        parts[i % shards].absorb(black_box(z), p as f64);
+                    }
+                    let mut acc = parts.remove(0);
+                    for part in parts {
+                        acc.merge(part);
+                    }
+                    black_box(acc.finish());
+                },
+            );
+        }
     }
     b.report();
 }

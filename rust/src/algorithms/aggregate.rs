@@ -1,0 +1,289 @@
+//! Streaming per-round aggregation (DESIGN.md §9).
+//!
+//! The server never holds the cohort: [`Algorithm::begin_aggregate`]
+//! hands the round engine a [`RoundAggregator`] whose state is O(m) (or
+//! O(n) for the dense baseline), the engine [`absorb`]s each delivered
+//! uplink the moment it arrives — dropping the payload immediately — and
+//! [`Algorithm::finish_aggregate`] folds the closed aggregator into
+//! server state. Sibling shards [`merge`]; the one-bit tallies are exact
+//! 64.64 fixed point ([`VoteAccumulator`]), so absorb/merge order cannot
+//! change a single bit of the vote.
+//!
+//! Who owns what: algorithms choose the [`AggKind`] and interpret it at
+//! finish; the engine owns the absorb loop (arrival order), the
+//! delivered-set weights, and the cut/write-back distinction
+//! ([`absorb_cut`] keeps a straggler's personalized state — its local
+//! model really did advance — while its late uplink never enters server
+//! state).
+//!
+//! [`absorb`]: RoundAggregator::absorb
+//! [`absorb_cut`]: RoundAggregator::absorb_cut
+//! [`merge`]: RoundAggregator::merge
+//! [`Algorithm::begin_aggregate`]: crate::algorithms::Algorithm::begin_aggregate
+//! [`Algorithm::finish_aggregate`]: crate::algorithms::Algorithm::finish_aggregate
+
+use anyhow::{bail, ensure, Result};
+
+use crate::algorithms::common::axpy;
+use crate::algorithms::{ClientOutput, RoundOutcome};
+use crate::comm::Payload;
+use crate::sketch::bitpack::{ScalarTally, VoteAccumulator};
+
+/// The algorithm-specific accumulation state, O(payload length) each.
+pub enum AggKind {
+    /// No server-side accumulation: uplinks are silent, only
+    /// personalized write-backs flow (LocalOnly).
+    Passthrough,
+    /// Weighted majority tally over `Signs` sketches (pFed1BS): the
+    /// finish is the Lemma-1 vote.
+    Vote(VoteAccumulator),
+    /// Majority tally over `ScaledSigns` plus the exact weighted step
+    /// scale Σ pₖ·cₖ (OBDA).
+    ScaledVote { tally: VoteAccumulator, scale: ScalarTally },
+    /// Linear one-bit estimator Σ pₖ·cₖ·zₖ over `ScaledSigns`
+    /// (zSignFed, FedBAT, EDEN) — the scale folds into the tally weight.
+    SignSum(VoteAccumulator),
+    /// `SignSum` over the m-dim sketch plus the weighted update-norm
+    /// scalar the reconstruction rescales to (OBCSAA).
+    SketchSum { tally: VoteAccumulator, norm: ScalarTally },
+    /// Dense weighted running sum Σ pₖ·wₖ over `Dense` uplinks (FedAvg).
+    /// f32 lanes: NOT order-invariant — the engine's canonical arrival
+    /// order is what makes this deterministic (DESIGN.md §9).
+    DenseSum(Vec<f32>),
+}
+
+/// One round's streaming aggregation: the algorithm-specific tally plus
+/// the bookkeeping every algorithm shares (delivered count, loss mean,
+/// personalized write-backs).
+pub struct RoundAggregator {
+    kind: AggKind,
+    /// personalized model write-backs (simulation bookkeeping, never
+    /// transmitted): (client id, new local state)
+    states: Vec<(usize, Vec<f32>)>,
+    loss_sum: f64,
+    absorbed: usize,
+}
+
+impl RoundAggregator {
+    pub fn new(kind: AggKind) -> RoundAggregator {
+        RoundAggregator { kind, states: Vec::new(), loss_sum: 0.0, absorbed: 0 }
+    }
+
+    /// Sketches folded so far (delivered uplinks; cut stragglers and
+    /// dropouts never count).
+    pub fn absorbed(&self) -> usize {
+        self.absorbed
+    }
+
+    /// Fold one *delivered* output with its delivered-set weight. The
+    /// payload is consumed here and never stored; O(payload length).
+    /// On `Err` the aggregator is untouched (no partial bookkeeping), so
+    /// a caller may skip a malformed uplink and keep the round going.
+    pub fn absorb(&mut self, out: ClientOutput, weight: f32) -> Result<()> {
+        let ClientOutput { client, uplink, state, stats } = out;
+        let payload = uplink.map(|u| u.payload);
+        match (&mut self.kind, payload) {
+            (AggKind::Passthrough, None) => {}
+            (AggKind::Vote(tally), Some(Payload::Signs(z))) => {
+                tally.absorb(&z, weight as f64);
+            }
+            (
+                AggKind::ScaledVote { tally, scale },
+                Some(Payload::ScaledSigns { signs, scale: c }),
+            ) => {
+                tally.absorb(&signs, weight as f64);
+                scale.add(weight as f64 * c as f64);
+            }
+            (AggKind::SignSum(tally), Some(Payload::ScaledSigns { signs, scale: c })) => {
+                tally.absorb(&signs, weight as f64 * c as f64);
+            }
+            (
+                AggKind::SketchSum { tally, norm },
+                Some(Payload::ScaledSigns { signs, scale: c }),
+            ) => {
+                // the sketch enters with its vote weight p_k alone; the
+                // reported magnitude only shapes the rescale target
+                tally.absorb(&signs, weight as f64);
+                norm.add(weight as f64 * c as f64);
+            }
+            (AggKind::DenseSum(sum), Some(Payload::Dense(w))) => {
+                ensure!(
+                    w.len() == sum.len(),
+                    "dense uplink length {} != aggregator length {}",
+                    w.len(),
+                    sum.len()
+                );
+                axpy(sum, weight, &w);
+            }
+            (_, payload) => bail!(
+                "client {client}: uplink {} does not match this round's aggregator",
+                payload.as_ref().map_or("<none>", payload_name)
+            ),
+        }
+        // shared bookkeeping only after the payload was accepted, so an
+        // Err above cannot inflate absorbed() or plant a phantom loss
+        if let Some(w) = state {
+            self.states.push((client, w));
+        }
+        self.loss_sum += stats.loss;
+        self.absorbed += 1;
+        Ok(())
+    }
+
+    /// A straggler cut by the deadline (or an arrival past the target
+    /// count): its uplink never enters server state — but the client's
+    /// own local model did advance, so the personalized write-back is
+    /// kept. The payload is dropped (it was metered on the channel).
+    pub fn absorb_cut(&mut self, out: ClientOutput) {
+        if let Some(w) = out.state {
+            self.states.push((out.client, w));
+        }
+    }
+
+    /// Fold a sibling shard of the same round. Exact for the fixed-point
+    /// tallies; `DenseSum` shards add in call order (callers that need
+    /// bit-reproducibility merge in canonical order — DESIGN.md §9).
+    pub fn merge(&mut self, other: RoundAggregator) -> Result<()> {
+        match (&mut self.kind, other.kind) {
+            (AggKind::Passthrough, AggKind::Passthrough) => {}
+            (AggKind::Vote(a), AggKind::Vote(b)) => a.merge(b),
+            (
+                AggKind::ScaledVote { tally: a, scale: sa },
+                AggKind::ScaledVote { tally: b, scale: sb },
+            ) => {
+                a.merge(b);
+                sa.merge(sb);
+            }
+            (AggKind::SignSum(a), AggKind::SignSum(b)) => a.merge(b),
+            (
+                AggKind::SketchSum { tally: a, norm: na },
+                AggKind::SketchSum { tally: b, norm: nb },
+            ) => {
+                a.merge(b);
+                na.merge(nb);
+            }
+            (AggKind::DenseSum(a), AggKind::DenseSum(b)) => {
+                ensure!(a.len() == b.len(), "merging dense sums of different lengths");
+                axpy(a, 1.0, &b);
+            }
+            _ => bail!("merging aggregators of different kinds"),
+        }
+        self.states.extend(other.states);
+        self.loss_sum += other.loss_sum;
+        self.absorbed += other.absorbed;
+        Ok(())
+    }
+
+    /// Decompose for the finish phase: (tally, personalized write-backs,
+    /// delivered count, round outcome). The outcome's `train_loss` is
+    /// the mean round-start loss over the *delivered* set — the server's
+    /// honest view (0.0 when nothing was delivered).
+    pub fn into_parts(self) -> (AggKind, Vec<(usize, Vec<f32>)>, usize, RoundOutcome) {
+        let outcome = RoundOutcome {
+            train_loss: if self.absorbed == 0 {
+                0.0
+            } else {
+                self.loss_sum / self.absorbed as f64
+            },
+        };
+        (self.kind, self.states, self.absorbed, outcome)
+    }
+}
+
+fn payload_name(p: &Payload) -> &'static str {
+    match p {
+        Payload::Dense(_) => "Dense",
+        Payload::Signs(_) => "Signs",
+        Payload::ScaledSigns { .. } => "ScaledSigns",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::{ClientStats, Uplink};
+    use crate::sketch::bitpack::{majority_vote_weighted, SignVec};
+
+    fn out(client: usize, payload: Option<Payload>, loss: f64) -> ClientOutput {
+        ClientOutput {
+            client,
+            uplink: payload.map(|p| Uplink::new(0, p)),
+            state: Some(vec![client as f32]),
+            stats: ClientStats { loss },
+        }
+    }
+
+    #[test]
+    fn vote_aggregator_streams_and_reports() {
+        let z0 = SignVec::from_signs(&[1.0, -1.0, 1.0]);
+        let z1 = SignVec::from_signs(&[-1.0, -1.0, 1.0]);
+        let mut agg = RoundAggregator::new(AggKind::Vote(VoteAccumulator::new(3)));
+        agg.absorb(out(0, Some(Payload::Signs(z0.clone())), 1.0), 0.75).unwrap();
+        agg.absorb(out(1, Some(Payload::Signs(z1.clone())), 3.0), 0.25).unwrap();
+        assert_eq!(agg.absorbed(), 2);
+        let (kind, states, absorbed, outcome) = agg.into_parts();
+        assert_eq!(absorbed, 2);
+        assert!((outcome.train_loss - 2.0).abs() < 1e-12);
+        assert_eq!(states, vec![(0, vec![0.0]), (1, vec![1.0])]);
+        let AggKind::Vote(tally) = kind else { panic!("wrong kind") };
+        assert_eq!(
+            tally.finish(),
+            majority_vote_weighted(&[z0, z1], &[0.75, 0.25], 3)
+        );
+    }
+
+    #[test]
+    fn mismatched_payload_is_an_error_and_leaves_the_aggregator_untouched() {
+        let mut agg = RoundAggregator::new(AggKind::Vote(VoteAccumulator::new(3)));
+        let dense = out(0, Some(Payload::Dense(vec![1.0, 2.0, 3.0])), 5.0);
+        assert!(agg.absorb(dense, 1.0).is_err());
+        // no partial bookkeeping: the rejected client must not count
+        assert_eq!(agg.absorbed(), 0);
+        let (_, states, _, outcome) = agg.into_parts();
+        assert!(states.is_empty(), "rejected uplink planted a write-back");
+        assert_eq!(outcome.train_loss, 0.0, "rejected uplink planted a loss");
+        let mut pass = RoundAggregator::new(AggKind::Passthrough);
+        let signs = out(0, Some(Payload::Signs(SignVec::from_signs(&[1.0]))), 0.0);
+        assert!(pass.absorb(signs, 1.0).is_err());
+    }
+
+    #[test]
+    fn cut_stragglers_keep_write_backs_only() {
+        let mut agg = RoundAggregator::new(AggKind::Vote(VoteAccumulator::new(2)));
+        agg.absorb_cut(out(7, Some(Payload::Signs(SignVec::from_signs(&[1.0, 1.0]))), 5.0));
+        assert_eq!(agg.absorbed(), 0);
+        let (kind, states, absorbed, outcome) = agg.into_parts();
+        assert_eq!((absorbed, outcome.train_loss), (0, 0.0));
+        assert_eq!(states, vec![(7, vec![7.0])]);
+        let AggKind::Vote(tally) = kind else { panic!() };
+        assert_eq!(tally.absorbed(), 0, "cut uplink must not enter the tally");
+    }
+
+    #[test]
+    fn merge_requires_matching_kinds_and_is_exact() {
+        let z = SignVec::from_signs(&[1.0, -1.0]);
+        let mut a = RoundAggregator::new(AggKind::Vote(VoteAccumulator::new(2)));
+        a.absorb(out(0, Some(Payload::Signs(z.clone())), 1.0), 0.5).unwrap();
+        let mut b = RoundAggregator::new(AggKind::Vote(VoteAccumulator::new(2)));
+        b.absorb(out(1, Some(Payload::Signs(z.clone())), 2.0), 0.5).unwrap();
+        a.merge(b).unwrap();
+        assert_eq!(a.absorbed(), 2);
+        let c = RoundAggregator::new(AggKind::Passthrough);
+        assert!(a.merge(c).is_err());
+    }
+
+    #[test]
+    fn dense_sum_accumulates_weighted_models() {
+        let mut agg = RoundAggregator::new(AggKind::DenseSum(vec![0.0f32; 2]));
+        let mk = |c, v: Vec<f32>| ClientOutput {
+            client: c,
+            uplink: Some(Uplink::new(0, Payload::Dense(v))),
+            state: None,
+            stats: ClientStats::default(),
+        };
+        agg.absorb(mk(0, vec![1.0, 0.0]), 0.25).unwrap();
+        agg.absorb(mk(1, vec![0.0, 1.0]), 0.75).unwrap();
+        let (AggKind::DenseSum(sum), _, 2, _) = agg.into_parts() else { panic!() };
+        assert_eq!(sum, vec![0.25, 0.75]);
+    }
+}

@@ -102,21 +102,6 @@ pub fn mean_abs(x: &[f32]) -> f32 {
     (x.iter().map(|&v| v.abs() as f64).sum::<f64>() / x.len() as f64) as f32
 }
 
-/// Weighted mean of several vectors: Σ pᵢ·vᵢ. Panics on empty input.
-pub fn weighted_mean(vectors: &[Vec<f32>], weights: &[f32]) -> Vec<f32> {
-    assert!(!vectors.is_empty());
-    assert_eq!(vectors.len(), weights.len());
-    let n = vectors[0].len();
-    let mut out = vec![0.0f32; n];
-    for (v, &p) in vectors.iter().zip(weights) {
-        debug_assert_eq!(v.len(), n);
-        for (o, &x) in out.iter_mut().zip(v) {
-            *o += p * x;
-        }
-    }
-    out
-}
-
 /// Mix three words into one stream tag (client id × round × purpose).
 pub fn hash3(a: u64, b: u64, c: u64) -> u64 {
     let mut h = a ^ 0x9E37_79B9_7F4A_7C15;
@@ -153,10 +138,4 @@ mod tests {
         assert_eq!(mean_abs(&[]), 0.0);
     }
 
-    #[test]
-    fn weighted_mean_basic() {
-        let vs = vec![vec![1.0f32, 0.0], vec![0.0f32, 1.0]];
-        let out = weighted_mean(&vs, &[0.25, 0.75]);
-        assert_eq!(out, vec![0.25, 0.75]);
-    }
 }

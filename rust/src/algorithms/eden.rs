@@ -15,11 +15,11 @@ use anyhow::Result;
 
 use crate::algorithms::common::{axpy, delta, init_params, local_sgd, mean_abs};
 use crate::algorithms::{
-    Algorithm, Capabilities, ClientCtx, ClientOutput, ClientStats, Downlink, InitCtx,
-    RoundOutcome, ServerCtx, Uplink,
+    AggKind, Algorithm, Capabilities, ClientCtx, ClientOutput, ClientStats, Downlink,
+    InitCtx, RoundAggregator, RoundOutcome, ServerCtx, Uplink,
 };
 use crate::comm::Payload;
-use crate::sketch::bitpack::SignVec;
+use crate::sketch::bitpack::{SignVec, VoteAccumulator};
 use crate::sketch::SrhtOperator;
 
 pub struct Eden {
@@ -99,30 +99,27 @@ impl Algorithm for Eden {
         })
     }
 
-    fn server_aggregate(
+    fn begin_aggregate(&self, _t: usize) -> RoundAggregator {
+        // rotated-domain linear estimator over n' = npad coordinates
+        RoundAggregator::new(AggKind::SignSum(VoteAccumulator::new(self.rot().npad)))
+    }
+
+    fn finish_aggregate(
         &mut self,
         _t: usize,
-        _selected: &[usize],
-        weights: &[f32],
-        outputs: Vec<ClientOutput>,
+        agg: RoundAggregator,
         _ctx: &ServerCtx,
     ) -> Result<RoundOutcome> {
-        let rot = self.rot();
-        let mut est_rotated = vec![0.0f32; rot.npad];
-        for (out, &p) in outputs.iter().zip(weights) {
-            let Some(Uplink { payload: Payload::ScaledSigns { signs, scale }, .. }) =
-                &out.uplink
-            else {
-                anyhow::bail!("eden uplink must be a scaled-sign payload");
-            };
-            for (e, s) in est_rotated.iter_mut().zip(signs.iter_signs()) {
-                *e += p * scale * s;
-            }
+        let (kind, _, absorbed, outcome) = agg.into_parts();
+        let AggKind::SignSum(tally) = kind else {
+            anyhow::bail!("eden aggregator must be the linear sign estimator");
+        };
+        if absorbed > 0 {
+            // server: de-rotate the streamed estimate and step
+            let dhat = self.rot().rotate_inverse(&tally.finish_sum());
+            axpy(&mut self.w, 1.0, &dhat);
         }
-        // server: de-rotate the aggregated estimate and step
-        let dhat = rot.rotate_inverse(&est_rotated);
-        axpy(&mut self.w, 1.0, &dhat);
-        Ok(RoundOutcome::from_outputs(&outputs))
+        Ok(outcome)
     }
 
     fn model_for(&self, _k: usize) -> &[f32] {

@@ -6,10 +6,10 @@
 
 use anyhow::Result;
 
-use crate::algorithms::common::{init_params, local_sgd, weighted_mean};
+use crate::algorithms::common::{init_params, local_sgd};
 use crate::algorithms::{
-    Algorithm, Capabilities, ClientCtx, ClientOutput, ClientStats, Downlink, InitCtx,
-    RoundOutcome, ServerCtx, Uplink,
+    AggKind, Algorithm, Capabilities, ClientCtx, ClientOutput, ClientStats, Downlink,
+    InitCtx, RoundAggregator, RoundOutcome, ServerCtx, Uplink,
 };
 use crate::comm::Payload;
 
@@ -74,24 +74,28 @@ impl Algorithm for FedAvg {
         })
     }
 
-    fn server_aggregate(
+    fn begin_aggregate(&self, _t: usize) -> RoundAggregator {
+        // dense running sum Σ p_k w_k: one n-vector of state, each
+        // delivered model folded on arrival and dropped
+        RoundAggregator::new(AggKind::DenseSum(vec![0.0f32; self.w.len()]))
+    }
+
+    fn finish_aggregate(
         &mut self,
         _t: usize,
-        _selected: &[usize],
-        weights: &[f32],
-        mut outputs: Vec<ClientOutput>,
+        agg: RoundAggregator,
         _ctx: &ServerCtx,
     ) -> Result<RoundOutcome> {
-        let mut locals: Vec<Vec<f32>> = Vec::with_capacity(outputs.len());
-        for out in outputs.iter_mut() {
-            let Some(Uplink { payload: Payload::Dense(wk), .. }) = out.uplink.take() else {
-                anyhow::bail!("fedavg uplink must be a dense payload");
-            };
-            locals.push(wk);
+        let (kind, _, absorbed, outcome) = agg.into_parts();
+        let AggKind::DenseSum(sum) = kind else {
+            anyhow::bail!("fedavg aggregator must be the dense running sum");
+        };
+        // w ← Σ p_k w_k over the delivered set; a round that delivered
+        // nothing keeps the current global model
+        if absorbed > 0 {
+            self.w = sum;
         }
-        // server: w ← Σ p_k w_k
-        self.w = weighted_mean(&locals, weights);
-        Ok(RoundOutcome::from_outputs(&outputs))
+        Ok(outcome)
     }
 
     fn model_for(&self, _k: usize) -> &[f32] {

@@ -10,8 +10,8 @@ use anyhow::Result;
 
 use crate::algorithms::common::{init_params, local_sgd};
 use crate::algorithms::{
-    Algorithm, Capabilities, ClientCtx, ClientOutput, ClientStats, Downlink, InitCtx,
-    RoundOutcome, ServerCtx,
+    AggKind, Algorithm, Capabilities, ClientCtx, ClientOutput, ClientStats, Downlink,
+    InitCtx, RoundAggregator, RoundOutcome, ServerCtx,
 };
 
 pub struct LocalOnly {
@@ -72,20 +72,22 @@ impl Algorithm for LocalOnly {
         })
     }
 
-    fn server_aggregate(
+    fn begin_aggregate(&self, _t: usize) -> RoundAggregator {
+        // nothing to accumulate: only personalized write-backs flow
+        RoundAggregator::new(AggKind::Passthrough)
+    }
+
+    fn finish_aggregate(
         &mut self,
         _t: usize,
-        _selected: &[usize],
-        _weights: &[f32],
-        mut outputs: Vec<ClientOutput>,
+        agg: RoundAggregator,
         _ctx: &ServerCtx,
     ) -> Result<RoundOutcome> {
-        for out in outputs.iter_mut() {
-            if let Some(w) = out.state.take() {
-                self.wks[out.client] = w;
-            }
+        let (_, states, _, outcome) = agg.into_parts();
+        for (k, w) in states {
+            self.wks[k] = w;
         }
-        Ok(RoundOutcome::from_outputs(&outputs))
+        Ok(outcome)
     }
 
     fn model_for(&self, k: usize) -> &[f32] {

@@ -24,16 +24,21 @@
 //!    participants data-parallel with results bit-identical to serial.
 //!    Returns a [`ClientOutput`]: optional [`Uplink`], optional updated
 //!    personalized state, and [`ClientStats`].
-//! 3. [`Algorithm::server_aggregate`] — consume the channel-delivered
-//!    uplinks (`&mut self`), update server/global state, and report the
-//!    [`RoundOutcome`].
+//! 3. Streaming aggregation (DESIGN.md §9):
+//!    [`Algorithm::begin_aggregate`] hands the round engine an O(m)
+//!    [`RoundAggregator`]; the engine absorbs each *delivered* uplink in
+//!    arrival order (the cohort is never stored) and
+//!    [`Algorithm::finish_aggregate`] folds the closed aggregator into
+//!    server state (`&mut self`), reporting the [`RoundOutcome`].
 //! 4. [`Algorithm::server_notify`] — optional end-of-round broadcast
 //!    (OBDA ships the majority vote back so clients stay in sync).
 //!
-//! To add an algorithm, implement the four phases plus `model_for`, keep
-//! every byte you logically transmit inside a `Payload`, and register it
-//! in [`build`]. See DESIGN.md §4 for a walkthrough.
+//! To add an algorithm, implement the phases plus `model_for`, pick the
+//! [`AggKind`] that matches your uplink payload, keep every byte you
+//! logically transmit inside a `Payload`, and register it in [`build`].
+//! See DESIGN.md §4 for a walkthrough.
 
+pub mod aggregate;
 pub mod common;
 pub mod eden;
 pub mod fedavg;
@@ -46,6 +51,7 @@ pub mod zsignfed;
 
 use anyhow::Result;
 
+pub use crate::algorithms::aggregate::{AggKind, RoundAggregator};
 pub use crate::comm::{Downlink, Uplink};
 use crate::config::RunConfig;
 use crate::data::FederatedData;
@@ -106,33 +112,26 @@ pub struct ClientOutput {
     /// coordinator, so `outputs[i].client == selected[i]`)
     pub client: usize,
     /// message to the server; `None` = silent round (LocalOnly). The
-    /// coordinator replaces the payload with the channel-delivered copy
-    /// before `server_aggregate` sees it.
+    /// round engine replaces the payload with the channel-delivered copy
+    /// before absorbing it into the round's [`RoundAggregator`].
     pub uplink: Option<Uplink>,
     /// updated personalized state for algorithms that keep per-client
-    /// models; written back by `server_aggregate`, never transmitted
+    /// models; written back by `finish_aggregate` (even for stragglers
+    /// whose uplink was cut — their local model really advanced), never
+    /// transmitted
     pub state: Option<Vec<f32>>,
     pub stats: ClientStats,
 }
 
-/// Per-round result reported back to the coordinator.
+/// Per-round result reported back to the coordinator. Built by
+/// [`RoundAggregator::into_parts`]: the mean round-start loss over the
+/// round's *delivered* set (0.0 when nothing was delivered — empty
+/// cohorts are rejected by `RunConfig::validate` before any round runs,
+/// but a fully dropped-out round can legitimately deliver nothing).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct RoundOutcome {
     /// mean task loss over all local steps this round (Fig. 4 metric)
     pub train_loss: f64,
-}
-
-impl RoundOutcome {
-    /// Mean round-start loss over the participants. Empty participant
-    /// sets are rejected by `RunConfig::validate` before any round runs;
-    /// an empty slice here defensively yields 0.0 rather than NaN.
-    pub fn from_outputs(outputs: &[ClientOutput]) -> RoundOutcome {
-        if outputs.is_empty() {
-            return RoundOutcome { train_loss: 0.0 };
-        }
-        let sum: f64 = outputs.iter().map(|o| o.stats.loss).sum();
-        RoundOutcome { train_loss: sum / outputs.len() as f64 }
-    }
 }
 
 /// A federated learning algorithm under test, expressed as the phased
@@ -159,16 +158,24 @@ pub trait Algorithm: Send + Sync {
         ctx: &mut ClientCtx,
     ) -> Result<ClientOutput>;
 
-    /// Phase 3: aggregate the delivered uplinks of round `t`. `outputs`
-    /// preserves selection order and carries the weights' alignment:
-    /// `outputs[i]` corresponds to `selected[i]` / `weights[i]` (p_k
-    /// normalized over the subset).
-    fn server_aggregate(
+    /// Phase 3a: create round `t`'s empty streaming aggregator (O(m) /
+    /// O(n) state — DESIGN.md §9). `&self` because the engine begins
+    /// folding while the client phase may still be running; the engine
+    /// then absorbs every delivered uplink in arrival order with its
+    /// delivered-set weight (p_k renormalized over what actually
+    /// arrived), so algorithms never see — and the server never stores —
+    /// the uplink stream itself.
+    fn begin_aggregate(&self, t: usize) -> RoundAggregator;
+
+    /// Phase 3b: fold the closed aggregator into server state. Called
+    /// exactly once per round, after the last delivery (or the
+    /// deadline). Implementations must gate consensus/model updates on
+    /// `absorbed() > 0`: a fully dropped-out round leaves server state
+    /// untouched.
+    fn finish_aggregate(
         &mut self,
         t: usize,
-        selected: &[usize],
-        weights: &[f32],
-        outputs: Vec<ClientOutput>,
+        agg: RoundAggregator,
         ctx: &ServerCtx,
     ) -> Result<RoundOutcome>;
 
@@ -272,15 +279,20 @@ mod tests {
     }
 
     #[test]
-    fn round_outcome_mean_loss() {
-        let out = |loss: f64| ClientOutput {
-            client: 0,
+    fn round_outcome_mean_loss_via_aggregator() {
+        let out = |client, loss: f64| ClientOutput {
+            client,
             uplink: None,
             state: None,
             stats: ClientStats { loss },
         };
-        let o = RoundOutcome::from_outputs(&[out(1.0), out(3.0)]);
+        let mut agg = RoundAggregator::new(AggKind::Passthrough);
+        agg.absorb(out(0, 1.0), 0.5).unwrap();
+        agg.absorb(out(1, 3.0), 0.5).unwrap();
+        let (_, _, absorbed, o) = agg.into_parts();
+        assert_eq!(absorbed, 2);
         assert!((o.train_loss - 2.0).abs() < 1e-12);
-        assert_eq!(RoundOutcome::from_outputs(&[]).train_loss, 0.0);
+        let empty = RoundAggregator::new(AggKind::Passthrough);
+        assert_eq!(empty.into_parts().3.train_loss, 0.0);
     }
 }

@@ -13,19 +13,22 @@ use anyhow::Result;
 
 use crate::algorithms::common::{axpy, delta, init_params, local_sgd};
 use crate::algorithms::{
-    Algorithm, Capabilities, ClientCtx, ClientOutput, ClientStats, Downlink, InitCtx,
-    RoundOutcome, ServerCtx, Uplink,
+    AggKind, Algorithm, Capabilities, ClientCtx, ClientOutput, ClientStats, Downlink,
+    InitCtx, RoundAggregator, RoundOutcome, ServerCtx, Uplink,
 };
 use crate::comm::Payload;
+use crate::sketch::bitpack::{ScalarTally, VoteAccumulator};
 use crate::util::stats::l2_norm;
 
 pub struct Obcsaa {
     w: Vec<f32>,
+    /// sketch dimension m, fixed at init (sizes the per-round tally)
+    m: usize,
 }
 
 impl Obcsaa {
     pub fn new() -> Self {
-        Obcsaa { w: Vec::new() }
+        Obcsaa { w: Vec::new(), m: 0 }
     }
 }
 
@@ -52,6 +55,7 @@ impl Algorithm for Obcsaa {
 
     fn init(&mut self, ctx: &InitCtx) -> Result<()> {
         self.w = init_params(ctx.model.geom.n, ctx.cfg.seed);
+        self.m = ctx.projection.m();
         Ok(())
     }
 
@@ -83,42 +87,39 @@ impl Algorithm for Obcsaa {
         })
     }
 
-    fn server_aggregate(
+    fn begin_aggregate(&self, _t: usize) -> RoundAggregator {
+        // m-dim sketch tally (weight p_k per sketch) + the weighted
+        // update-norm scalar the reconstruction rescales to
+        RoundAggregator::new(AggKind::SketchSum {
+            tally: VoteAccumulator::new(self.m),
+            norm: ScalarTally::new(),
+        })
+    }
+
+    fn finish_aggregate(
         &mut self,
         _t: usize,
-        _selected: &[usize],
-        weights: &[f32],
-        outputs: Vec<ClientOutput>,
+        agg: RoundAggregator,
         ctx: &ServerCtx,
     ) -> Result<RoundOutcome> {
-        let m = ctx.projection.m();
-        let mut agg = vec![0.0f32; m];
-        let mut norm_acc = 0.0f64;
-        for (out, &p) in outputs.iter().zip(weights) {
-            let Some(Uplink { payload: Payload::ScaledSigns { signs, scale }, .. }) =
-                &out.uplink
-            else {
-                anyhow::bail!("obcsaa uplink must be a scaled-sign payload");
-            };
-            norm_acc += (p * scale) as f64;
-            // accumulate the packed bits as ±1 lanes (compute boundary)
-            for (a, s) in agg.iter_mut().zip(signs.iter_signs()) {
-                *a += p * s;
+        let (kind, _, absorbed, outcome) = agg.into_parts();
+        let AggKind::SketchSum { tally, norm } = kind else {
+            anyhow::bail!("obcsaa aggregator must be the sketch-sum tally");
+        };
+        if absorbed > 0 {
+            // one-bit CS reconstruction: adjoint estimate, rescaled to
+            // the weighted-mean update norm
+            let mut dhat = ctx.projection.adjoint(&tally.finish_sum());
+            let dn = l2_norm(&dhat);
+            if dn > 0.0 {
+                let s = (norm.value() / dn) as f32;
+                for v in dhat.iter_mut() {
+                    *v *= s;
+                }
             }
+            axpy(&mut self.w, 1.0, &dhat);
         }
-
-        // one-bit CS reconstruction: adjoint estimate, rescaled to the
-        // weighted-mean update norm
-        let mut dhat = ctx.projection.adjoint(&agg);
-        let dn = l2_norm(&dhat);
-        if dn > 0.0 {
-            let s = (norm_acc / dn) as f32;
-            for v in dhat.iter_mut() {
-                *v *= s;
-            }
-        }
-        axpy(&mut self.w, 1.0, &dhat);
-        Ok(RoundOutcome::from_outputs(&outputs))
+        Ok(outcome)
     }
 
     fn model_for(&self, _k: usize) -> &[f32] {

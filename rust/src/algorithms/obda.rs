@@ -17,11 +17,11 @@ use anyhow::Result;
 
 use crate::algorithms::common::{delta, init_params, local_sgd, mean_abs};
 use crate::algorithms::{
-    Algorithm, Capabilities, ClientCtx, ClientOutput, ClientStats, Downlink, InitCtx,
-    RoundOutcome, ServerCtx, Uplink,
+    AggKind, Algorithm, Capabilities, ClientCtx, ClientOutput, ClientStats, Downlink,
+    InitCtx, RoundAggregator, RoundOutcome, ServerCtx, Uplink,
 };
 use crate::comm::Payload;
-use crate::sketch::bitpack::{majority_vote_weighted, SignVec};
+use crate::sketch::bitpack::{ScalarTally, SignVec, VoteAccumulator};
 
 pub struct Obda {
     w: Vec<f32>,
@@ -90,35 +90,38 @@ impl Algorithm for Obda {
         })
     }
 
-    fn server_aggregate(
+    fn begin_aggregate(&self, _t: usize) -> RoundAggregator {
+        // n-bit vote tally + the exact weighted scale estimate Σ p_k·c_k
+        RoundAggregator::new(AggKind::ScaledVote {
+            tally: VoteAccumulator::new(self.w.len()),
+            scale: ScalarTally::new(),
+        })
+    }
+
+    fn finish_aggregate(
         &mut self,
         _t: usize,
-        _selected: &[usize],
-        weights: &[f32],
-        outputs: Vec<ClientOutput>,
+        agg: RoundAggregator,
         _ctx: &ServerCtx,
     ) -> Result<RoundOutcome> {
-        let n = self.w.len();
-        let mut sketches: Vec<&SignVec> = Vec::with_capacity(outputs.len());
-        let mut scale_acc = 0.0f32;
-        for (out, &p) in outputs.iter().zip(weights) {
-            let Some(Uplink { payload: Payload::ScaledSigns { signs, scale }, .. }) =
-                &out.uplink
-            else {
-                anyhow::bail!("obda uplink must be a scaled-sign payload");
-            };
-            scale_acc += p * scale;
-            sketches.push(signs); // borrow the delivered words, no re-pack
+        let (kind, _, absorbed, outcome) = agg.into_parts();
+        let AggKind::ScaledVote { tally, scale } = kind else {
+            anyhow::bail!("obda aggregator must be the scaled-vote tally");
+        };
+        if absorbed > 0 {
+            // weighted majority vote off the streamed tally, scaled sign
+            // step applied straight off the packed vote bits
+            let vote = tally.finish();
+            let scale_acc = scale.value() as f32;
+            for (wi, s) in self.w.iter_mut().zip(vote.iter_signs()) {
+                *wi += scale_acc * s;
+            }
+            self.last_vote = Some((vote, scale_acc));
+        } else {
+            // no delivered votes: nothing to step on, nothing to notify
+            self.last_vote = None;
         }
-
-        // server: weighted majority vote, scaled sign step applied
-        // straight off the packed vote bits
-        let vote = majority_vote_weighted(&sketches, weights, n);
-        for (wi, s) in self.w.iter_mut().zip(vote.iter_signs()) {
-            *wi += scale_acc * s;
-        }
-        self.last_vote = Some((vote, scale_acc));
-        Ok(RoundOutcome::from_outputs(&outputs))
+        Ok(outcome)
     }
 
     fn server_notify(&self, t: usize) -> Option<Downlink> {

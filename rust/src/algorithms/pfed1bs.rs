@@ -12,9 +12,12 @@
 //!      objective F̃_k(w; v^t) (HLO `client_step`, whose regularizer
 //!      gradient is the fused Pallas SRHT kernel), then upload
 //!      z_k = sign(Φ w_k^{t+1}) — m bits;
-//!   3. `server_aggregate`: v^{t+1} = sign(Σ p_k z_k) — the exact
-//!      minimizer of the server objective (Lemma 1) — as a packed
-//!      majority vote over the *delivered* (possibly noisy) uplinks.
+//!   3. streaming aggregation: v^{t+1} = sign(Σ p_k z_k) — the exact
+//!      minimizer of the server objective (Lemma 1). The round engine
+//!      absorbs each *delivered* (possibly noisy) uplink into an O(m)
+//!      [`VoteAccumulator`] tally the moment it arrives — the server
+//!      never stores the cohort — and `finish_aggregate` signs the
+//!      closed tally into the next packed consensus (DESIGN.md §9).
 //!
 //! v⁰ = 0 (Algorithm 1 line 2): round 0 has no meaningful consensus, so
 //! the broadcast is skipped (the paper's initialization makes the
@@ -30,13 +33,13 @@ use anyhow::Result;
 
 use crate::algorithms::common::{axpy, init_params, local_pfed_steps};
 use crate::algorithms::{
-    Algorithm, Capabilities, ClientCtx, ClientOutput, ClientStats, Downlink, InitCtx,
-    RoundOutcome, ServerCtx, Uplink,
+    AggKind, Algorithm, Capabilities, ClientCtx, ClientOutput, ClientStats, Downlink,
+    InitCtx, RoundAggregator, RoundOutcome, ServerCtx, Uplink,
 };
 use crate::comm::Payload;
 use crate::config::ProjectionKind;
 use crate::data::BatchIter;
-use crate::sketch::bitpack::{majority_vote_weighted, SignVec};
+use crate::sketch::bitpack::{SignVec, VoteAccumulator};
 use crate::sketch::Projection;
 
 pub struct PFed1BS {
@@ -65,9 +68,9 @@ impl PFed1BS {
     }
 
     /// Construct with explicit protocol state: the server-phase methods
-    /// (`server_broadcast`, `server_aggregate`) are pure rust, so tests
-    /// can drive them against hand-built state without the PJRT `init`
-    /// path.
+    /// (`server_broadcast`, `begin_aggregate`/`finish_aggregate`) are
+    /// pure rust, so tests can drive them against hand-built state
+    /// without the PJRT `init` path.
     pub fn with_state(wks: Vec<Vec<f32>>, v: Vec<f32>) -> Self {
         let v_packed = SignVec::from_signs(&v);
         PFed1BS { wks, v, v_packed, projection_kind: ProjectionKind::Fht }
@@ -201,36 +204,33 @@ impl Algorithm for PFed1BS {
         })
     }
 
-    fn server_aggregate(
+    fn begin_aggregate(&self, _t: usize) -> RoundAggregator {
+        // O(m) tally state, however many clients end up delivering
+        RoundAggregator::new(AggKind::Vote(VoteAccumulator::new(self.v.len())))
+    }
+
+    fn finish_aggregate(
         &mut self,
         _t: usize,
-        _selected: &[usize],
-        weights: &[f32],
-        mut outputs: Vec<ClientOutput>,
+        agg: RoundAggregator,
         _ctx: &ServerCtx,
     ) -> Result<RoundOutcome> {
-        let m = self.v.len();
-        for out in outputs.iter_mut() {
-            if let Some(w) = out.state.take() {
-                self.wks[out.client] = w;
-            }
+        let (kind, states, absorbed, outcome) = agg.into_parts();
+        for (k, w) in states {
+            self.wks[k] = w;
         }
-        // borrow the delivered packed words directly — no per-round
-        // re-pack of any client sketch
-        let mut sketches: Vec<&SignVec> = Vec::with_capacity(outputs.len());
-        for out in &outputs {
-            let Some(Uplink { payload: Payload::Signs(z), .. }) = &out.uplink else {
-                anyhow::bail!("pfed1bs uplink must be a sign payload");
-            };
-            sketches.push(z);
+        let AggKind::Vote(tally) = kind else {
+            anyhow::bail!("pfed1bs aggregator must be the majority-vote tally");
+        };
+        // sign the streamed tally into the next consensus (Lemma 1);
+        // a round that delivered nothing keeps v^{t} — voting over zero
+        // sketches would fabricate an all-+1 consensus
+        if absorbed > 0 {
+            let vote = tally.finish();
+            self.v = vote.to_signs();
+            self.v_packed = vote;
         }
-        // weighted majority vote (Lemma 1) over the delivered sketches;
-        // the vote output IS the next packed consensus, unpacked once
-        // for the compute boundary
-        let vote = majority_vote_weighted(&sketches, weights, m);
-        self.v = vote.to_signs();
-        self.v_packed = vote;
-        Ok(RoundOutcome::from_outputs(&outputs))
+        Ok(outcome)
     }
 
     fn model_for(&self, k: usize) -> &[f32] {

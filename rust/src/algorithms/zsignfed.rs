@@ -15,11 +15,11 @@ use anyhow::Result;
 
 use crate::algorithms::common::{axpy, delta, init_params, local_sgd, mean_abs};
 use crate::algorithms::{
-    Algorithm, Capabilities, ClientCtx, ClientOutput, ClientStats, Downlink, InitCtx,
-    RoundOutcome, ServerCtx, Uplink,
+    AggKind, Algorithm, Capabilities, ClientCtx, ClientOutput, ClientStats, Downlink,
+    InitCtx, RoundAggregator, RoundOutcome, ServerCtx, Uplink,
 };
 use crate::comm::Payload;
-use crate::sketch::bitpack::SignVec;
+use crate::sketch::bitpack::{SignVec, VoteAccumulator};
 
 pub struct ZSignFed {
     w: Vec<f32>,
@@ -94,29 +94,26 @@ impl Algorithm for ZSignFed {
         })
     }
 
-    fn server_aggregate(
+    fn begin_aggregate(&self, _t: usize) -> RoundAggregator {
+        // linear one-bit estimator: each delivered sketch folds into the
+        // tally with weight p_k·c_k (the unbiased estimate Σ p_k·c_k·z_k)
+        RoundAggregator::new(AggKind::SignSum(VoteAccumulator::new(self.w.len())))
+    }
+
+    fn finish_aggregate(
         &mut self,
         _t: usize,
-        _selected: &[usize],
-        weights: &[f32],
-        outputs: Vec<ClientOutput>,
+        agg: RoundAggregator,
         _ctx: &ServerCtx,
     ) -> Result<RoundOutcome> {
-        let mut est = vec![0.0f32; self.w.len()];
-        for (out, &p) in outputs.iter().zip(weights) {
-            let Some(Uplink { payload: Payload::ScaledSigns { signs, scale }, .. }) =
-                &out.uplink
-            else {
-                anyhow::bail!("zsignfed uplink must be a scaled-sign payload");
-            };
-            // server accumulates the unbiased per-client estimate c·z_k,
-            // reading the packed bits as ±1 lanes at the compute boundary
-            for (e, s) in est.iter_mut().zip(signs.iter_signs()) {
-                *e += p * scale * s;
-            }
-        }
-        axpy(&mut self.w, 1.0, &est);
-        Ok(RoundOutcome::from_outputs(&outputs))
+        let (kind, _, _, outcome) = agg.into_parts();
+        let AggKind::SignSum(tally) = kind else {
+            anyhow::bail!("zsignfed aggregator must be the linear sign estimator");
+        };
+        // an empty tally reads back as zeros — a delivered-nothing round
+        // leaves the model where it was
+        axpy(&mut self.w, 1.0, &tally.finish_sum());
+        Ok(outcome)
     }
 
     fn model_for(&self, _k: usize) -> &[f32] {

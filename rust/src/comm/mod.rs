@@ -1,7 +1,8 @@
 //! Simulated bidirectional communication substrate: wire codecs, typed
 //! protocol messages, exact per-client byte shards merged into one
 //! ledger, and an in-process network with independent per-link bit-flip
-//! noise (DESIGN.md §5).
+//! noise (DESIGN.md §5) plus per-link latency/dropout lifecycle streams
+//! for the event-driven round engine (DESIGN.md §9).
 
 pub mod codec;
 pub mod ledger;
@@ -10,5 +11,5 @@ pub mod protocol;
 
 pub use codec::{decode, encode, frame_bytes, Payload};
 pub use ledger::{Direction, Ledger, RoundBytes};
-pub use network::{Channel, SimNetwork};
+pub use network::{Channel, LatencyModel, SimNetwork};
 pub use protocol::{Downlink, Uplink};

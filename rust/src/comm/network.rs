@@ -15,17 +15,101 @@
 //! the merged totals are byte-identical to serial metering
 //! (DESIGN.md §5).
 
-use anyhow::Result;
+use anyhow::{bail, ensure, Result};
 
 use crate::comm::codec::{decode, encode, Payload};
 use crate::comm::ledger::{Direction, Ledger, RoundBytes};
 use crate::util::rng::{splitmix64, Rng};
 
-/// One client's link to the server: its own byte shard and noise stream.
+/// A client link's uplink service-time distribution (milliseconds) — the
+/// heterogeneous edge fleets of the scenario engine (DESIGN.md §9).
+/// Draws come from the channel's own lifecycle stream (keyed by
+/// `(seed, k)` alone), so a client's latency trace is independent of
+/// every other link and of delivery order.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub enum LatencyModel {
+    /// every uplink arrives instantly (the default: rounds are barriers,
+    /// no lifecycle draws are consumed)
+    #[default]
+    Zero,
+    /// constant service time (no draws consumed)
+    Fixed { ms: f64 },
+    /// uniform in [lo, hi) — bounded jitter
+    Uniform { lo_ms: f64, hi_ms: f64 },
+    /// exp(ln median + σ·N(0,1)) — the heavy-tailed stragglers of real
+    /// device fleets
+    LogNormal { median_ms: f64, sigma: f64 },
+}
+
+impl LatencyModel {
+    /// Parse a scenario-knob string:
+    /// `zero | fixed:MS | uniform:LO:HI | lognormal:MEDIAN:SIGMA`.
+    pub fn parse(s: &str) -> Result<LatencyModel> {
+        let parts: Vec<&str> = s.split(':').collect();
+        let num = |x: &str| -> Result<f64> {
+            x.parse()
+                .map_err(|e| anyhow::anyhow!("latency `{s}`: bad number `{x}`: {e}"))
+        };
+        let model = match parts.as_slice() {
+            ["zero"] | ["none"] => LatencyModel::Zero,
+            ["fixed", ms] => LatencyModel::Fixed { ms: num(ms)? },
+            ["uniform", lo, hi] => LatencyModel::Uniform { lo_ms: num(lo)?, hi_ms: num(hi)? },
+            ["lognormal", med, sig] => {
+                LatencyModel::LogNormal { median_ms: num(med)?, sigma: num(sig)? }
+            }
+            _ => bail!(
+                "unknown latency model `{s}` (zero|fixed:MS|uniform:LO:HI|lognormal:MEDIAN:SIGMA)"
+            ),
+        };
+        model.validate()?;
+        Ok(model)
+    }
+
+    /// Reject degenerate parameters (negative or non-finite times,
+    /// inverted ranges): an `inf`/NaN service time would scramble the
+    /// engine's deterministic arrival order instead of failing loudly.
+    pub fn validate(&self) -> Result<()> {
+        match *self {
+            LatencyModel::Zero => {}
+            LatencyModel::Fixed { ms } => ensure!(
+                ms.is_finite() && ms >= 0.0,
+                "fixed latency must be finite and >= 0"
+            ),
+            LatencyModel::Uniform { lo_ms, hi_ms } => ensure!(
+                hi_ms.is_finite() && (0.0..=hi_ms).contains(&lo_ms),
+                "uniform latency needs finite 0 <= lo <= hi (got {lo_ms}..{hi_ms})"
+            ),
+            LatencyModel::LogNormal { median_ms, sigma } => ensure!(
+                median_ms.is_finite() && median_ms > 0.0 && sigma.is_finite() && sigma >= 0.0,
+                "lognormal latency needs finite median > 0 and sigma >= 0"
+            ),
+        }
+        Ok(())
+    }
+
+    /// One-line form for run summaries (inverse of `parse`).
+    pub fn summary(&self) -> String {
+        match *self {
+            LatencyModel::Zero => "zero".to_string(),
+            LatencyModel::Fixed { ms } => format!("fixed:{ms}"),
+            LatencyModel::Uniform { lo_ms, hi_ms } => format!("uniform:{lo_ms}:{hi_ms}"),
+            LatencyModel::LogNormal { median_ms, sigma } => {
+                format!("lognormal:{median_ms}:{sigma}")
+            }
+        }
+    }
+}
+
+/// One client's link to the server: its own byte shard, noise stream,
+/// and lifecycle (latency/dropout) stream.
 #[derive(Clone, Debug)]
 pub struct Channel {
     shard: RoundBytes,
     rng: Rng,
+    /// latency/dropout draws — a stream SEPARATE from the noise RNG, so
+    /// enabling scenario knobs cannot shift corruption patterns (the
+    /// noise golden tests stay valid verbatim)
+    lifecycle: Rng,
 }
 
 impl Channel {
@@ -35,7 +119,35 @@ impl Channel {
         let mut s = seed
             ^ 0x4E45_5457_u64 // "NETW"
             ^ (client as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
-        Channel { shard: RoundBytes::default(), rng: Rng::new(splitmix64(&mut s)) }
+        let rng = Rng::new(splitmix64(&mut s));
+        let mut l = seed
+            ^ 0x4C49_4645_u64 // "LIFE"
+            ^ (client as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let lifecycle = Rng::new(splitmix64(&mut l));
+        Channel { shard: RoundBytes::default(), rng, lifecycle }
+    }
+
+    /// Draw this round's uplink service time from the link's own
+    /// lifecycle stream. Deterministic in `(seed, k, draw index)`;
+    /// draw-free models consume nothing.
+    pub fn draw_latency(&mut self, model: &LatencyModel) -> f64 {
+        match *model {
+            LatencyModel::Zero => 0.0,
+            LatencyModel::Fixed { ms } => ms,
+            LatencyModel::Uniform { lo_ms, hi_ms } => {
+                lo_ms + (hi_ms - lo_ms) * self.lifecycle.f64()
+            }
+            LatencyModel::LogNormal { median_ms, sigma } => {
+                (median_ms.ln() + sigma * self.lifecycle.normal() as f64).exp()
+            }
+        }
+    }
+
+    /// Does this client drop out of the current round (unreachable after
+    /// the broadcast: no local work, no uplink)? `p == 0` consumes no
+    /// draw, so default configs leave the stream untouched.
+    pub fn draw_dropout(&mut self, p: f64) -> bool {
+        p > 0.0 && self.lifecycle.f64() < p
     }
 
     /// Bytes metered on this link in the current (open) round.
@@ -263,5 +375,96 @@ mod tests {
         let mut net = SimNetwork::new(4).with_bit_flips(0.5);
         let p = Payload::Dense(vec![1.0, 2.0, 3.0]);
         assert_eq!(net.downlink_to(0, &p).unwrap(), p);
+    }
+
+    #[test]
+    fn latency_model_parses_and_validates() {
+        assert_eq!(LatencyModel::parse("zero").unwrap(), LatencyModel::Zero);
+        assert_eq!(
+            LatencyModel::parse("fixed:5").unwrap(),
+            LatencyModel::Fixed { ms: 5.0 }
+        );
+        assert_eq!(
+            LatencyModel::parse("uniform:2:20").unwrap(),
+            LatencyModel::Uniform { lo_ms: 2.0, hi_ms: 20.0 }
+        );
+        assert_eq!(
+            LatencyModel::parse("lognormal:10:0.5").unwrap(),
+            LatencyModel::LogNormal { median_ms: 10.0, sigma: 0.5 }
+        );
+        for bad in [
+            "bogus",
+            "fixed",
+            "fixed:-1",
+            "uniform:9:2",
+            "lognormal:0:1",
+            // non-finite times would poison the arrival sort/deadline math
+            "fixed:inf",
+            "uniform:0:inf",
+            "lognormal:nan:1",
+        ] {
+            assert!(LatencyModel::parse(bad).is_err(), "{bad} should be rejected");
+        }
+        // summary round-trips
+        for s in ["zero", "fixed:5", "uniform:2:20", "lognormal:10:0.5"] {
+            assert_eq!(LatencyModel::parse(s).unwrap().summary(), s);
+        }
+    }
+
+    #[test]
+    fn lifecycle_draws_are_per_link_deterministic_and_independent() {
+        let model = LatencyModel::Uniform { lo_ms: 1.0, hi_ms: 9.0 };
+        let mut net = SimNetwork::new(11);
+        let a: Vec<f64> = (0..8).map(|_| net.channel(0).draw_latency(&model)).collect();
+        let b: Vec<f64> = (0..8).map(|_| net.channel(1).draw_latency(&model)).collect();
+        assert_ne!(a, b, "two links produced identical latency traces");
+        assert!(a.iter().all(|&t| (1.0..9.0).contains(&t)));
+        // deterministic in (seed, k) alone — independent of other links'
+        // draw order
+        let mut net2 = SimNetwork::new(11);
+        let b2: Vec<f64> = (0..8).map(|_| net2.channel(1).draw_latency(&model)).collect();
+        assert_eq!(b, b2);
+    }
+
+    #[test]
+    fn dropout_rate_is_calibrated_and_zero_consumes_nothing() {
+        let mut net = SimNetwork::new(13);
+        let n = 20_000;
+        let hits = (0..n).filter(|_| net.channel(0).draw_dropout(0.3)).count();
+        let frac = hits as f64 / n as f64;
+        assert!((frac - 0.3).abs() < 0.02, "dropout rate {frac}");
+        // p = 0 and the Zero latency model must not consume draws: the
+        // next real draw matches a fresh channel's first draw
+        let mut gated = SimNetwork::new(17);
+        assert!(!gated.channel(2).draw_dropout(0.0));
+        assert_eq!(gated.channel(2).draw_latency(&LatencyModel::Zero), 0.0);
+        assert_eq!(
+            gated.channel(2).draw_latency(&LatencyModel::Fixed { ms: 3.0 }),
+            3.0
+        );
+        let first = gated
+            .channel(2)
+            .draw_latency(&LatencyModel::Uniform { lo_ms: 0.0, hi_ms: 1.0 });
+        let mut fresh = SimNetwork::new(17);
+        let fresh_first = fresh
+            .channel(2)
+            .draw_latency(&LatencyModel::Uniform { lo_ms: 0.0, hi_ms: 1.0 });
+        assert_eq!(first, fresh_first, "draw-free paths consumed lifecycle state");
+    }
+
+    #[test]
+    fn lifecycle_draws_do_not_shift_noise_streams() {
+        // corruption after heavy lifecycle use must equal corruption on a
+        // fresh network: the two streams are fully separate
+        let sent = ones(256);
+        let mut quiet = SimNetwork::new(23).with_bit_flips(0.3);
+        let want = quiet.downlink_to(0, &sent).unwrap();
+        let mut busy = SimNetwork::new(23).with_bit_flips(0.3);
+        for _ in 0..100 {
+            busy.channel(0).draw_dropout(0.5);
+            busy.channel(0)
+                .draw_latency(&LatencyModel::LogNormal { median_ms: 5.0, sigma: 1.0 });
+        }
+        assert_eq!(busy.downlink_to(0, &sent).unwrap(), want);
     }
 }

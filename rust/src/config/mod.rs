@@ -7,6 +7,7 @@ pub mod parser;
 
 use anyhow::{bail, Result};
 
+use crate::comm::LatencyModel;
 use crate::data::{DatasetName, Partition};
 use crate::util::cli::Args;
 
@@ -74,6 +75,19 @@ pub struct RunConfig {
     /// `PFED1BS_CLIENT_THREADS` env var, else available parallelism);
     /// results are bit-identical for any value
     pub client_threads: usize,
+    /// extra clients selected beyond S each round (over-selection: the
+    /// round still closes after S deliveries, so stragglers beyond the
+    /// target are cut — DESIGN.md §9). 0 = exactly S, the default.
+    pub over_select: usize,
+    /// per-round uplink deadline in simulated ms; arrivals after it are
+    /// cut as stragglers. 0 = no deadline (the default).
+    pub deadline_ms: f64,
+    /// probability a selected client drops out of a round (unreachable
+    /// after the broadcast: no local work, no uplink). 0 = never.
+    pub dropout_prob: f64,
+    /// per-client uplink service-time distribution (`zero`, `fixed:MS`,
+    /// `uniform:LO:HI`, `lognormal:MEDIAN:SIGMA`)
+    pub latency: LatencyModel,
     pub artifacts_dir: String,
     pub results_dir: String,
 }
@@ -113,6 +127,10 @@ impl RunConfig {
             // c = zsign_noise · mean|Δ| (see zsignfed.rs on why mean)
             zsign_noise: 2.0,
             client_threads: 0,
+            over_select: 0,
+            deadline_ms: 0.0,
+            dropout_prob: 0.0,
+            latency: LatencyModel::Zero,
             artifacts_dir: "artifacts".to_string(),
             results_dir: "results".to_string(),
         }
@@ -174,6 +192,10 @@ impl RunConfig {
             "server-lr" | "server_lr" => self.server_lr = num!(),
             "zsign-noise" | "zsign_noise" => self.zsign_noise = num!(),
             "threads" | "client-threads" | "client_threads" => self.client_threads = num!(),
+            "over-select" | "over_select" => self.over_select = num!(),
+            "deadline-ms" | "deadline_ms" => self.deadline_ms = num!(),
+            "dropout-prob" | "dropout_prob" => self.dropout_prob = num!(),
+            "latency" => self.latency = LatencyModel::parse(val)?,
             "artifacts-dir" | "artifacts_dir" => self.artifacts_dir = val.to_string(),
             "results-dir" | "results_dir" => self.results_dir = val.to_string(),
             other => bail!("unknown config key `{other}`"),
@@ -205,6 +227,27 @@ impl RunConfig {
             "label-shards" | "dirichlet" | "iid" => {}
             p => bail!("unknown partition `{p}` (label-shards|dirichlet|iid)"),
         }
+        if self.participating + self.over_select > self.clients {
+            bail!(
+                "over-selection needs participating + over_select <= clients \
+                 ({} + {} > {})",
+                self.participating,
+                self.over_select,
+                self.clients
+            );
+        }
+        if !(0.0..1.0).contains(&self.dropout_prob) {
+            bail!("dropout-prob must be in [0, 1) (got {})", self.dropout_prob);
+        }
+        if !self.deadline_ms.is_finite() || self.deadline_ms < 0.0 {
+            bail!("deadline-ms must be finite and >= 0 (got {})", self.deadline_ms);
+        }
+        if self.deadline_ms > 0.0 && self.latency == LatencyModel::Zero {
+            // legal but degenerate: everything arrives at t=0 and the
+            // deadline can never fire — not an error, just pointless
+            crate::debug!("deadline-ms set with zero latency: no straggler can exist");
+        }
+        self.latency.validate()?;
         Ok(())
     }
 
@@ -223,7 +266,7 @@ impl RunConfig {
 
     /// One-line summary for logs and result-file headers.
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "alg={} dataset={} K={} S={} T={} R={} eta={} lambda={} mu={} gamma={} m/n={} partition={} projection={} seed={}",
             self.algorithm,
             self.dataset.as_str(),
@@ -239,7 +282,25 @@ impl RunConfig {
             self.partition,
             self.projection.as_str(),
             self.seed
-        )
+        );
+        if self.has_scenario() {
+            s.push_str(&format!(
+                " over={} deadline={}ms dropout={} latency={}",
+                self.over_select,
+                self.deadline_ms,
+                self.dropout_prob,
+                self.latency.summary()
+            ));
+        }
+        s
+    }
+
+    /// Any client-lifecycle scenario knob set away from its default?
+    pub fn has_scenario(&self) -> bool {
+        self.over_select > 0
+            || self.deadline_ms > 0.0
+            || self.dropout_prob > 0.0
+            || self.latency != LatencyModel::Zero
     }
 }
 
@@ -295,6 +356,44 @@ mod tests {
         c.validate().unwrap();
         c.sketch_ratio = 0.0;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn scenario_knobs_parse_and_validate() {
+        let mut c = RunConfig::preset(DatasetName::Mnist);
+        assert!(!c.has_scenario());
+        c.apply_pairs(
+            [
+                ("participating", "12"),
+                ("over-select", "4"),
+                ("deadline-ms", "25"),
+                ("dropout-prob", "0.2"),
+                ("latency", "lognormal:10:0.5"),
+            ]
+            .into_iter(),
+        )
+        .unwrap();
+        assert_eq!(c.over_select, 4);
+        assert_eq!(c.deadline_ms, 25.0);
+        assert_eq!(c.dropout_prob, 0.2);
+        assert_eq!(c.latency, LatencyModel::LogNormal { median_ms: 10.0, sigma: 0.5 });
+        assert!(c.has_scenario());
+        c.validate().unwrap();
+        let s = c.summary();
+        assert!(s.contains("over=4") && s.contains("lognormal:10:0.5"), "{s}");
+
+        // over-selection must fit the fleet
+        c.over_select = 9; // 12 + 9 > 20
+        assert!(c.validate().is_err());
+        c.over_select = 0;
+        c.dropout_prob = 1.0;
+        assert!(c.validate().is_err());
+        c.dropout_prob = 0.0;
+        c.deadline_ms = -1.0;
+        assert!(c.validate().is_err());
+        c.deadline_ms = 0.0;
+        c.validate().unwrap();
+        assert!(c.apply_pairs([("latency", "bogus")].into_iter()).is_err());
     }
 
     #[test]

@@ -1,0 +1,305 @@
+//! Event-driven round planning: over-selection, per-link dropout and
+//! latency draws, deadline cuts, and delivered-set weight
+//! renormalization (DESIGN.md §9).
+//!
+//! A round is planned *before* any client computes: the cohort is
+//! sampled, each selected client's channel draws its fate (dropout) and
+//! uplink service time from its own lifecycle stream, and the arrival
+//! schedule is fixed — simulated time, so the plan depends only on
+//! `(config, seed, t)`, never on wall-clock or thread scheduling. The
+//! coordinator then executes the plan: compute runs data-parallel while
+//! the engine folds each delivered uplink into the round's streaming
+//! aggregator in arrival order.
+//!
+//! Acceptance rule (the over-selection protocol of production FL
+//! systems): arrivals are processed in simulated-time order (ties broken
+//! by selection index) and accepted until `participating` uplinks are in
+//! or the deadline passes; everything later is a straggler — its bytes
+//! were spent on the link, its payload never enters server state.
+
+use crate::comm::SimNetwork;
+use crate::config::RunConfig;
+use crate::util::rng::Rng;
+
+/// One scheduled uplink arrival.
+#[derive(Clone, Copy, Debug)]
+pub struct Arrival {
+    /// index into the round's compute set (selection order)
+    pub task: usize,
+    /// client id
+    pub client: usize,
+    /// simulated arrival time, ms after round start
+    pub at_ms: f64,
+    /// delivered (absorbed into the aggregator) vs cut as a straggler
+    pub accepted: bool,
+    /// delivered-set weight p_k (renormalized over what arrived in
+    /// time); 0.0 for cut arrivals
+    pub weight: f32,
+}
+
+/// A fully planned round: who was selected, who computes, and in what
+/// order their uplinks reach the server.
+#[derive(Clone, Debug)]
+pub struct RoundPlan {
+    pub t: usize,
+    /// the over-selected cohort S̃^t, in selection order
+    pub selected: Vec<usize>,
+    /// clients that actually run the client phase (selection order):
+    /// `selected` minus dropouts
+    pub computing: Vec<usize>,
+    /// arrival schedule over `computing`, sorted by (at_ms, task)
+    pub arrivals: Vec<Arrival>,
+    /// accepted arrivals (≤ participating)
+    pub delivered: usize,
+    /// computed-and-uploaded but cut by the deadline / target count
+    pub stragglers_cut: usize,
+    /// selected but unreachable this round
+    pub dropped: usize,
+}
+
+impl RoundPlan {
+    /// The degenerate plan the pre-engine API exposes: every listed
+    /// client computes and delivers instantly, with caller-supplied
+    /// weights (benches and budget-loop examples drive rounds this way).
+    pub fn full_delivery(t: usize, selected: Vec<usize>, weights: Vec<f32>) -> RoundPlan {
+        assert_eq!(selected.len(), weights.len());
+        let arrivals = selected
+            .iter()
+            .zip(&weights)
+            .enumerate()
+            .map(|(i, (&k, &w))| Arrival {
+                task: i,
+                client: k,
+                at_ms: 0.0,
+                accepted: true,
+                weight: w,
+            })
+            .collect();
+        RoundPlan {
+            t,
+            computing: selected.clone(),
+            selected,
+            arrivals,
+            delivered: weights.len(),
+            stragglers_cut: 0,
+            dropped: 0,
+        }
+    }
+}
+
+/// Plan round `t`: sample the (over-)selected cohort from `rng`, draw
+/// each client's fate from its own channel, schedule arrivals, apply the
+/// target-count/deadline acceptance rule, and renormalize `client_weights`
+/// (the full fleet's p_k) over the delivered set.
+///
+/// With every scenario knob at its default this reduces exactly to the
+/// barrier round: cohort = S, nobody drops, everyone arrives at t=0 in
+/// selection order, all are accepted, and the weights equal the
+/// selection-order renormalization — byte-for-byte the pre-engine
+/// behavior (no lifecycle draw is even consumed).
+pub fn plan_round(
+    t: usize,
+    cfg: &RunConfig,
+    client_weights: &[f32],
+    net: &mut SimNetwork,
+    rng: &mut Rng,
+) -> RoundPlan {
+    let cohort = (cfg.participating + cfg.over_select).min(cfg.clients);
+    let selected = rng.sample_without_replacement(cfg.clients, cohort);
+
+    // lifecycle draws in selection order, each from the client's OWN
+    // channel stream — the plan is invariant to how it is executed
+    let mut computing = Vec::with_capacity(selected.len());
+    let mut arrivals: Vec<Arrival> = Vec::with_capacity(selected.len());
+    let mut dropped = 0usize;
+    for &k in &selected {
+        let ch = net.channel(k);
+        if ch.draw_dropout(cfg.dropout_prob) {
+            dropped += 1;
+            continue;
+        }
+        let at_ms = ch.draw_latency(&cfg.latency);
+        arrivals.push(Arrival {
+            task: computing.len(),
+            client: k,
+            at_ms,
+            accepted: false,
+            weight: 0.0,
+        });
+        computing.push(k);
+    }
+
+    // event order: simulated time, ties broken by selection index so the
+    // zero-latency default is exactly selection order
+    arrivals.sort_by(|a, b| a.at_ms.total_cmp(&b.at_ms).then(a.task.cmp(&b.task)));
+
+    // accept until the target count or the deadline, whichever first
+    let mut delivered = 0usize;
+    for a in arrivals.iter_mut() {
+        let in_time = cfg.deadline_ms <= 0.0 || a.at_ms <= cfg.deadline_ms;
+        if delivered < cfg.participating && in_time {
+            a.accepted = true;
+            delivered += 1;
+        }
+    }
+
+    // renormalize p_k over the delivered set (Σ weights = 1 whenever
+    // anything was delivered), accumulated in arrival order
+    let total: f32 = arrivals
+        .iter()
+        .filter(|a| a.accepted)
+        .map(|a| client_weights[a.client])
+        .sum();
+    for a in arrivals.iter_mut() {
+        if a.accepted {
+            a.weight = client_weights[a.client] / total;
+        }
+    }
+
+    let stragglers_cut = arrivals.len() - delivered;
+    RoundPlan { t, selected, computing, arrivals, delivered, stragglers_cut, dropped }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::LatencyModel;
+    use crate::config::RunConfig;
+    use crate::data::DatasetName;
+
+    fn fleet_weights(k: usize) -> Vec<f32> {
+        // unequal but normalized, like data-derived p_k
+        let raw: Vec<f32> = (0..k).map(|i| 1.0 + (i % 5) as f32).collect();
+        let total: f32 = raw.iter().sum();
+        raw.into_iter().map(|w| w / total).collect()
+    }
+
+    #[test]
+    fn default_plan_is_the_barrier_round_in_selection_order() {
+        let cfg = RunConfig::preset(DatasetName::Mnist); // all knobs default
+        let weights = fleet_weights(cfg.clients);
+        let mut net = SimNetwork::new(cfg.seed);
+        let mut rng = Rng::new(99);
+        // the reference: what the pre-engine coordinator computed
+        let mut ref_rng = Rng::new(99);
+        let ref_selected =
+            ref_rng.sample_without_replacement(cfg.clients, cfg.participating);
+        let raw: Vec<f32> = ref_selected.iter().map(|&k| weights[k]).collect();
+        let total: f32 = raw.iter().sum();
+        let ref_weights: Vec<f32> = raw.iter().map(|&p| p / total).collect();
+
+        let plan = plan_round(0, &cfg, &weights, &mut net, &mut rng);
+        assert_eq!(plan.selected, ref_selected);
+        assert_eq!(plan.computing, ref_selected);
+        assert_eq!((plan.delivered, plan.stragglers_cut, plan.dropped), (20, 0, 0));
+        for (i, a) in plan.arrivals.iter().enumerate() {
+            assert_eq!(a.task, i, "zero latency must keep selection order");
+            assert!(a.accepted);
+            assert_eq!(a.at_ms, 0.0);
+            assert_eq!(a.weight, ref_weights[i], "weight arithmetic must match");
+        }
+    }
+
+    #[test]
+    fn scenario_plan_is_deterministic_and_renormalizes_over_delivered() {
+        let mut cfg = RunConfig::preset(DatasetName::Mnist);
+        cfg.participating = 10;
+        cfg.over_select = 6;
+        cfg.dropout_prob = 0.25;
+        cfg.deadline_ms = 12.0;
+        cfg.latency = LatencyModel::Uniform { lo_ms: 1.0, hi_ms: 30.0 };
+        cfg.validate().unwrap();
+        let weights = fleet_weights(cfg.clients);
+
+        let build = || {
+            let mut net = SimNetwork::new(cfg.seed);
+            let mut rng = Rng::new(7);
+            (0..4)
+                .map(|t| plan_round(t, &cfg, &weights, &mut net, &mut rng))
+                .collect::<Vec<_>>()
+        };
+        let plans = build();
+        let replay = build();
+        for (t, (p, q)) in plans.iter().zip(&replay).enumerate() {
+            // fully deterministic in (cfg, seeds, t)
+            assert_eq!(p.selected, q.selected, "round {t}");
+            assert_eq!(p.delivered, q.delivered, "round {t}");
+            let pw: Vec<f32> = p.arrivals.iter().map(|a| a.weight).collect();
+            let qw: Vec<f32> = q.arrivals.iter().map(|a| a.weight).collect();
+            assert_eq!(pw, qw, "round {t}");
+
+            // structural invariants
+            assert_eq!(p.selected.len(), 16);
+            assert_eq!(p.computing.len() + p.dropped, p.selected.len());
+            assert_eq!(p.arrivals.len(), p.computing.len());
+            assert_eq!(
+                p.arrivals.iter().filter(|a| a.accepted).count(),
+                p.delivered
+            );
+            assert_eq!(p.stragglers_cut + p.delivered, p.computing.len());
+            assert!(p.delivered <= cfg.participating);
+            for a in &p.arrivals {
+                assert!(
+                    !a.accepted || a.at_ms <= cfg.deadline_ms,
+                    "accepted an arrival past the deadline"
+                );
+            }
+            for w in p.arrivals.windows(2) {
+                assert!(
+                    w[0].at_ms <= w[1].at_ms,
+                    "arrivals must be in simulated-time order"
+                );
+            }
+            // the delivered-set weights renormalize to exactly one
+            if p.delivered > 0 {
+                let sum: f32 = p
+                    .arrivals
+                    .iter()
+                    .filter(|a| a.accepted)
+                    .map(|a| a.weight)
+                    .sum();
+                assert!((sum - 1.0).abs() < 1e-4, "round {t}: Σp = {sum}");
+            }
+            for a in p.arrivals.iter().filter(|a| !a.accepted) {
+                assert_eq!(a.weight, 0.0, "cut arrivals carry no weight");
+            }
+        }
+        // the scenario actually exercises cuts/dropouts somewhere in 4
+        // rounds (deterministic, so this is a stable property of seed 7)
+        let total_cut: usize = plans.iter().map(|p| p.stragglers_cut).sum();
+        let total_dropped: usize = plans.iter().map(|p| p.dropped).sum();
+        assert!(total_cut + total_dropped > 0, "scenario produced no lifecycle events");
+    }
+
+    #[test]
+    fn over_selection_closes_at_the_target_count() {
+        let mut cfg = RunConfig::preset(DatasetName::Mnist);
+        cfg.participating = 5;
+        cfg.over_select = 10;
+        cfg.latency = LatencyModel::Uniform { lo_ms: 0.0, hi_ms: 10.0 };
+        cfg.validate().unwrap();
+        let weights = fleet_weights(cfg.clients);
+        let mut net = SimNetwork::new(3);
+        let mut rng = Rng::new(3);
+        let plan = plan_round(0, &cfg, &weights, &mut net, &mut rng);
+        assert_eq!(plan.selected.len(), 15);
+        assert_eq!(plan.delivered, 5, "round must close at S deliveries");
+        assert_eq!(plan.stragglers_cut, 10);
+        // the accepted five are exactly the five earliest arrivals
+        let cutoff = plan.arrivals[4].at_ms;
+        for a in &plan.arrivals {
+            assert_eq!(a.accepted, a.at_ms <= cutoff);
+        }
+    }
+
+    #[test]
+    fn full_delivery_plan_mirrors_its_inputs() {
+        let plan = RoundPlan::full_delivery(3, vec![4, 9, 2], vec![0.5, 0.3, 0.2]);
+        assert_eq!(plan.t, 3);
+        assert_eq!(plan.computing, vec![4, 9, 2]);
+        assert_eq!((plan.delivered, plan.stragglers_cut, plan.dropped), (3, 0, 0));
+        assert_eq!(plan.arrivals[1].client, 9);
+        assert_eq!(plan.arrivals[1].weight, 0.3);
+        assert!(plan.arrivals.iter().all(|a| a.accepted));
+    }
+}

@@ -26,6 +26,13 @@ pub struct RoundRecord {
     /// popcount — DESIGN.md §8). `None` for algorithms without a
     /// consensus and for the first consensus-bearing round.
     pub consensus_flips: Option<usize>,
+    /// uplinks accepted into the round's aggregation (= S in the default
+    /// barrier rounds; fewer under dropouts/deadlines — DESIGN.md §9)
+    pub delivered: usize,
+    /// uplinks sent (and metered) but cut by the deadline / target count
+    pub stragglers_cut: usize,
+    /// server aggregate-phase wall time: streaming absorbs + finish, ms
+    pub aggregate_ms: f64,
 }
 
 /// Full run history + summary.
@@ -79,7 +86,8 @@ impl History {
     }
 
     /// Write `round,train_loss,test_acc,test_loss,uplink_bytes,
-    /// downlink_bytes,duration_ms,grad_norm,consensus_flips` CSV.
+    /// downlink_bytes,duration_ms,grad_norm,consensus_flips,delivered,
+    /// stragglers_cut,aggregate_ms` CSV.
     pub fn write_csv(&self, path: impl AsRef<Path>, header_comment: &str) -> Result<()> {
         let path = path.as_ref();
         if let Some(dir) = path.parent() {
@@ -92,12 +100,12 @@ impl History {
         }
         writeln!(
             f,
-            "round,train_loss,test_acc,test_loss,uplink_bytes,downlink_bytes,duration_ms,grad_norm,consensus_flips"
+            "round,train_loss,test_acc,test_loss,uplink_bytes,downlink_bytes,duration_ms,grad_norm,consensus_flips,delivered,stragglers_cut,aggregate_ms"
         )?;
         for r in &self.records {
             writeln!(
                 f,
-                "{},{:.6},{},{},{},{},{:.3},{},{}",
+                "{},{:.6},{},{},{},{},{:.3},{},{},{},{},{:.4}",
                 r.round,
                 r.train_loss,
                 fmt_opt(r.test_acc),
@@ -109,6 +117,9 @@ impl History {
                 r.consensus_flips
                     .map(|x| x.to_string())
                     .unwrap_or_default(),
+                r.delivered,
+                r.stragglers_cut,
+                r.aggregate_ms,
             )?;
         }
         Ok(())
@@ -133,6 +144,9 @@ mod tests {
             duration_ms: 5.0,
             grad_norm: None,
             consensus_flips: if round > 0 { Some(round * 3) } else { None },
+            delivered: 2,
+            stragglers_cut: round % 2,
+            aggregate_ms: 0.25,
         }
     }
 
@@ -162,9 +176,10 @@ mod tests {
         let lines: Vec<&str> = text.lines().collect();
         assert!(lines[0].starts_with("# unit test"));
         assert!(lines[1].starts_with("round,train_loss"));
-        assert!(lines[1].ends_with("grad_norm,consensus_flips"));
+        assert!(lines[1].ends_with("consensus_flips,delivered,stragglers_cut,aggregate_ms"));
         assert_eq!(lines.len(), 3);
         assert!(lines[2].starts_with("0,"));
+        assert!(lines[2].ends_with(",2,0,0.2500"), "{}", lines[2]);
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -1,35 +1,46 @@
 //! The federated round loop — Algorithm 1's outer `for t = 0..T` — and
-//! the owner of the transport (DESIGN.md §3).
+//! the owner of the transport: an event-driven round engine
+//! (DESIGN.md §3, §9).
 //!
-//! Owns everything mutable (network, RNG, algorithm state), samples the
-//! participant set S^t uniformly without replacement (the setting of
-//! Lemma 6 / Theorem 1), normalizes the aggregation weights p_k over the
-//! subset, and drives the phased protocol per round:
+//! Owns everything mutable (network, RNG, algorithm state). Each round
+//! is *planned* first ([`engine::plan_round`]): the (over-)selected
+//! cohort S̃^t is sampled uniformly without replacement (the setting of
+//! Lemma 6 / Theorem 1), every selected client's channel draws its fate
+//! (dropout) and uplink latency, the deadline/target-count rule fixes
+//! the delivered set, and p_k renormalizes over what will actually
+//! arrive. The plan is pure simulated time — a function of
+//! `(config, seed, t)` only. Execution then streams:
 //!
 //! 1. `server_broadcast` → one metered, independently-noisy delivery per
-//!    participant through that client's channel;
-//! 2. `client_round` for every participant, data-parallel over scoped
-//!    threads (bit-identical to serial for any thread count: each client
-//!    gets an RNG stream forked in selection order beforehand);
-//! 3. each uplink transported through its sender's channel;
-//! 4. `server_aggregate` over the delivered uplinks;
-//! 5. optional `server_notify` broadcast (OBDA's vote downlink).
+//!    selected client through that client's channel (dropouts included:
+//!    the server does not yet know they are gone);
+//! 2. `client_round` for every reachable participant, data-parallel
+//!    over scoped threads (bit-identical to serial for any thread
+//!    count: each client gets an RNG stream forked in selection order
+//!    beforehand);
+//! 3. each uplink is transported through its sender's channel and —
+//!    if it made the deadline/target — absorbed into the round's
+//!    streaming [`RoundAggregator`] *in arrival order*, on this thread,
+//!    the payload dropped immediately (the cohort is never stored);
+//! 4. `finish_aggregate` folds the closed aggregator into server state;
+//! 5. optional `server_notify` broadcast to the reachable participants.
 //!
 //! Algorithms never see the network; a future socket or sharded-server
 //! transport replaces step 1/3/5 internals without touching them.
+//!
+//! [`RoundAggregator`]: crate::algorithms::RoundAggregator
 
 pub mod checkpoint;
+pub mod engine;
 pub mod evaluator;
 pub mod metrics;
 pub mod parallel;
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use crate::algorithms::{
-    Algorithm, ClientCtx, ClientOutput, InitCtx, RoundOutcome, ServerCtx,
-};
+use crate::algorithms::{Algorithm, ClientCtx, ClientOutput, InitCtx, RoundOutcome, ServerCtx};
 use crate::comm::{Downlink, SimNetwork};
 use crate::config::{ProjectionKind, RunConfig};
 use crate::data::{generate, FederatedData};
@@ -38,6 +49,7 @@ use crate::sketch::{DenseGaussianOperator, Projection, SignVec, SrhtOperator};
 use crate::util::rng::Rng;
 
 pub use checkpoint::Checkpoint;
+pub use engine::{plan_round, Arrival, RoundPlan};
 pub use evaluator::{evaluate, evaluate_per_client, EvalResult};
 pub use metrics::{History, RoundRecord};
 
@@ -63,7 +75,7 @@ struct ClientTask {
 /// documented thread-safe for concurrent `Execute` calls — and the
 /// client phase only ever calls `&self` execution methods on the
 /// runtime. Everything else captured by the parallel closure is checked
-/// by the compiler (`par_map` requires `F: Sync`).
+/// by the compiler (`par_map_consume` requires `F: Sync`).
 struct SyncRuntime<'a>(&'a ModelRuntime);
 // SAFETY: see the struct docs — shared-reference use of the PJRT
 // execution methods is concurrency-safe per the PJRT API contract.
@@ -121,19 +133,12 @@ impl<'a> Coordinator<'a> {
         })
     }
 
-    /// Sample S^t uniformly without replacement and normalize p_k over it.
-    fn sample_round(&mut self) -> (Vec<usize>, Vec<f32>) {
-        let selected = self
-            .rng
-            .sample_without_replacement(self.cfg.clients, self.cfg.participating);
-        let raw: Vec<f32> = selected.iter().map(|&k| self.data.weights[k]).collect();
-        let total: f32 = raw.iter().sum();
-        let weights = raw.iter().map(|&p| p / total).collect();
-        (selected, weights)
-    }
-
-    /// Drive one full protocol round `t` over `selected` (does not close
-    /// the ledger round — callers pair this with `net.end_round()`).
+    /// Drive one fully-delivered protocol round `t` over `selected` with
+    /// caller-supplied weights — no over-selection, latency, dropout, or
+    /// deadline modeling (does not close the ledger round — callers pair
+    /// this with `net.end_round()`). Benches and budget-loop examples
+    /// drive rounds through this; the training loop plans scenario
+    /// rounds via [`engine::plan_round`] and [`Coordinator::run_round_plan`].
     pub fn run_round(
         &mut self,
         alg: &mut dyn Algorithm,
@@ -142,32 +147,55 @@ impl<'a> Coordinator<'a> {
         weights: &[f32],
     ) -> Result<RoundOutcome> {
         anyhow::ensure!(
-            !selected.is_empty(),
-            "round {t}: empty participant set (validate the config before running)"
-        );
-        anyhow::ensure!(
             selected.len() == weights.len(),
             "round {t}: {} participants but {} weights",
             selected.len(),
             weights.len()
         );
+        let plan = RoundPlan::full_delivery(t, selected.to_vec(), weights.to_vec());
+        self.run_round_plan(alg, &plan).map(|(outcome, _)| outcome)
+    }
 
-        // phase 1: broadcast — one independent delivery per participant
+    /// Execute a planned round: broadcast, data-parallel client phase,
+    /// streaming arrival-order aggregation, finish, notify. Returns the
+    /// round outcome and the aggregate-phase wall time in ms (absorbs +
+    /// finish — the server-side cost the metrics CSV reports).
+    pub fn run_round_plan(
+        &mut self,
+        alg: &mut dyn Algorithm,
+        plan: &RoundPlan,
+    ) -> Result<(RoundOutcome, f64)> {
+        let t = plan.t;
+        anyhow::ensure!(
+            !plan.selected.is_empty(),
+            "round {t}: empty participant set (validate the config before running)"
+        );
+
+        // phase 1: broadcast — one independent delivery per selected
+        // client, dropouts included (the server cannot know yet); only
+        // reachable clients become compute tasks. Forks happen in
+        // selection order, before the parallel section: determinism for
+        // any thread count.
         let broadcast = alg.server_broadcast(t);
-        let mut tasks: Vec<ClientTask> = Vec::with_capacity(selected.len());
-        for &k in selected {
-            let downlink = match &broadcast {
+        let mut tasks: Vec<ClientTask> = Vec::with_capacity(plan.computing.len());
+        let mut next_computing = plan.computing.iter().peekable();
+        for &k in &plan.selected {
+            let delivered = match &broadcast {
                 Some(d) => Some(Downlink::new(d.round, self.net.downlink_to(k, &d.payload)?)),
                 None => None,
             };
-            // fork per-client streams in selection order, before the
-            // parallel section: determinism for any thread count
-            let rng = self.rng.fork(client_stream_tag(t, k));
-            tasks.push(ClientTask { k, rng, downlink });
+            if next_computing.peek() == Some(&&k) {
+                next_computing.next();
+                let rng = self.rng.fork(client_stream_tag(t, k));
+                tasks.push(ClientTask { k, rng, downlink: delivered });
+            }
         }
 
-        // phase 2: data-parallel client rounds. The closure is `Sync`-
-        // checked by `par_map`; only the PJRT handle needs the scoped
+        // phases 2+3: data-parallel client rounds, consumed on THIS
+        // thread in simulated-arrival order — each uplink is transported
+        // and folded into the streaming aggregator the moment it
+        // arrives, then dropped. The closure is `Sync`-checked by
+        // `par_map_consume`; only the PJRT handle needs the scoped
         // `SyncRuntime` assertion.
         let threads = parallel::thread_count(self.cfg.client_threads);
         let model = SyncRuntime(self.model);
@@ -175,42 +203,62 @@ impl<'a> Coordinator<'a> {
         let cfg = &self.cfg;
         let projection = &self.projection;
         let alg_shared: &dyn Algorithm = alg;
-        let results = parallel::par_map(tasks, threads, |_, task: ClientTask| {
-            let ClientTask { k, rng, downlink } = task;
-            let mut ctx = ClientCtx { model: model.0, data, cfg, projection, rng };
-            alg_shared.client_round(t, k, downlink.as_ref(), &mut ctx)
-        });
-        let mut outputs: Vec<ClientOutput> = results
-            .into_iter()
-            .collect::<Result<_>>()
-            .with_context(|| format!("client phase of round {t}"))?;
-
-        // phase 3: transport the uplinks (serial: metering + noise are
-        // per-channel and cheap next to the client compute)
-        for out in outputs.iter_mut() {
-            if let Some(up) = out.uplink.as_mut() {
-                let delivered = self.net.uplink_from(out.client, &up.payload)?;
-                up.payload = delivered;
-            }
-        }
-
-        // phase 4: server aggregation over delivered uplinks
-        let outcome = alg.server_aggregate(
-            t,
-            selected,
-            weights,
-            outputs,
-            &ServerCtx { cfg: &self.cfg, projection: &self.projection },
+        let mut agg = alg_shared.begin_aggregate(t);
+        let order: Vec<usize> = plan.arrivals.iter().map(|a| a.task).collect();
+        let net = &mut self.net;
+        let mut agg_time = Duration::ZERO;
+        let mut arrivals = plan.arrivals.iter();
+        parallel::par_map_consume(
+            tasks,
+            threads,
+            &order,
+            |_, task: ClientTask| {
+                let ClientTask { k, rng, downlink } = task;
+                let mut ctx = ClientCtx { model: model.0, data, cfg, projection, rng };
+                alg_shared.client_round(t, k, downlink.as_ref(), &mut ctx)
+            },
+            |task_idx, result: Result<ClientOutput>| -> Result<()> {
+                let arrival = arrivals.next().expect("one arrival per consumed task");
+                debug_assert_eq!(arrival.task, task_idx);
+                let mut out =
+                    result.with_context(|| format!("client phase of round {t}"))?;
+                // the uplink is transported (metered, noise-corrupted)
+                // whether or not the deadline cuts it: the bytes were
+                // spent on the link either way
+                if let Some(up) = out.uplink.as_mut() {
+                    up.payload = net.uplink_from(out.client, &up.payload)?;
+                }
+                let started = Instant::now();
+                if arrival.accepted {
+                    agg.absorb(out, arrival.weight)
+                        .with_context(|| format!("absorbing round-{t} uplink"))?;
+                } else {
+                    // straggler: payload discarded, local state kept
+                    agg.absorb_cut(out);
+                }
+                agg_time += started.elapsed();
+                Ok(())
+            },
         )?;
 
-        // phase 5: optional end-of-round broadcast (metered per
-        // recipient; the simulated stateless clients discard it)
+        // phase 4: fold the closed aggregator into server state
+        let started = Instant::now();
+        let outcome = alg.finish_aggregate(
+            t,
+            agg,
+            &ServerCtx { cfg: &self.cfg, projection: &self.projection },
+        )?;
+        agg_time += started.elapsed();
+
+        // phase 5: optional end-of-round broadcast to every reachable
+        // participant (metered per recipient; the simulated stateless
+        // clients discard it — dropouts are unreachable and skipped)
         if let Some(note) = alg.server_notify(t) {
-            for &k in selected {
+            for &k in &plan.computing {
                 self.net.downlink_to(k, &note.payload)?;
             }
         }
-        Ok(outcome)
+        Ok((outcome, agg_time.as_secs_f64() * 1e3))
     }
 
     /// Run the full T-round training loop.
@@ -236,8 +284,9 @@ impl<'a> Coordinator<'a> {
         let mut prev_consensus: Option<SignVec> = None;
         for t in 0..self.cfg.rounds {
             let started = Instant::now();
-            let (selected, weights) = self.sample_round();
-            let outcome = self.run_round(alg, t, &selected, &weights)?;
+            let plan =
+                engine::plan_round(t, &self.cfg, &self.data.weights, &mut self.net, &mut self.rng);
+            let (outcome, aggregate_ms) = self.run_round_plan(alg, &plan)?;
             let bytes = self.net.end_round();
 
             let consensus_flips = alg.consensus_packed().and_then(|cur| {
@@ -256,7 +305,16 @@ impl<'a> Coordinator<'a> {
             };
 
             let grad_norm = if grad_diag && is_eval_round {
-                Some(self.gradient_diagnostic(alg, &selected)?)
+                // over the DELIVERED set, like every other round metric:
+                // dropouts did no local work and cut stragglers never
+                // entered server state this round
+                let delivered: Vec<usize> = plan
+                    .arrivals
+                    .iter()
+                    .filter(|a| a.accepted)
+                    .map(|a| a.client)
+                    .collect();
+                Some(self.gradient_diagnostic(alg, &delivered)?)
             } else {
                 None
             };
@@ -270,6 +328,9 @@ impl<'a> Coordinator<'a> {
                 duration_ms: started.elapsed().as_secs_f64() * 1e3,
                 grad_norm,
                 consensus_flips,
+                delivered: plan.delivered,
+                stragglers_cut: plan.stragglers_cut,
+                aggregate_ms,
             });
             if let Some((path, every)) = &self.checkpoint {
                 if (t + 1) % every == 0 || t + 1 == self.cfg.rounds {
@@ -287,7 +348,7 @@ impl<'a> Coordinator<'a> {
                 }
             }
             crate::info!(
-                "[{}] round {t}/{}: train_loss={:.4}{} bytes={}",
+                "[{}] round {t}/{}: train_loss={:.4}{} bytes={}{}",
                 alg.name(),
                 self.cfg.rounds,
                 outcome.train_loss,
@@ -295,6 +356,17 @@ impl<'a> Coordinator<'a> {
                     .map(|a| format!(" acc={:.4}", a))
                     .unwrap_or_default(),
                 bytes.total(),
+                if self.cfg.has_scenario() {
+                    format!(
+                        " delivered={}/{} cut={} dropped={}",
+                        plan.delivered,
+                        plan.selected.len(),
+                        plan.stragglers_cut,
+                        plan.dropped
+                    )
+                } else {
+                    String::new()
+                },
             );
         }
 

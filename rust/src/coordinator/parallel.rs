@@ -8,9 +8,16 @@
 //! by the coordinator in selection order *before* the parallel section),
 //! the results are bit-identical for any thread count — `threads == 1`
 //! runs inline without spawning.
+//!
+//! [`par_map_consume`] is the streaming sibling the event-driven round
+//! engine drives: same worker pool, but results are handed to a
+//! caller-thread consumer one at a time in a caller-chosen order
+//! (simulated arrival order) instead of being collected into a `Vec`.
 
+use std::convert::Infallible;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Condvar, Mutex};
 
 /// Resolve the client-phase worker count: a positive config value wins,
 /// then the `PFED1BS_CLIENT_THREADS` environment variable, then the
@@ -37,6 +44,10 @@ pub fn thread_count(cfg_threads: usize) -> usize {
 /// statically `Sync` (the coordinator's PJRT model handle) wraps that
 /// one field in its own documented `unsafe impl Sync` newtype rather
 /// than suppressing checking for the whole environment.
+///
+/// Thin wrapper over [`par_map_consume`] (identity consumption order,
+/// results collected into a `Vec`) so there is exactly one worker-pool
+/// implementation to keep correct.
 pub fn par_map<T, R, F>(items: Vec<T>, threads: usize, f: F) -> Vec<R>
 where
     T: Send,
@@ -44,30 +55,110 @@ where
     F: Fn(usize, T) -> R + Sync,
 {
     let n = items.len();
+    let order: Vec<usize> = (0..n).collect();
+    let mut out: Vec<Option<R>> = Vec::with_capacity(n);
+    out.resize_with(n, || None);
+    par_map_consume(items, threads, &order, f, |i, r| -> Result<(), Infallible> {
+        out[i] = Some(r);
+        Ok(())
+    })
+    .expect("infallible");
+    out.into_iter()
+        .map(|slot| slot.expect("worker died before filling slot"))
+        .collect()
+}
+
+/// One result slot plus its readiness signal ([`par_map_consume`]).
+type Slot<R> = (Mutex<Option<std::thread::Result<R>>>, Condvar);
+
+/// Streaming variant of [`par_map`] for the event-driven round engine
+/// (DESIGN.md §9): workers compute `f` over the items while the CALLER's
+/// thread consumes each result in `order` (a permutation of `0..n` —
+/// the round's simulated-arrival order), one at a time, as soon as it is
+/// ready. Results are handed over slot-by-slot and never materialized as
+/// a `Vec`; with `threads <= 1` the items are computed lazily in
+/// consumption order, so nothing is ever buffered at all. Workers pull
+/// work in `order` too, so under homogeneous task costs the compute
+/// lead over the consumer stays around the worker count.
+///
+/// `consume` runs only on the caller's thread, so it may hold `&mut`
+/// state (the network, the round aggregator) that the workers never
+/// see. An `Err` from `consume` stops consumption and is returned after
+/// the workers drain; a panic inside `f` is re-raised on the caller's
+/// thread when its slot is reached.
+pub fn par_map_consume<T, R, F, C, E>(
+    items: Vec<T>,
+    threads: usize,
+    order: &[usize],
+    f: F,
+    mut consume: C,
+) -> Result<(), E>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, T) -> R + Sync,
+    C: FnMut(usize, R) -> Result<(), E>,
+{
+    let n = items.len();
+    assert_eq!(order.len(), n, "consume order must cover every item exactly once");
+    // validate the permutation up front, on the caller's thread: a
+    // duplicated index discovered by a worker would panic outside the
+    // slot protocol and leave the consumer blocked forever
+    let mut seen = vec![false; n];
+    for &i in order {
+        assert!(
+            i < n && !std::mem::replace(&mut seen[i], true),
+            "consume order must be a permutation of 0..{n}"
+        );
+    }
     if threads <= 1 || n <= 1 {
-        return items.into_iter().enumerate().map(|(i, t)| f(i, t)).collect();
+        let mut items: Vec<Option<T>> = items.into_iter().map(Some).collect();
+        for &i in order {
+            let item = items[i].take().expect("index repeated in consume order");
+            consume(i, f(i, item))?;
+        }
+        return Ok(());
     }
     let queue: Vec<Mutex<Option<T>>> = items.into_iter().map(|t| Mutex::new(Some(t))).collect();
-    let slots: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let slots: Vec<Slot<R>> = (0..n).map(|_| (Mutex::new(None), Condvar::new())).collect();
     let cursor = AtomicUsize::new(0);
     let (f_ref, queue_ref, slots_ref, cursor_ref) = (&f, &queue, &slots, &cursor);
     std::thread::scope(|scope| {
         for _ in 0..threads.min(n) {
             scope.spawn(move || loop {
-                let i = cursor_ref.fetch_add(1, Ordering::Relaxed);
-                if i >= queue_ref.len() {
+                let c = cursor_ref.fetch_add(1, Ordering::Relaxed);
+                if c >= order.len() {
                     break;
                 }
+                let i = order[c];
                 let item = queue_ref[i].lock().unwrap().take().expect("item taken twice");
-                let result = f_ref(i, item);
-                *slots_ref[i].lock().unwrap() = Some(result);
+                // catch panics so a dead worker can't leave the consumer
+                // blocked on an empty slot; the consumer re-raises.
+                // AssertUnwindSafe: on Err the payload is immediately
+                // re-thrown, no captured state is observed afterwards.
+                let result = catch_unwind(AssertUnwindSafe(|| f_ref(i, item)));
+                let (lock, ready) = &slots_ref[i];
+                *lock.lock().unwrap() = Some(result);
+                ready.notify_all();
             });
         }
-    });
-    slots
-        .into_iter()
-        .map(|slot| slot.into_inner().unwrap().expect("worker died before filling slot"))
-        .collect()
+        // the caller's thread is the consumer: walk the arrival order,
+        // blocking on each slot until its worker delivers
+        for &i in order {
+            let (lock, ready) = &slots_ref[i];
+            let mut slot = lock.lock().unwrap();
+            while slot.is_none() {
+                slot = ready.wait(slot).unwrap();
+            }
+            let result = slot.take().expect("slot emptied twice");
+            drop(slot);
+            match result {
+                Ok(r) => consume(i, r)?,
+                Err(panic) => resume_unwind(panic),
+            }
+        }
+        Ok(())
+    })
 }
 
 #[cfg(test)]
@@ -100,5 +191,86 @@ mod tests {
     fn thread_count_prefers_config() {
         assert_eq!(thread_count(3), 3);
         assert!(thread_count(0) >= 1);
+    }
+
+    #[test]
+    fn consume_follows_the_given_order_for_any_thread_count() {
+        let items: Vec<u64> = (0..37).collect();
+        // a scrambled but fixed "arrival order"
+        let order: Vec<usize> = (0..37).map(|i| (i * 11) % 37).collect();
+        for threads in [1usize, 2, 8] {
+            let mut seen: Vec<(usize, u64)> = Vec::new();
+            par_map_consume(
+                items.clone(),
+                threads,
+                &order,
+                |i, x| x * 2 + i as u64,
+                |i, r| -> Result<(), ()> {
+                    seen.push((i, r));
+                    Ok(())
+                },
+            )
+            .unwrap();
+            let want: Vec<(usize, u64)> =
+                order.iter().map(|&i| (i, items[i] * 2 + i as u64)).collect();
+            assert_eq!(seen, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn consumer_error_short_circuits_but_workers_drain() {
+        let order: Vec<usize> = (0..20).collect();
+        for threads in [1usize, 4] {
+            let mut consumed = 0;
+            let out = par_map_consume(
+                (0..20u32).collect::<Vec<_>>(),
+                threads,
+                &order,
+                |_, x| x,
+                |_, r| {
+                    consumed += 1;
+                    if r == 5 {
+                        Err("stop at five")
+                    } else {
+                        Ok(())
+                    }
+                },
+            );
+            assert_eq!(out, Err("stop at five"));
+            assert_eq!(consumed, 6, "threads={threads}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "worker boom")]
+    fn worker_panic_reraises_on_the_consumer_thread() {
+        let order: Vec<usize> = (0..8).collect();
+        let _ = par_map_consume(
+            (0..8u32).collect::<Vec<_>>(),
+            4,
+            &order,
+            |i, x| {
+                if i == 3 {
+                    panic!("worker boom");
+                }
+                x
+            },
+            |_, _| -> Result<(), ()> { Ok(()) },
+        );
+    }
+
+    #[test]
+    fn empty_and_single_item_inputs() {
+        par_map_consume(Vec::<u8>::new(), 4, &[], |_, x| x, |_, _| -> Result<(), ()> {
+            panic!("nothing to consume")
+        })
+        .unwrap();
+        let mut got = None;
+        par_map_consume(vec![41u8], 4, &[0], |_, x| x + 1, |_, r| -> Result<(), ()> {
+            got = Some(r);
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(got, Some(42));
     }
 }

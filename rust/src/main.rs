@@ -73,6 +73,8 @@ subcommands:
 
 common options: --artifacts-dir artifacts  --results-dir results
                 --seed N  --seeds K  --rounds N  --dataset name
+scenario knobs: --over-select N  --deadline-ms MS  --dropout-prob P
+                --latency zero|fixed:MS|uniform:LO:HI|lognormal:MED:SIGMA
 run `make artifacts` once before any subcommand.
 ";
 

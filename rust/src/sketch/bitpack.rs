@@ -1,5 +1,7 @@
-//! Packed one-bit sign vectors ([`SignVec`]) and the server's weighted
-//! majority vote (Lemma 1).
+//! Packed one-bit sign vectors ([`SignVec`]), the server's weighted
+//! majority vote (Lemma 1), and the streaming mergeable tally
+//! ([`VoteAccumulator`]) the round engine folds uplinks into
+//! (DESIGN.md §9).
 //!
 //! A sign vector z ∈ {−1,+1}^m is stored as ⌈m/64⌉ u64 words (bit set ⇔
 //! +1, with the `sign(0) := +1` convention used everywhere in the
@@ -173,35 +175,166 @@ pub fn packed_bytes(m: usize) -> usize {
     m.div_ceil(64) * 8
 }
 
+/// Fixed-point scale for aggregation weights: 2⁶⁴, exact in f64 (a power
+/// of two). Weights enter every tally as integer counts of 2⁻⁶⁴ quanta.
+const WEIGHT_SCALE: f64 = (1u128 << 64) as f64;
+
+/// Quantize an aggregation weight to 64.64 fixed point (round to the
+/// nearest 2⁻⁶⁴ quantum). Integer addition is associative and
+/// commutative, so every tally built from quantized weights is
+/// bit-identical for ANY absorb order, shard count, and merge order —
+/// the invariant the streaming server path rests on (DESIGN.md §9).
+/// Quantization error is ≤ 2⁻⁶⁵ per term; weights below ~5·10⁻²⁰
+/// collapse to zero quanta and weights above ~10²⁰ saturate — both far
+/// outside any federation this system models.
+#[inline]
+pub fn quantize_weight(w: f64) -> i128 {
+    (w * WEIGHT_SCALE).round() as i128
+}
+
 /// Weighted majority vote v = sign(Σ pₖ zₖ) over packed sketches
 /// (Lemma 1: the exact minimizer of the server objective, Eq. 13/14).
 /// Ties (Σ = 0) break toward +1, matching `sign(0) = +1` everywhere
-/// else. Generic over `Borrow<SignVec>` so the server can vote directly
-/// over `&SignVec`s borrowed from delivered uplinks — no per-round
-/// re-pack or copy of the client words.
+/// else. Generic over `Borrow<SignVec>` so callers can vote directly
+/// over `&SignVec`s borrowed from delivered uplinks — no re-pack or
+/// copy of the client words.
+///
+/// The per-bit sums are 64.64 fixed point ([`quantize_weight`]): exact
+/// and order-invariant, so this batch form is the *reference* the
+/// streaming [`VoteAccumulator`] is property-tested against — f32
+/// accumulation could flip near-tie bits depending on client order,
+/// which would make "bit-identical under any arrival order" unprovable.
 pub fn majority_vote_weighted<S: Borrow<SignVec>>(
     sketches: &[S],
     weights: &[f32],
     m: usize,
 ) -> SignVec {
     assert_eq!(sketches.len(), weights.len());
-    let words = m.div_ceil(64);
-    let mut acc = vec![0.0f32; m];
+    let mut acc = vec![0i128; m];
     for (z, &p) in sketches.iter().zip(weights) {
         let z = z.borrow();
         debug_assert_eq!(z.m(), m, "sketch length mismatch in vote");
+        let q = quantize_weight(p as f64);
         for (i, a) in acc.iter_mut().enumerate() {
             let bit = z.words()[i / 64] >> (i % 64) & 1;
-            *a += if bit == 1 { p } else { -p };
+            *a += if bit == 1 { q } else { -q };
         }
     }
-    let mut out = vec![0u64; words];
-    for (i, &a) in acc.iter().enumerate() {
-        if a >= 0.0 {
-            out[i / 64] |= 1u64 << (i % 64);
-        }
+    SignVec::from_fn(m, |i| acc[i] >= 0)
+}
+
+/// Streaming, mergeable aggregation state — the O(m) heart of the server
+/// (DESIGN.md §9). Holds one 64.64 fixed-point tally per bit; the cohort
+/// itself is never stored:
+///
+/// * [`absorb`](VoteAccumulator::absorb) folds one delivered sketch with
+///   its weight as the uplink arrives;
+/// * [`merge`](VoteAccumulator::merge) folds a sibling shard (a
+///   shard-parallel server folds per worker and merges, like the
+///   `RoundBytes` ledger shards);
+/// * [`finish`](VoteAccumulator::finish) signs the tally into the
+///   consensus (Lemma 1), or
+///   [`finish_sum`](VoteAccumulator::finish_sum) reads it back as the
+///   real-valued estimate Σ wₖ zₖ for the linear one-bit estimators.
+///
+/// Because the tallies are integers, any absorb order, shard count, and
+/// merge order yield bit-identical results, equal to the batch
+/// [`majority_vote_weighted`] reference — property-tested below under
+/// arbitrary permutations and shardings.
+#[derive(Clone, Debug)]
+pub struct VoteAccumulator {
+    tally: Vec<i128>,
+    m: usize,
+    absorbed: usize,
+}
+
+impl VoteAccumulator {
+    /// Empty tally over m bits.
+    pub fn new(m: usize) -> VoteAccumulator {
+        VoteAccumulator { tally: vec![0i128; m], m, absorbed: 0 }
     }
-    SignVec { words: out, m }
+
+    /// Logical sketch length m.
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    /// How many sketches this tally (including merged shards) has folded.
+    pub fn absorbed(&self) -> usize {
+        self.absorbed
+    }
+
+    /// Fold one sketch: tally[i] += ±quantize(weight). `weight` is the
+    /// vote weight pₖ, or pₖ·cₖ for the scaled linear estimators. O(m);
+    /// the sketch is only read and can be dropped immediately after.
+    pub fn absorb(&mut self, z: &SignVec, weight: f64) {
+        assert_eq!(z.m(), self.m, "sketch length mismatch in absorb");
+        let q = quantize_weight(weight);
+        for (i, a) in self.tally.iter_mut().enumerate() {
+            let bit = z.words()[i / 64] >> (i % 64) & 1;
+            *a += if bit == 1 { q } else { -q };
+        }
+        self.absorbed += 1;
+    }
+
+    /// Fold a sibling shard. Integer sums commute and associate, so the
+    /// merged tally is bit-identical to absorbing every sketch into one
+    /// accumulator, in any order.
+    pub fn merge(&mut self, other: VoteAccumulator) {
+        assert_eq!(other.m, self.m, "merging accumulators of different m");
+        for (a, b) in self.tally.iter_mut().zip(other.tally) {
+            *a += b;
+        }
+        self.absorbed += other.absorbed;
+    }
+
+    /// Sign the tally into the packed consensus (ties → +1, the global
+    /// `sign(0) := +1` convention). Callers decide what an empty tally
+    /// means: with zero sketches absorbed this is all-+1, which a server
+    /// normally wants to discard rather than adopt.
+    pub fn finish(&self) -> SignVec {
+        SignVec::from_fn(self.m, |i| self.tally[i] >= 0)
+    }
+
+    /// Read the tally back as real values — the linear-estimator close,
+    /// Σₖ wₖ zₖ as f32 lanes at the compute boundary (zSignFed, FedBAT,
+    /// EDEN, OBCSAA reconstruction).
+    pub fn finish_sum(&self) -> Vec<f32> {
+        self.tally
+            .iter()
+            .map(|&t| (t as f64 / WEIGHT_SCALE) as f32)
+            .collect()
+    }
+}
+
+/// Exact scalar companion to [`VoteAccumulator`]: an order-invariant
+/// weighted sum of scalars in the same 64.64 fixed point (OBDA's step
+/// scale Σ pₖ·|Δ|ₖ, OBCSAA's norm estimate). Mergeable like the vector
+/// tally, for the same reason.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ScalarTally {
+    quanta: i128,
+}
+
+impl ScalarTally {
+    pub fn new() -> ScalarTally {
+        ScalarTally::default()
+    }
+
+    /// Add one term (computed in f64, quantized once).
+    pub fn add(&mut self, v: f64) {
+        self.quanta += quantize_weight(v);
+    }
+
+    /// Fold a sibling shard (exact).
+    pub fn merge(&mut self, other: ScalarTally) {
+        self.quanta += other.quanta;
+    }
+
+    /// The accumulated sum as a real value.
+    pub fn value(&self) -> f64 {
+        self.quanta as f64 / WEIGHT_SCALE
+    }
 }
 
 /// Uniform-weight majority vote on packed words via per-bit counters —
@@ -478,6 +611,145 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn streaming_accumulator_matches_batch_vote_any_order_and_sharding() {
+        // THE streaming-aggregation theorem: absorbing in an arbitrary
+        // permutation, split across an arbitrary number of shards merged
+        // in arbitrary order, is bit-identical to the batch reference —
+        // including sketches adopted from dirty (garbage-tail) words.
+        check("vote_accumulator_bit_identity", 60, |rng| {
+            let k = rng.below(12) + 1;
+            let m = rng.below(400) + 1;
+            let words = m.div_ceil(64);
+            let sketches: Vec<SignVec> = (0..k)
+                .map(|_| {
+                    // half the cohort arrives as raw wire words with
+                    // garbage beyond m (from_words canonicalizes)
+                    if rng.f32() < 0.5 {
+                        SignVec::from_words((0..words).map(|_| rng.next_u64()).collect(), m)
+                    } else {
+                        SignVec::from_signs(&rand_signs(rng, m))
+                    }
+                })
+                .collect();
+            let mut weights: Vec<f32> = (0..k).map(|_| rng.f32() + 0.01).collect();
+            let total: f32 = weights.iter().sum();
+            weights.iter_mut().for_each(|w| *w /= total);
+            let batch = majority_vote_weighted(&sketches, &weights, m);
+
+            // arbitrary arrival order into one accumulator
+            let mut order: Vec<usize> = (0..k).collect();
+            rng.shuffle(&mut order);
+            let mut acc = VoteAccumulator::new(m);
+            for &i in &order {
+                acc.absorb(&sketches[i], weights[i] as f64);
+            }
+            if acc.finish() != batch {
+                return Err("permuted streaming vote != batch vote".into());
+            }
+            if acc.absorbed() != k {
+                return Err("absorbed count wrong".into());
+            }
+
+            // arbitrary sharding, shards merged in shuffled order
+            let shards = rng.below(5) + 1;
+            let mut parts: Vec<VoteAccumulator> =
+                (0..shards).map(|_| VoteAccumulator::new(m)).collect();
+            for &i in &order {
+                parts[rng.below(shards)].absorb(&sketches[i], weights[i] as f64);
+            }
+            rng.shuffle(&mut parts);
+            let mut merged = parts.pop().unwrap();
+            for p in parts {
+                merged.merge(p);
+            }
+            if merged.finish() != batch {
+                return Err(format!("{shards}-shard merged vote != batch vote"));
+            }
+            if merged.absorbed() != k {
+                return Err("merged absorbed count wrong".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn streaming_accumulator_with_equal_weights_matches_uniform_vote() {
+        // exact for ANY k (even ones included): the tally is (2c−k)·q,
+        // whose sign is the uniform popcount rule 2c ≥ k, ties → +1
+        check("vote_accumulator_vs_uniform", 40, |rng| {
+            let k = rng.below(10) + 1;
+            let m = rng.below(400) + 1;
+            let sketches: Vec<SignVec> = (0..k)
+                .map(|_| SignVec::from_signs(&rand_signs(rng, m)))
+                .collect();
+            let mut acc = VoteAccumulator::new(m);
+            for z in &sketches {
+                acc.absorb(z, 1.0 / k as f64);
+            }
+            if acc.finish() != majority_vote_uniform(&sketches, m) {
+                return Err(format!("accumulator != uniform vote (k={k})"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn finish_sum_matches_linear_estimator_reference() {
+        // the linear-estimator close: Σ wₖ zₖ read back as f32 lanes,
+        // within the 64.64 quantization error of an f64 reference
+        check("finish_sum_reference", 40, |rng| {
+            let k = rng.below(8) + 1;
+            let m = rng.below(200) + 1;
+            let sketches: Vec<Vec<f32>> = (0..k).map(|_| rand_signs(rng, m)).collect();
+            let weights: Vec<f64> = (0..k).map(|_| rng.f64() * 2.0 + 1e-6).collect();
+            let mut acc = VoteAccumulator::new(m);
+            for (z, &w) in sketches.iter().zip(&weights) {
+                acc.absorb(&SignVec::from_signs(z), w);
+            }
+            let got = acc.finish_sum();
+            for i in 0..m {
+                let want: f64 = sketches
+                    .iter()
+                    .zip(&weights)
+                    .map(|(z, &w)| w * z[i] as f64)
+                    .sum();
+                if (got[i] as f64 - want).abs() > 1e-6 * (1.0 + want.abs()) {
+                    return Err(format!("bit {i}: {} vs {want}", got[i]));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn scalar_tally_is_exact_and_order_invariant() {
+        let terms = [0.5f64, 0.125, 0.25, 0.0625];
+        let mut fwd = ScalarTally::new();
+        terms.iter().for_each(|&v| fwd.add(v));
+        let mut rev = ScalarTally::new();
+        terms.iter().rev().for_each(|&v| rev.add(v));
+        assert_eq!(fwd.value(), rev.value());
+        assert_eq!(fwd.value(), 0.9375);
+        // shard merge
+        let mut a = ScalarTally::new();
+        a.add(0.5);
+        let mut b = ScalarTally::new();
+        b.add(0.4375);
+        a.merge(b);
+        assert_eq!(a.value(), 0.9375);
+    }
+
+    #[test]
+    fn empty_accumulator_finishes_all_plus_one() {
+        // documented edge: zero sketches → all ties → all +1; servers
+        // gate on absorbed() == 0 instead of adopting this
+        let acc = VoteAccumulator::new(70);
+        assert_eq!(acc.absorbed(), 0);
+        assert_eq!(acc.finish(), SignVec::from_signs(&[1.0f32; 70]));
+        assert_eq!(acc.finish_sum(), vec![0.0f32; 70]);
     }
 
     #[test]

@@ -11,7 +11,7 @@ pub mod srht;
 
 pub use bitpack::{
     hamming_packed, majority_vote_uniform, majority_vote_weighted, pack_signs, packed_bytes,
-    unpack_signs, SignVec,
+    quantize_weight, unpack_signs, ScalarTally, SignVec, VoteAccumulator,
 };
 pub use fwht::{fwht_inplace, fwht_normalized};
 pub use srht::{DenseGaussianOperator, Projection, SrhtOperator};

@@ -165,6 +165,10 @@ fn per_round_byte_totals_match_known_good_values() {
             let expect_down_msgs = if expect_down == 0 { 0 } else { s as u32 };
             assert_eq!(rec.bytes.uplink_msgs, expect_up_msgs, "{alg} round {t} up msgs");
             assert_eq!(rec.bytes.downlink_msgs, expect_down_msgs, "{alg} round {t} down msgs");
+            // default scenario knobs: every barrier round delivers the
+            // full cohort through the event engine, nobody is cut
+            assert_eq!(rec.delivered as u64, s, "{alg} round {t} delivered");
+            assert_eq!(rec.stragglers_cut, 0, "{alg} round {t} stragglers");
         }
     }
 }
@@ -279,6 +283,65 @@ fn parallel_client_phase_is_bit_identical_to_serial() {
         assert_eq!(snaps[0].2, snaps[1].2, "{alg_name}: final accuracy differs");
         assert_eq!(snaps[0].3, snaps[1].3, "{alg_name}: model state differs");
     }
+}
+
+/// Client-lifecycle scenario: over-selection + dropouts + heterogeneous
+/// latency + a deadline. Pins the byte/bookkeeping contract: every
+/// computed uplink is metered whether or not the deadline cut it, the
+/// downlink still reaches the whole over-selected cohort (the server
+/// cannot know who dropped), and the delivered set the CSV reports is
+/// exactly what the ledger's message counts say was aggregated.
+#[test]
+fn scenario_rounds_meter_stragglers_and_bound_delivery() {
+    if !artifacts_available() {
+        return;
+    }
+    let lab = Lab::new("artifacts").expect("lab");
+    let mut cfg = short_cfg("pfed1bs");
+    cfg.rounds = 4;
+    cfg.participating = 12;
+    cfg.over_select = 4; // cohort of 16
+    cfg.dropout_prob = 0.25;
+    cfg.latency = pfed1bs::comm::LatencyModel::Uniform { lo_ms: 1.0, hi_ms: 50.0 };
+    cfg.deadline_ms = 25.0;
+    cfg.validate().unwrap();
+    let m = lab.executables("mlp784").unwrap().geom.m;
+    let per_msg = (5 + m.div_ceil(64) * 8) as u64;
+
+    let model = lab.model_for(&cfg).unwrap();
+    let mut alg = algorithms::build("pfed1bs").unwrap();
+    let mut coord = Coordinator::new(cfg.clone(), &model);
+    let result = coord.run(alg.as_mut()).unwrap();
+
+    let mut any_lifecycle_event = false;
+    for (t, rec) in result.history.records.iter().enumerate() {
+        // every computed uplink was transported: delivered + cut
+        let sent = rec.delivered + rec.stragglers_cut;
+        assert_eq!(rec.bytes.uplink_msgs as usize, sent, "round {t} uplink msgs");
+        assert_eq!(rec.bytes.uplink, sent as u64 * per_msg, "round {t} uplink bytes");
+        // the broadcast reaches the whole over-selected cohort, dropouts
+        // included — the server cannot know who is gone — except round 0
+        // (pFed1BS skips the downlink while v⁰ = 0)
+        let expect_down_msgs = if t == 0 { 0u32 } else { 16 };
+        assert_eq!(rec.bytes.downlink_msgs, expect_down_msgs, "round {t} downlink msgs");
+        assert_eq!(
+            rec.bytes.downlink,
+            expect_down_msgs as u64 * per_msg,
+            "round {t} downlink bytes"
+        );
+        assert!(rec.delivered <= 12, "round {t} delivered past the target");
+        any_lifecycle_event |= rec.stragglers_cut > 0 || rec.delivered < 12;
+    }
+    assert!(
+        any_lifecycle_event,
+        "scenario knobs produced no dropout/straggler in 4 rounds"
+    );
+    // the run still learns above chance despite losing ~half the fleet
+    assert!(
+        result.final_accuracy > 0.2,
+        "accuracy {:.3} collapsed under the flaky-fleet scenario",
+        result.final_accuracy
+    );
 }
 
 #[test]

@@ -1,12 +1,14 @@
 //! Property tests over coordinator-level invariants that do NOT need the
 //! PJRT runtime: client sampling, weight normalization, ledger shard
 //! merging, vote stability, codec/transport round trips, partition
-//! coverage, and the pFed1BS noisy-downlink protocol regression.
+//! coverage, the event engine's delivered-set planning, and the pFed1BS
+//! noisy-downlink / streaming-aggregation protocol regressions.
 //! (Runtime-dependent invariants live in integration_training.rs.)
 
-use pfed1bs::algorithms::{Algorithm, ClientOutput, ClientStats, ServerCtx, Uplink};
-use pfed1bs::comm::{encode, Direction, Ledger, Payload, SimNetwork};
+use pfed1bs::algorithms::{AggKind, Algorithm, ClientOutput, ClientStats, ServerCtx, Uplink};
+use pfed1bs::comm::{encode, Direction, LatencyModel, Ledger, Payload, SimNetwork};
 use pfed1bs::config::RunConfig;
+use pfed1bs::coordinator::plan_round;
 use pfed1bs::data::{generate, DatasetName, DatasetSpec, Partition};
 use pfed1bs::sketch::bitpack::{majority_vote_weighted, SignVec};
 use pfed1bs::sketch::{Projection, SrhtOperator};
@@ -275,19 +277,22 @@ fn regression_noisy_downlink_never_corrupts_server_consensus() {
     );
 
     // the next consensus is the vote over DELIVERED uplinks only — the
-    // corrupted downlink copies play no role in server state
-    let outputs: Vec<ClientOutput> = (0..2)
-        .map(|k| ClientOutput {
+    // corrupted downlink copies play no role in server state. The
+    // streaming path: absorb each delivered uplink as it arrives.
+    let cfg = RunConfig::preset(DatasetName::Mnist);
+    let projection = Projection::Srht(SrhtOperator::from_seed(1, n, m.min(n)));
+    let ctx = ServerCtx { cfg: &cfg, projection: &projection };
+    let mut agg = alg.begin_aggregate(1);
+    for k in 0..2 {
+        let out = ClientOutput {
             client: k,
             uplink: Some(Uplink::new(1, Payload::Signs(SignVec::from_signs(&vec![-1.0f32; m])))),
             state: None,
             stats: ClientStats::default(),
-        })
-        .collect();
-    let cfg = RunConfig::preset(DatasetName::Mnist);
-    let projection = Projection::Srht(SrhtOperator::from_seed(1, n, m.min(n)));
-    let ctx = ServerCtx { cfg: &cfg, projection: &projection };
-    alg.server_aggregate(1, &[0, 1], &[0.5, 0.5], outputs, &ctx).unwrap();
+        };
+        agg.absorb(out, 0.5).unwrap();
+    }
+    alg.finish_aggregate(1, agg, &ctx).unwrap();
     assert_eq!(alg.consensus().unwrap(), vec![-1.0f32; m].as_slice());
     // the packed mirror (what the next broadcast ships) must agree
     assert_eq!(
@@ -299,12 +304,12 @@ fn regression_noisy_downlink_never_corrupts_server_consensus() {
 /// Protocol-level golden, runnable with no PJRT artifacts: a hand-built
 /// pFed1BS aggregation whose consensus is analytically determined, with
 /// the exact packed words asserted bit-for-bit. Weights are chosen
-/// binary-exact (0.5/0.25/0.25) so the f32 vote accumulator has a
+/// binary-exact (0.5/0.25/0.25) so the fixed-point tally has a
 /// mathematically unambiguous sign at every bit (the only tie,
-/// −0.5+0.25+0.25 = 0.0, is exact in f32 and breaks toward +1 by the
+/// −0.5+0.25+0.25 = 0.0, is exact and breaks toward +1 by the
 /// `sign(0) := +1` convention). Unlike the artifact-gated golden-trace
-/// test, this one runs everywhere CI runs — the server vote, transport
-/// round trip, and byte metering cannot drift silently.
+/// test, this one runs everywhere CI runs — the streamed server vote,
+/// transport round trip, and byte metering cannot drift silently.
 #[test]
 fn golden_protocol_vote_and_wire_bytes_without_runtime() {
     let m = 130; // three words, 2-bit tail
@@ -342,10 +347,22 @@ fn golden_protocol_vote_and_wire_bytes_without_runtime() {
     //   i even, i%3!=0 : +0.5 -0.25 +0.25 = +0.5  -> +1
     //   i odd,  i%3==0 : -0.5 +0.25 +0.25 =  0.0  -> +1 (tie toward +1)
     //   i odd,  i%3!=0 : -0.5 -0.25 +0.25 = -0.5  -> -1
+    // Streamed one uplink at a time — and, because the tally is exact
+    // fixed point, absorbing in REVERSE arrival order must produce the
+    // same words bit-for-bit.
     let cfg = RunConfig::preset(DatasetName::Mnist);
     let projection = Projection::Srht(SrhtOperator::from_seed(1, n, n));
     let ctx = ServerCtx { cfg: &cfg, projection: &projection };
-    alg.server_aggregate(1, &[0, 1, 2], &[0.5, 0.25, 0.25], outputs, &ctx).unwrap();
+    let weights = [0.5f32, 0.25, 0.25];
+    let mut reversed = alg.begin_aggregate(1);
+    for (out, &w) in outputs.iter().zip(&weights).rev() {
+        reversed.absorb(out.clone(), w).unwrap();
+    }
+    let mut agg = alg.begin_aggregate(1);
+    for (out, &w) in outputs.into_iter().zip(&weights) {
+        agg.absorb(out, w).unwrap();
+    }
+    alg.finish_aggregate(1, agg, &ctx).unwrap();
 
     // i.e. bit set iff i is even or divisible by 3
     let want = SignVec::from_fn(m, |i| i % 2 == 0 || i % 3 == 0);
@@ -364,6 +381,70 @@ fn golden_protocol_vote_and_wire_bytes_without_runtime() {
     assert_eq!(got.words()[0], w0);
     // bits 128, 129: i=128 even -> 1; i=129 odd, 129%3==0 -> 1 (tie)
     assert_eq!(got.words()[2], 0b11);
+    // arrival-order invariance at the protocol level: the reverse-order
+    // aggregator's tally signs into the same words bit-for-bit
+    let (AggKind::Vote(tally), _, 3, _) = reversed.into_parts() else {
+        panic!("pfed1bs aggregator must be the vote tally");
+    };
+    assert_eq!(tally.finish(), want, "reverse arrival order changed the vote");
+}
+
+/// Scenario planning runs everywhere (no PJRT needed): the delivered-set
+/// weight renormalization and lifecycle bookkeeping of the event engine,
+/// across random scenario knobs.
+#[test]
+fn prop_round_plan_renormalizes_weights_over_the_delivered_set() {
+    check("plan_delivered_renorm", 40, |rng| {
+        let mut cfg = RunConfig::preset(DatasetName::Mnist);
+        cfg.clients = rng.below(30) + 2;
+        cfg.participating = rng.below(cfg.clients) + 1;
+        cfg.over_select = rng.below(cfg.clients - cfg.participating + 1);
+        cfg.dropout_prob = rng.f64() * 0.5;
+        cfg.deadline_ms = if rng.f32() < 0.5 { 0.0 } else { 5.0 + rng.f64() * 20.0 };
+        cfg.latency = match rng.below(3) {
+            0 => LatencyModel::Zero,
+            1 => LatencyModel::Uniform { lo_ms: 1.0, hi_ms: 40.0 },
+            _ => LatencyModel::LogNormal { median_ms: 10.0, sigma: 0.8 },
+        };
+        cfg.validate().map_err(|e| e.to_string())?;
+        // arbitrary positive fleet weights, normalized like data.weights
+        let raw: Vec<f32> = (0..cfg.clients).map(|_| rng.f32() + 0.01).collect();
+        let total: f32 = raw.iter().sum();
+        let weights: Vec<f32> = raw.iter().map(|&p| p / total).collect();
+
+        let mut net = SimNetwork::new(rng.next_u64());
+        let mut coord_rng = Rng::new(rng.next_u64());
+        for t in 0..3 {
+            let plan = plan_round(t, &cfg, &weights, &mut net, &mut coord_rng);
+            if plan.computing.len() + plan.dropped != plan.selected.len() {
+                return Err("computing + dropped != cohort".into());
+            }
+            if plan.delivered + plan.stragglers_cut != plan.computing.len() {
+                return Err("delivered + cut != computing".into());
+            }
+            if plan.delivered > cfg.participating {
+                return Err("delivered more than the target S".into());
+            }
+            if plan.delivered > 0 {
+                let sum: f32 = plan
+                    .arrivals
+                    .iter()
+                    .filter(|a| a.accepted)
+                    .map(|a| a.weight)
+                    .sum();
+                if (sum - 1.0).abs() > 1e-4 {
+                    return Err(format!("delivered weights sum to {sum}"));
+                }
+            }
+            // no scenario knobs -> exactly the barrier round
+            if !cfg.has_scenario()
+                && (plan.delivered != cfg.participating || plan.stragglers_cut != 0)
+            {
+                return Err("default knobs must deliver the whole cohort".into());
+            }
+        }
+        Ok(())
+    });
 }
 
 #[test]
