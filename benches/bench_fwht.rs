@@ -2,27 +2,64 @@
 //! Fig. 3 and the paper's "Efficient Projection" section: the structured
 //! O(n log n) transform vs the O(mn) dense Gaussian projection, across
 //! the sizes used by the model variants (2^17, 2^19) plus a sweep.
+//!
+//! Every transform size is measured twice — the planned blocked kernel
+//! (`fwht_normalized`) next to the retained scalar reference
+//! (`fwht::scalar`) — so one run prints this PR's before/after ratio;
+//! the `*_threads*`/`batch` rows cover the worker-pool and stacked
+//! modes, and the `srht_*` rows the fused end-to-end sketch pipeline.
+//! `BENCH_fwht.json` carries the same rows machine-readably across PRs.
 
 use pfed1bs::bench_harness::{black_box, Bench};
-use pfed1bs::sketch::{fwht_normalized, DenseGaussianOperator, SrhtOperator};
+use pfed1bs::sketch::fwht::scalar;
+use pfed1bs::sketch::{
+    fwht_batch, fwht_normalized, fwht_threaded_normalized, DenseGaussianOperator, SrhtOperator,
+};
 use pfed1bs::util::rng::Rng;
 
 fn main() {
     let mut b = Bench::new("fwht_projection");
     let mut rng = Rng::new(7);
+    let cores = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
 
-    // raw transform sweep
+    // raw transform sweep: blocked kernel vs scalar reference
     for log2n in [10usize, 13, 16, 17, 19] {
         let n = 1usize << log2n;
         let mut x: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
         b.bench_elems(&format!("fwht_2^{log2n}"), n as u64, || {
             fwht_normalized(black_box(&mut x));
         });
+        b.bench_elems(&format!("fwht_scalar_2^{log2n}"), n as u64, || {
+            scalar::fwht_normalized(black_box(&mut x));
+        });
     }
 
-    // full SRHT sketch (pad + D + FWHT + subsample + sign) at the two
-    // model geometries, vs the dense Gaussian projection the paper
-    // replaces (dense limited to a feasible size — it is O(mn))
+    // worker-pool mode at the model geometries (bit-identical to serial)
+    let mut sweeps: Vec<usize> = vec![2, cores];
+    sweeps.sort_unstable();
+    sweeps.dedup();
+    for log2n in [17usize, 19] {
+        let n = 1usize << log2n;
+        let mut x: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        for &threads in &sweeps {
+            b.bench_elems(&format!("fwht_2^{log2n}_threads{threads}"), n as u64, || {
+                fwht_threaded_normalized(black_box(&mut x), threads);
+            });
+        }
+    }
+
+    // batched mode: B stacked vectors through one planned call
+    {
+        let (bsz, n) = (16usize, 1usize << 13);
+        let mut xs: Vec<f32> = (0..bsz * n).map(|_| rng.normal()).collect();
+        b.bench_elems(&format!("fwht_batch_B{bsz}_2^13"), (bsz * n) as u64, || {
+            fwht_batch(black_box(&mut xs), n);
+        });
+    }
+
+    // full SRHT sketch (pad + D + FWHT + subsample + sign, fully fused)
+    // at the two model geometries, vs the dense Gaussian projection the
+    // paper replaces (dense limited to a feasible size — it is O(mn))
     for (n, label) in [(101_770usize, "mlp784"), (453_682, "mlp3072")] {
         let m = n / 10;
         let op = SrhtOperator::from_seed(1, n, m);
@@ -30,9 +67,18 @@ fn main() {
         b.bench_elems(&format!("srht_sketch_{label}(n={n})"), n as u64, || {
             black_box(op.sketch_sign(black_box(&w)));
         });
+        // the transport-ready path: SignVec words straight off the plan
+        b.bench_elems(&format!("srht_sketch_packed_{label}"), n as u64, || {
+            black_box(op.sketch_sign_packed(black_box(&w)));
+        });
+        // hoisted OUT of the timed closure: the old `vec![1.0; m]`
+        // inside the body made this row measure allocator traffic
+        let v: Vec<f32> = vec![1.0; m];
         b.bench_elems(&format!("srht_adjoint_{label}"), n as u64, || {
-            let v: Vec<f32> = vec![1.0; m];
             black_box(op.adjoint(black_box(&v)));
+        });
+        b.bench_elems(&format!("srht_adjoint_threads{cores}_{label}"), n as u64, || {
+            black_box(op.adjoint_threaded(black_box(&v), cores));
         });
     }
 
@@ -55,9 +101,23 @@ fn main() {
         .mean_ns;
 
     b.report();
+
+    // the PR-body ratio: blocked kernel vs scalar reference per size
+    println!("\nblocked kernel vs scalar reference (same arithmetic, bit-identical):");
+    let rows = b.results().to_vec();
+    for log2n in [10usize, 13, 16, 17, 19] {
+        let pick = |name: &str| rows.iter().find(|m| m.name == name).map(|m| m.mean_ns);
+        if let (Some(new), Some(old)) = (
+            pick(&format!("fwht_2^{log2n}")),
+            pick(&format!("fwht_scalar_2^{log2n}")),
+        ) {
+            println!("  fwht_2^{log2n}: {:.2}x faster (scalar/blocked)", old / new);
+        }
+    }
     println!(
         "\ndense/srht ratio at n={n_small}: {:.1}x (theory m/log2(n') = {:.1}x)",
         md / ms,
         (m_small as f64) / (n_small as f64).log2()
     );
+    b.emit_json("fwht");
 }

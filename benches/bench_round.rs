@@ -22,9 +22,13 @@ fn main() {
     }
     let lab = Lab::new("artifacts").expect("lab");
     let mut b = Bench::new("round");
-    // measure few iterations — a round is 100s of ms
-    b.measure = std::time::Duration::from_secs(4);
-    b.warmup = std::time::Duration::from_millis(500);
+    // measure few iterations — a round is 100s of ms — but keep the
+    // reduced budget in quick mode (the CI smoke run), which Bench::new
+    // already configured
+    if std::env::var("PFED1BS_BENCH_QUICK").is_err() {
+        b.measure = std::time::Duration::from_secs(4);
+        b.warmup = std::time::Duration::from_millis(500);
+    }
 
     let cores = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
     let mut sweeps: Vec<usize> = vec![1, 2, cores];

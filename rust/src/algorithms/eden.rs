@@ -19,6 +19,7 @@ use crate::algorithms::{
     InitCtx, RoundAggregator, RoundOutcome, ServerCtx, Uplink,
 };
 use crate::comm::Payload;
+use crate::coordinator::parallel::thread_count;
 use crate::sketch::bitpack::{SignVec, VoteAccumulator};
 use crate::sketch::SrhtOperator;
 
@@ -88,9 +89,11 @@ impl Algorithm for Eden {
         let mut wk = w0.clone();
         let loss = local_sgd(ctx, k, &mut wk, t as u64)?;
         let d = delta(&wk, w0);
-        let y = self.rot().rotate(&d); // H·D·pad(Δ), length n'
-        let alpha = mean_abs(&y);
-        let signs = SignVec::from_signs(&y);
+        // H·D·pad(Δ) (length n') borrowed straight from the plan
+        // scratch — the rotated vector is never materialized here
+        let (alpha, signs) = self
+            .rot()
+            .rotate_with(&d, |y| (mean_abs(y), SignVec::from_signs(y)));
         Ok(ClientOutput {
             client: k,
             uplink: Some(Uplink::new(t, Payload::ScaledSigns { signs, scale: alpha })),
@@ -108,15 +111,19 @@ impl Algorithm for Eden {
         &mut self,
         _t: usize,
         agg: RoundAggregator,
-        _ctx: &ServerCtx,
+        ctx: &ServerCtx,
     ) -> Result<RoundOutcome> {
         let (kind, _, absorbed, outcome) = agg.into_parts();
         let AggKind::SignSum(tally) = kind else {
             anyhow::bail!("eden aggregator must be the linear sign estimator");
         };
         if absorbed > 0 {
-            // server: de-rotate the streamed estimate and step
-            let dhat = self.rot().rotate_inverse(&tally.finish_sum());
+            // server: de-rotate the streamed estimate and step. The
+            // aggregation phase is serial, so the n'-point de-rotation
+            // runs on the worker pool — bit-identical for any thread
+            // count (DESIGN.md §10).
+            let threads = thread_count(ctx.cfg.client_threads);
+            let dhat = self.rot().rotate_inverse_threaded(&tally.finish_sum(), threads);
             axpy(&mut self.w, 1.0, &dhat);
         }
         Ok(outcome)

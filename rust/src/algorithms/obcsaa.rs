@@ -17,6 +17,7 @@ use crate::algorithms::{
     InitCtx, RoundAggregator, RoundOutcome, ServerCtx, Uplink,
 };
 use crate::comm::Payload;
+use crate::coordinator::parallel::thread_count;
 use crate::sketch::bitpack::{ScalarTally, VoteAccumulator};
 use crate::util::stats::l2_norm;
 
@@ -108,8 +109,12 @@ impl Algorithm for Obcsaa {
         };
         if absorbed > 0 {
             // one-bit CS reconstruction: adjoint estimate, rescaled to
-            // the weighted-mean update norm
-            let mut dhat = ctx.projection.adjoint(&tally.finish_sum());
+            // the weighted-mean update norm. The aggregation phase is
+            // serial, so the adjoint's n'-point transform runs on the
+            // worker pool — bit-identical for any thread count
+            // (DESIGN.md §10).
+            let threads = thread_count(ctx.cfg.client_threads);
+            let mut dhat = ctx.projection.adjoint_threaded(&tally.finish_sum(), threads);
             let dn = l2_norm(&dhat);
             if dn > 0.0 {
                 let s = (norm.value() / dn) as f32;

@@ -10,8 +10,9 @@
 //!      keeps the clean v (the bug the monolithic round() had);
 //!   2. `client_round`: R local SGD steps on the smoothed personalized
 //!      objective F̃_k(w; v^t) (HLO `client_step`, whose regularizer
-//!      gradient is the fused Pallas SRHT kernel), then upload
-//!      z_k = sign(Φ w_k^{t+1}) — m bits;
+//!      gradient is the fused Pallas SRHT kernel; the rust mirror of
+//!      that kernel is the planned blocked FWHT of DESIGN.md §10), then
+//!      upload z_k = sign(Φ w_k^{t+1}) — m bits;
 //!   3. streaming aggregation: v^{t+1} = sign(Σ p_k z_k) — the exact
 //!      minimizer of the server objective (Lemma 1). The round engine
 //!      absorbs each *delivered* (possibly noisy) uplink into an O(m)
@@ -86,7 +87,11 @@ impl Default for PFed1BS {
 /// Dense-Gaussian ablation local loop (Appendix Fig. 3): the update
 ///   w ← w − η(∇f̂ + μw) − ηλ·Φᵀ(tanh(γΦw) − v)
 /// with both gradients at the same iterate — identical semantics to the
-/// fused HLO step, different Φ.
+/// fused HLO step, different Φ. `forward`/`adjoint` here stay on the
+/// serial operator paths deliberately: this runs inside the
+/// data-parallel client phase, where the workers are already saturated
+/// (the `*_threaded` kernel variants are for the serial server
+/// context — DESIGN.md §10).
 fn dense_reg_steps(
     ctx: &mut ClientCtx,
     k: usize,

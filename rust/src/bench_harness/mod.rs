@@ -103,6 +103,49 @@ impl Bench {
         &self.results
     }
 
+    /// Write the accumulated measurements as machine-readable JSON: one
+    /// row per measurement with mean/p50/p99/mad in ns, the element
+    /// count, and the derived Me/s. Hand-rolled writer — serde is
+    /// unavailable offline (DESIGN.md §2).
+    pub fn write_json(&self, path: impl AsRef<std::path::Path>) -> std::io::Result<()> {
+        use std::fmt::Write as _;
+        let mut out = String::from("{\n");
+        let _ = writeln!(out, "  \"suite\": \"{}\",", json_escape(&self.suite));
+        out.push_str("  \"rows\": [\n");
+        for (i, m) in self.results.iter().enumerate() {
+            let _ = writeln!(
+                out,
+                "    {{\"name\": \"{}\", \"iters\": {}, \"mean_ns\": {:.1}, \
+                 \"p50_ns\": {:.1}, \"p99_ns\": {:.1}, \"mad_ns\": {:.1}, \
+                 \"elements\": {}, \"melem_per_s\": {}}}{}",
+                json_escape(&m.name),
+                m.iters,
+                m.mean_ns,
+                m.p50_ns,
+                m.p99_ns,
+                m.mad_ns,
+                m.elements.map(|e| e.to_string()).unwrap_or_else(|| "null".into()),
+                m.throughput_melem_s()
+                    .map(|t| format!("{t:.3}"))
+                    .unwrap_or_else(|| "null".into()),
+                if i + 1 == self.results.len() { "" } else { "," },
+            );
+        }
+        out.push_str("  ]\n}\n");
+        std::fs::write(path, out)
+    }
+
+    /// Emit `BENCH_<name>.json` next to the human table so the perf
+    /// trajectory is tracked across PRs (best-effort: a read-only CWD
+    /// must not fail the bench run).
+    pub fn emit_json(&self, name: &str) {
+        let path = format!("BENCH_{name}.json");
+        match self.write_json(&path) {
+            Ok(()) => println!("machine-readable report: {path}"),
+            Err(e) => eprintln!("could not write {path}: {e}"),
+        }
+    }
+
     /// Print an aligned table of all measurements.
     pub fn report(&self) {
         println!("\n== bench suite: {} ==", self.suite);
@@ -124,6 +167,24 @@ impl Bench {
             );
         }
     }
+}
+
+/// Minimal JSON string escape for the code-controlled names this
+/// harness emits (backslash, quote, and control characters).
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            c if (c as u32) < 0x20 => {
+                use std::fmt::Write as _;
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
 }
 
 /// Human-format nanoseconds.
@@ -163,6 +224,31 @@ mod tests {
         assert!(m.mean_ns > 0.0);
         assert!(m.throughput_melem_s().unwrap() > 0.0);
         assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn json_report_is_well_formed() {
+        std::env::set_var("PFED1BS_BENCH_QUICK", "1");
+        let mut b = Bench::new("json\"suite");
+        let mut acc = 0u64;
+        b.bench_elems("row_a", 10, || acc = acc.wrapping_add(black_box(1)));
+        b.bench("row_b", || acc = acc.wrapping_add(black_box(2)));
+        // pid-unique name: concurrent `cargo test` runs on one machine
+        // must not race on a shared temp file
+        let path = std::env::temp_dir()
+            .join(format!("pfed1bs_bench_json_test_{}.json", std::process::id()));
+        b.write_json(&path).expect("write json");
+        let text = std::fs::read_to_string(&path).expect("read back");
+        let _ = std::fs::remove_file(&path);
+        // escaped suite name, both rows, null elements on the bare row
+        assert!(text.contains("\"suite\": \"json\\\"suite\""), "{text}");
+        assert!(text.contains("\"name\": \"row_a\""));
+        assert!(text.contains("\"elements\": 10"));
+        assert!(text.contains("\"elements\": null"));
+        // crude structural sanity: balanced braces/brackets, one row comma
+        assert_eq!(text.matches('{').count(), text.matches('}').count());
+        assert_eq!(text.matches('[').count(), text.matches(']').count());
+        assert!(!text.contains("NaN"), "numbers must be finite: {text}");
     }
 
     #[test]

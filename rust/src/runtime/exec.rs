@@ -376,9 +376,14 @@ impl ModelRuntime {
         Self::vec_f32(&out[0])
     }
 
-    /// z = sign(Φw) packed to u64 words — the transport-ready form. The
-    /// HLO artifact emits f32 ±1 lanes; this is the single pack at the
-    /// compute/transport boundary (DESIGN.md §8).
+    /// z = sign(Φw) packed to u64 words — the transport-ready form and
+    /// the single pack at the compute/transport boundary (DESIGN.md §8).
+    /// The HLO artifact emits f32 ±1 lanes in a PJRT literal; the
+    /// literal→host copy is the one m-vector this path materializes
+    /// (the `xla` crate exposes no borrowed literal view), and the
+    /// words are packed straight from it — mirroring the rust-side
+    /// `SrhtOperator::sketch_sign_packed`, which packs directly off the
+    /// kernel plan's rotated scratch (DESIGN.md §10).
     pub fn sketch_sign_packed(&self, w: &[f32]) -> Result<crate::sketch::bitpack::SignVec> {
         Ok(crate::sketch::bitpack::SignVec::from_signs(&self.sketch_sign(w)?))
     }

@@ -35,12 +35,19 @@ impl SignVec {
     /// Build bit-by-bit. `sign_is_plus(i)` is called exactly once per
     /// index, in ascending order 0..m — callers drive RNG streams
     /// through the closure and rely on that order for determinism.
+    /// Each word is accumulated in a register and stored once (the
+    /// fused SRHT subsample packs through this path every client round).
     pub fn from_fn(m: usize, mut sign_is_plus: impl FnMut(usize) -> bool) -> SignVec {
         let mut words = vec![0u64; m.div_ceil(64)];
-        for i in 0..m {
-            if sign_is_plus(i) {
-                words[i / 64] |= 1u64 << (i % 64);
+        for (wi, word) in words.iter_mut().enumerate() {
+            let bits = (m - wi * 64).min(64);
+            let mut acc = 0u64;
+            for b in 0..bits {
+                if sign_is_plus(wi * 64 + b) {
+                    acc |= 1u64 << b;
+                }
             }
+            *word = acc;
         }
         SignVec { words, m }
     }

@@ -1,44 +1,68 @@
-//! In-place Fast Walsh–Hadamard Transform — the rust mirror of the L1
-//! Pallas kernel (`python/compile/kernels/fht.py`).
+//! Fast Walsh–Hadamard Transform — public entry points plus the scalar
+//! reference kernel, the rust mirror of the L1 Pallas kernel
+//! (`python/compile/kernels/fht.py`).
 //!
 //! Used on the request path by the *baselines* (OBCSAA/EDEN rotate update
 //! vectors), by the server-side diagnostics, and by tests/benches that
-//! cross-check the HLO artifacts bit-for-bit. O(n log n) butterflies over
-//! one buffer; `fwht_normalized` matches the orthonormal H = Hadamard/√n
-//! used everywhere in the paper.
+//! cross-check the HLO artifacts bit-for-bit. [`fwht_inplace`] /
+//! [`fwht_normalized`] execute on the cache-blocked, SIMD-friendly
+//! kernel in [`super::kernel`] (DESIGN.md §10); the textbook butterfly
+//! is retained in [`scalar`] as the bit-exactness oracle the kernel is
+//! property-tested against — the blocked kernel only reorders traversal
+//! across independent butterflies, so results are bit-identical.
 
 /// Unnormalized in-place FWHT (Sylvester/natural order).
 ///
 /// `x.len()` must be a power of two. After this, `x = H_unnorm * x` where
-/// `H_unnorm` has entries ±1.
+/// `H_unnorm` has entries ±1. Runs on the blocked kernel; bit-identical
+/// to [`scalar::fwht_inplace`].
 pub fn fwht_inplace(x: &mut [f32]) {
-    let n = x.len();
-    assert!(n.is_power_of_two(), "fwht needs power-of-two length, got {n}");
-    let mut h = 1;
-    while h < n {
-        let stride = h * 2;
-        let mut base = 0;
-        while base < n {
-            for i in base..base + h {
-                let a = x[i];
-                let b = x[i + h];
-                x[i] = a + b;
-                x[i + h] = a - b;
-            }
-            base += stride;
-        }
-        h = stride;
-    }
+    super::kernel::fwht_blocked(x);
 }
 
 /// Normalized in-place FWHT: `x <- (H/sqrt(n)) x`; involution (applying
-/// twice returns the input) and isometry (preserves the l2 norm).
+/// twice returns the input) and isometry (preserves the l2 norm). Runs
+/// on the blocked kernel with the 1/√n multiply fused into the final
+/// butterfly stage; bit-identical to [`scalar::fwht_normalized`].
 pub fn fwht_normalized(x: &mut [f32]) {
-    let n = x.len();
-    fwht_inplace(x);
-    let scale = 1.0 / (n as f32).sqrt();
-    for v in x.iter_mut() {
-        *v *= scale;
+    super::kernel::fwht_blocked_normalized(x);
+}
+
+/// The textbook single-radix butterfly, retained verbatim as the
+/// bit-exactness oracle for the blocked kernel (DESIGN.md §10). Every
+/// restructured path in [`super::kernel`] is property-tested
+/// bit-identical against these.
+pub mod scalar {
+    /// Reference unnormalized FWHT: one O(n)-strided pass per stage.
+    pub fn fwht_inplace(x: &mut [f32]) {
+        let n = x.len();
+        assert!(n.is_power_of_two(), "fwht needs power-of-two length, got {n}");
+        let mut h = 1;
+        while h < n {
+            let stride = h * 2;
+            let mut base = 0;
+            while base < n {
+                for i in base..base + h {
+                    let a = x[i];
+                    let b = x[i + h];
+                    x[i] = a + b;
+                    x[i + h] = a - b;
+                }
+                base += stride;
+            }
+            h = stride;
+        }
+    }
+
+    /// Reference normalized FWHT: full butterfly, then a separate 1/√n
+    /// sweep (the multiply the blocked kernel fuses into its last stage).
+    pub fn fwht_normalized(x: &mut [f32]) {
+        let n = x.len();
+        fwht_inplace(x);
+        let scale = 1.0 / (n as f32).sqrt();
+        for v in x.iter_mut() {
+            *v *= scale;
+        }
     }
 }
 
@@ -78,6 +102,33 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn blocked_entry_points_are_bit_identical_to_scalar() {
+        check("fwht_entry_bit_identity", 60, |rng| {
+            let n = 1usize << rng.below(14);
+            let x: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let mut want = x.clone();
+            scalar::fwht_inplace(&mut want);
+            let mut got = x.clone();
+            fwht_inplace(&mut got);
+            for i in 0..n {
+                if got[i].to_bits() != want[i].to_bits() {
+                    return Err(format!("unnormalized n={n} lane {i}"));
+                }
+            }
+            let mut wantn = x.clone();
+            scalar::fwht_normalized(&mut wantn);
+            let mut gotn = x;
+            fwht_normalized(&mut gotn);
+            for i in 0..n {
+                if gotn[i].to_bits() != wantn[i].to_bits() {
+                    return Err(format!("normalized n={n} lane {i}"));
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]
@@ -153,5 +204,12 @@ mod tests {
     fn rejects_non_pow2() {
         let mut x = vec![0.0f32; 12];
         fwht_inplace(&mut x);
+    }
+
+    #[test]
+    #[should_panic(expected = "power-of-two")]
+    fn scalar_reference_rejects_non_pow2() {
+        let mut x = vec![0.0f32; 12];
+        scalar::fwht_inplace(&mut x);
     }
 }

@@ -1,0 +1,1076 @@
+//! Planned, cache-blocked FWHT kernel — the hot-path engine behind every
+//! `SrhtOperator` application (DESIGN.md §10).
+//!
+//! The textbook butterfly (`fwht::scalar`) walks the whole buffer once
+//! per stage: log₂ n passes, the later ones striding n′/2 apart — at the
+//! model geometries (n′ = 2¹⁷, 2¹⁹) that is 17–19 full sweeps where
+//! every cache line is evicted long before its next touch. This module
+//! restructures the SAME arithmetic so the data is touched ~2× instead:
+//!
+//! * **Tiling** — H_{n} = (H_R ⊗ I_C)(I_R ⊗ H_C) with C = one
+//!   L1-resident tile: first R independent contiguous tile transforms
+//!   (all stages h < C), then the R-point "row" transform applied
+//!   column-strip by column-strip so each strip stays resident for all
+//!   of its log₂ R stages.
+//! * **Radix-4 fusion** — two butterfly stages per memory pass (one
+//!   leading radix-2 pass when the stage count is odd), halving sweeps.
+//! * **SIMD-friendly lanes** — inner loops are fixed 8×f32 chunks over
+//!   contiguous windows obtained by `split_at_mut`, the shape stable
+//!   rustc autovectorizes; lane arithmetic is exact per lane.
+//! * **Fusion with the SRHT** — [`SketchPlan`] folds the D·pad prologue
+//!   into each tile's first butterfly pass and the 1/√n′ normalization
+//!   into every element's last butterfly write, and serves subsample +
+//!   sign straight out of its scratch.
+//! * **Batched / threaded** — [`fwht_batch`] over stacked vectors and a
+//!   large-n′ mode that farms independent tiles and column bands to the
+//!   `coordinator::parallel` scoped workers.
+//!
+//! BIT-EXACTNESS INVARIANT: every public entry point here produces
+//! results bit-identical to the retained scalar reference
+//! (`fwht::scalar`) for every input. The restructurings above only
+//! reorder traversal across *independent* butterflies — each output
+//! element's f32 operation DAG (which values are added/subtracted/
+//! multiplied, in which association order) is unchanged, and f32 ops are
+//! deterministic. Radix-4 computes exactly the two-pass intermediates;
+//! the fused D·pad load computes the same per-element product the
+//! prologue loop did; the fused normalization is the same single
+//! multiply of each element's final stage value. Property tests in this
+//! module and `tests/prop_kernel.rs` pin this across sizes, tile
+//! overrides, batch shapes, and thread counts.
+
+use std::cell::RefCell;
+
+use crate::coordinator::parallel::par_map;
+
+/// Tile length: 2¹² f32 = 16 KiB, half a typical 32 KiB L1d, so a tile
+/// plus its streamed source lines stay resident for all intra-tile
+/// stages.
+pub const TILE_LOG2: usize = 12;
+/// Default tile length in f32 lanes.
+pub const TILE: usize = 1 << TILE_LOG2;
+/// Columns per strip in the cross-tile (row-transform) phase: 16 f32 =
+/// one 64-byte line per row, so a strip's working set is rows × 64 B
+/// (8 KiB at n′ = 2¹⁹) — L1-resident for all log₂ R row stages.
+const STRIP: usize = 16;
+/// Fixed SIMD-friendly lane width of the inner butterfly loops.
+const LANES: usize = 8;
+
+#[inline]
+fn inv_sqrt_scale(n: usize) -> f32 {
+    // EXACTLY the expression the scalar reference uses — the fused
+    // epilogue must multiply by the identical f32 constant
+    1.0 / (n as f32).sqrt()
+}
+
+// ---------------------------------------------------------------------
+// lane kernels
+// ---------------------------------------------------------------------
+
+/// Radix-2 butterfly over two equal-length contiguous windows. With
+/// `SCALED`, the writes (this stage is the element's last) are fused
+/// with the normalization multiply.
+#[inline(always)]
+fn bf2<const SCALED: bool>(a: &mut [f32], b: &mut [f32], s: f32) {
+    debug_assert_eq!(a.len(), b.len());
+    let mut ca = a.chunks_exact_mut(LANES);
+    let mut cb = b.chunks_exact_mut(LANES);
+    for (ka, kb) in ca.by_ref().zip(cb.by_ref()) {
+        for l in 0..LANES {
+            let (x, y) = (ka[l], kb[l]);
+            if SCALED {
+                ka[l] = (x + y) * s;
+                kb[l] = (x - y) * s;
+            } else {
+                ka[l] = x + y;
+                kb[l] = x - y;
+            }
+        }
+    }
+    for (pa, pb) in ca.into_remainder().iter_mut().zip(cb.into_remainder()) {
+        let (x, y) = (*pa, *pb);
+        if SCALED {
+            *pa = (x + y) * s;
+            *pb = (x - y) * s;
+        } else {
+            *pa = x + y;
+            *pb = x - y;
+        }
+    }
+}
+
+/// Fused radix-4 butterfly (stages h and 2h in one pass) over four
+/// equal-length contiguous windows at offsets 0, h, 2h, 3h. Computes the
+/// exact two-pass intermediates, so it is bit-identical to running the
+/// radix-2 stages separately.
+#[inline(always)]
+fn bf4<const SCALED: bool>(
+    r0: &mut [f32],
+    r1: &mut [f32],
+    r2: &mut [f32],
+    r3: &mut [f32],
+    s: f32,
+) {
+    debug_assert!(r0.len() == r1.len() && r1.len() == r2.len() && r2.len() == r3.len());
+    let mut c0 = r0.chunks_exact_mut(LANES);
+    let mut c1 = r1.chunks_exact_mut(LANES);
+    let mut c2 = r2.chunks_exact_mut(LANES);
+    let mut c3 = r3.chunks_exact_mut(LANES);
+    for (((k0, k1), k2), k3) in c0.by_ref().zip(c1.by_ref()).zip(c2.by_ref()).zip(c3.by_ref()) {
+        for l in 0..LANES {
+            let (a, b, c, d) = (k0[l], k1[l], k2[l], k3[l]);
+            let (s0, d0) = (a + b, a - b); // stage h
+            let (s1, d1) = (c + d, c - d);
+            if SCALED {
+                k0[l] = (s0 + s1) * s; // stage 2h, fused epilogue
+                k1[l] = (d0 + d1) * s;
+                k2[l] = (s0 - s1) * s;
+                k3[l] = (d0 - d1) * s;
+            } else {
+                k0[l] = s0 + s1;
+                k1[l] = d0 + d1;
+                k2[l] = s0 - s1;
+                k3[l] = d0 - d1;
+            }
+        }
+    }
+    let t0 = c0.into_remainder().iter_mut();
+    let t1 = c1.into_remainder().iter_mut();
+    let t2 = c2.into_remainder().iter_mut();
+    let t3 = c3.into_remainder().iter_mut();
+    for (((p0, p1), p2), p3) in t0.zip(t1).zip(t2).zip(t3) {
+        let (a, b, c, d) = (*p0, *p1, *p2, *p3);
+        let (s0, d0) = (a + b, a - b);
+        let (s1, d1) = (c + d, c - d);
+        if SCALED {
+            *p0 = (s0 + s1) * s;
+            *p1 = (d0 + d1) * s;
+            *p2 = (s0 - s1) * s;
+            *p3 = (d0 - d1) * s;
+        } else {
+            *p0 = s0 + s1;
+            *p1 = d0 + d1;
+            *p2 = s0 - s1;
+            *p3 = d0 - d1;
+        }
+    }
+}
+
+/// Two disjoint `w`-wide windows at `base` and `base + stride`.
+#[inline(always)]
+fn windows2(x: &mut [f32], base: usize, stride: usize, w: usize) -> (&mut [f32], &mut [f32]) {
+    debug_assert!(w <= stride);
+    let x = &mut x[base..base + stride + w];
+    let (a, b) = x.split_at_mut(stride);
+    (&mut a[..w], &mut b[..w])
+}
+
+/// Four disjoint `w`-wide windows at `base + {0,1,2,3}·stride`.
+#[inline(always)]
+fn windows4(
+    x: &mut [f32],
+    base: usize,
+    stride: usize,
+    w: usize,
+) -> (&mut [f32], &mut [f32], &mut [f32], &mut [f32]) {
+    debug_assert!(w <= stride);
+    let x = &mut x[base..base + 3 * stride + w];
+    let (r0, x) = x.split_at_mut(stride);
+    let (r1, x) = x.split_at_mut(stride);
+    let (r2, r3) = x.split_at_mut(stride);
+    (&mut r0[..w], &mut r1[..w], &mut r2[..w], &mut r3[..w])
+}
+
+// ---------------------------------------------------------------------
+// tile phase: all stages h < tile length, contiguous and L1-resident
+// ---------------------------------------------------------------------
+
+/// Dispatch one radix-2 pass with the epilogue fused iff it is the last
+/// stage of the whole transform.
+#[inline(always)]
+fn bf2_dispatch(a: &mut [f32], b: &mut [f32], last: bool, scale: Option<f32>) {
+    match (last, scale) {
+        (true, Some(s)) => bf2::<true>(a, b, s),
+        _ => bf2::<false>(a, b, 1.0),
+    }
+}
+
+#[inline(always)]
+fn bf4_dispatch(
+    r0: &mut [f32],
+    r1: &mut [f32],
+    r2: &mut [f32],
+    r3: &mut [f32],
+    last: bool,
+    scale: Option<f32>,
+) {
+    match (last, scale) {
+        (true, Some(s)) => bf4::<true>(r0, r1, r2, r3, s),
+        _ => bf4::<false>(r0, r1, r2, r3, 1.0),
+    }
+}
+
+/// Remaining radix-4 passes of a contiguous transform, from stage `h`
+/// upward. `scale` is applied by the pass that contains the final stage.
+fn tile_rest(x: &mut [f32], mut h: usize, scale: Option<f32>) {
+    let n = x.len();
+    while h < n {
+        debug_assert!(4 * h <= n, "stage parity broken: h={h}, n={n}");
+        let last = 4 * h == n;
+        let mut base = 0;
+        while base < n {
+            let (r0, r1, r2, r3) = windows4(x, base, h, h);
+            bf4_dispatch(r0, r1, r2, r3, last, scale);
+            base += 4 * h;
+        }
+        h *= 4;
+    }
+}
+
+/// First butterfly pass of a contiguous transform already resident in
+/// `x`: radix-2 when the stage count is odd, radix-4 otherwise. Returns
+/// the next stage h.
+fn tile_first_pass(x: &mut [f32], lg: usize, scale: Option<f32>) -> usize {
+    if lg % 2 == 1 {
+        let last = lg == 1;
+        if let (true, Some(s)) = (last, scale) {
+            for p in x.chunks_exact_mut(2) {
+                let (a, b) = (p[0], p[1]);
+                p[0] = (a + b) * s;
+                p[1] = (a - b) * s;
+            }
+        } else {
+            for p in x.chunks_exact_mut(2) {
+                let (a, b) = (p[0], p[1]);
+                p[0] = a + b;
+                p[1] = a - b;
+            }
+        }
+        2
+    } else {
+        let last = lg == 2;
+        if let (true, Some(s)) = (last, scale) {
+            for q in x.chunks_exact_mut(4) {
+                let (a, b, c, d) = (q[0], q[1], q[2], q[3]);
+                let (s0, d0, s1, d1) = (a + b, a - b, c + d, c - d);
+                q[0] = (s0 + s1) * s;
+                q[1] = (d0 + d1) * s;
+                q[2] = (s0 - s1) * s;
+                q[3] = (d0 - d1) * s;
+            }
+        } else {
+            for q in x.chunks_exact_mut(4) {
+                let (a, b, c, d) = (q[0], q[1], q[2], q[3]);
+                let (s0, d0, s1, d1) = (a + b, a - b, c + d, c - d);
+                q[0] = s0 + s1;
+                q[1] = d0 + d1;
+                q[2] = s0 - s1;
+                q[3] = d0 - d1;
+            }
+        }
+        4
+    }
+}
+
+/// Full transform of one contiguous block (all stages h = 1..len/2).
+fn tile_fwht(x: &mut [f32], scale: Option<f32>) {
+    let n = x.len();
+    if n <= 1 {
+        if let Some(s) = scale {
+            // the scalar reference multiplies even at n = 1
+            for v in x.iter_mut() {
+                *v *= s;
+            }
+        }
+        return;
+    }
+    let lg = n.trailing_zeros() as usize;
+    let h0 = tile_first_pass(x, lg, scale);
+    tile_rest(x, h0, scale);
+}
+
+/// First butterfly pass fused with the SRHT prologue: the pass loads
+/// `w[i]·d[i]` (zero beyond `w`) instead of reading `x`, eliminating the
+/// separate D·pad sweep. Same products, same adds — bit-identical to
+/// prologue-then-butterfly.
+fn tile_fwht_wd(w: &[f32], d: &[f32], x: &mut [f32], scale: Option<f32>) {
+    let n = x.len();
+    debug_assert_eq!(d.len(), n);
+    debug_assert!(w.len() <= n);
+    if w.is_empty() {
+        // tile entirely in the zero padding: every stage maps +0.0 to
+        // +0.0 (and ·scale keeps +0.0), so the memset IS the transform
+        x.fill(0.0);
+        return;
+    }
+    if n == 1 {
+        let v = w[0] * d[0];
+        x[0] = match scale {
+            Some(s) => v * s,
+            None => v,
+        };
+        return;
+    }
+    let lg = n.trailing_zeros() as usize;
+    let h0 = if w.len() == n {
+        wd_first_pass_full(w, d, x, lg, scale)
+    } else {
+        wd_first_pass_partial(w, d, x, lg, scale)
+    };
+    tile_rest(x, h0, scale);
+}
+
+/// Fused-load first pass, tile fully inside the source vector:
+/// branch-free zipped loads.
+fn wd_first_pass_full(w: &[f32], d: &[f32], x: &mut [f32], lg: usize, scale: Option<f32>) -> usize {
+    if lg % 2 == 1 {
+        let s = match (lg == 1, scale) {
+            (true, Some(s)) => s,
+            _ => 1.0,
+        };
+        let scaled = lg == 1 && scale.is_some();
+        for ((p, ws), ds) in x.chunks_exact_mut(2).zip(w.chunks_exact(2)).zip(d.chunks_exact(2)) {
+            let (a, b) = (ws[0] * ds[0], ws[1] * ds[1]);
+            if scaled {
+                p[0] = (a + b) * s;
+                p[1] = (a - b) * s;
+            } else {
+                p[0] = a + b;
+                p[1] = a - b;
+            }
+        }
+        2
+    } else {
+        let s = match (lg == 2, scale) {
+            (true, Some(s)) => s,
+            _ => 1.0,
+        };
+        let scaled = lg == 2 && scale.is_some();
+        for ((q, ws), ds) in x.chunks_exact_mut(4).zip(w.chunks_exact(4)).zip(d.chunks_exact(4)) {
+            let (a, b, c, e) = (ws[0] * ds[0], ws[1] * ds[1], ws[2] * ds[2], ws[3] * ds[3]);
+            let (s0, d0, s1, d1) = (a + b, a - b, c + e, c - e);
+            if scaled {
+                q[0] = (s0 + s1) * s;
+                q[1] = (d0 + d1) * s;
+                q[2] = (s0 - s1) * s;
+                q[3] = (d0 - d1) * s;
+            } else {
+                q[0] = s0 + s1;
+                q[1] = d0 + d1;
+                q[2] = s0 - s1;
+                q[3] = d0 - d1;
+            }
+        }
+        4
+    }
+}
+
+/// Fused-load first pass for the one tile straddling the n/n′ padding
+/// boundary (runs at most once per transform — clarity over speed).
+fn wd_first_pass_partial(
+    w: &[f32],
+    d: &[f32],
+    x: &mut [f32],
+    lg: usize,
+    scale: Option<f32>,
+) -> usize {
+    let load = |i: usize| if i < w.len() { w[i] * d[i] } else { 0.0 };
+    if lg % 2 == 1 {
+        let last = lg == 1;
+        for (p, pair) in x.chunks_exact_mut(2).enumerate() {
+            let (a, b) = (load(2 * p), load(2 * p + 1));
+            if let (true, Some(s)) = (last, scale) {
+                pair[0] = (a + b) * s;
+                pair[1] = (a - b) * s;
+            } else {
+                pair[0] = a + b;
+                pair[1] = a - b;
+            }
+        }
+        2
+    } else {
+        let last = lg == 2;
+        for (qi, q) in x.chunks_exact_mut(4).enumerate() {
+            let (a, b, c, e) = (load(4 * qi), load(4 * qi + 1), load(4 * qi + 2), load(4 * qi + 3));
+            let (s0, d0, s1, d1) = (a + b, a - b, c + e, c - e);
+            if let (true, Some(s)) = (last, scale) {
+                q[0] = (s0 + s1) * s;
+                q[1] = (d0 + d1) * s;
+                q[2] = (s0 - s1) * s;
+                q[3] = (d0 - d1) * s;
+            } else {
+                q[0] = s0 + s1;
+                q[1] = d0 + d1;
+                q[2] = s0 - s1;
+                q[3] = d0 - d1;
+            }
+        }
+        4
+    }
+}
+
+// ---------------------------------------------------------------------
+// cross phase: the R-point row transform (stages h = C, 2C, ..., n/2),
+// strip-mined over columns so every strip is resident for all stages
+// ---------------------------------------------------------------------
+
+/// Row-transform stages over `x` viewed as (n/c) rows × c columns,
+/// in-place via disjoint windows. Column strips are independent: row
+/// stages only ever combine same-column elements, so running every
+/// stage for one strip before touching the next preserves each
+/// element's stage order exactly.
+fn cross_pass(x: &mut [f32], c: usize, strip: usize, scale: Option<f32>) {
+    let n = x.len();
+    let r = n / c;
+    debug_assert!(r >= 2 && r * c == n && strip >= 1);
+    let lg = r.trailing_zeros() as usize;
+    let mut c0 = 0;
+    while c0 < c {
+        let w = strip.min(c - c0);
+        let mut h = if lg % 2 == 1 {
+            let last = lg == 1;
+            let mut rbase = 0;
+            while rbase < r {
+                let (a, b) = windows2(x, rbase * c + c0, c, w);
+                bf2_dispatch(a, b, last, scale);
+                rbase += 2;
+            }
+            2
+        } else {
+            1
+        };
+        while h < r {
+            let last = 4 * h == r;
+            // blocks of 4h rows; each block holds h independent quads
+            // (rb+j, rb+j+h, rb+j+2h, rb+j+3h), j = 0..h
+            let mut rb = 0;
+            while rb < r {
+                for j in 0..h {
+                    let (r0, r1, r2, r3) = windows4(x, (rb + j) * c + c0, h * c, w);
+                    bf4_dispatch(r0, r1, r2, r3, last, scale);
+                }
+                rb += 4 * h;
+            }
+            h *= 4;
+        }
+        c0 += w;
+    }
+}
+
+/// The same row-transform over an explicit row set (each row a disjoint
+/// `&mut` window) — the shape the threaded column bands use, since one
+/// band's rows cannot be expressed as a single contiguous slice.
+fn cross_rows(rows: &mut [&mut [f32]], strip: usize, scale: Option<f32>) {
+    let r = rows.len();
+    if r < 2 || rows[0].is_empty() {
+        return;
+    }
+    let width = rows[0].len();
+    let lg = r.trailing_zeros() as usize;
+    let mut c0 = 0;
+    while c0 < width {
+        let w = strip.min(width - c0);
+        let mut h = if lg % 2 == 1 {
+            let last = lg == 1;
+            let mut rbase = 0;
+            while rbase < r {
+                let (a, b) = rows2(rows, rbase, 1);
+                bf2_dispatch(&mut a[c0..c0 + w], &mut b[c0..c0 + w], last, scale);
+                rbase += 2;
+            }
+            2
+        } else {
+            1
+        };
+        while h < r {
+            let last = 4 * h == r;
+            // blocks of 4h rows, h independent quads per block (see
+            // `cross_pass`)
+            let mut rb = 0;
+            while rb < r {
+                for j in 0..h {
+                    let (r0, r1, r2, r3) = rows4(rows, rb + j, h);
+                    bf4_dispatch(
+                        &mut r0[c0..c0 + w],
+                        &mut r1[c0..c0 + w],
+                        &mut r2[c0..c0 + w],
+                        &mut r3[c0..c0 + w],
+                        last,
+                        scale,
+                    );
+                }
+                rb += 4 * h;
+            }
+            h *= 4;
+        }
+        c0 += w;
+    }
+}
+
+/// Rows `i` and `i + h` as simultaneous `&mut` (outer split, safe).
+#[inline(always)]
+fn rows2<'a>(rows: &'a mut [&mut [f32]], i: usize, h: usize) -> (&'a mut [f32], &'a mut [f32]) {
+    let seg = &mut rows[i..i + h + 1];
+    let (a, b) = seg.split_at_mut(h);
+    (&mut a[0][..], &mut b[0][..])
+}
+
+/// Rows `i + {0,1,2,3}·h` as simultaneous `&mut` (outer splits, safe).
+#[inline(always)]
+fn rows4<'a>(
+    rows: &'a mut [&mut [f32]],
+    i: usize,
+    h: usize,
+) -> (&'a mut [f32], &'a mut [f32], &'a mut [f32], &'a mut [f32]) {
+    let seg = &mut rows[i..i + 3 * h + 1];
+    let (a, seg) = seg.split_at_mut(h);
+    let (b, seg) = seg.split_at_mut(h);
+    let (c, d) = seg.split_at_mut(h);
+    (&mut a[0][..], &mut b[0][..], &mut c[0][..], &mut d[0][..])
+}
+
+// ---------------------------------------------------------------------
+// serial drivers
+// ---------------------------------------------------------------------
+
+fn assert_pow2(n: usize) {
+    assert!(n.is_power_of_two(), "fwht needs power-of-two length, got {n}");
+}
+
+/// Blocked in-place transform with an explicit tile length (tests sweep
+/// tiny tiles to exercise the blocking on small inputs; production
+/// callers use [`TILE`] via the public wrappers).
+pub fn fwht_with_tile(x: &mut [f32], tile: usize, normalized: bool) {
+    assert_pow2(x.len());
+    assert!(tile.is_power_of_two(), "tile must be a power of two, got {tile}");
+    let scale = normalized.then(|| inv_sqrt_scale(x.len()));
+    blocked_impl(x, Schedule { tile, strip: STRIP }, scale);
+}
+
+fn blocked_impl(x: &mut [f32], sched: Schedule, scale: Option<f32>) {
+    let n = x.len();
+    if n <= sched.tile {
+        tile_fwht(x, scale);
+        return;
+    }
+    for t in x.chunks_exact_mut(sched.tile) {
+        tile_fwht(t, None);
+    }
+    cross_pass(x, sched.tile, sched.strip, scale);
+}
+
+/// Unnormalized blocked FWHT — bit-identical to `fwht::scalar::fwht_inplace`.
+pub fn fwht_blocked(x: &mut [f32]) {
+    assert_pow2(x.len());
+    blocked_impl(x, Schedule::for_len(x.len()), None);
+}
+
+/// Normalized blocked FWHT (`x ← (H/√n)·x`) with the 1/√n multiply fused
+/// into each element's final butterfly write — bit-identical to
+/// `fwht::scalar::fwht_normalized`.
+pub fn fwht_blocked_normalized(x: &mut [f32]) {
+    assert_pow2(x.len());
+    blocked_impl(x, Schedule::for_len(x.len()), Some(inv_sqrt_scale(x.len())));
+}
+
+/// Fused SRHT rotate: `out ← (H/√n′)·(D ∘ pad(w))` with the D·pad
+/// multiply folded into each tile's first butterfly pass (no separate
+/// prologue sweep) and the normalization folded into the last.
+/// `w.len() ≤ out.len() = dsign.len()`; lanes beyond `w` are the zero
+/// padding.
+pub fn fwht_rotate_normalized(w: &[f32], dsign: &[f32], out: &mut [f32]) {
+    rotate_impl(w, dsign, out, Schedule::for_len(out.len()))
+}
+
+fn rotate_impl(w: &[f32], dsign: &[f32], out: &mut [f32], sched: Schedule) {
+    let npad = out.len();
+    assert_pow2(npad);
+    assert_eq!(dsign.len(), npad, "dsign length must equal n'");
+    assert!(w.len() <= npad, "source longer than padded buffer");
+    let scale = Some(inv_sqrt_scale(npad));
+    let tile = sched.tile;
+    if npad <= tile {
+        tile_fwht_wd(w, dsign, out, scale);
+        return;
+    }
+    for (ti, t) in out.chunks_exact_mut(tile).enumerate() {
+        let lo = (ti * tile).min(w.len());
+        let hi = ((ti + 1) * tile).min(w.len());
+        tile_fwht_wd(&w[lo..hi], &dsign[ti * tile..(ti + 1) * tile], t, None);
+    }
+    cross_pass(out, tile, sched.strip, scale);
+}
+
+// ---------------------------------------------------------------------
+// batched + threaded drivers
+// ---------------------------------------------------------------------
+
+/// Normalized FWHT over B stacked vectors (row-major, each of length
+/// `n`): one pass per vector, bit-identical to transforming each slice
+/// with [`fwht_blocked_normalized`].
+pub fn fwht_batch(xs: &mut [f32], n: usize) {
+    assert!(n > 0 && xs.len() % n == 0, "batch len {} not a multiple of n={n}", xs.len());
+    assert_pow2(n);
+    let (sched, scale) = (Schedule::for_len(n), Some(inv_sqrt_scale(n)));
+    for x in xs.chunks_exact_mut(n) {
+        blocked_impl(x, sched, scale);
+    }
+}
+
+/// [`fwht_batch`] with the independent vectors farmed to the scoped
+/// worker pool — bit-identical for any thread count.
+pub fn fwht_batch_threaded(xs: &mut [f32], n: usize, threads: usize) {
+    assert!(n > 0 && xs.len() % n == 0, "batch len {} not a multiple of n={n}", xs.len());
+    assert_pow2(n);
+    if threads <= 1 || xs.len() == n {
+        return fwht_batch(xs, n);
+    }
+    let (sched, scale) = (Schedule::for_len(n), Some(inv_sqrt_scale(n)));
+    let rows: Vec<&mut [f32]> = xs.chunks_exact_mut(n).collect();
+    par_map(rows, threads, |_, x| blocked_impl(x, sched, scale));
+}
+
+/// Unnormalized threaded transform of one large vector; see
+/// [`fwht_threaded_normalized`].
+pub fn fwht_threaded(x: &mut [f32], threads: usize) {
+    assert_pow2(x.len());
+    threaded_impl(x, threads, None);
+}
+
+/// Normalized threaded transform of one large vector: the independent
+/// tiles go to the worker pool, then the cross phase is split into
+/// disjoint column bands (row stages never mix columns) on the same
+/// pool. Identical per-element operation DAG ⇒ bit-identical to the
+/// serial kernel for any thread count.
+pub fn fwht_threaded_normalized(x: &mut [f32], threads: usize) {
+    assert_pow2(x.len());
+    let scale = Some(inv_sqrt_scale(x.len()));
+    threaded_impl(x, threads, scale);
+}
+
+fn threaded_impl(x: &mut [f32], threads: usize, scale: Option<f32>) {
+    let n = x.len();
+    let sched = Schedule::for_len(n);
+    if threads <= 1 || n <= sched.tile {
+        blocked_impl(x, sched, scale);
+        return;
+    }
+    let tiles: Vec<&mut [f32]> = x.chunks_mut(sched.tile).collect();
+    par_map(tiles, threads, |_, t| tile_fwht(t, None));
+    let bands = build_bands(x, sched.tile, threads);
+    par_map(bands, threads, |_, mut rows| cross_rows(&mut rows, sched.strip, scale));
+}
+
+/// Split the (n/c) × c matrix view of `x` into `nbands` disjoint column
+/// bands, each a per-row set of `&mut` windows (safe `split_at_mut`
+/// walk — no aliasing, no unsafe).
+fn build_bands(x: &mut [f32], c: usize, nbands: usize) -> Vec<Vec<&mut [f32]>> {
+    let r = x.len() / c;
+    let nb = nbands.clamp(1, c);
+    let (base, rem) = (c / nb, c % nb);
+    let widths: Vec<usize> = (0..nb).map(|i| base + usize::from(i < rem)).collect();
+    let mut bands: Vec<Vec<&mut [f32]>> = widths.iter().map(|_| Vec::with_capacity(r)).collect();
+    for row in x.chunks_mut(c) {
+        let mut rest = row;
+        for (b, &wd) in widths.iter().enumerate() {
+            let (head, tail) = rest.split_at_mut(wd);
+            bands[b].push(head);
+            rest = tail;
+        }
+    }
+    bands
+}
+
+// ---------------------------------------------------------------------
+// SketchPlan: aligned scratch + schedule, the per-thread kernel state
+// ---------------------------------------------------------------------
+
+/// One 64-byte-aligned chunk of scratch (a full cache line of f32).
+#[repr(C, align(64))]
+#[derive(Clone, Copy)]
+struct Lane64([f32; 16]);
+
+/// A 64-byte-aligned f32 buffer (size 64 = align 64 ⇒ no padding, so
+/// the chunks are contiguous f32 lanes).
+struct AlignedBuf {
+    chunks: Vec<Lane64>,
+    len: usize,
+}
+
+impl AlignedBuf {
+    fn new(len: usize) -> AlignedBuf {
+        AlignedBuf { chunks: vec![Lane64([0.0; 16]); len.div_ceil(16)], len }
+    }
+
+    fn as_mut_slice(&mut self) -> &mut [f32] {
+        // SAFETY: `Lane64` is `repr(C, align(64))` over `[f32; 16]` —
+        // size 64 equals the alignment, so there is no padding and the
+        // Vec's storage is `chunks.len() * 16` contiguous, initialized
+        // f32 lanes; `len <= chunks.len() * 16` by construction.
+        unsafe { std::slice::from_raw_parts_mut(self.chunks.as_mut_ptr().cast::<f32>(), self.len) }
+    }
+
+    fn as_slice(&self) -> &[f32] {
+        // SAFETY: as above, shared view.
+        unsafe { std::slice::from_raw_parts(self.chunks.as_ptr().cast::<f32>(), self.len) }
+    }
+}
+
+/// The precomputed stage schedule of one transform size: the
+/// (tile, strip) factorization every kernel pass follows — `tile`
+/// bounds the contiguous phase (stages h < tile run tile-local; the
+/// cross phase has n′/tile rows), `strip` is the column group width of
+/// the cross-phase passes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Schedule {
+    /// contiguous tile length (stages h < tile run tile-local)
+    pub tile: usize,
+    /// columns per cross-phase strip
+    pub strip: usize,
+}
+
+impl Schedule {
+    /// Factorize a transform length into the blocked execution plan.
+    pub fn for_len(npad: usize) -> Schedule {
+        Schedule { tile: npad.min(TILE), strip: STRIP }
+    }
+}
+
+/// Planned kernel state for one transform size n′: a 64-byte-aligned
+/// n′-sized scratch plus the precomputed [`Schedule`]. Owned per thread
+/// through [`with_plan`] — this replaces the old ad-hoc `FWHT_SCRATCH`
+/// thread-local Vec, and additionally fuses the SRHT prologue/epilogue
+/// into the butterfly passes (DESIGN.md §10).
+pub struct SketchPlan {
+    npad: usize,
+    schedule: Schedule,
+    scratch: AlignedBuf,
+}
+
+impl SketchPlan {
+    pub fn new(npad: usize) -> SketchPlan {
+        assert!(npad > 0);
+        assert_pow2(npad);
+        SketchPlan { npad, schedule: Schedule::for_len(npad), scratch: AlignedBuf::new(npad) }
+    }
+
+    pub fn npad(&self) -> usize {
+        self.npad
+    }
+
+    pub fn schedule(&self) -> Schedule {
+        self.schedule
+    }
+
+    /// scratch ← (H/√n′)·(D ∘ pad(w)), fully fused; returns the rotated
+    /// view (valid until the next plan call).
+    pub fn rotate_normalized(&mut self, w: &[f32], dsign: &[f32]) -> &[f32] {
+        let sched = self.schedule;
+        rotate_impl(w, dsign, self.scratch.as_mut_slice(), sched);
+        self.scratch.as_slice()
+    }
+
+    /// scratch ← (H/√n′)·y for a full-length y (the de-rotation path).
+    pub fn transform_normalized(&mut self, y: &[f32]) -> &[f32] {
+        assert_eq!(y.len(), self.npad, "expected n'={} got {}", self.npad, y.len());
+        let sched = self.schedule;
+        let scale = Some(inv_sqrt_scale(self.npad));
+        let x = self.scratch.as_mut_slice();
+        x.copy_from_slice(y);
+        blocked_impl(x, sched, scale);
+        self.scratch.as_slice()
+    }
+
+    /// scratch ← (H/√n′)·(Sᵀ(scale·v)): zero, scatter the m sketch lanes
+    /// to their sampled rows, transform (the adjoint's FWHT leg).
+    pub fn adjoint_normalized(&mut self, sidx: &[u32], v: &[f32], scale: f32) -> &[f32] {
+        assert_eq!(sidx.len(), v.len(), "sidx/v length mismatch");
+        let sched = self.schedule;
+        let nscale = Some(inv_sqrt_scale(self.npad));
+        let x = self.scratch.as_mut_slice();
+        x.fill(0.0);
+        for (&i, &val) in sidx.iter().zip(v) {
+            x[i as usize] = val * scale;
+        }
+        blocked_impl(x, sched, nscale);
+        self.scratch.as_slice()
+    }
+
+    /// Threaded variant of [`Self::transform_normalized`] for the
+    /// serial server context (bit-identical for any thread count).
+    pub fn transform_normalized_threaded(&mut self, y: &[f32], threads: usize) -> &[f32] {
+        assert_eq!(y.len(), self.npad, "expected n'={} got {}", self.npad, y.len());
+        let scale = Some(inv_sqrt_scale(self.npad));
+        let x = self.scratch.as_mut_slice();
+        x.copy_from_slice(y);
+        threaded_impl(x, threads, scale);
+        self.scratch.as_slice()
+    }
+
+    /// Threaded variant of [`Self::adjoint_normalized`].
+    pub fn adjoint_normalized_threaded(
+        &mut self,
+        sidx: &[u32],
+        v: &[f32],
+        scale: f32,
+        threads: usize,
+    ) -> &[f32] {
+        assert_eq!(sidx.len(), v.len(), "sidx/v length mismatch");
+        let nscale = Some(inv_sqrt_scale(self.npad));
+        let x = self.scratch.as_mut_slice();
+        x.fill(0.0);
+        for (&i, &val) in sidx.iter().zip(v) {
+            x[i as usize] = val * scale;
+        }
+        threaded_impl(x, threads, nscale);
+        self.scratch.as_slice()
+    }
+}
+
+thread_local! {
+    // Per-thread plan cache, one plan per transform size seen on this
+    // thread. A process touches a handful of sizes (one n′ per model
+    // variant), and the data-parallel client phase gives every scoped
+    // worker its own cache — same sharing story as the old FWHT_SCRATCH,
+    // but with aligned scratch and the precomputed schedule attached.
+    static PLAN_CACHE: RefCell<Vec<SketchPlan>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Run `f` with this thread's cached [`SketchPlan`] for size `npad`
+/// (created on first use).
+pub fn with_plan<R>(npad: usize, f: impl FnOnce(&mut SketchPlan) -> R) -> R {
+    PLAN_CACHE.with(|cell| {
+        let mut plans = cell.borrow_mut();
+        let idx = match plans.iter().position(|p| p.npad == npad) {
+            Some(i) => i,
+            None => {
+                plans.push(SketchPlan::new(npad));
+                plans.len() - 1
+            }
+        };
+        f(&mut plans[idx])
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::fwht::scalar;
+    use crate::util::proptest::check;
+    use crate::util::rng::Rng;
+
+    fn randvec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal()).collect()
+    }
+
+    /// Bit-identity (not tolerance) against the scalar reference.
+    fn assert_bits_eq(got: &[f32], want: &[f32], what: &str) {
+        assert_eq!(got.len(), want.len());
+        for i in 0..got.len() {
+            assert_eq!(
+                got[i].to_bits(),
+                want[i].to_bits(),
+                "{what}: lane {i}: {} vs {}",
+                got[i],
+                want[i]
+            );
+        }
+    }
+
+    #[test]
+    fn blocked_matches_scalar_bitwise_all_small_sizes() {
+        let mut rng = Rng::new(11);
+        for lg in 0..=13 {
+            let n = 1usize << lg;
+            let x = randvec(&mut rng, n);
+            let mut want = x.clone();
+            scalar::fwht_inplace(&mut want);
+            let mut got = x.clone();
+            fwht_blocked(&mut got);
+            assert_bits_eq(&got, &want, &format!("unnormalized n={n}"));
+
+            let mut wantn = x.clone();
+            scalar::fwht_normalized(&mut wantn);
+            let mut gotn = x;
+            fwht_blocked_normalized(&mut gotn);
+            assert_bits_eq(&gotn, &wantn, &format!("normalized n={n}"));
+        }
+    }
+
+    #[test]
+    fn tile_override_bit_identity_property() {
+        // tiny tiles force the cross phase (incl. n' smaller than one
+        // production tile, and degenerate tile = 1)
+        check("kernel_tile_override", 60, |rng| {
+            let n = 1usize << rng.below(11);
+            let tile = 1usize << rng.below(7);
+            let x: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let mut want = x.clone();
+            scalar::fwht_normalized(&mut want);
+            let mut got = x;
+            fwht_with_tile(&mut got, tile, true);
+            for i in 0..n {
+                if got[i].to_bits() != want[i].to_bits() {
+                    return Err(format!("n={n} tile={tile} lane {i}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn rotate_fused_matches_reference_pipeline() {
+        check("kernel_rotate_fused", 40, |rng| {
+            let npad = 1usize << (rng.below(11) + 1);
+            let n = rng.below(npad) + 1;
+            let w: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let d = rng.rademacher(npad);
+            // reference: explicit prologue sweep, scalar FWHT, separate scale
+            let mut want = vec![0.0f32; npad];
+            for i in 0..n {
+                want[i] = w[i] * d[i];
+            }
+            scalar::fwht_normalized(&mut want);
+            // fused kernel, both via the free function and the plan;
+            // the schedule (tile AND strip) is swept to exercise the
+            // blocking on small inputs
+            let mut got = vec![0.0f32; npad];
+            // dirty the output to prove every lane is written
+            got.iter_mut().for_each(|v| *v = f32::NAN);
+            let sched = Schedule { tile: 1 << rng.below(7), strip: 1 << rng.below(5) };
+            rotate_impl(&w, &d, &mut got, sched);
+            for i in 0..npad {
+                if got[i].to_bits() != want[i].to_bits() {
+                    return Err(format!("npad={npad} n={n} {sched:?} lane {i}"));
+                }
+            }
+            let planned = with_plan(npad, |p| p.rotate_normalized(&w, &d).to_vec());
+            for i in 0..npad {
+                if planned[i].to_bits() != want[i].to_bits() {
+                    return Err(format!("plan npad={npad} n={n} lane {i}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn threaded_bit_identical_for_any_thread_count() {
+        let mut rng = Rng::new(23);
+        // n > TILE so both the tile fan-out and the banded cross phase run
+        let n = TILE * 8;
+        let x = randvec(&mut rng, n);
+        let mut want = x.clone();
+        fwht_blocked_normalized(&mut want);
+        for threads in [1usize, 2, 3, 4, 16] {
+            let mut got = x.clone();
+            fwht_threaded_normalized(&mut got, threads);
+            assert_bits_eq(&got, &want, &format!("threads={threads}"));
+            let mut gotu = x.clone();
+            fwht_threaded(&mut gotu, threads);
+            let mut wantu = x.clone();
+            fwht_blocked(&mut wantu);
+            assert_bits_eq(&gotu, &wantu, &format!("unnorm threads={threads}"));
+        }
+    }
+
+    #[test]
+    fn batch_matches_per_vector_loop() {
+        let mut rng = Rng::new(31);
+        for (b, n) in [(1usize, 64usize), (3, 256), (5, 1 << 13)] {
+            let xs = randvec(&mut rng, b * n);
+            let mut want = xs.clone();
+            for x in want.chunks_exact_mut(n) {
+                scalar::fwht_normalized(x);
+            }
+            let mut got = xs.clone();
+            fwht_batch(&mut got, n);
+            assert_bits_eq(&got, &want, &format!("batch B={b} n={n}"));
+            for threads in [2usize, 7] {
+                let mut gott = xs.clone();
+                fwht_batch_threaded(&mut gott, n, threads);
+                assert_bits_eq(&gott, &want, &format!("batch B={b} n={n} threads={threads}"));
+            }
+        }
+    }
+
+    #[test]
+    fn plan_adjoint_and_transform_match_reference() {
+        check("kernel_plan_paths", 30, |rng| {
+            let npad = 1usize << (rng.below(9) + 1);
+            let m = rng.below(npad) + 1;
+            let mut idx: Vec<u32> = (0..npad as u32).collect();
+            // distinct sample rows, like the operator's sidx
+            for i in (1..idx.len()).rev() {
+                let j = rng.below(i + 1);
+                idx.swap(i, j);
+            }
+            idx.truncate(m);
+            let v: Vec<f32> = (0..m).map(|_| rng.normal()).collect();
+            let scale = 1.37f32;
+            let mut want = vec![0.0f32; npad];
+            for (&i, &val) in idx.iter().zip(&v) {
+                want[i as usize] = val * scale;
+            }
+            scalar::fwht_normalized(&mut want);
+            let got = with_plan(npad, |p| p.adjoint_normalized(&idx, &v, scale).to_vec());
+            for i in 0..npad {
+                if got[i].to_bits() != want[i].to_bits() {
+                    return Err(format!("adjoint npad={npad} m={m} lane {i}"));
+                }
+            }
+            let gott =
+                with_plan(npad, |p| p.adjoint_normalized_threaded(&idx, &v, scale, 4).to_vec());
+            if gott != got {
+                return Err("threaded adjoint differs".into());
+            }
+            let y: Vec<f32> = (0..npad).map(|_| rng.normal()).collect();
+            let mut wanty = y.clone();
+            scalar::fwht_normalized(&mut wanty);
+            let goty = with_plan(npad, |p| p.transform_normalized(&y).to_vec());
+            for i in 0..npad {
+                if goty[i].to_bits() != wanty[i].to_bits() {
+                    return Err(format!("transform npad={npad} lane {i}"));
+                }
+            }
+            let gotyt = with_plan(npad, |p| p.transform_normalized_threaded(&y, 3).to_vec());
+            if gotyt != goty {
+                return Err("threaded transform differs".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn plan_scratch_is_aligned_and_reused_purely() {
+        let mut plan = SketchPlan::new(1 << 10);
+        let ptr = plan.scratch.as_mut_slice().as_ptr() as usize;
+        assert_eq!(ptr % 64, 0, "scratch must be 64-byte aligned");
+        let mut rng = Rng::new(3);
+        let d: Vec<f32> = rng.rademacher(1 << 10);
+        let a: Vec<f32> = (0..1000).map(|_| rng.normal()).collect();
+        let b: Vec<f32> = (0..1000).map(|_| rng.normal()).collect();
+        let ra = plan.rotate_normalized(&a, &d).to_vec();
+        let _ = plan.rotate_normalized(&b, &d); // dirty the scratch
+        assert_eq!(plan.rotate_normalized(&a, &d), &ra[..], "plan reuse must be pure");
+        assert_eq!(plan.schedule(), Schedule::for_len(1 << 10));
+    }
+
+    #[test]
+    fn trivial_sizes_match_scalar() {
+        for n in [1usize, 2, 4] {
+            let x: Vec<f32> = (0..n).map(|i| i as f32 - 0.5).collect();
+            let mut want = x.clone();
+            scalar::fwht_normalized(&mut want);
+            let mut got = x;
+            fwht_blocked_normalized(&mut got);
+            assert_bits_eq(&got, &want, &format!("trivial n={n}"));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "power-of-two")]
+    fn rejects_non_pow2() {
+        let mut x = vec![0.0f32; 24];
+        fwht_blocked(&mut x);
+    }
+}

@@ -3,10 +3,13 @@
 //! The HLO artifacts own the pFed1BS hot path; this module provides the
 //! identical operator for baselines, server-side work, the dense-Gaussian
 //! ablation (Appendix Fig. 3), bit-packing for the one-bit transport, and
-//! the Lemma-1 majority vote.
+//! the Lemma-1 majority vote. The FWHT itself runs on the planned,
+//! cache-blocked kernel in [`kernel`] (DESIGN.md §10), bit-identical to
+//! the retained scalar reference in [`fwht::scalar`].
 
 pub mod bitpack;
 pub mod fwht;
+pub mod kernel;
 pub mod srht;
 
 pub use bitpack::{
@@ -14,4 +17,8 @@ pub use bitpack::{
     quantize_weight, unpack_signs, ScalarTally, SignVec, VoteAccumulator,
 };
 pub use fwht::{fwht_inplace, fwht_normalized};
+pub use kernel::{
+    fwht_batch, fwht_batch_threaded, fwht_threaded, fwht_threaded_normalized, with_plan,
+    Schedule, SketchPlan,
+};
 pub use srht::{DenseGaussianOperator, Projection, SrhtOperator};

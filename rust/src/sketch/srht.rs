@@ -9,30 +9,22 @@
 //! mirror serves the baselines (OBCSAA's compressed-sensing uplink, EDEN's
 //! rotation), server-side reconstruction, and the dense-Gaussian ablation
 //! of Appendix Fig. 3.
+//!
+//! Every FWHT application routes through the planned blocked kernel
+//! (`kernel::SketchPlan`, DESIGN.md §10): each thread's cached plan owns
+//! the aligned n′ scratch, the D·pad prologue is fused into the first
+//! butterfly pass, the 1/√n′ normalization into the last, and
+//! `sketch_sign_packed` packs `SignVec` words straight off the rotated
+//! scratch — no per-call n′ allocation and no intermediate ±1 lane
+//! vector anywhere. The `*_threaded` variants run the same passes on the
+//! scoped worker pool (bit-identical for any thread count); they exist
+//! for the serial server context, not for the already-parallel client
+//! phase.
 
-use std::cell::RefCell;
-
+use crate::coordinator::parallel::par_map;
 use crate::sketch::bitpack::SignVec;
-use crate::sketch::fwht::fwht_normalized;
+use crate::sketch::kernel::{fwht_rotate_normalized, with_plan};
 use crate::util::rng::Rng;
-
-thread_local! {
-    // Per-thread n'-sized FWHT workspace. forward/adjoint run on every
-    // baseline client step and every dense-ablation regularizer step,
-    // and the per-call `vec![0.0; npad]` was pure allocator traffic;
-    // one thread-local buffer serves the data-parallel client phase
-    // without sharing (each scoped worker gets its own).
-    static FWHT_SCRATCH: RefCell<Vec<f32>> = RefCell::new(Vec::new());
-}
-
-fn with_scratch<R>(npad: usize, f: impl FnOnce(&mut [f32]) -> R) -> R {
-    FWHT_SCRATCH.with(|cell| {
-        let mut buf = cell.borrow_mut();
-        buf.clear();
-        buf.resize(npad, 0.0);
-        f(&mut buf)
-    })
-}
 
 /// A concrete realization of the structured projection.
 #[derive(Clone, Debug)]
@@ -68,13 +60,15 @@ impl SrhtOperator {
         SrhtOperator { n, npad, m, dsign, sidx, scale }
     }
 
-    /// Forward sketch z = Φw ∈ R^m (real-valued). Runs in the
-    /// thread-local scratch buffer — no per-call n'-sized allocation.
+    fn check_input(&self, w: &[f32]) {
+        assert_eq!(w.len(), self.n, "expected n={} got {}", self.n, w.len());
+    }
+
+    /// Forward sketch z = Φw ∈ R^m (real-valued). Fully fused in the
+    /// per-thread plan scratch — no per-call n'-sized allocation.
     pub fn forward(&self, w: &[f32]) -> Vec<f32> {
-        with_scratch(self.npad, |buf| {
-            self.forward_padded_into(w, buf);
-            self.subsample(buf)
-        })
+        self.check_input(w);
+        with_plan(self.npad, |plan| self.subsample(plan.rotate_normalized(w, &self.dsign)))
     }
 
     /// One-bit sketch z = sign(Φw) ∈ {−1,+1}^m, sign(0) := +1.
@@ -85,26 +79,41 @@ impl SrhtOperator {
             .collect()
     }
 
-    /// One-bit sketch packed straight from the rotated scratch buffer:
-    /// the transport-ready form, with no f32 ±1 lane vector in between.
+    /// One-bit sketch packed straight from the rotated plan scratch:
+    /// the transport-ready form, with no f32 ±1 lane vector — or any
+    /// intermediate m-vector — in between.
     pub fn sketch_sign_packed(&self, w: &[f32]) -> SignVec {
-        with_scratch(self.npad, |buf| {
-            self.forward_padded_into(w, buf);
+        self.check_input(w);
+        with_plan(self.npad, |plan| {
+            let buf = plan.rotate_normalized(w, &self.dsign);
             // same comparison as `sketch_sign`: sign of the *scaled*
             // coordinate (scale > 0, kept for exact f32 parity)
             SignVec::from_fn(self.m, |j| buf[self.sidx[j] as usize] * self.scale >= 0.0)
         })
     }
 
-    /// Adjoint g = Φᵀv ∈ R^n. Uses the thread-local scratch for the
-    /// n'-sized FWHT workspace; only the n-sized result is allocated.
+    /// Adjoint g = Φᵀv ∈ R^n. The FWHT leg runs in the plan scratch;
+    /// only the n-sized result is allocated.
     pub fn adjoint(&self, v: &[f32]) -> Vec<f32> {
         assert_eq!(v.len(), self.m);
-        with_scratch(self.npad, |buf| {
-            for (&idx, &val) in self.sidx.iter().zip(v) {
-                buf[idx as usize] = val * self.scale;
-            }
-            fwht_normalized(buf);
+        with_plan(self.npad, |plan| {
+            let buf = plan.adjoint_normalized(&self.sidx, v, self.scale);
+            buf.iter()
+                .zip(&self.dsign)
+                .take(self.n)
+                .map(|(&b, &d)| b * d)
+                .collect()
+        })
+    }
+
+    /// [`Self::adjoint`] with the transform farmed to `threads` scoped
+    /// workers — bit-identical for any thread count. For the serial
+    /// server context (reconstruction); client-phase callers are already
+    /// data-parallel and should stay on [`Self::adjoint`].
+    pub fn adjoint_threaded(&self, v: &[f32], threads: usize) -> Vec<f32> {
+        assert_eq!(v.len(), self.m);
+        with_plan(self.npad, |plan| {
+            let buf = plan.adjoint_normalized_threaded(&self.sidx, v, self.scale, threads);
             buf.iter()
                 .zip(&self.dsign)
                 .take(self.n)
@@ -115,39 +124,52 @@ impl SrhtOperator {
 
     /// H·D·pad(w) without subsampling — the full rotated vector. EDEN
     /// needs all n' rotated coordinates, not just the m sampled ones.
+    /// The fused kernel writes straight into the returned vector (the
+    /// one allocation is the result itself); callers that only need a
+    /// borrowed view should use [`Self::rotate_with`].
     pub fn rotate(&self, w: &[f32]) -> Vec<f32> {
-        self.forward_padded(w)
+        self.check_input(w);
+        let mut out = vec![0.0f32; self.npad];
+        fwht_rotate_normalized(w, &self.dsign, &mut out);
+        out
+    }
+
+    /// Run `f` over the rotated vector H·D·pad(w) borrowed from the plan
+    /// scratch — zero allocation. `f` must not re-enter another sketch
+    /// operation on the same thread (the plan is checked out for the
+    /// duration of the call, like the old scratch borrow).
+    pub fn rotate_with<R>(&self, w: &[f32], f: impl FnOnce(&[f32]) -> R) -> R {
+        self.check_input(w);
+        with_plan(self.npad, |plan| f(plan.rotate_normalized(w, &self.dsign)))
     }
 
     /// Inverse of `rotate` (D·H·y, truncated) — exact because H and D are
-    /// involutions.
+    /// involutions. Transforms in the plan scratch; only the n-sized
+    /// result is allocated.
     pub fn rotate_inverse(&self, y: &[f32]) -> Vec<f32> {
         assert_eq!(y.len(), self.npad);
-        let mut buf = y.to_vec();
-        fwht_normalized(&mut buf);
-        for (b, &d) in buf.iter_mut().zip(&self.dsign) {
-            *b *= d;
-        }
-        buf.truncate(self.n);
-        buf
+        with_plan(self.npad, |plan| {
+            let buf = plan.transform_normalized(y);
+            buf.iter()
+                .zip(&self.dsign)
+                .take(self.n)
+                .map(|(&b, &d)| b * d)
+                .collect()
+        })
     }
 
-    /// Allocating variant for callers that keep the full rotated vector
-    /// (`rotate`). Hot paths go through `forward_padded_into` + scratch.
-    fn forward_padded(&self, w: &[f32]) -> Vec<f32> {
-        let mut buf = vec![0.0f32; self.npad];
-        self.forward_padded_into(w, &mut buf);
-        buf
-    }
-
-    /// H·D·pad(w) into a caller-provided zeroed buffer of length n'.
-    fn forward_padded_into(&self, w: &[f32], buf: &mut [f32]) {
-        assert_eq!(w.len(), self.n, "expected n={} got {}", self.n, w.len());
-        debug_assert_eq!(buf.len(), self.npad);
-        for ((b, &x), &d) in buf.iter_mut().zip(w).zip(&self.dsign) {
-            *b = x * d;
-        }
-        fwht_normalized(buf);
+    /// [`Self::rotate_inverse`] on the scoped worker pool — bit-identical
+    /// for any thread count (serial server context only).
+    pub fn rotate_inverse_threaded(&self, y: &[f32], threads: usize) -> Vec<f32> {
+        assert_eq!(y.len(), self.npad);
+        with_plan(self.npad, |plan| {
+            let buf = plan.transform_normalized_threaded(y, threads);
+            buf.iter()
+                .zip(&self.dsign)
+                .take(self.n)
+                .map(|(&b, &d)| b * d)
+                .collect()
+        })
     }
 
     fn subsample(&self, buf: &[f32]) -> Vec<f32> {
@@ -246,6 +268,39 @@ impl DenseGaussianOperator {
         out
     }
 
+    /// g = Gᵀv with the output split into disjoint column bands on the
+    /// scoped worker pool. Each band accumulates its own coordinates
+    /// over rows in the same ascending order as [`Self::adjoint`], so
+    /// the per-element f32 sum association is unchanged — bit-identical
+    /// for any thread count.
+    pub fn adjoint_threaded(&self, v: &[f32], threads: usize) -> Vec<f32> {
+        assert_eq!(v.len(), self.m);
+        if threads <= 1 || self.n < 4096 {
+            return self.adjoint(v);
+        }
+        let mat = self.matrix();
+        let n = self.n;
+        let mut out = vec![0.0f32; n];
+        let chunk = n.div_ceil(threads);
+        let bands: Vec<(usize, &mut [f32])> = out
+            .chunks_mut(chunk)
+            .enumerate()
+            .map(|(i, band)| (i * chunk, band))
+            .collect();
+        par_map(bands, threads, |_, (off, band)| {
+            for (r, &vr) in v.iter().enumerate() {
+                if vr == 0.0 {
+                    continue;
+                }
+                let row = &mat[r * n + off..r * n + off + band.len()];
+                for (o, &a) in band.iter_mut().zip(row) {
+                    *o += a * vr;
+                }
+            }
+        });
+        out
+    }
+
     pub fn sketch_sign(&self, w: &[f32]) -> Vec<f32> {
         self.forward(w)
             .into_iter()
@@ -287,6 +342,15 @@ impl Projection {
         }
     }
 
+    /// Server-side reconstruction adjoint on the worker pool —
+    /// bit-identical to [`Self::adjoint`] for any thread count.
+    pub fn adjoint_threaded(&self, v: &[f32], threads: usize) -> Vec<f32> {
+        match self {
+            Projection::Srht(op) => op.adjoint_threaded(v, threads),
+            Projection::Dense(op) => op.adjoint_threaded(v, threads),
+        }
+    }
+
     pub fn sketch_sign(&self, w: &[f32]) -> Vec<f32> {
         match self {
             Projection::Srht(op) => op.sketch_sign(w),
@@ -307,6 +371,7 @@ impl Projection {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sketch::fwht::scalar;
     use crate::util::proptest::check;
     use crate::util::stats::dot;
 
@@ -329,6 +394,100 @@ mod tests {
         let b = SrhtOperator::from_seed(42, 500, 50);
         assert_eq!(a.dsign, b.dsign);
         assert_eq!(a.sidx, b.sidx);
+    }
+
+    /// The whole operator pipeline, spelled out against the scalar
+    /// reference kernel: the planned/fused paths must match this
+    /// BIT-FOR-BIT (the golden traces and the HLO cross-checks rest on
+    /// it).
+    fn reference_rotated(op: &SrhtOperator, w: &[f32]) -> Vec<f32> {
+        let mut buf = vec![0.0f32; op.npad];
+        for i in 0..op.n {
+            buf[i] = w[i] * op.dsign[i];
+        }
+        scalar::fwht_normalized(&mut buf);
+        buf
+    }
+
+    #[test]
+    fn forward_and_adjoint_bit_identical_to_scalar_reference() {
+        check("srht_bit_identity", 40, |rng| {
+            let n = rng.below(3000) + 1;
+            let m = rng.below(n) + 1;
+            let op = SrhtOperator::from_seed(rng.next_u64(), n, m);
+            let w: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let rot = reference_rotated(&op, &w);
+            let want_fwd: Vec<f32> = op.sidx.iter().map(|&i| rot[i as usize] * op.scale).collect();
+            let got_fwd = op.forward(&w);
+            for j in 0..m {
+                if got_fwd[j].to_bits() != want_fwd[j].to_bits() {
+                    return Err(format!("forward n={n} m={m} lane {j}"));
+                }
+            }
+            let v: Vec<f32> = (0..m).map(|_| rng.normal()).collect();
+            let mut buf = vec![0.0f32; op.npad];
+            for (&i, &val) in op.sidx.iter().zip(&v) {
+                buf[i as usize] = val * op.scale;
+            }
+            scalar::fwht_normalized(&mut buf);
+            let want_adj: Vec<f32> = buf
+                .iter()
+                .zip(&op.dsign)
+                .take(op.n)
+                .map(|(&b, &d)| b * d)
+                .collect();
+            let got_adj = op.adjoint(&v);
+            for j in 0..n {
+                if got_adj[j].to_bits() != want_adj[j].to_bits() {
+                    return Err(format!("adjoint n={n} m={m} lane {j}"));
+                }
+            }
+            for threads in [2usize, 5] {
+                if op.adjoint_threaded(&v, threads) != got_adj {
+                    return Err(format!("adjoint_threaded diverges at threads={threads}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn rotate_paths_bit_identical_and_zero_copy_view_matches() {
+        check("srht_rotate_identity", 30, |rng| {
+            let n = rng.below(5000) + 1;
+            let op = SrhtOperator::from_seed(rng.next_u64(), n, (n / 10).max(1));
+            let w: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let want = reference_rotated(&op, &w);
+            let got = op.rotate(&w);
+            for i in 0..op.npad {
+                if got[i].to_bits() != want[i].to_bits() {
+                    return Err(format!("rotate n={n} lane {i}"));
+                }
+            }
+            let viewed = op.rotate_with(&w, |y| y.to_vec());
+            if viewed != got {
+                return Err("rotate_with view differs from rotate".into());
+            }
+            // inverse round trip must be bit-stable through the plan
+            let back = op.rotate_inverse(&got);
+            let mut refbuf = got.clone();
+            scalar::fwht_normalized(&mut refbuf);
+            let want_back: Vec<f32> = refbuf
+                .iter()
+                .zip(&op.dsign)
+                .take(op.n)
+                .map(|(&b, &d)| b * d)
+                .collect();
+            for i in 0..n {
+                if back[i].to_bits() != want_back[i].to_bits() {
+                    return Err(format!("rotate_inverse n={n} lane {i}"));
+                }
+            }
+            if op.rotate_inverse_threaded(&got, 4) != back {
+                return Err("rotate_inverse_threaded diverges".into());
+            }
+            Ok(())
+        });
     }
 
     #[test]
@@ -391,7 +550,7 @@ mod tests {
 
     #[test]
     fn rotate_inverse_round_trip() {
-        let mut rng = Rng::new(3);
+        let mut rng = crate::util::rng::Rng::new(3);
         let n = 300;
         let op = SrhtOperator::from_seed(5, n, 30);
         let w: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
@@ -403,7 +562,7 @@ mod tests {
 
     #[test]
     fn sign_sketch_is_pm_one() {
-        let mut rng = Rng::new(4);
+        let mut rng = crate::util::rng::Rng::new(4);
         let op = SrhtOperator::from_seed(6, 128, 16);
         let w: Vec<f32> = (0..128).map(|_| rng.normal()).collect();
         assert!(op.sketch_sign(&w).iter().all(|&z| z == 1.0 || z == -1.0));
@@ -429,25 +588,48 @@ mod tests {
     }
 
     #[test]
-    fn scratch_reuse_is_pure() {
-        // back-to-back forward/adjoint calls share the thread-local
+    fn packed_sketch_dirty_tail_parity_m_63_64_65() {
+        // the fused subsample writes SignVec words directly; pin the
+        // word-boundary geometries where a tail-masking bug would hide
+        let mut rng = crate::util::rng::Rng::new(77);
+        for m in [63usize, 64, 65] {
+            let n = 200;
+            let op = SrhtOperator::from_seed(1000 + m as u64, n, m);
+            let w: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let packed = op.sketch_sign_packed(&w);
+            assert_eq!(packed.m(), m);
+            assert_eq!(packed.to_signs(), op.sketch_sign(&w), "m={m}");
+            // canonical zero tail beyond m
+            if m % 64 != 0 {
+                let last = *packed.words().last().unwrap();
+                assert_eq!(last >> (m % 64), 0, "dirty tail at m={m}");
+            }
+        }
+    }
+
+    #[test]
+    fn plan_scratch_reuse_is_pure() {
+        // back-to-back forward/adjoint calls share the per-thread plan
         // scratch; results must be independent of call history
-        let mut rng = Rng::new(21);
+        let mut rng = crate::util::rng::Rng::new(21);
         let op = SrhtOperator::from_seed(22, 300, 40);
         let a: Vec<f32> = (0..300).map(|_| rng.normal()).collect();
         let b: Vec<f32> = (0..300).map(|_| rng.normal()).collect();
         let fa = op.forward(&a);
         let _ = op.forward(&b); // dirty the scratch with other data
-        assert_eq!(op.forward(&a), fa, "forward not pure under scratch reuse");
+        assert_eq!(op.forward(&a), fa, "forward not pure under plan reuse");
         let v: Vec<f32> = (0..40).map(|_| rng.normal()).collect();
         let ga = op.adjoint(&v);
         let _ = op.forward(&b);
-        assert_eq!(op.adjoint(&v), ga, "adjoint not pure under scratch reuse");
+        assert_eq!(op.adjoint(&v), ga, "adjoint not pure under plan reuse");
+        let ra = op.rotate_inverse(&op.rotate(&a));
+        let _ = op.forward(&b);
+        assert_eq!(op.rotate_inverse(&op.rotate(&a)), ra, "rotate_inverse not pure");
     }
 
     #[test]
     fn dense_gaussian_adjoint_identity() {
-        let mut rng = Rng::new(8);
+        let mut rng = crate::util::rng::Rng::new(8);
         let (n, m) = (200, 20);
         let op = DenseGaussianOperator::from_seed(9, n, m);
         let x: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
@@ -458,9 +640,30 @@ mod tests {
     }
 
     #[test]
+    fn dense_gaussian_threaded_adjoint_bit_identical() {
+        let mut rng = crate::util::rng::Rng::new(12);
+        let (n, m) = (5000, 64); // n >= the threading floor
+        let op = DenseGaussianOperator::from_seed(13, n, m);
+        let mut v: Vec<f32> = (0..m).map(|_| rng.normal()).collect();
+        v[3] = 0.0; // exercise the zero-row skip in both paths
+        let serial = op.adjoint(&v);
+        for threads in [2usize, 3, 8] {
+            let par = op.adjoint_threaded(&v, threads);
+            assert_eq!(par.len(), serial.len());
+            for i in 0..n {
+                assert_eq!(
+                    par[i].to_bits(),
+                    serial[i].to_bits(),
+                    "threads={threads} lane {i}"
+                );
+            }
+        }
+    }
+
+    #[test]
     fn dense_gaussian_norm_concentration() {
         // E||Gw||^2 = ||w||^2 with 1/m variance rows — loose 30% check.
-        let mut rng = Rng::new(10);
+        let mut rng = crate::util::rng::Rng::new(10);
         let (n, m) = (400, 200);
         let op = DenseGaussianOperator::from_seed(11, n, m);
         let w: Vec<f32> = (0..n).map(|_| rng.normal()).collect();

@@ -1,0 +1,146 @@
+//! Kernel bit-exactness at PRODUCTION geometry (DESIGN.md §10): the
+//! blocked/fused/threaded FWHT paths against the retained scalar
+//! reference at the real model sizes (n′ = 2¹⁷ — past the 2¹² tile, so
+//! the cross phase, the padding-boundary tile, and the banded threaded
+//! mode all actually execute), plus the fused SRHT pipeline end-to-end.
+//! The golden trace and the per-round byte assertions rest on these
+//! identities; small-size sweeps live in the sketch module's unit tests.
+
+use pfed1bs::sketch::fwht::scalar;
+use pfed1bs::sketch::{
+    fwht_batch, fwht_batch_threaded, fwht_inplace, fwht_normalized, fwht_threaded,
+    fwht_threaded_normalized, SrhtOperator,
+};
+use pfed1bs::util::rng::Rng;
+
+fn assert_bits_eq(got: &[f32], want: &[f32], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for i in 0..got.len() {
+        assert_eq!(
+            got[i].to_bits(),
+            want[i].to_bits(),
+            "{what}: lane {i}: {} vs {}",
+            got[i],
+            want[i]
+        );
+    }
+}
+
+#[test]
+fn blocked_and_threaded_match_scalar_at_model_size() {
+    let n = 1usize << 17; // mlp784's n' — 32 tiles + a 7-stage cross phase
+    let mut rng = Rng::new(41);
+    let x: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+
+    let mut want = x.clone();
+    scalar::fwht_inplace(&mut want);
+    let mut got = x.clone();
+    fwht_inplace(&mut got);
+    assert_bits_eq(&got, &want, "unnormalized 2^17");
+
+    let mut wantn = x.clone();
+    scalar::fwht_normalized(&mut wantn);
+    let mut gotn = x.clone();
+    fwht_normalized(&mut gotn);
+    assert_bits_eq(&gotn, &wantn, "normalized 2^17");
+
+    for threads in [1usize, 2, 3, 8] {
+        let mut gt = x.clone();
+        fwht_threaded_normalized(&mut gt, threads);
+        assert_bits_eq(&gt, &wantn, &format!("threaded normalized t={threads}"));
+        let mut gu = x.clone();
+        fwht_threaded(&mut gu, threads);
+        assert_bits_eq(&gu, &want, &format!("threaded unnormalized t={threads}"));
+    }
+}
+
+#[test]
+fn batch_matches_loop_at_scale_for_any_thread_count() {
+    let (bsz, n) = (6usize, 1usize << 14);
+    let mut rng = Rng::new(43);
+    let xs: Vec<f32> = (0..bsz * n).map(|_| rng.normal()).collect();
+    let mut want = xs.clone();
+    for x in want.chunks_exact_mut(n) {
+        scalar::fwht_normalized(x);
+    }
+    let mut got = xs.clone();
+    fwht_batch(&mut got, n);
+    assert_bits_eq(&got, &want, "batch serial");
+    for threads in [2usize, 5, 16] {
+        let mut gott = xs.clone();
+        fwht_batch_threaded(&mut gott, n, threads);
+        assert_bits_eq(&gott, &want, &format!("batch t={threads}"));
+    }
+}
+
+/// The fused SRHT pipeline at the mlp784 geometry: pad-boundary tile,
+/// fused prologue/epilogue, direct SignVec packing, threaded adjoint —
+/// all bit-identical to the spelled-out scalar-reference pipeline.
+#[test]
+fn srht_pipeline_bit_identical_at_mlp784_geometry() {
+    let (n, m) = (101_770usize, 10_177usize);
+    let op = SrhtOperator::from_seed(9, n, m);
+    assert_eq!(op.npad, 1 << 17);
+    let mut rng = Rng::new(47);
+    let w: Vec<f32> = (0..n).map(|_| 0.1 * rng.normal()).collect();
+
+    // reference: explicit prologue, scalar transform, separate epilogue
+    let mut rot = vec![0.0f32; op.npad];
+    for i in 0..n {
+        rot[i] = w[i] * op.dsign[i];
+    }
+    scalar::fwht_normalized(&mut rot);
+
+    let fwd = op.forward(&w);
+    for j in 0..m {
+        let want = rot[op.sidx[j] as usize] * op.scale;
+        assert_eq!(fwd[j].to_bits(), want.to_bits(), "forward lane {j}");
+    }
+
+    // fused subsample+sign packing vs the f32 sign path
+    let packed = op.sketch_sign_packed(&w);
+    assert_eq!(packed.to_signs(), op.sketch_sign(&w), "packed sketch parity");
+
+    // adjoint, serial vs worker pool
+    let v: Vec<f32> = (0..m).map(|_| rng.normal()).collect();
+    let serial = op.adjoint(&v);
+    let mut refbuf = vec![0.0f32; op.npad];
+    for (&i, &val) in op.sidx.iter().zip(&v) {
+        refbuf[i as usize] = val * op.scale;
+    }
+    scalar::fwht_normalized(&mut refbuf);
+    for j in 0..n {
+        let want = refbuf[j] * op.dsign[j];
+        assert_eq!(serial[j].to_bits(), want.to_bits(), "adjoint lane {j}");
+    }
+    for threads in [2usize, 4] {
+        assert_eq!(op.adjoint_threaded(&v, threads), serial, "adjoint t={threads}");
+    }
+
+    // rotate paths share the plan; borrowed view == owned result
+    let owned = op.rotate(&w);
+    assert_bits_eq(&owned, &rot, "rotate vs reference");
+    op.rotate_with(&w, |y| assert_bits_eq(y, &rot, "rotate_with view"));
+    let back = op.rotate_inverse(&owned);
+    assert_eq!(op.rotate_inverse_threaded(&owned, 4), back, "rotate_inverse threaded");
+}
+
+/// Tiny-m sketches over the big transform: SignVec word-boundary
+/// geometries (m = 63/64/65) packed straight off the 2^17 rotated
+/// scratch keep the canonical zero tail and f32 parity.
+#[test]
+fn fused_packing_dirty_tail_at_model_size() {
+    let n = 1usize << 17;
+    let mut rng = Rng::new(53);
+    let w: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+    for m in [63usize, 64, 65] {
+        let op = SrhtOperator::from_seed(500 + m as u64, n, m);
+        let packed = op.sketch_sign_packed(&w);
+        assert_eq!(packed.m(), m);
+        assert_eq!(packed.to_signs(), op.sketch_sign(&w), "parity m={m}");
+        if m % 64 != 0 {
+            let last = *packed.words().last().unwrap();
+            assert_eq!(last >> (m % 64), 0, "dirty tail m={m}");
+        }
+    }
+}
