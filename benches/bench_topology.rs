@@ -1,0 +1,95 @@
+//! Hierarchical aggregation (DESIGN.md §11): flat single-aggregator
+//! absorb vs E edge shards absorbing the same cohort and merging in
+//! canonical edge order, plus the edge→root merge-frame codec cost.
+//!
+//! The edge rows measure the serial shape (one thread walks all shards)
+//! so the numbers isolate the bookkeeping overhead of sharding — the
+//! win in production is that the E absorb streams are independent
+//! (shard-parallel by construction, exact by DESIGN.md §9); the
+//! `sharded_merge` rows of bench_aggregate measure the same fold at
+//! smaller K. Results land in `BENCH_topology.json`.
+
+use pfed1bs::algorithms::{AggKind, ClientOutput, ClientStats, RoundAggregator, Uplink};
+use pfed1bs::bench_harness::{black_box, Bench};
+use pfed1bs::comm::{decode, encode, Payload};
+use pfed1bs::sketch::bitpack::{SignVec, VoteAccumulator};
+use pfed1bs::util::rng::Rng;
+
+fn outputs(rng: &mut Rng, k: usize, m: usize) -> Vec<ClientOutput> {
+    (0..k)
+        .map(|c| ClientOutput {
+            client: c,
+            uplink: Some(Uplink::new(
+                0,
+                Payload::Signs(SignVec::from_fn(m, |_| rng.f32() < 0.5)),
+            )),
+            state: None,
+            stats: ClientStats { loss: 1.0 },
+        })
+        .collect()
+}
+
+fn main() {
+    let mut b = Bench::new("topology");
+    let mut rng = Rng::new(11);
+
+    for (k, m) in [(100usize, 10_177usize), (1000, 10_177)] {
+        let cohort = outputs(&mut rng, k, m);
+        let weights = vec![1.0f32 / k as f32; k];
+
+        // the flat oracle: one aggregator, arrival order
+        b.bench_elems(&format!("flat_absorb_K{k}_m{m}"), (k * m) as u64, || {
+            let mut agg = RoundAggregator::new(AggKind::Vote(VoteAccumulator::new(m)));
+            for (out, &w) in cohort.iter().zip(&weights) {
+                agg.absorb(black_box(out.clone()), w).unwrap();
+            }
+            black_box(agg.into_parts());
+        });
+
+        // client → edge → root: E shards absorb (k mod E assignment),
+        // every edge ships its merge frame, the root merges in
+        // canonical edge order — bit-identical to flat (prop_topology)
+        for edges in [2usize, 4, 8, 16] {
+            b.bench_elems(
+                &format!("edge{edges}_absorb_merge_K{k}_m{m}"),
+                (k * m) as u64,
+                || {
+                    let mut shards: Vec<RoundAggregator> = (0..edges)
+                        .map(|_| RoundAggregator::new(AggKind::Vote(VoteAccumulator::new(m))))
+                        .collect();
+                    for (out, &w) in cohort.iter().zip(&weights) {
+                        shards[out.client % edges]
+                            .absorb(black_box(out.clone()), w)
+                            .unwrap();
+                    }
+                    let mut it = shards.into_iter();
+                    let mut root = it.next().unwrap();
+                    for s in it {
+                        root.merge(s).unwrap();
+                    }
+                    black_box(root.into_parts());
+                },
+            );
+        }
+
+    }
+
+    // the edge→root wire: encode + decode one m-tally merge frame (cost
+    // depends only on m, so this row lives outside the cohort loop)
+    let m = 10_177usize;
+    let shard = {
+        let cohort = outputs(&mut rng, 100, m);
+        let mut agg = RoundAggregator::new(AggKind::Vote(VoteAccumulator::new(m)));
+        for out in cohort {
+            agg.absorb(out, 0.01).unwrap();
+        }
+        agg
+    };
+    let frame = shard.merge_payload().unwrap();
+    b.bench_elems(&format!("tally_frame_codec_m{m}"), m as u64, || {
+        black_box(decode(&encode(black_box(&frame))).unwrap());
+    });
+
+    b.report();
+    b.emit_json("topology");
+}

@@ -1,0 +1,101 @@
+//! Mega-fleet round: 100 000 synthetic clients streamed through 16 edge
+//! aggregators into one root vote, in bounded memory (DESIGN.md §11).
+//!
+//! The point being demonstrated: the hierarchical server never holds
+//! the cohort. Every client's m-bit sketch is generated, transported
+//! (metered), absorbed into its edge's O(m) tally shard, and dropped —
+//! peak payload residency is ONE sketch per edge walk, and the server
+//! state is E shards × m tallies no matter how many clients stream
+//! through. The edges then ship one `TallyFrame` each and this example
+//! makes the root fold the DECODED frames (`absorb_frame`) — going one
+//! step beyond the in-process engine, which meters the frames but
+//! merges its in-memory shards — demonstrating that the wire format
+//! alone carries everything the root needs, bit-identical to a flat
+//! server absorbing all 100k uplinks (pinned in
+//! `rust/tests/prop_topology.rs`).
+//!
+//! ```bash
+//! cargo run --release --example mega_fleet [CLIENTS] [EDGES]
+//! ```
+//!
+//! Needs no PJRT artifacts: the aggregation path is pure rust.
+
+use anyhow::Result;
+use pfed1bs::algorithms::{AggKind, ClientOutput, ClientStats, RoundAggregator, Uplink};
+use pfed1bs::comm::{decode, encode, frame_bytes, Direction, Ledger, Payload};
+use pfed1bs::sketch::bitpack::{SignVec, VoteAccumulator};
+use pfed1bs::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let clients: usize =
+        std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(100_000);
+    let edges: usize = std::env::args().nth(2).and_then(|s| s.parse().ok()).unwrap_or(16);
+    let m = 10_177; // the paper's MNIST sketch dimension
+    let p = 1.0f64 / clients as f64;
+
+    println!("mega fleet: {clients} clients → {edges} edges → 1 root, m = {m} bits");
+    let started = std::time::Instant::now();
+
+    // E edge shards + a byte ledger — the ENTIRE server state
+    let mut shards: Vec<RoundAggregator> = (0..edges)
+        .map(|_| RoundAggregator::new(AggKind::Vote(VoteAccumulator::new(m))))
+        .collect();
+    let mut ledger = Ledger::new();
+
+    // stream the cohort: each sketch exists only between generation and
+    // absorb (payloads are consumed by `absorb` — nothing accumulates)
+    for k in 0..clients {
+        let mut rng = Rng::new(0xF1EE7 ^ k as u64);
+        // a synthetic "client": biased signs so the vote is non-trivial
+        let bias = (k % 97) as f32 / 97.0 * 0.2 + 0.4;
+        let sketch = SignVec::from_fn(m, |_| rng.f32() < bias);
+        let payload = Payload::Signs(sketch);
+        ledger.record(Direction::Uplink, frame_bytes(&payload));
+        let out = ClientOutput {
+            client: k,
+            uplink: Some(Uplink::new(0, payload)),
+            state: None,
+            stats: ClientStats { loss: 0.0 },
+        };
+        shards[k % edges].absorb(out, p as f32)?;
+    }
+    let absorbed: usize = shards.iter().map(|s| s.absorbed()).sum();
+
+    // edge → root: one O(m) merge frame per edge, folded from the
+    // DECODED wire bytes in canonical edge order
+    let mut root = RoundAggregator::new(AggKind::Vote(VoteAccumulator::new(m)));
+    for shard in &shards {
+        let frame = shard.merge_payload().expect("vote shards always report");
+        let bytes = encode(&frame);
+        ledger.record_edge(Direction::Uplink, bytes.len());
+        root.absorb_frame(decode(&bytes)?)?;
+    }
+    let round = ledger.end_round();
+
+    let (AggKind::Vote(tally), _, delivered, _) = root.into_parts() else {
+        unreachable!("root kind is fixed above")
+    };
+    let consensus = tally.finish();
+    let plus = consensus.words().iter().map(|w| w.count_ones() as usize).sum::<usize>();
+
+    println!("  absorbed         : {absorbed} uplinks across {edges} edge shards");
+    println!("  root delivered   : {delivered} (via {edges} merge frames)");
+    println!(
+        "  uplink traffic   : {:.1} MiB over {} messages (client → edge)",
+        round.uplink as f64 / (1024.0 * 1024.0),
+        round.uplink_msgs
+    );
+    println!(
+        "  edge tier        : {:.2} MiB over {} merge frames (edge → root)",
+        round.edge_up as f64 / (1024.0 * 1024.0),
+        round.edge_up_msgs
+    );
+    println!(
+        "  resident state   : {} shards × {m} tallies (~{:.1} MiB) — independent of fleet size",
+        edges,
+        (edges * m * 16) as f64 / (1024.0 * 1024.0)
+    );
+    println!("  consensus        : {plus}/{m} bits voted +1");
+    println!("  wall time        : {:.2} s", started.elapsed().as_secs_f64());
+    Ok(())
+}

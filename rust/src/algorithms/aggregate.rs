@@ -26,6 +26,7 @@ use anyhow::{bail, ensure, Result};
 
 use crate::algorithms::common::axpy;
 use crate::algorithms::{ClientOutput, RoundOutcome};
+use crate::comm::codec::TallyFrame;
 use crate::comm::Payload;
 use crate::sketch::bitpack::{ScalarTally, VoteAccumulator};
 
@@ -65,6 +66,8 @@ pub struct RoundAggregator {
 }
 
 impl RoundAggregator {
+    /// Empty aggregator of the given kind (what `begin_aggregate` hands
+    /// the round engine).
     pub fn new(kind: AggKind) -> RoundAggregator {
         RoundAggregator { kind, states: Vec::new(), loss_sum: 0.0, absorbed: 0 }
     }
@@ -140,6 +143,79 @@ impl RoundAggregator {
         }
     }
 
+    /// Encode this shard's server-state content as its edge→root merge
+    /// frame (DESIGN.md §11): the fixed-point tally quanta plus the
+    /// shard's round bookkeeping for the exact kinds
+    /// ([`Payload::TallyFrame`]), the raw partial sum for `DenseSum`
+    /// (`Payload::Dense`), `None` for `Passthrough` (an edge with
+    /// nothing to report stays silent). Personalized write-backs are
+    /// simulation bookkeeping and never travel in frames.
+    pub fn merge_payload(&self) -> Option<Payload> {
+        let tally_frame = |tally: &VoteAccumulator, scalar: i128| {
+            Payload::TallyFrame(TallyFrame {
+                absorbed: self.absorbed as u32,
+                loss_sum: self.loss_sum,
+                scalar,
+                quanta: tally.quanta().to_vec(),
+            })
+        };
+        match &self.kind {
+            AggKind::Passthrough => None,
+            AggKind::Vote(t) => Some(tally_frame(t, 0)),
+            AggKind::ScaledVote { tally, scale } => Some(tally_frame(tally, scale.quanta())),
+            AggKind::SignSum(t) => Some(tally_frame(t, 0)),
+            AggKind::SketchSum { tally, norm } => Some(tally_frame(tally, norm.quanta())),
+            AggKind::DenseSum(sum) => Some(Payload::Dense(sum.clone())),
+        }
+    }
+
+    /// The root's side of [`RoundAggregator::merge_payload`] for the
+    /// exact kinds: fold a decoded edge merge frame into this aggregator.
+    /// Merging frames in canonical edge order is bit-identical to having
+    /// absorbed every edge's uplinks locally — the same exactness
+    /// argument as [`RoundAggregator::merge`]. `DenseSum` frames carry
+    /// only the partial sum (no absorbed/loss bookkeeping), so they are
+    /// rejected here; the in-process engine merges dense shards
+    /// in-memory.
+    pub fn absorb_frame(&mut self, payload: Payload) -> Result<()> {
+        let Payload::TallyFrame(f) = payload else {
+            bail!("absorb_frame needs a TallyFrame merge payload");
+        };
+        let adopt = |tally: &mut VoteAccumulator, f: &TallyFrame| -> Result<()> {
+            ensure!(
+                f.quanta.len() == tally.m(),
+                "merge frame has {} tallies, aggregator expects {}",
+                f.quanta.len(),
+                tally.m()
+            );
+            tally.merge(VoteAccumulator::from_quanta(
+                f.quanta.clone(),
+                f.absorbed as usize,
+            ));
+            Ok(())
+        };
+        match &mut self.kind {
+            AggKind::Vote(t) | AggKind::SignSum(t) => {
+                ensure!(f.scalar == 0, "unexpected scalar tally in merge frame");
+                adopt(t, &f)?;
+            }
+            AggKind::ScaledVote { tally, scale } => {
+                adopt(tally, &f)?;
+                scale.merge(ScalarTally::from_quanta(f.scalar));
+            }
+            AggKind::SketchSum { tally, norm } => {
+                adopt(tally, &f)?;
+                norm.merge(ScalarTally::from_quanta(f.scalar));
+            }
+            AggKind::Passthrough | AggKind::DenseSum(_) => {
+                bail!("this aggregator kind does not accept tally merge frames")
+            }
+        }
+        self.loss_sum += f.loss_sum;
+        self.absorbed += f.absorbed as usize;
+        Ok(())
+    }
+
     /// Fold a sibling shard of the same round. Exact for the fixed-point
     /// tallies; `DenseSum` shards add in call order (callers that need
     /// bit-reproducibility merge in canonical order — DESIGN.md §9).
@@ -195,6 +271,7 @@ fn payload_name(p: &Payload) -> &'static str {
         Payload::Dense(_) => "Dense",
         Payload::Signs(_) => "Signs",
         Payload::ScaledSigns { .. } => "ScaledSigns",
+        Payload::TallyFrame(_) => "TallyFrame",
     }
 }
 
@@ -270,6 +347,77 @@ mod tests {
         assert_eq!(a.absorbed(), 2);
         let c = RoundAggregator::new(AggKind::Passthrough);
         assert!(a.merge(c).is_err());
+    }
+
+    #[test]
+    fn merge_frame_round_trip_is_bit_identical_to_in_memory_merge() {
+        use crate::comm::codec::{decode, encode};
+        use crate::sketch::bitpack::ScalarTally;
+        // an edge shard absorbs two scaled uplinks; the root folds the
+        // shard's DECODED wire frame and must land on exactly the state
+        // an in-memory merge produces
+        let mk = |c: usize, s: &[f32], scale: f32, loss: f64| ClientOutput {
+            client: c,
+            uplink: Some(Uplink::new(
+                0,
+                Payload::ScaledSigns { signs: SignVec::from_signs(s), scale },
+            )),
+            state: None,
+            stats: ClientStats { loss },
+        };
+        let fresh = || {
+            RoundAggregator::new(AggKind::ScaledVote {
+                tally: VoteAccumulator::new(3),
+                scale: ScalarTally::new(),
+            })
+        };
+        let mut shard = fresh();
+        shard.absorb(mk(0, &[1.0, -1.0, 1.0], 0.5, 2.0), 0.75).unwrap();
+        shard.absorb(mk(1, &[-1.0, -1.0, 1.0], 2.0, 4.0), 0.25).unwrap();
+
+        let frame = shard.merge_payload().expect("scaled vote ships a frame");
+        let delivered = decode(&encode(&frame)).unwrap();
+
+        let mut via_frame = fresh();
+        via_frame.absorb_frame(delivered).unwrap();
+        let mut via_merge = fresh();
+        via_merge.merge(shard).unwrap();
+
+        assert_eq!(via_frame.absorbed(), 2);
+        let (AggKind::ScaledVote { tally: ta, scale: sa }, _, 2, oa) =
+            via_frame.into_parts()
+        else {
+            panic!("kind changed")
+        };
+        let (AggKind::ScaledVote { tally: tb, scale: sb }, _, 2, ob) =
+            via_merge.into_parts()
+        else {
+            panic!("kind changed")
+        };
+        assert_eq!(ta.quanta(), tb.quanta(), "wire frame altered the tally");
+        assert_eq!(sa.quanta(), sb.quanta());
+        assert_eq!(oa.train_loss.to_bits(), ob.train_loss.to_bits());
+    }
+
+    #[test]
+    fn merge_frames_reject_mismatched_kinds_and_passthrough_is_silent() {
+        let pass = RoundAggregator::new(AggKind::Passthrough);
+        assert!(pass.merge_payload().is_none(), "nothing to report");
+        // dense shards ship raw sums, which absorb_frame cannot adopt
+        let dense = RoundAggregator::new(AggKind::DenseSum(vec![0.5, 1.5]));
+        let Some(Payload::Dense(sum)) = dense.merge_payload() else {
+            panic!("dense shard must ship its partial sum")
+        };
+        assert_eq!(sum, vec![0.5, 1.5]);
+        let mut root = RoundAggregator::new(AggKind::DenseSum(vec![0.0, 0.0]));
+        let vote_shard = RoundAggregator::new(AggKind::Vote(VoteAccumulator::new(2)));
+        let frame = vote_shard.merge_payload().unwrap();
+        assert!(root.absorb_frame(frame.clone()).is_err());
+        // length mismatch is an error, and the failed adopt leaves the
+        // receiving aggregator's bookkeeping untouched
+        let mut short = RoundAggregator::new(AggKind::Vote(VoteAccumulator::new(5)));
+        assert!(short.absorb_frame(frame).is_err());
+        assert_eq!(short.absorbed(), 0);
     }
 
     #[test]

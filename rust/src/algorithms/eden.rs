@@ -23,6 +23,8 @@ use crate::coordinator::parallel::thread_count;
 use crate::sketch::bitpack::{SignVec, VoteAccumulator};
 use crate::sketch::SrhtOperator;
 
+/// EDEN (Vargaftik et al.): unbiased one-bit DME over a shared
+/// random rotation — global model, rotated scaled-sign uplinks.
 pub struct Eden {
     w: Vec<f32>,
     /// shared rotation (built at init from the run seed)
@@ -30,6 +32,7 @@ pub struct Eden {
 }
 
 impl Eden {
+    /// Fresh instance; state is sized at `init`.
     pub fn new() -> Self {
         Eden { w: Vec::new(), rot: None }
     }

@@ -13,11 +13,14 @@ use crate::algorithms::{
 };
 use crate::comm::Payload;
 
+/// FedAvg (McMahan et al.): the uncompressed full-precision
+/// baseline every Table-2 cost reduction is measured against.
 pub struct FedAvg {
     w: Vec<f32>,
 }
 
 impl FedAvg {
+    /// Fresh instance; state is sized at `init`.
     pub fn new() -> Self {
         FedAvg { w: Vec::new() }
     }

@@ -21,11 +21,14 @@ use crate::algorithms::{
 use crate::comm::Payload;
 use crate::sketch::bitpack::{SignVec, VoteAccumulator};
 
+/// FedBAT-style stochastic binarization: clipped-probability sign
+/// uplinks around a learned scale — global model.
 pub struct FedBat {
     w: Vec<f32>,
 }
 
 impl FedBat {
+    /// Fresh instance; state is sized at `init`.
     pub fn new() -> Self {
         FedBat { w: Vec::new() }
     }

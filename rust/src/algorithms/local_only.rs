@@ -14,11 +14,14 @@ use crate::algorithms::{
     InitCtx, RoundAggregator, RoundOutcome, ServerCtx,
 };
 
+/// No-communication ablation: every client trains alone; uplinks are
+/// silent, so all accuracy comes from personalization.
 pub struct LocalOnly {
     wks: Vec<Vec<f32>>,
 }
 
 impl LocalOnly {
+    /// Fresh instance; state is sized at `init`.
     pub fn new() -> Self {
         LocalOnly { wks: Vec::new() }
     }

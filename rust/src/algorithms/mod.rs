@@ -62,17 +62,25 @@ use crate::util::rng::Rng;
 /// Table 1 capability matrix row.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Capabilities {
+    /// uplink is dimension-reduced (m < n)
     pub upload_dim_reduction: bool,
+    /// uplink is one bit per coordinate
     pub upload_one_bit: bool,
+    /// downlink is dimension-reduced
     pub download_dim_reduction: bool,
+    /// downlink is one bit per coordinate
     pub download_one_bit: bool,
+    /// keeps per-client personalized models
     pub personalization: bool,
 }
 
 /// One-time-setup context: everything visible once geometry is known.
 pub struct InitCtx<'a> {
+    /// compiled model runtime (geometry + HLO executables)
     pub model: &'a ModelRuntime,
+    /// the generated federated dataset
     pub data: &'a FederatedData,
+    /// the run configuration
     pub cfg: &'a RunConfig,
     /// rust-side mirror of Φ (baselines + the dense-Gaussian ablation)
     pub projection: &'a Projection,
@@ -83,10 +91,15 @@ pub struct InitCtx<'a> {
 /// order before the parallel section, so results are independent of
 /// thread count and scheduling).
 pub struct ClientCtx<'a> {
+    /// compiled model runtime (shared, `&self` execution)
     pub model: &'a ModelRuntime,
+    /// the generated federated dataset
     pub data: &'a FederatedData,
+    /// the run configuration
     pub cfg: &'a RunConfig,
+    /// rust-side mirror of Φ
     pub projection: &'a Projection,
+    /// this client's own pre-forked RNG stream
     pub rng: Rng,
 }
 
@@ -94,7 +107,9 @@ pub struct ClientCtx<'a> {
 /// runtime: server math is pure rust, which keeps the aggregation phase
 /// unit-testable without PJRT artifacts.
 pub struct ServerCtx<'a> {
+    /// the run configuration
     pub cfg: &'a RunConfig,
+    /// rust-side mirror of Φ (server-side reconstruction)
     pub projection: &'a Projection,
 }
 
@@ -120,6 +135,7 @@ pub struct ClientOutput {
     /// whose uplink was cut — their local model really advanced), never
     /// transmitted
     pub state: Option<Vec<f32>>,
+    /// per-client round statistics (loss)
     pub stats: ClientStats,
 }
 

@@ -21,6 +21,8 @@ use crate::coordinator::parallel::thread_count;
 use crate::sketch::bitpack::{ScalarTally, VoteAccumulator};
 use crate::util::stats::l2_norm;
 
+/// OBCS-AA (one-bit compressed sensing with adaptive aggregation):
+/// sketched one-bit uplinks, server-side reconstruction — global model.
 pub struct Obcsaa {
     w: Vec<f32>,
     /// sketch dimension m, fixed at init (sizes the per-round tally)
@@ -28,6 +30,7 @@ pub struct Obcsaa {
 }
 
 impl Obcsaa {
+    /// Fresh instance; state is sized at `init`.
     pub fn new() -> Self {
         Obcsaa { w: Vec::new(), m: 0 }
     }

@@ -23,6 +23,8 @@ use crate::algorithms::{
 use crate::comm::Payload;
 use crate::sketch::bitpack::{ScalarTally, SignVec, VoteAccumulator};
 
+/// OBDA (one-bit digital aggregation): majority-vote signSGD with a
+/// per-client scale and a one-bit vote downlink — global model.
 pub struct Obda {
     w: Vec<f32>,
     /// last round's (packed vote, scale), broadcast via `server_notify`
@@ -31,6 +33,7 @@ pub struct Obda {
 }
 
 impl Obda {
+    /// Fresh instance; state is sized at `init`.
     pub fn new() -> Self {
         Obda { w: Vec::new(), last_vote: None }
     }

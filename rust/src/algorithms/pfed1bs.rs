@@ -43,6 +43,8 @@ use crate::data::BatchIter;
 use crate::sketch::bitpack::{SignVec, VoteAccumulator};
 use crate::sketch::Projection;
 
+/// The paper's Algorithm 1: personalized models with one-bit,
+/// dimension-reduced traffic in BOTH directions (see module docs).
 pub struct PFed1BS {
     /// personalized models w_k, all K clients
     wks: Vec<Vec<f32>>,
@@ -59,6 +61,7 @@ pub struct PFed1BS {
 }
 
 impl PFed1BS {
+    /// Fresh instance; state is sized at `init`.
     pub fn new() -> Self {
         PFed1BS {
             wks: Vec::new(),

@@ -21,11 +21,14 @@ use crate::algorithms::{
 use crate::comm::Payload;
 use crate::sketch::bitpack::{SignVec, VoteAccumulator};
 
+/// zSignFed: perturbed-sign aggregation — stochastic sign uplinks
+/// around a noise scale, server averages the signs — global model.
 pub struct ZSignFed {
     w: Vec<f32>,
 }
 
 impl ZSignFed {
+    /// Fresh instance; state is sized at `init`.
     pub fn new() -> Self {
         ZSignFed { w: Vec::new() }
     }

@@ -18,17 +18,24 @@ use crate::util::stats::{mad, mean, percentile};
 /// One benchmark's timing summary (nanoseconds).
 #[derive(Clone, Debug)]
 pub struct Measurement {
+    /// row name as printed in the table
     pub name: String,
+    /// samples collected in the measurement window
     pub iters: usize,
+    /// mean per-iteration time, ns
     pub mean_ns: f64,
+    /// median per-iteration time, ns
     pub p50_ns: f64,
+    /// 99th-percentile per-iteration time, ns
     pub p99_ns: f64,
+    /// median absolute deviation, ns (robust spread)
     pub mad_ns: f64,
     /// optional throughput denominator (elements per iteration)
     pub elements: Option<u64>,
 }
 
 impl Measurement {
+    /// Throughput in mega-elements per second, when `elements` is set.
     pub fn throughput_melem_s(&self) -> Option<f64> {
         self.elements
             .map(|e| e as f64 / (self.mean_ns / 1e9) / 1e6)
@@ -37,14 +44,19 @@ impl Measurement {
 
 /// Config + accumulated measurements for one bench binary.
 pub struct Bench {
+    /// suite name printed in the report header
     pub suite: String,
+    /// how long to spin before measuring
     pub warmup: Duration,
+    /// measurement window per row
     pub measure: Duration,
+    /// hard cap on samples per row
     pub max_iters: usize,
     results: Vec<Measurement>,
 }
 
 impl Bench {
+    /// New suite; honors `PFED1BS_BENCH_QUICK=1` (CI smoke mode).
     pub fn new(suite: &str) -> Bench {
         // honor a quick mode for CI-ish runs: PFED1BS_BENCH_QUICK=1
         let quick = std::env::var("PFED1BS_BENCH_QUICK").is_ok();
@@ -99,6 +111,7 @@ impl Bench {
         self.results.last().unwrap()
     }
 
+    /// Every measurement collected so far, in bench order.
     pub fn results(&self) -> &[Measurement] {
         &self.results
     }

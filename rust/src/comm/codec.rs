@@ -16,6 +16,34 @@ use anyhow::{bail, Result};
 
 use crate::sketch::bitpack::{packed_bytes, SignVec};
 
+/// An edge aggregator's merge frame: the exact fixed-point tally shard
+/// it streamed its clients' uplinks into, shipped edge → root once per
+/// round (DESIGN.md §11). O(m) regardless of how many clients the edge
+/// absorbed — the hierarchical server never forwards raw uplinks.
+///
+/// The quanta are the 64.64 fixed-point integers of
+/// [`VoteAccumulator`]/[`ScalarTally`] (DESIGN.md §9), so a root that
+/// merges decoded frames in canonical edge order reproduces the flat
+/// server's tally bit-for-bit. `absorbed`/`loss_sum` carry the shard's
+/// round bookkeeping; personalized write-backs are simulation
+/// bookkeeping and never travel in frames.
+///
+/// [`VoteAccumulator`]: crate::sketch::bitpack::VoteAccumulator
+/// [`ScalarTally`]: crate::sketch::bitpack::ScalarTally
+#[derive(Clone, Debug, PartialEq)]
+pub struct TallyFrame {
+    /// uplinks this shard absorbed (delivered only — cut stragglers and
+    /// dropouts never count)
+    pub absorbed: u32,
+    /// Σ of the shard's delivered round-start losses (f64 bits)
+    pub loss_sum: f64,
+    /// companion scalar tally quanta (OBDA's step scale, OBCSAA's norm
+    /// target); 0 for kinds without one
+    pub scalar: i128,
+    /// per-bit tally quanta, length m
+    pub quanta: Vec<i128>,
+}
+
 /// A decoded payload.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Payload {
@@ -26,17 +54,23 @@ pub enum Payload {
     Signs(SignVec),
     /// packed sign vector with one f32 scale (EDEN/FedBAT: α·sign(x))
     ScaledSigns { signs: SignVec, scale: f32 },
+    /// edge → root merge frame of the hierarchical topology
+    /// (DESIGN.md §11)
+    TallyFrame(TallyFrame),
 }
 
 impl Payload {
+    /// Logical element count (lanes, bits, or tally quanta).
     pub fn len(&self) -> usize {
         match self {
             Payload::Dense(v) => v.len(),
             Payload::Signs(z) => z.m(),
             Payload::ScaledSigns { signs, .. } => signs.m(),
+            Payload::TallyFrame(f) => f.quanta.len(),
         }
     }
 
+    /// True when the payload carries zero elements.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -45,6 +79,7 @@ impl Payload {
 const TAG_DENSE: u8 = 1;
 const TAG_SIGNS: u8 = 2;
 const TAG_SCALED: u8 = 3;
+const TAG_TALLY: u8 = 4;
 
 fn put_words(out: &mut Vec<u8>, z: &SignVec) {
     for w in z.words() {
@@ -87,6 +122,22 @@ pub fn encode(p: &Payload) -> Vec<u8> {
             put_words(&mut out, signs);
             out
         }
+        Payload::TallyFrame(f) => {
+            // tag | m u32 | absorbed u32 | loss_sum f64 bits | scalar
+            // i128 | quanta i128 × m — all little-endian. i128 LE bytes
+            // round-trip exactly, so the frame carries the shard's
+            // fixed-point state without any precision cliff.
+            let mut out = Vec::with_capacity(33 + 16 * f.quanta.len());
+            out.push(TAG_TALLY);
+            out.extend_from_slice(&(f.quanta.len() as u32).to_le_bytes());
+            out.extend_from_slice(&f.absorbed.to_le_bytes());
+            out.extend_from_slice(&f.loss_sum.to_le_bytes());
+            out.extend_from_slice(&f.scalar.to_le_bytes());
+            for q in &f.quanta {
+                out.extend_from_slice(&q.to_le_bytes());
+            }
+            out
+        }
     }
 }
 
@@ -127,6 +178,20 @@ pub fn decode(bytes: &[u8]) -> Result<Payload> {
             let scale = f32::from_le_bytes(bytes[5..9].try_into().unwrap());
             Ok(Payload::ScaledSigns { signs: get_words(&bytes[9..], len), scale })
         }
+        TAG_TALLY => {
+            let need = 33 + 16 * len;
+            if bytes.len() != need {
+                bail!("tally frame: expected {need} bytes, got {}", bytes.len());
+            }
+            let absorbed = u32::from_le_bytes(bytes[5..9].try_into().unwrap());
+            let loss_sum = f64::from_le_bytes(bytes[9..17].try_into().unwrap());
+            let scalar = i128::from_le_bytes(bytes[17..33].try_into().unwrap());
+            let quanta = bytes[33..]
+                .chunks_exact(16)
+                .map(|c| i128::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            Ok(Payload::TallyFrame(TallyFrame { absorbed, loss_sum, scalar, quanta }))
+        }
         t => bail!("unknown payload tag {t}"),
     }
 }
@@ -137,6 +202,7 @@ pub fn frame_bytes(p: &Payload) -> usize {
         Payload::Dense(v) => 5 + 4 * v.len(),
         Payload::Signs(z) => 5 + packed_bytes(z.m()),
         Payload::ScaledSigns { signs, .. } => 9 + packed_bytes(signs.m()),
+        Payload::TallyFrame(f) => 33 + 16 * f.quanta.len(),
     }
 }
 
@@ -199,6 +265,38 @@ mod tests {
         assert_eq!(decode(&encode(&p)).unwrap(), p);
     }
 
+    fn rand_tally(rng: &mut Rng, m: usize) -> TallyFrame {
+        let wide = |rng: &mut Rng| {
+            // exercise both i128 halves, signs included (build in u128
+            // to keep the shift overflow-free, then reinterpret)
+            ((rng.next_u64() as u128) << 64 | rng.next_u64() as u128) as i128
+        };
+        TallyFrame {
+            absorbed: rng.next_u32(),
+            loss_sum: rng.f64() * 10.0,
+            scalar: wide(rng),
+            quanta: (0..m).map(|_| wide(rng)).collect(),
+        }
+    }
+
+    #[test]
+    fn tally_frame_round_trip_is_exact() {
+        // the edge→root merge frame must carry the fixed-point shard
+        // state bit-for-bit: i128 quanta, f64 loss bits, counts
+        check("codec_tally_round_trip", 40, |rng| {
+            let m = rng.below(300);
+            let p = Payload::TallyFrame(rand_tally(rng, m));
+            let bytes = encode(&p);
+            if bytes.len() != frame_bytes(&p) {
+                return Err("frame_bytes mismatch".into());
+            }
+            if decode(&bytes).map_err(|e| e.to_string())? != p {
+                return Err("tally frame round trip".into());
+            }
+            Ok(())
+        });
+    }
+
     #[test]
     fn packed_and_lane_constructions_encode_identically() {
         // the SignVec refactor must not move a single wire byte: packing
@@ -235,7 +333,7 @@ mod tests {
     /// from the encoder under test — they are written out by hand.
     #[test]
     fn golden_wire_frames() {
-        let cases: [(Payload, &str); 5] = [
+        let cases: [(Payload, &str); 7] = [
             // tag 1 (dense), [1.0, -2.5]:
             // 01 | len=2 le | 1.0 = 0x3f800000 le | -2.5 = 0xc0200000 le
             (Payload::Dense(vec![1.0, -2.5]), "01020000000000803f000020c0"),
@@ -267,6 +365,33 @@ mod tests {
                     scale: 0.5,
                 },
                 "03410000000000003faaaaaaaaaaaaaaaa0000000000000000",
+            ),
+            // tag 4 (tally frame), m=2, absorbed=2, loss_sum=0.5,
+            // scalar=+3, quanta [+1, −2]:
+            // 04 | m=2 le | absorbed=2 le | 0.5 = 0x3fe0…0 f64 le |
+            // 3 as i128 le | 1 as i128 le | −2 = 0xff…fe as i128 le
+            (
+                Payload::TallyFrame(TallyFrame {
+                    absorbed: 2,
+                    loss_sum: 0.5,
+                    scalar: 3,
+                    quanta: vec![1, -2],
+                }),
+                "040200000002000000000000000000e03f\
+                 03000000000000000000000000000000\
+                 01000000000000000000000000000000\
+                 feffffffffffffffffffffffffffffff",
+            ),
+            // tag 4, scalar-only shard (m=0, nothing absorbed, −1 scalar)
+            (
+                Payload::TallyFrame(TallyFrame {
+                    absorbed: 0,
+                    loss_sum: 0.0,
+                    scalar: -1,
+                    quanta: vec![],
+                }),
+                "0400000000000000000000000000000000\
+                 ffffffffffffffffffffffffffffffff",
             ),
         ];
         for (p, want) in &cases {
@@ -321,10 +446,11 @@ mod tests {
         check("codec_fuzz_mutations", 150, |rng| {
             // a random valid frame of a random kind
             let n = rng.below(200) + 1;
-            let p = match rng.below(3) {
+            let p = match rng.below(4) {
                 0 => Payload::Dense((0..n).map(|_| rng.normal()).collect()),
                 1 => Payload::Signs(rand_signs(rng, n)),
-                _ => Payload::ScaledSigns { signs: rand_signs(rng, n), scale: rng.f32() },
+                2 => Payload::ScaledSigns { signs: rand_signs(rng, n), scale: rng.f32() },
+                _ => Payload::TallyFrame(rand_tally(rng, n)),
             };
             let frame = encode(&p);
 

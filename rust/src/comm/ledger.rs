@@ -4,28 +4,51 @@
 //! DESIGN.md §5 against the paper's own reduction percentages): uplink is
 //! counted per participating client, downlink is counted per participating
 //! client too (the broadcast is delivered S times).
+//!
+//! Under the hierarchical topology (DESIGN.md §11) the ledger additionally
+//! meters the edge tier — `edge_up` (edge → root merge frames) and
+//! `edge_down` (root → edge broadcast fan-out) — kept in separate columns
+//! so the client-tier numbers stay directly comparable to the flat server
+//! (they are byte-identical by construction). Both fields stay zero under
+//! the default `flat` topology.
 
-/// Direction of a message.
+/// Direction of a message, relative to the aggregation root.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Direction {
+    /// toward the server/root (client → edge, or edge → root)
     Uplink,
+    /// away from the server/root (root → edge, or edge/server → client)
     Downlink,
 }
 
 /// Byte counters for one communication round.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct RoundBytes {
+    /// client-tier uplink bytes (client → server, or client → edge)
     pub uplink: u64,
+    /// client-tier downlink bytes (server/edge → client)
     pub downlink: u64,
+    /// client-tier uplink message count
     pub uplink_msgs: u32,
+    /// client-tier downlink message count
     pub downlink_msgs: u32,
+    /// edge-tier uplink bytes: edge → root merge frames (DESIGN.md §11)
+    pub edge_up: u64,
+    /// edge-tier downlink bytes: root → edge broadcast fan-out
+    pub edge_down: u64,
+    /// edge → root merge-frame count (the CSV's `edge_merges` column)
+    pub edge_up_msgs: u32,
+    /// root → edge fan-out message count
+    pub edge_down_msgs: u32,
 }
 
 impl RoundBytes {
+    /// All bytes this round, both tiers.
     pub fn total(&self) -> u64 {
-        self.uplink + self.downlink
+        self.uplink + self.downlink + self.edge_up + self.edge_down
     }
 
+    /// [`RoundBytes::total`] in MiB (the Table 2 unit).
     pub fn total_mb(&self) -> f64 {
         self.total() as f64 / (1024.0 * 1024.0)
     }
@@ -38,6 +61,10 @@ impl RoundBytes {
         self.downlink += other.downlink;
         self.uplink_msgs += other.uplink_msgs;
         self.downlink_msgs += other.downlink_msgs;
+        self.edge_up += other.edge_up;
+        self.edge_down += other.edge_down;
+        self.edge_up_msgs += other.edge_up_msgs;
+        self.edge_down_msgs += other.edge_down_msgs;
     }
 }
 
@@ -49,11 +76,13 @@ pub struct Ledger {
 }
 
 impl Ledger {
+    /// Empty ledger with one open round.
     pub fn new() -> Self {
         Ledger::default()
     }
 
-    /// Record one message of `bytes` in `dir` within the current round.
+    /// Record one client-tier message of `bytes` in `dir` within the
+    /// current round.
     pub fn record(&mut self, dir: Direction, bytes: usize) {
         match dir {
             Direction::Uplink => {
@@ -63,6 +92,21 @@ impl Ledger {
             Direction::Downlink => {
                 self.current.downlink += bytes as u64;
                 self.current.downlink_msgs += 1;
+            }
+        }
+    }
+
+    /// Record one edge-tier message (edge ↔ root — DESIGN.md §11) of
+    /// `bytes` in `dir` within the current round.
+    pub fn record_edge(&mut self, dir: Direction, bytes: usize) {
+        match dir {
+            Direction::Uplink => {
+                self.current.edge_up += bytes as u64;
+                self.current.edge_up_msgs += 1;
+            }
+            Direction::Downlink => {
+                self.current.edge_down += bytes as u64;
+                self.current.edge_down_msgs += 1;
             }
         }
     }
@@ -80,10 +124,12 @@ impl Ledger {
         done
     }
 
+    /// Closed rounds, oldest first.
     pub fn rounds(&self) -> &[RoundBytes] {
         &self.rounds
     }
 
+    /// Total bytes across closed rounds plus the open one, both tiers.
     pub fn total_bytes(&self) -> u64 {
         self.rounds.iter().map(|r| r.total()).sum::<u64>() + self.current.total()
     }
@@ -151,6 +197,26 @@ mod tests {
         l.end_round();
         l.record(Direction::Uplink, 5);
         assert_eq!(l.total_bytes(), 15);
+    }
+
+    #[test]
+    fn edge_tier_meters_separately_and_sums_into_totals() {
+        let mut l = Ledger::new();
+        l.record(Direction::Uplink, 100);
+        l.record_edge(Direction::Uplink, 40); // edge → root merge frame
+        l.record_edge(Direction::Downlink, 7); // root → edge fan-out
+        let r = l.end_round();
+        assert_eq!((r.uplink, r.downlink), (100, 0));
+        assert_eq!((r.edge_up, r.edge_down), (40, 7));
+        assert_eq!((r.edge_up_msgs, r.edge_down_msgs), (1, 1));
+        assert_eq!(r.total(), 147, "edge tier must count toward the round total");
+        // flat rounds leave the edge columns at zero
+        let flat = Ledger::new().end_round();
+        assert_eq!((flat.edge_up, flat.edge_down), (0, 0));
+        // absorb folds both tiers
+        let mut a = r;
+        a.absorb(r);
+        assert_eq!((a.edge_up, a.edge_up_msgs), (80, 2));
     }
 
     #[test]

@@ -9,7 +9,7 @@ pub mod ledger;
 pub mod network;
 pub mod protocol;
 
-pub use codec::{decode, encode, frame_bytes, Payload};
+pub use codec::{decode, encode, frame_bytes, Payload, TallyFrame};
 pub use ledger::{Direction, Ledger, RoundBytes};
 pub use network::{Channel, LatencyModel, SimNetwork};
 pub use protocol::{Downlink, Uplink};

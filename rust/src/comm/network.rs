@@ -8,7 +8,8 @@
 //! of the paper's motivating setting) every recipient of a broadcast
 //! receives an *independently* corrupted copy, and the sender's own
 //! state is never touched. Corruption operates directly on the packed
-//! [`SignVec`] words via masked XOR (one RNG draw per live bit, in bit
+//! [`SignVec`](crate::sketch::bitpack::SignVec) words via masked XOR
+//! (one RNG draw per live bit, in bit
 //! order, so the noise stream is identical to a ±1-lane walk); padding
 //! bits beyond m are never flipped. Per-round byte accounting merges
 //! the per-client shards into the [`Ledger`]; integer sums commute, so
@@ -185,14 +186,18 @@ impl Channel {
         match payload {
             Payload::Signs(z) => z.flip_bits_where(|_| rng.f64() < p),
             Payload::ScaledSigns { signs, .. } => signs.flip_bits_where(|_| rng.f64() < p),
-            Payload::Dense(_) => {} // full-precision links modeled clean
+            // full-precision client links and the edge↔root datacenter
+            // tier are modeled clean
+            Payload::Dense(_) | Payload::TallyFrame(_) => {}
         }
     }
 }
 
 /// In-process simulated network: per-client channels with exact byte
-/// metering, merged into one ledger at round end.
+/// metering, merged into one ledger at round end, plus a clean metered
+/// edge↔root tier for the hierarchical topology (DESIGN.md §11).
 pub struct SimNetwork {
+    /// the run's byte ledger (rounds closed by [`SimNetwork::end_round`])
     pub ledger: Ledger,
     /// probability that each bit of a one-bit payload flips in transit
     pub bit_flip_prob: f64,
@@ -201,6 +206,7 @@ pub struct SimNetwork {
 }
 
 impl SimNetwork {
+    /// Fresh network; per-client channel streams derive from `seed`.
     pub fn new(seed: u64) -> Self {
         SimNetwork {
             ledger: Ledger::new(),
@@ -210,6 +216,7 @@ impl SimNetwork {
         }
     }
 
+    /// Builder: enable bit-flip noise on one-bit client links.
     pub fn with_bit_flips(mut self, p: f64) -> Self {
         self.bit_flip_prob = p;
         self
@@ -237,6 +244,25 @@ impl SimNetwork {
     pub fn uplink_from(&mut self, k: usize, payload: &Payload) -> Result<Payload> {
         let p = self.bit_flip_prob;
         self.channel(k).transmit(Direction::Uplink, payload, p)
+    }
+
+    /// Edge aggregator `_edge` -> root: one merge frame per round
+    /// (DESIGN.md §11). The edge↔root tier models datacenter links —
+    /// metered exactly (real encoded frames, like every other tier) but
+    /// clean and instant; metering lands in the ledger's `edge_up`
+    /// columns, never in the client-tier counters.
+    pub fn edge_uplink(&mut self, _edge: usize, payload: &Payload) -> Result<Payload> {
+        let frame = encode(payload);
+        self.ledger.record_edge(Direction::Uplink, frame.len());
+        decode(&frame)
+    }
+
+    /// Root -> edge aggregator `_edge`: the broadcast fan-out hop of the
+    /// hierarchical downlink (root → edge → client — DESIGN.md §11).
+    pub fn edge_downlink(&mut self, _edge: usize, payload: &Payload) -> Result<Payload> {
+        let frame = encode(payload);
+        self.ledger.record_edge(Direction::Downlink, frame.len());
+        decode(&frame)
     }
 
     /// Merge every channel's shard and close the round; returns the
@@ -320,6 +346,32 @@ mod tests {
         assert_eq!(r.downlink_msgs, 1);
         // shards reset after the merge
         assert_eq!(net.channel(0).shard(), RoundBytes::default());
+    }
+
+    #[test]
+    fn edge_tier_is_clean_metered_and_separate_from_client_tier() {
+        use crate::comm::codec::{frame_bytes, TallyFrame};
+        // even under heavy client-link noise the edge↔root tier delivers
+        // frames verbatim and meters into its own columns
+        let mut net = SimNetwork::new(9).with_bit_flips(0.5);
+        let frame = Payload::TallyFrame(TallyFrame {
+            absorbed: 3,
+            loss_sum: 1.25,
+            scalar: -7,
+            quanta: vec![i128::MAX, i128::MIN, 0, 42],
+        });
+        let got = net.edge_uplink(0, &frame).unwrap();
+        assert_eq!(got, frame, "edge links must be lossless");
+        let down = ones(64);
+        net.edge_downlink(1, &down).unwrap();
+        net.uplink_from(0, &ones(64)).unwrap(); // client tier, for contrast
+        let r = net.end_round();
+        assert_eq!(r.edge_up, frame_bytes(&frame) as u64);
+        assert_eq!(r.edge_down, 13);
+        assert_eq!((r.edge_up_msgs, r.edge_down_msgs), (1, 1));
+        assert_eq!(r.uplink_msgs, 1, "client tier must not see edge traffic");
+        assert_eq!(r.uplink, 13);
+        assert_eq!(r.downlink_msgs, 0);
     }
 
     #[test]

@@ -16,10 +16,12 @@ use crate::comm::codec::Payload;
 pub struct Downlink {
     /// round t this broadcast belongs to
     pub round: usize,
+    /// the broadcast content
     pub payload: Payload,
 }
 
 impl Downlink {
+    /// Wrap a payload as round `round`'s server broadcast.
     pub fn new(round: usize, payload: Payload) -> Downlink {
         Downlink { round, payload }
     }
@@ -32,10 +34,12 @@ impl Downlink {
 pub struct Uplink {
     /// round t this upload belongs to
     pub round: usize,
+    /// the upload content
     pub payload: Payload,
 }
 
 impl Uplink {
+    /// Wrap a payload as a client's round-`round` upload.
     pub fn new(round: usize, payload: Payload) -> Uplink {
         Uplink { round, payload }
     }

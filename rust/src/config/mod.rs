@@ -14,11 +14,14 @@ use crate::util::cli::Args;
 /// Which projection realizes Φ (Appendix Fig. 3 ablation).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ProjectionKind {
+    /// structured SRHT (the paper's FHT-based operator)
     Fht,
+    /// dense Gaussian matrix (the O(mn) baseline the FHT replaces)
     DenseGaussian,
 }
 
 impl ProjectionKind {
+    /// Parse a config value: `fht | dense` (and common synonyms).
     pub fn parse(s: &str) -> Result<Self> {
         Ok(match s.to_ascii_lowercase().as_str() {
             "fht" | "srht" => ProjectionKind::Fht,
@@ -27,6 +30,7 @@ impl ProjectionKind {
         })
     }
 
+    /// Canonical config-key spelling (inverse of [`ProjectionKind::parse`]).
     pub fn as_str(&self) -> &'static str {
         match self {
             ProjectionKind::Fht => "fht",
@@ -35,10 +39,102 @@ impl ProjectionKind {
     }
 }
 
+/// Server aggregation topology (DESIGN.md §11).
+///
+/// `Flat` is the paper's single aggregator. `Edge { edges: E }` places E
+/// edge aggregators between the clients and the root: each edge streams
+/// its assigned clients' uplinks into its own O(m) aggregator shard in
+/// arrival order, ships one compact merge frame
+/// ([`Payload::TallyFrame`]) to the root, and the root merges the shards
+/// in canonical edge order (0, 1, …, E−1). For every exact aggregation
+/// kind (the fixed-point one-bit tallies) the merged result is
+/// bit-identical to the flat server — the shard-parallel license of
+/// DESIGN.md §9, cashed in.
+///
+/// The client→edge assignment is *derived*, never persisted: client `k`
+/// reports to edge `k mod E` (stable across rounds, checkpoint-free).
+///
+/// [`Payload::TallyFrame`]: crate::comm::Payload::TallyFrame
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Topology {
+    /// single server aggregator — today's engine, byte-for-byte
+    #[default]
+    Flat,
+    /// client → edge → root hierarchy with this many edge aggregators
+    Edge {
+        /// number of edge aggregators E (≥ 1)
+        edges: usize,
+    },
+}
+
+impl Topology {
+    /// Parse a config value: `flat | edge:E`.
+    pub fn parse(s: &str) -> Result<Topology> {
+        let topo = match s.to_ascii_lowercase().as_str() {
+            "flat" => Topology::Flat,
+            other => match other.strip_prefix("edge:") {
+                Some(e) => Topology::Edge {
+                    edges: e
+                        .parse()
+                        .map_err(|err| anyhow::anyhow!("topology `{s}`: bad edge count: {err}"))?,
+                },
+                None => bail!("unknown topology `{s}` (flat|edge:E)"),
+            },
+        };
+        topo.validate()?;
+        Ok(topo)
+    }
+
+    /// Reject degenerate shapes (an `edge:0` hierarchy has nowhere to
+    /// route uplinks).
+    pub fn validate(&self) -> Result<()> {
+        if let Topology::Edge { edges } = self {
+            if *edges == 0 {
+                bail!("topology edge:0 — need at least one edge aggregator");
+            }
+        }
+        Ok(())
+    }
+
+    /// One-line form for run summaries (inverse of [`Topology::parse`]).
+    pub fn summary(&self) -> String {
+        match self {
+            Topology::Flat => "flat".to_string(),
+            Topology::Edge { edges } => format!("edge:{edges}"),
+        }
+    }
+
+    /// Number of edge aggregators: 0 under `flat` (no edge tier), E
+    /// under `edge:E` — the metrics CSV's `edges` column.
+    pub fn edges(&self) -> usize {
+        match self {
+            Topology::Flat => 0,
+            Topology::Edge { edges } => *edges,
+        }
+    }
+
+    /// How many aggregator shards the round engine folds into: 1 under
+    /// `flat`, E under `edge:E`.
+    pub fn shards(&self) -> usize {
+        self.edges().max(1)
+    }
+
+    /// The derived client→edge assignment: client `k` reports to edge
+    /// `k mod E` (always 0 under `flat`). Derived, never persisted.
+    pub fn edge_of(&self, client: usize) -> usize {
+        match self {
+            Topology::Flat => 0,
+            Topology::Edge { edges } => client % edges,
+        }
+    }
+}
+
 /// Full configuration of one federated training run.
 #[derive(Clone, Debug)]
 pub struct RunConfig {
+    /// which (synthetic) dataset the run trains on
     pub dataset: DatasetName,
+    /// algorithm name, resolved by `algorithms::build`
     pub algorithm: String,
     /// K — total clients
     pub clients: usize,
@@ -62,8 +158,11 @@ pub struct RunConfig {
     pub shards_per_client: usize,
     /// Dirichlet alpha; used when `partition == "dirichlet"`
     pub dirichlet_alpha: f64,
+    /// partition scheme: `label-shards | dirichlet | iid`
     pub partition: String,
+    /// which projection realizes Φ (Appendix Fig. 3 ablation)
     pub projection: ProjectionKind,
+    /// the run seed every RNG stream derives from
     pub seed: u64,
     /// evaluate every this many rounds (and always at the last round)
     pub eval_every: usize,
@@ -88,7 +187,18 @@ pub struct RunConfig {
     /// per-client uplink service-time distribution (`zero`, `fixed:MS`,
     /// `uniform:LO:HI`, `lognormal:MEDIAN:SIGMA`)
     pub latency: LatencyModel,
+    /// server aggregation topology: `flat` (single aggregator, the
+    /// default) or `edge:E` (E edge aggregators between clients and the
+    /// root — DESIGN.md §11)
+    pub topology: Topology,
+    /// probability that a whole edge aggregator misses the round
+    /// deadline (its accepted uplinks are demoted to cut stragglers and
+    /// the delivered-set weights renormalize over the surviving edges —
+    /// DESIGN.md §11). Requires `topology = edge:E`; 0 = never.
+    pub edge_dropout_prob: f64,
+    /// directory holding the AOT HLO artifacts (`make artifacts`)
     pub artifacts_dir: String,
+    /// directory experiment CSVs/tables are written to
     pub results_dir: String,
 }
 
@@ -131,6 +241,8 @@ impl RunConfig {
             deadline_ms: 0.0,
             dropout_prob: 0.0,
             latency: LatencyModel::Zero,
+            topology: Topology::Flat,
+            edge_dropout_prob: 0.0,
             artifacts_dir: "artifacts".to_string(),
             results_dir: "results".to_string(),
         }
@@ -196,6 +308,8 @@ impl RunConfig {
             "deadline-ms" | "deadline_ms" => self.deadline_ms = num!(),
             "dropout-prob" | "dropout_prob" => self.dropout_prob = num!(),
             "latency" => self.latency = LatencyModel::parse(val)?,
+            "topology" => self.topology = Topology::parse(val)?,
+            "edge-dropout-prob" | "edge_dropout_prob" => self.edge_dropout_prob = num!(),
             "artifacts-dir" | "artifacts_dir" => self.artifacts_dir = val.to_string(),
             "results-dir" | "results_dir" => self.results_dir = val.to_string(),
             other => bail!("unknown config key `{other}`"),
@@ -203,6 +317,8 @@ impl RunConfig {
         Ok(())
     }
 
+    /// Reject configurations the round loop cannot run (degenerate
+    /// sizes, unknown partitions, inconsistent scenario knobs).
     pub fn validate(&self) -> Result<()> {
         if self.clients == 0 {
             bail!("clients must be > 0");
@@ -248,9 +364,20 @@ impl RunConfig {
             crate::debug!("deadline-ms set with zero latency: no straggler can exist");
         }
         self.latency.validate()?;
+        self.topology.validate()?;
+        if !(0.0..1.0).contains(&self.edge_dropout_prob) {
+            bail!(
+                "edge-dropout-prob must be in [0, 1) (got {})",
+                self.edge_dropout_prob
+            );
+        }
+        if self.edge_dropout_prob > 0.0 && self.topology == Topology::Flat {
+            bail!("edge-dropout-prob needs topology=edge:E (flat has no edge tier)");
+        }
         Ok(())
     }
 
+    /// Materialize the configured partition scheme.
     pub fn make_partition(&self) -> Partition {
         match self.partition.as_str() {
             "dirichlet" => Partition::Dirichlet {
@@ -283,6 +410,9 @@ impl RunConfig {
             self.projection.as_str(),
             self.seed
         );
+        if self.topology != Topology::Flat {
+            s.push_str(&format!(" topology={}", self.topology.summary()));
+        }
         if self.has_scenario() {
             s.push_str(&format!(
                 " over={} deadline={}ms dropout={} latency={}",
@@ -291,6 +421,9 @@ impl RunConfig {
                 self.dropout_prob,
                 self.latency.summary()
             ));
+            if self.edge_dropout_prob > 0.0 {
+                s.push_str(&format!(" edge-dropout={}", self.edge_dropout_prob));
+            }
         }
         s
     }
@@ -301,6 +434,7 @@ impl RunConfig {
             || self.deadline_ms > 0.0
             || self.dropout_prob > 0.0
             || self.latency != LatencyModel::Zero
+            || self.edge_dropout_prob > 0.0
     }
 }
 
@@ -394,6 +528,47 @@ mod tests {
         c.deadline_ms = 0.0;
         c.validate().unwrap();
         assert!(c.apply_pairs([("latency", "bogus")].into_iter()).is_err());
+    }
+
+    #[test]
+    fn topology_parses_validates_and_summarizes() {
+        assert_eq!(Topology::parse("flat").unwrap(), Topology::Flat);
+        assert_eq!(
+            Topology::parse("edge:4").unwrap(),
+            Topology::Edge { edges: 4 }
+        );
+        for bad in ["edge:0", "edge:", "edge:x", "mesh", "edge:-1"] {
+            assert!(Topology::parse(bad).is_err(), "{bad} should be rejected");
+        }
+        for s in ["flat", "edge:1", "edge:16"] {
+            assert_eq!(Topology::parse(s).unwrap().summary(), s);
+        }
+        // derived assignment and shard counts
+        let t = Topology::Edge { edges: 3 };
+        assert_eq!((t.edges(), t.shards()), (3, 3));
+        assert_eq!((t.edge_of(0), t.edge_of(4), t.edge_of(5)), (0, 1, 2));
+        assert_eq!((Topology::Flat.edges(), Topology::Flat.shards()), (0, 1));
+        assert_eq!(Topology::Flat.edge_of(17), 0);
+
+        let mut c = RunConfig::preset(DatasetName::Mnist);
+        c.apply_pairs([("topology", "edge:4")].into_iter()).unwrap();
+        assert_eq!(c.topology, Topology::Edge { edges: 4 });
+        c.validate().unwrap();
+        assert!(c.summary().contains("topology=edge:4"), "{}", c.summary());
+        // edge topology alone is NOT a lifecycle scenario: default knobs
+        // must still reduce to the barrier round plan
+        assert!(!c.has_scenario());
+
+        // edge-dropout needs the edge tier and a sane probability
+        c.edge_dropout_prob = 0.25;
+        c.validate().unwrap();
+        assert!(c.has_scenario());
+        assert!(c.summary().contains("edge-dropout=0.25"), "{}", c.summary());
+        c.edge_dropout_prob = 1.0;
+        assert!(c.validate().is_err());
+        c.edge_dropout_prob = 0.25;
+        c.topology = Topology::Flat;
+        assert!(c.validate().is_err(), "edge-dropout under flat must be rejected");
     }
 
     #[test]

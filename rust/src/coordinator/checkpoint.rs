@@ -5,17 +5,26 @@
 //! personalized model, and the RNG-relevant seed, in a self-describing
 //! little-endian binary format (no serde in the offline mirror).
 //!
-//! Layout (all little-endian):
+//! Layout v2 (all little-endian):
 //!   magic  b"PF1B"            4 B
-//!   version u32               4 B
+//!   version u32               4 B      (2; v1 files remain readable)
 //!   round   u64               8 B
 //!   seed    u64               8 B
+//!   edges   u32               4 B      (topology-era metadata, v2+:
+//!                                       edge count at save time, 0 =
+//!                                       flat; informational — the
+//!                                       client→edge assignment is
+//!                                       derived, never persisted, so
+//!                                       resume is topology-free)
 //!   m       u32               4 B      (consensus length; 0 = none)
 //!   v       f32 × m
 //!   k       u32               4 B      (number of client models)
 //!   n       u32               4 B      (params per model; uniform)
 //!   w_k     f32 × n, k times
 //!   crc     u32               4 B      (FNV-1a over all preceding bytes)
+//!
+//! Version 1 is the same layout without the `edges` field; `decode`
+//! reads both (v1 loads with `edges = 0`), `encode` always writes v2.
 
 use std::io::{Read, Write};
 use std::path::Path;
@@ -23,13 +32,19 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 const MAGIC: &[u8; 4] = b"PF1B";
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
 
 /// Federated training state snapshot.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Checkpoint {
+    /// rounds completed when this snapshot was taken
     pub round: u64,
+    /// the run's seed (RNG streams re-derive from it)
     pub seed: u64,
+    /// topology-era metadata (v2): edge aggregator count at save time,
+    /// 0 = flat. Informational only — edge assignment is derived
+    /// (`k mod E`), so restoring never needs it.
+    pub edges: u32,
     /// consensus vector v (empty when the algorithm has none)
     pub consensus: Vec<f32>,
     /// per-client personalized models (global algorithms store one)
@@ -37,6 +52,7 @@ pub struct Checkpoint {
 }
 
 impl Checkpoint {
+    /// Write atomically (temp file + rename) to `path`.
     pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
         let path = path.as_ref();
         if let Some(dir) = path.parent() {
@@ -52,6 +68,7 @@ impl Checkpoint {
         Ok(())
     }
 
+    /// Read and decode a checkpoint file (v1 or v2).
     pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
         let mut bytes = Vec::new();
         std::fs::File::open(path.as_ref())
@@ -60,18 +77,20 @@ impl Checkpoint {
         Self::decode(&bytes)
     }
 
+    /// Serialize to the v2 wire bytes (CRC included).
     pub fn encode(&self) -> Result<Vec<u8>> {
         let n = self.models.first().map(|m| m.len()).unwrap_or(0);
         if self.models.iter().any(|m| m.len() != n) {
             bail!("all client models must have equal length");
         }
         let mut out = Vec::with_capacity(
-            36 + 4 * self.consensus.len() + self.models.len() * 4 * n,
+            40 + 4 * self.consensus.len() + self.models.len() * 4 * n,
         );
         out.extend_from_slice(MAGIC);
         out.extend_from_slice(&VERSION.to_le_bytes());
         out.extend_from_slice(&self.round.to_le_bytes());
         out.extend_from_slice(&self.seed.to_le_bytes());
+        out.extend_from_slice(&self.edges.to_le_bytes());
         out.extend_from_slice(&(self.consensus.len() as u32).to_le_bytes());
         for x in &self.consensus {
             out.extend_from_slice(&x.to_le_bytes());
@@ -88,6 +107,8 @@ impl Checkpoint {
         Ok(out)
     }
 
+    /// Parse v1 or v2 wire bytes (CRC-checked). v1 files predate the
+    /// topology metadata and load with `edges = 0`.
     pub fn decode(bytes: &[u8]) -> Result<Checkpoint> {
         if bytes.len() < 36 {
             bail!("checkpoint too short ({} bytes)", bytes.len());
@@ -102,11 +123,13 @@ impl Checkpoint {
             bail!("bad checkpoint magic");
         }
         let version = cur.u32()?;
-        if version != VERSION {
+        if !(1..=VERSION).contains(&version) {
             bail!("unsupported checkpoint version {version}");
         }
         let round = cur.u64()?;
         let seed = cur.u64()?;
+        // the v2 topology-era metadata slot; absent in v1 files
+        let edges = if version >= 2 { cur.u32()? } else { 0 };
         let m = cur.u32()? as usize;
         let consensus = cur.f32s(m)?;
         let k = cur.u32()? as usize;
@@ -118,7 +141,7 @@ impl Checkpoint {
         if cur.pos != body.len() {
             bail!("trailing bytes in checkpoint");
         }
-        Ok(Checkpoint { round, seed, consensus, models })
+        Ok(Checkpoint { round, seed, edges, consensus, models })
     }
 }
 
@@ -172,6 +195,7 @@ mod tests {
         Checkpoint {
             round: 42,
             seed: 17,
+            edges: 4,
             consensus: vec![1.0, -1.0, 1.0],
             models: vec![vec![0.1, 0.2], vec![-0.3, 0.4]],
         }
@@ -224,6 +248,7 @@ mod tests {
         let c = Checkpoint {
             round: 0,
             seed: 0,
+            edges: 0,
             consensus: vec![],
             models: vec![vec![1.0], vec![1.0, 2.0]],
         };
@@ -232,8 +257,68 @@ mod tests {
 
     #[test]
     fn empty_state_round_trips() {
-        let c = Checkpoint { round: 0, seed: 0, consensus: vec![], models: vec![] };
+        let c =
+            Checkpoint { round: 0, seed: 0, edges: 0, consensus: vec![], models: vec![] };
         assert_eq!(Checkpoint::decode(&c.encode().unwrap()).unwrap(), c);
+    }
+
+    /// A v1 file, byte-for-byte as the pre-topology encoder wrote it
+    /// (no `edges` field). The v2 reader must load it with `edges = 0`.
+    /// The fixture is constructed by hand here — NOT by the encoder
+    /// under test, which only writes v2.
+    #[test]
+    fn v1_fixture_loads_with_zero_edges() {
+        let mut v1 = Vec::new();
+        v1.extend_from_slice(b"PF1B");
+        v1.extend_from_slice(&1u32.to_le_bytes()); // version 1
+        v1.extend_from_slice(&7u64.to_le_bytes()); // round
+        v1.extend_from_slice(&17u64.to_le_bytes()); // seed
+        v1.extend_from_slice(&2u32.to_le_bytes()); // m
+        v1.extend_from_slice(&1.0f32.to_le_bytes());
+        v1.extend_from_slice(&(-1.0f32).to_le_bytes());
+        v1.extend_from_slice(&1u32.to_le_bytes()); // k
+        v1.extend_from_slice(&3u32.to_le_bytes()); // n
+        for x in [0.5f32, -0.25, 2.0] {
+            v1.extend_from_slice(&x.to_le_bytes());
+        }
+        let crc = super::fnv1a(&v1);
+        v1.extend_from_slice(&crc.to_le_bytes());
+
+        let got = Checkpoint::decode(&v1).expect("v1 files must stay readable");
+        assert_eq!(
+            got,
+            Checkpoint {
+                round: 7,
+                seed: 17,
+                edges: 0,
+                consensus: vec![1.0, -1.0],
+                models: vec![vec![0.5, -0.25, 2.0]],
+            }
+        );
+        // and the v1 CRC/truncation protections still apply
+        let mut corrupt = v1.clone();
+        corrupt[10] ^= 0xFF;
+        assert!(Checkpoint::decode(&corrupt).is_err());
+        assert!(Checkpoint::decode(&v1[..v1.len() - 3]).is_err());
+        // a future version must be rejected, not misparsed
+        let mut v9 = v1.clone();
+        v9[4..8].copy_from_slice(&9u32.to_le_bytes());
+        let n = v9.len();
+        let crc = super::fnv1a(&v9[..n - 4]);
+        v9[n - 4..].copy_from_slice(&crc.to_le_bytes());
+        let err = Checkpoint::decode(&v9).unwrap_err().to_string();
+        assert!(err.contains("version"), "{err}");
+    }
+
+    #[test]
+    fn v2_round_trips_topology_metadata() {
+        let c = sample();
+        assert_eq!(c.edges, 4);
+        let back = Checkpoint::decode(&c.encode().unwrap()).unwrap();
+        assert_eq!(back.edges, 4);
+        // flat runs record 0 edges
+        let flat = Checkpoint { edges: 0, ..sample() };
+        assert_eq!(Checkpoint::decode(&flat.encode().unwrap()).unwrap().edges, 0);
     }
 
     #[test]
@@ -245,6 +330,7 @@ mod tests {
             let c = Checkpoint {
                 round: rng.next_u64(),
                 seed: rng.next_u64(),
+                edges: rng.below(17) as u32,
                 consensus: (0..m)
                     .map(|_| if rng.f32() < 0.5 { 1.0 } else { -1.0 })
                     .collect(),

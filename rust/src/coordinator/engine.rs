@@ -16,10 +16,17 @@
 //! by selection index) and accepted until `participating` uplinks are in
 //! or the deadline passes; everything later is a straggler — its bytes
 //! were spent on the link, its payload never enters server state.
+//!
+//! Under an `edge:E` topology with `edge_dropout_prob > 0`, a whole edge
+//! aggregator can additionally miss the round (DESIGN.md §11): every
+//! arrival it had accepted is demoted to a cut straggler — uplink bytes
+//! stay metered (they reached the edge), payloads never reach the root —
+//! and the delivered-set weights renormalize over the surviving edges,
+//! composing with §9's delivered-set renormalization.
 
 use crate::comm::SimNetwork;
-use crate::config::RunConfig;
-use crate::util::rng::Rng;
+use crate::config::{RunConfig, Topology};
+use crate::util::rng::{splitmix64, Rng};
 
 /// One scheduled uplink arrival.
 #[derive(Clone, Copy, Debug)]
@@ -41,6 +48,7 @@ pub struct Arrival {
 /// order their uplinks reach the server.
 #[derive(Clone, Debug)]
 pub struct RoundPlan {
+    /// round index t
     pub t: usize,
     /// the over-selected cohort S̃^t, in selection order
     pub selected: Vec<usize>,
@@ -51,10 +59,14 @@ pub struct RoundPlan {
     pub arrivals: Vec<Arrival>,
     /// accepted arrivals (≤ participating)
     pub delivered: usize,
-    /// computed-and-uploaded but cut by the deadline / target count
+    /// computed-and-uploaded but cut by the deadline / target count (or
+    /// stranded on a failed edge — DESIGN.md §11)
     pub stragglers_cut: usize,
     /// selected but unreachable this round
     pub dropped: usize,
+    /// edge aggregators that missed this round's deadline (empty under
+    /// `flat` or when `edge_dropout_prob = 0`), ascending edge ids
+    pub failed_edges: Vec<usize>,
 }
 
 impl RoundPlan {
@@ -83,8 +95,22 @@ impl RoundPlan {
             delivered: weights.len(),
             stragglers_cut: 0,
             dropped: 0,
+            failed_edges: Vec::new(),
         }
     }
+}
+
+/// The per-(seed, round, edge) outage draw: a stateless SplitMix64
+/// stream, so enabling edge outages consumes nothing from the
+/// coordinator RNG or any client channel — plans with
+/// `edge_dropout_prob = 0` are byte-identical to flat planning.
+fn edge_outage_draw(seed: u64, t: usize, edge: usize) -> f64 {
+    let mut s = seed
+        ^ 0x4544_4745_u64 // "EDGE"
+        ^ (t as u64).wrapping_mul(0xD6E8_FEB8_6659_FD93)
+        ^ (edge as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    let _ = splitmix64(&mut s); // whiten once before drawing
+    (splitmix64(&mut s) >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
 }
 
 /// Plan round `t`: sample the (over-)selected cohort from `rng`, draw
@@ -143,6 +169,25 @@ pub fn plan_round(
         }
     }
 
+    // edge-lifecycle cut (DESIGN.md §11): a failed edge strands every
+    // arrival it had accepted — demote them to stragglers BEFORE the
+    // weight renormalization, so p_k renormalizes over what actually
+    // reaches the root, exactly like deadline-cut stragglers
+    let mut failed_edges = Vec::new();
+    if let Topology::Edge { edges } = cfg.topology {
+        if cfg.edge_dropout_prob > 0.0 {
+            failed_edges = (0..edges)
+                .filter(|&e| edge_outage_draw(cfg.seed, t, e) < cfg.edge_dropout_prob)
+                .collect();
+            for a in arrivals.iter_mut() {
+                if a.accepted && failed_edges.contains(&cfg.topology.edge_of(a.client)) {
+                    a.accepted = false;
+                    delivered -= 1;
+                }
+            }
+        }
+    }
+
     // renormalize p_k over the delivered set (Σ weights = 1 whenever
     // anything was delivered), accumulated in arrival order
     let total: f32 = arrivals
@@ -157,7 +202,16 @@ pub fn plan_round(
     }
 
     let stragglers_cut = arrivals.len() - delivered;
-    RoundPlan { t, selected, computing, arrivals, delivered, stragglers_cut, dropped }
+    RoundPlan {
+        t,
+        selected,
+        computing,
+        arrivals,
+        delivered,
+        stragglers_cut,
+        dropped,
+        failed_edges,
+    }
 }
 
 #[cfg(test)]
@@ -290,6 +344,87 @@ mod tests {
         for a in &plan.arrivals {
             assert_eq!(a.accepted, a.at_ms <= cutoff);
         }
+    }
+
+    #[test]
+    fn edge_topology_without_outages_plans_exactly_like_flat() {
+        use crate::config::Topology;
+        // the edge tier reroutes aggregation, not planning: with
+        // edge_dropout_prob = 0 the plan must be identical to flat —
+        // no draw is consumed anywhere
+        let mut cfg = RunConfig::preset(DatasetName::Mnist);
+        cfg.participating = 10;
+        cfg.over_select = 4;
+        cfg.dropout_prob = 0.2;
+        cfg.latency = LatencyModel::Uniform { lo_ms: 1.0, hi_ms: 20.0 };
+        let weights = fleet_weights(cfg.clients);
+        let flat_plan = {
+            let mut net = SimNetwork::new(cfg.seed);
+            let mut rng = Rng::new(5);
+            plan_round(1, &cfg, &weights, &mut net, &mut rng)
+        };
+        cfg.topology = Topology::Edge { edges: 4 };
+        cfg.validate().unwrap();
+        let edge_plan = {
+            let mut net = SimNetwork::new(cfg.seed);
+            let mut rng = Rng::new(5);
+            plan_round(1, &cfg, &weights, &mut net, &mut rng)
+        };
+        assert_eq!(flat_plan.selected, edge_plan.selected);
+        assert_eq!(flat_plan.delivered, edge_plan.delivered);
+        assert!(edge_plan.failed_edges.is_empty());
+        let fw: Vec<f32> = flat_plan.arrivals.iter().map(|a| a.weight).collect();
+        let ew: Vec<f32> = edge_plan.arrivals.iter().map(|a| a.weight).collect();
+        assert_eq!(fw, ew, "edge topology must not move a single weight bit");
+    }
+
+    #[test]
+    fn failed_edges_strand_their_arrivals_and_weights_renormalize() {
+        use crate::config::Topology;
+        let mut cfg = RunConfig::preset(DatasetName::Mnist);
+        cfg.topology = Topology::Edge { edges: 4 };
+        cfg.edge_dropout_prob = 0.4;
+        cfg.validate().unwrap();
+        let weights = fleet_weights(cfg.clients);
+
+        let build = || {
+            let mut net = SimNetwork::new(cfg.seed);
+            let mut rng = Rng::new(11);
+            (0..8)
+                .map(|t| plan_round(t, &cfg, &weights, &mut net, &mut rng))
+                .collect::<Vec<_>>()
+        };
+        let plans = build();
+        // deterministic: outage draws are stateless in (seed, t, edge)
+        for (p, q) in plans.iter().zip(&build()) {
+            assert_eq!(p.failed_edges, q.failed_edges);
+            assert_eq!(p.delivered, q.delivered);
+        }
+        let mut saw_failure = false;
+        for p in &plans {
+            for a in &p.arrivals {
+                let failed = p.failed_edges.contains(&cfg.topology.edge_of(a.client));
+                if failed {
+                    saw_failure = true;
+                    assert!(!a.accepted, "arrival survived its failed edge");
+                    assert_eq!(a.weight, 0.0);
+                }
+            }
+            assert_eq!(
+                p.delivered + p.stragglers_cut,
+                p.computing.len(),
+                "stranded arrivals must count as cut stragglers"
+            );
+            if p.delivered > 0 {
+                let sum: f32 =
+                    p.arrivals.iter().filter(|a| a.accepted).map(|a| a.weight).sum();
+                assert!(
+                    (sum - 1.0).abs() < 1e-4,
+                    "weights must renormalize over surviving edges: Σp = {sum}"
+                );
+            }
+        }
+        assert!(saw_failure, "0.4 outage probability produced no failure in 8 rounds");
     }
 
     #[test]

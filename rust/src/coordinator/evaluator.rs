@@ -15,8 +15,11 @@ use crate::runtime::ModelRuntime;
 /// Accuracy + mean loss over all clients.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct EvalResult {
+    /// Top-1 accuracy over every evaluated sample
     pub accuracy: f64,
+    /// mean task loss over every evaluated sample
     pub mean_loss: f64,
+    /// how many (unpadded) samples went into the aggregate
     pub samples: usize,
 }
 

@@ -11,13 +11,17 @@ use crate::comm::RoundBytes;
 /// One communication round's record.
 #[derive(Clone, Debug)]
 pub struct RoundRecord {
+    /// round index t
     pub round: usize,
     /// mean task loss over local steps this round (Fig. 4)
     pub train_loss: f64,
     /// personalized test accuracy, when evaluated this round (Fig. 3)
     pub test_acc: Option<f64>,
+    /// personalized test loss, when evaluated this round
     pub test_loss: Option<f64>,
+    /// the round's measured wire traffic, both tiers (DESIGN.md §5, §11)
     pub bytes: RoundBytes,
+    /// wall-clock duration of the whole round, ms
     pub duration_ms: f64,
     /// mean ‖∇F̃_k‖² diagnostic (Theorem 1), when requested
     pub grad_norm: Option<f64>,
@@ -31,17 +35,22 @@ pub struct RoundRecord {
     pub delivered: usize,
     /// uplinks sent (and metered) but cut by the deadline / target count
     pub stragglers_cut: usize,
-    /// server aggregate-phase wall time: streaming absorbs + finish, ms
+    /// server aggregate-phase wall time: streaming absorbs + shard
+    /// merges + finish, ms
     pub aggregate_ms: f64,
+    /// edge aggregators in the topology (0 = flat — DESIGN.md §11)
+    pub edges: usize,
 }
 
 /// Full run history + summary.
 #[derive(Clone, Debug, Default)]
 pub struct History {
+    /// one record per completed round, in round order
     pub records: Vec<RoundRecord>,
 }
 
 impl History {
+    /// Append one round's record.
     pub fn push(&mut self, r: RoundRecord) {
         self.records.push(r);
     }
@@ -51,6 +60,7 @@ impl History {
         self.records.iter().rev().find_map(|r| r.test_acc)
     }
 
+    /// Test loss of the last evaluated round.
     pub fn final_test_loss(&self) -> Option<f64> {
         self.records.iter().rev().find_map(|r| r.test_loss)
     }
@@ -72,6 +82,7 @@ impl History {
             / self.records.len() as f64
     }
 
+    /// Total communication (MB) across all completed rounds.
     pub fn total_mb(&self) -> f64 {
         self.records.iter().map(|r| r.bytes.total_mb()).sum()
     }
@@ -87,7 +98,9 @@ impl History {
 
     /// Write `round,train_loss,test_acc,test_loss,uplink_bytes,
     /// downlink_bytes,duration_ms,grad_norm,consensus_flips,delivered,
-    /// stragglers_cut,aggregate_ms` CSV.
+    /// stragglers_cut,aggregate_ms,edges,edge_merges,edge_bytes_up,
+    /// edge_bytes_down` CSV (the edge columns are all zero under the
+    /// default `flat` topology — DESIGN.md §11).
     pub fn write_csv(&self, path: impl AsRef<Path>, header_comment: &str) -> Result<()> {
         let path = path.as_ref();
         if let Some(dir) = path.parent() {
@@ -100,12 +113,12 @@ impl History {
         }
         writeln!(
             f,
-            "round,train_loss,test_acc,test_loss,uplink_bytes,downlink_bytes,duration_ms,grad_norm,consensus_flips,delivered,stragglers_cut,aggregate_ms"
+            "round,train_loss,test_acc,test_loss,uplink_bytes,downlink_bytes,duration_ms,grad_norm,consensus_flips,delivered,stragglers_cut,aggregate_ms,edges,edge_merges,edge_bytes_up,edge_bytes_down"
         )?;
         for r in &self.records {
             writeln!(
                 f,
-                "{},{:.6},{},{},{},{},{:.3},{},{},{},{},{:.4}",
+                "{},{:.6},{},{},{},{},{:.3},{},{},{},{},{:.4},{},{},{},{}",
                 r.round,
                 r.train_loss,
                 fmt_opt(r.test_acc),
@@ -120,6 +133,10 @@ impl History {
                 r.delivered,
                 r.stragglers_cut,
                 r.aggregate_ms,
+                r.edges,
+                r.bytes.edge_up_msgs,
+                r.bytes.edge_up,
+                r.bytes.edge_down,
             )?;
         }
         Ok(())
@@ -140,13 +157,23 @@ mod tests {
             train_loss: 1.0 / (round + 1) as f64,
             test_acc: acc,
             test_loss: acc.map(|a| 1.0 - a),
-            bytes: RoundBytes { uplink: 100, downlink: 50, uplink_msgs: 2, downlink_msgs: 1 },
+            bytes: RoundBytes {
+                uplink: 100,
+                downlink: 50,
+                uplink_msgs: 2,
+                downlink_msgs: 1,
+                edge_up: 64,
+                edge_down: 32,
+                edge_up_msgs: 4,
+                edge_down_msgs: 4,
+            },
             duration_ms: 5.0,
             grad_norm: None,
             consensus_flips: if round > 0 { Some(round * 3) } else { None },
             delivered: 2,
             stragglers_cut: round % 2,
             aggregate_ms: 0.25,
+            edges: 4,
         }
     }
 
@@ -162,7 +189,8 @@ mod tests {
         assert_eq!(h.rounds_to_accuracy(0.6), Some(2));
         assert_eq!(h.rounds_to_accuracy(0.9), None);
         assert!(h.mean_round_mb() > 0.0);
-        assert!((h.total_mb() - 4.0 * 150.0 / (1024.0 * 1024.0)).abs() < 1e-9);
+        // 100 + 50 client-tier + 64 + 32 edge-tier bytes per record
+        assert!((h.total_mb() - 4.0 * 246.0 / (1024.0 * 1024.0)).abs() < 1e-9);
     }
 
     #[test]
@@ -176,10 +204,12 @@ mod tests {
         let lines: Vec<&str> = text.lines().collect();
         assert!(lines[0].starts_with("# unit test"));
         assert!(lines[1].starts_with("round,train_loss"));
-        assert!(lines[1].ends_with("consensus_flips,delivered,stragglers_cut,aggregate_ms"));
+        assert!(lines[1].ends_with(
+            "aggregate_ms,edges,edge_merges,edge_bytes_up,edge_bytes_down"
+        ));
         assert_eq!(lines.len(), 3);
         assert!(lines[2].starts_with("0,"));
-        assert!(lines[2].ends_with(",2,0,0.2500"), "{}", lines[2]);
+        assert!(lines[2].ends_with(",2,0,0.2500,4,4,64,32"), "{}", lines[2]);
         std::fs::remove_dir_all(&dir).ok();
     }
 

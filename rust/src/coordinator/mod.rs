@@ -19,14 +19,22 @@
 //!    count: each client gets an RNG stream forked in selection order
 //!    beforehand);
 //! 3. each uplink is transported through its sender's channel and —
-//!    if it made the deadline/target — absorbed into the round's
-//!    streaming [`RoundAggregator`] *in arrival order*, on this thread,
-//!    the payload dropped immediately (the cohort is never stored);
-//! 4. `finish_aggregate` folds the closed aggregator into server state;
+//!    if it made the deadline/target — absorbed into its edge's
+//!    streaming [`RoundAggregator`] shard *in arrival order*, on this
+//!    thread, the payload dropped immediately (the cohort is never
+//!    stored). Under the default `flat` topology there is exactly one
+//!    shard; under `edge:E` each of the E edge aggregators owns an O(m)
+//!    shard and ships one compact merge frame to the root, which merges
+//!    the shards in canonical edge order — bit-identical to the flat
+//!    server for the exact tally kinds (DESIGN.md §11);
+//! 4. `finish_aggregate` folds the closed (merged) aggregator into
+//!    server state;
 //! 5. optional `server_notify` broadcast to the reachable participants.
 //!
-//! Algorithms never see the network; a future socket or sharded-server
-//! transport replaces step 1/3/5 internals without touching them.
+//! Algorithms never see the network or the topology; the hierarchical
+//! edge tier slots in behind steps 1/3/5 exactly the way §3 promised a
+//! sharded-server transport would, and a socket transport would replace
+//! the same internals.
 //!
 //! [`RoundAggregator`]: crate::algorithms::RoundAggregator
 
@@ -40,9 +48,11 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use crate::algorithms::{Algorithm, ClientCtx, ClientOutput, InitCtx, RoundOutcome, ServerCtx};
+use crate::algorithms::{
+    Algorithm, ClientCtx, ClientOutput, InitCtx, RoundAggregator, RoundOutcome, ServerCtx,
+};
 use crate::comm::{Downlink, SimNetwork};
-use crate::config::{ProjectionKind, RunConfig};
+use crate::config::{ProjectionKind, RunConfig, Topology};
 use crate::data::{generate, FederatedData};
 use crate::runtime::ModelRuntime;
 use crate::sketch::{DenseGaussianOperator, Projection, SignVec, SrhtOperator};
@@ -55,10 +65,15 @@ pub use metrics::{History, RoundRecord};
 
 /// Result of a full training run.
 pub struct RunResult {
+    /// every round's record (losses, bytes, lifecycle counters)
     pub history: History,
+    /// personalized test accuracy at the last evaluated round
     pub final_accuracy: f64,
+    /// test loss at the last evaluated round
     pub final_loss: f64,
+    /// mean per-round communication in MB (the Table 2 cost metric)
     pub mean_round_mb: f64,
+    /// which algorithm produced this run
     pub algorithm: String,
 }
 
@@ -83,10 +98,15 @@ unsafe impl Sync for SyncRuntime<'_> {}
 
 /// Drives one (algorithm × dataset × seed) training run.
 pub struct Coordinator<'a> {
+    /// the run's full configuration
     pub cfg: RunConfig,
+    /// the generated federated dataset (per-client shards + weights)
     pub data: FederatedData,
+    /// compiled model runtime shared across runs of a sweep
     pub model: &'a ModelRuntime,
+    /// the simulated transport (channels, noise, byte ledger)
     pub net: SimNetwork,
+    /// rust-side mirror of Φ for baselines and server-side work
     pub projection: Projection,
     /// when set, save a checkpoint to `.0` every `.1` rounds
     pub checkpoint: Option<(String, usize)>,
@@ -176,7 +196,18 @@ impl<'a> Coordinator<'a> {
         // reachable clients become compute tasks. Forks happen in
         // selection order, before the parallel section: determinism for
         // any thread count.
+        let topo = self.cfg.topology;
         let broadcast = alg.server_broadcast(t);
+        // hierarchical fan-out (DESIGN.md §11): the root ships one copy
+        // to every edge with at least one selected client (the root
+        // sampled the cohort, so it knows the derived assignment; it
+        // cannot yet know about dropouts), then each edge fans out to
+        // its clients through the per-client channels below.
+        if let Some(d) = &broadcast {
+            for e in active_edges(topo, &plan.selected) {
+                self.net.edge_downlink(e, &d.payload)?;
+            }
+        }
         let mut tasks: Vec<ClientTask> = Vec::with_capacity(plan.computing.len());
         let mut next_computing = plan.computing.iter().peekable();
         for &k in &plan.selected {
@@ -193,17 +224,22 @@ impl<'a> Coordinator<'a> {
 
         // phases 2+3: data-parallel client rounds, consumed on THIS
         // thread in simulated-arrival order — each uplink is transported
-        // and folded into the streaming aggregator the moment it
-        // arrives, then dropped. The closure is `Sync`-checked by
-        // `par_map_consume`; only the PJRT handle needs the scoped
-        // `SyncRuntime` assertion.
+        // and folded into its edge's streaming aggregator shard the
+        // moment it arrives, then dropped. Under `flat` there is exactly
+        // one shard and this is byte-for-byte the single-server absorb
+        // loop; under `edge:E` each shard receives its own clients'
+        // uplinks in arrival order (the global arrival walk restricted
+        // to one edge IS that edge's arrival order). The closure is
+        // `Sync`-checked by `par_map_consume`; only the PJRT handle
+        // needs the scoped `SyncRuntime` assertion.
         let threads = parallel::thread_count(self.cfg.client_threads);
         let model = SyncRuntime(self.model);
         let data = &self.data;
         let cfg = &self.cfg;
         let projection = &self.projection;
         let alg_shared: &dyn Algorithm = alg;
-        let mut agg = alg_shared.begin_aggregate(t);
+        let mut shards: Vec<RoundAggregator> =
+            (0..topo.shards()).map(|_| alg_shared.begin_aggregate(t)).collect();
         let order: Vec<usize> = plan.arrivals.iter().map(|a| a.task).collect();
         let net = &mut self.net;
         let mut agg_time = Duration::ZERO;
@@ -229,17 +265,43 @@ impl<'a> Coordinator<'a> {
                     up.payload = net.uplink_from(out.client, &up.payload)?;
                 }
                 let started = Instant::now();
+                let shard = &mut shards[topo.edge_of(out.client)];
                 if arrival.accepted {
-                    agg.absorb(out, arrival.weight)
+                    shard
+                        .absorb(out, arrival.weight)
                         .with_context(|| format!("absorbing round-{t} uplink"))?;
                 } else {
-                    // straggler: payload discarded, local state kept
-                    agg.absorb_cut(out);
+                    // straggler (or stranded on a failed edge): payload
+                    // discarded, local state kept
+                    shard.absorb_cut(out);
                 }
                 agg_time += started.elapsed();
                 Ok(())
             },
         )?;
+
+        // edge → root: every live edge that had compute work ships its
+        // O(m) merge frame (metered on the edge tier); a failed edge
+        // missed the round and ships nothing. The root then merges ALL
+        // shards in canonical edge order — bit-identical to the flat
+        // absorb loop for the exact tally kinds (DESIGN.md §11); failed
+        // edges contribute only their clients' personalized write-backs,
+        // which are simulation bookkeeping and never crossed the wire.
+        for e in active_edges(topo, &plan.computing) {
+            if !plan.failed_edges.contains(&e) {
+                if let Some(frame) = shards[e].merge_payload() {
+                    self.net.edge_uplink(e, &frame)?;
+                }
+            }
+        }
+        let started = Instant::now();
+        let mut shards = shards.into_iter();
+        let mut agg = shards.next().expect("topology has at least one shard");
+        for shard in shards {
+            agg.merge(shard)
+                .with_context(|| format!("merging round-{t} edge shards"))?;
+        }
+        agg_time += started.elapsed();
 
         // phase 4: fold the closed aggregator into server state
         let started = Instant::now();
@@ -252,8 +314,13 @@ impl<'a> Coordinator<'a> {
 
         // phase 5: optional end-of-round broadcast to every reachable
         // participant (metered per recipient; the simulated stateless
-        // clients discard it — dropouts are unreachable and skipped)
+        // clients discard it — dropouts are unreachable and skipped).
+        // Under `edge:E` the note first hops root → edge for every edge
+        // with reachable clients, like the pre-round broadcast.
         if let Some(note) = alg.server_notify(t) {
+            for e in active_edges(topo, &plan.computing) {
+                self.net.edge_downlink(e, &note.payload)?;
+            }
             for &k in &plan.computing {
                 self.net.downlink_to(k, &note.payload)?;
             }
@@ -331,6 +398,7 @@ impl<'a> Coordinator<'a> {
                 delivered: plan.delivered,
                 stragglers_cut: plan.stragglers_cut,
                 aggregate_ms,
+                edges: self.cfg.topology.edges(),
             });
             if let Some((path, every)) = &self.checkpoint {
                 if (t + 1) % every == 0 || t + 1 == self.cfg.rounds {
@@ -339,6 +407,7 @@ impl<'a> Coordinator<'a> {
                         Checkpoint {
                             round: t as u64 + 1,
                             seed: self.cfg.seed,
+                            edges: self.cfg.topology.edges() as u32,
                             consensus,
                             models,
                         }
@@ -358,11 +427,16 @@ impl<'a> Coordinator<'a> {
                 bytes.total(),
                 if self.cfg.has_scenario() {
                     format!(
-                        " delivered={}/{} cut={} dropped={}",
+                        " delivered={}/{} cut={} dropped={}{}",
                         plan.delivered,
                         plan.selected.len(),
                         plan.stragglers_cut,
-                        plan.dropped
+                        plan.dropped,
+                        if plan.failed_edges.is_empty() {
+                            String::new()
+                        } else {
+                            format!(" edges_failed={:?}", plan.failed_edges)
+                        }
                     )
                 } else {
                     String::new()
@@ -420,4 +494,18 @@ impl<'a> Coordinator<'a> {
 /// Stream tag for client `k`'s round-`t` RNG fork.
 fn client_stream_tag(t: usize, k: usize) -> u64 {
     crate::algorithms::common::hash3(k as u64, t as u64, 0x434C_4953) // "CLIS"
+}
+
+/// The edge ids (ascending) that have at least one client in `clients`
+/// under `topo`'s derived assignment — which edges the root fans out to
+/// or expects merge frames from. Empty under `flat` (no edge tier).
+fn active_edges(topo: Topology, clients: &[usize]) -> Vec<usize> {
+    let Topology::Edge { edges } = topo else {
+        return Vec::new();
+    };
+    let mut active = vec![false; edges];
+    for &k in clients {
+        active[topo.edge_of(k)] = true;
+    }
+    (0..edges).filter(|&e| active[e]).collect()
 }

@@ -20,6 +20,7 @@ pub struct BatchIter<'a> {
 }
 
 impl<'a> BatchIter<'a> {
+    /// Shuffled batch stream over `data` with the given batch size.
     pub fn new(data: &'a ClientData, batch: usize, rng: Rng) -> Self {
         assert!(batch > 0);
         assert!(data.train_len() > 0, "client has no training data");
@@ -41,8 +42,8 @@ impl<'a> BatchIter<'a> {
         self.cursor = 0;
     }
 
-    /// Next batch as (x: [batch * d], y: [batch]) borrowed from internal
-    /// scratch — valid until the next call.
+    /// Next batch as (x: `[batch * d]`, y: `[batch]`) borrowed from
+    /// internal scratch — valid until the next call.
     pub fn next_batch(&mut self) -> (&[f32], &[i32]) {
         let d = self.data.input_dim;
         for slot in 0..self.batch {
@@ -69,6 +70,7 @@ pub struct EvalBatches<'a> {
 }
 
 impl<'a> EvalBatches<'a> {
+    /// Sequential eval batches over `data`'s test shard.
     pub fn new(data: &'a ClientData, batch: usize) -> Self {
         EvalBatches { data, batch, cursor: 0 }
     }

@@ -8,6 +8,7 @@
 
 use crate::util::rng::Rng;
 
+/// How classes are assigned to clients (the heterogeneity knob).
 #[derive(Clone, Debug)]
 pub enum Partition {
     /// Every client receives `per_client` distinct classes; shards are
@@ -37,6 +38,7 @@ impl Partition {
         }
     }
 
+    /// One-line description for run summaries.
     pub fn describe(&self) -> String {
         match self {
             Partition::LabelShards { per_client } => format!("label-shards({per_client}/client)"),

@@ -21,14 +21,20 @@ use crate::util::rng::Rng;
 /// Which paper dataset a synthetic workload emulates.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum DatasetName {
+    /// handwritten digits (784-d, 10 classes) — the easiest preset
     Mnist,
+    /// fashion articles (784-d, 10 classes)
     Fmnist,
+    /// natural images (3072-d, 10 classes)
     Cifar10,
+    /// natural images (3072-d, 100 classes) — the hardest preset
     Cifar100,
+    /// street-view digits (3072-d, 10 classes)
     Svhn,
 }
 
 impl DatasetName {
+    /// Parse a dataset name (common synonyms accepted).
     pub fn parse(s: &str) -> Option<DatasetName> {
         Some(match s.to_ascii_lowercase().as_str() {
             "mnist" => DatasetName::Mnist,
@@ -40,6 +46,7 @@ impl DatasetName {
         })
     }
 
+    /// Canonical lowercase name (inverse of [`DatasetName::parse`]).
     pub fn as_str(&self) -> &'static str {
         match self {
             DatasetName::Mnist => "mnist",
@@ -50,6 +57,7 @@ impl DatasetName {
         }
     }
 
+    /// Every dataset, in Table-2 column order.
     pub fn all() -> [DatasetName; 5] {
         [
             DatasetName::Mnist,
@@ -69,6 +77,7 @@ impl DatasetName {
         }
     }
 
+    /// The synthetic generative parameters emulating this dataset.
     pub fn spec(&self) -> DatasetSpec {
         match self {
             // difficulty ladder: mnist easiest … cifar100 hardest
@@ -129,8 +138,11 @@ impl DatasetName {
 /// Geometry + generative parameters for a synthetic dataset.
 #[derive(Clone, Copy, Debug)]
 pub struct DatasetSpec {
+    /// which paper dataset this spec emulates
     pub name: DatasetName,
+    /// input feature dimension d
     pub input_dim: usize,
+    /// number of classes
     pub classes: usize,
     /// per-coordinate sample noise sigma
     pub noise: f32,
@@ -138,7 +150,9 @@ pub struct DatasetSpec {
     pub proto_scale: f32,
     /// per-client domain-shift magnitude (drives personalization gains)
     pub shift_scale: f32,
+    /// training samples per client
     pub train_per_client: usize,
+    /// held-out test samples per client
     pub test_per_client: usize,
 }
 
@@ -148,19 +162,25 @@ pub struct DatasetSpec {
 pub struct ClientData {
     /// row-major [samples, input_dim]
     pub train_x: Vec<f32>,
+    /// training labels
     pub train_y: Vec<i32>,
+    /// row-major test features
     pub test_x: Vec<f32>,
+    /// test labels
     pub test_y: Vec<i32>,
     /// classes this client observes (label-skew partition)
     pub classes: Vec<usize>,
+    /// input feature dimension d
     pub input_dim: usize,
 }
 
 impl ClientData {
+    /// Number of training samples.
     pub fn train_len(&self) -> usize {
         self.train_y.len()
     }
 
+    /// Number of test samples.
     pub fn test_len(&self) -> usize {
         self.test_y.len()
     }
@@ -169,13 +189,16 @@ impl ClientData {
 /// A fully materialized federated dataset.
 #[derive(Clone, Debug)]
 pub struct FederatedData {
+    /// the generative spec this dataset was drawn from
     pub spec: DatasetSpec,
+    /// every client's private shard
     pub clients: Vec<ClientData>,
     /// aggregation weights p_k = N_k / Σ N_i (paper's convention)
     pub weights: Vec<f32>,
 }
 
 impl FederatedData {
+    /// Number of clients K.
     pub fn num_clients(&self) -> usize {
         self.clients.len()
     }

@@ -12,10 +12,15 @@ use crate::config::{ProjectionKind, RunConfig};
 use crate::data::DatasetName;
 use crate::experiments::runner::Lab;
 
+/// Shared knobs for the appendix-figure ablation sweeps.
 pub struct AblationOptions {
+    /// dataset to ablate on (appendix figures use MNIST)
     pub dataset: DatasetName,
+    /// override preset rounds (0 = keep preset)
     pub rounds: usize,
+    /// run seed
     pub seed: u64,
+    /// where to write the per-sweep CSVs
     pub results_dir: String,
 }
 

@@ -11,12 +11,19 @@ use crate::config::RunConfig;
 use crate::data::DatasetName;
 use crate::experiments::runner::Lab;
 
+/// Knobs for the Fig. 3/4 convergence-curve regenerator.
 pub struct ConvergenceOptions {
+    /// dataset the curves are drawn on (the paper uses MNIST)
     pub dataset: DatasetName,
+    /// which algorithms to run (defaults to every Table-2 row)
     pub algorithms: Vec<String>,
+    /// override preset rounds (0 = keep preset)
     pub rounds: usize,
+    /// run seed
     pub seed: u64,
+    /// record the Theorem-1 gradient-norm diagnostic for pFed1BS
     pub diagnostics: bool,
+    /// where to write the per-algorithm CSVs
     pub results_dir: String,
 }
 
@@ -33,6 +40,8 @@ impl Default for ConvergenceOptions {
     }
 }
 
+/// Run every configured algorithm and write the per-round curves plus a
+/// combined summary CSV.
 pub fn run(lab: &Lab, opts: &ConvergenceOptions) -> Result<()> {
     let dir = format!("{}/fig3_4", opts.results_dir);
     std::fs::create_dir_all(&dir).ok();

@@ -15,12 +15,16 @@ use crate::runtime::{ModelExecutables, ModelRuntime, Runtime};
 use crate::sketch::SrhtOperator;
 use crate::util::stats::{mean, stddev};
 
+/// Shared experiment context: one PJRT client plus a per-variant cache
+/// of compiled executables.
 pub struct Lab {
+    /// the underlying PJRT client + artifact manifest
     pub runtime: Runtime,
     cache: RefCell<HashMap<String, Arc<ModelExecutables>>>,
 }
 
 impl Lab {
+    /// Open the artifacts directory and create the PJRT CPU client.
     pub fn new(artifacts_dir: &str) -> Result<Lab> {
         Ok(Lab {
             runtime: Runtime::new(artifacts_dir)?,
@@ -53,6 +57,8 @@ impl Lab {
         self.run_with_diagnostics(cfg, false)
     }
 
+    /// One full training run, optionally recording the Theorem-1
+    /// gradient-norm diagnostic every eval round.
     pub fn run_with_diagnostics(&self, cfg: RunConfig, diag: bool) -> Result<RunResult> {
         let model = self.model_for(&cfg)?;
         let mut alg = algorithms::build(&cfg.algorithm)?;
@@ -76,12 +82,17 @@ impl Lab {
 /// mean ± std accuracy/cost across seeds.
 #[derive(Clone, Debug)]
 pub struct Aggregate {
+    /// mean final accuracy across the seeds
     pub acc_mean: f64,
+    /// sample standard deviation of the final accuracies
     pub acc_std: f64,
+    /// mean per-round communication cost in MB
     pub cost_mb_mean: f64,
+    /// how many runs went into this aggregate
     pub runs: usize,
 }
 
+/// Collapse per-seed results into the mean ± std cells Table 2 prints.
 pub fn aggregate(results: &[RunResult]) -> Aggregate {
     let accs: Vec<f64> = results.iter().map(|r| r.final_accuracy).collect();
     let costs: Vec<f64> = results.iter().map(|r| r.mean_round_mb).collect();

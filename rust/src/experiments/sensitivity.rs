@@ -11,11 +11,17 @@ use crate::config::RunConfig;
 use crate::data::DatasetName;
 use crate::experiments::runner::{aggregate, seed_list, Lab};
 
+/// Knobs for the Appendix Table 1 sensitivity sweep.
 pub struct SensitivityOptions {
+    /// dataset to sweep on (the paper uses CIFAR-10)
     pub dataset: DatasetName,
+    /// override preset rounds (0 = keep preset)
     pub rounds: usize,
+    /// seeds per grid cell
     pub seeds: usize,
+    /// base seed the per-cell seed list derives from
     pub seed: u64,
+    /// where to write the sensitivity CSV
     pub results_dir: String,
 }
 
@@ -40,6 +46,7 @@ pub fn paper_grid() -> (Vec<f32>, Vec<f32>, Vec<f32>) {
     )
 }
 
+/// Sweep λ/μ/γ over the paper's grid and write the sensitivity CSV.
 pub fn run(lab: &Lab, opts: &SensitivityOptions) -> Result<()> {
     let (lambdas, mus, gammas) = paper_grid();
     let dir = format!("{}/table_a1", opts.results_dir);

@@ -14,17 +14,25 @@ use crate::experiments::runner::{aggregate, seed_list, Aggregate, Lab};
 /// One (algorithm, dataset) cell.
 #[derive(Clone, Debug)]
 pub struct Cell {
+    /// algorithm row
     pub algorithm: String,
+    /// dataset column
     pub dataset: DatasetName,
+    /// mean ± std accuracy/cost across the seeds
     pub agg: Aggregate,
 }
 
+/// Knobs for the Table 2 regenerator.
 pub struct Table2Options {
+    /// dataset columns (defaults to all five)
     pub datasets: Vec<DatasetName>,
+    /// algorithm rows (defaults to every registered name)
     pub algorithms: Vec<String>,
+    /// seeds per cell
     pub seeds: usize,
     /// override preset rounds (0 = keep preset)
     pub rounds: usize,
+    /// where to write table2.csv / table2.md
     pub results_dir: String,
 }
 
@@ -40,6 +48,8 @@ impl Default for Table2Options {
     }
 }
 
+/// Run every (algorithm × dataset × seed) cell and write the CSV +
+/// markdown outputs.
 pub fn run(lab: &Lab, opts: &Table2Options) -> Result<Vec<Cell>> {
     let mut cells = Vec::new();
     for &dataset in &opts.datasets {

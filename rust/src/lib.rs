@@ -24,6 +24,11 @@
 //! * Substrates in [`util`], [`config`], [`bench_harness`] replace crates
 //!   unavailable in the offline mirror (clap/criterion/serde/proptest).
 
+// Every public item must carry rustdoc; CI builds the docs with
+// `RUSTDOCFLAGS="-D warnings"`, so a missing doc fails the pipeline
+// instead of rotting silently.
+#![warn(missing_docs)]
+
 pub mod algorithms;
 pub mod analysis;
 pub mod bench_harness;

@@ -27,12 +27,19 @@ use crate::sketch::SrhtOperator;
 /// Geometry of one model variant, read from the manifest.
 #[derive(Clone, Copy, Debug)]
 pub struct Geometry {
+    /// parameter count n
     pub n: usize,
+    /// n padded to the next power of two (the FWHT length n′)
     pub npad: usize,
+    /// sketch dimension m
     pub m: usize,
+    /// input feature dimension d
     pub input_dim: usize,
+    /// number of classes
     pub classes: usize,
+    /// training batch rows the HLO artifact was lowered with
     pub train_batch: usize,
+    /// evaluation batch rows the HLO artifact was lowered with
     pub eval_batch: usize,
 }
 
@@ -52,7 +59,9 @@ impl Geometry {
 
 /// Shared PJRT client + manifest.
 pub struct Runtime {
+    /// the CPU PJRT client every executable compiles against
     pub client: PjRtClient,
+    /// parsed `artifacts/manifest.txt`
     pub manifest: Manifest,
 }
 
@@ -104,7 +113,9 @@ impl Runtime {
 /// The five compiled executables of one model variant.
 pub struct ModelExecutables {
     client: PjRtClient,
+    /// the variant's geometry (n, n′, m, batch shapes)
     pub geom: Geometry,
+    /// variant name (`mlp784`, `mlp3072`, …)
     pub variant: String,
     client_step: PjRtLoadedExecutable,
     /// single-output variant: w' as a non-tuple root (device-resident loop)
@@ -119,7 +130,9 @@ pub struct ModelExecutables {
 /// Executables + the bound SRHT operator realization (device-resident).
 pub struct ModelRuntime {
     exes: Arc<ModelExecutables>,
+    /// the variant's geometry (n, n′, m, batch shapes)
     pub geom: Geometry,
+    /// variant name (`mlp784`, `mlp3072`, …)
     pub variant: String,
     dsign_buf: PjRtBuffer,
     sidx_buf: PjRtBuffer,

@@ -12,27 +12,40 @@ use anyhow::{bail, Context, Result};
 /// One artifact record.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ArtifactInfo {
+    /// artifact kind (`client_step`, `sketch`, `eval`, …)
     pub artifact: String,
+    /// model variant (`mlp784`, `mlp3072`, …)
     pub variant: String,
+    /// HLO text file name, relative to the manifest directory
     pub file: String,
+    /// parameter count n
     pub n: usize,
+    /// n padded to the next power of two
     pub npad: usize,
+    /// sketch dimension m
     pub m: usize,
+    /// input feature dimension
     pub input_dim: usize,
+    /// number of classes
     pub classes: usize,
+    /// training batch rows
     pub train_batch: usize,
+    /// evaluation batch rows
     pub eval_batch: usize,
+    /// content hash of the HLO file (build provenance)
     pub sha256: String,
 }
 
 /// Parsed manifest, indexed by (artifact, variant).
 #[derive(Clone, Debug, Default)]
 pub struct Manifest {
+    /// the artifacts directory the file paths resolve against
     pub dir: PathBuf,
     entries: HashMap<(String, String), ArtifactInfo>,
 }
 
 impl Manifest {
+    /// Read and parse `<dir>/manifest.txt`.
     pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
         let dir = dir.as_ref().to_path_buf();
         let path = dir.join("manifest.txt");
@@ -45,6 +58,8 @@ impl Manifest {
         Self::parse(&text, dir)
     }
 
+    /// Parse manifest text (whitespace-separated `key=value` records,
+    /// one artifact per line).
     pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
         let mut entries = HashMap::new();
         for (lineno, line) in text.lines().enumerate() {
@@ -90,6 +105,7 @@ impl Manifest {
         Ok(Manifest { dir, entries })
     }
 
+    /// Look up a record by (artifact kind, variant).
     pub fn get(&self, artifact: &str, variant: &str) -> Result<&ArtifactInfo> {
         self.entries
             .get(&(artifact.to_string(), variant.to_string()))
@@ -98,6 +114,7 @@ impl Manifest {
             })
     }
 
+    /// Every distinct model variant, sorted.
     pub fn variants(&self) -> Vec<String> {
         let mut vs: Vec<String> = self
             .entries
@@ -109,14 +126,17 @@ impl Manifest {
         vs
     }
 
+    /// Absolute path of a record's HLO file.
     pub fn path_for(&self, info: &ArtifactInfo) -> PathBuf {
         self.dir.join(&info.file)
     }
 
+    /// Number of artifact records.
     pub fn len(&self) -> usize {
         self.entries.len()
     }
 
+    /// True when the manifest has no records.
     pub fn is_empty(&self) -> bool {
         self.entries.is_empty()
     }

@@ -72,10 +72,12 @@ impl SignVec {
         self.m
     }
 
+    /// Synonym for [`SignVec::m`].
     pub fn len(&self) -> usize {
         self.m
     }
 
+    /// True for the zero-length sign vector.
     pub fn is_empty(&self) -> bool {
         self.m == 0
     }
@@ -271,7 +273,22 @@ impl VoteAccumulator {
         self.absorbed
     }
 
-    /// Fold one sketch: tally[i] += ±quantize(weight). `weight` is the
+    /// The raw 64.64 fixed-point tally quanta, one per bit — what an
+    /// edge aggregator ships to the root in its merge frame
+    /// (`Payload::TallyFrame`, DESIGN.md §11). Integers, so the wire
+    /// round trip is exact.
+    pub fn quanta(&self) -> &[i128] {
+        &self.tally
+    }
+
+    /// Rebuild a tally from wire quanta (the root's side of the merge
+    /// frame). `merge`-ing the result is bit-identical to having
+    /// absorbed the shard's sketches locally.
+    pub fn from_quanta(quanta: Vec<i128>, absorbed: usize) -> VoteAccumulator {
+        VoteAccumulator { m: quanta.len(), tally: quanta, absorbed }
+    }
+
+    /// Fold one sketch: `tally[i] += ±quantize(weight)`. `weight` is the
     /// vote weight pₖ, or pₖ·cₖ for the scaled linear estimators. O(m);
     /// the sketch is only read and can be dropped immediately after.
     pub fn absorb(&mut self, z: &SignVec, weight: f64) {
@@ -324,6 +341,7 @@ pub struct ScalarTally {
 }
 
 impl ScalarTally {
+    /// Empty (zero) tally.
     pub fn new() -> ScalarTally {
         ScalarTally::default()
     }
@@ -331,6 +349,16 @@ impl ScalarTally {
     /// Add one term (computed in f64, quantized once).
     pub fn add(&mut self, v: f64) {
         self.quanta += quantize_weight(v);
+    }
+
+    /// The raw fixed-point quanta (for the edge→root merge frame).
+    pub fn quanta(&self) -> i128 {
+        self.quanta
+    }
+
+    /// Rebuild from wire quanta (exact inverse of [`ScalarTally::quanta`]).
+    pub fn from_quanta(quanta: i128) -> ScalarTally {
+        ScalarTally { quanta }
     }
 
     /// Fold a sibling shard (exact).

@@ -747,16 +747,19 @@ pub struct SketchPlan {
 }
 
 impl SketchPlan {
+    /// Plan for n′-point transforms (n′ must be a power of two).
     pub fn new(npad: usize) -> SketchPlan {
         assert!(npad > 0);
         assert_pow2(npad);
         SketchPlan { npad, schedule: Schedule::for_len(npad), scratch: AlignedBuf::new(npad) }
     }
 
+    /// The transform length n′ this plan was built for.
     pub fn npad(&self) -> usize {
         self.npad
     }
 
+    /// The precomputed tile/strip schedule driving every pass.
     pub fn schedule(&self) -> Schedule {
         self.schedule
     }

@@ -189,7 +189,9 @@ impl SrhtOperator {
 /// is exactly the point of the ablation: see `benches/bench_fwht.rs`.
 #[derive(Clone, Debug)]
 pub struct DenseGaussianOperator {
+    /// original dimension n
     pub n: usize,
+    /// sketch dimension m
     pub m: usize,
     seed: u64,
     // Arc<OnceLock>, not Rc<OnceCell>: clients sketch concurrently during
@@ -199,6 +201,7 @@ pub struct DenseGaussianOperator {
 }
 
 impl DenseGaussianOperator {
+    /// Build from a seed (matrix materializes lazily on first use).
     pub fn from_seed(seed: u64, n: usize, m: usize) -> Self {
         DenseGaussianOperator {
             n,
@@ -301,6 +304,7 @@ impl DenseGaussianOperator {
         out
     }
 
+    /// One-bit sketch sign(Gw) as ±1 lanes (sign(0) := +1).
     pub fn sketch_sign(&self, w: &[f32]) -> Vec<f32> {
         self.forward(w)
             .into_iter()
@@ -308,6 +312,7 @@ impl DenseGaussianOperator {
             .collect()
     }
 
+    /// One-bit sketch packed for transport.
     pub fn sketch_sign_packed(&self, w: &[f32]) -> SignVec {
         SignVec::from_signs(&self.forward(w))
     }
@@ -316,11 +321,14 @@ impl DenseGaussianOperator {
 /// Either projection, so algorithms can be generic over Appendix Fig. 3.
 #[derive(Clone, Debug)]
 pub enum Projection {
+    /// the paper's structured SRHT operator
     Srht(SrhtOperator),
+    /// the dense Gaussian ablation operator
     Dense(DenseGaussianOperator),
 }
 
 impl Projection {
+    /// Sketch dimension m.
     pub fn m(&self) -> usize {
         match self {
             Projection::Srht(op) => op.m,
@@ -328,6 +336,7 @@ impl Projection {
         }
     }
 
+    /// Forward sketch z = Φw.
     pub fn forward(&self, w: &[f32]) -> Vec<f32> {
         match self {
             Projection::Srht(op) => op.forward(w),
@@ -335,6 +344,7 @@ impl Projection {
         }
     }
 
+    /// Adjoint g = Φᵀv.
     pub fn adjoint(&self, v: &[f32]) -> Vec<f32> {
         match self {
             Projection::Srht(op) => op.adjoint(v),
@@ -351,6 +361,7 @@ impl Projection {
         }
     }
 
+    /// One-bit sketch sign(Φw) as ±1 lanes.
     pub fn sketch_sign(&self, w: &[f32]) -> Vec<f32> {
         match self {
             Projection::Srht(op) => op.sketch_sign(w),

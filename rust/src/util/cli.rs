@@ -10,6 +10,7 @@ use anyhow::{bail, Context, Result};
 /// Parsed command line: one positional subcommand + key/value options.
 #[derive(Clone, Debug, Default)]
 pub struct Args {
+    /// the positional subcommand, when one was given
     pub subcommand: Option<String>,
     opts: BTreeMap<String, String>,
     /// keys the program has read — for unknown-option detection
@@ -50,6 +51,7 @@ impl Args {
         Ok(args)
     }
 
+    /// Parse the process arguments (argv[0] excluded).
     pub fn from_env() -> Result<Args> {
         Args::parse(std::env::args().skip(1))
     }
@@ -58,15 +60,19 @@ impl Args {
         self.seen.borrow_mut().push(key.to_string());
     }
 
+    /// Look up an option's raw value (marks the key as known).
     pub fn get(&self, key: &str) -> Option<&str> {
         self.mark(key);
         self.opts.get(key).map(|s| s.as_str())
     }
 
+    /// String option with a default.
     pub fn str_or(&self, key: &str, default: &str) -> String {
         self.get(key).unwrap_or(default).to_string()
     }
 
+    /// Parsed option with a default; a present-but-unparsable value is
+    /// an error naming the key.
     pub fn parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
     where
         T::Err: std::fmt::Display,
@@ -79,10 +85,12 @@ impl Args {
         }
     }
 
+    /// Option that must be present.
     pub fn required(&self, key: &str) -> Result<&str> {
         self.get(key).with_context(|| format!("missing required --{key}"))
     }
 
+    /// Boolean flag: `--key`, `--key=true`, `--key 1`, `--key yes`.
     pub fn flag(&self, key: &str) -> bool {
         matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
     }

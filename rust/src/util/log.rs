@@ -6,18 +6,25 @@
 use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::Once;
 
+/// Log severity, most severe first.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Level {
+    /// unrecoverable problems
     Error = 0,
+    /// suspicious-but-survivable conditions
     Warn = 1,
+    /// round/run progress (the default level)
     Info = 2,
+    /// verbose diagnostics
     Debug = 3,
+    /// per-step firehose
     Trace = 4,
 }
 
 static LEVEL: AtomicU8 = AtomicU8::new(2);
 static INIT: Once = Once::new();
 
+/// Read `PFED1BS_LOG` once and set the global level accordingly.
 pub fn init_from_env() {
     INIT.call_once(|| {
         if let Ok(v) = std::env::var("PFED1BS_LOG") {
@@ -33,14 +40,18 @@ pub fn init_from_env() {
     });
 }
 
+/// Set the global log level.
 pub fn set_level(l: Level) {
     LEVEL.store(l as u8, Ordering::Relaxed);
 }
 
+/// Would a message at level `l` currently be emitted?
 pub fn enabled(l: Level) -> bool {
     (l as u8) <= LEVEL.load(Ordering::Relaxed)
 }
 
+/// Emit one message to stderr if the level is enabled (the macros below
+/// route through here).
 pub fn log(l: Level, msg: std::fmt::Arguments) {
     if enabled(l) {
         eprintln!("[{}] {}", tag(l), msg);
@@ -57,14 +68,18 @@ fn tag(l: Level) -> &'static str {
     }
 }
 
+/// Log at [`Level::Info`] with `format!` syntax.
 #[macro_export]
 macro_rules! info {
     ($($arg:tt)*) => { $crate::util::log::log($crate::util::log::Level::Info, format_args!($($arg)*)) };
 }
+/// Log at [`Level::Warn`] (`warn_` — `warn` collides with the built-in
+/// lint attribute namespace in some positions).
 #[macro_export]
 macro_rules! warn_ {
     ($($arg:tt)*) => { $crate::util::log::log($crate::util::log::Level::Warn, format_args!($($arg)*)) };
 }
+/// Log at [`Level::Debug`] with `format!` syntax.
 #[macro_export]
 macro_rules! debug {
     ($($arg:tt)*) => { $crate::util::log::log($crate::util::log::Level::Debug, format_args!($($arg)*)) };

@@ -22,6 +22,7 @@ pub struct Rng {
 }
 
 impl Rng {
+    /// Seed a generator (any u64; SplitMix64 whitens it).
     pub fn new(seed: u64) -> Self {
         let mut sm = seed;
         let s = [
@@ -39,6 +40,7 @@ impl Rng {
         Rng::new(splitmix64(&mut sm))
     }
 
+    /// Next 64 uniform bits.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let result = (self.s[0].wrapping_add(self.s[3]))
@@ -54,6 +56,7 @@ impl Rng {
         result
     }
 
+    /// Next 32 uniform bits (the generator's high half).
     #[inline]
     pub fn next_u32(&mut self) -> u32 {
         (self.next_u64() >> 32) as u32

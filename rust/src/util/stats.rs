@@ -12,6 +12,7 @@ pub struct OnlineStats {
 }
 
 impl OnlineStats {
+    /// Empty accumulator.
     pub fn new() -> Self {
         OnlineStats {
             n: 0,
@@ -22,6 +23,7 @@ impl OnlineStats {
         }
     }
 
+    /// Fold one observation.
     pub fn push(&mut self, x: f64) {
         self.n += 1;
         let delta = x - self.mean;
@@ -31,10 +33,12 @@ impl OnlineStats {
         self.max = self.max.max(x);
     }
 
+    /// Observations folded so far.
     pub fn count(&self) -> u64 {
         self.n
     }
 
+    /// Running mean (0 when empty).
     pub fn mean(&self) -> f64 {
         self.mean
     }
@@ -48,14 +52,17 @@ impl OnlineStats {
         }
     }
 
+    /// Sample standard deviation.
     pub fn stddev(&self) -> f64 {
         self.variance().sqrt()
     }
 
+    /// Smallest observation (+∞ when empty).
     pub fn min(&self) -> f64 {
         self.min
     }
 
+    /// Largest observation (−∞ when empty).
     pub fn max(&self) -> f64 {
         self.max
     }

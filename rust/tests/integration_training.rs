@@ -344,6 +344,138 @@ fn scenario_rounds_meter_stragglers_and_bound_delivery() {
     );
 }
 
+/// Tentpole acceptance at full engine level: a real training run under
+/// `edge:4` must reproduce the flat run's consensus and personalized
+/// models bit-for-bit (exact tally kinds — DESIGN.md §11), keep the
+/// client-tier byte metering byte-identical, and additionally meter the
+/// edge tier (root→edge fan-out + edge→root merge frames).
+#[test]
+fn edge_topology_run_matches_flat_bit_for_bit_and_meters_the_edge_tier() {
+    if !artifacts_available() {
+        return;
+    }
+    let lab = Lab::new("artifacts").expect("lab");
+    let m = lab.executables("mlp784").unwrap().geom.m;
+    let per_msg = (5 + m.div_ceil(64) * 8) as u64;
+    let tally_frame = (33 + 16 * m) as u64;
+
+    let mut snaps = Vec::new();
+    for topology in ["flat", "edge:4"] {
+        let mut cfg = short_cfg("pfed1bs");
+        cfg.rounds = 3;
+        cfg.apply_pairs([("topology", topology)].into_iter()).unwrap();
+        cfg.validate().unwrap();
+        let model = lab.model_for(&cfg).unwrap();
+        let mut alg = algorithms::build("pfed1bs").unwrap();
+        let mut coord = Coordinator::new(cfg.clone(), &model);
+        let result = coord.run(alg.as_mut()).unwrap();
+
+        for (t, rec) in result.history.records.iter().enumerate() {
+            // client tier: byte-identical to the flat assertions of
+            // `per_round_byte_totals_match_known_good_values`
+            let s = cfg.participating as u64;
+            assert_eq!(rec.bytes.uplink, s * per_msg, "{topology} round {t} uplink");
+            let down = if t == 0 { 0 } else { s * per_msg };
+            assert_eq!(rec.bytes.downlink, down, "{topology} round {t} downlink");
+            match topology {
+                "flat" => {
+                    assert_eq!(rec.edges, 0);
+                    assert_eq!((rec.bytes.edge_up, rec.bytes.edge_down), (0, 0));
+                }
+                _ => {
+                    assert_eq!(rec.edges, 4);
+                    // 20 clients cover all 4 edges: 4 merge frames per
+                    // round, 4 fan-out copies whenever v broadcasts
+                    assert_eq!(rec.bytes.edge_up_msgs, 4, "{topology} round {t}");
+                    assert_eq!(rec.bytes.edge_up, 4 * tally_frame);
+                    let fan = if t == 0 { 0 } else { 4 };
+                    assert_eq!(rec.bytes.edge_down_msgs, fan);
+                    assert_eq!(rec.bytes.edge_down, fan as u64 * per_msg);
+                }
+            }
+        }
+        snaps.push((
+            alg.snapshot(),
+            alg.consensus_packed().unwrap().words().to_vec(),
+            result.final_accuracy,
+        ));
+    }
+    assert_eq!(
+        snaps[0].1, snaps[1].1,
+        "edge:4 consensus words must equal the flat server's bit-for-bit"
+    );
+    assert_eq!(snaps[0].0, snaps[1].0, "personalized models diverged under edge:4");
+    assert_eq!(snaps[0].2, snaps[1].2);
+}
+
+/// Checkpoint satellite: edge assignment is derived, not persisted — a
+/// checkpoint taken mid-run under `edge:4` must carry exactly the flat
+/// run's state (plus the informational edge count), and resuming from
+/// either checkpoint must replay the remaining rounds identically.
+#[test]
+fn checkpoint_resume_replays_identically_flat_vs_edge4() {
+    if !artifacts_available() {
+        return;
+    }
+    let lab = Lab::new("artifacts").expect("lab");
+    let dir = std::env::temp_dir().join(format!("pfed1bs_topo_ckpt_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let mut ckpts = Vec::new();
+    for topology in ["flat", "edge:4"] {
+        let mut cfg = short_cfg("pfed1bs");
+        cfg.rounds = 2;
+        cfg.apply_pairs([("topology", topology)].into_iter()).unwrap();
+        let path = dir.join(format!("{}.ckpt", topology.replace(':', "_")));
+        let model = lab.model_for(&cfg).unwrap();
+        let mut alg = algorithms::build("pfed1bs").unwrap();
+        let mut coord = Coordinator::new(cfg, &model);
+        coord.checkpoint = Some((path.to_str().unwrap().to_string(), 2));
+        coord.run(alg.as_mut()).unwrap();
+        ckpts.push(pfed1bs::coordinator::Checkpoint::load(&path).unwrap());
+    }
+    let (flat, edged) = (&ckpts[0], &ckpts[1]);
+    assert_eq!(flat.edges, 0, "flat checkpoint records no edge tier");
+    assert_eq!(edged.edges, 4, "edge:4 checkpoint records its edge count");
+    assert_eq!(flat.round, edged.round);
+    assert_eq!(
+        flat.consensus, edged.consensus,
+        "topology leaked into checkpointed consensus"
+    );
+    assert_eq!(flat.models, edged.models, "topology leaked into checkpointed models");
+
+    // resume both and replay two more rounds (driven through the public
+    // round API — `Coordinator::run` would re-init and wipe the
+    // restored state) — trajectories must match bit-for-bit
+    let mut finals = Vec::new();
+    for (topology, ckpt) in [("flat", flat), ("edge:4", edged)] {
+        let mut cfg = short_cfg("pfed1bs");
+        cfg.rounds = 2;
+        cfg.apply_pairs([("topology", topology)].into_iter()).unwrap();
+        let model = lab.model_for(&cfg).unwrap();
+        let mut alg = algorithms::build("pfed1bs").unwrap();
+        let mut coord = Coordinator::new(cfg, &model);
+        coord.init_algorithm(alg.as_mut()).unwrap();
+        alg.restore(ckpt.models.clone(), ckpt.consensus.clone()).unwrap();
+        let selected: Vec<usize> = (0..coord.cfg.participating).collect();
+        let weights = {
+            let raw: Vec<f32> = selected.iter().map(|&k| coord.data.weights[k]).collect();
+            let total: f32 = raw.iter().sum();
+            raw.into_iter().map(|w| w / total).collect::<Vec<f32>>()
+        };
+        for t in ckpt.round as usize..ckpt.round as usize + 2 {
+            coord.run_round(alg.as_mut(), t, &selected, &weights).unwrap();
+            coord.net.end_round();
+        }
+        // model + consensus state is exact under both topologies; the
+        // f64 loss mean may reassociate across shard merges, so it is
+        // deliberately not part of this bit-equality
+        finals.push(alg.snapshot());
+    }
+    assert_eq!(finals[0], finals[1], "resumed replay diverged between topologies");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 #[test]
 fn noisy_uplink_and_partial_participation() {
     if !artifacts_available() {

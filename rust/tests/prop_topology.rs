@@ -1,0 +1,332 @@
+//! Property tests for the hierarchical (client → edge → root)
+//! aggregation topology (DESIGN.md §11). No PJRT runtime needed: these
+//! drive the aggregation layer with synthetic client outputs.
+//!
+//! THE topology theorem, pinned here: for every exact `AggKind`
+//! (Vote / ScaledVote / SignSum / SketchSum), splitting the delivered
+//! uplinks across E edge shards — under an ARBITRARY client→edge
+//! assignment, E ∈ 1..8, absorbed through the engine's own
+//! `par_map_consume` at ≥2 thread counts — and merging the shards in
+//! canonical edge order is bit-identical to the flat server absorbing
+//! the same uplinks in arrival order. The edge→root wire frames
+//! (`Payload::TallyFrame`) carry the shards exactly: folding decoded
+//! frames reproduces the same bits.
+
+use pfed1bs::algorithms::{
+    AggKind, Algorithm, ClientOutput, ClientStats, RoundAggregator, ServerCtx, Uplink,
+};
+use pfed1bs::comm::{decode, encode, Payload, SimNetwork};
+use pfed1bs::config::{RunConfig, Topology};
+use pfed1bs::coordinator::parallel::par_map_consume;
+use pfed1bs::data::DatasetName;
+use pfed1bs::sketch::bitpack::{ScalarTally, SignVec, VoteAccumulator};
+use pfed1bs::sketch::{Projection, SrhtOperator};
+use pfed1bs::util::proptest::check;
+use pfed1bs::util::rng::Rng;
+
+/// The four exact aggregation kinds under test.
+#[derive(Clone, Copy, Debug)]
+enum Kind {
+    Vote,
+    ScaledVote,
+    SignSum,
+    SketchSum,
+}
+
+const KINDS: [Kind; 4] = [Kind::Vote, Kind::ScaledVote, Kind::SignSum, Kind::SketchSum];
+
+fn fresh(kind: Kind, m: usize) -> RoundAggregator {
+    RoundAggregator::new(match kind {
+        Kind::Vote => AggKind::Vote(VoteAccumulator::new(m)),
+        Kind::ScaledVote => AggKind::ScaledVote {
+            tally: VoteAccumulator::new(m),
+            scale: ScalarTally::new(),
+        },
+        Kind::SignSum => AggKind::SignSum(VoteAccumulator::new(m)),
+        Kind::SketchSum => AggKind::SketchSum {
+            tally: VoteAccumulator::new(m),
+            norm: ScalarTally::new(),
+        },
+    })
+}
+
+fn rand_output(kind: Kind, rng: &mut Rng, client: usize, m: usize) -> ClientOutput {
+    let signs = SignVec::from_fn(m, |_| rng.f32() < 0.5);
+    let payload = match kind {
+        Kind::Vote => Payload::Signs(signs),
+        _ => Payload::ScaledSigns { signs, scale: rng.f32() * 3.0 + 0.01 },
+    };
+    ClientOutput {
+        client,
+        uplink: Some(Uplink::new(0, payload)),
+        state: Some(vec![client as f32]),
+        stats: ClientStats { loss: rng.f64() * 5.0 },
+    }
+}
+
+/// The bit-level fingerprint of an aggregator's server-state content:
+/// every tally quantum, the scalar companion, and the absorbed count.
+fn fingerprint(agg: RoundAggregator) -> (Vec<i128>, i128, usize) {
+    let (kind, _, absorbed, _) = agg.into_parts();
+    match kind {
+        AggKind::Vote(t) | AggKind::SignSum(t) => (t.quanta().to_vec(), 0, absorbed),
+        AggKind::ScaledVote { tally, scale } => {
+            (tally.quanta().to_vec(), scale.quanta(), absorbed)
+        }
+        AggKind::SketchSum { tally, norm } => {
+            (tally.quanta().to_vec(), norm.quanta(), absorbed)
+        }
+        _ => panic!("unexpected kind"),
+    }
+}
+
+#[test]
+fn prop_edge_merge_bit_identical_to_flat_for_all_exact_kinds() {
+    check("topology_bit_identity", 40, |rng| {
+        let k = rng.below(24) + 1;
+        let m = rng.below(300) + 1;
+        for kind in KINDS {
+            let outputs: Vec<ClientOutput> =
+                (0..k).map(|c| rand_output(kind, rng, c, m)).collect();
+            let mut weights: Vec<f32> = (0..k).map(|_| rng.f32() + 0.01).collect();
+            let total: f32 = weights.iter().sum();
+            weights.iter_mut().for_each(|w| *w /= total);
+
+            // the flat oracle: one aggregator, arrival order
+            let mut flat = fresh(kind, m);
+            for (out, &w) in outputs.iter().zip(&weights) {
+                flat.absorb(out.clone(), w).map_err(|e| e.to_string())?;
+            }
+            let want = fingerprint(flat);
+
+            for edges in 1..=8usize {
+                // ARBITRARY assignment — not just k mod E
+                let assign: Vec<usize> = (0..k).map(|_| rng.below(edges)).collect();
+                let mut shards: Vec<RoundAggregator> =
+                    (0..edges).map(|_| fresh(kind, m)).collect();
+                for (i, (out, &w)) in outputs.iter().zip(&weights).enumerate() {
+                    shards[assign[i]]
+                        .absorb(out.clone(), w)
+                        .map_err(|e| e.to_string())?;
+                }
+                // canonical edge-order merge into the root
+                let mut it = shards.into_iter();
+                let mut root = it.next().unwrap();
+                for s in it {
+                    root.merge(s).map_err(|e| e.to_string())?;
+                }
+                if fingerprint(root) != want {
+                    return Err(format!(
+                        "{kind:?}: E={edges} merged tally != flat tally (K={k}, m={m})"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_edge_shards_through_par_map_consume_match_flat_at_any_thread_count() {
+    // the engine's own absorb shape: workers compute, the caller thread
+    // folds each arrival into its edge's shard in a scrambled arrival
+    // order — across thread counts 1 and 4 the merged result must equal
+    // the flat oracle bit-for-bit
+    check("topology_threaded_absorb", 15, |rng| {
+        let k = rng.below(20) + 2;
+        let m = rng.below(200) + 1;
+        let edges = rng.below(8) + 1;
+        for kind in KINDS {
+            let outputs: Vec<ClientOutput> =
+                (0..k).map(|c| rand_output(kind, rng, c, m)).collect();
+            let weights: Vec<f32> = vec![1.0 / k as f32; k];
+            let mut order: Vec<usize> = (0..k).collect();
+            rng.shuffle(&mut order);
+            let assign: Vec<usize> = (0..k).map(|_| rng.below(edges)).collect();
+
+            // flat oracle in the same scrambled arrival order
+            let mut flat = fresh(kind, m);
+            for &i in &order {
+                flat.absorb(outputs[i].clone(), weights[i]).map_err(|e| e.to_string())?;
+            }
+            let want = fingerprint(flat);
+
+            for threads in [1usize, 4] {
+                let mut shards: Vec<RoundAggregator> =
+                    (0..edges).map(|_| fresh(kind, m)).collect();
+                par_map_consume(
+                    outputs.clone(),
+                    threads,
+                    &order,
+                    |_, out: ClientOutput| out, // "compute" = hand back the uplink
+                    |i, out| -> Result<(), String> {
+                        shards[assign[i]]
+                            .absorb(out, weights[i])
+                            .map_err(|e| e.to_string())
+                    },
+                )?;
+                let mut it = shards.into_iter();
+                let mut root = it.next().unwrap();
+                for s in it {
+                    root.merge(s).map_err(|e| e.to_string())?;
+                }
+                if fingerprint(root) != want {
+                    return Err(format!(
+                        "{kind:?}: threads={threads}, E={edges}: engine-shaped \
+                         edge fold != flat oracle"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tally_frames_carry_edge_shards_exactly() {
+    // the edge→root wire path: every shard is encoded to its
+    // Payload::TallyFrame, shipped through the (clean, metered) edge
+    // tier, decoded, and folded with absorb_frame — the root must land
+    // on the identical bits as the in-memory merge, for every exact kind
+    check("topology_wire_frames", 20, |rng| {
+        let k = rng.below(16) + 1;
+        let m = rng.below(200) + 1;
+        let edges = rng.below(6) + 1;
+        for kind in KINDS {
+            let outputs: Vec<ClientOutput> =
+                (0..k).map(|c| rand_output(kind, rng, c, m)).collect();
+            let weights: Vec<f32> = (0..k).map(|_| rng.f32() + 0.01).collect();
+            let assign: Vec<usize> = (0..k).map(|_| rng.below(edges)).collect();
+            let mut shards: Vec<RoundAggregator> =
+                (0..edges).map(|_| fresh(kind, m)).collect();
+            for (i, (out, &w)) in outputs.iter().zip(&weights).enumerate() {
+                shards[assign[i]].absorb(out.clone(), w).map_err(|e| e.to_string())?;
+            }
+
+            let mut net = SimNetwork::new(rng.next_u64());
+            let mut via_wire = fresh(kind, m);
+            let mut frames = 0u32;
+            for (e, shard) in shards.iter().enumerate() {
+                let frame = shard.merge_payload().expect("exact kinds always report");
+                // codec round trip must be exact for arbitrary quanta
+                if decode(&encode(&frame)).map_err(|e| e.to_string())? != frame {
+                    return Err("tally frame codec round trip".into());
+                }
+                let delivered = net.edge_uplink(e, &frame).map_err(|e| e.to_string())?;
+                via_wire.absorb_frame(delivered).map_err(|e| e.to_string())?;
+                frames += 1;
+            }
+            let bytes = net.end_round();
+            if bytes.edge_up_msgs != frames || bytes.edge_up == 0 {
+                return Err("edge tier metering missed merge frames".into());
+            }
+
+            let mut it = shards.into_iter();
+            let mut in_memory = it.next().unwrap();
+            for s in it {
+                in_memory.merge(s).map_err(|e| e.to_string())?;
+            }
+            let (wq, ws, wa) = fingerprint(via_wire);
+            let (mq, ms, ma) = fingerprint(in_memory);
+            if (wq, ws, wa) != (mq, ms, ma) {
+                return Err(format!("{kind:?}: wire-merged root != in-memory root"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Protocol-level pFed1BS check, no artifacts: the hand-computed golden
+/// consensus of `golden_protocol_vote_and_wire_bytes_without_runtime`
+/// (prop_coordinator.rs) must also fall out of an edge-sharded server,
+/// for every assignment of the three clients to two edges.
+#[test]
+fn golden_protocol_vote_survives_every_two_edge_sharding() {
+    let m = 130;
+    let n = 16;
+    let z0 = SignVec::from_fn(m, |i| i % 2 == 0);
+    let z1 = SignVec::from_fn(m, |i| i % 3 == 0);
+    let z2 = SignVec::from_fn(m, |_| true);
+    let weights = [0.5f32, 0.25, 0.25];
+    let want = SignVec::from_fn(m, |i| i % 2 == 0 || i % 3 == 0);
+
+    let cfg = RunConfig::preset(DatasetName::Mnist);
+    let projection = Projection::Srht(SrhtOperator::from_seed(1, n, n));
+    let ctx = ServerCtx { cfg: &cfg, projection: &projection };
+
+    // all 2^3 assignments of three clients to two edges
+    for mask in 0..8u32 {
+        let mut alg = pfed1bs::algorithms::pfed1bs::PFed1BS::with_state(
+            vec![vec![0.0f32; n]; 3],
+            vec![1.0f32; m],
+        );
+        let mut shards = [alg.begin_aggregate(1), alg.begin_aggregate(1)];
+        for (c, z) in [&z0, &z1, &z2].into_iter().enumerate() {
+            let out = ClientOutput {
+                client: c,
+                uplink: Some(Uplink::new(1, Payload::Signs(z.clone()))),
+                state: None,
+                stats: ClientStats::default(),
+            };
+            shards[(mask >> c & 1) as usize].absorb(out, weights[c]).unwrap();
+        }
+        let [mut root, other] = shards;
+        root.merge(other).unwrap();
+        alg.finish_aggregate(1, root, &ctx).unwrap();
+        assert_eq!(
+            alg.consensus_packed().unwrap(),
+            &want,
+            "sharding mask {mask:03b} changed the analytic consensus"
+        );
+    }
+}
+
+/// The engine plan's derived assignment and the failed-edge demotion
+/// compose: a plan with a failed edge delivers no arrival from that
+/// edge, and the surviving weights stay a probability vector.
+#[test]
+fn plan_with_edge_outages_keeps_delivered_weights_normalized() {
+    check("topology_plan_outages", 20, |rng| {
+        let mut cfg = RunConfig::preset(DatasetName::Mnist);
+        cfg.clients = rng.below(30) + 4;
+        cfg.participating = rng.below(cfg.clients) + 1;
+        cfg.topology = Topology::Edge { edges: rng.below(8) + 1 };
+        cfg.edge_dropout_prob = rng.f64() * 0.6;
+        if cfg.edge_dropout_prob == 0.0 {
+            cfg.edge_dropout_prob = 0.3;
+        }
+        cfg.validate().map_err(|e| e.to_string())?;
+        let weights: Vec<f32> = {
+            let raw: Vec<f32> = (0..cfg.clients).map(|_| rng.f32() + 0.01).collect();
+            let t: f32 = raw.iter().sum();
+            raw.into_iter().map(|w| w / t).collect()
+        };
+        let mut net = SimNetwork::new(rng.next_u64());
+        let mut prng = Rng::new(rng.next_u64());
+        for t in 0..4 {
+            let plan =
+                pfed1bs::coordinator::plan_round(t, &cfg, &weights, &mut net, &mut prng);
+            for a in &plan.arrivals {
+                if plan.failed_edges.contains(&cfg.topology.edge_of(a.client)) {
+                    if a.accepted {
+                        return Err("arrival accepted on a failed edge".into());
+                    }
+                    if a.weight != 0.0 {
+                        return Err("stranded arrival kept weight".into());
+                    }
+                }
+            }
+            if plan.delivered > 0 {
+                let sum: f32 =
+                    plan.arrivals.iter().filter(|a| a.accepted).map(|a| a.weight).sum();
+                if (sum - 1.0).abs() > 1e-4 {
+                    return Err(format!("Σp over surviving edges = {sum}"));
+                }
+            }
+            if plan.delivered + plan.stragglers_cut != plan.computing.len() {
+                return Err("lifecycle bookkeeping out of balance".into());
+            }
+        }
+        Ok(())
+    });
+}
