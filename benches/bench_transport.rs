@@ -1,0 +1,54 @@
+//! Socket-transport overhead: what the envelope framing and a real
+//! loopback round trip cost next to the raw codec (bench_codec.rs). The
+//! envelope adds 9 bytes + one length prefix per frame, so encode/decode
+//! should stay a near-memcpy of the codec frame; the loopback row prices
+//! the full OS-socket round trip (write + kernel + read + decode) that
+//! `StreamTransport` pays per uplink — the number that bounds single-
+//! connection rounds/sec for `pfed1bs serve`.
+
+use pfed1bs::bench_harness::{black_box, Bench};
+use pfed1bs::comm::codec::{Payload, TallyFrame};
+use pfed1bs::comm::transport::frame::{decode_body, encode_body, Frame};
+use pfed1bs::comm::{StreamTransport, Transport, Tuning};
+use pfed1bs::sketch::bitpack::SignVec;
+use pfed1bs::util::rng::Rng;
+
+fn main() {
+    let mut b = Bench::new("transport");
+    let mut rng = Rng::new(11);
+    let m = 10_177usize;
+
+    let signs = SignVec::from_fn(m, |_| rng.f32() < 0.5);
+    let uplink = Frame::Uplink { round: 3, client: 7, payload: Payload::Signs(signs.clone()) };
+    let tally = Frame::Tally {
+        round: 3,
+        edge: 1,
+        payload: Payload::TallyFrame(TallyFrame {
+            absorbed: 16,
+            loss_sum: 1.5,
+            scalar: 0,
+            quanta: (0..m).map(|_| rng.next_u64() as i128).collect(),
+        }),
+    };
+
+    for (f, label) in [(&uplink, "uplink_m10177"), (&tally, "tally_m10177")] {
+        let body = encode_body(f);
+        b.bench_elems(&format!("encode_{label}"), m as u64, || {
+            black_box(encode_body(black_box(f)));
+        });
+        b.bench_elems(&format!("decode_{label}"), m as u64, || {
+            black_box(decode_body(black_box(&body)).unwrap());
+        });
+    }
+
+    // the full loopback round trip StreamTransport pays per uplink
+    let mut net = StreamTransport::loopback(11, &Tuning::default()).expect("loopback");
+    let payload = Payload::Signs(signs);
+    b.bench_elems("loopback_uplink_m10177", m as u64, || {
+        black_box(net.uplink_from(0, black_box(&payload)).unwrap());
+    });
+    net.end_round();
+
+    b.report();
+    b.emit_json("transport");
+}

@@ -1,0 +1,69 @@
+//! One multi-process pFed1BS round shape over a real TCP socket, all in
+//! one process (DESIGN.md §12): a root server thread (`pfed1bs serve`'s
+//! internals), a mock client fleet thread (`pfed1bs client-fleet`'s),
+//! and the bit-identity check between the socket run's consensus and the
+//! in-process reference replay.
+//!
+//! ```bash
+//! cargo run --release --example socket_round [CLIENTS] [ROUNDS]
+//! ```
+//!
+//! Needs no PJRT artifacts: the fleet is the deterministic mock protocol
+//! (each sketch keyed on the *received* consensus, so the final words
+//! checksum every byte of every round). The same two halves run as
+//! separate OS processes via `pfed1bs serve` / `pfed1bs client-fleet` —
+//! see the README's multi-process quickstart.
+
+use anyhow::Result;
+use pfed1bs::comm::transport::stream::Listener;
+use pfed1bs::config::{Endpoint, ServeConfig, ServeRole};
+use pfed1bs::serve::{reference_consensus, run_fleet, run_root_on};
+
+fn main() -> Result<()> {
+    let clients: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(64);
+    let rounds: usize = std::env::args().nth(2).and_then(|s| s.parse().ok()).unwrap_or(3);
+
+    let mut root_cfg = ServeConfig::new(ServeRole::Root);
+    root_cfg.clients = clients;
+    root_cfg.participating = (clients / 4).max(1);
+    root_cfg.rounds = rounds;
+
+    // bind an ephemeral port, then hand the resolved address to the fleet
+    let listener = Listener::bind(&Endpoint::parse("tcp:127.0.0.1:0")?)?;
+    let ep = listener.local_endpoint()?;
+    println!(
+        "root listening on {} — {} clients, {} of them per round, {} rounds",
+        ep.summary(),
+        clients,
+        root_cfg.participating,
+        rounds
+    );
+
+    let mut fleet_cfg = ServeConfig::new(ServeRole::Fleet);
+    fleet_cfg.clients = clients;
+    fleet_cfg.conns = 4.min(clients);
+    fleet_cfg.connect = Some(ep);
+    let fleet = std::thread::spawn(move || run_fleet(&fleet_cfg));
+
+    let report = run_root_on(&listener, &root_cfg)?;
+    fleet.join().expect("fleet thread")?;
+
+    println!("{}", report.to_json(&root_cfg));
+    let want = reference_consensus(
+        root_cfg.seed,
+        root_cfg.m,
+        clients,
+        root_cfg.participating,
+        rounds,
+    );
+    assert_eq!(
+        report.consensus, want,
+        "socket-run consensus diverged from the in-process replay"
+    );
+    println!(
+        "consensus over the socket == in-process reference, bit for bit \
+         ({} sketches absorbed, {:.1} rounds/s)",
+        report.absorbed, report.rounds_per_sec
+    );
+    Ok(())
+}

@@ -1,15 +1,19 @@
-//! Simulated bidirectional communication substrate: wire codecs, typed
-//! protocol messages, exact per-client byte shards merged into one
-//! ledger, and an in-process network with independent per-link bit-flip
-//! noise (DESIGN.md §5) plus per-link latency/dropout lifecycle streams
-//! for the event-driven round engine (DESIGN.md §9).
+//! Bidirectional communication substrate: wire codecs, typed protocol
+//! messages, exact per-client byte shards merged into one ledger, an
+//! in-process network with independent per-link bit-flip noise
+//! (DESIGN.md §5) plus per-link latency/dropout lifecycle streams for
+//! the event-driven round engine (DESIGN.md §9), and the [`transport`]
+//! abstraction with a real socket transport (length-prefixed frames over
+//! TCP or Unix-domain sockets — DESIGN.md §12).
 
 pub mod codec;
 pub mod ledger;
 pub mod network;
 pub mod protocol;
+pub mod transport;
 
 pub use codec::{decode, encode, frame_bytes, Payload, TallyFrame};
 pub use ledger::{Direction, Ledger, RoundBytes};
 pub use network::{Channel, LatencyModel, SimNetwork};
 pub use protocol::{Downlink, Uplink};
+pub use transport::{StreamTransport, Transport, Tuning};

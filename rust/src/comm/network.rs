@@ -99,6 +99,36 @@ impl LatencyModel {
             }
         }
     }
+
+    /// One service-time draw from `lifecycle` (milliseconds). Draw-free
+    /// models consume nothing from the stream. Every transport uses this
+    /// single implementation, so scenario traces are
+    /// transport-independent (DESIGN.md §12).
+    pub fn draw(&self, lifecycle: &mut Rng) -> f64 {
+        match *self {
+            LatencyModel::Zero => 0.0,
+            LatencyModel::Fixed { ms } => ms,
+            LatencyModel::Uniform { lo_ms, hi_ms } => lo_ms + (hi_ms - lo_ms) * lifecycle.f64(),
+            LatencyModel::LogNormal { median_ms, sigma } => {
+                (median_ms.ln() + sigma * lifecycle.normal() as f64).exp()
+            }
+        }
+    }
+}
+
+/// The canonical lifecycle stream of client `k` under `seed` — keyed by
+/// `(seed, k)` alone, shared by every [`Transport`](crate::comm::transport::Transport)
+/// impl so dropout/latency traces are identical across transports.
+pub(crate) fn lifecycle_rng(seed: u64, client: usize) -> Rng {
+    let mut l = seed
+        ^ 0x4C49_4645_u64 // "LIFE"
+        ^ (client as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    Rng::new(splitmix64(&mut l))
+}
+
+/// One dropout draw from a lifecycle stream; `p == 0` consumes nothing.
+pub(crate) fn dropout_draw(lifecycle: &mut Rng, p: f64) -> bool {
+    p > 0.0 && lifecycle.f64() < p
 }
 
 /// One client's link to the server: its own byte shard, noise stream,
@@ -121,10 +151,7 @@ impl Channel {
             ^ 0x4E45_5457_u64 // "NETW"
             ^ (client as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
         let rng = Rng::new(splitmix64(&mut s));
-        let mut l = seed
-            ^ 0x4C49_4645_u64 // "LIFE"
-            ^ (client as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
-        let lifecycle = Rng::new(splitmix64(&mut l));
+        let lifecycle = lifecycle_rng(seed, client);
         Channel { shard: RoundBytes::default(), rng, lifecycle }
     }
 
@@ -132,23 +159,14 @@ impl Channel {
     /// lifecycle stream. Deterministic in `(seed, k, draw index)`;
     /// draw-free models consume nothing.
     pub fn draw_latency(&mut self, model: &LatencyModel) -> f64 {
-        match *model {
-            LatencyModel::Zero => 0.0,
-            LatencyModel::Fixed { ms } => ms,
-            LatencyModel::Uniform { lo_ms, hi_ms } => {
-                lo_ms + (hi_ms - lo_ms) * self.lifecycle.f64()
-            }
-            LatencyModel::LogNormal { median_ms, sigma } => {
-                (median_ms.ln() + sigma * self.lifecycle.normal() as f64).exp()
-            }
-        }
+        model.draw(&mut self.lifecycle)
     }
 
     /// Does this client drop out of the current round (unreachable after
     /// the broadcast: no local work, no uplink)? `p == 0` consumes no
     /// draw, so default configs leave the stream untouched.
     pub fn draw_dropout(&mut self, p: f64) -> bool {
-        p > 0.0 && self.lifecycle.f64() < p
+        dropout_draw(&mut self.lifecycle, p)
     }
 
     /// Bytes metered on this link in the current (open) round.

@@ -1,0 +1,509 @@
+//! Length-prefixed wire framing for socket transports (DESIGN.md §12).
+//!
+//! Every frame on a stream is `u32 LE body length | body`; the body is
+//! `kind byte | kind-specific fields`, and the payload-carrying kinds
+//! embed one golden-tested codec frame (codec.rs) verbatim — the framing
+//! layer is a pure envelope around the bytes `SimNetwork` already
+//! meters, which is what makes the bit-identity argument of
+//! DESIGN.md §12 a layering fact rather than a test hope:
+//!
+//! ```text
+//! HELLO    01 | magic "PF1B" | version u16 | role u8 | lo u32 | hi u32 | m u32 | flags u8
+//! WELCOME  02 | magic "PF1B" | version u16 | m u32 | seed u64 | rounds u32 | participating u32 | clients u32
+//! DOWNLINK 03 | round u32 | client u32 | codec frame
+//! UPLINK   04 | round u32 | client u32 | codec frame
+//! TALLY    05 | round u32 | edge u32   | codec frame (must be tag-4 TallyFrame)
+//! ACK      06 | round u32 | client u32
+//! BYE      07
+//! ```
+//!
+//! All integers are little-endian, matching the codec. Decoding is
+//! strict: exact body lengths, known kinds/roles/flags only, magic and
+//! version checked on both handshake kinds, and the length prefix is
+//! capped **before** any allocation — a hostile or corrupt peer yields
+//! `Err`, never a panic or an unbounded `Vec`.
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, Context, Result};
+
+use crate::comm::codec::{decode, encode, Payload};
+
+/// Handshake magic: the first bytes a peer must present after the
+/// kind byte. Anything else is not a pFed1BS endpoint.
+pub const MAGIC: [u8; 4] = *b"PF1B";
+
+/// Wire protocol version, bumped on any framing change. Peers with a
+/// different version are rejected during the handshake.
+pub const PROTOCOL_VERSION: u16 = 1;
+
+/// Default hard cap on a single frame's body length. Generous (the
+/// largest honest frame is a TallyFrame: 9 + 33 + 16·m bytes, ~1.6 MB
+/// at m = 10^5) but finite, so a malicious length prefix cannot drive
+/// an allocation.
+pub const DEFAULT_MAX_FRAME: usize = 64 << 20;
+
+/// Frame kind: client/edge → root greeting.
+pub const KIND_HELLO: u8 = 1;
+/// Frame kind: root → peer handshake reply carrying the run parameters.
+pub const KIND_WELCOME: u8 = 2;
+/// Frame kind: server → client payload (consensus broadcast / notify).
+pub const KIND_DOWNLINK: u8 = 3;
+/// Frame kind: client → server payload (one-bit sketch).
+pub const KIND_UPLINK: u8 = 4;
+/// Frame kind: edge → root merge frame (must carry a `TallyFrame`).
+pub const KIND_TALLY: u8 = 5;
+/// Frame kind: root → client absorb acknowledgment (loadgen latency).
+pub const KIND_ACK: u8 = 6;
+/// Frame kind: orderly shutdown notice (no body fields).
+pub const KIND_BYE: u8 = 7;
+
+/// Hello flag bit: the peer wants a [`Frame::Ack`] after each of its
+/// uplinks is absorbed (how loadgen measures uplink-to-absorb latency).
+pub const FLAG_WANT_ACK: u8 = 1;
+
+/// Human-readable name of a frame kind (for error messages).
+pub fn kind_name(kind: u8) -> &'static str {
+    match kind {
+        KIND_HELLO => "HELLO",
+        KIND_WELCOME => "WELCOME",
+        KIND_DOWNLINK => "DOWNLINK",
+        KIND_UPLINK => "UPLINK",
+        KIND_TALLY => "TALLY",
+        KIND_ACK => "ACK",
+        KIND_BYE => "BYE",
+        _ => "UNKNOWN",
+    }
+}
+
+/// Who a connecting peer claims to be in its [`Hello`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PeerRole {
+    /// a multiplexed fleet of simulated clients (`pfed1bs client-fleet`)
+    Fleet,
+    /// an edge aggregator relaying a client range (`pfed1bs edge`)
+    Edge,
+    /// a load-generation fleet that wants per-uplink ACKs
+    Loadgen,
+}
+
+impl PeerRole {
+    /// Wire byte for this role.
+    pub fn as_u8(self) -> u8 {
+        match self {
+            PeerRole::Fleet => 0,
+            PeerRole::Edge => 1,
+            PeerRole::Loadgen => 2,
+        }
+    }
+
+    /// Parse a wire byte; unknown roles are a handshake error.
+    pub fn from_u8(b: u8) -> Result<PeerRole> {
+        Ok(match b {
+            0 => PeerRole::Fleet,
+            1 => PeerRole::Edge,
+            2 => PeerRole::Loadgen,
+            other => bail!("hello frame: unknown peer role {other}"),
+        })
+    }
+}
+
+/// The peer → root greeting: who the peer is and which client ids it
+/// multiplexes. `hi = 0` means "every client the root has"; `m = 0`
+/// means the peer takes the sketch dimension from the [`Welcome`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Hello {
+    /// what kind of peer this connection carries
+    pub role: PeerRole,
+    /// first client id served over this connection (inclusive)
+    pub lo: u32,
+    /// one past the last client id (exclusive); 0 ⇒ the full fleet
+    pub hi: u32,
+    /// expected sketch dimension; 0 ⇒ unpinned (adopt the root's)
+    pub m: u32,
+    /// request a [`Frame::Ack`] after each absorbed uplink
+    pub want_ack: bool,
+}
+
+/// The root → peer handshake reply: the run parameters every peer needs
+/// to replicate selections and mock sketches deterministically.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Welcome {
+    /// sketch dimension m
+    pub m: u32,
+    /// the run seed all mock streams derive from
+    pub seed: u64,
+    /// total rounds T the root will drive
+    pub rounds: u32,
+    /// uplinks absorbed per round (S)
+    pub participating: u32,
+    /// total fleet size K
+    pub clients: u32,
+}
+
+/// A decoded stream frame.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frame {
+    /// peer → root greeting
+    Hello(Hello),
+    /// root → peer handshake reply
+    Welcome(Welcome),
+    /// server → client payload
+    Downlink {
+        /// round index
+        round: u32,
+        /// recipient client id
+        client: u32,
+        /// the codec payload, embedded verbatim
+        payload: Payload,
+    },
+    /// client → server payload
+    Uplink {
+        /// round index
+        round: u32,
+        /// sender client id
+        client: u32,
+        /// the codec payload, embedded verbatim
+        payload: Payload,
+    },
+    /// edge → root merge frame
+    Tally {
+        /// round index
+        round: u32,
+        /// sender edge id
+        edge: u32,
+        /// must be [`Payload::TallyFrame`] (enforced on decode)
+        payload: Payload,
+    },
+    /// root → client absorb acknowledgment
+    Ack {
+        /// round index
+        round: u32,
+        /// the client whose uplink was absorbed
+        client: u32,
+    },
+    /// orderly shutdown notice
+    Bye,
+}
+
+impl Frame {
+    /// This frame's wire kind byte.
+    pub fn kind(&self) -> u8 {
+        match self {
+            Frame::Hello(_) => KIND_HELLO,
+            Frame::Welcome(_) => KIND_WELCOME,
+            Frame::Downlink { .. } => KIND_DOWNLINK,
+            Frame::Uplink { .. } => KIND_UPLINK,
+            Frame::Tally { .. } => KIND_TALLY,
+            Frame::Ack { .. } => KIND_ACK,
+            Frame::Bye => KIND_BYE,
+        }
+    }
+}
+
+fn put_magic_version(out: &mut Vec<u8>) {
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&PROTOCOL_VERSION.to_le_bytes());
+}
+
+fn check_magic_version(b: &[u8]) -> Result<()> {
+    if b[0..4] != MAGIC {
+        bail!("handshake magic {:02x?} is not {:02x?} — not a pFed1BS peer", &b[0..4], MAGIC);
+    }
+    let v = u16::from_le_bytes(b[4..6].try_into().unwrap());
+    if v != PROTOCOL_VERSION {
+        bail!("protocol version mismatch: ours is {PROTOCOL_VERSION}, peer sent {v}");
+    }
+    Ok(())
+}
+
+fn u32_at(b: &[u8], at: usize) -> u32 {
+    u32::from_le_bytes(b[at..at + 4].try_into().unwrap())
+}
+
+/// Encode a frame body (everything after the u32 length prefix).
+pub fn encode_body(f: &Frame) -> Vec<u8> {
+    match f {
+        Frame::Hello(h) => {
+            let mut out = Vec::with_capacity(21);
+            out.push(KIND_HELLO);
+            put_magic_version(&mut out);
+            out.push(h.role.as_u8());
+            out.extend_from_slice(&h.lo.to_le_bytes());
+            out.extend_from_slice(&h.hi.to_le_bytes());
+            out.extend_from_slice(&h.m.to_le_bytes());
+            out.push(if h.want_ack { FLAG_WANT_ACK } else { 0 });
+            out
+        }
+        Frame::Welcome(w) => {
+            let mut out = Vec::with_capacity(31);
+            out.push(KIND_WELCOME);
+            put_magic_version(&mut out);
+            out.extend_from_slice(&w.m.to_le_bytes());
+            out.extend_from_slice(&w.seed.to_le_bytes());
+            out.extend_from_slice(&w.rounds.to_le_bytes());
+            out.extend_from_slice(&w.participating.to_le_bytes());
+            out.extend_from_slice(&w.clients.to_le_bytes());
+            out
+        }
+        Frame::Downlink { round, client, payload }
+        | Frame::Uplink { round, client, payload }
+        | Frame::Tally { round, edge: client, payload } => {
+            let codec = encode(payload);
+            let mut out = Vec::with_capacity(9 + codec.len());
+            out.push(f.kind());
+            out.extend_from_slice(&round.to_le_bytes());
+            out.extend_from_slice(&client.to_le_bytes());
+            out.extend_from_slice(&codec);
+            out
+        }
+        Frame::Ack { round, client } => {
+            let mut out = Vec::with_capacity(9);
+            out.push(KIND_ACK);
+            out.extend_from_slice(&round.to_le_bytes());
+            out.extend_from_slice(&client.to_le_bytes());
+            out
+        }
+        Frame::Bye => vec![KIND_BYE],
+    }
+}
+
+/// Decode a frame body. Strict: exact lengths per kind, magic/version
+/// validated on handshake kinds, codec payloads decoded by the strict
+/// codec, and `TALLY` must carry a [`Payload::TallyFrame`]. Never
+/// panics, never reads past the slice.
+pub fn decode_body(body: &[u8]) -> Result<Frame> {
+    let Some(&kind) = body.first() else {
+        bail!("empty frame body");
+    };
+    match kind {
+        KIND_HELLO => {
+            if body.len() != 21 {
+                bail!("hello frame: expected 21 bytes, got {}", body.len());
+            }
+            check_magic_version(&body[1..7])?;
+            let role = PeerRole::from_u8(body[7])?;
+            let flags = body[20];
+            if flags & !FLAG_WANT_ACK != 0 {
+                bail!("hello frame: unknown flag bits {flags:#04x}");
+            }
+            Ok(Frame::Hello(Hello {
+                role,
+                lo: u32_at(body, 8),
+                hi: u32_at(body, 12),
+                m: u32_at(body, 16),
+                want_ack: flags & FLAG_WANT_ACK != 0,
+            }))
+        }
+        KIND_WELCOME => {
+            if body.len() != 31 {
+                bail!("welcome frame: expected 31 bytes, got {}", body.len());
+            }
+            check_magic_version(&body[1..7])?;
+            Ok(Frame::Welcome(Welcome {
+                m: u32_at(body, 7),
+                seed: u64::from_le_bytes(body[11..19].try_into().unwrap()),
+                rounds: u32_at(body, 19),
+                participating: u32_at(body, 23),
+                clients: u32_at(body, 27),
+            }))
+        }
+        KIND_DOWNLINK | KIND_UPLINK | KIND_TALLY => {
+            // 9 header bytes + the codec's own 5-byte minimum frame
+            if body.len() < 14 {
+                bail!("{} frame too short ({} bytes)", kind_name(kind), body.len());
+            }
+            let round = u32_at(body, 1);
+            let peer = u32_at(body, 5);
+            let payload = decode(&body[9..])
+                .with_context(|| format!("{} frame payload", kind_name(kind)))?;
+            Ok(match kind {
+                KIND_DOWNLINK => Frame::Downlink { round, client: peer, payload },
+                KIND_UPLINK => Frame::Uplink { round, client: peer, payload },
+                _ => {
+                    if !matches!(payload, Payload::TallyFrame(_)) {
+                        bail!("tally frame must carry a TallyFrame payload");
+                    }
+                    Frame::Tally { round, edge: peer, payload }
+                }
+            })
+        }
+        KIND_ACK => {
+            if body.len() != 9 {
+                bail!("ack frame: expected 9 bytes, got {}", body.len());
+            }
+            Ok(Frame::Ack { round: u32_at(body, 1), client: u32_at(body, 5) })
+        }
+        KIND_BYE => {
+            if body.len() != 1 {
+                bail!("bye frame: expected 1 byte, got {}", body.len());
+            }
+            Ok(Frame::Bye)
+        }
+        other => bail!("unknown frame kind {other}"),
+    }
+}
+
+/// Read one raw frame body off a stream: length prefix, cap check
+/// **before** allocation, then an exact body read. A short read
+/// (truncated frame, mid-frame disconnect) or an oversized prefix is an
+/// `Err`; the stream should be considered dead afterwards.
+pub fn read_body<R: Read>(r: &mut R, max_frame: usize) -> Result<Vec<u8>> {
+    let mut len4 = [0u8; 4];
+    r.read_exact(&mut len4).context("reading frame length prefix")?;
+    let len = u32::from_le_bytes(len4) as usize;
+    if len == 0 {
+        bail!("zero-length frame");
+    }
+    if len > max_frame {
+        // reject BEFORE allocating: a hostile 0xFFFFFFFF prefix must not
+        // reserve 4 GB
+        bail!("frame length {len} exceeds the {max_frame}-byte cap");
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body)
+        .with_context(|| format!("reading {len}-byte frame body"))?;
+    Ok(body)
+}
+
+/// Read and decode one frame; returns the frame and the total bytes it
+/// occupied on the wire (4-byte prefix + body).
+pub fn read_frame<R: Read>(r: &mut R, max_frame: usize) -> Result<(Frame, usize)> {
+    let body = read_body(r, max_frame)?;
+    let frame = decode_body(&body)?;
+    Ok((frame, 4 + body.len()))
+}
+
+/// Write one frame (prefix + body, single `write_all`, flushed); returns
+/// the bytes put on the wire.
+pub fn write_frame<W: Write>(w: &mut W, f: &Frame) -> Result<usize> {
+    let body = encode_body(f);
+    let mut out = Vec::with_capacity(4 + body.len());
+    out.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    out.extend_from_slice(&body);
+    w.write_all(&out)
+        .with_context(|| format!("writing {} frame", kind_name(f.kind())))?;
+    w.flush().context("flushing frame")?;
+    Ok(out.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::bitpack::SignVec;
+    use std::io::Cursor;
+
+    fn hex(bytes: &[u8]) -> String {
+        bytes.iter().map(|b| format!("{b:02x}")).collect()
+    }
+
+    fn unhex(s: &str) -> Vec<u8> {
+        (0..s.len())
+            .step_by(2)
+            .map(|i| u8::from_str_radix(&s[i..i + 2], 16).unwrap())
+            .collect()
+    }
+
+    /// Byte-exact golden bodies. Hand-written, not regenerated from the
+    /// encoder under test: any change here is a wire-protocol break.
+    #[test]
+    fn golden_frame_bodies() {
+        let cases: [(Frame, &str); 5] = [
+            // HELLO: fleet, lo=0, hi=64, m=1024, no flags.
+            // 01 | "PF1B" | version 1 le | role 0 | 0 le | 64 le | 1024 le | 00
+            (
+                Frame::Hello(Hello { role: PeerRole::Fleet, lo: 0, hi: 64, m: 1024, want_ack: false }),
+                "0150463142010000000000004000000000040000 00",
+            ),
+            // HELLO: loadgen wanting ACKs, clients [8, 16), m unpinned
+            (
+                Frame::Hello(Hello { role: PeerRole::Loadgen, lo: 8, hi: 16, m: 0, want_ack: true }),
+                "0150463142010002080000001000000000000000 01",
+            ),
+            // WELCOME: m=130, seed=7, rounds=3, S=16, K=64
+            // 02 | "PF1B" | version 1 le | 130 le | 7 u64 le | 3 le | 16 le | 64 le
+            (
+                Frame::Welcome(Welcome { m: 130, seed: 7, rounds: 3, participating: 16, clients: 64 }),
+                "0250463142010082000000070000000000000000 0300000010000000 40000000",
+            ),
+            // UPLINK round 2, client 7, signs m=64 all +1 (codec golden)
+            (
+                Frame::Uplink {
+                    round: 2,
+                    client: 7,
+                    payload: Payload::Signs(SignVec::from_signs(&[1.0f32; 64])),
+                },
+                "04020000000700000002400000 00ffffffffffffffff",
+            ),
+            (Frame::Ack { round: 2, client: 7 }, "060200000007000000"),
+        ];
+        for (f, want) in &cases {
+            let want: String = want.split_whitespace().collect();
+            assert_eq!(hex(&encode_body(f)), want, "golden encode: {f:?}");
+            assert_eq!(&decode_body(&unhex(&want)).unwrap(), f, "golden decode");
+        }
+        assert_eq!(hex(&encode_body(&Frame::Bye)), "07");
+        assert_eq!(decode_body(&[KIND_BYE]).unwrap(), Frame::Bye);
+    }
+
+    #[test]
+    fn stream_round_trip_reports_wire_bytes() {
+        let f = Frame::Downlink {
+            round: 9,
+            client: 3,
+            payload: Payload::Signs(SignVec::from_fn(65, |i| i % 2 == 0)),
+        };
+        let mut buf = Vec::new();
+        let wrote = write_frame(&mut buf, &f).unwrap();
+        assert_eq!(wrote, buf.len());
+        let (got, read) = read_frame(&mut Cursor::new(&buf), DEFAULT_MAX_FRAME).unwrap();
+        assert_eq!(got, f);
+        assert_eq!(read, wrote);
+    }
+
+    #[test]
+    fn oversized_prefix_rejected_before_allocation() {
+        // 4 GB length prefix against a 1 KB cap: must fail on the prefix
+        // alone, without trying to read (or allocate) the body
+        let mut buf = u32::MAX.to_le_bytes().to_vec();
+        buf.extend_from_slice(&[0u8; 8]);
+        let err = read_frame(&mut Cursor::new(&buf), 1024).unwrap_err();
+        assert!(err.to_string().contains("cap"), "{err}");
+        assert!(read_frame(&mut Cursor::new(&0u32.to_le_bytes()[..]), 1024).is_err());
+    }
+
+    #[test]
+    fn handshake_magic_and_version_enforced() {
+        let hello = Frame::Hello(Hello {
+            role: PeerRole::Edge,
+            lo: 0,
+            hi: 0,
+            m: 0,
+            want_ack: false,
+        });
+        let good = encode_body(&hello);
+        assert_eq!(decode_body(&good).unwrap(), hello);
+        let mut bad_magic = good.clone();
+        bad_magic[1] = b'X';
+        assert!(decode_body(&bad_magic).unwrap_err().to_string().contains("magic"));
+        let mut bad_version = good.clone();
+        bad_version[5] = 99;
+        assert!(decode_body(&bad_version).unwrap_err().to_string().contains("version"));
+        let mut bad_role = good.clone();
+        bad_role[7] = 9;
+        assert!(decode_body(&bad_role).is_err());
+        let mut bad_flags = good;
+        bad_flags[20] = 0x80;
+        assert!(decode_body(&bad_flags).unwrap_err().to_string().contains("flag"));
+    }
+
+    #[test]
+    fn tally_kind_requires_tally_payload() {
+        // a TALLY envelope around a signs payload is a protocol violation
+        let mut body = vec![KIND_TALLY];
+        body.extend_from_slice(&1u32.to_le_bytes());
+        body.extend_from_slice(&0u32.to_le_bytes());
+        body.extend_from_slice(&encode(&Payload::Signs(SignVec::from_signs(&[1.0f32; 64]))));
+        assert!(decode_body(&body).unwrap_err().to_string().contains("TallyFrame"));
+    }
+}

@@ -1,0 +1,157 @@
+//! Transport abstraction: the engine's view of "a network".
+//!
+//! Every byte the coordinator has ever "sent" moved through the
+//! in-process [`SimNetwork`]; this module names the contract that made
+//! that swappable and cashes it in (ROADMAP: from *simulation of*
+//! millions of users to *serving* them). The [`Transport`] trait covers
+//! exactly the surface the round engine uses:
+//!
+//! * client-tier delivery ([`Transport::downlink_to`] /
+//!   [`Transport::uplink_from`]) and edge-tier delivery
+//!   ([`Transport::edge_downlink`] / [`Transport::edge_uplink`]) — each
+//!   takes a codec [`Payload`] and returns the payload **as delivered**
+//!   (the caller must adopt the returned value; a real channel may
+//!   corrupt, a strict decoder may reject);
+//! * per-peer byte metering compatible with [`RoundBytes`] — the unit
+//!   is the codec [`frame_bytes`](crate::comm::codec::frame_bytes) of
+//!   the payload, *not* any envelope a concrete transport wraps around
+//!   it, so cost numbers are transport-independent and comparable to
+//!   the paper's;
+//! * scenario lifecycle draws ([`Transport::draw_dropout`] /
+//!   [`Transport::draw_latency`]) from `(seed, k)`-keyed streams shared
+//!   across impls, so a scenario plan replays identically on any
+//!   transport.
+//!
+//! Two implementations ship: [`SimNetwork`] (the default — byte-for-byte
+//! unchanged, all golden traces hold) and
+//! [`stream::StreamTransport`], which pushes every frame through a real
+//! TCP or Unix-domain socket using the length-prefixed framing of
+//! [`frame`]. DESIGN.md §12 states the bit-identity argument.
+
+pub mod frame;
+pub mod stream;
+
+pub use frame::{Frame, Hello, PeerRole, Welcome, DEFAULT_MAX_FRAME, PROTOCOL_VERSION};
+pub use stream::{connect, FramedConn, Listener, NetStream, StreamTransport, Tuning};
+
+use anyhow::Result;
+
+use crate::comm::codec::Payload;
+use crate::comm::ledger::RoundBytes;
+use crate::comm::network::{LatencyModel, SimNetwork};
+
+/// What the round engine needs from a network. See the module docs for
+/// the delivery/metering/lifecycle contract each method must honor.
+pub trait Transport {
+    /// Server/edge → client `k`; returns the payload as delivered.
+    /// Broadcasts are one call per recipient (delivered copies are what
+    /// the paper's accounting counts — DESIGN.md §5).
+    fn downlink_to(&mut self, k: usize, payload: &Payload) -> Result<Payload>;
+
+    /// Client `k` → server/edge; returns the payload as delivered.
+    fn uplink_from(&mut self, k: usize, payload: &Payload) -> Result<Payload>;
+
+    /// Root → edge aggregator `edge` (hierarchical fan-out, DESIGN.md
+    /// §11). Metered in the edge-tier columns, never the client tier.
+    fn edge_downlink(&mut self, edge: usize, payload: &Payload) -> Result<Payload>;
+
+    /// Edge aggregator `edge` → root (one merge frame per round).
+    fn edge_uplink(&mut self, edge: usize, payload: &Payload) -> Result<Payload>;
+
+    /// Does client `k` drop out of the current round? Must draw from the
+    /// canonical `(seed, k)` lifecycle stream; `p == 0` consumes nothing.
+    fn draw_dropout(&mut self, k: usize, p: f64) -> bool;
+
+    /// Client `k`'s uplink service time (ms) under `model`, from the
+    /// same lifecycle stream; draw-free models consume nothing.
+    fn draw_latency(&mut self, k: usize, model: &LatencyModel) -> f64;
+
+    /// Merge per-peer shards and close the round; returns its totals.
+    fn end_round(&mut self) -> RoundBytes;
+
+    /// All bytes metered so far (closed rounds plus open shards).
+    fn total_bytes(&self) -> u64;
+
+    /// Bytes a concrete transport moved *beyond* the metered codec
+    /// frames (length prefixes, envelopes, handshakes). Zero for the
+    /// in-process simulation; a socket transport reports its real
+    /// framing cost here so the metered numbers stay comparable.
+    fn wire_overhead(&self) -> u64 {
+        0
+    }
+}
+
+// Inherent methods win method resolution on a concrete `SimNetwork`, so
+// existing call sites (and all golden byte tests) are untouched; generic
+// `N: Transport` contexts resolve through this impl, which delegates
+// straight back to those inherent methods.
+impl Transport for SimNetwork {
+    fn downlink_to(&mut self, k: usize, payload: &Payload) -> Result<Payload> {
+        SimNetwork::downlink_to(self, k, payload)
+    }
+
+    fn uplink_from(&mut self, k: usize, payload: &Payload) -> Result<Payload> {
+        SimNetwork::uplink_from(self, k, payload)
+    }
+
+    fn edge_downlink(&mut self, edge: usize, payload: &Payload) -> Result<Payload> {
+        SimNetwork::edge_downlink(self, edge, payload)
+    }
+
+    fn edge_uplink(&mut self, edge: usize, payload: &Payload) -> Result<Payload> {
+        SimNetwork::edge_uplink(self, edge, payload)
+    }
+
+    fn draw_dropout(&mut self, k: usize, p: f64) -> bool {
+        self.channel(k).draw_dropout(p)
+    }
+
+    fn draw_latency(&mut self, k: usize, model: &LatencyModel) -> f64 {
+        self.channel(k).draw_latency(model)
+    }
+
+    fn end_round(&mut self) -> RoundBytes {
+        SimNetwork::end_round(self)
+    }
+
+    fn total_bytes(&self) -> u64 {
+        SimNetwork::total_bytes(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::bitpack::SignVec;
+
+    // a function generic over the trait — the shape the round engine has
+    fn pingpong<N: Transport>(net: &mut N, m: usize) -> (Payload, RoundBytes) {
+        let p = Payload::Signs(SignVec::from_fn(m, |i| i % 2 == 0));
+        let echoed = net.uplink_from(0, &p).unwrap();
+        net.downlink_to(1, &p).unwrap();
+        (echoed, net.end_round())
+    }
+
+    #[test]
+    fn sim_network_satisfies_the_trait_with_unchanged_metering() {
+        let mut net = SimNetwork::new(3);
+        let (echoed, r) = pingpong(&mut net, 64);
+        assert_eq!(echoed, Payload::Signs(SignVec::from_fn(64, |i| i % 2 == 0)));
+        assert_eq!((r.uplink, r.downlink), (13, 13));
+        assert_eq!(Transport::wire_overhead(&net), 0, "simulation has no envelope");
+    }
+
+    #[test]
+    fn trait_lifecycle_draws_equal_inherent_ones() {
+        let model = LatencyModel::Uniform { lo_ms: 0.0, hi_ms: 4.0 };
+        let mut a = SimNetwork::new(7);
+        let mut b = SimNetwork::new(7);
+        for k in [0usize, 2, 2, 1] {
+            assert_eq!(Transport::draw_dropout(&mut a, k, 0.5), b.channel(k).draw_dropout(0.5));
+            assert_eq!(
+                Transport::draw_latency(&mut a, k, &model),
+                b.channel(k).draw_latency(&model)
+            );
+        }
+    }
+}

@@ -1,0 +1,685 @@
+//! Socket-backed byte streams: framed connections over TCP or
+//! Unix-domain sockets, and the loopback [`StreamTransport`] that pushes
+//! every coordinator frame through a real OS socket (DESIGN.md §12).
+//!
+//! Three small layers:
+//!
+//! * [`Listener`] / [`connect`] — endpoint-polymorphic bind/accept/dial
+//!   (with a retry window on connect, since the server side of a
+//!   multi-process run may not be listening yet).
+//! * [`FramedConn`] — one stream + the framing of `frame.rs`, with sent
+//!   and received byte counters and a `split_reader` for the
+//!   reader-thread pattern the serve roles use.
+//! * [`StreamTransport`] — a [`Transport`] whose peer is a spawned
+//!   reflector thread on the other end of a real loopback socket: it
+//!   answers the handshake, then echoes every frame byte-for-byte. The
+//!   engine's payloads genuinely traverse the framing layer, the OS
+//!   socket buffers, and the strict decoder — and the adopted payload is
+//!   whatever came back. Client-tier metering counts exactly the codec
+//!   [`frame_bytes`] like `SimNetwork`, so a clean socket round is
+//!   bit-identical to the clean simulated round; the envelope's extra
+//!   bytes are reported separately via
+//!   [`Transport::wire_overhead`](super::Transport::wire_overhead).
+
+use std::io::{self, Read, Write};
+use std::net::{TcpListener, TcpStream};
+#[cfg(unix)]
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::comm::codec::{frame_bytes, Payload};
+use crate::comm::ledger::{Direction, Ledger, RoundBytes};
+use crate::comm::network::{dropout_draw, lifecycle_rng, LatencyModel};
+use crate::comm::transport::frame::{
+    encode_body, kind_name, read_body, read_frame, write_frame, Frame, Hello, PeerRole, Welcome,
+    DEFAULT_MAX_FRAME, KIND_BYE,
+};
+use crate::comm::transport::Transport;
+use crate::config::Endpoint;
+use crate::util::rng::Rng;
+
+/// Socket tuning knobs shared by every role: per-frame read/write
+/// deadlines and the hard frame-size cap (DESIGN.md §12). A peer that
+/// stalls mid-frame longer than the read timeout yields `Err`, not a
+/// hang.
+#[derive(Clone, Debug)]
+pub struct Tuning {
+    /// read deadline per `read` call (`None` = block forever)
+    pub read_timeout: Option<Duration>,
+    /// write deadline per `write` call (`None` = block forever)
+    pub write_timeout: Option<Duration>,
+    /// hard cap on a frame body's length (checked before allocation)
+    pub max_frame: usize,
+}
+
+impl Default for Tuning {
+    fn default() -> Tuning {
+        Tuning {
+            read_timeout: Some(Duration::from_secs(10)),
+            write_timeout: Some(Duration::from_secs(10)),
+            max_frame: DEFAULT_MAX_FRAME,
+        }
+    }
+}
+
+/// The object-safe byte-stream surface both socket families implement;
+/// what [`FramedConn`] is generic over at runtime.
+pub trait NetStream: Read + Write + Send {
+    /// Apply the tuning's read/write deadlines to this stream.
+    fn apply_tuning(&self, t: &Tuning) -> io::Result<()>;
+    /// An independently owned handle to the same stream (reader threads).
+    fn try_clone_stream(&self) -> io::Result<Box<dyn NetStream>>;
+    /// Close both directions, unblocking any reader on the peer or on a
+    /// cloned handle.
+    fn shutdown_stream(&self) -> io::Result<()>;
+}
+
+impl NetStream for TcpStream {
+    fn apply_tuning(&self, t: &Tuning) -> io::Result<()> {
+        self.set_read_timeout(t.read_timeout)?;
+        self.set_write_timeout(t.write_timeout)?;
+        // frames are latency-measured request/response units; Nagle
+        // batching would put scheduler noise into the loadgen p99
+        self.set_nodelay(true)
+    }
+    fn try_clone_stream(&self) -> io::Result<Box<dyn NetStream>> {
+        Ok(Box::new(self.try_clone()?))
+    }
+    fn shutdown_stream(&self) -> io::Result<()> {
+        self.shutdown(std::net::Shutdown::Both)
+    }
+}
+
+#[cfg(unix)]
+impl NetStream for UnixStream {
+    fn apply_tuning(&self, t: &Tuning) -> io::Result<()> {
+        self.set_read_timeout(t.read_timeout)?;
+        self.set_write_timeout(t.write_timeout)
+    }
+    fn try_clone_stream(&self) -> io::Result<Box<dyn NetStream>> {
+        Ok(Box::new(self.try_clone()?))
+    }
+    fn shutdown_stream(&self) -> io::Result<()> {
+        self.shutdown(std::net::Shutdown::Both)
+    }
+}
+
+/// A bound listening socket for either endpoint family.
+pub enum Listener {
+    /// TCP listener
+    Tcp(TcpListener),
+    /// Unix-domain listener (a stale socket file at the path is removed
+    /// before binding)
+    #[cfg(unix)]
+    Unix(UnixListener),
+}
+
+impl Listener {
+    /// Bind `ep` and start listening.
+    pub fn bind(ep: &Endpoint) -> Result<Listener> {
+        match ep {
+            Endpoint::Tcp(addr) => Ok(Listener::Tcp(
+                TcpListener::bind(addr).with_context(|| format!("binding tcp:{addr}"))?,
+            )),
+            #[cfg(unix)]
+            Endpoint::Unix(path) => {
+                // a crashed previous run leaves its socket file behind;
+                // rebinding the same path must not require manual cleanup
+                let _ = std::fs::remove_file(path);
+                Ok(Listener::Unix(
+                    UnixListener::bind(path).with_context(|| format!("binding unix:{path}"))?,
+                ))
+            }
+            #[cfg(not(unix))]
+            Endpoint::Unix(path) => {
+                bail!("unix endpoint `{path}` is not supported on this platform")
+            }
+        }
+    }
+
+    /// Accept one connection and wrap it in a framed, tuned connection.
+    pub fn accept(&self, tuning: &Tuning) -> Result<FramedConn> {
+        match self {
+            Listener::Tcp(l) => {
+                let (s, _) = l.accept().context("accepting tcp connection")?;
+                FramedConn::new(Box::new(s), tuning)
+            }
+            #[cfg(unix)]
+            Listener::Unix(l) => {
+                let (s, _) = l.accept().context("accepting unix connection")?;
+                FramedConn::new(Box::new(s), tuning)
+            }
+        }
+    }
+
+    /// As [`Listener::accept`], but give up after `deadline` so a peer
+    /// that never dials cannot hang a server forever (polls the
+    /// listener in non-blocking mode).
+    pub fn accept_deadline(&self, tuning: &Tuning, deadline: Duration) -> Result<FramedConn> {
+        let until = Instant::now() + deadline;
+        self.set_nonblocking(true)?;
+        let out = loop {
+            let attempt = match self {
+                Listener::Tcp(l) => l.accept().map(|(s, _)| Box::new(s) as Box<dyn NetStream>),
+                #[cfg(unix)]
+                Listener::Unix(l) => l.accept().map(|(s, _)| Box::new(s) as Box<dyn NetStream>),
+            };
+            match attempt {
+                Ok(s) => break FramedConn::new(s, tuning),
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                    if Instant::now() >= until {
+                        break Err(anyhow::anyhow!(
+                            "no peer connected within {deadline:?}"
+                        ));
+                    }
+                    thread::sleep(Duration::from_millis(20));
+                }
+                Err(e) => break Err(e).context("accepting connection"),
+            }
+        };
+        self.set_nonblocking(false)?;
+        out
+    }
+
+    fn set_nonblocking(&self, nb: bool) -> Result<()> {
+        match self {
+            Listener::Tcp(l) => l.set_nonblocking(nb)?,
+            #[cfg(unix)]
+            Listener::Unix(l) => l.set_nonblocking(nb)?,
+        }
+        Ok(())
+    }
+
+    /// The endpoint this listener is actually bound to — resolves the
+    /// ephemeral port of a `tcp:…:0` bind, so tests and examples can
+    /// hand the real address to their peers.
+    pub fn local_endpoint(&self) -> Result<Endpoint> {
+        match self {
+            Listener::Tcp(l) => Ok(Endpoint::Tcp(l.local_addr()?.to_string())),
+            #[cfg(unix)]
+            Listener::Unix(l) => {
+                let addr = l.local_addr()?;
+                let path = addr
+                    .as_pathname()
+                    .and_then(|p| p.to_str())
+                    .ok_or_else(|| anyhow::anyhow!("unix listener has no pathname"))?;
+                Ok(Endpoint::Unix(path.to_string()))
+            }
+        }
+    }
+}
+
+/// Dial `ep`, retrying for up to `retry_for` (the server side of a
+/// multi-process launch may bind a moment later than the client starts).
+pub fn connect(ep: &Endpoint, tuning: &Tuning, retry_for: Duration) -> Result<FramedConn> {
+    let deadline = Instant::now() + retry_for;
+    loop {
+        let attempt: io::Result<Box<dyn NetStream>> = match ep {
+            Endpoint::Tcp(addr) => TcpStream::connect(addr).map(|s| Box::new(s) as _),
+            #[cfg(unix)]
+            Endpoint::Unix(path) => UnixStream::connect(path).map(|s| Box::new(s) as _),
+            #[cfg(not(unix))]
+            Endpoint::Unix(path) => Err(io::Error::new(
+                io::ErrorKind::Unsupported,
+                format!("unix endpoint `{path}` is not supported on this platform"),
+            )),
+        };
+        match attempt {
+            Ok(s) => return FramedConn::new(s, tuning),
+            Err(e) => {
+                if Instant::now() >= deadline || e.kind() == io::ErrorKind::Unsupported {
+                    return Err(e).with_context(|| format!("connecting to {}", ep.summary()));
+                }
+                thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}
+
+/// One tuned socket speaking the length-prefixed framing, with byte
+/// counters for both directions.
+pub struct FramedConn {
+    stream: Box<dyn NetStream>,
+    max_frame: usize,
+    sent: u64,
+    received: u64,
+}
+
+impl FramedConn {
+    /// Wrap a raw stream: applies the tuning's deadlines and frame cap.
+    pub fn new(stream: Box<dyn NetStream>, tuning: &Tuning) -> Result<FramedConn> {
+        stream.apply_tuning(tuning).context("applying socket timeouts")?;
+        Ok(FramedConn { stream, max_frame: tuning.max_frame, sent: 0, received: 0 })
+    }
+
+    /// Send one frame; returns its wire size (prefix + body).
+    pub fn send(&mut self, f: &Frame) -> Result<usize> {
+        let n = write_frame(&mut self.stream, f)?;
+        self.sent += n as u64;
+        Ok(n)
+    }
+
+    /// Receive one frame (strict decode, capped allocation).
+    pub fn recv(&mut self) -> Result<Frame> {
+        let (f, n) = read_frame(&mut self.stream, self.max_frame)?;
+        self.received += n as u64;
+        Ok(f)
+    }
+
+    /// Client side of the versioned handshake: send `hello`, expect a
+    /// [`Frame::Welcome`] back.
+    pub fn handshake_client(&mut self, hello: &Hello) -> Result<Welcome> {
+        self.send(&Frame::Hello(hello.clone()))?;
+        match self.recv().context("waiting for WELCOME")? {
+            Frame::Welcome(w) => Ok(w),
+            f => bail!("handshake: expected WELCOME, peer sent {}", kind_name(f.kind())),
+        }
+    }
+
+    /// Server side of the versioned handshake: expect a [`Frame::Hello`],
+    /// reply with `welcome`, and hand the hello to the caller.
+    pub fn handshake_server(&mut self, welcome: &Welcome) -> Result<Hello> {
+        let hello = match self.recv().context("waiting for HELLO")? {
+            Frame::Hello(h) => h,
+            f => bail!("handshake: expected HELLO, peer sent {}", kind_name(f.kind())),
+        };
+        self.send(&Frame::Welcome(welcome.clone()))?;
+        Ok(hello)
+    }
+
+    /// An independently owned read handle on the same socket, with its
+    /// own counters — the serve roles park one in a reader thread while
+    /// the original keeps writing.
+    pub fn split_reader(&self) -> Result<FramedConn> {
+        Ok(FramedConn {
+            stream: self.stream.try_clone_stream().context("cloning stream for reader")?,
+            max_frame: self.max_frame,
+            sent: 0,
+            received: 0,
+        })
+    }
+
+    /// Bytes written on this handle.
+    pub fn bytes_sent(&self) -> u64 {
+        self.sent
+    }
+
+    /// Bytes read on this handle.
+    pub fn bytes_received(&self) -> u64 {
+        self.received
+    }
+
+    /// Close both directions (also unblocks a parked `split_reader`).
+    pub fn shutdown(&self) -> io::Result<()> {
+        self.stream.shutdown_stream()
+    }
+}
+
+/// The reflector: answers one HELLO with a parameter-free WELCOME, then
+/// echoes every frame back **byte-for-byte** (it never re-encodes — a
+/// pure channel) until BYE or EOF.
+fn reflect_stream<S: Read + Write>(mut s: S, max_frame: usize) -> Result<()> {
+    let body = read_body(&mut s, max_frame)?;
+    if body.first() != Some(&super::frame::KIND_HELLO) {
+        bail!("reflector: expected HELLO");
+    }
+    write_frame(
+        &mut s,
+        &Frame::Welcome(Welcome { m: 0, seed: 0, rounds: 0, participating: 0, clients: 0 }),
+    )?;
+    loop {
+        let body = match read_body(&mut s, max_frame) {
+            Ok(b) => b,
+            Err(_) => break, // peer closed (or died) — reflector's job is done
+        };
+        if body.first() == Some(&KIND_BYE) {
+            break;
+        }
+        let mut out = Vec::with_capacity(4 + body.len());
+        out.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        out.extend_from_slice(&body);
+        s.write_all(&out)?;
+        s.flush()?;
+    }
+    Ok(())
+}
+
+/// A [`Transport`] over a real loopback socket (DESIGN.md §12).
+///
+/// Construction spawns a reflector thread, binds an ephemeral listener,
+/// connects to it, and completes the versioned handshake. Every
+/// coordinator send then becomes a framed round trip: the payload is
+/// encoded, enveloped, written to the OS socket, read back, strictly
+/// decoded, and **the returned payload is what the engine adopts** — so
+/// the golden codec bytes demonstrably survive a real socket, not just a
+/// function call.
+///
+/// Metering: client-tier counters record exactly the codec
+/// [`frame_bytes`] per delivery (the transport-independent cost the
+/// paper reports — same numbers as `SimNetwork`); envelope bytes (length
+/// prefixes, frame headers, handshake) are tracked separately and
+/// surfaced by [`Transport::wire_overhead`]. Lifecycle draws use the
+/// same `(seed, k)`-keyed streams as `SimNetwork::channel`, so scenario
+/// plans are transport-independent too.
+pub struct StreamTransport {
+    conn: FramedConn,
+    reflector: Option<thread::JoinHandle<()>>,
+    /// the run's byte ledger (rounds closed by `end_round`)
+    pub ledger: Ledger,
+    shards: Vec<RoundBytes>,
+    lifecycle: Vec<Rng>,
+    seed: u64,
+    round: u32,
+    codec_bytes: u64,
+}
+
+impl StreamTransport {
+    /// Loopback transport over an ephemeral TCP socket on 127.0.0.1.
+    pub fn loopback(seed: u64, tuning: &Tuning) -> Result<StreamTransport> {
+        let listener =
+            TcpListener::bind("127.0.0.1:0").context("binding loopback listener")?;
+        let ep = Endpoint::Tcp(listener.local_addr()?.to_string());
+        let max = tuning.max_frame;
+        let reflector = thread::Builder::new()
+            .name("pfed1bs-reflector".into())
+            .spawn(move || {
+                if let Ok((s, _)) = listener.accept() {
+                    let _ = reflect_stream(s, max);
+                }
+            })
+            .context("spawning reflector thread")?;
+        Self::finish_loopback(seed, tuning, &ep, reflector)
+    }
+
+    /// Loopback transport over a Unix-domain socket at `path` (exercises
+    /// the UDS family end to end).
+    #[cfg(unix)]
+    pub fn loopback_unix(seed: u64, tuning: &Tuning, path: &str) -> Result<StreamTransport> {
+        let _ = std::fs::remove_file(path);
+        let listener =
+            UnixListener::bind(path).with_context(|| format!("binding unix:{path}"))?;
+        let ep = Endpoint::Unix(path.to_string());
+        let max = tuning.max_frame;
+        let reflector = thread::Builder::new()
+            .name("pfed1bs-reflector".into())
+            .spawn(move || {
+                if let Ok((s, _)) = listener.accept() {
+                    let _ = reflect_stream(s, max);
+                }
+            })
+            .context("spawning reflector thread")?;
+        Self::finish_loopback(seed, tuning, &ep, reflector)
+    }
+
+    fn finish_loopback(
+        seed: u64,
+        tuning: &Tuning,
+        ep: &Endpoint,
+        reflector: thread::JoinHandle<()>,
+    ) -> Result<StreamTransport> {
+        let mut conn = connect(ep, tuning, Duration::from_secs(5))?;
+        conn.handshake_client(&Hello {
+            role: PeerRole::Fleet,
+            lo: 0,
+            hi: 0,
+            m: 0,
+            want_ack: false,
+        })?;
+        Ok(StreamTransport {
+            conn,
+            reflector: Some(reflector),
+            ledger: Ledger::new(),
+            shards: Vec::new(),
+            lifecycle: Vec::new(),
+            seed,
+            round: 0,
+            codec_bytes: 0,
+        })
+    }
+
+    fn shard_mut(&mut self, k: usize) -> &mut RoundBytes {
+        while self.shards.len() <= k {
+            self.shards.push(RoundBytes::default());
+        }
+        &mut self.shards[k]
+    }
+
+    fn lifecycle_mut(&mut self, k: usize) -> &mut Rng {
+        while self.lifecycle.len() <= k {
+            let next = self.lifecycle.len();
+            self.lifecycle.push(lifecycle_rng(self.seed, next));
+        }
+        &mut self.lifecycle[k]
+    }
+
+    /// Push one frame through the socket and adopt the payload the peer
+    /// returns; the echo must be the same kind, round, and peer id.
+    fn roundtrip(&mut self, f: Frame) -> Result<Payload> {
+        let sent = encode_body(&f);
+        self.conn.send(&f)?;
+        let echoed = self.conn.recv()?;
+        let got = encode_body(&echoed);
+        // kind, round, and peer live in the first 9 body bytes; a
+        // mismatch means the channel delivered someone else's frame
+        if sent[..9.min(sent.len())] != got[..9.min(got.len())] {
+            bail!(
+                "loopback peer answered a {} frame with {}",
+                kind_name(f.kind()),
+                kind_name(echoed.kind())
+            );
+        }
+        match echoed {
+            Frame::Downlink { payload, .. }
+            | Frame::Uplink { payload, .. }
+            | Frame::Tally { payload, .. } => Ok(payload),
+            f => bail!("loopback peer echoed a payload-free {} frame", kind_name(f.kind())),
+        }
+    }
+}
+
+impl Transport for StreamTransport {
+    fn downlink_to(&mut self, k: usize, payload: &Payload) -> Result<Payload> {
+        let got = self.roundtrip(Frame::Downlink {
+            round: self.round,
+            client: k as u32,
+            payload: payload.clone(),
+        })?;
+        let n = frame_bytes(payload) as u64;
+        self.codec_bytes += n;
+        let sh = self.shard_mut(k);
+        sh.downlink += n;
+        sh.downlink_msgs += 1;
+        Ok(got)
+    }
+
+    fn uplink_from(&mut self, k: usize, payload: &Payload) -> Result<Payload> {
+        let got = self.roundtrip(Frame::Uplink {
+            round: self.round,
+            client: k as u32,
+            payload: payload.clone(),
+        })?;
+        let n = frame_bytes(payload) as u64;
+        self.codec_bytes += n;
+        let sh = self.shard_mut(k);
+        sh.uplink += n;
+        sh.uplink_msgs += 1;
+        Ok(got)
+    }
+
+    fn edge_downlink(&mut self, edge: usize, payload: &Payload) -> Result<Payload> {
+        let got = self.roundtrip(Frame::Downlink {
+            round: self.round,
+            client: edge as u32,
+            payload: payload.clone(),
+        })?;
+        let n = frame_bytes(payload);
+        self.codec_bytes += n as u64;
+        self.ledger.record_edge(Direction::Downlink, n);
+        Ok(got)
+    }
+
+    fn edge_uplink(&mut self, edge: usize, payload: &Payload) -> Result<Payload> {
+        let frame = match payload {
+            Payload::TallyFrame(_) => Frame::Tally {
+                round: self.round,
+                edge: edge as u32,
+                payload: payload.clone(),
+            },
+            // non-tally edge traffic (e.g. dense baselines) rides the
+            // generic uplink envelope
+            _ => Frame::Uplink { round: self.round, client: edge as u32, payload: payload.clone() },
+        };
+        let got = self.roundtrip(frame)?;
+        let n = frame_bytes(payload);
+        self.codec_bytes += n as u64;
+        self.ledger.record_edge(Direction::Uplink, n);
+        Ok(got)
+    }
+
+    fn draw_dropout(&mut self, k: usize, p: f64) -> bool {
+        dropout_draw(self.lifecycle_mut(k), p)
+    }
+
+    fn draw_latency(&mut self, k: usize, model: &LatencyModel) -> f64 {
+        model.draw(self.lifecycle_mut(k))
+    }
+
+    fn end_round(&mut self) -> RoundBytes {
+        let StreamTransport { shards, ledger, .. } = self;
+        for sh in shards.iter_mut() {
+            ledger.merge_shard(std::mem::take(sh));
+        }
+        self.round += 1;
+        self.ledger.end_round()
+    }
+
+    fn total_bytes(&self) -> u64 {
+        self.ledger.total_bytes() + self.shards.iter().map(|s| s.total()).sum::<u64>()
+    }
+
+    fn wire_overhead(&self) -> u64 {
+        // everything that crossed the socket beyond the codec payloads
+        // themselves: length prefixes, frame headers, the handshake —
+        // in both directions
+        (self.conn.bytes_sent() + self.conn.bytes_received())
+            .saturating_sub(2 * self.codec_bytes)
+    }
+}
+
+impl Drop for StreamTransport {
+    fn drop(&mut self) {
+        let _ = self.conn.send(&Frame::Bye);
+        let _ = self.conn.shutdown();
+        if let Some(h) = self.reflector.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::network::SimNetwork;
+    use crate::sketch::bitpack::SignVec;
+
+    fn signs(m: usize) -> Payload {
+        Payload::Signs(SignVec::from_fn(m, |i| i % 3 == 0))
+    }
+
+    #[test]
+    fn loopback_round_trip_is_lossless_over_a_real_socket() {
+        let mut t = StreamTransport::loopback(7, &Tuning::default()).unwrap();
+        let p = signs(130);
+        assert_eq!(t.uplink_from(3, &p).unwrap(), p);
+        assert_eq!(t.downlink_to(5, &p).unwrap(), p);
+        let dense = Payload::Dense(vec![1.0, -2.5, 0.25]);
+        assert_eq!(t.downlink_to(0, &dense).unwrap(), dense);
+        let tally = Payload::TallyFrame(crate::comm::codec::TallyFrame {
+            absorbed: 2,
+            loss_sum: 0.5,
+            scalar: -3,
+            quanta: vec![i128::MAX, -1, 0],
+        });
+        assert_eq!(t.edge_uplink(1, &tally).unwrap(), tally);
+        assert!(t.wire_overhead() > 0, "envelope bytes must be visible");
+    }
+
+    #[test]
+    fn metering_is_bit_identical_to_sim_network() {
+        // the same operation sequence on both transports must meter the
+        // same RoundBytes — the DESIGN.md §12 bit-identity contract
+        let mut sim = SimNetwork::new(11);
+        let mut sock = StreamTransport::loopback(11, &Tuning::default()).unwrap();
+        let p = signs(257);
+        let tally = Payload::TallyFrame(crate::comm::codec::TallyFrame {
+            absorbed: 4,
+            loss_sum: 1.0,
+            scalar: 0,
+            quanta: vec![5; 257],
+        });
+        for net in [&mut sim as &mut dyn Transport, &mut sock as &mut dyn Transport] {
+            for k in 0..6 {
+                net.downlink_to(k, &p).unwrap();
+            }
+            for k in [2usize, 0, 4] {
+                net.uplink_from(k, &p).unwrap();
+            }
+            net.edge_downlink(0, &p).unwrap();
+            net.edge_uplink(0, &tally).unwrap();
+        }
+        assert_eq!(sim.total_bytes(), sock.total_bytes());
+        let a = Transport::end_round(&mut sim);
+        let b = sock.end_round();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn lifecycle_draws_match_sim_network_streams() {
+        // scenario plans must be transport-independent: same (seed, k)
+        // streams, same draw order ⇒ same dropouts and latencies
+        let model = LatencyModel::Uniform { lo_ms: 1.0, hi_ms: 9.0 };
+        let mut sim = SimNetwork::new(23);
+        let mut sock = StreamTransport::loopback(23, &Tuning::default()).unwrap();
+        for k in [0usize, 3, 1, 3, 0] {
+            assert_eq!(
+                sim.channel(k).draw_dropout(0.4),
+                sock.draw_dropout(k, 0.4),
+                "dropout draw diverged for client {k}"
+            );
+            assert_eq!(
+                sim.channel(k).draw_latency(&model),
+                sock.draw_latency(k, &model),
+                "latency draw diverged for client {k}"
+            );
+        }
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn unix_family_loopback_works() {
+        let path = std::env::temp_dir().join("pfed1bs-test-uds.sock");
+        let path = path.to_str().unwrap().to_string();
+        let mut t = StreamTransport::loopback_unix(3, &Tuning::default(), &path).unwrap();
+        let p = signs(64);
+        assert_eq!(t.uplink_from(0, &p).unwrap(), p);
+        let r = t.end_round();
+        assert_eq!(r.uplink, 13);
+        drop(t);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn connect_times_out_with_context() {
+        // a TCP port nobody listens on (bind then drop releases it)
+        let port = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().port()
+        };
+        let ep = Endpoint::Tcp(format!("127.0.0.1:{port}"));
+        let err = connect(&ep, &Tuning::default(), Duration::from_millis(120)).unwrap_err();
+        assert!(format!("{err:#}").contains("connecting to"), "{err:#}");
+    }
+}

@@ -4,6 +4,9 @@
 //! (`--config path`, key=value lines) ← individual CLI flags.
 
 pub mod parser;
+pub mod serve;
+
+pub use serve::{Endpoint, ServeConfig, ServeRole};
 
 use anyhow::{bail, Result};
 

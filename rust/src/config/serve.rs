@@ -1,0 +1,356 @@
+//! Configuration of the multi-process transport roles (`pfed1bs serve`
+//! / `edge` / `client-fleet` / `loadgen` — DESIGN.md §12): endpoint
+//! addressing, listen/connect knobs, and validation.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::comm::transport::stream::Tuning;
+use crate::util::cli::Args;
+
+/// A socket address in either family: `tcp:HOST:PORT` or `unix:/PATH`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Endpoint {
+    /// TCP, e.g. `tcp:127.0.0.1:7171` (any `std::net::ToSocketAddrs`
+    /// host:port string)
+    Tcp(String),
+    /// Unix-domain socket path, e.g. `unix:/tmp/pf1b.sock`
+    Unix(String),
+}
+
+impl Endpoint {
+    /// Parse the CLI spelling: `tcp:HOST:PORT | unix:/PATH`.
+    pub fn parse(s: &str) -> Result<Endpoint> {
+        if let Some(addr) = s.strip_prefix("tcp:") {
+            let Some((host, port)) = addr.rsplit_once(':') else {
+                bail!("endpoint `{s}`: expected tcp:HOST:PORT");
+            };
+            ensure!(!host.is_empty(), "endpoint `{s}`: empty host");
+            port.parse::<u16>()
+                .map_err(|e| anyhow::anyhow!("endpoint `{s}`: bad port `{port}`: {e}"))?;
+            Ok(Endpoint::Tcp(addr.to_string()))
+        } else if let Some(path) = s.strip_prefix("unix:") {
+            ensure!(!path.is_empty(), "endpoint `{s}`: empty socket path");
+            Ok(Endpoint::Unix(path.to_string()))
+        } else {
+            bail!("endpoint `{s}`: expected tcp:HOST:PORT or unix:/PATH")
+        }
+    }
+
+    /// Canonical spelling (inverse of [`Endpoint::parse`]).
+    pub fn summary(&self) -> String {
+        match self {
+            Endpoint::Tcp(addr) => format!("tcp:{addr}"),
+            Endpoint::Unix(path) => format!("unix:{path}"),
+        }
+    }
+}
+
+/// Which transport role this process plays.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServeRole {
+    /// aggregation root: listens, selects cohorts, owns the consensus
+    Root,
+    /// edge aggregator: connects upstream to the root, listens for its
+    /// client range, ships one merge frame per round
+    Edge,
+    /// N mock clients multiplexed over one process, connecting to a
+    /// root or edge
+    Fleet,
+    /// load generator: a large mock fleet with per-uplink ACK latency
+    /// measurement, reporting rounds/sec and p99 as JSON
+    Loadgen,
+}
+
+impl ServeRole {
+    /// The subcommand spelling.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ServeRole::Root => "serve",
+            ServeRole::Edge => "edge",
+            ServeRole::Fleet => "client-fleet",
+            ServeRole::Loadgen => "loadgen",
+        }
+    }
+}
+
+/// Configuration of one transport-role process (DESIGN.md §12).
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// which role this process plays
+    pub role: ServeRole,
+    /// where to listen (root, edge)
+    pub listen: Option<Endpoint>,
+    /// where to connect (edge, fleet, loadgen)
+    pub connect: Option<Endpoint>,
+    /// K — fleet size the root plans rounds over
+    pub clients: usize,
+    /// S — clients selected per round
+    pub participating: usize,
+    /// T — rounds to run before sending BYE
+    pub rounds: usize,
+    /// sketch length m (consensus bits)
+    pub m: usize,
+    /// run seed (selections, mock sketches)
+    pub seed: u64,
+    /// first client id this process simulates (fleet/loadgen) or
+    /// expects (edge)
+    pub lo: u32,
+    /// one past the last client id; 0 = through the whole fleet
+    pub hi: u32,
+    /// connections a fleet/loadgen spreads its clients over
+    pub conns: usize,
+    /// this edge aggregator's id (metering/labeling only)
+    pub edge_id: u32,
+    /// per-frame read/write deadline in milliseconds
+    pub timeout_ms: u64,
+    /// hard frame-size cap in MiB
+    pub max_frame_mb: usize,
+    /// root only: after the last round, recompute the consensus
+    /// in-process and fail unless the socket run matches bit for bit
+    pub check_consensus: bool,
+    /// fleet/loadgen: request an ACK per absorbed uplink (the
+    /// uplink-to-absorb latency probe)
+    pub want_ack: bool,
+}
+
+impl ServeConfig {
+    /// Programmatic defaults for `role` (what `from_args` starts from).
+    pub fn new(role: ServeRole) -> ServeConfig {
+        ServeConfig {
+            role,
+            listen: None,
+            connect: None,
+            clients: if role == ServeRole::Loadgen { 10_000 } else { 64 },
+            participating: 16,
+            rounds: 3,
+            m: 1024,
+            seed: 17,
+            lo: 0,
+            hi: 0,
+            conns: if role == ServeRole::Loadgen { 4 } else { 1 },
+            edge_id: 0,
+            timeout_ms: 10_000,
+            max_frame_mb: 64,
+            check_consensus: false,
+            want_ack: role == ServeRole::Loadgen,
+        }
+    }
+
+    /// Build from CLI arguments (see `pfed1bs help` for the knobs).
+    pub fn from_args(role: ServeRole, args: &Args) -> Result<ServeConfig> {
+        let mut cfg = ServeConfig::new(role);
+        if let Some(ep) = args.get("listen") {
+            cfg.listen = Some(Endpoint::parse(ep)?);
+        }
+        if let Some(ep) = args.get("connect") {
+            cfg.connect = Some(Endpoint::parse(ep)?);
+        }
+        cfg.clients = args.parse_or("clients", cfg.clients)?;
+        cfg.participating = args.parse_or("participating", cfg.participating)?;
+        cfg.rounds = args.parse_or("rounds", cfg.rounds)?;
+        cfg.m = args.parse_or("m", cfg.m)?;
+        cfg.seed = args.parse_or("seed", cfg.seed)?;
+        cfg.lo = args.parse_or("lo", cfg.lo)?;
+        cfg.hi = args.parse_or("hi", cfg.hi)?;
+        cfg.conns = args.parse_or("conns", cfg.conns)?;
+        cfg.edge_id = args.parse_or("edge-id", cfg.edge_id)?;
+        cfg.timeout_ms = args.parse_or("timeout-ms", cfg.timeout_ms)?;
+        cfg.max_frame_mb = args.parse_or("max-frame-mb", cfg.max_frame_mb)?;
+        cfg.check_consensus = cfg.check_consensus || args.flag("check-consensus");
+        cfg.want_ack = cfg.want_ack || args.flag("want-ack");
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Reject configurations the role cannot run.
+    pub fn validate(&self) -> Result<()> {
+        match self.role {
+            ServeRole::Root => {
+                ensure!(self.listen.is_some(), "serve needs --listen tcp:…|unix:…");
+                ensure!(self.connect.is_none(), "serve does not take --connect");
+            }
+            ServeRole::Edge => {
+                ensure!(self.listen.is_some(), "edge needs --listen (its fleet side)");
+                ensure!(self.connect.is_some(), "edge needs --connect (its root side)");
+            }
+            ServeRole::Fleet | ServeRole::Loadgen => {
+                ensure!(
+                    self.connect.is_some(),
+                    "{} needs --connect tcp:…|unix:…",
+                    self.role.as_str()
+                );
+                ensure!(self.listen.is_none(), "{} does not listen", self.role.as_str());
+            }
+        }
+        ensure!(self.clients > 0, "clients must be > 0");
+        ensure!(
+            self.participating > 0 && self.participating <= self.clients,
+            "participating must be in 1..={} (got {})",
+            self.clients,
+            self.participating
+        );
+        ensure!(self.rounds > 0, "rounds must be > 0");
+        ensure!(self.m > 0, "m must be > 0");
+        ensure!(self.conns >= 1, "conns must be >= 1");
+        ensure!(self.timeout_ms >= 1, "timeout-ms must be >= 1");
+        ensure!(self.max_frame_mb >= 1, "max-frame-mb must be >= 1");
+        if self.hi != 0 {
+            ensure!(self.lo < self.hi, "need lo < hi (got {}..{})", self.lo, self.hi);
+        }
+        let span = if self.hi == 0 {
+            self.clients.saturating_sub(self.lo as usize)
+        } else {
+            (self.hi - self.lo) as usize
+        };
+        ensure!(
+            span >= self.conns,
+            "range {}..{} holds {span} clients — fewer than --conns {}",
+            self.lo,
+            if self.hi == 0 { self.clients as u32 } else { self.hi },
+            self.conns
+        );
+        Ok(())
+    }
+
+    /// One-line summary for startup logs.
+    pub fn summary(&self) -> String {
+        let mut s = format!(
+            "role={} K={} S={} T={} m={} seed={}",
+            self.role.as_str(),
+            self.clients,
+            self.participating,
+            self.rounds,
+            self.m,
+            self.seed
+        );
+        if let Some(ep) = &self.listen {
+            s.push_str(&format!(" listen={}", ep.summary()));
+        }
+        if let Some(ep) = &self.connect {
+            s.push_str(&format!(" connect={}", ep.summary()));
+        }
+        if self.lo != 0 || self.hi != 0 {
+            s.push_str(&format!(" range={}..{}", self.lo, self.hi));
+        }
+        if self.conns != 1 {
+            s.push_str(&format!(" conns={}", self.conns));
+        }
+        if self.role == ServeRole::Edge {
+            s.push_str(&format!(" edge-id={}", self.edge_id));
+        }
+        if self.check_consensus {
+            s.push_str(" check-consensus");
+        }
+        s
+    }
+
+    /// The socket tuning these knobs describe.
+    pub fn tuning(&self) -> Tuning {
+        Tuning {
+            read_timeout: Some(std::time::Duration::from_millis(self.timeout_ms)),
+            write_timeout: Some(std::time::Duration::from_millis(self.timeout_ms)),
+            max_frame: self.max_frame_mb << 20,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn endpoint_parses_both_families_and_round_trips() {
+        assert_eq!(
+            Endpoint::parse("tcp:127.0.0.1:7171").unwrap(),
+            Endpoint::Tcp("127.0.0.1:7171".into())
+        );
+        assert_eq!(
+            Endpoint::parse("unix:/tmp/pf1b.sock").unwrap(),
+            Endpoint::Unix("/tmp/pf1b.sock".into())
+        );
+        for s in ["tcp:localhost:0", "unix:/x/y.sock"] {
+            assert_eq!(Endpoint::parse(s).unwrap().summary(), s);
+        }
+        for bad in ["tcp:", "tcp:hostonly", "tcp::7", "tcp:h:notaport", "tcp:h:70000", "unix:", "7171", "udp:x:1"] {
+            assert!(Endpoint::parse(bad).is_err(), "{bad} should be rejected");
+        }
+    }
+
+    fn args(toks: &[&str]) -> Args {
+        Args::parse(toks.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn role_requirements_are_enforced() {
+        // root must listen, not connect
+        assert!(ServeConfig::from_args(ServeRole::Root, &args(&[])).is_err());
+        let root =
+            ServeConfig::from_args(ServeRole::Root, &args(&["--listen", "unix:/tmp/a.sock"]))
+                .unwrap();
+        assert_eq!(root.listen, Some(Endpoint::Unix("/tmp/a.sock".into())));
+        assert!(ServeConfig::from_args(
+            ServeRole::Root,
+            &args(&["--listen", "unix:/a", "--connect", "unix:/b"])
+        )
+        .is_err());
+
+        // edge needs both sides
+        assert!(
+            ServeConfig::from_args(ServeRole::Edge, &args(&["--listen", "unix:/a"])).is_err()
+        );
+        let edge = ServeConfig::from_args(
+            ServeRole::Edge,
+            &args(&["--listen", "unix:/a", "--connect", "tcp:h:1", "--edge-id", "2"]),
+        )
+        .unwrap();
+        assert_eq!(edge.edge_id, 2);
+
+        // fleet/loadgen connect only
+        assert!(ServeConfig::from_args(ServeRole::Fleet, &args(&[])).is_err());
+        let fleet =
+            ServeConfig::from_args(ServeRole::Fleet, &args(&["--connect", "tcp:h:1"])).unwrap();
+        assert!(!fleet.want_ack, "plain fleets do not request ACKs by default");
+        let gen =
+            ServeConfig::from_args(ServeRole::Loadgen, &args(&["--connect", "tcp:h:1"])).unwrap();
+        assert!(gen.want_ack, "loadgen measures uplink-to-absorb via ACKs");
+        assert_eq!((gen.clients, gen.conns), (10_000, 4));
+    }
+
+    #[test]
+    fn knobs_apply_and_validate() {
+        let cfg = ServeConfig::from_args(
+            ServeRole::Root,
+            &args(&[
+                "--listen", "tcp:127.0.0.1:0", "--clients", "128", "--participating", "32",
+                "--rounds", "5", "--m", "4096", "--seed", "3", "--timeout-ms", "2500",
+                "--max-frame-mb", "8", "--check-consensus",
+            ]),
+        )
+        .unwrap();
+        assert_eq!((cfg.clients, cfg.participating, cfg.rounds), (128, 32, 5));
+        assert_eq!((cfg.m, cfg.seed), (4096, 3));
+        assert!(cfg.check_consensus);
+        let t = cfg.tuning();
+        assert_eq!(t.max_frame, 8 << 20);
+        assert_eq!(t.read_timeout, Some(std::time::Duration::from_millis(2500)));
+        let s = cfg.summary();
+        assert!(s.contains("role=serve") && s.contains("K=128") && s.contains("check-consensus"), "{s}");
+
+        // degenerate shapes
+        for bad in [
+            vec!["--listen", "tcp:h:1", "--participating", "0"],
+            vec!["--listen", "tcp:h:1", "--participating", "65"],
+            vec!["--listen", "tcp:h:1", "--rounds", "0"],
+            vec!["--listen", "tcp:h:1", "--m", "0"],
+            vec!["--listen", "tcp:h:1", "--lo", "5", "--hi", "5"],
+        ] {
+            assert!(ServeConfig::from_args(ServeRole::Root, &args(&bad)).is_err(), "{bad:?}");
+        }
+        // a loadgen range must cover its connection count
+        assert!(ServeConfig::from_args(
+            ServeRole::Loadgen,
+            &args(&["--connect", "tcp:h:1", "--lo", "0", "--hi", "2", "--conns", "4"])
+        )
+        .is_err());
+    }
+}

@@ -24,7 +24,7 @@
 //! and the delivered-set weights renormalize over the surviving edges,
 //! composing with §9's delivered-set renormalization.
 
-use crate::comm::SimNetwork;
+use crate::comm::Transport;
 use crate::config::{RunConfig, Topology};
 use crate::util::rng::{splitmix64, Rng};
 
@@ -123,28 +123,31 @@ fn edge_outage_draw(seed: u64, t: usize, edge: usize) -> f64 {
 /// selection order, all are accepted, and the weights equal the
 /// selection-order renormalization — byte-for-byte the pre-engine
 /// behavior (no lifecycle draw is even consumed).
-pub fn plan_round(
+///
+/// Generic over the [`Transport`]: the lifecycle streams are keyed by
+/// `(seed, k)` on every transport, so the same plan comes out whether
+/// the bytes will ride the simulation or a socket.
+pub fn plan_round<N: Transport>(
     t: usize,
     cfg: &RunConfig,
     client_weights: &[f32],
-    net: &mut SimNetwork,
+    net: &mut N,
     rng: &mut Rng,
 ) -> RoundPlan {
     let cohort = (cfg.participating + cfg.over_select).min(cfg.clients);
     let selected = rng.sample_without_replacement(cfg.clients, cohort);
 
     // lifecycle draws in selection order, each from the client's OWN
-    // channel stream — the plan is invariant to how it is executed
+    // lifecycle stream — the plan is invariant to how it is executed
     let mut computing = Vec::with_capacity(selected.len());
     let mut arrivals: Vec<Arrival> = Vec::with_capacity(selected.len());
     let mut dropped = 0usize;
     for &k in &selected {
-        let ch = net.channel(k);
-        if ch.draw_dropout(cfg.dropout_prob) {
+        if net.draw_dropout(k, cfg.dropout_prob) {
             dropped += 1;
             continue;
         }
-        let at_ms = ch.draw_latency(&cfg.latency);
+        let at_ms = net.draw_latency(k, &cfg.latency);
         arrivals.push(Arrival {
             task: computing.len(),
             client: k,
@@ -217,7 +220,7 @@ pub fn plan_round(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::comm::LatencyModel;
+    use crate::comm::{LatencyModel, SimNetwork};
     use crate::config::RunConfig;
     use crate::data::DatasetName;
 

@@ -33,8 +33,11 @@
 //!
 //! Algorithms never see the network or the topology; the hierarchical
 //! edge tier slots in behind steps 1/3/5 exactly the way §3 promised a
-//! sharded-server transport would, and a socket transport would replace
-//! the same internals.
+//! sharded-server transport would. The coordinator itself is generic
+//! over [`Transport`] — `SimNetwork` is the default type parameter, and
+//! [`Coordinator::with_transport`] drops a socket-backed
+//! [`StreamTransport`](crate::comm::StreamTransport) behind the same
+//! internals (DESIGN.md §12).
 //!
 //! [`RoundAggregator`]: crate::algorithms::RoundAggregator
 
@@ -51,7 +54,7 @@ use anyhow::{Context, Result};
 use crate::algorithms::{
     Algorithm, ClientCtx, ClientOutput, InitCtx, RoundAggregator, RoundOutcome, ServerCtx,
 };
-use crate::comm::{Downlink, SimNetwork};
+use crate::comm::{Downlink, SimNetwork, Transport};
 use crate::config::{ProjectionKind, RunConfig, Topology};
 use crate::data::{generate, FederatedData};
 use crate::runtime::ModelRuntime;
@@ -96,16 +99,20 @@ struct SyncRuntime<'a>(&'a ModelRuntime);
 // execution methods is concurrency-safe per the PJRT API contract.
 unsafe impl Sync for SyncRuntime<'_> {}
 
-/// Drives one (algorithm × dataset × seed) training run.
-pub struct Coordinator<'a> {
+/// Drives one (algorithm × dataset × seed) training run. Generic over
+/// the [`Transport`] carrying its bytes; defaults to the in-process
+/// [`SimNetwork`], so every existing call site and golden trace is
+/// unchanged.
+pub struct Coordinator<'a, N: Transport = SimNetwork> {
     /// the run's full configuration
     pub cfg: RunConfig,
     /// the generated federated dataset (per-client shards + weights)
     pub data: FederatedData,
     /// compiled model runtime shared across runs of a sweep
     pub model: &'a ModelRuntime,
-    /// the simulated transport (channels, noise, byte ledger)
-    pub net: SimNetwork,
+    /// the transport carrying this run's bytes (channels/sockets, byte
+    /// metering, lifecycle streams)
+    pub net: N,
     /// rust-side mirror of Φ for baselines and server-side work
     pub projection: Projection,
     /// when set, save a checkpoint to `.0` every `.1` rounds
@@ -113,11 +120,30 @@ pub struct Coordinator<'a> {
     rng: Rng,
 }
 
-impl<'a> Coordinator<'a> {
+impl<'a> Coordinator<'a, SimNetwork> {
     /// Build coordinator state for `cfg` against an already-loaded model
     /// runtime (model runtimes are expensive to compile, so experiment
-    /// sweeps share them across runs).
+    /// sweeps share them across runs), on the default simulated network.
     pub fn new(cfg: RunConfig, model: &'a ModelRuntime) -> Coordinator<'a> {
+        let net = SimNetwork::new(cfg.seed);
+        Coordinator::with_transport(cfg, model, net)
+    }
+
+    /// The shared SRHT realization for this run's seed (what the HLO
+    /// artifacts must be fed). Panics if configured for dense projection.
+    pub fn srht_operator(cfg: &RunConfig, n: usize, m: usize) -> SrhtOperator {
+        SrhtOperator::from_seed(cfg.seed, n, m)
+    }
+}
+
+impl<'a, N: Transport> Coordinator<'a, N> {
+    /// As [`Coordinator::new`], but over a caller-supplied transport —
+    /// how a socket-backed [`StreamTransport`](crate::comm::StreamTransport)
+    /// slots in behind the unchanged round loop (DESIGN.md §12). The
+    /// dataset, projection, and RNG derivations are identical for every
+    /// transport, so two runs differing only in `net` are comparable
+    /// bit for bit.
+    pub fn with_transport(cfg: RunConfig, model: &'a ModelRuntime, net: N) -> Coordinator<'a, N> {
         let spec = cfg.dataset.spec();
         let data = generate(&spec, cfg.clients, &cfg.make_partition(), cfg.seed);
         let projection = match cfg.projection {
@@ -132,15 +158,8 @@ impl<'a> Coordinator<'a> {
                 model.geom.m,
             )),
         };
-        let net = SimNetwork::new(cfg.seed);
         let rng = Rng::new(cfg.seed ^ 0x434F_4F52); // "COOR"
         Coordinator { cfg, data, model, net, projection, checkpoint: None, rng }
-    }
-
-    /// The shared SRHT realization for this run's seed (what the HLO
-    /// artifacts must be fed). Panics if configured for dense projection.
-    pub fn srht_operator(cfg: &RunConfig, n: usize, m: usize) -> SrhtOperator {
-        SrhtOperator::from_seed(cfg.seed, n, m)
     }
 
     /// One-time algorithm setup against this coordinator's geometry.

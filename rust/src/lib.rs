@@ -16,7 +16,12 @@
 //!   evaluation, metrics.
 //! * [`sketch`] — rust mirror of the SRHT operator, bit packing, majority
 //!   vote.
-//! * [`comm`] — wire codecs, byte ledger, simulated network.
+//! * [`comm`] — wire codecs, byte ledger, and the [`comm::transport`]
+//!   subsystem: a `Transport` trait over the simulated network and a
+//!   socket-backed `StreamTransport` (DESIGN.md §12).
+//! * [`serve`] — multi-process roles (`pfed1bs serve` / `edge` /
+//!   `client-fleet` / `loadgen`) running real rounds over TCP or
+//!   Unix-domain sockets with deterministic mock clients.
 //! * [`data`] — synthetic non-i.i.d. federated datasets (DESIGN.md §2).
 //! * [`experiments`] — regenerators for every table/figure in the paper.
 //! * [`analysis`] — the paper's Theorem-1 constants/bounds made
@@ -38,5 +43,6 @@ pub mod coordinator;
 pub mod data;
 pub mod experiments;
 pub mod runtime;
+pub mod serve;
 pub mod sketch;
 pub mod util;

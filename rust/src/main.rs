@@ -1,22 +1,28 @@
 //! pFed1BS leader binary.
 //!
-//! Subcommands map 1:1 to the paper's evaluation artifacts (DESIGN.md §7):
+//! Subcommands map 1:1 to the paper's evaluation artifacts (DESIGN.md §7)
+//! plus the multi-process transport roles (DESIGN.md §12):
 //!
 //! ```text
-//! pfed1bs train     --alg pfed1bs --dataset mnist [--rounds N --seed S …]
-//! pfed1bs table1                      # capability matrix (paper Table 1)
-//! pfed1bs table2    [--datasets a,b --algs x,y --seeds k --rounds N]
-//! pfed1bs fig3-4    [--rounds N --diagnostics]
-//! pfed1bs fig-a1    [--values 5,10,15,20]
-//! pfed1bs fig-a2    [--values 5,10,20,25,30]
+//! pfed1bs train        --alg pfed1bs --dataset mnist [--rounds N --seed S …]
+//! pfed1bs table1                         # capability matrix (paper Table 1)
+//! pfed1bs table2       [--datasets a,b --algs x,y --seeds k --rounds N]
+//! pfed1bs fig3-4       [--rounds N --diagnostics]
+//! pfed1bs fig-a1       [--values 5,10,15,20]
+//! pfed1bs fig-a2       [--values 5,10,20,25,30]
 //! pfed1bs fig-a3
-//! pfed1bs table-a1  [--seeds k --rounds N]
-//! pfed1bs info                        # artifact manifest summary
+//! pfed1bs table-a1     [--seeds k --rounds N]
+//! pfed1bs bound        [--dataset mnist --m N …]   # Theorem-1 constants
+//! pfed1bs info                           # artifact manifest summary
+//! pfed1bs serve        --listen tcp:0.0.0.0:7171 [--check-consensus …]
+//! pfed1bs edge         --connect tcp:ROOT:7171 --listen unix:/tmp/e0.sock
+//! pfed1bs client-fleet --connect tcp:HOST:7171 [--lo A --hi B --conns C]
+//! pfed1bs loadgen      --connect tcp:HOST:7171 [--clients 10000 …]
 //! ```
 
 use anyhow::{bail, Result};
 
-use pfed1bs::config::RunConfig;
+use pfed1bs::config::{RunConfig, ServeConfig, ServeRole};
 use pfed1bs::data::DatasetName;
 use pfed1bs::experiments::{self, runner::Lab};
 use pfed1bs::util::cli::Args;
@@ -46,6 +52,10 @@ fn real_main() -> Result<()> {
         "table-a1" => cmd_table_a1(&args),
         "bound" => cmd_bound(&args),
         "info" => cmd_info(&args),
+        "serve" => cmd_role(ServeRole::Root, &args),
+        "edge" => cmd_role(ServeRole::Edge, &args),
+        "client-fleet" | "fleet" => cmd_role(ServeRole::Fleet, &args),
+        "loadgen" => cmd_role(ServeRole::Loadgen, &args),
         "help" | "--help" => {
             print!("{}", HELP);
             Ok(())
@@ -71,12 +81,31 @@ subcommands:
   bound      Theorem-1 constants + predicted neighborhood for a config
   info       artifact manifest summary
 
+multi-process transport roles (DESIGN.md §12 — no artifacts needed):
+  serve         root server      (--listen tcp:H:P|unix:/path  --clients K
+                                  --participating S --rounds T --m M --seed S
+                                  --check-consensus)
+  edge          edge aggregator  (--connect UPSTREAM --listen FLEET-SIDE
+                                  --lo A --hi B --edge-id E)
+  client-fleet  N mock clients   (--connect EP --lo A --hi B --conns C)
+  loadgen       throughput probe (--connect EP --clients 10000 --conns C;
+                                  reports rounds/sec + p99 uplink-to-absorb
+                                  latency as BENCH_loadgen.json)
+  role knobs:   --timeout-ms MS  --max-frame-mb MB  --want-ack
+
 common options: --artifacts-dir artifacts  --results-dir results
                 --seed N  --seeds K  --rounds N  --dataset name
 scenario knobs: --over-select N  --deadline-ms MS  --dropout-prob P
                 --latency zero|fixed:MS|uniform:LO:HI|lognormal:MED:SIGMA
-run `make artifacts` once before any subcommand.
+                --topology flat|edge:E  --edge-dropout-prob P
+run `make artifacts` once before any train/table/fig subcommand.
 ";
+
+fn cmd_role(role: ServeRole, args: &Args) -> Result<()> {
+    let cfg = ServeConfig::from_args(role, args)?;
+    args.reject_unknown()?;
+    pfed1bs::serve::run(&cfg)
+}
 
 fn artifacts_dir(args: &Args) -> String {
     args.str_or("artifacts-dir", "artifacts")

@@ -1,0 +1,733 @@
+//! Multi-process transport roles (DESIGN.md §12): the root server
+//! (`pfed1bs serve`), edge aggregator (`pfed1bs edge`), multiplexed mock
+//! client fleet (`pfed1bs client-fleet`), and load generator
+//! (`pfed1bs loadgen`) — one machine running a real client→edge→root
+//! round over TCP or Unix-domain sockets.
+//!
+//! The protocol is the paper's, with deterministic *mock* clients in
+//! place of the PJRT compute stack (no artifacts needed, so CI can smoke
+//! the wire path anywhere): every process derives the same client
+//! selections and sketches from the seed the root's WELCOME announces,
+//! and each round's sketches are keyed on the *received* consensus — so
+//! the final consensus is a checksum of every byte of every round, and
+//! any corruption anywhere in the chain diverges it. The root's
+//! `--check-consensus` recomputes the run in-process
+//! ([`reference_consensus`]) and fails unless the socket run matches bit
+//! for bit; that is the CI smoke job's assertion.
+//!
+//! Aggregation is the real thing: the root (and each edge) folds
+//! uplinks into the exact 64.64 fixed-point [`VoteAccumulator`], edges
+//! ship the same `Payload::TallyFrame` merge frames the in-process
+//! hierarchy uses, and order-invariance makes absorb-on-arrival over
+//! real sockets bit-identical to any serial schedule.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::mpsc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::algorithms::common::hash3;
+use crate::comm::codec::{frame_bytes, Payload, TallyFrame};
+use crate::comm::transport::frame::{kind_name, Frame, Hello, PeerRole, Welcome};
+use crate::comm::transport::stream::{connect, FramedConn, Listener, Tuning};
+use crate::config::{Endpoint, ServeConfig, ServeRole};
+use crate::sketch::{packed_bytes, SignVec, VoteAccumulator};
+use crate::util::rng::Rng;
+use crate::util::stats::percentile;
+
+/// Sentinel reader index for an edge's upstream (root-facing) link.
+const ROOT: usize = usize::MAX;
+
+/// The deterministic per-round cohort every process derives from the
+/// announced seed: round `t`'s selection is the `t`-th draw of a
+/// persistent seed-keyed stream (fresh uniform sample each round).
+pub fn mock_selections(
+    seed: u64,
+    clients: usize,
+    participating: usize,
+    rounds: usize,
+) -> Vec<Vec<usize>> {
+    let mut rng = Rng::new(seed ^ 0x5345_5256); // "SERV"
+    (0..rounds)
+        .map(|_| rng.sample_without_replacement(clients, participating))
+        .collect()
+}
+
+/// Client `k`'s round-`t` mock sketch. Keyed on the *received* consensus
+/// words (hash-folded into the stream seed), so the sketch — and with it
+/// every later round — diverges if any downlink bit was corrupted
+/// anywhere on the wire: the final consensus is an end-to-end checksum.
+pub fn mock_sketch(seed: u64, m: usize, client: u32, round: u32, consensus: &SignVec) -> SignVec {
+    let mut h = seed ^ 0x4D4F_434B; // "MOCK"
+    for w in consensus.words() {
+        h = hash3(h, *w, 0x5348_4153); // "SHAS"
+    }
+    let mut rng = Rng::new(hash3(client as u64, round as u64, h));
+    let words = (0..packed_bytes(m) / 8).map(|_| rng.next_u64()).collect();
+    SignVec::from_words(words, m)
+}
+
+/// The in-process replay of a full mock run: what the socket run's final
+/// consensus must equal bit for bit (the `--check-consensus` oracle and
+/// the CI smoke assertion). Uniform weight 1.0 per delivered sketch,
+/// ties toward +1 — the same [`VoteAccumulator`] the real server uses.
+pub fn reference_consensus(
+    seed: u64,
+    m: usize,
+    clients: usize,
+    participating: usize,
+    rounds: usize,
+) -> SignVec {
+    let selections = mock_selections(seed, clients, participating, rounds);
+    let mut consensus = SignVec::from_fn(m, |_| true);
+    for (t, sel) in selections.iter().enumerate() {
+        let mut acc = VoteAccumulator::new(m);
+        for &k in sel {
+            acc.absorb(&mock_sketch(seed, m, k as u32, t as u32, &consensus), 1.0);
+        }
+        consensus = acc.finish();
+    }
+    consensus
+}
+
+/// Run the role `cfg` describes (the CLI entry point).
+pub fn run(cfg: &ServeConfig) -> Result<()> {
+    crate::info!("{}", cfg.summary());
+    match cfg.role {
+        ServeRole::Root => run_root(cfg),
+        ServeRole::Edge => run_edge(cfg),
+        ServeRole::Fleet => run_fleet(cfg),
+        ServeRole::Loadgen => run_loadgen(cfg).map(|_| ()),
+    }
+}
+
+/// One accepted downstream peer: the write half of its connection plus
+/// what its HELLO declared (reader threads own cloned read halves).
+struct Peer {
+    conn: FramedConn,
+    role: PeerRole,
+    want_ack: bool,
+}
+
+/// Resolve a HELLO's claimed client range against the fleet size
+/// (`hi == 0` means "through the whole fleet").
+fn resolve_range(hello: &Hello, fleet: usize) -> Result<(usize, usize)> {
+    let lo = hello.lo as usize;
+    let hi = if hello.hi == 0 { fleet } else { hello.hi as usize };
+    ensure!(
+        lo < hi && hi <= fleet,
+        "peer claims clients {lo}..{hi} of a {fleet}-client fleet"
+    );
+    Ok((lo, hi))
+}
+
+/// Accept downstream peers until every client in `lo..hi` has exactly
+/// one owner; overlapping or out-of-range claims are protocol errors.
+/// Returns the peers and the owner index of each client (offset by `lo`).
+fn accept_peers(
+    listener: &Listener,
+    tuning: &Tuning,
+    welcome: &Welcome,
+    lo: usize,
+    hi: usize,
+    timeout: Duration,
+) -> Result<(Vec<Peer>, Vec<usize>)> {
+    let fleet = welcome.clients as usize;
+    let mut peers: Vec<Peer> = Vec::new();
+    let mut owners: Vec<Option<usize>> = vec![None; hi - lo];
+    while owners.iter().any(Option::is_none) {
+        let mut conn = listener
+            .accept_deadline(tuning, timeout)
+            .with_context(|| format!("waiting for peers covering clients {lo}..{hi}"))?;
+        let hello = conn.handshake_server(welcome)?;
+        let (plo, phi) = resolve_range(&hello, fleet)?;
+        ensure!(
+            plo >= lo && phi <= hi,
+            "peer range {plo}..{phi} outside this listener's {lo}..{hi}"
+        );
+        for k in plo..phi {
+            ensure!(owners[k - lo].is_none(), "client {k} claimed by two peers");
+            owners[k - lo] = Some(peers.len());
+        }
+        crate::info!(
+            "peer {} connected: {:?} covering clients {plo}..{phi}",
+            peers.len(),
+            hello.role
+        );
+        peers.push(Peer { conn, role: hello.role, want_ack: hello.want_ack });
+    }
+    Ok((peers, owners.into_iter().map(|o| o.expect("coverage loop")).collect()))
+}
+
+/// Park a cloned read half in a thread that forwards every frame to
+/// `tx` tagged with `idx`; exits on connection error or after
+/// forwarding BYE.
+fn spawn_reader(
+    conn: &FramedConn,
+    idx: usize,
+    tx: mpsc::Sender<(usize, Frame)>,
+) -> Result<thread::JoinHandle<()>> {
+    let mut r = conn.split_reader()?;
+    thread::Builder::new()
+        .name(format!("pfed1bs-reader-{idx}"))
+        .spawn(move || loop {
+            match r.recv() {
+                Ok(f) => {
+                    let bye = matches!(f, Frame::Bye);
+                    if tx.send((idx, f)).is_err() || bye {
+                        break;
+                    }
+                }
+                Err(_) => break, // peer closed or timed out; main decides
+            }
+        })
+        .context("spawning reader thread")
+}
+
+/// What a finished root run measured (the serve JSON report).
+pub struct RootReport {
+    /// the final consensus after the last round
+    pub consensus: SignVec,
+    /// total sketches absorbed across all rounds (direct + via edges)
+    pub absorbed: usize,
+    /// client-tier downlink bytes (codec frames, per delivered copy)
+    pub downlink_bytes: u64,
+    /// client-tier uplink bytes absorbed directly at the root
+    pub uplink_bytes: u64,
+    /// edge-tier merge-frame bytes
+    pub tally_bytes: u64,
+    /// wall time from first broadcast to last absorb
+    pub elapsed_s: f64,
+    /// completed rounds per wall-clock second
+    pub rounds_per_sec: f64,
+}
+
+impl RootReport {
+    /// One-line machine-readable summary (the serve stdout contract).
+    pub fn to_json(&self, cfg: &ServeConfig) -> String {
+        let ones: u32 = self.consensus.words().iter().map(|w| w.count_ones()).sum();
+        format!(
+            "{{\"suite\":\"serve\",\"clients\":{},\"participating\":{},\"rounds\":{},\"m\":{},\
+             \"absorbed\":{},\"downlink_bytes\":{},\"uplink_bytes\":{},\"tally_bytes\":{},\
+             \"consensus_ones\":{ones},\"elapsed_s\":{:.3},\"rounds_per_sec\":{:.3}}}",
+            cfg.clients,
+            cfg.participating,
+            cfg.rounds,
+            cfg.m,
+            self.absorbed,
+            self.downlink_bytes,
+            self.uplink_bytes,
+            self.tally_bytes,
+            self.elapsed_s,
+            self.rounds_per_sec,
+        )
+    }
+}
+
+/// `pfed1bs serve`: bind the configured endpoint, drive the run, print
+/// the JSON report.
+pub fn run_root(cfg: &ServeConfig) -> Result<()> {
+    let ep = cfg.listen.as_ref().expect("validated: root listens");
+    let listener = Listener::bind(ep)?;
+    let report = run_root_on(&listener, cfg)?;
+    println!("{}", report.to_json(cfg));
+    Ok(())
+}
+
+/// Root body over an already-bound listener (tests bind `tcp:…:0` and
+/// pass the resolved listener in). Accepts peers until the whole fleet
+/// `0..K` is owned, then runs `T` rounds: broadcast the consensus to the
+/// selected cohort, absorb exactly `S` sketches (direct uplinks and/or
+/// edge merge frames), sign the tally, repeat; finally BYE every peer.
+/// With `check_consensus`, fails unless the result equals
+/// [`reference_consensus`] bit for bit.
+pub fn run_root_on(listener: &Listener, cfg: &ServeConfig) -> Result<RootReport> {
+    let tuning = cfg.tuning();
+    let timeout = Duration::from_millis(cfg.timeout_ms);
+    let welcome = Welcome {
+        m: cfg.m as u32,
+        seed: cfg.seed,
+        rounds: cfg.rounds as u32,
+        participating: cfg.participating as u32,
+        clients: cfg.clients as u32,
+    };
+    let (mut peers, owners) = accept_peers(listener, &tuning, &welcome, 0, cfg.clients, timeout)?;
+    let (tx, rx) = mpsc::channel();
+    let readers: Vec<_> = peers
+        .iter()
+        .enumerate()
+        .map(|(i, p)| spawn_reader(&p.conn, i, tx.clone()))
+        .collect::<Result<_>>()?;
+    drop(tx);
+
+    let m = cfg.m;
+    let selections = mock_selections(cfg.seed, cfg.clients, cfg.participating, cfg.rounds);
+    let mut consensus = SignVec::from_fn(m, |_| true);
+    let (mut downlink_bytes, mut uplink_bytes, mut tally_bytes) = (0u64, 0u64, 0u64);
+    let mut absorbed_total = 0usize;
+    let started = Instant::now();
+    for (t, sel) in selections.iter().enumerate() {
+        let t32 = t as u32;
+        let payload = Payload::Signs(consensus.clone());
+        // who answers this round: direct clients uplink themselves; an
+        // edge answers for ALL its selected clients with one merge frame
+        let mut want_up: HashSet<u32> = HashSet::new();
+        let mut want_tally: HashSet<usize> = HashSet::new();
+        for &k in sel {
+            let pi = owners[k];
+            if peers[pi].role == PeerRole::Edge {
+                want_tally.insert(pi);
+            } else {
+                want_up.insert(k as u32);
+            }
+            peers[pi]
+                .conn
+                .send(&Frame::Downlink { round: t32, client: k as u32, payload: payload.clone() })?;
+            downlink_bytes += frame_bytes(&payload) as u64;
+        }
+        let mut acc = VoteAccumulator::new(m);
+        while !want_up.is_empty() || !want_tally.is_empty() {
+            let (pi, f) = rx
+                .recv_timeout(timeout)
+                .with_context(|| format!("round {t}: waiting for uplinks"))?;
+            match f {
+                Frame::Uplink { round, client, payload } => {
+                    ensure!(round == t32, "round {t}: got a round-{round} uplink");
+                    uplink_bytes += frame_bytes(&payload) as u64;
+                    let Payload::Signs(z) = payload else {
+                        bail!("round {t}: uplink from client {client} was not a packed sketch")
+                    };
+                    ensure!(z.m() == m, "round {t}: sketch m={} (want {m})", z.m());
+                    ensure!(want_up.remove(&client), "unexpected uplink from client {client}");
+                    acc.absorb(&z, 1.0);
+                    if peers[pi].want_ack {
+                        peers[pi].conn.send(&Frame::Ack { round, client })?;
+                    }
+                }
+                Frame::Tally { round, edge, payload } => {
+                    ensure!(round == t32, "round {t}: got a round-{round} merge frame");
+                    tally_bytes += frame_bytes(&payload) as u64;
+                    let Payload::TallyFrame(tf) = payload else {
+                        unreachable!("decode enforces the TALLY payload kind")
+                    };
+                    ensure!(
+                        tf.quanta.len() == m,
+                        "round {t}: edge {edge} tally over {} bits (want {m})",
+                        tf.quanta.len()
+                    );
+                    ensure!(want_tally.remove(&pi), "duplicate merge frame from peer {pi}");
+                    acc.merge(VoteAccumulator::from_quanta(tf.quanta, tf.absorbed as usize));
+                }
+                Frame::Bye => bail!("peer {pi} left mid-round"),
+                f => bail!("round {t}: unexpected {} from peer {pi}", kind_name(f.kind())),
+            }
+        }
+        ensure!(
+            acc.absorbed() == sel.len(),
+            "round {t}: absorbed {} of {} sketches",
+            acc.absorbed(),
+            sel.len()
+        );
+        absorbed_total += acc.absorbed();
+        consensus = acc.finish();
+    }
+    let elapsed_s = started.elapsed().as_secs_f64();
+
+    for p in peers.iter_mut() {
+        let _ = p.conn.send(&Frame::Bye);
+    }
+    for p in &peers {
+        let _ = p.conn.shutdown();
+    }
+    drop(rx);
+    for h in readers {
+        let _ = h.join();
+    }
+
+    if cfg.check_consensus {
+        let want = reference_consensus(cfg.seed, m, cfg.clients, cfg.participating, cfg.rounds);
+        ensure!(
+            consensus == want,
+            "socket-run consensus diverged from the in-process reference"
+        );
+        crate::info!("consensus matches the in-process reference bit for bit");
+    }
+    Ok(RootReport {
+        consensus,
+        absorbed: absorbed_total,
+        downlink_bytes,
+        uplink_bytes,
+        tally_bytes,
+        elapsed_s,
+        rounds_per_sec: if elapsed_s > 0.0 { cfg.rounds as f64 / elapsed_s } else { 0.0 },
+    })
+}
+
+/// One open round at an edge: the running tally and how many of this
+/// edge's uplinks are still outstanding.
+struct EdgeShard {
+    acc: VoteAccumulator,
+    pending: usize,
+}
+
+/// `pfed1bs edge`: bind the fleet-side endpoint, then run the edge body.
+pub fn run_edge(cfg: &ServeConfig) -> Result<()> {
+    let ep = cfg.listen.as_ref().expect("validated: edge listens");
+    let listener = Listener::bind(ep)?;
+    run_edge_on(&listener, cfg)
+}
+
+/// Edge body over an already-bound fleet-side listener: connect upstream
+/// (HELLO role=edge announcing its client range), forward the root's
+/// WELCOME to its own fleet peers, then per round forward downlinks
+/// down and absorb uplinks into the round's [`VoteAccumulator`] shard —
+/// shipping exactly one `TallyFrame` merge frame upstream once every
+/// selected client in its range has answered. Exits when the root says
+/// BYE (forwarded to the fleet peers).
+pub fn run_edge_on(listener: &Listener, cfg: &ServeConfig) -> Result<()> {
+    let tuning = cfg.tuning();
+    let timeout = Duration::from_millis(cfg.timeout_ms);
+    let mut up = connect(
+        cfg.connect.as_ref().expect("validated: edge connects"),
+        &tuning,
+        timeout.max(Duration::from_secs(10)),
+    )?;
+    let welcome = up.handshake_client(&Hello {
+        role: PeerRole::Edge,
+        lo: cfg.lo,
+        hi: cfg.hi,
+        m: 0,
+        want_ack: false,
+    })?;
+    let m = welcome.m as usize;
+    let clients = welcome.clients as usize;
+    let lo = cfg.lo as usize;
+    let hi = if cfg.hi == 0 { clients } else { cfg.hi as usize };
+    ensure!(lo < hi && hi <= clients, "edge range {lo}..{hi} vs {clients} clients");
+
+    let (mut peers, owners) = accept_peers(listener, &tuning, &welcome, lo, hi, timeout)?;
+    let (tx, rx) = mpsc::channel();
+    let mut readers: Vec<_> = peers
+        .iter()
+        .enumerate()
+        .map(|(i, p)| spawn_reader(&p.conn, i, tx.clone()))
+        .collect::<Result<_>>()?;
+    readers.push(spawn_reader(&up, ROOT, tx.clone())?);
+    drop(tx);
+
+    // how many uplinks each round owes this edge — derived from the
+    // shared selection stream, so the edge knows when its shard closes
+    let selections = mock_selections(
+        welcome.seed,
+        clients,
+        welcome.participating as usize,
+        welcome.rounds as usize,
+    );
+    let expected: Vec<usize> = selections
+        .iter()
+        .map(|sel| sel.iter().filter(|&&k| k >= lo && k < hi).count())
+        .collect();
+
+    let mut shards: HashMap<u32, EdgeShard> = HashMap::new();
+    loop {
+        let (pi, f) = rx
+            .recv_timeout(timeout)
+            .context("edge: waiting for traffic")?;
+        if pi == ROOT {
+            match f {
+                Frame::Downlink { round, client, payload } => {
+                    let k = client as usize;
+                    ensure!(k >= lo && k < hi, "root routed client {k} to edge {lo}..{hi}");
+                    peers[owners[k - lo]]
+                        .conn
+                        .send(&Frame::Downlink { round, client, payload })?;
+                    // first downlink of a round opens its shard
+                    shards.entry(round).or_insert_with(|| EdgeShard {
+                        acc: VoteAccumulator::new(m),
+                        pending: expected.get(round as usize).copied().unwrap_or(0),
+                    });
+                }
+                Frame::Bye => {
+                    for p in peers.iter_mut() {
+                        let _ = p.conn.send(&Frame::Bye);
+                    }
+                    break;
+                }
+                f => bail!("edge: unexpected {} from the root", kind_name(f.kind())),
+            }
+        } else {
+            match f {
+                Frame::Uplink { round, client, payload } => {
+                    let Payload::Signs(z) = payload else {
+                        bail!("edge: uplink from client {client} was not a packed sketch")
+                    };
+                    ensure!(z.m() == m, "edge: sketch m={} (want {m})", z.m());
+                    let sh = shards
+                        .get_mut(&round)
+                        .with_context(|| format!("edge: uplink for unopened round {round}"))?;
+                    ensure!(
+                        sh.pending > 0,
+                        "edge: more round-{round} uplinks than clients selected in {lo}..{hi}"
+                    );
+                    sh.acc.absorb(&z, 1.0);
+                    sh.pending -= 1;
+                    if peers[pi].want_ack {
+                        peers[pi].conn.send(&Frame::Ack { round, client })?;
+                    }
+                    if sh.pending == 0 {
+                        let sh = shards.remove(&round).expect("just updated");
+                        up.send(&Frame::Tally {
+                            round,
+                            edge: cfg.edge_id,
+                            payload: Payload::TallyFrame(TallyFrame {
+                                absorbed: sh.acc.absorbed() as u32,
+                                loss_sum: 0.0,
+                                scalar: 0,
+                                quanta: sh.acc.quanta().to_vec(),
+                            }),
+                        })?;
+                    }
+                }
+                Frame::Bye => bail!("edge: fleet peer {pi} left before the run ended"),
+                f => bail!("edge: unexpected {} from fleet peer {pi}", kind_name(f.kind())),
+            }
+        }
+    }
+    for p in &peers {
+        let _ = p.conn.shutdown();
+    }
+    let _ = up.shutdown();
+    drop(rx);
+    for h in readers {
+        let _ = h.join();
+    }
+    Ok(())
+}
+
+/// What one fleet connection saw over its whole life.
+struct ConnStats {
+    uplinks: u64,
+    latencies_ms: Vec<f64>,
+    rounds: u32,
+}
+
+/// Drive one connection's worth of mock clients (`lo..hi`): answer every
+/// downlink with the deterministic [`mock_sketch`] of the *received*
+/// consensus, optionally timing uplink→ACK (the uplink-to-absorb probe),
+/// until the server says BYE.
+fn fleet_connection(
+    ep: &Endpoint,
+    tuning: &Tuning,
+    role: PeerRole,
+    lo: u32,
+    hi: u32,
+    want_ack: bool,
+) -> Result<ConnStats> {
+    let mut conn = connect(ep, tuning, Duration::from_secs(10))?;
+    let welcome = conn.handshake_client(&Hello { role, lo, hi, m: 0, want_ack })?;
+    let m = welcome.m as usize;
+    let mut inflight: HashMap<(u32, u32), Instant> = HashMap::new();
+    let mut stats = ConnStats { uplinks: 0, latencies_ms: Vec::new(), rounds: welcome.rounds };
+    loop {
+        match conn.recv().context("fleet: waiting for the next downlink")? {
+            Frame::Downlink { round, client, payload } => {
+                ensure!(
+                    client >= lo && client < hi,
+                    "fleet {lo}..{hi}: got a downlink for client {client}"
+                );
+                let Payload::Signs(received) = payload else {
+                    bail!("fleet: downlink was not a packed consensus")
+                };
+                ensure!(received.m() == m, "fleet: consensus m={} (want {m})", received.m());
+                let sketch = mock_sketch(welcome.seed, m, client, round, &received);
+                if want_ack {
+                    inflight.insert((round, client), Instant::now());
+                }
+                conn.send(&Frame::Uplink { round, client, payload: Payload::Signs(sketch) })?;
+                stats.uplinks += 1;
+            }
+            Frame::Ack { round, client } => {
+                if let Some(t0) = inflight.remove(&(round, client)) {
+                    stats.latencies_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+                }
+            }
+            Frame::Bye => break,
+            f => bail!("fleet: unexpected {} frame", kind_name(f.kind())),
+        }
+    }
+    let _ = conn.shutdown();
+    Ok(stats)
+}
+
+/// Split the configured client range over `conns` connections, drive
+/// them on parallel threads, and return every connection's stats plus
+/// the wall time.
+fn drive_fleet(cfg: &ServeConfig, role: PeerRole) -> Result<(Vec<ConnStats>, f64)> {
+    let ep = cfg.connect.clone().expect("validated: fleet connects");
+    let tuning = cfg.tuning();
+    let lo = cfg.lo;
+    let hi = if cfg.hi == 0 { cfg.clients as u32 } else { cfg.hi };
+    let chunk = (hi - lo).div_ceil(cfg.conns as u32);
+    let want_ack = cfg.want_ack;
+    let started = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..cfg.conns as u32 {
+        let clo = lo + c * chunk;
+        let chi = (clo + chunk).min(hi);
+        if clo >= chi {
+            break;
+        }
+        let ep = ep.clone();
+        let tuning = tuning.clone();
+        handles.push(
+            thread::Builder::new()
+                .name(format!("pfed1bs-fleet-{c}"))
+                .spawn(move || fleet_connection(&ep, &tuning, role, clo, chi, want_ack))
+                .context("spawning fleet connection thread")?,
+        );
+    }
+    let mut stats = Vec::new();
+    for h in handles {
+        stats.push(h.join().map_err(|_| anyhow::anyhow!("fleet thread panicked"))??);
+    }
+    Ok((stats, started.elapsed().as_secs_f64()))
+}
+
+/// `pfed1bs client-fleet`: simulate `lo..hi` mock clients over `conns`
+/// connections against a live root or edge; exits on the server's BYE.
+pub fn run_fleet(cfg: &ServeConfig) -> Result<()> {
+    let (stats, elapsed) = drive_fleet(cfg, PeerRole::Fleet)?;
+    let uplinks: u64 = stats.iter().map(|s| s.uplinks).sum();
+    println!(
+        "{{\"suite\":\"client-fleet\",\"conns\":{},\"uplinks\":{uplinks},\"elapsed_s\":{elapsed:.3}}}",
+        stats.len()
+    );
+    Ok(())
+}
+
+/// What a loadgen run measured (emitted as `BENCH_loadgen.json`).
+pub struct LoadgenReport {
+    /// mock clients simulated
+    pub clients: usize,
+    /// connections they multiplexed over
+    pub conns: usize,
+    /// protocol rounds the root announced
+    pub rounds: u32,
+    /// total uplinks sent
+    pub uplinks: u64,
+    /// wall time of the whole run
+    pub elapsed_s: f64,
+    /// completed rounds per wall-clock second
+    pub rounds_per_sec: f64,
+    /// median uplink→ACK (absorb) latency, milliseconds
+    pub p50_uplink_to_absorb_ms: f64,
+    /// 99th-percentile uplink→ACK latency, milliseconds
+    pub p99_uplink_to_absorb_ms: f64,
+}
+
+impl LoadgenReport {
+    /// One-line machine-readable form (the `BENCH_<name>.json` convention).
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"suite\":\"loadgen\",\"clients\":{},\"conns\":{},\"rounds\":{},\"uplinks\":{},\
+             \"elapsed_s\":{:.3},\"rounds_per_sec\":{:.3},\
+             \"p50_uplink_to_absorb_ms\":{:.3},\"p99_uplink_to_absorb_ms\":{:.3}}}",
+            self.clients,
+            self.conns,
+            self.rounds,
+            self.uplinks,
+            self.elapsed_s,
+            self.rounds_per_sec,
+            self.p50_uplink_to_absorb_ms,
+            self.p99_uplink_to_absorb_ms,
+        )
+    }
+}
+
+/// `pfed1bs loadgen`: drive a large mock fleet (ACKs on) against a live
+/// root, then report rounds/sec and p50/p99 uplink-to-absorb latency —
+/// printed to stdout and written to `BENCH_loadgen.json`.
+pub fn run_loadgen(cfg: &ServeConfig) -> Result<LoadgenReport> {
+    let (stats, elapsed_s) = drive_fleet(cfg, PeerRole::Loadgen)?;
+    let conns = stats.len();
+    let rounds = stats.iter().map(|s| s.rounds).max().unwrap_or(0);
+    let uplinks: u64 = stats.iter().map(|s| s.uplinks).sum();
+    let lat: Vec<f64> = stats.into_iter().flat_map(|s| s.latencies_ms).collect();
+    let hi = if cfg.hi == 0 { cfg.clients as u32 } else { cfg.hi };
+    let report = LoadgenReport {
+        clients: (hi - cfg.lo) as usize,
+        conns,
+        rounds,
+        uplinks,
+        elapsed_s,
+        rounds_per_sec: if elapsed_s > 0.0 { rounds as f64 / elapsed_s } else { 0.0 },
+        p50_uplink_to_absorb_ms: percentile(&lat, 50.0),
+        p99_uplink_to_absorb_ms: percentile(&lat, 99.0),
+    };
+    std::fs::write("BENCH_loadgen.json", report.to_json() + "\n")
+        .context("writing BENCH_loadgen.json")?;
+    println!("{}", report.to_json());
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mock_sketches_are_deterministic_and_fully_keyed() {
+        let c = SignVec::from_fn(96, |i| i % 2 == 0);
+        let a = mock_sketch(7, 96, 3, 1, &c);
+        assert_eq!(a, mock_sketch(7, 96, 3, 1, &c));
+        assert_eq!(a.m(), 96);
+        assert_ne!(a, mock_sketch(7, 96, 4, 1, &c), "client key");
+        assert_ne!(a, mock_sketch(7, 96, 3, 2, &c), "round key");
+        assert_ne!(a, mock_sketch(8, 96, 3, 1, &c), "seed key");
+        let c2 = SignVec::from_fn(96, |i| i % 3 == 0);
+        assert_ne!(
+            a,
+            mock_sketch(7, 96, 3, 1, &c2),
+            "sketches must chain on the received consensus"
+        );
+    }
+
+    #[test]
+    fn mock_selections_are_deterministic_uniform_draws() {
+        let s = mock_selections(17, 64, 16, 3);
+        assert_eq!(s, mock_selections(17, 64, 16, 3));
+        assert_eq!(s.len(), 3);
+        for sel in &s {
+            assert_eq!(sel.len(), 16);
+            assert!(sel.iter().all(|&k| k < 64));
+            let mut d = sel.clone();
+            d.sort_unstable();
+            d.dedup();
+            assert_eq!(d.len(), 16, "cohort must be without replacement");
+        }
+        assert_ne!(s[0], s[1], "each round draws a fresh cohort");
+    }
+
+    #[test]
+    fn reference_consensus_is_deterministic_and_seed_keyed() {
+        let a = reference_consensus(17, 130, 64, 16, 3);
+        assert_eq!(a, reference_consensus(17, 130, 64, 16, 3));
+        assert_eq!(a.m(), 130);
+        assert_ne!(a, reference_consensus(18, 130, 64, 16, 3));
+        // one round over one client is that client's own sketch, signed
+        let one = reference_consensus(5, 64, 1, 1, 1);
+        let z = mock_sketch(5, 64, 0, 0, &SignVec::from_fn(64, |_| true));
+        assert_eq!(one, z, "a single vote with weight 1 is the sketch itself");
+    }
+
+    #[test]
+    fn range_resolution_enforces_bounds() {
+        let hello = |lo, hi| Hello { role: PeerRole::Fleet, lo, hi, m: 0, want_ack: false };
+        assert_eq!(resolve_range(&hello(0, 0), 64).unwrap(), (0, 64));
+        assert_eq!(resolve_range(&hello(8, 16), 64).unwrap(), (8, 16));
+        assert!(resolve_range(&hello(8, 8), 64).is_err());
+        assert!(resolve_range(&hello(0, 65), 64).is_err());
+        assert!(resolve_range(&hello(64, 0), 64).is_err());
+    }
+}

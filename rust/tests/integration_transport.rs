@@ -1,0 +1,104 @@
+//! Tentpole acceptance (DESIGN.md §12): a full pFed1BS training round —
+//! real PJRT compute, real SRHT sketches — driven through the
+//! socket-backed `StreamTransport` on loopback must be bit-identical to
+//! the clean-channel `SimNetwork` run: same consensus words, same
+//! personalized models, same client-tier byte counts, same losses. The
+//! only permitted difference is the envelope tax, surfaced separately by
+//! `wire_overhead()`.
+//!
+//! Requires `make artifacts` (skips gracefully otherwise), like the rest
+//! of the integration tier. The no-artifacts complement lives in
+//! `prop_transport.rs` (protocol-level golden + serve/fleet smoke).
+
+use pfed1bs::algorithms;
+use pfed1bs::comm::{RoundBytes, StreamTransport, Transport, Tuning};
+use pfed1bs::config::RunConfig;
+use pfed1bs::coordinator::Coordinator;
+use pfed1bs::data::DatasetName;
+use pfed1bs::experiments::Lab;
+
+fn artifacts_available() -> bool {
+    std::path::Path::new("artifacts/manifest.txt").exists()
+}
+
+fn short_cfg() -> RunConfig {
+    let mut cfg = RunConfig::preset(DatasetName::Mnist);
+    cfg.algorithm = "pfed1bs".to_string();
+    cfg.rounds = 3;
+    cfg.local_steps = 5;
+    cfg.eval_every = 3;
+    cfg.seed = 47;
+    cfg
+}
+
+/// One full run over the given transport; returns everything the
+/// bit-identity comparison needs.
+struct Snapshot {
+    losses: Vec<f64>,
+    bytes: Vec<RoundBytes>,
+    final_accuracy: f64,
+    consensus: Vec<u64>,
+    models: Vec<Vec<f32>>,
+}
+
+fn run_over<N: Transport>(lab: &Lab, cfg: RunConfig, net: N) -> (Snapshot, N) {
+    let model = lab.model_for(&cfg).unwrap();
+    let mut alg = algorithms::build("pfed1bs").unwrap();
+    let mut coord = Coordinator::with_transport(cfg, &model, net);
+    let result = coord.run(alg.as_mut()).unwrap();
+    let snap = Snapshot {
+        losses: result.history.records.iter().map(|r| r.train_loss).collect(),
+        bytes: result.history.records.iter().map(|r| r.bytes).collect(),
+        final_accuracy: result.final_accuracy,
+        consensus: alg.consensus_packed().unwrap().words().to_vec(),
+        models: alg.snapshot(),
+    };
+    (snap, coord.net)
+}
+
+fn assert_identical(sim: &Snapshot, sock: &Snapshot, shape: &str) {
+    assert_eq!(sim.losses, sock.losses, "{shape}: losses diverged over the socket");
+    assert_eq!(sim.bytes, sock.bytes, "{shape}: per-round byte ledgers diverged");
+    assert_eq!(sim.final_accuracy, sock.final_accuracy, "{shape}: accuracy diverged");
+    assert_eq!(
+        sim.consensus, sock.consensus,
+        "{shape}: consensus words must be bit-identical across transports"
+    );
+    assert_eq!(sim.models, sock.models, "{shape}: personalized models diverged");
+}
+
+#[test]
+fn socket_transport_run_is_bit_identical_to_sim_network() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let lab = Lab::new("artifacts").expect("lab");
+    let cfg = short_cfg();
+    let sock_net = StreamTransport::loopback(cfg.seed, &Tuning::default()).unwrap();
+    let (sim, _) = run_over(&lab, cfg.clone(), pfed1bs::comm::SimNetwork::new(cfg.seed));
+    let (sock, net) = run_over(&lab, cfg, sock_net);
+    assert_identical(&sim, &sock, "flat");
+    assert!(
+        net.wire_overhead() > 0,
+        "every frame crossed a real socket, so the envelope tax must show"
+    );
+}
+
+#[test]
+fn socket_transport_edge_topology_ships_tally_frames_bit_identically() {
+    if !artifacts_available() {
+        return;
+    }
+    let lab = Lab::new("artifacts").expect("lab");
+    let mut cfg = short_cfg();
+    cfg.apply_pairs([("topology", "edge:4")].into_iter()).unwrap();
+    cfg.validate().unwrap();
+    let sock_net = StreamTransport::loopback(cfg.seed, &Tuning::default()).unwrap();
+    let (sim, _) = run_over(&lab, cfg.clone(), pfed1bs::comm::SimNetwork::new(cfg.seed));
+    let (sock, net) = run_over(&lab, cfg, sock_net);
+    assert_identical(&sim, &sock, "edge:4");
+    // the edge tier actually crossed the wire: merge frames are metered
+    assert!(sock.bytes.iter().all(|b| b.edge_up_msgs == 4), "4 merge frames per round");
+    assert!(net.wire_overhead() > 0);
+}

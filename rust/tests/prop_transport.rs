@@ -1,0 +1,363 @@
+//! Property/fuzz tests for the socket transport (DESIGN.md §12). No
+//! PJRT runtime needed: these hammer the envelope framing with garbage,
+//! truncations, and mutations (a malformed or truncated peer must yield
+//! `Err` — never a panic, never an unbounded allocation), then run real
+//! multi-process rounds over loopback TCP and assert the socket path is
+//! bit-identical to the in-process reference:
+//!
+//! * the protocol-level golden vote (`prop_coordinator.rs`'s analytic
+//!   consensus) replayed through `StreamTransport::loopback`, where every
+//!   uplink traverses a real OS socket — same words, same byte ledger;
+//! * `serve` + `client-fleet` over TCP (flat and client→edge→root
+//!   shapes) reproducing [`reference_consensus`] bit for bit;
+//! * a small `loadgen` smoke checking the rounds/sec + p99
+//!   uplink-to-absorb report is coherent.
+
+use std::io::Cursor;
+use std::thread;
+
+use pfed1bs::comm::codec::{frame_bytes, Payload, TallyFrame};
+use pfed1bs::comm::transport::frame::{
+    decode_body, encode_body, kind_name, read_frame, write_frame, Frame, Hello, PeerRole, Welcome,
+    DEFAULT_MAX_FRAME,
+};
+use pfed1bs::comm::transport::stream::Listener;
+use pfed1bs::comm::{SimNetwork, StreamTransport, Transport, Tuning};
+use pfed1bs::config::{Endpoint, ServeConfig, ServeRole};
+use pfed1bs::serve::{reference_consensus, run_edge_on, run_fleet, run_loadgen, run_root_on};
+use pfed1bs::sketch::bitpack::{SignVec, VoteAccumulator};
+use pfed1bs::util::proptest::check;
+use pfed1bs::util::rng::Rng;
+
+fn rand_signs(rng: &mut Rng, m: usize) -> SignVec {
+    SignVec::from_fn(m, |_| rng.f32() < 0.5)
+}
+
+fn rand_i128(rng: &mut Rng) -> i128 {
+    (((rng.next_u64() as u128) << 64) | rng.next_u64() as u128) as i128
+}
+
+fn rand_payload(rng: &mut Rng) -> Payload {
+    match rng.below(3) {
+        0 => Payload::Signs(rand_signs(rng, 1 + rng.below(300))),
+        1 => Payload::Dense((0..1 + rng.below(64)).map(|_| rng.f32()).collect()),
+        _ => Payload::ScaledSigns {
+            signs: rand_signs(rng, 1 + rng.below(300)),
+            scale: rng.f32() + 0.01,
+        },
+    }
+}
+
+fn rand_frame(rng: &mut Rng) -> Frame {
+    match rng.below(7) {
+        0 => Frame::Hello(Hello {
+            role: [PeerRole::Fleet, PeerRole::Edge, PeerRole::Loadgen][rng.below(3)],
+            lo: rng.next_u32() >> 16,
+            hi: rng.next_u32() >> 16,
+            m: rng.next_u32() >> 16,
+            want_ack: rng.f32() < 0.5,
+        }),
+        1 => Frame::Welcome(Welcome {
+            m: rng.next_u32() >> 12,
+            seed: rng.next_u64(),
+            rounds: rng.next_u32() >> 20,
+            participating: rng.next_u32() >> 20,
+            clients: rng.next_u32() >> 16,
+        }),
+        2 => Frame::Downlink {
+            round: rng.next_u32() >> 20,
+            client: rng.next_u32() >> 16,
+            payload: rand_payload(rng),
+        },
+        3 => Frame::Uplink {
+            round: rng.next_u32() >> 20,
+            client: rng.next_u32() >> 16,
+            payload: rand_payload(rng),
+        },
+        4 => Frame::Tally {
+            round: rng.next_u32() >> 20,
+            edge: rng.next_u32() >> 24,
+            payload: Payload::TallyFrame(TallyFrame {
+                absorbed: rng.next_u32() >> 20,
+                loss_sum: rng.f64(),
+                scalar: rand_i128(rng),
+                quanta: (0..1 + rng.below(40)).map(|_| rand_i128(rng)).collect(),
+            }),
+        },
+        5 => Frame::Ack { round: rng.next_u32() >> 20, client: rng.next_u32() >> 16 },
+        _ => Frame::Bye,
+    }
+}
+
+/// One fixed frame of every kind (plus payload variety), for the
+/// deterministic truncation/mutation sweeps.
+fn sample_frames() -> Vec<Frame> {
+    vec![
+        Frame::Hello(Hello { role: PeerRole::Edge, lo: 0, hi: 32, m: 130, want_ack: true }),
+        Frame::Welcome(Welcome { m: 130, seed: 17, rounds: 3, participating: 16, clients: 64 }),
+        Frame::Downlink {
+            round: 2,
+            client: 7,
+            payload: Payload::Signs(SignVec::from_fn(130, |i| i % 2 == 0)),
+        },
+        Frame::Uplink {
+            round: 2,
+            client: 7,
+            payload: Payload::ScaledSigns {
+                signs: SignVec::from_fn(66, |i| i % 3 == 0),
+                scale: 0.25,
+            },
+        },
+        Frame::Downlink { round: 0, client: 0, payload: Payload::Dense(vec![1.5, -2.5, 0.0]) },
+        Frame::Tally {
+            round: 1,
+            edge: 3,
+            payload: Payload::TallyFrame(TallyFrame {
+                absorbed: 5,
+                loss_sum: 1.25,
+                scalar: -7,
+                quanta: vec![i128::MAX, i128::MIN, 0, 1, -1],
+            }),
+        },
+        Frame::Ack { round: 9, client: 1023 },
+        Frame::Bye,
+    ]
+}
+
+#[test]
+fn random_frames_round_trip_the_envelope() {
+    check("frame_round_trip", 200, |rng| {
+        let f = rand_frame(rng);
+        let body = encode_body(&f);
+        let back = decode_body(&body).map_err(|e| format!("{e:#}"))?;
+        if back != f {
+            return Err(format!("body round trip changed a {} frame", kind_name(f.kind())));
+        }
+        let mut wire = Vec::new();
+        let wrote = write_frame(&mut wire, &f).map_err(|e| format!("{e:#}"))?;
+        if wrote != wire.len() {
+            return Err(format!("write_frame reported {wrote} of {} bytes", wire.len()));
+        }
+        let (got, read) =
+            read_frame(&mut Cursor::new(&wire), DEFAULT_MAX_FRAME).map_err(|e| format!("{e:#}"))?;
+        if got != f || read != wire.len() {
+            return Err("wire round trip diverged".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn arbitrary_garbage_never_panics_or_over_reads() {
+    check("frame_garbage", 500, |rng| {
+        let buf: Vec<u8> = (0..rng.below(256)).map(|_| rng.next_u32() as u8).collect();
+        // must return (Ok or Err), never panic; an Ok must fit the buffer
+        if let Ok((_, n)) = read_frame(&mut Cursor::new(&buf), DEFAULT_MAX_FRAME) {
+            if n > buf.len() {
+                return Err(format!("claimed {n} bytes from a {}-byte buffer", buf.len()));
+            }
+        }
+        let _ = decode_body(&buf);
+        Ok(())
+    });
+}
+
+#[test]
+fn every_strict_prefix_of_a_valid_frame_errs() {
+    for f in sample_frames() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, &f).unwrap();
+        // a peer disconnecting mid-frame at ANY byte is an error, never a hang
+        for cut in 0..wire.len() {
+            assert!(
+                read_frame(&mut Cursor::new(&wire[..cut]), DEFAULT_MAX_FRAME).is_err(),
+                "prefix {cut}/{} of a {} frame decoded",
+                wire.len(),
+                kind_name(f.kind())
+            );
+        }
+    }
+}
+
+#[test]
+fn oversized_length_prefix_errs_before_allocating() {
+    // a hostile 4 GiB length prefix against a 1 KiB cap: the cap check
+    // must fire on the prefix alone, before any body allocation
+    let mut wire = u32::MAX.to_le_bytes().to_vec();
+    wire.extend_from_slice(&[0u8; 16]);
+    let err = read_frame(&mut Cursor::new(&wire), 1024).unwrap_err();
+    assert!(format!("{err:#}").contains("cap"), "got: {err:#}");
+    // one byte past the cap is rejected even with the body present
+    let mut wire = 1025u32.to_le_bytes().to_vec();
+    wire.resize(4 + 1025, 0);
+    assert!(read_frame(&mut Cursor::new(&wire), 1024).is_err());
+    // a zero-length body is malformed, not an empty read loop
+    assert!(read_frame(&mut Cursor::new(&0u32.to_le_bytes()[..]), 1024).is_err());
+}
+
+#[test]
+fn single_byte_mutations_never_panic() {
+    let frames = sample_frames();
+    check("frame_mutation", 400, |rng| {
+        let f = &frames[rng.below(frames.len())];
+        let mut wire = Vec::new();
+        write_frame(&mut wire, f).unwrap();
+        let i = rng.below(wire.len());
+        wire[i] ^= (1 + rng.below(255)) as u8;
+        // any single-byte corruption: Ok or Err, never panic or over-read
+        if let Ok((_, n)) = read_frame(&mut Cursor::new(&wire), DEFAULT_MAX_FRAME) {
+            if n > wire.len() {
+                return Err(format!("claimed {n} bytes from a {}-byte buffer", wire.len()));
+            }
+        }
+        let _ = decode_body(&wire[4..]);
+        Ok(())
+    });
+}
+
+/// `prop_coordinator.rs`'s analytic golden vote, replayed with every
+/// uplink traversing a real OS socket: `StreamTransport::loopback` must
+/// deliver the same payloads, meter the same bytes, and sign the same
+/// consensus words bit-for-bit as the clean-channel `SimNetwork`.
+#[test]
+fn golden_vote_and_wire_bytes_over_a_real_socket() {
+    let m = 130; // three words, 2-bit tail
+    let mut sock = StreamTransport::loopback(7, &Tuning::default()).unwrap();
+    let mut sim = SimNetwork::new(7);
+    let sketches = [
+        SignVec::from_fn(m, |i| i % 2 == 0),
+        SignVec::from_fn(m, |i| i % 3 == 0),
+        SignVec::from_fn(m, |_| true),
+    ];
+    let weights = [0.5f32, 0.25, 0.25];
+    let mut acc = VoteAccumulator::new(m);
+    for (k, (z, &w)) in sketches.iter().zip(&weights).enumerate() {
+        let up = Payload::Signs(z.clone());
+        let via_sock = sock.uplink_from(k, &up).unwrap();
+        let via_sim = sim.uplink_from(k, &up).unwrap();
+        assert_eq!(via_sock, via_sim, "socket delivery diverged from the clean channel");
+        assert_eq!(frame_bytes(&via_sock), 5 + 24, "130 bits -> 3 words -> 24 bytes + header");
+        let Payload::Signs(got) = via_sock else { panic!("uplink changed payload kind") };
+        acc.absorb(&got, w);
+    }
+    let socket_bytes = sock.end_round();
+    let sim_bytes = sim.end_round();
+    assert_eq!(socket_bytes, sim_bytes, "byte ledgers diverged");
+    assert_eq!(socket_bytes.uplink, 3 * (5 + 24));
+    assert_eq!(socket_bytes.uplink_msgs, 3);
+    assert!(sock.wire_overhead() > 0, "the envelope tax must be visible, separately");
+
+    // the analytic consensus: +1 iff i is even or divisible by 3 (the
+    // exact 0.0 tie at odd multiples of 3 breaks toward +1)
+    let want = SignVec::from_fn(m, |i| i % 2 == 0 || i % 3 == 0);
+    let got = acc.finish();
+    assert_eq!(got, want, "vote words diverged from the analytic consensus");
+    let w0 = (0..64u64).fold(0u64, |a, i| if i % 2 == 0 || i % 3 == 0 { a | 1 << i } else { a });
+    assert_eq!(got.words()[0], w0);
+    assert_eq!(got.words()[2], 0b11);
+}
+
+fn role_cfg(role: ServeRole) -> ServeConfig {
+    let mut cfg = ServeConfig::new(role);
+    cfg.clients = 48;
+    cfg.participating = 12;
+    cfg.rounds = 3;
+    cfg.m = 192;
+    cfg.seed = 23;
+    cfg
+}
+
+#[test]
+fn serve_plus_fleet_over_tcp_matches_the_in_process_reference() {
+    let listener = Listener::bind(&Endpoint::parse("tcp:127.0.0.1:0").unwrap()).unwrap();
+    let ep = listener.local_endpoint().unwrap();
+    let mut root_cfg = role_cfg(ServeRole::Root);
+    root_cfg.check_consensus = true; // the run itself asserts bit-identity
+    let mut fleet_cfg = role_cfg(ServeRole::Fleet);
+    fleet_cfg.connect = Some(ep);
+    fleet_cfg.conns = 3;
+    let fleet = thread::spawn(move || run_fleet(&fleet_cfg));
+    let report = run_root_on(&listener, &root_cfg).unwrap();
+    fleet.join().unwrap().unwrap();
+    assert_eq!(report.consensus, reference_consensus(23, 192, 48, 12, 3));
+    assert_eq!(report.absorbed, 3 * 12, "every selected sketch absorbed, every round");
+    assert_eq!(report.tally_bytes, 0, "no edges in the flat shape");
+    assert!(report.uplink_bytes > 0 && report.downlink_bytes > 0);
+}
+
+#[test]
+fn serve_plus_edge_plus_fleet_matches_the_in_process_reference() {
+    let root_l = Listener::bind(&Endpoint::parse("tcp:127.0.0.1:0").unwrap()).unwrap();
+    let root_ep = root_l.local_endpoint().unwrap();
+    let edge_l = Listener::bind(&Endpoint::parse("tcp:127.0.0.1:0").unwrap()).unwrap();
+    let edge_ep = edge_l.local_endpoint().unwrap();
+
+    let mut root_cfg = role_cfg(ServeRole::Root);
+    root_cfg.clients = 40;
+    root_cfg.participating = 10;
+    root_cfg.seed = 29;
+    root_cfg.m = 160;
+    root_cfg.check_consensus = true;
+
+    // the edge fronts clients 0..24; clients 24..40 connect straight to root
+    let mut edge_cfg = ServeConfig::new(ServeRole::Edge);
+    edge_cfg.connect = Some(root_ep.clone());
+    edge_cfg.lo = 0;
+    edge_cfg.hi = 24;
+    edge_cfg.edge_id = 3;
+    let edge = thread::spawn(move || run_edge_on(&edge_l, &edge_cfg));
+
+    let mut near = role_cfg(ServeRole::Fleet);
+    near.connect = Some(edge_ep);
+    near.lo = 0;
+    near.hi = 24;
+    near.conns = 2;
+    let near = thread::spawn(move || run_fleet(&near));
+
+    let mut far = role_cfg(ServeRole::Fleet);
+    far.connect = Some(root_ep);
+    far.lo = 24;
+    far.hi = 40;
+    far.conns = 1;
+    let far = thread::spawn(move || run_fleet(&far));
+
+    let report = run_root_on(&root_l, &root_cfg).unwrap();
+    edge.join().unwrap().unwrap();
+    near.join().unwrap().unwrap();
+    far.join().unwrap().unwrap();
+
+    assert_eq!(report.consensus, reference_consensus(29, 160, 40, 10, 3));
+    assert_eq!(report.absorbed, 3 * 10);
+    assert!(report.tally_bytes > 0, "the edge must answer with merge frames");
+}
+
+#[test]
+fn loadgen_smoke_reports_coherent_throughput_and_latency() {
+    let listener = Listener::bind(&Endpoint::parse("tcp:127.0.0.1:0").unwrap()).unwrap();
+    let ep = listener.local_endpoint().unwrap();
+    let mut root_cfg = ServeConfig::new(ServeRole::Root);
+    root_cfg.clients = 200;
+    root_cfg.participating = 50;
+    root_cfg.rounds = 3;
+    root_cfg.m = 256;
+    root_cfg.seed = 31;
+    root_cfg.check_consensus = true;
+    let mut gen_cfg = ServeConfig::new(ServeRole::Loadgen); // want_ack defaults on
+    gen_cfg.clients = 200;
+    gen_cfg.connect = Some(ep);
+    gen_cfg.conns = 4;
+    gen_cfg.rounds = 3;
+    gen_cfg.participating = 50;
+    gen_cfg.m = 256;
+    gen_cfg.seed = 31;
+    let gen = thread::spawn(move || run_loadgen(&gen_cfg));
+    run_root_on(&listener, &root_cfg).unwrap();
+    let report = gen.join().unwrap().unwrap();
+    assert_eq!(report.rounds, 3);
+    assert_eq!(report.uplinks, 3 * 50, "one uplink per selected client per round");
+    assert!(report.rounds_per_sec > 0.0);
+    assert!(report.p50_uplink_to_absorb_ms > 0.0, "ACKs must time the absorb path");
+    assert!(report.p99_uplink_to_absorb_ms >= report.p50_uplink_to_absorb_ms);
+    let json = report.to_json();
+    assert!(json.contains("\"p99_uplink_to_absorb_ms\"") && json.contains("\"rounds_per_sec\""));
+}
