@@ -53,9 +53,28 @@ pub enum AggKind {
     DenseSum(Vec<f32>),
 }
 
+/// A late uplink buffered across a round boundary (quorum mode,
+/// DESIGN.md §13): the payload-plus-loss output (its personalized
+/// write-back was already applied in its home round), the un-normalized
+/// staleness-decayed mass it will carry, and how late it was.
+#[derive(Debug)]
+pub struct CarriedUplink {
+    /// the late client's output: uplink payload + loss bookkeeping, with
+    /// `state` already stripped (the write-back landed in the home round)
+    pub out: ClientOutput,
+    /// un-normalized carry mass `p_k · staleness_decay^age`; the
+    /// coordinator divides by the next round's `norm_total` before
+    /// absorbing
+    pub raw_weight: f32,
+    /// rounds late when it arrived (1 = missed its round's close by at
+    /// most one deadline window)
+    pub age: usize,
+}
+
 /// One round's streaming aggregation: the algorithm-specific tally plus
 /// the bookkeeping every algorithm shares (delivered count, loss mean,
-/// personalized write-backs).
+/// personalized write-backs) and the carry buffer of late uplinks bound
+/// for round t+1.
 pub struct RoundAggregator {
     kind: AggKind,
     /// personalized model write-backs (simulation bookkeeping, never
@@ -63,13 +82,23 @@ pub struct RoundAggregator {
     states: Vec<(usize, Vec<f32>)>,
     loss_sum: f64,
     absorbed: usize,
+    /// late uplinks buffered for the NEXT round (DESIGN.md §13); the
+    /// coordinator drains this via [`RoundAggregator::take_carry`]
+    /// before the finish consumes the aggregator
+    carry: Vec<CarriedUplink>,
 }
 
 impl RoundAggregator {
     /// Empty aggregator of the given kind (what `begin_aggregate` hands
     /// the round engine).
     pub fn new(kind: AggKind) -> RoundAggregator {
-        RoundAggregator { kind, states: Vec::new(), loss_sum: 0.0, absorbed: 0 }
+        RoundAggregator {
+            kind,
+            states: Vec::new(),
+            loss_sum: 0.0,
+            absorbed: 0,
+            carry: Vec::new(),
+        }
     }
 
     /// Sketches folded so far (delivered uplinks; cut stragglers and
@@ -141,6 +170,33 @@ impl RoundAggregator {
         if let Some(w) = out.state {
             self.states.push((out.client, w));
         }
+    }
+
+    /// A late-but-inside-`max_staleness` uplink (DESIGN.md §13): the
+    /// personalized write-back is applied NOW — the client's local model
+    /// really advanced this round — while the payload and loss wait in
+    /// the carry buffer, to be absorbed into round t+1's aggregator at
+    /// weight `raw_weight / norm_total(t+1)`. Like [`absorb_cut`], this
+    /// touches none of the round's tally bookkeeping.
+    ///
+    /// [`absorb_cut`]: RoundAggregator::absorb_cut
+    pub fn buffer_late(&mut self, mut out: ClientOutput, raw_weight: f32, age: usize) {
+        if let Some(w) = out.state.take() {
+            self.states.push((out.client, w));
+        }
+        self.carry.push(CarriedUplink { out, raw_weight, age });
+    }
+
+    /// Drain the buffered late uplinks (the coordinator stashes them for
+    /// round t+1 after the shard merge, before the finish consumes the
+    /// aggregator).
+    pub fn take_carry(&mut self) -> Vec<CarriedUplink> {
+        std::mem::take(&mut self.carry)
+    }
+
+    /// Σ un-normalized carry mass awaiting the next round.
+    pub fn carry_mass(&self) -> f32 {
+        self.carry.iter().map(|c| c.raw_weight).sum()
     }
 
     /// Encode this shard's server-state content as its edge→root merge
@@ -247,6 +303,9 @@ impl RoundAggregator {
         self.states.extend(other.states);
         self.loss_sum += other.loss_sum;
         self.absorbed += other.absorbed;
+        // carry buffers concatenate; merging shards in canonical edge
+        // order keeps the carried absorb order deterministic next round
+        self.carry.extend(other.carry);
         Ok(())
     }
 
@@ -334,6 +393,54 @@ mod tests {
         assert_eq!(states, vec![(7, vec![7.0])]);
         let AggKind::Vote(tally) = kind else { panic!() };
         assert_eq!(tally.absorbed(), 0, "cut uplink must not enter the tally");
+    }
+
+    #[test]
+    fn buffered_late_uplinks_keep_write_backs_now_and_payloads_for_later() {
+        let z = SignVec::from_signs(&[1.0, -1.0]);
+        let mut agg = RoundAggregator::new(AggKind::Vote(VoteAccumulator::new(2)));
+        agg.buffer_late(out(7, Some(Payload::Signs(z.clone())), 5.0), 0.125, 1);
+        // nothing entered this round's tally or loss bookkeeping …
+        assert_eq!(agg.absorbed(), 0);
+        assert!((agg.carry_mass() - 0.125).abs() < 1e-9);
+        let carried = agg.take_carry();
+        assert_eq!(agg.carry_mass(), 0.0, "take_carry drains the buffer");
+        let (kind, states, absorbed, outcome) = agg.into_parts();
+        assert_eq!((absorbed, outcome.train_loss), (0, 0.0));
+        // … but the write-back landed in the home round
+        assert_eq!(states, vec![(7, vec![7.0])]);
+        let AggKind::Vote(tally) = kind else { panic!() };
+        assert_eq!(tally.absorbed(), 0);
+
+        // the carried output absorbs into a FRESH aggregator exactly
+        // like a direct absorb at the same weight (state stays stripped)
+        let [c] = carried.try_into().unwrap_or_else(|_| panic!("one carried uplink"));
+        assert_eq!((c.raw_weight, c.age), (0.125, 1));
+        assert!(c.out.state.is_none(), "write-back must not replay next round");
+        let mut next = RoundAggregator::new(AggKind::Vote(VoteAccumulator::new(2)));
+        next.absorb(c.out, 0.25).unwrap();
+        let mut direct = RoundAggregator::new(AggKind::Vote(VoteAccumulator::new(2)));
+        let mut d = out(7, Some(Payload::Signs(z)), 5.0);
+        d.state = None;
+        direct.absorb(d, 0.25).unwrap();
+        let (AggKind::Vote(ta), _, 1, oa) = next.into_parts() else { panic!() };
+        let (AggKind::Vote(tb), _, 1, ob) = direct.into_parts() else { panic!() };
+        assert_eq!(ta.quanta(), tb.quanta(), "carried absorb must be the same quanta");
+        assert_eq!(oa.train_loss.to_bits(), ob.train_loss.to_bits());
+    }
+
+    #[test]
+    fn merging_shards_concatenates_carry_buffers() {
+        let z = SignVec::from_signs(&[1.0, -1.0]);
+        let mut a = RoundAggregator::new(AggKind::Vote(VoteAccumulator::new(2)));
+        a.buffer_late(out(1, Some(Payload::Signs(z.clone())), 0.0), 0.5, 1);
+        let mut b = RoundAggregator::new(AggKind::Vote(VoteAccumulator::new(2)));
+        b.buffer_late(out(2, Some(Payload::Signs(z)), 0.0), 0.25, 2);
+        a.merge(b).unwrap();
+        let carried = a.take_carry();
+        let ids: Vec<usize> = carried.iter().map(|c| c.out.client).collect();
+        assert_eq!(ids, vec![1, 2], "canonical merge order is preserved");
+        assert_eq!(carried[1].age, 2);
     }
 
     #[test]

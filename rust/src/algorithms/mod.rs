@@ -51,7 +51,7 @@ pub mod zsignfed;
 
 use anyhow::Result;
 
-pub use crate::algorithms::aggregate::{AggKind, RoundAggregator};
+pub use crate::algorithms::aggregate::{AggKind, CarriedUplink, RoundAggregator};
 pub use crate::comm::{Downlink, Uplink};
 use crate::config::RunConfig;
 use crate::data::FederatedData;

@@ -214,11 +214,25 @@ impl Listener {
 
 /// Dial `ep`, retrying for up to `retry_for` (the server side of a
 /// multi-process launch may bind a moment later than the client starts).
+/// Retries sleep a jittered 25–75 ms between attempts — a fleet of
+/// clients dialing one freshly-launched root must not stampede the
+/// backlog in lockstep — and both the sleep and (on TCP) the in-flight
+/// connect are capped at the remaining budget, so the call cannot
+/// overshoot `retry_for` by a stuck connect.
 pub fn connect(ep: &Endpoint, tuning: &Tuning, retry_for: Duration) -> Result<FramedConn> {
     let deadline = Instant::now() + retry_for;
+    // process-local jitter stream: distinct per client process, no
+    // bearing on protocol determinism (retry timing only)
+    let mut jitter = std::process::id() as u64 ^ 0x4A49_5454; // "JITT"
     loop {
+        let remaining = deadline.saturating_duration_since(Instant::now());
         let attempt: io::Result<Box<dyn NetStream>> = match ep {
-            Endpoint::Tcp(addr) => TcpStream::connect(addr).map(|s| Box::new(s) as _),
+            Endpoint::Tcp(addr) => {
+                tcp_connect_within(addr, remaining).map(|s| Box::new(s) as _)
+            }
+            // Unix-domain connects are local and effectively instant
+            // (std has no connect_timeout for them); the refused-path
+            // case fails immediately rather than blocking
             #[cfg(unix)]
             Endpoint::Unix(path) => UnixStream::connect(path).map(|s| Box::new(s) as _),
             #[cfg(not(unix))]
@@ -230,13 +244,35 @@ pub fn connect(ep: &Endpoint, tuning: &Tuning, retry_for: Duration) -> Result<Fr
         match attempt {
             Ok(s) => return FramedConn::new(s, tuning),
             Err(e) => {
-                if Instant::now() >= deadline || e.kind() == io::ErrorKind::Unsupported {
+                let remaining = deadline.saturating_duration_since(Instant::now());
+                if remaining.is_zero() || e.kind() == io::ErrorKind::Unsupported {
                     return Err(e).with_context(|| format!("connecting to {}", ep.summary()));
                 }
-                thread::sleep(Duration::from_millis(50));
+                let pause =
+                    Duration::from_millis(25 + crate::util::rng::splitmix64(&mut jitter) % 51);
+                thread::sleep(pause.min(remaining));
             }
         }
     }
+}
+
+/// TCP dial bounded by `budget`: resolves the address and tries each
+/// candidate with `connect_timeout`, so a blackholed route cannot hold
+/// the retry loop past its deadline. A zero budget still gets a 1 ms
+/// floor — `connect_timeout` rejects a zero duration outright.
+fn tcp_connect_within(addr: &str, budget: Duration) -> io::Result<TcpStream> {
+    use std::net::ToSocketAddrs;
+    let budget = budget.max(Duration::from_millis(1));
+    let mut last = None;
+    for sa in addr.to_socket_addrs()? {
+        match TcpStream::connect_timeout(&sa, budget) {
+            Ok(s) => return Ok(s),
+            Err(e) => last = Some(e),
+        }
+    }
+    Err(last.unwrap_or_else(|| {
+        io::Error::new(io::ErrorKind::InvalidInput, format!("`{addr}` resolved to no addresses"))
+    }))
 }
 
 /// One tuned socket speaking the length-prefixed framing, with byte
@@ -679,7 +715,17 @@ mod tests {
             l.local_addr().unwrap().port()
         };
         let ep = Endpoint::Tcp(format!("127.0.0.1:{port}"));
+        let started = Instant::now();
         let err = connect(&ep, &Tuning::default(), Duration::from_millis(120)).unwrap_err();
+        let elapsed = started.elapsed();
         assert!(format!("{err:#}").contains("connecting to"), "{err:#}");
+        // the jittered backoff sleeps and the in-flight connect are both
+        // capped at the remaining budget: no overshoot past deadline +
+        // scheduler slack, and the retry loop actually paused between
+        // attempts rather than hot-spinning through the whole window
+        assert!(
+            elapsed < Duration::from_millis(120 + 500),
+            "connect overshot its retry budget: {elapsed:?}"
+        );
     }
 }

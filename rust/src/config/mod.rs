@@ -199,6 +199,31 @@ pub struct RunConfig {
     /// the delivered-set weights renormalize over the surviving edges —
     /// DESIGN.md §11). Requires `topology = edge:E`; 0 = never.
     pub edge_dropout_prob: f64,
+    /// uplinks that close a round (quorum close, DESIGN.md §13): the
+    /// round ends as soon as this many uplinks are accepted instead of
+    /// waiting for the full target S. 0 = sentinel for "the whole
+    /// cohort" (today's barrier), which is also what an explicit
+    /// `quorum = participating` means.
+    pub quorum: usize,
+    /// how many rounds late a computed uplink may arrive and still be
+    /// buffered into the next round's aggregator instead of being cut
+    /// (DESIGN.md §13). 0 = late uplinks are cut, today's behavior.
+    pub max_staleness: usize,
+    /// per-round-of-age weight decay for buffered late uplinks: a
+    /// `age`-rounds-late uplink carries raw mass `p_k · decay^age`
+    /// before renormalization (DESIGN.md §13). Must be in (0, 1];
+    /// irrelevant while `max_staleness = 0`.
+    pub staleness_decay: f64,
+    /// probability a client sits out an entire availability wave
+    /// (churn: devices leaving and rejoining the fleet mid-run —
+    /// DESIGN.md §13). Drawn statelessly per `(seed, wave, client)`,
+    /// so it composes with `dropout_prob` without consuming channel
+    /// draws. 0 = never.
+    pub churn_prob: f64,
+    /// rounds per availability wave: a churned-out client is gone for
+    /// `churn_period` consecutive rounds, then redrawn. Ignored while
+    /// `churn_prob = 0`.
+    pub churn_period: usize,
     /// directory holding the AOT HLO artifacts (`make artifacts`)
     pub artifacts_dir: String,
     /// directory experiment CSVs/tables are written to
@@ -246,6 +271,11 @@ impl RunConfig {
             latency: LatencyModel::Zero,
             topology: Topology::Flat,
             edge_dropout_prob: 0.0,
+            quorum: 0,
+            max_staleness: 0,
+            staleness_decay: 0.5,
+            churn_prob: 0.0,
+            churn_period: 10,
             artifacts_dir: "artifacts".to_string(),
             results_dir: "results".to_string(),
         }
@@ -313,6 +343,11 @@ impl RunConfig {
             "latency" => self.latency = LatencyModel::parse(val)?,
             "topology" => self.topology = Topology::parse(val)?,
             "edge-dropout-prob" | "edge_dropout_prob" => self.edge_dropout_prob = num!(),
+            "quorum" => self.quorum = num!(),
+            "max-staleness" | "max_staleness" => self.max_staleness = num!(),
+            "staleness-decay" | "staleness_decay" => self.staleness_decay = num!(),
+            "churn-prob" | "churn_prob" => self.churn_prob = num!(),
+            "churn-period" | "churn_period" => self.churn_period = num!(),
             "artifacts-dir" | "artifacts_dir" => self.artifacts_dir = val.to_string(),
             "results-dir" | "results_dir" => self.results_dir = val.to_string(),
             other => bail!("unknown config key `{other}`"),
@@ -377,6 +412,24 @@ impl RunConfig {
         if self.edge_dropout_prob > 0.0 && self.topology == Topology::Flat {
             bail!("edge-dropout-prob needs topology=edge:E (flat has no edge tier)");
         }
+        if self.quorum > self.participating {
+            bail!(
+                "quorum must be <= participating ({} > {}); 0 means the whole cohort",
+                self.quorum,
+                self.participating
+            );
+        }
+        if !(self.staleness_decay > 0.0 && self.staleness_decay <= 1.0)
+            || !self.staleness_decay.is_finite()
+        {
+            bail!("staleness-decay must be in (0, 1] (got {})", self.staleness_decay);
+        }
+        if !(0.0..1.0).contains(&self.churn_prob) {
+            bail!("churn-prob must be in [0, 1) (got {})", self.churn_prob);
+        }
+        if self.churn_period == 0 {
+            bail!("churn-period must be >= 1 rounds");
+        }
         Ok(())
     }
 
@@ -427,8 +480,45 @@ impl RunConfig {
             if self.edge_dropout_prob > 0.0 {
                 s.push_str(&format!(" edge-dropout={}", self.edge_dropout_prob));
             }
+            if self.quorum_active() {
+                s.push_str(&format!(
+                    " quorum={}/{}",
+                    self.effective_quorum(),
+                    self.participating
+                ));
+            }
+            if self.max_staleness > 0 {
+                s.push_str(&format!(
+                    " max-staleness={} staleness-decay={}",
+                    self.max_staleness, self.staleness_decay
+                ));
+            }
+            if self.churn_prob > 0.0 {
+                s.push_str(&format!(
+                    " churn-prob={} churn-period={}",
+                    self.churn_prob, self.churn_period
+                ));
+            }
         }
         s
+    }
+
+    /// The number of accepted uplinks that closes a round: the `quorum`
+    /// knob, with 0 (and anything >= S) meaning the full cohort S —
+    /// today's barrier.
+    pub fn effective_quorum(&self) -> usize {
+        if self.quorum == 0 {
+            self.participating
+        } else {
+            self.quorum.min(self.participating)
+        }
+    }
+
+    /// Does the quorum knob actually close rounds early? An explicit
+    /// `quorum = participating` is the barrier spelled out, not a
+    /// scenario.
+    pub fn quorum_active(&self) -> bool {
+        self.effective_quorum() < self.participating
     }
 
     /// Any client-lifecycle scenario knob set away from its default?
@@ -438,6 +528,9 @@ impl RunConfig {
             || self.dropout_prob > 0.0
             || self.latency != LatencyModel::Zero
             || self.edge_dropout_prob > 0.0
+            || self.quorum_active()
+            || self.max_staleness > 0
+            || self.churn_prob > 0.0
     }
 }
 
@@ -572,6 +665,65 @@ mod tests {
         c.edge_dropout_prob = 0.25;
         c.topology = Topology::Flat;
         assert!(c.validate().is_err(), "edge-dropout under flat must be rejected");
+    }
+
+    #[test]
+    fn quorum_and_staleness_knobs_parse_validate_and_summarize() {
+        let mut c = RunConfig::preset(DatasetName::Mnist);
+        assert_eq!(c.effective_quorum(), c.participating, "0 means the whole cohort");
+        assert!(!c.quorum_active() && !c.has_scenario());
+
+        // an explicit quorum = S is the barrier spelled out: no scenario
+        c.apply_pairs([("participating", "12"), ("quorum", "12")].into_iter()).unwrap();
+        c.validate().unwrap();
+        assert_eq!(c.effective_quorum(), 12);
+        assert!(!c.quorum_active() && !c.has_scenario());
+
+        c.apply_pairs(
+            [("quorum", "8"), ("max-staleness", "2"), ("staleness-decay", "0.25")].into_iter(),
+        )
+        .unwrap();
+        c.validate().unwrap();
+        assert!(c.quorum_active() && c.has_scenario());
+        let s = c.summary();
+        assert!(
+            s.contains("quorum=8/12") && s.contains("max-staleness=2"),
+            "{s}"
+        );
+        assert!(s.contains("staleness-decay=0.25"), "{s}");
+
+        // quorum beyond the cohort is a config error
+        c.quorum = 13;
+        assert!(c.validate().is_err());
+        c.quorum = 8;
+        c.staleness_decay = 0.0;
+        assert!(c.validate().is_err());
+        c.staleness_decay = 1.5;
+        assert!(c.validate().is_err());
+        c.staleness_decay = 1.0;
+        c.validate().unwrap();
+
+        // churn: a probability per availability wave
+        c.apply_pairs([("churn-prob", "0.3"), ("churn-period", "5")].into_iter()).unwrap();
+        c.validate().unwrap();
+        assert!(c.summary().contains("churn-prob=0.3 churn-period=5"), "{}", c.summary());
+        c.churn_prob = 1.0;
+        assert!(c.validate().is_err());
+        c.churn_prob = 0.3;
+        c.churn_period = 0;
+        assert!(c.validate().is_err());
+
+        // max-staleness alone (no quorum) is still a scenario: deadline
+        // stragglers become buffered arrivals
+        let mut d = RunConfig::preset(DatasetName::Mnist);
+        d.max_staleness = 1;
+        d.validate().unwrap();
+        assert!(d.has_scenario());
+        // staleness-decay alone is NOT: it gates nothing by itself
+        let mut e = RunConfig::preset(DatasetName::Mnist);
+        e.staleness_decay = 0.9;
+        e.validate().unwrap();
+        assert!(!e.has_scenario());
     }
 
     #[test]

@@ -111,6 +111,15 @@ pub struct ServeConfig {
     /// fleet/loadgen: request an ACK per absorbed uplink (the
     /// uplink-to-absorb latency probe)
     pub want_ack: bool,
+    /// root only: uplinks that close a round (0 = the whole cohort, the
+    /// barrier protocol). Below `participating`, the root closes at
+    /// quorum and the remaining `S − quorum` designated-late uplinks
+    /// join the NEXT round's tally at weight `staleness_decay`
+    /// (DESIGN.md §13)
+    pub quorum: usize,
+    /// root only: vote weight of a one-round-stale designated-late
+    /// uplink, in (0, 1]
+    pub staleness_decay: f64,
 }
 
 impl ServeConfig {
@@ -133,7 +142,23 @@ impl ServeConfig {
             max_frame_mb: 64,
             check_consensus: false,
             want_ack: role == ServeRole::Loadgen,
+            quorum: 0,
+            staleness_decay: 0.5,
         }
+    }
+
+    /// The round-close threshold `quorum` resolves to (0 = whole cohort).
+    pub fn effective_quorum(&self) -> usize {
+        if self.quorum == 0 {
+            self.participating
+        } else {
+            self.quorum.min(self.participating)
+        }
+    }
+
+    /// Whether the root closes rounds before the full cohort lands.
+    pub fn quorum_active(&self) -> bool {
+        self.effective_quorum() < self.participating
     }
 
     /// Build from CLI arguments (see `pfed1bs help` for the knobs).
@@ -158,6 +183,8 @@ impl ServeConfig {
         cfg.max_frame_mb = args.parse_or("max-frame-mb", cfg.max_frame_mb)?;
         cfg.check_consensus = cfg.check_consensus || args.flag("check-consensus");
         cfg.want_ack = cfg.want_ack || args.flag("want-ack");
+        cfg.quorum = args.parse_or("quorum", cfg.quorum)?;
+        cfg.staleness_decay = args.parse_or("staleness-decay", cfg.staleness_decay)?;
         cfg.validate()?;
         Ok(cfg)
     }
@@ -192,6 +219,19 @@ impl ServeConfig {
         ensure!(self.rounds > 0, "rounds must be > 0");
         ensure!(self.m > 0, "m must be > 0");
         ensure!(self.conns >= 1, "conns must be >= 1");
+        ensure!(
+            self.quorum <= self.participating,
+            "quorum must be <= participating {} (got {}; 0 means the whole cohort)",
+            self.participating,
+            self.quorum
+        );
+        ensure!(
+            self.staleness_decay > 0.0
+                && self.staleness_decay <= 1.0
+                && self.staleness_decay.is_finite(),
+            "staleness-decay must be in (0, 1] (got {})",
+            self.staleness_decay
+        );
         ensure!(self.timeout_ms >= 1, "timeout-ms must be >= 1");
         ensure!(self.max_frame_mb >= 1, "max-frame-mb must be >= 1");
         if self.hi != 0 {
@@ -237,6 +277,14 @@ impl ServeConfig {
         }
         if self.role == ServeRole::Edge {
             s.push_str(&format!(" edge-id={}", self.edge_id));
+        }
+        if self.quorum_active() {
+            s.push_str(&format!(
+                " quorum={}/{} staleness-decay={}",
+                self.effective_quorum(),
+                self.participating,
+                self.staleness_decay
+            ));
         }
         if self.check_consensus {
             s.push_str(" check-consensus");
@@ -352,5 +400,39 @@ mod tests {
             &args(&["--connect", "tcp:h:1", "--lo", "0", "--hi", "2", "--conns", "4"])
         )
         .is_err());
+    }
+
+    #[test]
+    fn quorum_knobs_parse_validate_and_summarize() {
+        let base = ["--listen", "tcp:127.0.0.1:0", "--participating", "16"];
+        let cfg = ServeConfig::from_args(ServeRole::Root, &args(&base)).unwrap();
+        assert_eq!(cfg.quorum, 0, "default quorum is the whole-cohort sentinel");
+        assert_eq!(cfg.effective_quorum(), 16);
+        assert!(!cfg.quorum_active());
+        assert!(!cfg.summary().contains("quorum"), "barrier runs stay quiet");
+
+        let mut a = base.to_vec();
+        a.extend(["--quorum", "12", "--staleness-decay", "0.25"]);
+        let cfg = ServeConfig::from_args(ServeRole::Root, &args(&a)).unwrap();
+        assert_eq!(cfg.effective_quorum(), 12);
+        assert!(cfg.quorum_active());
+        let s = cfg.summary();
+        assert!(s.contains("quorum=12/16") && s.contains("staleness-decay=0.25"), "{s}");
+
+        // quorum == participating is explicit-barrier, not quorum mode
+        let mut a = base.to_vec();
+        a.extend(["--quorum", "16"]);
+        let cfg = ServeConfig::from_args(ServeRole::Root, &args(&a)).unwrap();
+        assert!(!cfg.quorum_active());
+
+        for bad in [
+            vec!["--quorum", "17"],
+            vec!["--staleness-decay", "0"],
+            vec!["--staleness-decay", "1.5"],
+        ] {
+            let mut a = base.to_vec();
+            a.extend(bad.iter().copied());
+            assert!(ServeConfig::from_args(ServeRole::Root, &args(&a)).is_err(), "{bad:?}");
+        }
     }
 }

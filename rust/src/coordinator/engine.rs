@@ -23,6 +23,19 @@
 //! stay metered (they reached the edge), payloads never reach the root —
 //! and the delivered-set weights renormalize over the surviving edges,
 //! composing with §9's delivered-set renormalization.
+//!
+//! Quorum close + staleness buffering (DESIGN.md §13): with `quorum < S`
+//! the round closes as soon as `quorum` uplinks are in, and with
+//! `max_staleness > 0` an arrival that misses the close by at most
+//! `max_staleness` rounds is **buffered** — flagged for the coordinator
+//! to stash into the next round's aggregator at staleness-decayed mass
+//! `p_k · staleness_decay^age` — instead of being cut. The
+//! renormalization then spans delivered + carried-in mass (the
+//! `carry_mass` argument of [`plan_round_buffered`]), so delivered and
+//! carried weights together form one probability vector. At the default
+//! knobs every branch degenerates: `carry_mass = 0` skips the add,
+//! no arrival is ever buffered, and the plan is bit-identical to the
+//! barrier engine.
 
 use crate::comm::Transport;
 use crate::config::{RunConfig, Topology};
@@ -39,8 +52,17 @@ pub struct Arrival {
     pub at_ms: f64,
     /// delivered (absorbed into the aggregator) vs cut as a straggler
     pub accepted: bool,
+    /// late but within `max_staleness` of the close: the coordinator
+    /// buffers this uplink into round t+1's aggregator instead of
+    /// cutting it (DESIGN.md §13). Mutually exclusive with `accepted`.
+    pub buffered: bool,
+    /// rounds late relative to the close (1 = within one deadline
+    /// window after it); 0 for accepted and cut arrivals
+    pub staleness: usize,
     /// delivered-set weight p_k (renormalized over what arrived in
-    /// time); 0.0 for cut arrivals
+    /// time plus any carried-in staleness mass); 0.0 for cut and
+    /// buffered arrivals — a buffered uplink's weight materializes next
+    /// round, decayed and renormalized there
     pub weight: f32,
 }
 
@@ -67,6 +89,16 @@ pub struct RoundPlan {
     /// edge aggregators that missed this round's deadline (empty under
     /// `flat` or when `edge_dropout_prob = 0`), ascending edge ids
     pub failed_edges: Vec<usize>,
+    /// the quorum — not the deadline or the target count — closed this
+    /// round with in-time uplinks still outstanding (DESIGN.md §13)
+    pub quorum_closed: bool,
+    /// late arrivals buffered into round t+1 instead of cut
+    pub buffered_late: usize,
+    /// the mass the delivered-set weights were normalized by: delivered
+    /// p_k plus carried-in staleness mass. 0.0 when nothing was
+    /// delivered or the degenerate-mass guard fired (in which case the
+    /// coordinator absorbs nothing, carry included).
+    pub norm_total: f32,
 }
 
 impl RoundPlan {
@@ -84,6 +116,8 @@ impl RoundPlan {
                 client: k,
                 at_ms: 0.0,
                 accepted: true,
+                buffered: false,
+                staleness: 0,
                 weight: w,
             })
             .collect();
@@ -96,6 +130,10 @@ impl RoundPlan {
             stragglers_cut: 0,
             dropped: 0,
             failed_edges: Vec::new(),
+            quorum_closed: false,
+            buffered_late: 0,
+            // caller-supplied weights arrive pre-normalized
+            norm_total: 1.0,
         }
     }
 }
@@ -111,6 +149,35 @@ fn edge_outage_draw(seed: u64, t: usize, edge: usize) -> f64 {
         ^ (edge as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15);
     let _ = splitmix64(&mut s); // whiten once before drawing
     (splitmix64(&mut s) >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+/// The per-(seed, wave, client) churn draw (DESIGN.md §13): a stateless
+/// SplitMix64 stream like [`edge_outage_draw`], so enabling churn
+/// consumes nothing from any client channel or the coordinator RNG —
+/// `churn_prob = 0` planning stays byte-identical. One draw covers a
+/// whole availability wave (`churn_period` rounds): a departed client is
+/// gone for every round of its wave and redrawn — it may rejoin — for
+/// the next.
+fn churn_wave_draw(seed: u64, wave: usize, client: usize) -> f64 {
+    let mut s = seed
+        ^ 0x4348_5552_u64 // "CHUR"
+        ^ (wave as u64).wrapping_mul(0xD6E8_FEB8_6659_FD93)
+        ^ (client as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    let _ = splitmix64(&mut s); // whiten once before drawing
+    (splitmix64(&mut s) >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+/// How many rounds stale a post-close arrival is: 1 if it lands within
+/// one deadline window after the close, 2 within the next, and so on.
+/// With no deadline configured there is no window length, so every late
+/// arrival counts one round stale (it is absorbed at the next open
+/// regardless).
+fn staleness_age(at_ms: f64, close_ms: f64, deadline_ms: f64) -> usize {
+    if deadline_ms > 0.0 && close_ms.is_finite() {
+        1 + ((at_ms - close_ms) / deadline_ms).floor().max(0.0) as usize
+    } else {
+        1
+    }
 }
 
 /// Plan round `t`: sample the (over-)selected cohort from `rng`, draw
@@ -134,6 +201,25 @@ pub fn plan_round<N: Transport>(
     net: &mut N,
     rng: &mut Rng,
 ) -> RoundPlan {
+    plan_round_buffered(t, cfg, client_weights, 0.0, net, rng)
+}
+
+/// [`plan_round`] with carried-in staleness mass (DESIGN.md §13): the
+/// coordinator passes the Σ of raw staleness-decayed weights it buffered
+/// from round t−1, and the delivered-set renormalization spans delivered
+/// + carried mass so both together form one probability vector. The plan
+/// reports the divisor back as `norm_total` (the coordinator divides
+/// each carried raw weight by it). `carry_mass = 0.0` is exactly
+/// [`plan_round`] — the add is skipped, not folded, so the default
+/// arithmetic stays bit-identical.
+pub fn plan_round_buffered<N: Transport>(
+    t: usize,
+    cfg: &RunConfig,
+    client_weights: &[f32],
+    carry_mass: f32,
+    net: &mut N,
+    rng: &mut Rng,
+) -> RoundPlan {
     let cohort = (cfg.participating + cfg.over_select).min(cfg.clients);
     let selected = rng.sample_without_replacement(cfg.clients, cohort);
 
@@ -143,6 +229,15 @@ pub fn plan_round<N: Transport>(
     let mut arrivals: Vec<Arrival> = Vec::with_capacity(selected.len());
     let mut dropped = 0usize;
     for &k in &selected {
+        // churn wave (DESIGN.md §13): a departed client is unreachable
+        // for its whole wave, exactly like a dropout — drawn statelessly
+        // so the client's channel consumes no extra draw
+        if cfg.churn_prob > 0.0
+            && churn_wave_draw(cfg.seed, t / cfg.churn_period, k) < cfg.churn_prob
+        {
+            dropped += 1;
+            continue;
+        }
         if net.draw_dropout(k, cfg.dropout_prob) {
             dropped += 1;
             continue;
@@ -153,6 +248,8 @@ pub fn plan_round<N: Transport>(
             client: k,
             at_ms,
             accepted: false,
+            buffered: false,
+            staleness: 0,
             weight: 0.0,
         });
         computing.push(k);
@@ -162,15 +259,31 @@ pub fn plan_round<N: Transport>(
     // zero-latency default is exactly selection order
     arrivals.sort_by(|a, b| a.at_ms.total_cmp(&b.at_ms).then(a.task.cmp(&b.task)));
 
-    // accept until the target count or the deadline, whichever first
+    // accept until the quorum (default: the full target S) or the
+    // deadline, whichever first
+    let quorum = cfg.effective_quorum();
     let mut delivered = 0usize;
+    let mut quorum_closed = false;
     for a in arrivals.iter_mut() {
         let in_time = cfg.deadline_ms <= 0.0 || a.at_ms <= cfg.deadline_ms;
-        if delivered < cfg.participating && in_time {
+        if delivered < quorum && in_time {
             a.accepted = true;
             delivered += 1;
+        } else if in_time && cfg.quorum_active() {
+            // an in-time uplink the filled quorum refused: the quorum —
+            // not the deadline — closed this round early
+            quorum_closed = true;
         }
     }
+    // when the round closed: the quorum-filling arrival if the count
+    // rule fired, else the deadline, else never (everything accepted)
+    let close_ms = if delivered == quorum {
+        arrivals.iter().filter(|a| a.accepted).map(|a| a.at_ms).fold(0.0, f64::max)
+    } else if cfg.deadline_ms > 0.0 {
+        cfg.deadline_ms
+    } else {
+        f64::INFINITY
+    };
 
     // edge-lifecycle cut (DESIGN.md §11): a failed edge strands every
     // arrival it had accepted — demote them to stragglers BEFORE the
@@ -191,20 +304,57 @@ pub fn plan_round<N: Transport>(
         }
     }
 
-    // renormalize p_k over the delivered set (Σ weights = 1 whenever
-    // anything was delivered), accumulated in arrival order
-    let total: f32 = arrivals
+    // staleness buffering (DESIGN.md §13): an arrival that missed the
+    // close by at most `max_staleness` rounds is flagged for the
+    // coordinator to buffer into round t+1 instead of being cut.
+    // Arrivals stranded on a failed edge stay cut — the edge lost them.
+    let mut buffered_late = 0usize;
+    if cfg.max_staleness > 0 {
+        for a in arrivals.iter_mut() {
+            if a.accepted || failed_edges.contains(&cfg.topology.edge_of(a.client)) {
+                continue;
+            }
+            let age = staleness_age(a.at_ms, close_ms, cfg.deadline_ms);
+            if age <= cfg.max_staleness {
+                a.buffered = true;
+                a.staleness = age;
+                buffered_late += 1;
+            }
+        }
+    }
+
+    // renormalize p_k over the delivered set plus carried-in staleness
+    // mass (Σ delivered weights + Σ carried weights = 1 whenever
+    // anything was delivered or carried), accumulated in arrival order
+    let delivered_mass: f32 = arrivals
         .iter()
         .filter(|a| a.accepted)
         .map(|a| client_weights[a.client])
         .sum();
-    for a in arrivals.iter_mut() {
-        if a.accepted {
-            a.weight = client_weights[a.client] / total;
+    let total =
+        if carry_mass > 0.0 { delivered_mass + carry_mass } else { delivered_mass };
+    let norm_total = if total.is_finite() && total >= f32::MIN_POSITIVE {
+        for a in arrivals.iter_mut() {
+            if a.accepted {
+                a.weight = client_weights[a.client] / total;
+            }
         }
-    }
+        total
+    } else {
+        // zero/denormal/NaN delivered mass cannot be renormalized:
+        // dividing would hand every weight (and, through
+        // quantize_weight, the exact tally) NaN or inf. Treat the round
+        // as all-dropped — nothing is accepted, the coordinator absorbs
+        // neither uplinks nor carry, server state stays untouched.
+        for a in arrivals.iter_mut() {
+            a.accepted = false;
+            a.weight = 0.0;
+        }
+        delivered = 0;
+        0.0
+    };
 
-    let stragglers_cut = arrivals.len() - delivered;
+    let stragglers_cut = arrivals.len() - delivered - buffered_late;
     RoundPlan {
         t,
         selected,
@@ -214,6 +364,9 @@ pub fn plan_round<N: Transport>(
         stragglers_cut,
         dropped,
         failed_edges,
+        quorum_closed,
+        buffered_late,
+        norm_total,
     }
 }
 
@@ -439,5 +592,183 @@ mod tests {
         assert_eq!(plan.arrivals[1].client, 9);
         assert_eq!(plan.arrivals[1].weight, 0.3);
         assert!(plan.arrivals.iter().all(|a| a.accepted));
+        assert!(!plan.quorum_closed);
+        assert_eq!(plan.buffered_late, 0);
+        assert_eq!(plan.norm_total, 1.0);
+    }
+
+    #[test]
+    fn regression_zero_delivered_weight_is_treated_as_all_dropped() {
+        // the old renormalization divided by the delivered-set mass
+        // unconditionally: an all-zero (or denormal-sum) weight vector
+        // produced NaN/inf weights that poisoned the tally. The guard
+        // must demote the round to all-dropped instead.
+        let cfg = RunConfig::preset(DatasetName::Mnist);
+        for weights in [
+            vec![0.0f32; cfg.clients],
+            // subnormal per-client mass whose sum underflows the guard
+            vec![f32::from_bits(1); cfg.clients],
+        ] {
+            let mut net = SimNetwork::new(cfg.seed);
+            let mut rng = Rng::new(13);
+            let plan = plan_round(0, &cfg, &weights, &mut net, &mut rng);
+            assert_eq!(plan.delivered, 0, "degenerate mass must deliver nothing");
+            assert_eq!(plan.norm_total, 0.0);
+            assert_eq!(plan.stragglers_cut, plan.computing.len());
+            for a in &plan.arrivals {
+                assert!(!a.accepted);
+                assert!(a.weight == 0.0 && a.weight.is_sign_positive(), "no NaN/inf leaks");
+            }
+        }
+        // sanity: a healthy fleet is untouched by the guard
+        let weights = fleet_weights(cfg.clients);
+        let mut net = SimNetwork::new(cfg.seed);
+        let mut rng = Rng::new(13);
+        let plan = plan_round(0, &cfg, &weights, &mut net, &mut rng);
+        assert_eq!(plan.delivered, cfg.participating);
+    }
+
+    #[test]
+    fn quorum_closes_early_and_staleness_buffers_the_tail() {
+        let mut cfg = RunConfig::preset(DatasetName::Mnist);
+        cfg.participating = 10;
+        cfg.quorum = 6;
+        cfg.max_staleness = 2;
+        cfg.latency = LatencyModel::Uniform { lo_ms: 1.0, hi_ms: 30.0 };
+        cfg.validate().unwrap();
+        let weights = fleet_weights(cfg.clients);
+        let mut net = SimNetwork::new(cfg.seed);
+        let mut rng = Rng::new(21);
+        let plan = plan_round(0, &cfg, &weights, &mut net, &mut rng);
+        // no dropout, no deadline: all 10 compute, the quorum takes the
+        // 6 earliest, and the 4-strong tail is buffered (age 1 — no
+        // deadline window), not cut
+        assert_eq!(plan.computing.len(), 10);
+        assert_eq!(plan.delivered, 6);
+        assert!(plan.quorum_closed, "4 in-time uplinks were refused by the filled quorum");
+        assert_eq!(plan.buffered_late, 4);
+        assert_eq!(plan.stragglers_cut, 0);
+        for a in &plan.arrivals {
+            assert!(a.accepted != a.buffered, "every arrival is exactly one of the two");
+            if a.buffered {
+                assert_eq!(a.staleness, 1);
+                assert_eq!(a.weight, 0.0, "buffered mass materializes next round");
+            }
+        }
+        // with no carry, the delivered weights alone renormalize to 1
+        let sum: f32 = plan.arrivals.iter().filter(|a| a.accepted).map(|a| a.weight).sum();
+        assert!((sum - 1.0).abs() < 1e-4, "Σp = {sum}");
+        assert!(plan.norm_total > 0.0);
+
+        // max_staleness = 0 cuts the same tail outright
+        cfg.max_staleness = 0;
+        let mut net = SimNetwork::new(cfg.seed);
+        let mut rng = Rng::new(21);
+        let cut_plan = plan_round(0, &cfg, &weights, &mut net, &mut rng);
+        assert_eq!(cut_plan.delivered, 6);
+        assert_eq!(cut_plan.buffered_late, 0);
+        assert_eq!(cut_plan.stragglers_cut, 4);
+    }
+
+    #[test]
+    fn carry_mass_joins_the_renormalization() {
+        let mut cfg = RunConfig::preset(DatasetName::Mnist);
+        cfg.participating = 8;
+        cfg.quorum = 8;
+        cfg.validate().unwrap();
+        let weights = fleet_weights(cfg.clients);
+        let base = {
+            let mut net = SimNetwork::new(cfg.seed);
+            let mut rng = Rng::new(9);
+            plan_round(0, &cfg, &weights, &mut net, &mut rng)
+        };
+        let delivered_mass = base.norm_total;
+        let carry = 0.5 * delivered_mass;
+        let plan = {
+            let mut net = SimNetwork::new(cfg.seed);
+            let mut rng = Rng::new(9);
+            plan_round_buffered(0, &cfg, &weights, carry, &mut net, &mut rng)
+        };
+        assert_eq!(plan.selected, base.selected, "carry mass must not move the plan");
+        assert_eq!(plan.norm_total, delivered_mass + carry);
+        // delivered weights now sum to delivered/(delivered+carry) = 2/3
+        let sum: f32 = plan.arrivals.iter().filter(|a| a.accepted).map(|a| a.weight).sum();
+        assert!((sum - 2.0 / 3.0).abs() < 1e-4, "Σp = {sum}");
+    }
+
+    #[test]
+    fn deadline_staleness_ages_count_whole_windows() {
+        // close at the deadline (12 ms): an arrival 0.5 windows late is
+        // age 1, 1.5 windows late is age 2, beyond max_staleness is cut
+        assert_eq!(staleness_age(13.0, 12.0, 12.0), 1);
+        assert_eq!(staleness_age(23.9, 12.0, 12.0), 1);
+        assert_eq!(staleness_age(24.1, 12.0, 12.0), 2);
+        assert_eq!(staleness_age(60.0, 12.0, 12.0), 5);
+        // no deadline: every late arrival is one round stale
+        assert_eq!(staleness_age(1e9, 3.0, 0.0), 1);
+
+        let mut cfg = RunConfig::preset(DatasetName::Mnist);
+        cfg.participating = 10;
+        cfg.deadline_ms = 12.0;
+        cfg.max_staleness = 1;
+        cfg.latency = LatencyModel::Uniform { lo_ms: 1.0, hi_ms: 40.0 };
+        cfg.validate().unwrap();
+        let weights = fleet_weights(cfg.clients);
+        let mut net = SimNetwork::new(cfg.seed);
+        let mut rng = Rng::new(17);
+        let plan = plan_round(0, &cfg, &weights, &mut net, &mut rng);
+        for a in &plan.arrivals {
+            if a.buffered {
+                assert!(a.at_ms > 12.0 && a.at_ms <= 24.0, "age-1 window only");
+            } else if !a.accepted {
+                assert!(a.at_ms > 24.0, "older than max_staleness must be cut");
+            }
+        }
+        assert_eq!(
+            plan.delivered + plan.buffered_late + plan.stragglers_cut,
+            plan.computing.len()
+        );
+    }
+
+    #[test]
+    fn churn_waves_are_deterministic_and_hold_for_the_whole_period() {
+        let mut cfg = RunConfig::preset(DatasetName::Mnist);
+        cfg.churn_prob = 0.4;
+        cfg.churn_period = 4;
+        cfg.validate().unwrap();
+        let weights = fleet_weights(cfg.clients);
+        let build = || {
+            let mut net = SimNetwork::new(cfg.seed);
+            let mut rng = Rng::new(29);
+            (0..8).map(|t| plan_round(t, &cfg, &weights, &mut net, &mut rng)).collect::<Vec<_>>()
+        };
+        let plans = build();
+        for (p, q) in plans.iter().zip(&build()) {
+            assert_eq!(p.computing, q.computing, "churn draws must be stateless");
+        }
+        // within one wave, a client's availability cannot change: if it
+        // was churned out of one round of the wave and selected again in
+        // another, it must be out there too
+        for wave in [0usize, 1] {
+            let rounds = &plans[wave * 4..(wave + 1) * 4];
+            let mut out: Vec<usize> = Vec::new();
+            for p in rounds {
+                for &k in &p.selected {
+                    if !p.computing.contains(&k) {
+                        out.push(k);
+                    }
+                }
+            }
+            for p in rounds {
+                for k in &out {
+                    assert!(
+                        !p.computing.contains(k),
+                        "client {k} flip-flopped within wave {wave}"
+                    );
+                }
+            }
+        }
+        let total_dropped: usize = plans.iter().map(|p| p.dropped).sum();
+        assert!(total_dropped > 0, "0.4 churn produced no departure in 8 rounds");
     }
 }

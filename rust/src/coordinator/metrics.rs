@@ -40,6 +40,15 @@ pub struct RoundRecord {
     pub aggregate_ms: f64,
     /// edge aggregators in the topology (0 = flat — DESIGN.md §11)
     pub edges: usize,
+    /// whether the round closed at quorum before the full cohort landed
+    /// (always `false` for barrier rounds — DESIGN.md §13)
+    pub quorum_closed: bool,
+    /// uplinks that missed the close but were buffered into round t+1's
+    /// aggregator instead of cut (`max-staleness > 0` only)
+    pub buffered_late: usize,
+    /// fraction of this round's normalization mass contributed by
+    /// carried-in stale uplinks (0.0 for barrier rounds)
+    pub stale_weight: f64,
 }
 
 /// Full run history + summary.
@@ -99,8 +108,10 @@ impl History {
     /// Write `round,train_loss,test_acc,test_loss,uplink_bytes,
     /// downlink_bytes,duration_ms,grad_norm,consensus_flips,delivered,
     /// stragglers_cut,aggregate_ms,edges,edge_merges,edge_bytes_up,
-    /// edge_bytes_down` CSV (the edge columns are all zero under the
-    /// default `flat` topology — DESIGN.md §11).
+    /// edge_bytes_down,quorum_closed,buffered_late,stale_weight` CSV
+    /// (the edge columns are all zero under the default `flat`
+    /// topology — DESIGN.md §11 — and the quorum columns are
+    /// `0,0,0.000000` for barrier rounds — DESIGN.md §13).
     pub fn write_csv(&self, path: impl AsRef<Path>, header_comment: &str) -> Result<()> {
         let path = path.as_ref();
         if let Some(dir) = path.parent() {
@@ -113,12 +124,12 @@ impl History {
         }
         writeln!(
             f,
-            "round,train_loss,test_acc,test_loss,uplink_bytes,downlink_bytes,duration_ms,grad_norm,consensus_flips,delivered,stragglers_cut,aggregate_ms,edges,edge_merges,edge_bytes_up,edge_bytes_down"
+            "round,train_loss,test_acc,test_loss,uplink_bytes,downlink_bytes,duration_ms,grad_norm,consensus_flips,delivered,stragglers_cut,aggregate_ms,edges,edge_merges,edge_bytes_up,edge_bytes_down,quorum_closed,buffered_late,stale_weight"
         )?;
         for r in &self.records {
             writeln!(
                 f,
-                "{},{:.6},{},{},{},{},{:.3},{},{},{},{},{:.4},{},{},{},{}",
+                "{},{:.6},{},{},{},{},{:.3},{},{},{},{},{:.4},{},{},{},{},{},{},{:.6}",
                 r.round,
                 r.train_loss,
                 fmt_opt(r.test_acc),
@@ -137,6 +148,9 @@ impl History {
                 r.bytes.edge_up_msgs,
                 r.bytes.edge_up,
                 r.bytes.edge_down,
+                r.quorum_closed as u8,
+                r.buffered_late,
+                r.stale_weight,
             )?;
         }
         Ok(())
@@ -174,6 +188,9 @@ mod tests {
             stragglers_cut: round % 2,
             aggregate_ms: 0.25,
             edges: 4,
+            quorum_closed: round % 2 == 1,
+            buffered_late: round % 2,
+            stale_weight: 0.0,
         }
     }
 
@@ -205,11 +222,16 @@ mod tests {
         assert!(lines[0].starts_with("# unit test"));
         assert!(lines[1].starts_with("round,train_loss"));
         assert!(lines[1].ends_with(
-            "aggregate_ms,edges,edge_merges,edge_bytes_up,edge_bytes_down"
+            "edge_bytes_up,edge_bytes_down,quorum_closed,buffered_late,stale_weight"
         ));
         assert_eq!(lines.len(), 3);
         assert!(lines[2].starts_with("0,"));
-        assert!(lines[2].ends_with(",2,0,0.2500,4,4,64,32"), "{}", lines[2]);
+        // round 0: quorum_closed false, buffered_late 0, stale_weight 0
+        assert!(
+            lines[2].ends_with(",2,0,0.2500,4,4,64,32,0,0,0.000000"),
+            "{}",
+            lines[2]
+        );
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -28,7 +28,10 @@
 //!    the shards in canonical edge order — bit-identical to the flat
 //!    server for the exact tally kinds (DESIGN.md §11);
 //! 4. `finish_aggregate` folds the closed (merged) aggregator into
-//!    server state;
+//!    server state — under quorum mode (DESIGN.md §13) stale uplinks
+//!    carried over from the previous round's close absorb at the root
+//!    first, at their staleness-decayed share of the same
+//!    renormalization mass;
 //! 5. optional `server_notify` broadcast to the reachable participants.
 //!
 //! Algorithms never see the network or the topology; the hierarchical
@@ -52,7 +55,8 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use crate::algorithms::{
-    Algorithm, ClientCtx, ClientOutput, InitCtx, RoundAggregator, RoundOutcome, ServerCtx,
+    Algorithm, CarriedUplink, ClientCtx, ClientOutput, InitCtx, RoundAggregator, RoundOutcome,
+    ServerCtx,
 };
 use crate::comm::{Downlink, SimNetwork, Transport};
 use crate::config::{ProjectionKind, RunConfig, Topology};
@@ -62,7 +66,7 @@ use crate::sketch::{DenseGaussianOperator, Projection, SignVec, SrhtOperator};
 use crate::util::rng::Rng;
 
 pub use checkpoint::Checkpoint;
-pub use engine::{plan_round, Arrival, RoundPlan};
+pub use engine::{plan_round, plan_round_buffered, Arrival, RoundPlan};
 pub use evaluator::{evaluate, evaluate_per_client, EvalResult};
 pub use metrics::{History, RoundRecord};
 
@@ -118,6 +122,11 @@ pub struct Coordinator<'a, N: Transport = SimNetwork> {
     /// when set, save a checkpoint to `.0` every `.1` rounds
     pub checkpoint: Option<(String, usize)>,
     rng: Rng,
+    /// root-resident stale uplinks buffered past the previous round's
+    /// quorum close, awaiting absorption into the next round at their
+    /// staleness-decayed weights (DESIGN.md §13). Empty for barrier
+    /// rounds — the default knobs never populate it.
+    carry: Vec<CarriedUplink>,
 }
 
 impl<'a> Coordinator<'a, SimNetwork> {
@@ -159,7 +168,7 @@ impl<'a, N: Transport> Coordinator<'a, N> {
             )),
         };
         let rng = Rng::new(cfg.seed ^ 0x434F_4F52); // "COOR"
-        Coordinator { cfg, data, model, net, projection, checkpoint: None, rng }
+        Coordinator { cfg, data, model, net, projection, checkpoint: None, rng, carry: Vec::new() }
     }
 
     /// One-time algorithm setup against this coordinator's geometry.
@@ -209,6 +218,10 @@ impl<'a, N: Transport> Coordinator<'a, N> {
             !plan.selected.is_empty(),
             "round {t}: empty participant set (validate the config before running)"
         );
+        // stale uplinks buffered past the previous round's close join
+        // this round at the root (DESIGN.md §13); taken now so the
+        // borrow checker sees `self.carry` free for the re-stash below
+        let carried = std::mem::take(&mut self.carry);
 
         // phase 1: broadcast — one independent delivery per selected
         // client, dropouts included (the server cannot know yet); only
@@ -289,6 +302,14 @@ impl<'a, N: Transport> Coordinator<'a, N> {
                     shard
                         .absorb(out, arrival.weight)
                         .with_context(|| format!("absorbing round-{t} uplink"))?;
+                } else if arrival.buffered {
+                    // missed the quorum close but within max-staleness:
+                    // the write-back lands now, the payload is buffered
+                    // for round t+1 at its decayed raw mass
+                    // p_k · staleness_decay^age (DESIGN.md §13)
+                    let raw = data.weights[out.client]
+                        * (cfg.staleness_decay as f32).powi(arrival.staleness as i32);
+                    shard.buffer_late(out, raw, arrival.staleness);
                 } else {
                     // straggler (or stranded on a failed edge): payload
                     // discarded, local state kept
@@ -320,6 +341,23 @@ impl<'a, N: Transport> Coordinator<'a, N> {
             agg.merge(shard)
                 .with_context(|| format!("merging round-{t} edge shards"))?;
         }
+        // carried-in stale uplinks absorb at the ROOT: the carry buffer
+        // was drained from the previous round's merged aggregator, so
+        // it never re-crosses the edge tier and edge failures cannot
+        // touch it (DESIGN.md §13). Each absorbs at raw/norm_total —
+        // the same mass the engine's renormalization spanned. When the
+        // all-dropped guard zeroed norm_total, the carry drops with the
+        // round (server state untouched). The default knobs leave
+        // `carried` empty, so this loop is bit-free for barrier rounds.
+        for c in carried {
+            if plan.norm_total > 0.0 {
+                agg.absorb(c.out, c.raw_weight / plan.norm_total)
+                    .with_context(|| format!("absorbing round-{t} carried-in uplink"))?;
+            }
+        }
+        // stash this round's buffered lates (edge carries concatenated
+        // in canonical merge order) for round t+1
+        self.carry = agg.take_carry();
         agg_time += started.elapsed();
 
         // phase 4: fold the closed aggregator into server state
@@ -370,8 +408,24 @@ impl<'a, N: Transport> Coordinator<'a, N> {
         let mut prev_consensus: Option<SignVec> = None;
         for t in 0..self.cfg.rounds {
             let started = Instant::now();
-            let plan =
-                engine::plan_round(t, &self.cfg, &self.data.weights, &mut self.net, &mut self.rng);
+            // raw mass of the stale uplinks about to join this round —
+            // the engine folds it into the renormalization so delivered
+            // + carried weights share one normalizer (DESIGN.md §13);
+            // 0.0 (empty carry) makes this call exactly `plan_round`
+            let carry_mass: f32 = self.carry.iter().map(|c| c.raw_weight).sum();
+            let plan = engine::plan_round_buffered(
+                t,
+                &self.cfg,
+                &self.data.weights,
+                carry_mass,
+                &mut self.net,
+                &mut self.rng,
+            );
+            let stale_weight = if plan.norm_total > 0.0 {
+                (carry_mass / plan.norm_total) as f64
+            } else {
+                0.0
+            };
             let (outcome, aggregate_ms) = self.run_round_plan(alg, &plan)?;
             let bytes = self.net.end_round();
 
@@ -418,6 +472,9 @@ impl<'a, N: Transport> Coordinator<'a, N> {
                 stragglers_cut: plan.stragglers_cut,
                 aggregate_ms,
                 edges: self.cfg.topology.edges(),
+                quorum_closed: plan.quorum_closed,
+                buffered_late: plan.buffered_late,
+                stale_weight,
             });
             if let Some((path, every)) = &self.checkpoint {
                 if (t + 1) % every == 0 || t + 1 == self.cfg.rounds {
@@ -446,11 +503,16 @@ impl<'a, N: Transport> Coordinator<'a, N> {
                 bytes.total(),
                 if self.cfg.has_scenario() {
                     format!(
-                        " delivered={}/{} cut={} dropped={}{}",
+                        " delivered={}/{} cut={} dropped={}{}{}",
                         plan.delivered,
                         plan.selected.len(),
                         plan.stragglers_cut,
                         plan.dropped,
+                        if plan.buffered_late > 0 {
+                            format!(" buffered={}", plan.buffered_late)
+                        } else {
+                            String::new()
+                        },
                         if plan.failed_edges.is_empty() {
                             String::new()
                         } else {

@@ -84,7 +84,8 @@ subcommands:
 multi-process transport roles (DESIGN.md §12 — no artifacts needed):
   serve         root server      (--listen tcp:H:P|unix:/path  --clients K
                                   --participating S --rounds T --m M --seed S
-                                  --check-consensus)
+                                  --check-consensus  --quorum Q
+                                  --staleness-decay D)
   edge          edge aggregator  (--connect UPSTREAM --listen FLEET-SIDE
                                   --lo A --hi B --edge-id E)
   client-fleet  N mock clients   (--connect EP --lo A --hi B --conns C)
@@ -98,6 +99,8 @@ common options: --artifacts-dir artifacts  --results-dir results
 scenario knobs: --over-select N  --deadline-ms MS  --dropout-prob P
                 --latency zero|fixed:MS|uniform:LO:HI|lognormal:MED:SIGMA
                 --topology flat|edge:E  --edge-dropout-prob P
+                --quorum Q  --max-staleness A  --staleness-decay D
+                --churn-prob P  --churn-period W
 run `make artifacts` once before any train/table/fig subcommand.
 ";
 

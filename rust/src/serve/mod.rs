@@ -20,6 +20,13 @@
 //! ship the same `Payload::TallyFrame` merge frames the in-process
 //! hierarchy uses, and order-invariance makes absorb-on-arrival over
 //! real sockets bit-identical to any serial schedule.
+//!
+//! With `--quorum` below the cohort the root runs the asynchronous
+//! quorum protocol of DESIGN.md §13: each round closes after a
+//! deterministic selection-order quorum, and the remaining
+//! designated-late uplinks join the *next* round's tally at weight
+//! `--staleness-decay` — checked bit for bit against
+//! [`reference_consensus_quorum`].
 
 use std::collections::{HashMap, HashSet};
 use std::sync::mpsc;
@@ -35,7 +42,7 @@ use crate::comm::transport::stream::{connect, FramedConn, Listener, Tuning};
 use crate::config::{Endpoint, ServeConfig, ServeRole};
 use crate::sketch::{packed_bytes, SignVec, VoteAccumulator};
 use crate::util::rng::Rng;
-use crate::util::stats::percentile;
+use crate::util::stats::percentile_nearest_rank;
 
 /// Sentinel reader index for an edge's upstream (root-facing) link.
 const ROOT: usize = usize::MAX;
@@ -80,12 +87,45 @@ pub fn reference_consensus(
     participating: usize,
     rounds: usize,
 ) -> SignVec {
+    reference_consensus_quorum(seed, m, clients, participating, rounds, 0, 0.5)
+}
+
+/// As [`reference_consensus`], but replaying the quorum protocol
+/// (DESIGN.md §13): each round absorbs the *previous* round's
+/// designated-late sketches at weight `decay` — keyed on the consensus
+/// that round broadcast, exactly as the wire clients computed them —
+/// then the first `quorum` selected clients at weight 1.0. The final
+/// round's lates are drained and discarded on the wire, so they never
+/// enter any tally here either. `quorum = 0` (or `= participating`)
+/// leaves no lates and reduces to the barrier replay verbatim.
+pub fn reference_consensus_quorum(
+    seed: u64,
+    m: usize,
+    clients: usize,
+    participating: usize,
+    rounds: usize,
+    quorum: usize,
+    decay: f32,
+) -> SignVec {
+    let q = if quorum == 0 { participating } else { quorum.min(participating) };
     let selections = mock_selections(seed, clients, participating, rounds);
     let mut consensus = SignVec::from_fn(m, |_| true);
+    // the previous round's designated-late sketches, already keyed on
+    // the consensus that was live when they were computed
+    let mut pending: Vec<SignVec> = Vec::new();
     for (t, sel) in selections.iter().enumerate() {
         let mut acc = VoteAccumulator::new(m);
-        for &k in sel {
+        for z in pending.drain(..) {
+            acc.absorb(&z, decay);
+        }
+        for &k in &sel[..q] {
             acc.absorb(&mock_sketch(seed, m, k as u32, t as u32, &consensus), 1.0);
+        }
+        if t + 1 < rounds {
+            pending = sel[q..]
+                .iter()
+                .map(|&k| mock_sketch(seed, m, k as u32, t as u32, &consensus))
+                .collect();
         }
         consensus = acc.finish();
     }
@@ -209,11 +249,12 @@ impl RootReport {
     pub fn to_json(&self, cfg: &ServeConfig) -> String {
         let ones: u32 = self.consensus.words().iter().map(|w| w.count_ones()).sum();
         format!(
-            "{{\"suite\":\"serve\",\"clients\":{},\"participating\":{},\"rounds\":{},\"m\":{},\
+            "{{\"suite\":\"serve\",\"clients\":{},\"participating\":{},\"quorum\":{},\"rounds\":{},\"m\":{},\
              \"absorbed\":{},\"downlink_bytes\":{},\"uplink_bytes\":{},\"tally_bytes\":{},\
              \"consensus_ones\":{ones},\"elapsed_s\":{:.3},\"rounds_per_sec\":{:.3}}}",
             cfg.clients,
             cfg.participating,
+            cfg.effective_quorum(),
             cfg.rounds,
             cfg.m,
             self.absorbed,
@@ -243,6 +284,19 @@ pub fn run_root(cfg: &ServeConfig) -> Result<()> {
 /// edge merge frames), sign the tally, repeat; finally BYE every peer.
 /// With `check_consensus`, fails unless the result equals
 /// [`reference_consensus`] bit for bit.
+///
+/// With `--quorum` below the cohort (DESIGN.md §13) the round closes
+/// after the first `quorum` clients *in selection order* plus the
+/// previous round's designated lates: the remaining `S − quorum`
+/// clients of each round are designated late, their uplinks are
+/// stashed when they arrive early and awaited at the next round's
+/// close, absorbed at weight `staleness_decay`. Selection-order
+/// designation keeps the protocol deterministic — both sides and the
+/// [`reference_consensus_quorum`] oracle agree on who is late without
+/// any wall-clock race deciding membership — while the root genuinely
+/// never waits on a designated-late socket to close a round. Quorum
+/// mode requires direct clients (an edge answers for its whole range
+/// with one indivisible merge frame).
 pub fn run_root_on(listener: &Listener, cfg: &ServeConfig) -> Result<RootReport> {
     let tuning = cfg.tuning();
     let timeout = Duration::from_millis(cfg.timeout_ms);
@@ -263,23 +317,41 @@ pub fn run_root_on(listener: &Listener, cfg: &ServeConfig) -> Result<RootReport>
     drop(tx);
 
     let m = cfg.m;
+    let quorum = cfg.effective_quorum();
+    let decay = cfg.staleness_decay as f32;
+    if cfg.quorum_active() {
+        ensure!(
+            peers.iter().all(|p| p.role != PeerRole::Edge),
+            "quorum mode requires direct clients: an edge answers for its whole \
+             range with one indivisible merge frame the root cannot close early"
+        );
+    }
     let selections = mock_selections(cfg.seed, cfg.clients, cfg.participating, cfg.rounds);
     let mut consensus = SignVec::from_fn(m, |_| true);
     let (mut downlink_bytes, mut uplink_bytes, mut tally_bytes) = (0u64, 0u64, 0u64);
     let mut absorbed_total = 0usize;
+    // quorum mode: designated-late sketches that arrived before their
+    // absorbing round opened, and the late clients still in flight from
+    // the previous round (both empty in barrier mode)
+    let mut stash: HashMap<u32, SignVec> = HashMap::new();
+    let mut late_wait: HashSet<u32> = HashSet::new();
     let started = Instant::now();
     for (t, sel) in selections.iter().enumerate() {
         let t32 = t as u32;
         let payload = Payload::Signs(consensus.clone());
-        // who answers this round: direct clients uplink themselves; an
-        // edge answers for ALL its selected clients with one merge frame
+        // who closes this round: the first `quorum` direct clients in
+        // selection order uplink themselves; an edge answers for ALL
+        // its selected clients with one merge frame. Designated lates
+        // (`sel[quorum..]`) still get the broadcast — they compute and
+        // send, the round just does not wait for them.
         let mut want_up: HashSet<u32> = HashSet::new();
         let mut want_tally: HashSet<usize> = HashSet::new();
-        for &k in sel {
+        let late_set: HashSet<u32> = sel[quorum..].iter().map(|&k| k as u32).collect();
+        for (i, &k) in sel.iter().enumerate() {
             let pi = owners[k];
             if peers[pi].role == PeerRole::Edge {
                 want_tally.insert(pi);
-            } else {
+            } else if i < quorum {
                 want_up.insert(k as u32);
             }
             peers[pi]
@@ -288,20 +360,42 @@ pub fn run_root_on(listener: &Listener, cfg: &ServeConfig) -> Result<RootReport>
             downlink_bytes += frame_bytes(&payload) as u64;
         }
         let mut acc = VoteAccumulator::new(m);
-        while !want_up.is_empty() || !want_tally.is_empty() {
+        // last round's early-arrived lates absorb first (order is
+        // irrelevant: the 64.64 tally is exactly order-invariant)
+        let mut lates_absorbed = 0usize;
+        for (_, z) in stash.drain() {
+            acc.absorb(&z, decay);
+            lates_absorbed += 1;
+        }
+        while !want_up.is_empty() || !want_tally.is_empty() || !late_wait.is_empty() {
             let (pi, f) = rx
                 .recv_timeout(timeout)
                 .with_context(|| format!("round {t}: waiting for uplinks"))?;
             match f {
                 Frame::Uplink { round, client, payload } => {
-                    ensure!(round == t32, "round {t}: got a round-{round} uplink");
                     uplink_bytes += frame_bytes(&payload) as u64;
                     let Payload::Signs(z) = payload else {
                         bail!("round {t}: uplink from client {client} was not a packed sketch")
                     };
                     ensure!(z.m() == m, "round {t}: sketch m={} (want {m})", z.m());
-                    ensure!(want_up.remove(&client), "unexpected uplink from client {client}");
-                    acc.absorb(&z, 1.0);
+                    if round == t32 && want_up.remove(&client) {
+                        acc.absorb(&z, 1.0);
+                    } else if round == t32
+                        && late_set.contains(&client)
+                        && !stash.contains_key(&client)
+                    {
+                        // this round's designated late arrived before
+                        // close: hold it for round t+1's tally
+                        stash.insert(client, z);
+                    } else if round + 1 == t32 && late_wait.remove(&client) {
+                        // last round's late landing now, one round stale
+                        acc.absorb(&z, decay);
+                        lates_absorbed += 1;
+                    } else {
+                        bail!(
+                            "round {t}: unexpected round-{round} uplink from client {client}"
+                        );
+                    }
                     if peers[pi].want_ack {
                         peers[pi].conn.send(&Frame::Ack { round, client })?;
                     }
@@ -325,13 +419,36 @@ pub fn run_root_on(listener: &Listener, cfg: &ServeConfig) -> Result<RootReport>
             }
         }
         ensure!(
-            acc.absorbed() == sel.len(),
+            acc.absorbed() == sel.len() - late_set.len() + lates_absorbed,
             "round {t}: absorbed {} of {} sketches",
             acc.absorbed(),
-            sel.len()
+            sel.len() - late_set.len() + lates_absorbed
         );
+        // who we still owe a wait next round: this round's lates that
+        // have not already been stashed
+        late_wait = late_set.iter().copied().filter(|k| !stash.contains_key(k)).collect();
         absorbed_total += acc.absorbed();
         consensus = acc.finish();
+    }
+    // the final round's designated lates are still in flight (every
+    // fleet client answers every downlink it received): receive, meter,
+    // and discard them so the byte ledger is complete and no peer is
+    // mid-send when the BYE lands. They influence no tally — the run is
+    // over (the oracle drops them the same way).
+    while !late_wait.is_empty() {
+        let (pi, f) = rx
+            .recv_timeout(timeout)
+            .context("draining the final round's designated-late uplinks")?;
+        match f {
+            Frame::Uplink { round, client, payload } if late_wait.remove(&client) => {
+                uplink_bytes += frame_bytes(&payload) as u64;
+                if peers[pi].want_ack {
+                    peers[pi].conn.send(&Frame::Ack { round, client })?;
+                }
+            }
+            Frame::Bye => bail!("peer {pi} left before the final lates drained"),
+            f => bail!("drain: unexpected {} from peer {pi}", kind_name(f.kind())),
+        }
     }
     let elapsed_s = started.elapsed().as_secs_f64();
 
@@ -347,7 +464,15 @@ pub fn run_root_on(listener: &Listener, cfg: &ServeConfig) -> Result<RootReport>
     }
 
     if cfg.check_consensus {
-        let want = reference_consensus(cfg.seed, m, cfg.clients, cfg.participating, cfg.rounds);
+        let want = reference_consensus_quorum(
+            cfg.seed,
+            m,
+            cfg.clients,
+            cfg.participating,
+            cfg.rounds,
+            cfg.quorum,
+            decay,
+        );
         ensure!(
             consensus == want,
             "socket-run consensus diverged from the in-process reference"
@@ -663,8 +788,11 @@ pub fn run_loadgen(cfg: &ServeConfig) -> Result<LoadgenReport> {
         uplinks,
         elapsed_s,
         rounds_per_sec: if elapsed_s > 0.0 { rounds as f64 / elapsed_s } else { 0.0 },
-        p50_uplink_to_absorb_ms: percentile(&lat, 50.0),
-        p99_uplink_to_absorb_ms: percentile(&lat, 99.0),
+        // nearest-rank, not interpolation: a short run collects < 100
+        // ACKs, where interpolated p99 aliases toward the interior
+        // instead of reporting the worst observed tail (DESIGN.md §12)
+        p50_uplink_to_absorb_ms: percentile_nearest_rank(&lat, 50.0),
+        p99_uplink_to_absorb_ms: percentile_nearest_rank(&lat, 99.0),
     };
     std::fs::write("BENCH_loadgen.json", report.to_json() + "\n")
         .context("writing BENCH_loadgen.json")?;
@@ -719,6 +847,33 @@ mod tests {
         let one = reference_consensus(5, 64, 1, 1, 1);
         let z = mock_sketch(5, 64, 0, 0, &SignVec::from_fn(64, |_| true));
         assert_eq!(one, z, "a single vote with weight 1 is the sketch itself");
+    }
+
+    #[test]
+    fn quorum_reference_reduces_to_the_barrier_replay_at_defaults() {
+        let barrier = reference_consensus(17, 130, 64, 16, 3);
+        // both sentinel spellings of "whole cohort" are the barrier run,
+        // whatever the (then-unused) decay says
+        assert_eq!(barrier, reference_consensus_quorum(17, 130, 64, 16, 3, 0, 0.5));
+        assert_eq!(barrier, reference_consensus_quorum(17, 130, 64, 16, 3, 16, 0.25));
+        // a real quorum reshapes every tally: lates join one round stale
+        let q = reference_consensus_quorum(17, 130, 64, 16, 3, 12, 0.5);
+        assert_eq!(q, reference_consensus_quorum(17, 130, 64, 16, 3, 12, 0.5));
+        assert_ne!(q, barrier);
+        assert_ne!(q, reference_consensus_quorum(17, 130, 64, 16, 3, 12, 0.25), "decay keys");
+    }
+
+    #[test]
+    fn quorum_reference_drops_the_final_rounds_lates() {
+        // one round: only sel[..q] can ever vote — the designated lates
+        // of the last round are drained and discarded, not absorbed
+        let sel = &mock_selections(17, 64, 16, 1)[0];
+        let init = SignVec::from_fn(130, |_| true);
+        let mut acc = VoteAccumulator::new(130);
+        for &k in &sel[..12] {
+            acc.absorb(&mock_sketch(17, 130, k as u32, 0, &init), 1.0);
+        }
+        assert_eq!(acc.finish(), reference_consensus_quorum(17, 130, 64, 16, 1, 12, 0.5));
     }
 
     #[test]

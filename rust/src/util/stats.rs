@@ -113,6 +113,27 @@ pub fn percentile(xs: &[f64], q: f64) -> f64 {
     }
 }
 
+/// q-th percentile (0..=100) by the nearest-rank rule on a sorted copy:
+/// the smallest value with at least ⌈q/100·n⌉ observations at or below
+/// it. Unlike [`percentile`]'s interpolation this never manufactures a
+/// value between samples — for tail quantiles over small latency
+/// populations (a loadgen run that collected < 100 ACKs) interpolation
+/// aliases p99 toward the interior, while nearest-rank degrades
+/// honestly: n = 1 reports the only sample for every q, n = 2 reports
+/// the max for any q > 50. Empty input returns 0.0.
+pub fn percentile_nearest_rank(xs: &[f64], q: f64) -> f64 {
+    assert!((0.0..=100.0).contains(&q));
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len();
+    // ceil(q/100 · n), clamped to [1, n] (q = 0 still needs rank 1)
+    let rank = ((q / 100.0) * n as f64).ceil() as usize;
+    v[rank.clamp(1, n) - 1]
+}
+
 /// Median absolute deviation — robust spread estimate for bench timings.
 pub fn mad(xs: &[f64]) -> f64 {
     if xs.is_empty() {
@@ -175,6 +196,34 @@ mod tests {
     fn percentile_interpolates() {
         let xs = [0.0, 10.0];
         assert!((percentile(&xs, 25.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nearest_rank_holds_at_the_issue_boundary_sizes() {
+        // n = 0: defined as 0.0, no panic
+        assert_eq!(percentile_nearest_rank(&[], 50.0), 0.0);
+        assert_eq!(percentile_nearest_rank(&[], 99.0), 0.0);
+        // n = 1: the only sample answers every quantile
+        assert_eq!(percentile_nearest_rank(&[7.5], 0.0), 7.5);
+        assert_eq!(percentile_nearest_rank(&[7.5], 50.0), 7.5);
+        assert_eq!(percentile_nearest_rank(&[7.5], 99.0), 7.5);
+        // n = 2: p99 is the max — interpolation would alias it toward
+        // the midpoint (0.99·(n-1) lands between the two samples)
+        assert_eq!(percentile_nearest_rank(&[1.0, 9.0], 99.0), 9.0);
+        assert_eq!(percentile_nearest_rank(&[1.0, 9.0], 50.0), 1.0);
+        assert_eq!(percentile_nearest_rank(&[1.0, 9.0], 100.0), 9.0);
+        // n = 100: rank = ceil(0.99·100) = 99 → sorted[98]
+        let v100: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        assert_eq!(percentile_nearest_rank(&v100, 99.0), 98.0);
+        assert_eq!(percentile_nearest_rank(&v100, 50.0), 49.0);
+        assert_eq!(percentile_nearest_rank(&v100, 100.0), 99.0);
+        // n = 101: rank = ceil(0.5·101) = 51 → sorted[50], the true
+        // median; p99 rank = ceil(0.99·101) = 100 → sorted[99]
+        let v101: Vec<f64> = (0..101).map(|i| i as f64).collect();
+        assert_eq!(percentile_nearest_rank(&v101, 50.0), 50.0);
+        assert_eq!(percentile_nearest_rank(&v101, 99.0), 99.0);
+        // order-independence: the rule sorts internally
+        assert_eq!(percentile_nearest_rank(&[9.0, 1.0, 5.0], 99.0), 9.0);
     }
 
     #[test]

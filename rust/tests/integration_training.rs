@@ -344,6 +344,86 @@ fn scenario_rounds_meter_stragglers_and_bound_delivery() {
     );
 }
 
+/// Quorum + churn scenario (DESIGN.md §13), mirroring the flaky-fleet
+/// test above: rounds close at a 10-of-16 quorum, the in-time tail is
+/// buffered one round stale instead of cut, and availability waves churn
+/// clients out for whole periods. Pins the new bookkeeping contract —
+/// every computed uplink is metered whether it was absorbed, buffered,
+/// or cut; a round's `stale_weight` is exactly the carried mass share of
+/// the previous round's buffered tail — and keeps the accuracy floor:
+/// staleness-decayed late sketches must help, not poison, the vote.
+#[test]
+fn quorum_churn_rounds_buffer_lates_and_still_learn() {
+    if !artifacts_available() {
+        return;
+    }
+    let lab = Lab::new("artifacts").expect("lab");
+    let mut cfg = short_cfg("pfed1bs");
+    cfg.rounds = 4;
+    cfg.participating = 12;
+    cfg.over_select = 4; // cohort of 16
+    cfg.quorum = 10;
+    cfg.max_staleness = 1;
+    cfg.staleness_decay = 0.5;
+    cfg.churn_prob = 0.25;
+    cfg.churn_period = 2;
+    cfg.latency = pfed1bs::comm::LatencyModel::Uniform { lo_ms: 1.0, hi_ms: 30.0 };
+    cfg.validate().unwrap();
+    let m = lab.executables("mlp784").unwrap().geom.m;
+    let per_msg = (5 + m.div_ceil(64) * 8) as u64;
+
+    let model = lab.model_for(&cfg).unwrap();
+    let mut alg = algorithms::build("pfed1bs").unwrap();
+    let mut coord = Coordinator::new(cfg.clone(), &model);
+    let result = coord.run(alg.as_mut()).unwrap();
+
+    let (mut any_quorum_close, mut any_buffered, mut any_stale, mut any_churn) =
+        (false, false, false, false);
+    let mut prev_buffered = 0usize;
+    for (t, rec) in result.history.records.iter().enumerate() {
+        // every computed uplink was transported: absorbed + buffered + cut
+        let sent = rec.delivered + rec.buffered_late + rec.stragglers_cut;
+        assert_eq!(rec.bytes.uplink_msgs as usize, sent, "round {t} uplink msgs");
+        assert_eq!(rec.bytes.uplink, sent as u64 * per_msg, "round {t} uplink bytes");
+        // the broadcast still reaches the whole cohort, churned clients
+        // included (the server cannot know who left) — except round 0
+        let expect_down_msgs = if t == 0 { 0u32 } else { 16 };
+        assert_eq!(rec.bytes.downlink_msgs, expect_down_msgs, "round {t} downlink msgs");
+        // the quorum, not the target count, bounds fresh deliveries
+        assert!(rec.delivered <= 10, "round {t}: delivered past the quorum");
+        // a round's stale share is carried mass / norm mass: a proper
+        // fraction, and nonzero exactly when round t-1 buffered a tail
+        assert!(
+            (0.0..1.0).contains(&rec.stale_weight),
+            "round {t}: stale_weight {} out of range",
+            rec.stale_weight
+        );
+        if prev_buffered > 0 && rec.delivered > 0 {
+            assert!(
+                rec.stale_weight > 0.0,
+                "round {t}: buffered tail from round {} never materialized",
+                t - 1
+            );
+        }
+        any_quorum_close |= rec.quorum_closed;
+        any_buffered |= rec.buffered_late > 0;
+        any_stale |= rec.stale_weight > 0.0;
+        any_churn |= rec.delivered + rec.buffered_late + rec.stragglers_cut < 16;
+        prev_buffered = rec.buffered_late;
+    }
+    assert!(any_quorum_close, "a 10-of-16 quorum never closed a round early");
+    assert!(any_buffered, "no in-time tail was ever buffered");
+    assert!(any_stale, "no buffered tail ever joined a later tally");
+    assert!(any_churn, "0.25 churn over 2 waves removed nobody");
+    // the run still learns above chance with a third of each round's
+    // sketches arriving a round late at half weight
+    assert!(
+        result.final_accuracy > 0.2,
+        "accuracy {:.3} collapsed under the quorum/churn scenario",
+        result.final_accuracy
+    );
+}
+
 /// Tentpole acceptance at full engine level: a real training run under
 /// `edge:4` must reproduce the flat run's consensus and personalized
 /// models bit-for-bit (exact tally kinds — DESIGN.md §11), keep the

@@ -5,12 +5,15 @@
 //! noisy-downlink / streaming-aggregation protocol regressions.
 //! (Runtime-dependent invariants live in integration_training.rs.)
 
-use pfed1bs::algorithms::{AggKind, Algorithm, ClientOutput, ClientStats, ServerCtx, Uplink};
+use pfed1bs::algorithms::{
+    AggKind, Algorithm, ClientOutput, ClientStats, RoundAggregator, ServerCtx, Uplink,
+};
 use pfed1bs::comm::{encode, Direction, LatencyModel, Ledger, Payload, SimNetwork};
-use pfed1bs::config::RunConfig;
-use pfed1bs::coordinator::plan_round;
+use pfed1bs::config::{RunConfig, Topology};
+use pfed1bs::coordinator::parallel::par_map_consume;
+use pfed1bs::coordinator::{plan_round, plan_round_buffered, RoundPlan};
 use pfed1bs::data::{generate, DatasetName, DatasetSpec, Partition};
-use pfed1bs::sketch::bitpack::{majority_vote_weighted, SignVec};
+use pfed1bs::sketch::bitpack::{majority_vote_weighted, SignVec, VoteAccumulator};
 use pfed1bs::sketch::{Projection, SrhtOperator};
 use pfed1bs::util::proptest::check;
 use pfed1bs::util::rng::Rng;
@@ -441,6 +444,191 @@ fn prop_round_plan_renormalizes_weights_over_the_delivered_set() {
                 && (plan.delivered != cfg.participating || plan.stragglers_cut != 0)
             {
                 return Err("default knobs must deliver the whole cohort".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Three planned rounds of `cfg` over a deterministic transport/RNG pair
+/// (zero carry — the barrier entry point).
+fn three_plans(cfg: &RunConfig, seed: u64, weights: &[f32]) -> Vec<RoundPlan> {
+    let mut net = SimNetwork::new(seed);
+    let mut prng = Rng::new(seed ^ 0x504C_414E);
+    (0..3).map(|t| plan_round_buffered(t, cfg, weights, 0.0, &mut net, &mut prng)).collect()
+}
+
+/// Field-by-field (weights BITWISE) plan equality, plus the barrier
+/// shape itself: no quorum close, no buffered arrivals.
+fn assert_barrier_identical(a: &RoundPlan, b: &RoundPlan) -> Result<(), String> {
+    if a.quorum_closed || b.quorum_closed {
+        return Err("barrier plan claimed a quorum close".into());
+    }
+    if a.buffered_late != 0 || b.buffered_late != 0 {
+        return Err("barrier plan buffered a late arrival".into());
+    }
+    if a.selected != b.selected
+        || a.computing != b.computing
+        || a.delivered != b.delivered
+        || a.stragglers_cut != b.stragglers_cut
+        || a.dropped != b.dropped
+        || a.failed_edges != b.failed_edges
+    {
+        return Err("plan lifecycle fields diverged".into());
+    }
+    if a.norm_total.to_bits() != b.norm_total.to_bits() {
+        return Err("norm_total bits diverged".into());
+    }
+    if a.arrivals.len() != b.arrivals.len() {
+        return Err("arrival counts diverged".into());
+    }
+    for (x, y) in a.arrivals.iter().zip(&b.arrivals) {
+        if x.buffered || y.buffered || x.staleness != 0 || y.staleness != 0 {
+            return Err("barrier arrival carried staleness state".into());
+        }
+        if (x.task, x.client, x.accepted) != (y.task, y.client, y.accepted)
+            || x.at_ms.to_bits() != y.at_ms.to_bits()
+            || x.weight.to_bits() != y.weight.to_bits()
+        {
+            return Err("arrival bits diverged".into());
+        }
+    }
+    Ok(())
+}
+
+/// DESIGN.md §13's reduction argument, pinned as a property: with the
+/// quorum/staleness knobs at their defaults — and equally under the
+/// explicit barrier spelling `quorum = S`, `max_staleness = 0` with a
+/// non-default (inert) decay — the async engine IS the barrier engine.
+/// Plans agree bit for bit across random scenario knobs and topologies
+/// {flat, edge:4}; the tally quanta through the engine's own
+/// `par_map_consume` absorb shape agree across threads {1, 4}; and the
+/// metered per-round wire bytes agree between the two spellings.
+#[test]
+fn prop_default_quorum_knobs_reduce_to_the_barrier_engine_bit_for_bit() {
+    check("quorum_default_reduction", 10, |rng| {
+        for edges in [0usize, 4] {
+            let mut cfg = RunConfig::preset(DatasetName::Mnist);
+            cfg.clients = rng.below(24) + 8;
+            cfg.participating = rng.below(cfg.clients - 1) + 2;
+            cfg.over_select = rng.below((cfg.clients - cfg.participating).min(4) + 1);
+            cfg.dropout_prob = rng.f64() * 0.4;
+            cfg.deadline_ms = if rng.f32() < 0.5 { 0.0 } else { 5.0 + rng.f64() * 20.0 };
+            cfg.latency = match rng.below(3) {
+                0 => LatencyModel::Zero,
+                1 => LatencyModel::Uniform { lo_ms: 1.0, hi_ms: 40.0 },
+                _ => LatencyModel::LogNormal { median_ms: 10.0, sigma: 0.8 },
+            };
+            if edges > 0 {
+                cfg.topology = Topology::Edge { edges };
+                cfg.edge_dropout_prob = rng.f64() * 0.3;
+            }
+            cfg.validate().map_err(|e| e.to_string())?;
+            // the same run with the barrier spelled explicitly; the
+            // decay knob must be inert while max_staleness = 0
+            let mut explicit = cfg.clone();
+            explicit.quorum = explicit.participating;
+            explicit.staleness_decay = 0.25;
+            explicit.validate().map_err(|e| e.to_string())?;
+
+            let seed = rng.next_u64();
+            let raw: Vec<f32> = (0..cfg.clients).map(|_| rng.f32() + 0.01).collect();
+            let total: f32 = raw.iter().sum();
+            let weights: Vec<f32> = raw.iter().map(|&p| p / total).collect();
+
+            let plans = three_plans(&cfg, seed, &weights);
+            let plans_explicit = three_plans(&explicit, seed, &weights);
+            for (a, b) in plans.iter().zip(&plans_explicit) {
+                assert_barrier_identical(a, b)?;
+            }
+
+            // tally-quanta identity through the engine's absorb shape:
+            // worker threads "compute", the caller thread folds each
+            // arrival into its edge shard in plan-arrival order
+            let m = 130;
+            let topo = cfg.topology;
+            for plan in &plans {
+                let outputs: Vec<ClientOutput> = plan
+                    .computing
+                    .iter()
+                    .map(|&k| ClientOutput {
+                        client: k,
+                        uplink: Some(Uplink::new(
+                            plan.t as u32,
+                            Payload::Signs(SignVec::from_fn(m, |i| (i + k) % 3 != 0)),
+                        )),
+                        state: None,
+                        stats: ClientStats::default(),
+                    })
+                    .collect();
+                // serial flat oracle in arrival order
+                let mut flat = RoundAggregator::new(AggKind::Vote(VoteAccumulator::new(m)));
+                for a in &plan.arrivals {
+                    let out = outputs[a.task].clone();
+                    if a.accepted {
+                        flat.absorb(out, a.weight).map_err(|e| e.to_string())?;
+                    } else {
+                        flat.absorb_cut(out);
+                    }
+                }
+                let (AggKind::Vote(want), _, want_absorbed, _) = flat.into_parts() else {
+                    return Err("oracle kind".into());
+                };
+                let order: Vec<usize> = plan.arrivals.iter().map(|a| a.task).collect();
+                for threads in [1usize, 4] {
+                    let mut shards: Vec<RoundAggregator> = (0..topo.shards())
+                        .map(|_| RoundAggregator::new(AggKind::Vote(VoteAccumulator::new(m))))
+                        .collect();
+                    let mut arrivals = plan.arrivals.iter();
+                    par_map_consume(
+                        outputs.clone(),
+                        threads,
+                        &order,
+                        |_, out: ClientOutput| out,
+                        |_, out: ClientOutput| -> Result<(), String> {
+                            let a = arrivals.next().expect("one arrival per task");
+                            let shard = &mut shards[topo.edge_of(out.client)];
+                            if a.accepted {
+                                shard.absorb(out, a.weight).map_err(|e| e.to_string())
+                            } else {
+                                shard.absorb_cut(out);
+                                Ok(())
+                            }
+                        },
+                    )?;
+                    let mut it = shards.into_iter();
+                    let mut root = it.next().unwrap();
+                    for s in it {
+                        root.merge(s).map_err(|e| e.to_string())?;
+                    }
+                    let (AggKind::Vote(got), _, absorbed, _) = root.into_parts() else {
+                        return Err("merged kind".into());
+                    };
+                    if got.quanta() != want.quanta() || absorbed != want_absorbed {
+                        return Err(format!(
+                            "threads={threads} edges={edges} t={}: tally quanta diverged",
+                            plan.t
+                        ));
+                    }
+                }
+
+                // per-round wire bytes agree between the two spellings:
+                // both plans ship the same uplinks through a clean net
+                let mut bytes = [0u64; 2];
+                for (slot, p) in [(0usize, plan), (1, &plans_explicit[plan.t])] {
+                    let mut net = SimNetwork::new(seed ^ 0xB17E);
+                    for a in &p.arrivals {
+                        net.uplink_from(
+                            a.client,
+                            &Payload::Signs(SignVec::from_fn(m, |i| (i + a.client) % 3 != 0)),
+                        )
+                        .map_err(|e| e.to_string())?;
+                    }
+                    bytes[slot] = net.end_round().uplink;
+                }
+                if bytes[0] != bytes[1] {
+                    return Err("wire bytes diverged between barrier spellings".into());
+                }
             }
         }
         Ok(())

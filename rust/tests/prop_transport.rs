@@ -24,7 +24,10 @@ use pfed1bs::comm::transport::frame::{
 use pfed1bs::comm::transport::stream::Listener;
 use pfed1bs::comm::{SimNetwork, StreamTransport, Transport, Tuning};
 use pfed1bs::config::{Endpoint, ServeConfig, ServeRole};
-use pfed1bs::serve::{reference_consensus, run_edge_on, run_fleet, run_loadgen, run_root_on};
+use pfed1bs::serve::{
+    reference_consensus, reference_consensus_quorum, run_edge_on, run_fleet, run_loadgen,
+    run_root_on,
+};
 use pfed1bs::sketch::bitpack::{SignVec, VoteAccumulator};
 use pfed1bs::util::proptest::check;
 use pfed1bs::util::rng::Rng;
@@ -282,6 +285,46 @@ fn serve_plus_fleet_over_tcp_matches_the_in_process_reference() {
     assert_eq!(report.consensus, reference_consensus(23, 192, 48, 12, 3));
     assert_eq!(report.absorbed, 3 * 12, "every selected sketch absorbed, every round");
     assert_eq!(report.tally_bytes, 0, "no edges in the flat shape");
+    assert!(report.uplink_bytes > 0 && report.downlink_bytes > 0);
+}
+
+/// DESIGN.md §13 over a real socket: with `--quorum 8` of 12 the root
+/// closes each round after the first 8 selected clients plus the
+/// previous round's 4 designated lates (absorbed one round stale at
+/// `staleness_decay`), and the final round's lates are drained without
+/// entering any tally. `check_consensus` inside the run asserts
+/// bit-identity against [`reference_consensus_quorum`]; the assertions
+/// here re-check it from the outside and pin the absorb ledger.
+#[test]
+fn serve_plus_fleet_with_a_quorum_closes_rounds_without_the_stragglers() {
+    let listener = Listener::bind(&Endpoint::parse("tcp:127.0.0.1:0").unwrap()).unwrap();
+    let ep = listener.local_endpoint().unwrap();
+    let mut root_cfg = role_cfg(ServeRole::Root);
+    root_cfg.quorum = 8;
+    root_cfg.check_consensus = true;
+    let mut fleet_cfg = role_cfg(ServeRole::Fleet);
+    fleet_cfg.connect = Some(ep);
+    fleet_cfg.conns = 3;
+    let fleet = thread::spawn(move || run_fleet(&fleet_cfg));
+    let report = run_root_on(&listener, &root_cfg).unwrap();
+    fleet.join().unwrap().unwrap();
+    assert_eq!(
+        report.consensus,
+        reference_consensus_quorum(23, 192, 48, 12, 3, 8, 0.5),
+        "socket quorum run diverged from the in-process quorum replay"
+    );
+    assert_ne!(
+        report.consensus,
+        reference_consensus(23, 192, 48, 12, 3),
+        "quorum 8 of 12 must genuinely change the tally vs the barrier run"
+    );
+    // rounds 0..2 absorb their 8-client quorum; rounds 1..2 also absorb
+    // the previous round's 4 lates; round 2's 4 lates drain untallied
+    assert_eq!(report.absorbed, 8 * 3 + 4 * 2, "quorum absorb ledger");
+    assert_eq!(report.tally_bytes, 0, "no edges in the flat shape");
+    // every selected client still answers every downlink it received —
+    // the drained final lates are metered too, so the uplink ledger is
+    // the full 12 sketches/round regardless of quorum
     assert!(report.uplink_bytes > 0 && report.downlink_bytes > 0);
 }
 
