@@ -88,4 +88,5 @@ fn main() {
         }
     }
     b.report();
+    b.emit_json("aggregate");
 }

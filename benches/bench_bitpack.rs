@@ -44,4 +44,5 @@ fn main() {
         });
     }
     b.report();
+    b.emit_json("bitpack");
 }

@@ -34,6 +34,12 @@ fn main() {
         b.bench_elems(&format!("decode_{label}"), elems, || {
             black_box(decode(black_box(&frame)).unwrap());
         });
+        // zero-copy path: validate + view the same frame in place, no
+        // word materialization (accepts/rejects identically to `decode`)
+        b.bench_elems(&format!("decode_borrowed_{label}"), elems, || {
+            black_box(Payload::decode_borrowed(black_box(&frame)).unwrap());
+        });
     }
     b.report();
+    b.emit_json("codec");
 }

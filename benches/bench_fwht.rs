@@ -13,7 +13,8 @@
 use pfed1bs::bench_harness::{black_box, Bench};
 use pfed1bs::sketch::fwht::scalar;
 use pfed1bs::sketch::{
-    fwht_batch, fwht_normalized, fwht_threaded_normalized, DenseGaussianOperator, SrhtOperator,
+    fwht_batch, fwht_blocked_normalized_isa, fwht_normalized, fwht_threaded_normalized,
+    DenseGaussianOperator, Isa, SrhtOperator,
 };
 use pfed1bs::util::rng::Rng;
 
@@ -32,6 +33,20 @@ fn main() {
         b.bench_elems(&format!("fwht_scalar_2^{log2n}"), n as u64, || {
             scalar::fwht_normalized(black_box(&mut x));
         });
+    }
+
+    // explicit-ISA sweep at the headline size: the same blocked
+    // schedule forced through each butterfly level this machine can
+    // run (all bit-identical — only the wall clock may differ)
+    let isas = Isa::available();
+    {
+        let n = 1usize << 17;
+        let mut x: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        for &isa in &isas {
+            b.bench_elems(&format!("fwht_2^17_isa_{}", isa.name()), n as u64, || {
+                fwht_blocked_normalized_isa(black_box(&mut x), isa);
+            });
+        }
     }
 
     // worker-pool mode at the model geometries (bit-identical to serial)
@@ -112,6 +127,25 @@ fn main() {
             pick(&format!("fwht_scalar_2^{log2n}")),
         ) {
             println!("  fwht_2^{log2n}: {:.2}x faster (scalar/blocked)", old / new);
+        }
+    }
+
+    // the tentpole ratio: explicit SIMD butterflies vs the forced-scalar
+    // level under the identical blocked schedule
+    let pick = |name: String| rows.iter().find(|m| m.name == name).map(|m| m.mean_ns);
+    if let Some(scalar_ns) = pick("fwht_2^17_isa_scalar".to_string()) {
+        for &isa in &isas {
+            if isa == Isa::Scalar {
+                continue;
+            }
+            if let Some(simd_ns) = pick(format!("fwht_2^17_isa_{}", isa.name())) {
+                println!(
+                    "simd vs scalar at 2^17: {} is {:.2}x faster (scalar/{})",
+                    isa.name(),
+                    scalar_ns / simd_ns,
+                    isa.name()
+                );
+            }
         }
     }
     println!(

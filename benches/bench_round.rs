@@ -64,4 +64,5 @@ fn main() {
         }
     }
     b.report();
+    b.emit_json("round");
 }

@@ -8,7 +8,7 @@
 
 use pfed1bs::bench_harness::{black_box, Bench};
 use pfed1bs::comm::codec::{Payload, TallyFrame};
-use pfed1bs::comm::transport::frame::{decode_body, encode_body, Frame};
+use pfed1bs::comm::transport::frame::{decode_body, decode_body_borrowed, encode_body, Frame};
 use pfed1bs::comm::{StreamTransport, Transport, Tuning};
 use pfed1bs::sketch::bitpack::SignVec;
 use pfed1bs::util::rng::Rng;
@@ -38,6 +38,11 @@ fn main() {
         });
         b.bench_elems(&format!("decode_{label}"), m as u64, || {
             black_box(decode_body(black_box(&body)).unwrap());
+        });
+        // zero-copy envelope parse: what the serve reader loops pay per
+        // received body (no payload word materialization)
+        b.bench_elems(&format!("decode_borrowed_{label}"), m as u64, || {
+            black_box(decode_body_borrowed(black_box(&body)).unwrap());
         });
     }
 

@@ -26,7 +26,7 @@ use anyhow::{bail, ensure, Result};
 
 use crate::algorithms::common::axpy;
 use crate::algorithms::{ClientOutput, RoundOutcome};
-use crate::comm::codec::TallyFrame;
+use crate::comm::codec::{TallyFrame, TallyFrameView};
 use crate::comm::Payload;
 use crate::sketch::bitpack::{ScalarTally, VoteAccumulator};
 
@@ -272,6 +272,45 @@ impl RoundAggregator {
         Ok(())
     }
 
+    /// Zero-copy twin of [`RoundAggregator::absorb_frame`]: fold an edge
+    /// merge frame straight off its borrowed wire view, decoding each
+    /// i128 quantum in place instead of materializing the quanta vector.
+    /// Bit-identical to `absorb_frame(view.to_owned())` — both add
+    /// exactly `quantum(i)` to tally slot i and the same scalar/loss/
+    /// absorbed bookkeeping.
+    pub fn absorb_frame_view(&mut self, f: &TallyFrameView<'_>) -> Result<()> {
+        let adopt = |tally: &mut VoteAccumulator, f: &TallyFrameView<'_>| -> Result<()> {
+            ensure!(
+                f.quanta_len() == tally.m(),
+                "merge frame has {} tallies, aggregator expects {}",
+                f.quanta_len(),
+                tally.m()
+            );
+            tally.merge_quanta(f.absorbed as usize, |i| f.quantum(i));
+            Ok(())
+        };
+        match &mut self.kind {
+            AggKind::Vote(t) | AggKind::SignSum(t) => {
+                ensure!(f.scalar == 0, "unexpected scalar tally in merge frame");
+                adopt(t, f)?;
+            }
+            AggKind::ScaledVote { tally, scale } => {
+                adopt(tally, f)?;
+                scale.merge(ScalarTally::from_quanta(f.scalar));
+            }
+            AggKind::SketchSum { tally, norm } => {
+                adopt(tally, f)?;
+                norm.merge(ScalarTally::from_quanta(f.scalar));
+            }
+            AggKind::Passthrough | AggKind::DenseSum(_) => {
+                bail!("this aggregator kind does not accept tally merge frames")
+            }
+        }
+        self.loss_sum += f.loss_sum;
+        self.absorbed += f.absorbed as usize;
+        Ok(())
+    }
+
     /// Fold a sibling shard of the same round. Exact for the fixed-point
     /// tallies; `DenseSum` shards add in call order (callers that need
     /// bit-reproducibility merge in canonical order — DESIGN.md §9).
@@ -504,6 +543,60 @@ mod tests {
         assert_eq!(ta.quanta(), tb.quanta(), "wire frame altered the tally");
         assert_eq!(sa.quanta(), sb.quanta());
         assert_eq!(oa.train_loss.to_bits(), ob.train_loss.to_bits());
+    }
+
+    #[test]
+    fn absorb_frame_view_is_bit_identical_to_owned_absorb_frame() {
+        use crate::comm::codec::{encode, PayloadView};
+        use crate::sketch::bitpack::ScalarTally;
+        let mk = |c: usize, s: &[f32], scale: f32, loss: f64| ClientOutput {
+            client: c,
+            uplink: Some(Uplink::new(
+                0,
+                Payload::ScaledSigns { signs: SignVec::from_signs(s), scale },
+            )),
+            state: None,
+            stats: ClientStats { loss },
+        };
+        let fresh = || {
+            RoundAggregator::new(AggKind::ScaledVote {
+                tally: VoteAccumulator::new(3),
+                scale: ScalarTally::new(),
+            })
+        };
+        let mut shard = fresh();
+        shard.absorb(mk(0, &[1.0, -1.0, 1.0], 0.5, 2.0), 0.75).unwrap();
+        shard.absorb(mk(1, &[-1.0, -1.0, 1.0], 2.0, 4.0), 0.25).unwrap();
+        let bytes = encode(&shard.merge_payload().unwrap());
+
+        let mut via_owned = fresh();
+        via_owned.absorb_frame(crate::comm::codec::decode(&bytes).unwrap()).unwrap();
+        let mut via_view = fresh();
+        let Ok(PayloadView::TallyFrame(view)) = Payload::decode_borrowed(&bytes) else {
+            panic!("merge frame must decode as a tally view")
+        };
+        via_view.absorb_frame_view(&view).unwrap();
+
+        let (AggKind::ScaledVote { tally: ta, scale: sa }, _, 2, oa) =
+            via_owned.into_parts()
+        else {
+            panic!("kind changed")
+        };
+        let (AggKind::ScaledVote { tally: tb, scale: sb }, _, 2, ob) =
+            via_view.into_parts()
+        else {
+            panic!("kind changed")
+        };
+        assert_eq!(ta.quanta(), tb.quanta(), "view absorb altered the tally");
+        assert_eq!((ta.absorbed(), sa.quanta()), (tb.absorbed(), sb.quanta()));
+        assert_eq!(oa.train_loss.to_bits(), ob.train_loss.to_bits());
+
+        // the view path enforces the same guards as the owned path
+        let mut wrong_m = RoundAggregator::new(AggKind::Vote(VoteAccumulator::new(7)));
+        assert!(wrong_m.absorb_frame_view(&view).is_err());
+        assert_eq!(wrong_m.absorbed(), 0, "failed adopt must stay untouched");
+        let mut dense = RoundAggregator::new(AggKind::DenseSum(vec![0.0; 3]));
+        assert!(dense.absorb_frame_view(&view).is_err());
     }
 
     #[test]

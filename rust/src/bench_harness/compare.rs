@@ -1,0 +1,643 @@
+//! The perf regression gate over the `BENCH_*.json` ledger
+//! (DESIGN.md §14): a committed per-machine-class baseline
+//! (`BENCH_BASELINE.json`) of named rows, compared against the reports a
+//! bench run just wrote. A row fails the gate only when its baseline
+//! mean is a recorded positive number AND the current mean exceeds it by
+//! more than the budget (default 15%); `null` baselines ("row exists,
+//! mean not pinned yet") and absent reports (artifact-gated benches that
+//! skipped themselves) pass with a note, so the gate never blocks on a
+//! machine that cannot run every suite.
+//!
+//! `PFED1BS_UPDATE_BASELINE=1 pfed1bs perf-compare` rewrites the current
+//! machine class's means from the reports on disk — the intended way to
+//! (re)pin the baseline after an accepted perf change.
+//!
+//! JSON is parsed by a small recursive-descent parser over the subset
+//! this crate emits — serde is unavailable offline (DESIGN.md §2).
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::{fmt_ns, json_escape};
+
+/// A parsed JSON value (the minimal subset the ledger uses).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    /// `null`
+    Null,
+    /// `true` / `false`
+    Bool(bool),
+    /// any number, held as `f64`
+    Num(f64),
+    /// a string, escapes resolved
+    Str(String),
+    /// an array
+    Arr(Vec<Json>),
+    /// an object, fields in document order
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Parse a complete JSON document (rejects trailing bytes).
+    pub fn parse(text: &str) -> Result<Json> {
+        let mut p = Parser { s: text.as_bytes(), i: 0 };
+        let v = p.value()?;
+        p.skip_ws();
+        ensure!(p.i == p.s.len(), "trailing bytes after JSON document");
+        Ok(v)
+    }
+
+    /// Object field lookup; `None` on non-objects and absent keys.
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// The numeric value, if this is a number.
+    pub fn as_f64(&self) -> Option<f64> {
+        if let Json::Num(v) = self {
+            Some(*v)
+        } else {
+            None
+        }
+    }
+
+    /// The string value, if this is a string.
+    pub fn as_str(&self) -> Option<&str> {
+        if let Json::Str(s) = self {
+            Some(s)
+        } else {
+            None
+        }
+    }
+
+    /// The items, if this is an array.
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        if let Json::Arr(items) = self {
+            Some(items)
+        } else {
+            None
+        }
+    }
+}
+
+/// Recursive-descent JSON parser state (byte cursor over the input).
+struct Parser<'a> {
+    s: &'a [u8],
+    i: usize,
+}
+
+impl Parser<'_> {
+    fn skip_ws(&mut self) {
+        while matches!(self.s.get(self.i), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Result<u8> {
+        self.s.get(self.i).copied().context("unexpected end of JSON")
+    }
+
+    fn eat(&mut self, b: u8) -> Result<()> {
+        ensure!(self.peek()? == b, "expected `{}` at byte {}", b as char, self.i);
+        self.i += 1;
+        Ok(())
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        self.skip_ws();
+        match self.peek()? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Ok(Json::Str(self.string()?)),
+            b't' => self.word("true", Json::Bool(true)),
+            b'f' => self.word("false", Json::Bool(false)),
+            b'n' => self.word("null", Json::Null),
+            b'-' | b'0'..=b'9' => self.number(),
+            c => bail!("unexpected `{}` at byte {}", c as char, self.i),
+        }
+    }
+
+    fn word(&mut self, w: &str, v: Json) -> Result<Json> {
+        ensure!(self.s[self.i..].starts_with(w.as_bytes()), "bad literal at byte {}", self.i);
+        self.i += w.len();
+        Ok(v)
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.i;
+        while matches!(self.s.get(self.i), Some(b'-' | b'+' | b'.' | b'e' | b'E' | b'0'..=b'9')) {
+            self.i += 1;
+        }
+        let text = std::str::from_utf8(&self.s[start..self.i]).expect("ASCII number bytes");
+        let v: f64 = text.parse().with_context(|| format!("bad number `{text}`"))?;
+        Ok(Json::Num(v))
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.eat(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.peek()? {
+                b'"' => {
+                    self.i += 1;
+                    return Ok(out);
+                }
+                b'\\' => {
+                    self.i += 1;
+                    let e = self.peek()?;
+                    self.i += 1;
+                    match e {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'b' => out.push('\u{8}'),
+                        b'f' => out.push('\u{c}'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'u' => {
+                            ensure!(self.s.len() >= self.i + 4, "truncated \\u escape");
+                            let hex = std::str::from_utf8(&self.s[self.i..self.i + 4])
+                                .ok()
+                                .and_then(|h| u32::from_str_radix(h, 16).ok())
+                                .context("bad \\u escape")?;
+                            out.push(char::from_u32(hex).context("bad \\u code point")?);
+                            self.i += 4;
+                        }
+                        c => bail!("unknown escape `\\{}`", c as char),
+                    }
+                }
+                _ => {
+                    // multi-byte UTF-8 passes through unmodified
+                    let c = std::str::from_utf8(&self.s[self.i..])
+                        .ok()
+                        .and_then(|r| r.chars().next())
+                        .context("invalid UTF-8 in string")?;
+                    out.push(c);
+                    self.i += c.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json> {
+        self.eat(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek()? == b']' {
+            self.i += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.peek()? {
+                b',' => self.i += 1,
+                b']' => {
+                    self.i += 1;
+                    return Ok(Json::Arr(items));
+                }
+                c => bail!("expected `,` or `]`, got `{}` at byte {}", c as char, self.i),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Json> {
+        self.eat(b'{')?;
+        let mut fields = Vec::new();
+        self.skip_ws();
+        if self.peek()? == b'}' {
+            self.i += 1;
+            return Ok(Json::Obj(fields));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.eat(b':')?;
+            fields.push((key, self.value()?));
+            self.skip_ws();
+            match self.peek()? {
+                b',' => self.i += 1,
+                b'}' => {
+                    self.i += 1;
+                    return Ok(Json::Obj(fields));
+                }
+                c => bail!("expected `,` or `}}`, got `{}` at byte {}", c as char, self.i),
+            }
+        }
+    }
+}
+
+/// One named row of the committed baseline.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BaselineRow {
+    /// suite the row belongs to (`"fwht"`, `"codec"`, …)
+    pub suite: String,
+    /// row name inside the suite (must match the bench's row name)
+    pub name: String,
+    /// pinned mean, ns; `None` (JSON `null`) = tracked but not pinned
+    pub mean_ns: Option<f64>,
+}
+
+/// The committed perf baseline: a gate budget plus the named rows each
+/// machine class is held to.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Baseline {
+    /// per-row regression budget, percent over the pinned mean
+    pub gate_pct: f64,
+    /// machine class (`"x86_64"`, `"aarch64"`) → its tracked rows
+    pub classes: BTreeMap<String, Vec<BaselineRow>>,
+}
+
+impl Baseline {
+    /// Parse `BENCH_BASELINE.json`.
+    pub fn parse(text: &str) -> Result<Baseline> {
+        let doc = Json::parse(text).context("parsing the perf baseline")?;
+        let gate_pct = doc.get("gate_pct").and_then(Json::as_f64).unwrap_or(15.0);
+        ensure!(gate_pct > 0.0, "gate_pct must be positive");
+        let mut classes = BTreeMap::new();
+        if let Some(Json::Obj(cls)) = doc.get("classes") {
+            for (class, rows_v) in cls {
+                let rows_j = rows_v.as_arr().context("baseline class must hold a row array")?;
+                let mut rows = Vec::with_capacity(rows_j.len());
+                for r in rows_j {
+                    rows.push(BaselineRow {
+                        suite: r
+                            .get("suite")
+                            .and_then(Json::as_str)
+                            .context("baseline row missing `suite`")?
+                            .to_string(),
+                        name: r
+                            .get("name")
+                            .and_then(Json::as_str)
+                            .context("baseline row missing `name`")?
+                            .to_string(),
+                        mean_ns: r.get("mean_ns").and_then(Json::as_f64),
+                    });
+                }
+                classes.insert(class.clone(), rows);
+            }
+        }
+        Ok(Baseline { gate_pct, classes })
+    }
+
+    /// Serialize back to the committed on-disk form (deterministic:
+    /// classes sorted, rows in stored order).
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n");
+        let _ = writeln!(out, "  \"gate_pct\": {},", self.gate_pct);
+        out.push_str("  \"classes\": {\n");
+        for (ci, (class, rows)) in self.classes.iter().enumerate() {
+            let _ = writeln!(out, "    \"{}\": [", json_escape(class));
+            for (ri, r) in rows.iter().enumerate() {
+                let _ = writeln!(
+                    out,
+                    "      {{\"suite\": \"{}\", \"name\": \"{}\", \"mean_ns\": {}}}{}",
+                    json_escape(&r.suite),
+                    json_escape(&r.name),
+                    r.mean_ns.map(|v| format!("{v:.1}")).unwrap_or_else(|| "null".into()),
+                    if ri + 1 == rows.len() { "" } else { "," },
+                );
+            }
+            let _ = writeln!(out, "    ]{}", if ci + 1 == self.classes.len() { "" } else { "," });
+        }
+        out.push_str("  }\n}\n");
+        out
+    }
+}
+
+/// Collect `(suite, row) → mean_ns` from every `BENCH_*.json` in `dir`
+/// that carries the harness schema (a `suite` string and a `rows`
+/// array). Foreign-schema reports — `BENCH_loadgen.json`, the baseline
+/// itself — are skipped, as are unparseable files (noted on stderr):
+/// the gate judges only rows the baseline names, so extra files in the
+/// working directory must never fail the step.
+pub fn load_reports(dir: impl AsRef<Path>) -> Result<BTreeMap<(String, String), f64>> {
+    let dir = dir.as_ref();
+    let mut out = BTreeMap::new();
+    let entries =
+        std::fs::read_dir(dir).with_context(|| format!("reading reports in {}", dir.display()))?;
+    for entry in entries {
+        let path = entry?.path();
+        let fname = path.file_name().and_then(|n| n.to_str()).unwrap_or("");
+        if !(fname.starts_with("BENCH_") && fname.ends_with(".json")) {
+            continue;
+        }
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let Ok(doc) = Json::parse(&text) else {
+            eprintln!("perf-compare: skipping unparseable {}", path.display());
+            continue;
+        };
+        let (Some(suite), Some(rows)) =
+            (doc.get("suite").and_then(Json::as_str), doc.get("rows").and_then(Json::as_arr))
+        else {
+            continue;
+        };
+        for row in rows {
+            if let (Some(name), Some(mean)) = (
+                row.get("name").and_then(Json::as_str),
+                row.get("mean_ns").and_then(Json::as_f64),
+            ) {
+                out.insert((suite.to_string(), name.to_string()), mean);
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// How one tracked row fared against the gate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RowStatus {
+    /// within the budget (or faster than baseline)
+    Ok,
+    /// slower than the pinned baseline by more than the budget
+    Regressed,
+    /// baseline mean is `null` — tracked but not pinned, never gates
+    Unrecorded,
+    /// no current report for this row (e.g. an artifact-gated bench
+    /// that skipped itself) — never gates
+    Missing,
+}
+
+impl RowStatus {
+    /// Short table label.
+    pub fn label(self) -> &'static str {
+        match self {
+            RowStatus::Ok => "ok",
+            RowStatus::Regressed => "REGRESSED",
+            RowStatus::Unrecorded => "unrecorded",
+            RowStatus::Missing => "not run",
+        }
+    }
+}
+
+/// One tracked row's baseline-vs-current numbers.
+#[derive(Clone, Debug)]
+pub struct RowOutcome {
+    /// suite the row belongs to
+    pub suite: String,
+    /// row name inside the suite
+    pub name: String,
+    /// pinned baseline mean, ns (`None` = unpinned)
+    pub baseline_ns: Option<f64>,
+    /// this run's mean, ns (`None` = report absent)
+    pub current_ns: Option<f64>,
+}
+
+impl RowOutcome {
+    /// Classify this row against a percent budget.
+    pub fn status(&self, gate_pct: f64) -> RowStatus {
+        match (self.baseline_ns, self.current_ns) {
+            (None, _) => RowStatus::Unrecorded,
+            (Some(_), None) => RowStatus::Missing,
+            (Some(b), Some(c)) if b > 0.0 && c > b * (1.0 + gate_pct / 100.0) => {
+                RowStatus::Regressed
+            }
+            _ => RowStatus::Ok,
+        }
+    }
+}
+
+/// A full gate evaluation for one machine class.
+#[derive(Clone, Debug)]
+pub struct CompareReport {
+    /// machine class compared (`std::env::consts::ARCH` by default)
+    pub class: String,
+    /// per-row budget, percent
+    pub gate_pct: f64,
+    /// outcomes in baseline order (empty if the class is untracked)
+    pub rows: Vec<RowOutcome>,
+}
+
+impl CompareReport {
+    /// The rows that fail the gate.
+    pub fn regressions(&self) -> Vec<&RowOutcome> {
+        self.rows.iter().filter(|r| r.status(self.gate_pct) == RowStatus::Regressed).collect()
+    }
+
+    /// True when any tracked row regressed past the budget.
+    pub fn failed(&self) -> bool {
+        !self.regressions().is_empty()
+    }
+
+    /// The before/after table, GitHub-flavored markdown (pasted into
+    /// the CI job summary by the perf-compare step).
+    pub fn markdown_table(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "| row | baseline | current | Δ mean | status |");
+        let _ = writeln!(out, "|---|---:|---:|---:|---|");
+        for r in &self.rows {
+            let delta = match (r.baseline_ns, r.current_ns) {
+                (Some(b), Some(c)) if b > 0.0 => format!("{:+.1}%", (c / b - 1.0) * 100.0),
+                _ => "n/a".into(),
+            };
+            let _ = writeln!(
+                out,
+                "| {}/{} | {} | {} | {} | {} |",
+                r.suite,
+                r.name,
+                r.baseline_ns.map(fmt_ns).unwrap_or_else(|| "n/a".into()),
+                r.current_ns.map(fmt_ns).unwrap_or_else(|| "not run".into()),
+                delta,
+                r.status(self.gate_pct).label(),
+            );
+        }
+        out
+    }
+}
+
+/// Evaluate `current` report means against `baseline`'s rows for one
+/// machine class. An untracked class yields an empty (passing) report.
+pub fn compare(
+    baseline: &Baseline,
+    class: &str,
+    current: &BTreeMap<(String, String), f64>,
+) -> CompareReport {
+    let rows = baseline
+        .classes
+        .get(class)
+        .map(|rows| {
+            rows.iter()
+                .map(|r| RowOutcome {
+                    suite: r.suite.clone(),
+                    name: r.name.clone(),
+                    baseline_ns: r.mean_ns,
+                    current_ns: current.get(&(r.suite.clone(), r.name.clone())).copied(),
+                })
+                .collect()
+        })
+        .unwrap_or_default();
+    CompareReport { class: class.to_string(), gate_pct: baseline.gate_pct, rows }
+}
+
+/// Pin `class`'s baseline means to the current report values (rows with
+/// no current report keep their old mean). Returns how many rows moved.
+pub fn update_class(
+    baseline: &mut Baseline,
+    class: &str,
+    current: &BTreeMap<(String, String), f64>,
+) -> usize {
+    let mut updated = 0;
+    if let Some(rows) = baseline.classes.get_mut(class) {
+        for r in rows {
+            if let Some(&mean) = current.get(&(r.suite.clone(), r.name.clone())) {
+                r.mean_ns = Some(mean);
+                updated += 1;
+            }
+        }
+    }
+    updated
+}
+
+/// The `pfed1bs perf-compare` entry point: load the committed baseline
+/// and the `BENCH_*.json` reports, print the before/after table, then
+/// either gate (error on any regressed row) or — under
+/// `PFED1BS_UPDATE_BASELINE=1` — rewrite this class's pinned means.
+pub fn run(baseline_path: &str, reports_dir: &str, class: &str) -> Result<()> {
+    let text = std::fs::read_to_string(baseline_path)
+        .with_context(|| format!("reading baseline {baseline_path}"))?;
+    let mut baseline = Baseline::parse(&text)?;
+    let current = load_reports(reports_dir)?;
+    let report = compare(&baseline, class, &current);
+    println!("perf gate: class `{class}`, +{}% mean-ns budget per row\n", report.gate_pct);
+    print!("{}", report.markdown_table());
+    if report.rows.is_empty() {
+        println!("\nno baseline rows for `{class}` — nothing gated (add them to {baseline_path})");
+    }
+    if std::env::var("PFED1BS_UPDATE_BASELINE").as_deref() == Ok("1") {
+        let n = update_class(&mut baseline, class, &current);
+        std::fs::write(baseline_path, baseline.to_json())
+            .with_context(|| format!("rewriting {baseline_path}"))?;
+        println!("\nbaseline updated: {n} `{class}` row(s) pinned to this run's means");
+        return Ok(());
+    }
+    let bad: Vec<String> =
+        report.regressions().iter().map(|r| format!("{}/{}", r.suite, r.name)).collect();
+    ensure!(
+        bad.is_empty(),
+        "perf gate failed: {} row(s) regressed more than {}%: {}",
+        bad.len(),
+        report.gate_pct,
+        bad.join(", ")
+    );
+    println!("\nperf gate passed");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const BASELINE: &str = r#"{
+      "gate_pct": 15,
+      "classes": {
+        "x86_64": [
+          {"suite": "fwht", "name": "a", "mean_ns": 1000.0},
+          {"suite": "fwht", "name": "b", "mean_ns": null},
+          {"suite": "codec", "name": "c", "mean_ns": 500.0}
+        ]
+      }
+    }"#;
+
+    fn current(pairs: &[(&str, &str, f64)]) -> BTreeMap<(String, String), f64> {
+        pairs.iter().map(|(s, n, v)| ((s.to_string(), n.to_string()), *v)).collect()
+    }
+
+    #[test]
+    fn parser_handles_the_emitted_subset() {
+        let doc = Json::parse(
+            "{\"suite\": \"x\\\"y\", \"rows\": [{\"name\": \"r\", \"mean_ns\": 12.5, \
+             \"elements\": null, \"ok\": true, \"bad\": false, \"e\": 1.5e3}]}",
+        )
+        .unwrap();
+        assert_eq!(doc.get("suite").unwrap().as_str(), Some("x\"y"));
+        let rows = doc.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows[0].get("mean_ns").unwrap().as_f64(), Some(12.5));
+        assert_eq!(rows[0].get("elements"), Some(&Json::Null));
+        assert_eq!(rows[0].get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(rows[0].get("e").unwrap().as_f64(), Some(1500.0));
+        assert!(Json::parse("{\"a\": }").is_err());
+        assert!(Json::parse("[1, 2").is_err());
+        assert!(Json::parse("{} trailing").is_err());
+    }
+
+    #[test]
+    fn gate_fires_only_past_the_budget() {
+        let b = Baseline::parse(BASELINE).unwrap();
+        assert_eq!(b.gate_pct, 15.0);
+        // exactly at the budget passes; one permille past it fails
+        let at = compare(&b, "x86_64", &current(&[("fwht", "a", 1150.0), ("codec", "c", 400.0)]));
+        assert!(!at.failed());
+        let past = compare(&b, "x86_64", &current(&[("fwht", "a", 1151.0)]));
+        assert!(past.failed());
+        assert_eq!(past.regressions().len(), 1);
+        assert_eq!(past.regressions()[0].name, "a");
+    }
+
+    #[test]
+    fn null_baselines_missing_reports_and_unknown_classes_pass() {
+        let b = Baseline::parse(BASELINE).unwrap();
+        // row b is unpinned (even a huge current mean is fine); a and c
+        // have no report at all
+        let r = compare(&b, "x86_64", &current(&[("fwht", "b", 9e9)]));
+        assert!(!r.failed());
+        let st: Vec<RowStatus> = r.rows.iter().map(|o| o.status(r.gate_pct)).collect();
+        assert_eq!(st, vec![RowStatus::Missing, RowStatus::Unrecorded, RowStatus::Missing]);
+        assert!(!compare(&b, "riscv64", &current(&[])).failed());
+        assert!(compare(&b, "riscv64", &current(&[])).rows.is_empty());
+    }
+
+    #[test]
+    fn update_pins_current_means_and_round_trips() {
+        let mut b = Baseline::parse(BASELINE).unwrap();
+        let n = update_class(&mut b, "x86_64", &current(&[("fwht", "b", 42.0)]));
+        assert_eq!(n, 1);
+        let again = Baseline::parse(&b.to_json()).unwrap();
+        assert_eq!(again.classes["x86_64"][1].mean_ns, Some(42.0));
+        // rows without a current report keep their pinned mean
+        assert_eq!(again.classes["x86_64"][0].mean_ns, Some(1000.0));
+        assert_eq!(again.classes["x86_64"][2].mean_ns, Some(500.0));
+        assert_eq!(again.gate_pct, 15.0);
+    }
+
+    #[test]
+    fn markdown_table_lists_every_row_with_status() {
+        let b = Baseline::parse(BASELINE).unwrap();
+        let r = compare(&b, "x86_64", &current(&[("fwht", "a", 2000.0)]));
+        let md = r.markdown_table();
+        assert!(md.contains("| fwht/a |"), "{md}");
+        assert!(md.contains("REGRESSED"), "{md}");
+        assert!(md.contains("+100.0%"), "{md}");
+        assert!(md.contains("unrecorded"), "{md}");
+        assert!(md.contains("not run"), "{md}");
+    }
+
+    #[test]
+    fn load_reports_reads_harness_schema_and_skips_foreign_files() {
+        let dir = std::env::temp_dir()
+            .join(format!("pfed1bs_perf_compare_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("BENCH_fwht.json"),
+            "{\"suite\": \"fwht\", \"rows\": [{\"name\": \"a\", \"mean_ns\": 7.0}]}",
+        )
+        .unwrap();
+        // foreign schema (loadgen-style) and the baseline itself: skipped
+        std::fs::write(dir.join("BENCH_loadgen.json"), "{\"p99_uplink_to_absorb_ms\": 1.0}")
+            .unwrap();
+        std::fs::write(dir.join("BENCH_BASELINE.json"), BASELINE).unwrap();
+        std::fs::write(dir.join("unrelated.txt"), "not json").unwrap();
+        let got = load_reports(&dir).unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[&("fwht".to_string(), "a".to_string())], 7.0);
+    }
+}

@@ -11,6 +11,8 @@
 //! b.report();
 //! ```
 
+pub mod compare;
+
 use std::time::{Duration, Instant};
 
 use crate::util::stats::{mad, mean, percentile};
@@ -184,7 +186,7 @@ impl Bench {
 
 /// Minimal JSON string escape for the code-controlled names this
 /// harness emits (backslash, quote, and control characters).
-fn json_escape(s: &str) -> String {
+pub(crate) fn json_escape(s: &str) -> String {
     let mut out = String::with_capacity(s.len());
     for c in s.chars() {
         match c {

@@ -14,7 +14,7 @@
 
 use anyhow::{bail, Result};
 
-use crate::sketch::bitpack::{packed_bytes, SignVec};
+use crate::sketch::bitpack::{packed_bytes, SignVec, SignVecView};
 
 /// An edge aggregator's merge frame: the exact fixed-point tally shard
 /// it streamed its clients' uplinks into, shipped edge → root once per
@@ -73,6 +73,188 @@ impl Payload {
     /// True when the payload carries zero elements.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Decode a wire frame into a borrowing [`PayloadView`] — validation
+    /// is byte-for-byte the owned [`decode`]'s (strict exact-length
+    /// frames, unknown tags rejected, never panics, never reads past the
+    /// buffer), but no word or lane vectors are materialized: the view
+    /// reads straight out of `bytes`. This is the zero-copy receive path
+    /// for stream-transport buffers and simulated-network deliveries
+    /// (DESIGN.md §14).
+    pub fn decode_borrowed(bytes: &[u8]) -> Result<PayloadView<'_>> {
+        if bytes.len() < 5 {
+            bail!("frame too short ({} bytes)", bytes.len());
+        }
+        let tag = bytes[0];
+        let len = u32::from_le_bytes(bytes[1..5].try_into().unwrap()) as usize;
+        match tag {
+            TAG_DENSE => {
+                let need = 5 + 4 * len;
+                if bytes.len() != need {
+                    bail!("dense frame: expected {need} bytes, got {}", bytes.len());
+                }
+                Ok(PayloadView::Dense(DenseView { bytes: &bytes[5..] }))
+            }
+            TAG_SIGNS => {
+                let need = 5 + packed_bytes(len);
+                if bytes.len() != need {
+                    bail!("signs frame: expected {need} bytes, got {}", bytes.len());
+                }
+                Ok(PayloadView::Signs(SignVecView::new(&bytes[5..], len)))
+            }
+            TAG_SCALED => {
+                let need = 9 + packed_bytes(len);
+                if bytes.len() != need {
+                    bail!("scaled frame: expected {need} bytes, got {}", bytes.len());
+                }
+                let scale = f32::from_le_bytes(bytes[5..9].try_into().unwrap());
+                Ok(PayloadView::ScaledSigns {
+                    signs: SignVecView::new(&bytes[9..], len),
+                    scale,
+                })
+            }
+            TAG_TALLY => {
+                let need = 33 + 16 * len;
+                if bytes.len() != need {
+                    bail!("tally frame: expected {need} bytes, got {}", bytes.len());
+                }
+                Ok(PayloadView::TallyFrame(TallyFrameView {
+                    absorbed: u32::from_le_bytes(bytes[5..9].try_into().unwrap()),
+                    loss_sum: f64::from_le_bytes(bytes[9..17].try_into().unwrap()),
+                    scalar: i128::from_le_bytes(bytes[17..33].try_into().unwrap()),
+                    quanta: &bytes[33..],
+                }))
+            }
+            t => bail!("unknown payload tag {t}"),
+        }
+    }
+}
+
+/// Borrowed view of a dense frame body: f32 lanes decode on access from
+/// the little-endian wire bytes.
+#[derive(Clone, Copy, Debug)]
+pub struct DenseView<'a> {
+    bytes: &'a [u8],
+}
+
+impl<'a> DenseView<'a> {
+    /// Lane count.
+    pub fn len(&self) -> usize {
+        self.bytes.len() / 4
+    }
+
+    /// True when the view carries zero lanes.
+    pub fn is_empty(&self) -> bool {
+        self.bytes.is_empty()
+    }
+
+    /// Lane i, decoded from its four little-endian wire bytes.
+    #[inline]
+    pub fn lane(&self, i: usize) -> f32 {
+        f32::from_le_bytes(self.bytes[4 * i..4 * i + 4].try_into().unwrap())
+    }
+
+    /// Materialize the owned lane vector (bit-identical to [`decode`]).
+    pub fn to_vec(self) -> Vec<f32> {
+        self.bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect()
+    }
+}
+
+/// Borrowed view of an edge → root merge frame: the fixed-offset header
+/// fields decode eagerly, the m×16-byte quanta stay on the wire buffer
+/// and decode per index through [`quantum`](Self::quantum), so a root
+/// can [`merge_quanta`] a shard without materializing its i128 vector.
+///
+/// [`merge_quanta`]: crate::sketch::bitpack::VoteAccumulator::merge_quanta
+#[derive(Clone, Copy, Debug)]
+pub struct TallyFrameView<'a> {
+    /// uplinks this shard absorbed
+    pub absorbed: u32,
+    /// Σ of the shard's delivered round-start losses (f64 bits)
+    pub loss_sum: f64,
+    /// companion scalar tally quanta
+    pub scalar: i128,
+    quanta: &'a [u8],
+}
+
+impl<'a> TallyFrameView<'a> {
+    /// Number of tally quanta carried (the shard's m).
+    pub fn quanta_len(&self) -> usize {
+        self.quanta.len() / 16
+    }
+
+    /// The i-th fixed-point tally quantum, decoded from its sixteen
+    /// little-endian wire bytes — bit-exact, as in the owned decode.
+    #[inline]
+    pub fn quantum(&self, i: usize) -> i128 {
+        i128::from_le_bytes(self.quanta[16 * i..16 * i + 16].try_into().unwrap())
+    }
+
+    /// Materialize the owned [`TallyFrame`].
+    pub fn to_frame(self) -> TallyFrame {
+        TallyFrame {
+            absorbed: self.absorbed,
+            loss_sum: self.loss_sum,
+            scalar: self.scalar,
+            quanta: (0..self.quanta_len()).map(|i| self.quantum(i)).collect(),
+        }
+    }
+}
+
+/// A payload decoded without copying: every variant borrows the wire
+/// buffer and decodes elements on access (DESIGN.md §14). Validation is
+/// identical to the owned [`decode`]; only materialization is deferred,
+/// so `Payload::decode_borrowed(b)?.to_owned()` equals `decode(b)?`
+/// bit-for-bit on every frame the owned path accepts, and errors on
+/// exactly the frames it rejects.
+#[derive(Clone, Copy, Debug)]
+pub enum PayloadView<'a> {
+    /// full-precision lanes over wire bytes
+    Dense(DenseView<'a>),
+    /// packed ±1 sign bits over wire bytes (tail-masked on read)
+    Signs(SignVecView<'a>),
+    /// packed sign bits plus the decoded f32 scale
+    ScaledSigns {
+        /// the packed sign bits
+        signs: SignVecView<'a>,
+        /// the decoded scale α
+        scale: f32,
+    },
+    /// edge → root merge frame with lazily decoded quanta
+    TallyFrame(TallyFrameView<'a>),
+}
+
+impl<'a> PayloadView<'a> {
+    /// Logical element count (lanes, bits, or tally quanta).
+    pub fn len(&self) -> usize {
+        match self {
+            PayloadView::Dense(v) => v.len(),
+            PayloadView::Signs(z) => z.m(),
+            PayloadView::ScaledSigns { signs, .. } => signs.m(),
+            PayloadView::TallyFrame(f) => f.quanta_len(),
+        }
+    }
+
+    /// True when the payload carries zero elements.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Materialize an owned [`Payload`] — bit-identical to running the
+    /// owned [`decode`] on the same frame.
+    pub fn to_owned(self) -> Payload {
+        match self {
+            PayloadView::Dense(v) => Payload::Dense(v.to_vec()),
+            PayloadView::Signs(z) => Payload::Signs(z.to_owned()),
+            PayloadView::ScaledSigns { signs, scale } => {
+                Payload::ScaledSigns { signs: signs.to_owned(), scale }
+            }
+            PayloadView::TallyFrame(f) => Payload::TallyFrame(f.to_frame()),
+        }
     }
 }
 
@@ -477,6 +659,120 @@ mod tests {
                         Err("mutated frame decoded inconsistently".into())
                     }
                 }
+            }
+        });
+    }
+
+    #[test]
+    fn borrowed_decode_matches_owned_on_unaligned_and_dirty_buffers() {
+        check("codec_borrowed_identity", 80, |rng| {
+            let n = rng.below(200) + 1;
+            let p = match rng.below(4) {
+                0 => Payload::Dense((0..n).map(|_| rng.normal()).collect()),
+                1 => Payload::Signs(rand_signs(rng, n)),
+                2 => Payload::ScaledSigns { signs: rand_signs(rng, n), scale: rng.f32() },
+                _ => Payload::TallyFrame(rand_tally(rng, n)),
+            };
+            let mut frame = encode(&p);
+
+            // dirty the tail: a sign frame may arrive with garbage bits
+            // beyond m — both decoders must canonicalize identically
+            if matches!(p, Payload::Signs(_) | Payload::ScaledSigns { .. }) && n % 64 != 0 {
+                *frame.last_mut().unwrap() |= 0xF0;
+            }
+            let owned = decode(&frame).map_err(|e| e.to_string())?;
+
+            // re-home the frame at every alignment class: the view's
+            // unaligned word reads must not care where the buffer sits
+            let off = rng.below(8) + 1;
+            let mut shifted = vec![0x5Au8; off];
+            shifted.extend_from_slice(&frame);
+            let view = Payload::decode_borrowed(&shifted[off..]).map_err(|e| e.to_string())?;
+            if view.len() != owned.len() {
+                return Err("borrowed len mismatch".into());
+            }
+            if view.to_owned() != owned {
+                return Err("borrowed decode disagrees with owned".into());
+            }
+            // spot-check the lazy accessors against the owned payload
+            match (&view, &owned) {
+                (PayloadView::Dense(v), Payload::Dense(w)) => {
+                    let i = rng.below(n);
+                    if v.lane(i).to_bits() != w[i].to_bits() {
+                        return Err(format!("dense lane {i} mismatch"));
+                    }
+                }
+                (PayloadView::Signs(v), Payload::Signs(z)) => {
+                    let i = rng.below(n);
+                    if v.bit(i) != z.bit(i) || v.sign(i) != z.sign(i) {
+                        return Err(format!("sign bit {i} mismatch"));
+                    }
+                }
+                (
+                    PayloadView::ScaledSigns { scale: a, .. },
+                    Payload::ScaledSigns { scale: b, .. },
+                ) => {
+                    if a.to_bits() != b.to_bits() {
+                        return Err("scale bits mismatch".into());
+                    }
+                }
+                (PayloadView::TallyFrame(v), Payload::TallyFrame(f)) => {
+                    let i = rng.below(n);
+                    if v.quantum(i) != f.quanta[i] || v.absorbed != f.absorbed {
+                        return Err(format!("tally quantum {i} mismatch"));
+                    }
+                    if v.loss_sum.to_bits() != f.loss_sum.to_bits() || v.scalar != f.scalar {
+                        return Err("tally header mismatch".into());
+                    }
+                }
+                _ => return Err("borrowed decode picked the wrong kind".into()),
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn borrowed_decode_never_panics_and_agrees_with_owned_on_fuzz() {
+        // mirror of the owned fuzz suite: on arbitrary, truncated, and
+        // mutated byte strings the borrowed decoder must never panic and
+        // must accept/reject exactly the frames the owned decoder does
+        check("codec_borrowed_fuzz", 300, |rng| {
+            let bytes: Vec<u8> = match rng.below(3) {
+                // arbitrary garbage
+                0 => {
+                    let len = rng.below(80);
+                    (0..len).map(|_| rng.next_u32() as u8).collect()
+                }
+                // truncated valid frame
+                1 => {
+                    let n = rng.below(120) + 1;
+                    let frame = encode(&match rng.below(2) {
+                        0 => Payload::Signs(rand_signs(rng, n)),
+                        _ => Payload::TallyFrame(rand_tally(rng, n)),
+                    });
+                    let cut = rng.below(frame.len());
+                    frame[..cut].to_vec()
+                }
+                // single-byte mutation of a valid frame
+                _ => {
+                    let n = rng.below(120) + 1;
+                    let mut frame = encode(&Payload::Signs(rand_signs(rng, n)));
+                    let idx = rng.below(frame.len());
+                    frame[idx] ^= 1u8 << rng.below(8);
+                    frame
+                }
+            };
+            match (decode(&bytes), Payload::decode_borrowed(&bytes)) {
+                (Err(_), Err(_)) => Ok(()),
+                (Ok(p), Ok(v)) => {
+                    if v.to_owned() == p {
+                        Ok(())
+                    } else {
+                        Err("decoders accept but disagree".into())
+                    }
+                }
+                (Ok(_), Err(e)) => Err(format!("borrowed rejected a valid frame: {e}")),
+                (Err(e), Ok(_)) => Err(format!("borrowed accepted what owned rejects: {e}")),
             }
         });
     }

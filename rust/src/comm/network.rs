@@ -18,7 +18,7 @@
 
 use anyhow::{bail, ensure, Result};
 
-use crate::comm::codec::{decode, encode, Payload};
+use crate::comm::codec::{encode, Payload};
 use crate::comm::ledger::{Direction, Ledger, RoundBytes};
 use crate::util::rng::{splitmix64, Rng};
 
@@ -190,7 +190,11 @@ impl Channel {
                 self.shard.downlink_msgs += 1;
             }
         }
-        let mut delivered = decode(&frame)?;
+        // validate + deliver through the zero-copy decoder, then
+        // materialize: decode_borrowed(..).to_owned() is bit-identical
+        // to the owned decode, so every simulated delivery exercises the
+        // borrowed wire path the socket transport uses (DESIGN.md §14)
+        let mut delivered = Payload::decode_borrowed(&frame)?.to_owned();
         if flip_prob > 0.0 {
             self.corrupt(&mut delivered, flip_prob);
         }
@@ -272,7 +276,7 @@ impl SimNetwork {
     pub fn edge_uplink(&mut self, _edge: usize, payload: &Payload) -> Result<Payload> {
         let frame = encode(payload);
         self.ledger.record_edge(Direction::Uplink, frame.len());
-        decode(&frame)
+        Ok(Payload::decode_borrowed(&frame)?.to_owned())
     }
 
     /// Root -> edge aggregator `_edge`: the broadcast fan-out hop of the
@@ -280,7 +284,7 @@ impl SimNetwork {
     pub fn edge_downlink(&mut self, _edge: usize, payload: &Payload) -> Result<Payload> {
         let frame = encode(payload);
         self.ledger.record_edge(Direction::Downlink, frame.len());
-        decode(&frame)
+        Ok(Payload::decode_borrowed(&frame)?.to_owned())
     }
 
     /// Merge every channel's shard and close the round; returns the

@@ -27,7 +27,7 @@ use std::io::{Read, Write};
 
 use anyhow::{bail, Context, Result};
 
-use crate::comm::codec::{decode, encode, Payload};
+use crate::comm::codec::{decode, encode, Payload, PayloadView, TallyFrameView};
 
 /// Handshake magic: the first bytes a peer must present after the
 /// kind byte. Anything else is not a pFed1BS endpoint.
@@ -201,6 +201,98 @@ impl Frame {
     }
 }
 
+/// A stream frame decoded without copying its payload: the
+/// payload-carrying kinds borrow the body buffer through
+/// [`PayloadView`], so a server can absorb an uplink or merge frame
+/// straight out of its receive buffer (DESIGN.md §14). Control frames
+/// carry a few fixed fields and decode owned — they were always
+/// copy-free. `Tally` holds a [`TallyFrameView`] directly, so the
+/// TallyFrame-payload rule is a type-level fact here.
+#[derive(Clone, Debug)]
+pub enum FrameView<'a> {
+    /// peer → root greeting
+    Hello(Hello),
+    /// root → peer handshake reply
+    Welcome(Welcome),
+    /// server → client payload
+    Downlink {
+        /// round index
+        round: u32,
+        /// recipient client id
+        client: u32,
+        /// the borrowed codec payload
+        payload: PayloadView<'a>,
+    },
+    /// client → server payload
+    Uplink {
+        /// round index
+        round: u32,
+        /// sender client id
+        client: u32,
+        /// the borrowed codec payload
+        payload: PayloadView<'a>,
+    },
+    /// edge → root merge frame
+    Tally {
+        /// round index
+        round: u32,
+        /// sender edge id
+        edge: u32,
+        /// the borrowed merge frame (kind enforced on decode)
+        payload: TallyFrameView<'a>,
+    },
+    /// root → client absorb acknowledgment
+    Ack {
+        /// round index
+        round: u32,
+        /// the client whose uplink was absorbed
+        client: u32,
+    },
+    /// orderly shutdown notice
+    Bye,
+}
+
+impl<'a> FrameView<'a> {
+    /// This frame's wire kind byte.
+    pub fn kind(&self) -> u8 {
+        match self {
+            FrameView::Hello(_) => KIND_HELLO,
+            FrameView::Welcome(_) => KIND_WELCOME,
+            FrameView::Downlink { .. } => KIND_DOWNLINK,
+            FrameView::Uplink { .. } => KIND_UPLINK,
+            FrameView::Tally { .. } => KIND_TALLY,
+            FrameView::Ack { .. } => KIND_ACK,
+            FrameView::Bye => KIND_BYE,
+        }
+    }
+
+    /// Materialize an owned [`Frame`] — bit-identical to running the
+    /// owned [`decode_body`] on the same body.
+    pub fn to_frame(&self) -> Frame {
+        match self {
+            FrameView::Hello(h) => Frame::Hello(h.clone()),
+            FrameView::Welcome(w) => Frame::Welcome(w.clone()),
+            FrameView::Downlink { round, client, payload } => Frame::Downlink {
+                round: *round,
+                client: *client,
+                payload: payload.to_owned(),
+            },
+            FrameView::Uplink { round, client, payload } => Frame::Uplink {
+                round: *round,
+                client: *client,
+                payload: payload.to_owned(),
+            },
+            FrameView::Tally { round, edge, payload } => Frame::Tally {
+                round: *round,
+                edge: *edge,
+                payload: Payload::TallyFrame(payload.to_frame()),
+            },
+            FrameView::Ack { round, client } => Frame::Ack { round: *round, client: *client },
+            FrameView::Bye => Frame::Bye,
+        }
+    }
+}
+
 fn put_magic_version(out: &mut Vec<u8>) {
     out.extend_from_slice(&MAGIC);
     out.extend_from_slice(&PROTOCOL_VERSION.to_le_bytes());
@@ -341,6 +433,50 @@ pub fn decode_body(body: &[u8]) -> Result<Frame> {
             Ok(Frame::Bye)
         }
         other => bail!("unknown frame kind {other}"),
+    }
+}
+
+/// Decode a frame body into a borrowing [`FrameView`]: validation is
+/// the owned [`decode_body`]'s exactly (strict lengths, known kinds,
+/// magic/version on handshakes, TALLY must carry a tally payload), but
+/// payload-carrying kinds borrow the body instead of materializing
+/// word/lane vectors. Never panics, never reads past the slice.
+pub fn decode_body_borrowed(body: &[u8]) -> Result<FrameView<'_>> {
+    let Some(&kind) = body.first() else {
+        bail!("empty frame body");
+    };
+    match kind {
+        KIND_DOWNLINK | KIND_UPLINK | KIND_TALLY => {
+            // 9 header bytes + the codec's own 5-byte minimum frame
+            if body.len() < 14 {
+                bail!("{} frame too short ({} bytes)", kind_name(kind), body.len());
+            }
+            let round = u32_at(body, 1);
+            let peer = u32_at(body, 5);
+            let payload = Payload::decode_borrowed(&body[9..])
+                .with_context(|| format!("{} frame payload", kind_name(kind)))?;
+            Ok(match kind {
+                KIND_DOWNLINK => FrameView::Downlink { round, client: peer, payload },
+                KIND_UPLINK => FrameView::Uplink { round, client: peer, payload },
+                _ => {
+                    let PayloadView::TallyFrame(tally) = payload else {
+                        bail!("tally frame must carry a TallyFrame payload");
+                    };
+                    FrameView::Tally { round, edge: peer, payload: tally }
+                }
+            })
+        }
+        // control frames carry no payload — the owned decoder is already
+        // copy-free for them, so delegate and re-wrap
+        _ => Ok(match decode_body(body)? {
+            Frame::Hello(h) => FrameView::Hello(h),
+            Frame::Welcome(w) => FrameView::Welcome(w),
+            Frame::Ack { round, client } => FrameView::Ack { round, client },
+            Frame::Bye => FrameView::Bye,
+            // payload kinds were matched above; decode_body cannot
+            // return them from this arm
+            f => bail!("unexpected {} frame in control path", kind_name(f.kind())),
+        }),
     }
 }
 
@@ -498,6 +634,51 @@ mod tests {
     }
 
     #[test]
+    fn borrowed_body_decode_matches_owned_for_every_kind() {
+        use crate::comm::codec::TallyFrame;
+        let frames = [
+            Frame::Hello(Hello { role: PeerRole::Fleet, lo: 0, hi: 4, m: 64, want_ack: true }),
+            Frame::Welcome(Welcome { m: 64, seed: 1, rounds: 2, participating: 3, clients: 4 }),
+            Frame::Downlink {
+                round: 1,
+                client: 2,
+                payload: Payload::Signs(SignVec::from_fn(65, |i| i % 2 == 0)),
+            },
+            Frame::Uplink {
+                round: 3,
+                client: 4,
+                payload: Payload::ScaledSigns {
+                    signs: SignVec::from_fn(63, |i| i % 3 == 0),
+                    scale: 0.25,
+                },
+            },
+            Frame::Tally {
+                round: 5,
+                edge: 6,
+                payload: Payload::TallyFrame(TallyFrame {
+                    absorbed: 2,
+                    loss_sum: 0.5,
+                    scalar: -3,
+                    quanta: vec![7, -9],
+                }),
+            },
+            Frame::Ack { round: 7, client: 8 },
+            Frame::Bye,
+        ];
+        for f in &frames {
+            let body = encode_body(f);
+            let view = decode_body_borrowed(&body).unwrap();
+            assert_eq!(&view.to_frame(), f, "borrowed decode mismatch: {f:?}");
+            assert_eq!(&decode_body(&body).unwrap(), f);
+        }
+        // and both decoders reject the same malformed bodies
+        for bad in [&[][..], &[99][..], &[KIND_UPLINK, 0, 0][..]] {
+            assert!(decode_body(bad).is_err());
+            assert!(decode_body_borrowed(bad).is_err());
+        }
+    }
+
+    #[test]
     fn tally_kind_requires_tally_payload() {
         // a TALLY envelope around a signs payload is a protocol violation
         let mut body = vec![KIND_TALLY];
@@ -505,5 +686,6 @@ mod tests {
         body.extend_from_slice(&0u32.to_le_bytes());
         body.extend_from_slice(&encode(&Payload::Signs(SignVec::from_signs(&[1.0f32; 64]))));
         assert!(decode_body(&body).unwrap_err().to_string().contains("TallyFrame"));
+        assert!(decode_body_borrowed(&body).unwrap_err().to_string().contains("TallyFrame"));
     }
 }

@@ -305,6 +305,33 @@ impl FramedConn {
         Ok(f)
     }
 
+    /// Receive one raw frame body (capped allocation, no decode) — the
+    /// zero-copy receive path: callers parse it with
+    /// [`decode_body_borrowed`](super::frame::decode_body_borrowed) and
+    /// absorb payloads straight out of the returned buffer. Metered
+    /// identically to [`recv`](Self::recv) (prefix + body).
+    pub fn recv_body(&mut self) -> Result<Vec<u8>> {
+        let body = read_body(&mut self.stream, self.max_frame)?;
+        self.received += 4 + body.len() as u64;
+        Ok(body)
+    }
+
+    /// Send one already-encoded frame body verbatim (prefix + body, one
+    /// `write_all`, flushed) — the forwarding path: a relay that received
+    /// a body via [`recv_body`](Self::recv_body) re-ships the exact
+    /// bytes, like the reflector does, so forwarded frames are
+    /// byte-identical to the originals. Metered identically to
+    /// [`send`](Self::send); returns the wire size.
+    pub fn send_body(&mut self, body: &[u8]) -> Result<usize> {
+        let mut out = Vec::with_capacity(4 + body.len());
+        out.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        out.extend_from_slice(body);
+        self.stream.write_all(&out).context("writing raw frame body")?;
+        self.stream.flush().context("flushing raw frame body")?;
+        self.sent += out.len() as u64;
+        Ok(out.len())
+    }
+
     /// Client side of the versioned handshake: send `hello`, expect a
     /// [`Frame::Welcome`] back.
     pub fn handshake_client(&mut self, hello: &Hello) -> Result<Welcome> {
@@ -705,6 +732,40 @@ mod tests {
         assert_eq!(r.uplink, 13);
         drop(t);
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn raw_body_send_recv_round_trips_byte_identically() {
+        use crate::comm::transport::frame::decode_body_borrowed;
+        use crate::comm::transport::frame::FrameView;
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let ep = Endpoint::Tcp(listener.local_addr().unwrap().to_string());
+        let t = Tuning::default();
+        let dial = thread::spawn({
+            let t = t.clone();
+            move || connect(&ep, &t, Duration::from_secs(5)).unwrap()
+        });
+        let (s, _) = listener.accept().unwrap();
+        let mut server = FramedConn::new(Box::new(s), &t).unwrap();
+        let mut client = dial.join().unwrap();
+
+        let f = Frame::Uplink { round: 1, client: 2, payload: signs(130) };
+        let wrote = client.send(&f).unwrap();
+        let body = server.recv_body().unwrap();
+        assert_eq!(body, encode_body(&f), "raw body must be the exact encoded body");
+        assert_eq!(server.bytes_received(), wrote as u64);
+        let FrameView::Uplink { round: 1, client: 2, payload } =
+            decode_body_borrowed(&body).unwrap()
+        else {
+            panic!("wrong frame kind off the wire")
+        };
+        assert_eq!(payload.to_owned(), signs(130));
+
+        // forwarding the raw body re-ships the exact bytes
+        let shipped = server.send_body(&body).unwrap();
+        assert_eq!(shipped, wrote);
+        assert_eq!(server.bytes_sent(), wrote as u64);
+        assert_eq!(client.recv().unwrap(), f);
     }
 
     #[test]

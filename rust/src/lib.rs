@@ -33,6 +33,11 @@
 // `RUSTDOCFLAGS="-D warnings"`, so a missing doc fails the pipeline
 // instead of rotting silently.
 #![warn(missing_docs)]
+// Unsafe code (the explicit-SIMD butterflies in `sketch::kernel`, the
+// unaligned word reads in `sketch::bitpack`) must scope each unsafe
+// operation in its own block with its own `// SAFETY:` argument — an
+// `unsafe fn` body gives no blanket license.
+#![deny(unsafe_op_in_unsafe_fn)]
 
 pub mod algorithms;
 pub mod analysis;

@@ -14,6 +14,7 @@
 //! pfed1bs table-a1     [--seeds k --rounds N]
 //! pfed1bs bound        [--dataset mnist --m N …]   # Theorem-1 constants
 //! pfed1bs info                           # artifact manifest summary
+//! pfed1bs perf-compare [--baseline BENCH_BASELINE.json --reports . --class ARCH]
 //! pfed1bs serve        --listen tcp:0.0.0.0:7171 [--check-consensus …]
 //! pfed1bs edge         --connect tcp:ROOT:7171 --listen unix:/tmp/e0.sock
 //! pfed1bs client-fleet --connect tcp:HOST:7171 [--lo A --hi B --conns C]
@@ -52,6 +53,7 @@ fn real_main() -> Result<()> {
         "table-a1" => cmd_table_a1(&args),
         "bound" => cmd_bound(&args),
         "info" => cmd_info(&args),
+        "perf-compare" => cmd_perf_compare(&args),
         "serve" => cmd_role(ServeRole::Root, &args),
         "edge" => cmd_role(ServeRole::Edge, &args),
         "client-fleet" | "fleet" => cmd_role(ServeRole::Fleet, &args),
@@ -80,6 +82,9 @@ subcommands:
   table-a1   λ/μ/γ sensitivity       (appendix Table 1)
   bound      Theorem-1 constants + predicted neighborhood for a config
   info       artifact manifest summary
+  perf-compare  gate BENCH_*.json vs the committed baseline (DESIGN.md §14)
+                (--baseline BENCH_BASELINE.json --reports . --class ARCH;
+                 PFED1BS_UPDATE_BASELINE=1 re-pins the current class)
 
 multi-process transport roles (DESIGN.md §12 — no artifacts needed):
   serve         root server      (--listen tcp:H:P|unix:/path  --clients K
@@ -103,6 +108,14 @@ scenario knobs: --over-select N  --deadline-ms MS  --dropout-prob P
                 --churn-prob P  --churn-period W
 run `make artifacts` once before any train/table/fig subcommand.
 ";
+
+fn cmd_perf_compare(args: &Args) -> Result<()> {
+    let baseline = args.str_or("baseline", "BENCH_BASELINE.json");
+    let reports = args.str_or("reports", ".");
+    let class = args.str_or("class", std::env::consts::ARCH);
+    args.reject_unknown()?;
+    pfed1bs::bench_harness::compare::run(&baseline, &reports, &class)
+}
 
 fn cmd_role(role: ServeRole, args: &Args) -> Result<()> {
     let cfg = ServeConfig::from_args(role, args)?;

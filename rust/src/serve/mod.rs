@@ -36,8 +36,10 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::algorithms::common::hash3;
-use crate::comm::codec::{frame_bytes, Payload, TallyFrame};
-use crate::comm::transport::frame::{kind_name, Frame, Hello, PeerRole, Welcome};
+use crate::comm::codec::{frame_bytes, Payload, PayloadView, TallyFrame};
+use crate::comm::transport::frame::{
+    decode_body_borrowed, kind_name, Frame, FrameView, Hello, PeerRole, Welcome, KIND_BYE,
+};
 use crate::comm::transport::stream::{connect, FramedConn, Listener, Tuning};
 use crate::config::{Endpoint, ServeConfig, ServeRole};
 use crate::sketch::{packed_bytes, SignVec, VoteAccumulator};
@@ -201,22 +203,24 @@ fn accept_peers(
     Ok((peers, owners.into_iter().map(|o| o.expect("coverage loop")).collect()))
 }
 
-/// Park a cloned read half in a thread that forwards every frame to
-/// `tx` tagged with `idx`; exits on connection error or after
-/// forwarding BYE.
+/// Park a cloned read half in a thread that forwards every raw frame
+/// body to `tx` tagged with `idx`. Bodies stay undecoded: receivers
+/// parse them in place with [`decode_body_borrowed`] and relays can
+/// forward the exact bytes without a re-encode. Exits on connection
+/// error or after forwarding BYE (the kind byte is `body[0]`).
 fn spawn_reader(
     conn: &FramedConn,
     idx: usize,
-    tx: mpsc::Sender<(usize, Frame)>,
+    tx: mpsc::Sender<(usize, Vec<u8>)>,
 ) -> Result<thread::JoinHandle<()>> {
     let mut r = conn.split_reader()?;
     thread::Builder::new()
         .name(format!("pfed1bs-reader-{idx}"))
         .spawn(move || loop {
-            match r.recv() {
-                Ok(f) => {
-                    let bye = matches!(f, Frame::Bye);
-                    if tx.send((idx, f)).is_err() || bye {
+            match r.recv_body() {
+                Ok(body) => {
+                    let bye = body.first() == Some(&KIND_BYE);
+                    if tx.send((idx, body)).is_err() || bye {
                         break;
                     }
                 }
@@ -368,28 +372,32 @@ pub fn run_root_on(listener: &Listener, cfg: &ServeConfig) -> Result<RootReport>
             lates_absorbed += 1;
         }
         while !want_up.is_empty() || !want_tally.is_empty() || !late_wait.is_empty() {
-            let (pi, f) = rx
+            let (pi, body) = rx
                 .recv_timeout(timeout)
                 .with_context(|| format!("round {t}: waiting for uplinks"))?;
-            match f {
-                Frame::Uplink { round, client, payload } => {
-                    uplink_bytes += frame_bytes(&payload) as u64;
-                    let Payload::Signs(z) = payload else {
+            // parse in place: uplink sketches absorb straight out of the
+            // receive buffer, only a stashed late is ever materialized
+            match decode_body_borrowed(&body)? {
+                FrameView::Uplink { round, client, payload } => {
+                    // payload bytes on the wire = body minus the
+                    // kind/round/peer header (equals frame_bytes)
+                    uplink_bytes += (body.len() - 9) as u64;
+                    let PayloadView::Signs(z) = payload else {
                         bail!("round {t}: uplink from client {client} was not a packed sketch")
                     };
                     ensure!(z.m() == m, "round {t}: sketch m={} (want {m})", z.m());
                     if round == t32 && want_up.remove(&client) {
-                        acc.absorb(&z, 1.0);
+                        acc.absorb_view(&z, 1.0);
                     } else if round == t32
                         && late_set.contains(&client)
                         && !stash.contains_key(&client)
                     {
                         // this round's designated late arrived before
-                        // close: hold it for round t+1's tally
-                        stash.insert(client, z);
+                        // close: hold it (owned) for round t+1's tally
+                        stash.insert(client, z.to_owned());
                     } else if round + 1 == t32 && late_wait.remove(&client) {
                         // last round's late landing now, one round stale
-                        acc.absorb(&z, decay);
+                        acc.absorb_view(&z, decay);
                         lates_absorbed += 1;
                     } else {
                         bail!(
@@ -400,21 +408,18 @@ pub fn run_root_on(listener: &Listener, cfg: &ServeConfig) -> Result<RootReport>
                         peers[pi].conn.send(&Frame::Ack { round, client })?;
                     }
                 }
-                Frame::Tally { round, edge, payload } => {
+                FrameView::Tally { round, edge, payload: tf } => {
                     ensure!(round == t32, "round {t}: got a round-{round} merge frame");
-                    tally_bytes += frame_bytes(&payload) as u64;
-                    let Payload::TallyFrame(tf) = payload else {
-                        unreachable!("decode enforces the TALLY payload kind")
-                    };
+                    tally_bytes += (body.len() - 9) as u64;
                     ensure!(
-                        tf.quanta.len() == m,
+                        tf.quanta_len() == m,
                         "round {t}: edge {edge} tally over {} bits (want {m})",
-                        tf.quanta.len()
+                        tf.quanta_len()
                     );
                     ensure!(want_tally.remove(&pi), "duplicate merge frame from peer {pi}");
-                    acc.merge(VoteAccumulator::from_quanta(tf.quanta, tf.absorbed as usize));
+                    acc.merge_quanta(tf.absorbed as usize, |i| tf.quantum(i));
                 }
-                Frame::Bye => bail!("peer {pi} left mid-round"),
+                FrameView::Bye => bail!("peer {pi} left mid-round"),
                 f => bail!("round {t}: unexpected {} from peer {pi}", kind_name(f.kind())),
             }
         }
@@ -436,17 +441,17 @@ pub fn run_root_on(listener: &Listener, cfg: &ServeConfig) -> Result<RootReport>
     // mid-send when the BYE lands. They influence no tally — the run is
     // over (the oracle drops them the same way).
     while !late_wait.is_empty() {
-        let (pi, f) = rx
+        let (pi, body) = rx
             .recv_timeout(timeout)
             .context("draining the final round's designated-late uplinks")?;
-        match f {
-            Frame::Uplink { round, client, payload } if late_wait.remove(&client) => {
-                uplink_bytes += frame_bytes(&payload) as u64;
+        match decode_body_borrowed(&body)? {
+            FrameView::Uplink { round, client, .. } if late_wait.remove(&client) => {
+                uplink_bytes += (body.len() - 9) as u64;
                 if peers[pi].want_ack {
                     peers[pi].conn.send(&Frame::Ack { round, client })?;
                 }
             }
-            Frame::Bye => bail!("peer {pi} left before the final lates drained"),
+            FrameView::Bye => bail!("peer {pi} left before the final lates drained"),
             f => bail!("drain: unexpected {} from peer {pi}", kind_name(f.kind())),
         }
     }
@@ -557,24 +562,25 @@ pub fn run_edge_on(listener: &Listener, cfg: &ServeConfig) -> Result<()> {
 
     let mut shards: HashMap<u32, EdgeShard> = HashMap::new();
     loop {
-        let (pi, f) = rx
+        let (pi, body) = rx
             .recv_timeout(timeout)
             .context("edge: waiting for traffic")?;
         if pi == ROOT {
-            match f {
-                Frame::Downlink { round, client, payload } => {
+            match decode_body_borrowed(&body)? {
+                FrameView::Downlink { round, client, .. } => {
                     let k = client as usize;
                     ensure!(k >= lo && k < hi, "root routed client {k} to edge {lo}..{hi}");
-                    peers[owners[k - lo]]
-                        .conn
-                        .send(&Frame::Downlink { round, client, payload })?;
+                    // relay the exact received bytes: the client gets the
+                    // downlink byte-identical to what the root sent, with
+                    // no decode→re-encode of the payload in between
+                    peers[owners[k - lo]].conn.send_body(&body)?;
                     // first downlink of a round opens its shard
                     shards.entry(round).or_insert_with(|| EdgeShard {
                         acc: VoteAccumulator::new(m),
                         pending: expected.get(round as usize).copied().unwrap_or(0),
                     });
                 }
-                Frame::Bye => {
+                FrameView::Bye => {
                     for p in peers.iter_mut() {
                         let _ = p.conn.send(&Frame::Bye);
                     }
@@ -583,9 +589,9 @@ pub fn run_edge_on(listener: &Listener, cfg: &ServeConfig) -> Result<()> {
                 f => bail!("edge: unexpected {} from the root", kind_name(f.kind())),
             }
         } else {
-            match f {
-                Frame::Uplink { round, client, payload } => {
-                    let Payload::Signs(z) = payload else {
+            match decode_body_borrowed(&body)? {
+                FrameView::Uplink { round, client, payload } => {
+                    let PayloadView::Signs(z) = payload else {
                         bail!("edge: uplink from client {client} was not a packed sketch")
                     };
                     ensure!(z.m() == m, "edge: sketch m={} (want {m})", z.m());
@@ -596,7 +602,7 @@ pub fn run_edge_on(listener: &Listener, cfg: &ServeConfig) -> Result<()> {
                         sh.pending > 0,
                         "edge: more round-{round} uplinks than clients selected in {lo}..{hi}"
                     );
-                    sh.acc.absorb(&z, 1.0);
+                    sh.acc.absorb_view(&z, 1.0);
                     sh.pending -= 1;
                     if peers[pi].want_ack {
                         peers[pi].conn.send(&Frame::Ack { round, client })?;
@@ -615,7 +621,7 @@ pub fn run_edge_on(listener: &Listener, cfg: &ServeConfig) -> Result<()> {
                         })?;
                     }
                 }
-                Frame::Bye => bail!("edge: fleet peer {pi} left before the run ended"),
+                FrameView::Bye => bail!("edge: fleet peer {pi} left before the run ended"),
                 f => bail!("edge: unexpected {} from fleet peer {pi}", kind_name(f.kind())),
             }
         }

@@ -153,6 +153,89 @@ fn mask_tail(words: &mut [u64], m: usize) {
     }
 }
 
+/// A borrowed packed sign vector over raw little-endian wire bytes —
+/// the zero-copy counterpart of [`SignVec`] (DESIGN.md §14). The word
+/// accessor reads the bytes in place with an unaligned load (wire
+/// buffers carry no alignment guarantee: the packed words sit at byte
+/// offset 5 of a `Signs` frame) and masks the final word's tail, so a
+/// view over a dirty-tail frame observes exactly the canonical words
+/// [`SignVec::from_words`] would have produced. The view borrows the
+/// receive buffer; anything that must outlive the buffer goes through
+/// [`SignVecView::to_owned`].
+#[derive(Clone, Copy, Debug)]
+pub struct SignVecView<'a> {
+    bytes: &'a [u8],
+    m: usize,
+}
+
+impl<'a> SignVecView<'a> {
+    /// View `bytes` as ⌈m/64⌉ little-endian u64 words of packed signs.
+    /// `bytes.len()` must be exactly [`packed_bytes`]`(m)`.
+    pub fn new(bytes: &'a [u8], m: usize) -> SignVecView<'a> {
+        assert_eq!(
+            bytes.len(),
+            packed_bytes(m),
+            "need {} bytes for m={m}, got {}",
+            packed_bytes(m),
+            bytes.len()
+        );
+        SignVecView { bytes, m }
+    }
+
+    /// Logical length m (number of signs).
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    /// Number of packed words, ⌈m/64⌉.
+    pub fn words_len(&self) -> usize {
+        self.m.div_ceil(64)
+    }
+
+    /// Word `i`, canonicalized: tail bits beyond m read as zero, exactly
+    /// like the owned decode path.
+    #[inline]
+    pub fn word(&self, i: usize) -> u64 {
+        let lo = i * 8;
+        assert!(lo + 8 <= self.bytes.len(), "word {i} out of range");
+        // SAFETY: the assert above bounds the 8-byte read inside the
+        // borrowed buffer; `read_unaligned` requires no alignment and
+        // every bit pattern is a valid u64.
+        let raw = unsafe { self.bytes.as_ptr().add(lo).cast::<u64>().read_unaligned() };
+        let w = u64::from_le(raw);
+        let tail = self.m % 64;
+        if tail != 0 && i == self.words_len() - 1 {
+            w & ((1u64 << tail) - 1)
+        } else {
+            w
+        }
+    }
+
+    /// Bit i (true ⇔ +1), identical to [`SignVec::bit`].
+    #[inline]
+    pub fn bit(&self, i: usize) -> bool {
+        debug_assert!(i < self.m);
+        self.word(i / 64) >> (i % 64) & 1 == 1
+    }
+
+    /// Sign i as ±1.0, identical to [`SignVec::sign`].
+    #[inline]
+    pub fn sign(&self, i: usize) -> f32 {
+        if self.bit(i) {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    /// Materialize an owned canonical [`SignVec`] — bit-identical to
+    /// the copying decode of the same bytes. (Takes `self` by value:
+    /// the view is `Copy`.)
+    pub fn to_owned(self) -> SignVec {
+        SignVec::from_words((0..self.words_len()).map(|i| self.word(i)).collect(), self.m)
+    }
+}
+
 /// Pack a ±1 f32 sign vector into u64 words (bit set ⇔ value >= 0).
 pub fn pack_signs(signs: &[f32]) -> Vec<u64> {
     let words = signs.len().div_ceil(64);
@@ -293,10 +376,29 @@ impl VoteAccumulator {
     /// the sketch is only read and can be dropped immediately after.
     pub fn absorb(&mut self, z: &SignVec, weight: f64) {
         assert_eq!(z.m(), self.m, "sketch length mismatch in absorb");
+        self.absorb_words(|w| z.words()[w], weight);
+    }
+
+    /// Fold one sketch straight off a borrowed wire view — the zero-copy
+    /// hot path. `tally[i]` receives exactly the same ±q term as
+    /// [`absorb`](Self::absorb) over the materialized view, so the two
+    /// paths are bit-identical by construction.
+    pub fn absorb_view(&mut self, z: &SignVecView<'_>, weight: f64) {
+        assert_eq!(z.m(), self.m, "sketch length mismatch in absorb");
+        self.absorb_words(|w| z.word(w), weight);
+    }
+
+    /// The single absorb loop both entry points share: one word fetch
+    /// per 64 tallies, each tally taking `+q` on a set bit and `-q`
+    /// otherwise (independent per element, so the word-outer walk is
+    /// bit-identical to a flat index walk).
+    fn absorb_words(&mut self, word: impl Fn(usize) -> u64, weight: f64) {
         let q = quantize_weight(weight);
-        for (i, a) in self.tally.iter_mut().enumerate() {
-            let bit = z.words()[i / 64] >> (i % 64) & 1;
-            *a += if bit == 1 { q } else { -q };
+        for (wi, chunk) in self.tally.chunks_mut(64).enumerate() {
+            let w = word(wi);
+            for (b, a) in chunk.iter_mut().enumerate() {
+                *a += if w >> b & 1 == 1 { q } else { -q };
+            }
         }
         self.absorbed += 1;
     }
@@ -310,6 +412,18 @@ impl VoteAccumulator {
             *a += b;
         }
         self.absorbed += other.absorbed;
+    }
+
+    /// Fold a sibling shard read lazily off the wire: `quantum(i)` is
+    /// called once per bit, in ascending order, and must return the
+    /// shard's i-th tally quanta. Bit-identical to
+    /// `merge(from_quanta(...))` without materializing the i128 vector.
+    /// The caller must have verified the shard carries exactly m quanta.
+    pub fn merge_quanta(&mut self, absorbed: usize, quantum: impl Fn(usize) -> i128) {
+        for (i, a) in self.tally.iter_mut().enumerate() {
+            *a += quantum(i);
+        }
+        self.absorbed += absorbed;
     }
 
     /// Sign the tally into the packed consensus (ties → +1, the global
@@ -491,6 +605,67 @@ mod tests {
         // exact multiples of 64 have no tail to mask
         let full = SignVec::from_words(vec![u64::MAX], 64);
         assert_eq!(full.words(), &[u64::MAX]);
+    }
+
+    #[test]
+    fn view_matches_owned_on_dirty_and_unaligned_buffers() {
+        check("signvec_view_identity", 60, |rng| {
+            let m = rng.below(400) + 1;
+            let words: Vec<u64> = (0..m.div_ceil(64)).map(|_| rng.next_u64()).collect();
+            let owned = SignVec::from_words(words.clone(), m);
+            // serialize the *unmasked* words after a random 0..8-byte
+            // prefix, so view reads hit every alignment class and the
+            // tail bytes carry garbage the view must mask
+            let off = rng.below(8);
+            let mut bytes = vec![0xA5u8; off];
+            for w in &words {
+                bytes.extend_from_slice(&w.to_le_bytes());
+            }
+            let view = SignVecView::new(&bytes[off..], m);
+            if view.m() != m || view.words_len() != owned.words().len() {
+                return Err("view geometry mismatch".into());
+            }
+            if view.to_owned() != owned {
+                return Err("to_owned disagrees with from_words".into());
+            }
+            for _ in 0..16 {
+                let i = rng.below(m);
+                if view.bit(i) != owned.bit(i) || view.sign(i) != owned.sign(i) {
+                    return Err(format!("bit/sign mismatch at {i}"));
+                }
+            }
+            // absorb_view must be bit-identical to absorb on the owned vec
+            let weight = rng.f32() as f64 + 0.1;
+            let mut a = VoteAccumulator::new(m);
+            let mut b = VoteAccumulator::new(m);
+            a.absorb(&owned, weight);
+            b.absorb_view(&view, weight);
+            if a.quanta() != b.quanta() || a.absorbed() != b.absorbed() {
+                return Err("absorb_view tally mismatch".into());
+            }
+            if a.finish() != b.finish() {
+                return Err("absorb_view finish mismatch".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn merge_quanta_matches_merge_from_quanta() {
+        check("merge_quanta_identity", 40, |rng| {
+            let m = rng.below(300) + 1;
+            let mut base = VoteAccumulator::new(m);
+            base.absorb(&SignVec::from_signs(&rand_signs(rng, m)), 0.7);
+            let shard: Vec<i128> = (0..m).map(|_| rng.next_u64() as i128 - (1 << 62)).collect();
+            let mut a = base.clone();
+            let mut b = base;
+            a.merge(VoteAccumulator::from_quanta(shard.clone(), 3));
+            b.merge_quanta(3, |i| shard[i]);
+            if a.quanta() != b.quanta() || a.absorbed() != b.absorbed() {
+                return Err("merge_quanta disagrees with merge".into());
+            }
+            Ok(())
+        });
     }
 
     #[test]

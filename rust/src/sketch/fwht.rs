@@ -9,7 +9,11 @@
 //! kernel in [`super::kernel`] (DESIGN.md §10); the textbook butterfly
 //! is retained in [`scalar`] as the bit-exactness oracle the kernel is
 //! property-tested against — the blocked kernel only reorders traversal
-//! across independent butterflies, so results are bit-identical.
+//! across independent butterflies, so results are bit-identical. The
+//! same oracle contract covers the explicit AVX2/NEON butterfly levels
+//! (DESIGN.md §14): every [`super::kernel::Isa`] in
+//! [`super::kernel::Isa::available`] is swept against [`scalar`] with
+//! `to_bits()` equality, never a tolerance.
 
 /// Unnormalized in-place FWHT (Sylvester/natural order).
 ///

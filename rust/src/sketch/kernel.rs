@@ -17,6 +17,14 @@
 //! * **SIMD-friendly lanes** — inner loops are fixed 8×f32 chunks over
 //!   contiguous windows obtained by `split_at_mut`, the shape stable
 //!   rustc autovectorizes; lane arithmetic is exact per lane.
+//! * **Explicit SIMD butterflies** — `std::arch` AVX2 (x86_64) and NEON
+//!   (aarch64) paths for every butterfly pass (radix-2, radix-4, and the
+//!   fused D·pad first passes), selected once per process by
+//!   [`active_isa`] (runtime feature detection with a
+//!   `PFED1BS_FORCE_ISA=scalar|avx2|neon` override) and carried on every
+//!   [`Schedule`]. SIMD only widens the traversal across *independent*
+//!   butterflies — each lane's op DAG is the scalar kernel's, so every
+//!   dispatch level stays bit-identical (DESIGN.md §14).
 //! * **Fusion with the SRHT** — [`SketchPlan`] folds the D·pad prologue
 //!   into each tile's first butterfly pass and the 1/√n′ normalization
 //!   into every element's last butterfly write, and serves subsample +
@@ -39,6 +47,7 @@
 //! overrides, batch shapes, and thread counts.
 
 use std::cell::RefCell;
+use std::sync::OnceLock;
 
 use crate::coordinator::parallel::par_map;
 
@@ -60,6 +69,101 @@ fn inv_sqrt_scale(n: usize) -> f32 {
     // EXACTLY the expression the scalar reference uses — the fused
     // epilogue must multiply by the identical f32 constant
     1.0 / (n as f32).sqrt()
+}
+
+// ---------------------------------------------------------------------
+// ISA dispatch: which butterfly lane kernels run (DESIGN.md §14)
+// ---------------------------------------------------------------------
+
+/// Instruction-set level of the butterfly lane kernels. Every level is
+/// bit-identical to [`Isa::Scalar`] (and therefore to `fwht::scalar`):
+/// the SIMD paths only widen the traversal across independent
+/// butterflies, never any lane's op DAG. Variants exist only on the
+/// architectures that can execute them, so a constructed `Isa` is always
+/// runnable on the current machine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Isa {
+    /// Portable fixed-lane loops (the autovectorized shape) — the
+    /// always-available reference level.
+    Scalar,
+    /// 256-bit AVX2 butterflies. Only constructed after
+    /// `is_x86_feature_detected!("avx2")` returned true.
+    #[cfg(target_arch = "x86_64")]
+    Avx2,
+    /// 128-bit NEON butterflies (baseline on every aarch64 CPU).
+    #[cfg(target_arch = "aarch64")]
+    Neon,
+}
+
+impl Isa {
+    /// Stable lowercase name (`scalar` / `avx2` / `neon`) — the
+    /// `PFED1BS_FORCE_ISA` vocabulary and the bench row suffix.
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            #[cfg(target_arch = "x86_64")]
+            Isa::Avx2 => "avx2",
+            #[cfg(target_arch = "aarch64")]
+            Isa::Neon => "neon",
+        }
+    }
+
+    /// The best level this machine can execute (runtime detection).
+    pub fn detect() -> Isa {
+        #[cfg(target_arch = "x86_64")]
+        if is_x86_feature_detected!("avx2") {
+            return Isa::Avx2;
+        }
+        // structurally conditional (not just cfg'd) so the scalar tail
+        // below stays live for the unreachable-code lint on aarch64
+        #[cfg(target_arch = "aarch64")]
+        if cfg!(target_arch = "aarch64") {
+            return Isa::Neon;
+        }
+        Isa::Scalar
+    }
+
+    /// Every level this machine can execute, scalar first — the sweep
+    /// the property tests run against the scalar oracle.
+    pub fn available() -> Vec<Isa> {
+        match Isa::detect() {
+            Isa::Scalar => vec![Isa::Scalar],
+            #[cfg(target_arch = "x86_64")]
+            Isa::Avx2 => vec![Isa::Scalar, Isa::Avx2],
+            #[cfg(target_arch = "aarch64")]
+            Isa::Neon => vec![Isa::Scalar, Isa::Neon],
+        }
+    }
+
+    /// Parse a `PFED1BS_FORCE_ISA` value; errors name the level when the
+    /// machine cannot execute it (never silently falls back — a forced
+    /// level that quietly degraded would invalidate every benchmark row
+    /// recorded under it).
+    pub fn from_env_name(name: &str) -> Result<Isa, String> {
+        match name.trim().to_ascii_lowercase().as_str() {
+            "scalar" => Ok(Isa::Scalar),
+            #[cfg(target_arch = "x86_64")]
+            "avx2" if is_x86_feature_detected!("avx2") => Ok(Isa::Avx2),
+            #[cfg(target_arch = "aarch64")]
+            "neon" => Ok(Isa::Neon),
+            other => Err(format!(
+                "PFED1BS_FORCE_ISA={other}: not executable on this machine \
+                 (expected scalar|avx2|neon)"
+            )),
+        }
+    }
+}
+
+/// The process-wide dispatch level, resolved once on first use:
+/// `PFED1BS_FORCE_ISA` when set (panicking on a level this machine
+/// cannot execute), otherwise [`Isa::detect`]. Every [`Schedule`] — and
+/// therefore every [`SketchPlan`] — captures this value at construction.
+pub fn active_isa() -> Isa {
+    static ACTIVE: OnceLock<Isa> = OnceLock::new();
+    *ACTIVE.get_or_init(|| match std::env::var("PFED1BS_FORCE_ISA") {
+        Ok(v) => Isa::from_env_name(&v).unwrap_or_else(|e| panic!("{e}")),
+        Err(_) => Isa::detect(),
+    })
 }
 
 // ---------------------------------------------------------------------
@@ -184,18 +288,45 @@ fn windows4(
 // tile phase: all stages h < tile length, contiguous and L1-resident
 // ---------------------------------------------------------------------
 
-/// Dispatch one radix-2 pass with the epilogue fused iff it is the last
-/// stage of the whole transform.
+/// Fold `(last, scale)` into the `(scaled, s)` pair every lane kernel
+/// takes: the epilogue multiply runs iff this pass contains the final
+/// stage AND a normalization was requested.
 #[inline(always)]
-fn bf2_dispatch(a: &mut [f32], b: &mut [f32], last: bool, scale: Option<f32>) {
+fn scale_flag(last: bool, scale: Option<f32>) -> (bool, f32) {
     match (last, scale) {
-        (true, Some(s)) => bf2::<true>(a, b, s),
-        _ => bf2::<false>(a, b, 1.0),
+        (true, Some(s)) => (true, s),
+        _ => (false, 1.0),
+    }
+}
+
+/// Dispatch one radix-2 pass at the schedule's ISA level, with the
+/// epilogue fused iff it is the last stage of the whole transform.
+#[inline(always)]
+fn bf2_dispatch(isa: Isa, a: &mut [f32], b: &mut [f32], last: bool, scale: Option<f32>) {
+    let (scaled, s) = scale_flag(last, scale);
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `Isa::Avx2` is only constructed after
+        // `is_x86_feature_detected!("avx2")` returned true (detect /
+        // from_env_name), so the callee's target-feature contract holds.
+        Isa::Avx2 => unsafe { avx2::bf2(a, b, scaled, s) },
+        #[cfg(target_arch = "aarch64")]
+        // NEON is in the aarch64 baseline feature set, so the call is
+        // statically feature-enabled (no unsafe needed).
+        Isa::Neon => neon::bf2(a, b, scaled, s),
+        Isa::Scalar => {
+            if scaled {
+                bf2::<true>(a, b, s)
+            } else {
+                bf2::<false>(a, b, 1.0)
+            }
+        }
     }
 }
 
 #[inline(always)]
 fn bf4_dispatch(
+    isa: Isa,
     r0: &mut [f32],
     r1: &mut [f32],
     r2: &mut [f32],
@@ -203,15 +334,26 @@ fn bf4_dispatch(
     last: bool,
     scale: Option<f32>,
 ) {
-    match (last, scale) {
-        (true, Some(s)) => bf4::<true>(r0, r1, r2, r3, s),
-        _ => bf4::<false>(r0, r1, r2, r3, 1.0),
+    let (scaled, s) = scale_flag(last, scale);
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `Isa::Avx2` implies AVX2 was detected at runtime.
+        Isa::Avx2 => unsafe { avx2::bf4(r0, r1, r2, r3, scaled, s) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => neon::bf4(r0, r1, r2, r3, scaled, s),
+        Isa::Scalar => {
+            if scaled {
+                bf4::<true>(r0, r1, r2, r3, s)
+            } else {
+                bf4::<false>(r0, r1, r2, r3, 1.0)
+            }
+        }
     }
 }
 
 /// Remaining radix-4 passes of a contiguous transform, from stage `h`
 /// upward. `scale` is applied by the pass that contains the final stage.
-fn tile_rest(x: &mut [f32], mut h: usize, scale: Option<f32>) {
+fn tile_rest(isa: Isa, x: &mut [f32], mut h: usize, scale: Option<f32>) {
     let n = x.len();
     while h < n {
         debug_assert!(4 * h <= n, "stage parity broken: h={h}, n={n}");
@@ -219,7 +361,7 @@ fn tile_rest(x: &mut [f32], mut h: usize, scale: Option<f32>) {
         let mut base = 0;
         while base < n {
             let (r0, r1, r2, r3) = windows4(x, base, h, h);
-            bf4_dispatch(r0, r1, r2, r3, last, scale);
+            bf4_dispatch(isa, r0, r1, r2, r3, last, scale);
             base += 4 * h;
         }
         h *= 4;
@@ -229,50 +371,74 @@ fn tile_rest(x: &mut [f32], mut h: usize, scale: Option<f32>) {
 /// First butterfly pass of a contiguous transform already resident in
 /// `x`: radix-2 when the stage count is odd, radix-4 otherwise. Returns
 /// the next stage h.
-fn tile_first_pass(x: &mut [f32], lg: usize, scale: Option<f32>) -> usize {
+fn tile_first_pass(isa: Isa, x: &mut [f32], lg: usize, scale: Option<f32>) -> usize {
     if lg % 2 == 1 {
-        let last = lg == 1;
-        if let (true, Some(s)) = (last, scale) {
-            for p in x.chunks_exact_mut(2) {
-                let (a, b) = (p[0], p[1]);
-                p[0] = (a + b) * s;
-                p[1] = (a - b) * s;
-            }
-        } else {
-            for p in x.chunks_exact_mut(2) {
-                let (a, b) = (p[0], p[1]);
-                p[0] = a + b;
-                p[1] = a - b;
-            }
+        let (scaled, s) = scale_flag(lg == 1, scale);
+        match isa {
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: `Isa::Avx2` implies AVX2 was detected at runtime.
+            Isa::Avx2 => unsafe { avx2::first2(x, scaled, s) },
+            #[cfg(target_arch = "aarch64")]
+            Isa::Neon => neon::first2(x, scaled, s),
+            Isa::Scalar => first2_scalar(x, scaled, s),
         }
         2
     } else {
-        let last = lg == 2;
-        if let (true, Some(s)) = (last, scale) {
-            for q in x.chunks_exact_mut(4) {
-                let (a, b, c, d) = (q[0], q[1], q[2], q[3]);
-                let (s0, d0, s1, d1) = (a + b, a - b, c + d, c - d);
-                q[0] = (s0 + s1) * s;
-                q[1] = (d0 + d1) * s;
-                q[2] = (s0 - s1) * s;
-                q[3] = (d0 - d1) * s;
-            }
-        } else {
-            for q in x.chunks_exact_mut(4) {
-                let (a, b, c, d) = (q[0], q[1], q[2], q[3]);
-                let (s0, d0, s1, d1) = (a + b, a - b, c + d, c - d);
-                q[0] = s0 + s1;
-                q[1] = d0 + d1;
-                q[2] = s0 - s1;
-                q[3] = d0 - d1;
-            }
+        let (scaled, s) = scale_flag(lg == 2, scale);
+        match isa {
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: `Isa::Avx2` implies AVX2 was detected at runtime.
+            Isa::Avx2 => unsafe { avx2::first4(x, scaled, s) },
+            #[cfg(target_arch = "aarch64")]
+            Isa::Neon => neon::first4(x, scaled, s),
+            Isa::Scalar => first4_scalar(x, scaled, s),
         }
         4
     }
 }
 
+/// Scalar adjacent-pair radix-2 first pass (stage h = 1 in place).
+fn first2_scalar(x: &mut [f32], scaled: bool, s: f32) {
+    if scaled {
+        for p in x.chunks_exact_mut(2) {
+            let (a, b) = (p[0], p[1]);
+            p[0] = (a + b) * s;
+            p[1] = (a - b) * s;
+        }
+    } else {
+        for p in x.chunks_exact_mut(2) {
+            let (a, b) = (p[0], p[1]);
+            p[0] = a + b;
+            p[1] = a - b;
+        }
+    }
+}
+
+/// Scalar adjacent-quad fused radix-4 first pass (stages h = 1, 2).
+fn first4_scalar(x: &mut [f32], scaled: bool, s: f32) {
+    if scaled {
+        for q in x.chunks_exact_mut(4) {
+            let (a, b, c, d) = (q[0], q[1], q[2], q[3]);
+            let (s0, d0, s1, d1) = (a + b, a - b, c + d, c - d);
+            q[0] = (s0 + s1) * s;
+            q[1] = (d0 + d1) * s;
+            q[2] = (s0 - s1) * s;
+            q[3] = (d0 - d1) * s;
+        }
+    } else {
+        for q in x.chunks_exact_mut(4) {
+            let (a, b, c, d) = (q[0], q[1], q[2], q[3]);
+            let (s0, d0, s1, d1) = (a + b, a - b, c + d, c - d);
+            q[0] = s0 + s1;
+            q[1] = d0 + d1;
+            q[2] = s0 - s1;
+            q[3] = d0 - d1;
+        }
+    }
+}
+
 /// Full transform of one contiguous block (all stages h = 1..len/2).
-fn tile_fwht(x: &mut [f32], scale: Option<f32>) {
+fn tile_fwht(isa: Isa, x: &mut [f32], scale: Option<f32>) {
     let n = x.len();
     if n <= 1 {
         if let Some(s) = scale {
@@ -284,15 +450,15 @@ fn tile_fwht(x: &mut [f32], scale: Option<f32>) {
         return;
     }
     let lg = n.trailing_zeros() as usize;
-    let h0 = tile_first_pass(x, lg, scale);
-    tile_rest(x, h0, scale);
+    let h0 = tile_first_pass(isa, x, lg, scale);
+    tile_rest(isa, x, h0, scale);
 }
 
 /// First butterfly pass fused with the SRHT prologue: the pass loads
 /// `w[i]·d[i]` (zero beyond `w`) instead of reading `x`, eliminating the
 /// separate D·pad sweep. Same products, same adds — bit-identical to
 /// prologue-then-butterfly.
-fn tile_fwht_wd(w: &[f32], d: &[f32], x: &mut [f32], scale: Option<f32>) {
+fn tile_fwht_wd(isa: Isa, w: &[f32], d: &[f32], x: &mut [f32], scale: Option<f32>) {
     let n = x.len();
     debug_assert_eq!(d.len(), n);
     debug_assert!(w.len() <= n);
@@ -312,55 +478,79 @@ fn tile_fwht_wd(w: &[f32], d: &[f32], x: &mut [f32], scale: Option<f32>) {
     }
     let lg = n.trailing_zeros() as usize;
     let h0 = if w.len() == n {
-        wd_first_pass_full(w, d, x, lg, scale)
+        wd_first_pass_full(isa, w, d, x, lg, scale)
     } else {
+        // boundary tile (runs at most once per transform) — stays scalar
         wd_first_pass_partial(w, d, x, lg, scale)
     };
-    tile_rest(x, h0, scale);
+    tile_rest(isa, x, h0, scale);
 }
 
 /// Fused-load first pass, tile fully inside the source vector:
 /// branch-free zipped loads.
-fn wd_first_pass_full(w: &[f32], d: &[f32], x: &mut [f32], lg: usize, scale: Option<f32>) -> usize {
+fn wd_first_pass_full(
+    isa: Isa,
+    w: &[f32],
+    d: &[f32],
+    x: &mut [f32],
+    lg: usize,
+    scale: Option<f32>,
+) -> usize {
     if lg % 2 == 1 {
-        let s = match (lg == 1, scale) {
-            (true, Some(s)) => s,
-            _ => 1.0,
-        };
-        let scaled = lg == 1 && scale.is_some();
-        for ((p, ws), ds) in x.chunks_exact_mut(2).zip(w.chunks_exact(2)).zip(d.chunks_exact(2)) {
-            let (a, b) = (ws[0] * ds[0], ws[1] * ds[1]);
-            if scaled {
-                p[0] = (a + b) * s;
-                p[1] = (a - b) * s;
-            } else {
-                p[0] = a + b;
-                p[1] = a - b;
-            }
+        let (scaled, s) = scale_flag(lg == 1, scale);
+        match isa {
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: `Isa::Avx2` implies AVX2 was detected at runtime.
+            Isa::Avx2 => unsafe { avx2::wd_first2(w, d, x, scaled, s) },
+            #[cfg(target_arch = "aarch64")]
+            Isa::Neon => neon::wd_first2(w, d, x, scaled, s),
+            Isa::Scalar => wd_first2_scalar(w, d, x, scaled, s),
         }
         2
     } else {
-        let s = match (lg == 2, scale) {
-            (true, Some(s)) => s,
-            _ => 1.0,
-        };
-        let scaled = lg == 2 && scale.is_some();
-        for ((q, ws), ds) in x.chunks_exact_mut(4).zip(w.chunks_exact(4)).zip(d.chunks_exact(4)) {
-            let (a, b, c, e) = (ws[0] * ds[0], ws[1] * ds[1], ws[2] * ds[2], ws[3] * ds[3]);
-            let (s0, d0, s1, d1) = (a + b, a - b, c + e, c - e);
-            if scaled {
-                q[0] = (s0 + s1) * s;
-                q[1] = (d0 + d1) * s;
-                q[2] = (s0 - s1) * s;
-                q[3] = (d0 - d1) * s;
-            } else {
-                q[0] = s0 + s1;
-                q[1] = d0 + d1;
-                q[2] = s0 - s1;
-                q[3] = d0 - d1;
-            }
+        let (scaled, s) = scale_flag(lg == 2, scale);
+        match isa {
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: `Isa::Avx2` implies AVX2 was detected at runtime.
+            Isa::Avx2 => unsafe { avx2::wd_first4(w, d, x, scaled, s) },
+            #[cfg(target_arch = "aarch64")]
+            Isa::Neon => neon::wd_first4(w, d, x, scaled, s),
+            Isa::Scalar => wd_first4_scalar(w, d, x, scaled, s),
         }
         4
+    }
+}
+
+/// Scalar fused-load radix-2 first pass: branch-free zipped loads.
+fn wd_first2_scalar(w: &[f32], d: &[f32], x: &mut [f32], scaled: bool, s: f32) {
+    for ((p, ws), ds) in x.chunks_exact_mut(2).zip(w.chunks_exact(2)).zip(d.chunks_exact(2)) {
+        let (a, b) = (ws[0] * ds[0], ws[1] * ds[1]);
+        if scaled {
+            p[0] = (a + b) * s;
+            p[1] = (a - b) * s;
+        } else {
+            p[0] = a + b;
+            p[1] = a - b;
+        }
+    }
+}
+
+/// Scalar fused-load radix-4 first pass.
+fn wd_first4_scalar(w: &[f32], d: &[f32], x: &mut [f32], scaled: bool, s: f32) {
+    for ((q, ws), ds) in x.chunks_exact_mut(4).zip(w.chunks_exact(4)).zip(d.chunks_exact(4)) {
+        let (a, b, c, e) = (ws[0] * ds[0], ws[1] * ds[1], ws[2] * ds[2], ws[3] * ds[3]);
+        let (s0, d0, s1, d1) = (a + b, a - b, c + e, c - e);
+        if scaled {
+            q[0] = (s0 + s1) * s;
+            q[1] = (d0 + d1) * s;
+            q[2] = (s0 - s1) * s;
+            q[3] = (d0 - d1) * s;
+        } else {
+            q[0] = s0 + s1;
+            q[1] = d0 + d1;
+            q[2] = s0 - s1;
+            q[3] = d0 - d1;
+        }
     }
 }
 
@@ -418,7 +608,7 @@ fn wd_first_pass_partial(
 /// stages only ever combine same-column elements, so running every
 /// stage for one strip before touching the next preserves each
 /// element's stage order exactly.
-fn cross_pass(x: &mut [f32], c: usize, strip: usize, scale: Option<f32>) {
+fn cross_pass(isa: Isa, x: &mut [f32], c: usize, strip: usize, scale: Option<f32>) {
     let n = x.len();
     let r = n / c;
     debug_assert!(r >= 2 && r * c == n && strip >= 1);
@@ -431,7 +621,7 @@ fn cross_pass(x: &mut [f32], c: usize, strip: usize, scale: Option<f32>) {
             let mut rbase = 0;
             while rbase < r {
                 let (a, b) = windows2(x, rbase * c + c0, c, w);
-                bf2_dispatch(a, b, last, scale);
+                bf2_dispatch(isa, a, b, last, scale);
                 rbase += 2;
             }
             2
@@ -446,7 +636,7 @@ fn cross_pass(x: &mut [f32], c: usize, strip: usize, scale: Option<f32>) {
             while rb < r {
                 for j in 0..h {
                     let (r0, r1, r2, r3) = windows4(x, (rb + j) * c + c0, h * c, w);
-                    bf4_dispatch(r0, r1, r2, r3, last, scale);
+                    bf4_dispatch(isa, r0, r1, r2, r3, last, scale);
                 }
                 rb += 4 * h;
             }
@@ -459,7 +649,7 @@ fn cross_pass(x: &mut [f32], c: usize, strip: usize, scale: Option<f32>) {
 /// The same row-transform over an explicit row set (each row a disjoint
 /// `&mut` window) — the shape the threaded column bands use, since one
 /// band's rows cannot be expressed as a single contiguous slice.
-fn cross_rows(rows: &mut [&mut [f32]], strip: usize, scale: Option<f32>) {
+fn cross_rows(isa: Isa, rows: &mut [&mut [f32]], strip: usize, scale: Option<f32>) {
     let r = rows.len();
     if r < 2 || rows[0].is_empty() {
         return;
@@ -474,7 +664,7 @@ fn cross_rows(rows: &mut [&mut [f32]], strip: usize, scale: Option<f32>) {
             let mut rbase = 0;
             while rbase < r {
                 let (a, b) = rows2(rows, rbase, 1);
-                bf2_dispatch(&mut a[c0..c0 + w], &mut b[c0..c0 + w], last, scale);
+                bf2_dispatch(isa, &mut a[c0..c0 + w], &mut b[c0..c0 + w], last, scale);
                 rbase += 2;
             }
             2
@@ -490,6 +680,7 @@ fn cross_rows(rows: &mut [&mut [f32]], strip: usize, scale: Option<f32>) {
                 for j in 0..h {
                     let (r0, r1, r2, r3) = rows4(rows, rb + j, h);
                     bf4_dispatch(
+                        isa,
                         &mut r0[c0..c0 + w],
                         &mut r1[c0..c0 + w],
                         &mut r2[c0..c0 + w],
@@ -529,6 +720,430 @@ fn rows4<'a>(
 }
 
 // ---------------------------------------------------------------------
+// explicit SIMD lane kernels (DESIGN.md §14)
+//
+// Each function mirrors one scalar lane kernel exactly: the vector ops
+// only widen the traversal across *independent* butterflies, so every
+// lane computes the scalar kernel's op DAG with the scalar operand
+// order (per-lane IEEE f32 add/sub/mul are exact positions in the DAG
+// and Rust never FP-contracts, so results are bit-identical). Slice
+// tails shorter than a vector delegate to the scalar kernels.
+// ---------------------------------------------------------------------
+
+/// AVX2 (8-lane f32) butterfly kernels. Every function is a safe
+/// `#[target_feature]` fn: callers outside an AVX2 context must wrap
+/// the call in `unsafe` and guarantee the CPU has AVX2 — which
+/// [`Isa::Avx2`]'s construction (runtime detection) does.
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    /// Radix-2 pass over two equal-length disjoint windows.
+    #[target_feature(enable = "avx2")]
+    pub(super) fn bf2(a: &mut [f32], b: &mut [f32], scaled: bool, s: f32) {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let mut i = 0;
+        while i + 8 <= n {
+            // SAFETY: `i + 8 <= n` bounds every unaligned load/store in
+            // both slices; lanes are independent butterflies, each
+            // computing the scalar DAG ((x+y)[·s], (x−y)[·s]) with the
+            // scalar operand order.
+            unsafe {
+                let x = _mm256_loadu_ps(a.as_ptr().add(i));
+                let y = _mm256_loadu_ps(b.as_ptr().add(i));
+                let mut u = _mm256_add_ps(x, y);
+                let mut v = _mm256_sub_ps(x, y);
+                if scaled {
+                    let sv = _mm256_set1_ps(s);
+                    u = _mm256_mul_ps(u, sv);
+                    v = _mm256_mul_ps(v, sv);
+                }
+                _mm256_storeu_ps(a.as_mut_ptr().add(i), u);
+                _mm256_storeu_ps(b.as_mut_ptr().add(i), v);
+            }
+            i += 8;
+        }
+        if scaled {
+            super::bf2::<true>(&mut a[i..], &mut b[i..], s);
+        } else {
+            super::bf2::<false>(&mut a[i..], &mut b[i..], 1.0);
+        }
+    }
+
+    /// Fused double radix-2 (= radix-4) pass over four disjoint windows.
+    #[target_feature(enable = "avx2")]
+    pub(super) fn bf4(
+        r0: &mut [f32],
+        r1: &mut [f32],
+        r2: &mut [f32],
+        r3: &mut [f32],
+        scaled: bool,
+        s: f32,
+    ) {
+        debug_assert!(r0.len() == r1.len() && r1.len() == r2.len() && r2.len() == r3.len());
+        let n = r0.len();
+        let mut i = 0;
+        while i + 8 <= n {
+            // SAFETY: `i + 8 <= n` bounds every unaligned load/store in
+            // all four slices; per lane this is exactly the scalar bf4
+            // DAG (s0,d0,s1,d1 then the four sums/differences, operand
+            // order preserved).
+            unsafe {
+                let a = _mm256_loadu_ps(r0.as_ptr().add(i));
+                let b = _mm256_loadu_ps(r1.as_ptr().add(i));
+                let c = _mm256_loadu_ps(r2.as_ptr().add(i));
+                let d = _mm256_loadu_ps(r3.as_ptr().add(i));
+                let s0 = _mm256_add_ps(a, b);
+                let d0 = _mm256_sub_ps(a, b);
+                let s1 = _mm256_add_ps(c, d);
+                let d1 = _mm256_sub_ps(c, d);
+                let mut k0 = _mm256_add_ps(s0, s1);
+                let mut k1 = _mm256_add_ps(d0, d1);
+                let mut k2 = _mm256_sub_ps(s0, s1);
+                let mut k3 = _mm256_sub_ps(d0, d1);
+                if scaled {
+                    let sv = _mm256_set1_ps(s);
+                    k0 = _mm256_mul_ps(k0, sv);
+                    k1 = _mm256_mul_ps(k1, sv);
+                    k2 = _mm256_mul_ps(k2, sv);
+                    k3 = _mm256_mul_ps(k3, sv);
+                }
+                _mm256_storeu_ps(r0.as_mut_ptr().add(i), k0);
+                _mm256_storeu_ps(r1.as_mut_ptr().add(i), k1);
+                _mm256_storeu_ps(r2.as_mut_ptr().add(i), k2);
+                _mm256_storeu_ps(r3.as_mut_ptr().add(i), k3);
+            }
+            i += 8;
+        }
+        if scaled {
+            super::bf4::<true>(&mut r0[i..], &mut r1[i..], &mut r2[i..], &mut r3[i..], s);
+        } else {
+            super::bf4::<false>(&mut r0[i..], &mut r1[i..], &mut r2[i..], &mut r3[i..], 1.0);
+        }
+    }
+
+    /// In-register stage h = 1 over one 8-float vector holding four
+    /// adjacent (a, b) butterflies: even lanes become a+b, odd lanes
+    /// a−b (scalar operand order — the odd lane is `w − v`, i.e. a − b).
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    fn pairs_stage(v: __m256) -> __m256 {
+        // swap adjacent pairs within each 128-bit half: (b0,a0,b1,a1|…)
+        let w = _mm256_permute_ps::<0b10_11_00_01>(v);
+        // even lanes ← v+w = a+b; odd lanes ← w−v = a−b
+        _mm256_blend_ps::<0b1010_1010>(_mm256_add_ps(v, w), _mm256_sub_ps(w, v))
+    }
+
+    /// In-register stage h = 2 over one 8-float vector holding two
+    /// adjacent (s0,d0,s1,d1) quads from [`pairs_stage`].
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    fn quads_stage(u: __m256) -> __m256 {
+        // swap at distance 2 within each 128-bit half: (s1,d1,s0,d0|…)
+        let w = _mm256_permute_ps::<0b01_00_11_10>(u);
+        // lanes 0,1 ← u+w = (s0+s1, d0+d1); lanes 2,3 ← w−u = (s0−s1, d0−d1)
+        _mm256_blend_ps::<0b1100_1100>(_mm256_add_ps(u, w), _mm256_sub_ps(w, u))
+    }
+
+    /// Contiguous radix-2 first pass (adjacent pairs, stage h = 1).
+    #[target_feature(enable = "avx2")]
+    pub(super) fn first2(x: &mut [f32], scaled: bool, s: f32) {
+        let n = x.len();
+        let mut i = 0;
+        while i + 8 <= n {
+            // SAFETY: `i + 8 <= n` bounds the unaligned load/store; the
+            // in-register shuffle computes each adjacent pair's scalar
+            // butterfly (even lane a+b, odd lane a−b) independently.
+            unsafe {
+                let mut u = pairs_stage(_mm256_loadu_ps(x.as_ptr().add(i)));
+                if scaled {
+                    u = _mm256_mul_ps(u, _mm256_set1_ps(s));
+                }
+                _mm256_storeu_ps(x.as_mut_ptr().add(i), u);
+            }
+            i += 8;
+        }
+        super::first2_scalar(&mut x[i..], scaled, s);
+    }
+
+    /// Contiguous fused radix-4 first pass (adjacent quads, h = 1, 2).
+    #[target_feature(enable = "avx2")]
+    pub(super) fn first4(x: &mut [f32], scaled: bool, s: f32) {
+        let n = x.len();
+        let mut i = 0;
+        while i + 8 <= n {
+            // SAFETY: `i + 8 <= n` bounds the unaligned load/store; the
+            // two in-register stages compute each adjacent quad's scalar
+            // radix-4 DAG with the scalar operand order.
+            unsafe {
+                let mut u = quads_stage(pairs_stage(_mm256_loadu_ps(x.as_ptr().add(i))));
+                if scaled {
+                    u = _mm256_mul_ps(u, _mm256_set1_ps(s));
+                }
+                _mm256_storeu_ps(x.as_mut_ptr().add(i), u);
+            }
+            i += 8;
+        }
+        super::first4_scalar(&mut x[i..], scaled, s);
+    }
+
+    /// Fused-load radix-2 first pass: butterflies over `w[i]·d[i]`.
+    #[target_feature(enable = "avx2")]
+    pub(super) fn wd_first2(w: &[f32], d: &[f32], x: &mut [f32], scaled: bool, s: f32) {
+        debug_assert!(w.len() == x.len() && d.len() == x.len());
+        let n = x.len();
+        let mut i = 0;
+        while i + 8 <= n {
+            // SAFETY: `i + 8 <= n` bounds all three unaligned accesses
+            // (`w`, `d` and `x` have equal length); each lane's product
+            // w[i]·d[i] feeds the same butterfly DAG as the scalar pass.
+            unsafe {
+                let wv = _mm256_mul_ps(
+                    _mm256_loadu_ps(w.as_ptr().add(i)),
+                    _mm256_loadu_ps(d.as_ptr().add(i)),
+                );
+                let mut u = pairs_stage(wv);
+                if scaled {
+                    u = _mm256_mul_ps(u, _mm256_set1_ps(s));
+                }
+                _mm256_storeu_ps(x.as_mut_ptr().add(i), u);
+            }
+            i += 8;
+        }
+        super::wd_first2_scalar(&w[i..], &d[i..], &mut x[i..], scaled, s);
+    }
+
+    /// Fused-load radix-4 first pass: two stages over `w[i]·d[i]`.
+    #[target_feature(enable = "avx2")]
+    pub(super) fn wd_first4(w: &[f32], d: &[f32], x: &mut [f32], scaled: bool, s: f32) {
+        debug_assert!(w.len() == x.len() && d.len() == x.len());
+        let n = x.len();
+        let mut i = 0;
+        while i + 8 <= n {
+            // SAFETY: `i + 8 <= n` bounds all three unaligned accesses
+            // (`w`, `d` and `x` have equal length); per-quad DAG is the
+            // scalar fused radix-4 pass over the products.
+            unsafe {
+                let wv = _mm256_mul_ps(
+                    _mm256_loadu_ps(w.as_ptr().add(i)),
+                    _mm256_loadu_ps(d.as_ptr().add(i)),
+                );
+                let mut u = quads_stage(pairs_stage(wv));
+                if scaled {
+                    u = _mm256_mul_ps(u, _mm256_set1_ps(s));
+                }
+                _mm256_storeu_ps(x.as_mut_ptr().add(i), u);
+            }
+            i += 8;
+        }
+        super::wd_first4_scalar(&w[i..], &d[i..], &mut x[i..], scaled, s);
+    }
+}
+
+/// NEON (4-lane f32) butterfly kernels. NEON is in the aarch64 baseline
+/// feature set, so these `#[target_feature]` fns are safe to call from
+/// any aarch64 context — no runtime detection needed.
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use std::arch::aarch64::*;
+
+    /// Lane-select mask picking the odd lanes (1, 3) of a float32x4.
+    #[inline]
+    #[target_feature(enable = "neon")]
+    fn odd_mask() -> uint32x4_t {
+        // little-endian: low half of each u64 is the even lane
+        vreinterpretq_u32_u64(vdupq_n_u64(0xFFFF_FFFF_0000_0000))
+    }
+
+    /// Radix-2 pass over two equal-length disjoint windows.
+    #[target_feature(enable = "neon")]
+    pub(super) fn bf2(a: &mut [f32], b: &mut [f32], scaled: bool, s: f32) {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let mut i = 0;
+        while i + 4 <= n {
+            // SAFETY: `i + 4 <= n` bounds every load/store in both
+            // slices; lanes are independent butterflies computing the
+            // scalar DAG with the scalar operand order.
+            unsafe {
+                let x = vld1q_f32(a.as_ptr().add(i));
+                let y = vld1q_f32(b.as_ptr().add(i));
+                let mut u = vaddq_f32(x, y);
+                let mut v = vsubq_f32(x, y);
+                if scaled {
+                    u = vmulq_n_f32(u, s);
+                    v = vmulq_n_f32(v, s);
+                }
+                vst1q_f32(a.as_mut_ptr().add(i), u);
+                vst1q_f32(b.as_mut_ptr().add(i), v);
+            }
+            i += 4;
+        }
+        if scaled {
+            super::bf2::<true>(&mut a[i..], &mut b[i..], s);
+        } else {
+            super::bf2::<false>(&mut a[i..], &mut b[i..], 1.0);
+        }
+    }
+
+    /// Fused double radix-2 (= radix-4) pass over four disjoint windows.
+    #[target_feature(enable = "neon")]
+    pub(super) fn bf4(
+        r0: &mut [f32],
+        r1: &mut [f32],
+        r2: &mut [f32],
+        r3: &mut [f32],
+        scaled: bool,
+        s: f32,
+    ) {
+        debug_assert!(r0.len() == r1.len() && r1.len() == r2.len() && r2.len() == r3.len());
+        let n = r0.len();
+        let mut i = 0;
+        while i + 4 <= n {
+            // SAFETY: `i + 4 <= n` bounds every load/store in all four
+            // slices; per lane this is exactly the scalar bf4 DAG.
+            unsafe {
+                let a = vld1q_f32(r0.as_ptr().add(i));
+                let b = vld1q_f32(r1.as_ptr().add(i));
+                let c = vld1q_f32(r2.as_ptr().add(i));
+                let d = vld1q_f32(r3.as_ptr().add(i));
+                let s0 = vaddq_f32(a, b);
+                let d0 = vsubq_f32(a, b);
+                let s1 = vaddq_f32(c, d);
+                let d1 = vsubq_f32(c, d);
+                let mut k0 = vaddq_f32(s0, s1);
+                let mut k1 = vaddq_f32(d0, d1);
+                let mut k2 = vsubq_f32(s0, s1);
+                let mut k3 = vsubq_f32(d0, d1);
+                if scaled {
+                    k0 = vmulq_n_f32(k0, s);
+                    k1 = vmulq_n_f32(k1, s);
+                    k2 = vmulq_n_f32(k2, s);
+                    k3 = vmulq_n_f32(k3, s);
+                }
+                vst1q_f32(r0.as_mut_ptr().add(i), k0);
+                vst1q_f32(r1.as_mut_ptr().add(i), k1);
+                vst1q_f32(r2.as_mut_ptr().add(i), k2);
+                vst1q_f32(r3.as_mut_ptr().add(i), k3);
+            }
+            i += 4;
+        }
+        if scaled {
+            super::bf4::<true>(&mut r0[i..], &mut r1[i..], &mut r2[i..], &mut r3[i..], s);
+        } else {
+            super::bf4::<false>(&mut r0[i..], &mut r1[i..], &mut r2[i..], &mut r3[i..], 1.0);
+        }
+    }
+
+    /// In-register stage h = 1 over one 4-float vector holding two
+    /// adjacent (a, b) butterflies (even lane a+b, odd lane a−b).
+    #[inline]
+    #[target_feature(enable = "neon")]
+    fn pairs_stage(v: float32x4_t) -> float32x4_t {
+        // swap adjacent pairs within each 64-bit half: (b0, a0, b1, a1)
+        let w = vrev64q_f32(v);
+        // odd lanes ← w−v = a−b; even lanes ← v+w = a+b
+        vbslq_f32(odd_mask(), vsubq_f32(w, v), vaddq_f32(v, w))
+    }
+
+    /// In-register stage h = 2 over one (s0, d0, s1, d1) quad.
+    #[inline]
+    #[target_feature(enable = "neon")]
+    fn quads_stage(u: float32x4_t) -> float32x4_t {
+        // rotate by two lanes: (s1, d1, s0, d0)
+        let w = vextq_f32::<2>(u, u);
+        // high lanes ← w−u = (s0−s1, d0−d1); low ← u+w = (s0+s1, d0+d1)
+        let high = vcombine_u32(vdup_n_u32(0), vdup_n_u32(0xFFFF_FFFF));
+        vbslq_f32(high, vsubq_f32(w, u), vaddq_f32(u, w))
+    }
+
+    /// Contiguous radix-2 first pass (adjacent pairs, stage h = 1).
+    #[target_feature(enable = "neon")]
+    pub(super) fn first2(x: &mut [f32], scaled: bool, s: f32) {
+        let n = x.len();
+        let mut i = 0;
+        while i + 4 <= n {
+            // SAFETY: `i + 4 <= n` bounds the load/store; the shuffle
+            // computes each adjacent pair's scalar butterfly.
+            unsafe {
+                let mut u = pairs_stage(vld1q_f32(x.as_ptr().add(i)));
+                if scaled {
+                    u = vmulq_n_f32(u, s);
+                }
+                vst1q_f32(x.as_mut_ptr().add(i), u);
+            }
+            i += 4;
+        }
+        super::first2_scalar(&mut x[i..], scaled, s);
+    }
+
+    /// Contiguous fused radix-4 first pass (adjacent quads, h = 1, 2).
+    #[target_feature(enable = "neon")]
+    pub(super) fn first4(x: &mut [f32], scaled: bool, s: f32) {
+        let n = x.len();
+        let mut i = 0;
+        while i + 4 <= n {
+            // SAFETY: `i + 4 <= n` bounds the load/store; the two
+            // in-register stages are the scalar radix-4 quad DAG.
+            unsafe {
+                let mut u = quads_stage(pairs_stage(vld1q_f32(x.as_ptr().add(i))));
+                if scaled {
+                    u = vmulq_n_f32(u, s);
+                }
+                vst1q_f32(x.as_mut_ptr().add(i), u);
+            }
+            i += 4;
+        }
+        super::first4_scalar(&mut x[i..], scaled, s);
+    }
+
+    /// Fused-load radix-2 first pass: butterflies over `w[i]·d[i]`.
+    #[target_feature(enable = "neon")]
+    pub(super) fn wd_first2(w: &[f32], d: &[f32], x: &mut [f32], scaled: bool, s: f32) {
+        debug_assert!(w.len() == x.len() && d.len() == x.len());
+        let n = x.len();
+        let mut i = 0;
+        while i + 4 <= n {
+            // SAFETY: `i + 4 <= n` bounds all three accesses (`w`, `d`
+            // and `x` have equal length).
+            unsafe {
+                let wv = vmulq_f32(vld1q_f32(w.as_ptr().add(i)), vld1q_f32(d.as_ptr().add(i)));
+                let mut u = pairs_stage(wv);
+                if scaled {
+                    u = vmulq_n_f32(u, s);
+                }
+                vst1q_f32(x.as_mut_ptr().add(i), u);
+            }
+            i += 4;
+        }
+        super::wd_first2_scalar(&w[i..], &d[i..], &mut x[i..], scaled, s);
+    }
+
+    /// Fused-load radix-4 first pass: two stages over `w[i]·d[i]`.
+    #[target_feature(enable = "neon")]
+    pub(super) fn wd_first4(w: &[f32], d: &[f32], x: &mut [f32], scaled: bool, s: f32) {
+        debug_assert!(w.len() == x.len() && d.len() == x.len());
+        let n = x.len();
+        let mut i = 0;
+        while i + 4 <= n {
+            // SAFETY: `i + 4 <= n` bounds all three accesses (`w`, `d`
+            // and `x` have equal length).
+            unsafe {
+                let wv = vmulq_f32(vld1q_f32(w.as_ptr().add(i)), vld1q_f32(d.as_ptr().add(i)));
+                let mut u = quads_stage(pairs_stage(wv));
+                if scaled {
+                    u = vmulq_n_f32(u, s);
+                }
+                vst1q_f32(x.as_mut_ptr().add(i), u);
+            }
+            i += 4;
+        }
+        super::wd_first4_scalar(&w[i..], &d[i..], &mut x[i..], scaled, s);
+    }
+}
+
+// ---------------------------------------------------------------------
 // serial drivers
 // ---------------------------------------------------------------------
 
@@ -543,19 +1158,19 @@ pub fn fwht_with_tile(x: &mut [f32], tile: usize, normalized: bool) {
     assert_pow2(x.len());
     assert!(tile.is_power_of_two(), "tile must be a power of two, got {tile}");
     let scale = normalized.then(|| inv_sqrt_scale(x.len()));
-    blocked_impl(x, Schedule { tile, strip: STRIP }, scale);
+    blocked_impl(x, Schedule { tile, strip: STRIP, isa: active_isa() }, scale);
 }
 
 fn blocked_impl(x: &mut [f32], sched: Schedule, scale: Option<f32>) {
     let n = x.len();
     if n <= sched.tile {
-        tile_fwht(x, scale);
+        tile_fwht(sched.isa, x, scale);
         return;
     }
     for t in x.chunks_exact_mut(sched.tile) {
-        tile_fwht(t, None);
+        tile_fwht(sched.isa, t, None);
     }
-    cross_pass(x, sched.tile, sched.strip, scale);
+    cross_pass(sched.isa, x, sched.tile, sched.strip, scale);
 }
 
 /// Unnormalized blocked FWHT — bit-identical to `fwht::scalar::fwht_inplace`.
@@ -570,6 +1185,16 @@ pub fn fwht_blocked(x: &mut [f32]) {
 pub fn fwht_blocked_normalized(x: &mut [f32]) {
     assert_pow2(x.len());
     blocked_impl(x, Schedule::for_len(x.len()), Some(inv_sqrt_scale(x.len())));
+}
+
+/// [`fwht_blocked_normalized`] pinned to an explicit dispatch level
+/// instead of the process-wide [`active_isa`] — the hook the ISA-sweep
+/// property tests and the `bench_fwht` simd-vs-scalar rows use. `isa`
+/// must be executable on this machine (see [`Isa::available`]).
+pub fn fwht_blocked_normalized_isa(x: &mut [f32], isa: Isa) {
+    assert_pow2(x.len());
+    let sched = Schedule { isa, ..Schedule::for_len(x.len()) };
+    blocked_impl(x, sched, Some(inv_sqrt_scale(x.len())));
 }
 
 /// Fused SRHT rotate: `out ← (H/√n′)·(D ∘ pad(w))` with the D·pad
@@ -589,15 +1214,15 @@ fn rotate_impl(w: &[f32], dsign: &[f32], out: &mut [f32], sched: Schedule) {
     let scale = Some(inv_sqrt_scale(npad));
     let tile = sched.tile;
     if npad <= tile {
-        tile_fwht_wd(w, dsign, out, scale);
+        tile_fwht_wd(sched.isa, w, dsign, out, scale);
         return;
     }
     for (ti, t) in out.chunks_exact_mut(tile).enumerate() {
         let lo = (ti * tile).min(w.len());
         let hi = ((ti + 1) * tile).min(w.len());
-        tile_fwht_wd(&w[lo..hi], &dsign[ti * tile..(ti + 1) * tile], t, None);
+        tile_fwht_wd(sched.isa, &w[lo..hi], &dsign[ti * tile..(ti + 1) * tile], t, None);
     }
-    cross_pass(out, tile, sched.strip, scale);
+    cross_pass(sched.isa, out, tile, sched.strip, scale);
 }
 
 // ---------------------------------------------------------------------
@@ -655,9 +1280,9 @@ fn threaded_impl(x: &mut [f32], threads: usize, scale: Option<f32>) {
         return;
     }
     let tiles: Vec<&mut [f32]> = x.chunks_mut(sched.tile).collect();
-    par_map(tiles, threads, |_, t| tile_fwht(t, None));
+    par_map(tiles, threads, |_, t| tile_fwht(sched.isa, t, None));
     let bands = build_bands(x, sched.tile, threads);
-    par_map(bands, threads, |_, mut rows| cross_rows(&mut rows, sched.strip, scale));
+    par_map(bands, threads, |_, mut rows| cross_rows(sched.isa, &mut rows, sched.strip, scale));
 }
 
 /// Split the (n/c) × c matrix view of `x` into `nbands` disjoint column
@@ -726,12 +1351,15 @@ pub struct Schedule {
     pub tile: usize,
     /// columns per cross-phase strip
     pub strip: usize,
+    /// butterfly lane-kernel dispatch level every pass runs at
+    pub isa: Isa,
 }
 
 impl Schedule {
-    /// Factorize a transform length into the blocked execution plan.
+    /// Factorize a transform length into the blocked execution plan at
+    /// the process-wide [`active_isa`] dispatch level.
     pub fn for_len(npad: usize) -> Schedule {
-        Schedule { tile: npad.min(TILE), strip: STRIP }
+        Schedule { tile: npad.min(TILE), strip: STRIP, isa: active_isa() }
     }
 }
 
@@ -752,6 +1380,15 @@ impl SketchPlan {
         assert!(npad > 0);
         assert_pow2(npad);
         SketchPlan { npad, schedule: Schedule::for_len(npad), scratch: AlignedBuf::new(npad) }
+    }
+
+    /// [`Self::new`] pinned to an explicit dispatch level — the hook
+    /// the ISA-sweep property tests use. `isa` must be executable on
+    /// this machine (see [`Isa::available`]).
+    pub fn with_isa(npad: usize, isa: Isa) -> SketchPlan {
+        let mut plan = SketchPlan::new(npad);
+        plan.schedule.isa = isa;
+        plan
     }
 
     /// The transform length n′ this plan was built for.
@@ -939,7 +1576,12 @@ mod tests {
             let mut got = vec![0.0f32; npad];
             // dirty the output to prove every lane is written
             got.iter_mut().for_each(|v| *v = f32::NAN);
-            let sched = Schedule { tile: 1 << rng.below(7), strip: 1 << rng.below(5) };
+            let isas = Isa::available();
+            let sched = Schedule {
+                tile: 1 << rng.below(7),
+                strip: 1 << rng.below(5),
+                isa: isas[rng.below(isas.len())],
+            };
             rotate_impl(&w, &d, &mut got, sched);
             for i in 0..npad {
                 if got[i].to_bits() != want[i].to_bits() {
@@ -1075,5 +1717,80 @@ mod tests {
     fn rejects_non_pow2() {
         let mut x = vec![0.0f32; 24];
         fwht_blocked(&mut x);
+    }
+
+    #[test]
+    fn every_available_isa_matches_scalar_oracle_bitwise() {
+        // every dispatch level this machine can run, against the scalar
+        // reference, at every size from n' = 1 (trivial) through odd/even
+        // stage counts, SIMD-tail sizes, and a multi-tile 2^13 — both
+        // normalized and not
+        let mut rng = Rng::new(47);
+        for &isa in &Isa::available() {
+            for lg in 0..=13 {
+                let n = 1usize << lg;
+                let x = randvec(&mut rng, n);
+                let mut want = x.clone();
+                scalar::fwht_normalized(&mut want);
+                let mut got = x.clone();
+                fwht_blocked_normalized_isa(&mut got, isa);
+                assert_bits_eq(&got, &want, &format!("isa={} normalized n={n}", isa.name()));
+
+                let mut wantu = x.clone();
+                scalar::fwht_inplace(&mut wantu);
+                let mut gotu = x;
+                blocked_impl(&mut gotu, Schedule { isa, ..Schedule::for_len(n) }, None);
+                assert_bits_eq(&gotu, &wantu, &format!("isa={} unnorm n={n}", isa.name()));
+            }
+        }
+    }
+
+    #[test]
+    fn isa_sweep_rotate_plan_property() {
+        // the fused D·pad path (partial and full tiles) and the planned
+        // adjoint/transform paths, at every executable dispatch level
+        check("kernel_isa_sweep", 40, |rng| {
+            let isas = Isa::available();
+            let isa = isas[rng.below(isas.len())];
+            let npad = 1usize << rng.below(14);
+            let n = rng.below(npad) + 1;
+            let w: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let d = rng.rademacher(npad);
+            let mut want = vec![0.0f32; npad];
+            for i in 0..n {
+                want[i] = w[i] * d[i];
+            }
+            scalar::fwht_normalized(&mut want);
+            let mut plan = SketchPlan::with_isa(npad, isa);
+            let got = plan.rotate_normalized(&w, &d).to_vec();
+            for i in 0..npad {
+                if got[i].to_bits() != want[i].to_bits() {
+                    return Err(format!("isa={} npad={npad} n={n} lane {i}", isa.name()));
+                }
+            }
+            let y: Vec<f32> = (0..npad).map(|_| rng.normal()).collect();
+            let mut wanty = y.clone();
+            scalar::fwht_normalized(&mut wanty);
+            let goty = plan.transform_normalized(&y).to_vec();
+            for i in 0..npad {
+                if goty[i].to_bits() != wanty[i].to_bits() {
+                    return Err(format!("isa={} transform npad={npad} lane {i}", isa.name()));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn isa_env_names_round_trip_and_reject_unknown() {
+        for &isa in &Isa::available() {
+            assert_eq!(Isa::from_env_name(isa.name()), Ok(isa));
+            // parsing is trimmed and case-insensitive
+            assert_eq!(Isa::from_env_name(&format!(" {} ", isa.name().to_uppercase())), Ok(isa));
+        }
+        assert!(Isa::from_env_name("sse9").is_err());
+        assert!(Isa::from_env_name("").is_err());
+        // the active level is always one this machine can execute
+        assert!(Isa::available().contains(&active_isa()));
     }
 }

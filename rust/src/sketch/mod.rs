@@ -14,11 +14,11 @@ pub mod srht;
 
 pub use bitpack::{
     hamming_packed, majority_vote_uniform, majority_vote_weighted, pack_signs, packed_bytes,
-    quantize_weight, unpack_signs, ScalarTally, SignVec, VoteAccumulator,
+    quantize_weight, unpack_signs, ScalarTally, SignVec, SignVecView, VoteAccumulator,
 };
 pub use fwht::{fwht_inplace, fwht_normalized};
 pub use kernel::{
-    fwht_batch, fwht_batch_threaded, fwht_threaded, fwht_threaded_normalized, with_plan,
-    Schedule, SketchPlan,
+    active_isa, fwht_batch, fwht_batch_threaded, fwht_blocked_normalized_isa, fwht_threaded,
+    fwht_threaded_normalized, with_plan, Isa, Schedule, SketchPlan,
 };
 pub use srht::{DenseGaussianOperator, Projection, SrhtOperator};

@@ -23,7 +23,7 @@
 
 use crate::coordinator::parallel::par_map;
 use crate::sketch::bitpack::SignVec;
-use crate::sketch::kernel::{fwht_rotate_normalized, with_plan};
+use crate::sketch::kernel::{fwht_rotate_normalized, with_plan, Isa};
 use crate::util::rng::Rng;
 
 /// A concrete realization of the structured projection.
@@ -85,10 +85,9 @@ impl SrhtOperator {
     pub fn sketch_sign_packed(&self, w: &[f32]) -> SignVec {
         self.check_input(w);
         with_plan(self.npad, |plan| {
+            let isa = plan.schedule().isa;
             let buf = plan.rotate_normalized(w, &self.dsign);
-            // same comparison as `sketch_sign`: sign of the *scaled*
-            // coordinate (scale > 0, kept for exact f32 parity)
-            SignVec::from_fn(self.m, |j| buf[self.sidx[j] as usize] * self.scale >= 0.0)
+            pack_signs_scaled(isa, buf, &self.sidx, self.scale, self.m)
         })
     }
 
@@ -178,6 +177,59 @@ impl SrhtOperator {
             .map(|&i| buf[i as usize] * self.scale)
             .collect()
     }
+}
+
+/// Subsample + scale + sign-pack straight off the rotated buffer, at the
+/// schedule's dispatch level. The comparison is the same as
+/// `sketch_sign`: sign of the *scaled* coordinate (scale > 0, kept for
+/// exact f32 parity), bit set ⇔ sign is +1 (sign(0) := +1). Every level
+/// is bit-identical — the AVX2 gather path evaluates the identical
+/// per-lane `buf[idx]·scale >= 0.0` predicate.
+fn pack_signs_scaled(isa: Isa, buf: &[f32], sidx: &[u32], scale: f32, m: usize) -> SignVec {
+    debug_assert_eq!(sidx.len(), m);
+    #[cfg(target_arch = "x86_64")]
+    if isa == Isa::Avx2 {
+        // SAFETY: `Isa::Avx2` is only constructed after
+        // `is_x86_feature_detected!("avx2")` returned true.
+        return unsafe { pack_signs_avx2(buf, sidx, scale, m) };
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = isa; // no gather unit on NEON — the packed loop stays scalar
+    SignVec::from_fn(m, |j| buf[sidx[j] as usize] * scale >= 0.0)
+}
+
+/// AVX2 gather + compare + movemask sign-pack: 8 sampled lanes per
+/// iteration, writing whole 8-bit groups into the packed words (a group
+/// never straddles a word since 64 % 8 == 0).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+fn pack_signs_avx2(buf: &[f32], sidx: &[u32], scale: f32, m: usize) -> SignVec {
+    use std::arch::x86_64::*;
+    let mut words = vec![0u64; m.div_ceil(64)];
+    let mut j = 0;
+    while j + 8 <= m {
+        // SAFETY: `j + 8 <= m = sidx.len()` bounds the index load, and
+        // every `sidx` entry is a row index < buf.len() (operator
+        // invariant: distinct samples below n′), so the gather reads in
+        // bounds. `_CMP_GE_OQ` is exactly Rust's `>= 0.0` (quiet
+        // ordered: NaN → false, -0.0 >= 0.0 → true) and movemask bit i
+        // is lane i's comparison mask MSB.
+        unsafe {
+            let idx = _mm256_loadu_si256(sidx.as_ptr().add(j).cast());
+            let vals = _mm256_i32gather_ps::<4>(buf.as_ptr(), idx);
+            let scaled = _mm256_mul_ps(vals, _mm256_set1_ps(scale));
+            let ge = _mm256_cmp_ps::<_CMP_GE_OQ>(scaled, _mm256_setzero_ps());
+            let bits = _mm256_movemask_ps(ge) as u32 as u64;
+            words[j / 64] |= bits << (j % 64);
+        }
+        j += 8;
+    }
+    for k in j..m {
+        if buf[sidx[k] as usize] * scale >= 0.0 {
+            words[k / 64] |= 1u64 << (k % 64);
+        }
+    }
+    SignVec::from_words(words, m)
 }
 
 /// Dense Gaussian projection baseline for Appendix Fig. 3: Φ_gauss with
@@ -614,6 +666,34 @@ mod tests {
             if m % 64 != 0 {
                 let last = *packed.words().last().unwrap();
                 assert_eq!(last >> (m % 64), 0, "dirty tail at m={m}");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_sign_isa_sweep_bit_identity() {
+        // the gather/compare/movemask pack against the scalar from_fn
+        // predicate at every executable dispatch level, across word
+        // geometries (sub-word, exact word, word+1, tails < 8 lanes)
+        // and the -0.0 / +0.0 sign(0) := +1 edge
+        let mut rng = crate::util::rng::Rng::new(91);
+        for &isa in &Isa::available() {
+            for m in [1usize, 7, 8, 63, 64, 65, 200] {
+                let npad = 256usize;
+                let mut buf: Vec<f32> = (0..npad).map(|_| rng.normal()).collect();
+                buf[0] = 0.0;
+                buf[1] = -0.0;
+                let mut idx: Vec<u32> = (0..npad as u32).collect();
+                for i in (1..idx.len()).rev() {
+                    let j = rng.below(i + 1);
+                    idx.swap(i, j);
+                }
+                idx.truncate(m);
+                let scale = 1.7f32;
+                let want = SignVec::from_fn(m, |j| buf[idx[j] as usize] * scale >= 0.0);
+                let got = pack_signs_scaled(isa, &buf, &idx, scale, m);
+                assert_eq!(got.m(), m, "isa={} m={m}", isa.name());
+                assert_eq!(got.words(), want.words(), "isa={} m={m}", isa.name());
             }
         }
     }

@@ -19,11 +19,14 @@ use super::rng::Rng;
 /// Run `cases` random trials of `prop`; panic with replay info on failure.
 ///
 /// The per-case RNG is derived from the property name so adding cases to
-/// one property does not shift the random streams of another.
+/// one property does not shift the random streams of another. The case
+/// count can be capped globally (`PFED1BS_PROPTEST_CASES`) and is
+/// clamped automatically under Miri — see [`effective_cases`].
 pub fn check<F>(name: &str, cases: usize, mut prop: F)
 where
     F: FnMut(&mut Rng) -> Result<(), String>,
 {
+    let cases = effective_cases(cases);
     let base = fnv1a(name.as_bytes());
     for case in 0..cases {
         let child_seed = base ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
@@ -35,6 +38,23 @@ where
             );
         }
     }
+}
+
+/// The case count [`check`] actually runs: `PFED1BS_PROPTEST_CASES`
+/// caps every property when set (first, so a forwarded env var can
+/// raise a Miri run too); otherwise Miri runs are clamped to 3 cases —
+/// the interpreter is ~1000× slower, and the UB check the Miri CI job
+/// exists for needs each unsafe path walked, not many random repeats.
+pub fn effective_cases(cases: usize) -> usize {
+    if let Some(cap) =
+        std::env::var("PFED1BS_PROPTEST_CASES").ok().and_then(|v| v.parse::<usize>().ok())
+    {
+        return cases.min(cap.max(1));
+    }
+    if cfg!(miri) {
+        return cases.min(3);
+    }
+    cases
 }
 
 /// Replay a single failing case by seed.
@@ -66,7 +86,18 @@ mod tests {
             ran += 1;
             Ok(())
         });
-        assert_eq!(ran, 25);
+        // the clamp applies under Miri / a global case cap
+        assert_eq!(ran, effective_cases(25));
+        assert!(ran > 0);
+    }
+
+    #[test]
+    fn case_clamp_shape() {
+        // 0 stays 0 regardless of environment; Miri clamps to a handful
+        assert_eq!(effective_cases(0), 0);
+        if cfg!(miri) {
+            assert!(effective_cases(1000) <= 3);
+        }
     }
 
     #[test]
