@@ -86,6 +86,59 @@ fn main() {
                     .unwrap(),
             );
         });
+
+        // Mega-batched dispatch (DESIGN.md §15): one device execute
+        // advances B clients per local step. The B=1 row anchors on the
+        // unbatched client_round; throughput is client-steps/sec, so
+        // the B→1 dispatch reduction shows up directly across rows.
+        b.bench_elems(&format!("{variant}/batched_B1_R10 (per-round)"), 10, || {
+            black_box(
+                model
+                    .client_round(
+                        &w,
+                        || (x.clone(), y.clone()),
+                        10,
+                        &v,
+                        0.05,
+                        5e-4,
+                        1e-5,
+                        1e4,
+                    )
+                    .unwrap(),
+            );
+        });
+        for bw in [8usize, 32, 64] {
+            if !rt.manifest.batch_sizes(variant).contains(&bw) {
+                eprintln!(
+                    "skipping {variant}/batched_B{bw}: manifest has no batch={bw} family \
+                     (re-run `make artifacts`)"
+                );
+                continue;
+            }
+            let bmodel = rt.model_with_batch(variant, &op, bw).expect("batched model");
+            let ws: Vec<&[f32]> = vec![&w[..]; bw];
+            let vs: Vec<&[f32]> = vec![&v[..]; bw];
+            b.bench_elems(
+                &format!("{variant}/batched_B{bw}_R10 (per-round)"),
+                (bw * 10) as u64,
+                || {
+                    black_box(
+                        bmodel
+                            .client_round_batched(
+                                &ws,
+                                &vs,
+                                |_| (x.clone(), y.clone()),
+                                10,
+                                0.05,
+                                5e-4,
+                                1e-5,
+                                1e4,
+                            )
+                            .unwrap(),
+                    );
+                },
+            );
+        }
     }
     b.report();
     b.emit_json("client_step");

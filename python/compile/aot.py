@@ -82,6 +82,44 @@ def lower_variant(variant: model.ModelVariant, out_dir: str, manifest: list) -> 
         print(f"  {status} {fname} ({len(text)} chars)", file=sys.stderr)
 
 
+def lower_variant_batched(
+    variant: model.ModelVariant, b: int, out_dir: str, manifest: list
+) -> None:
+    """Lower the cohort-batched artifact family at batch width ``b``.
+
+    Rows carry an extra ``batch=B`` key; unbatched rows keep the exact
+    legacy key set so pre-batch manifest parsers stay compatible.
+    """
+    shapes = model.batched_shapes(variant, b)
+    fns = model.batched_fns(variant)
+    for fn_name, args in shapes.items():
+        lowered = jax.jit(fns[fn_name]).lower(*args)
+        # *_w artifacts return one array and are lowered tuple-free
+        text = to_hlo_text(lowered, return_tuple=not fn_name.endswith("_w"))
+        fname = f"{fn_name}_b{b}_{variant.name}.hlo.txt"
+        path = os.path.join(out_dir, fname)
+        changed = write_if_changed(path, text)
+        digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+        manifest.append(
+            dict(
+                artifact=fn_name,
+                variant=variant.name,
+                file=fname,
+                n=variant.n_params,
+                npad=variant.n_pad,
+                m=variant.sketch_dim,
+                input_dim=variant.input_dim,
+                classes=variant.classes,
+                train_batch=model.TRAIN_BATCH,
+                eval_batch=model.EVAL_BATCH,
+                batch=b,
+                sha256=digest,
+            )
+        )
+        status = "wrote" if changed else "unchanged"
+        print(f"  {status} {fname} ({len(text)} chars)", file=sys.stderr)
+
+
 def format_manifest(entries: list) -> str:
     """Line-oriented ``key=value`` records; one artifact per line.
 
@@ -92,9 +130,11 @@ def format_manifest(entries: list) -> str:
         "artifact", "variant", "file", "n", "npad", "m",
         "input_dim", "classes", "train_batch", "eval_batch", "sha256",
     ]
+    batched_keys = keys[:-1] + ["batch", "sha256"]
     lines = ["# pfed1bs artifact manifest v1"]
     for e in entries:
-        lines.append(" ".join(f"{k}={e[k]}" for k in keys))
+        ks = batched_keys if "batch" in e else keys
+        lines.append(" ".join(f"{k}={e[k]}" for k in ks))
     return "\n".join(lines) + "\n"
 
 
@@ -105,7 +145,16 @@ def main() -> None:
     ap.add_argument(
         "--variants", default=",".join(model.VARIANTS), help="comma-separated subset"
     )
+    ap.add_argument(
+        "--batch-sizes",
+        default=",".join(str(b) for b in model.BATCH_SIZES),
+        help="comma-separated cohort batch widths for the *_batched family (empty to skip)",
+    )
     args = ap.parse_args()
+
+    batch_sizes = [int(b) for b in args.batch_sizes.split(",") if b.strip()]
+    if any(b < 1 for b in batch_sizes):
+        ap.error("--batch-sizes entries must be positive integers")
 
     os.makedirs(args.out_dir, exist_ok=True)
     manifest: list = []
@@ -116,6 +165,9 @@ def main() -> None:
             file=sys.stderr,
         )
         lower_variant(variant, args.out_dir, manifest)
+        for b in batch_sizes:
+            print(f"[aot] {name}: batched family at B={b}", file=sys.stderr)
+            lower_variant_batched(variant, b, args.out_dir, manifest)
     write_if_changed(os.path.join(args.out_dir, "manifest.txt"), format_manifest(manifest))
     print(f"[aot] manifest: {len(manifest)} artifacts", file=sys.stderr)
 

@@ -223,6 +223,40 @@ def grad_norm(
     return (jnp.sum(g * g),)
 
 
+# Cohort batch widths lowered by default (DESIGN.md §15). The rust runtime
+# picks the largest width <= the configured device_batch and pads short
+# tails, so this list only needs to cover the sweep/bench points.
+BATCH_SIZES = (4, 8, 32, 64)
+
+
+def client_step_batched(variant: ModelVariant, w, x, y, v, dsign, sidx, eta, lam, mu, gamma):
+    """``client_step`` vmapped over a leading cohort axis B.
+
+    Per-client state (w, data tile, personal sketch v) carries the batch
+    axis; the shared SRHT operator (dsign, sidx) and the hyperparameter
+    scalars are broadcast. vmap only stacks B independent per-client op
+    DAGs — no cross-lane ops are introduced — which is the bit-identity
+    argument of DESIGN.md §15. Returns (w' [B,n], loss [B]).
+    """
+    return jax.vmap(
+        lambda wb, xb, yb, vb: client_step(variant, wb, xb, yb, vb, dsign, sidx, eta, lam, mu, gamma)
+    )(w, x, y, v)
+
+
+def client_step_batched_w(variant: ModelVariant, w, x, y, v, dsign, sidx, eta, lam, mu, gamma):
+    """``client_step_batched`` returning ONLY the stacked w' — lowered
+    tuple-free so the [B,n] weight buffer stays device-resident across
+    all R local steps, exactly like the unbatched ``client_step_w``."""
+    return jax.vmap(
+        lambda wb, xb, yb, vb: client_step_w(variant, wb, xb, yb, vb, dsign, sidx, eta, lam, mu, gamma)
+    )(w, x, y, v)
+
+
+def sketch_batched(variant: ModelVariant, w, dsign, sidx):
+    """One-bit sketches for a stacked cohort: sign(Phi w_k) per lane."""
+    return (jax.vmap(lambda wb: sketch(variant, wb, dsign, sidx)[0])(w),)
+
+
 def example_shapes(variant: ModelVariant):
     """ShapeDtypeStructs for lowering each artifact of this variant."""
     f32, i32 = jnp.float32, jnp.int32
@@ -248,6 +282,30 @@ def example_shapes(variant: ModelVariant):
     }
 
 
+def batched_shapes(variant: ModelVariant, b: int):
+    """ShapeDtypeStructs for the cohort-batched artifacts at width ``b``.
+
+    Only the per-client arguments (w, data tile, v) gain the leading B
+    axis; the shared operator and scalars keep the unbatched shapes, so
+    the rust runtime reuses its existing dsign/sidx device uploads.
+    """
+    f32, i32 = jnp.float32, jnp.int32
+    s = jax.ShapeDtypeStruct
+    n, npad, m, d = variant.n_params, variant.n_pad, variant.sketch_dim, variant.input_dim
+    w = s((b, n), f32)
+    xb = s((b, TRAIN_BATCH, d), f32)
+    yb = s((b, TRAIN_BATCH), i32)
+    v = s((b, m), f32)
+    dsign = s((npad,), f32)
+    sidx = s((m,), i32)
+    scalar = s((), f32)
+    return {
+        "client_step_batched": (w, xb, yb, v, dsign, sidx, scalar, scalar, scalar, scalar),
+        "client_step_batched_w": (w, xb, yb, v, dsign, sidx, scalar, scalar, scalar, scalar),
+        "sketch_batched": (w, dsign, sidx),
+    }
+
+
 def artifact_fns(variant: ModelVariant):
     """name -> python callable, closed over the variant."""
     return {
@@ -258,4 +316,13 @@ def artifact_fns(variant: ModelVariant):
         "sketch": lambda *a: sketch(variant, *a),
         "eval": lambda *a: eval_batch(variant, *a),
         "grad_norm": lambda *a: grad_norm(variant, *a),
+    }
+
+
+def batched_fns(variant: ModelVariant):
+    """name -> python callable for the cohort-batched artifact family."""
+    return {
+        "client_step_batched": lambda *a: client_step_batched(variant, *a),
+        "client_step_batched_w": lambda *a: client_step_batched_w(variant, *a),
+        "sketch_batched": lambda *a: sketch_batched(variant, *a),
     }

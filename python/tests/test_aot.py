@@ -32,9 +32,13 @@ def manifest_rows():
     return rows
 
 
+BATCHED_KINDS = {"client_step_batched", "client_step_batched_w", "sketch_batched"}
+
+
 def test_manifest_covers_all_variants_and_fns():
     rows = manifest_rows()
-    got = {(r["artifact"], r["variant"]) for r in rows}
+    unbatched = [r for r in rows if "batch" not in r]
+    got = {(r["artifact"], r["variant"]) for r in unbatched}
     want = {
         (fn, v)
         for v in model.VARIANTS
@@ -49,6 +53,27 @@ def test_manifest_covers_all_variants_and_fns():
         )
     }
     assert got == want
+
+
+def test_batched_manifest_rows_form_complete_families():
+    """Every batched row carries batch=B >= 1, and for each (variant, B)
+    all three batched kinds are present — the rust loader only advertises
+    complete families (manifest.rs batch_sizes)."""
+    batched = [r for r in manifest_rows() if "batch" in r]
+    if not batched:
+        pytest.skip("no batched artifacts in manifest")
+    assert {r["artifact"] for r in batched} <= BATCHED_KINDS
+    families = {}
+    for r in batched:
+        b = int(r["batch"])
+        assert b >= 1, r
+        assert r["variant"] in model.VARIANTS
+        families.setdefault((r["variant"], b), set()).add(r["artifact"])
+    for (variant, b), arts in families.items():
+        assert arts == BATCHED_KINDS, f"incomplete family {variant} batch={b}: {arts}"
+    # the default lowering emits every width in model.BATCH_SIZES
+    widths = {b for (_, b) in families}
+    assert widths <= set(model.BATCH_SIZES) | {1}
 
 
 def test_manifest_files_exist_and_hashes_match():
@@ -138,3 +163,45 @@ def test_step_w_matches_client_step_w_component():
     w_a, _ = model.client_step(v, *args)
     w_b = model.client_step_w(v, *args)
     np.testing.assert_allclose(np.asarray(w_a), np.asarray(w_b), rtol=0, atol=0)
+
+
+def _entry_param_shapes(text):
+    """(dtype, dims) per ENTRY parameter, in parameter-index order."""
+    entry = re.search(r"ENTRY .*?\{(.*?)ROOT", text, re.S)
+    assert entry is not None
+    params = {}
+    for m in re.finditer(
+        r"= (\w+)\[([\d,]*)\][^=\n]*parameter\((\d+)\)", entry.group(1)
+    ):
+        dims = tuple(int(d) for d in m.group(2).split(",") if d)
+        params[int(m.group(3))] = (m.group(1), dims)
+    return [params[i] for i in sorted(params)]
+
+
+def test_batched_b1_lowering_matches_unbatched_shape_for_shape():
+    """vmap at B=1 must add exactly a leading 1-axis to the per-client
+    params (w, x, y, v) and leave the shared params (dsign, sidx,
+    scalars) untouched — the shape-level half of the bit-identity
+    contract (the numeric half runs in rust/tests/integration_batched.rs)."""
+    import jax
+
+    v = model.ModelVariant("detb1", 16, (8,), 3)
+    ub = aot.to_hlo_text(
+        jax.jit(model.artifact_fns(v)["client_step"]).lower(
+            *model.example_shapes(v)["client_step"]
+        )
+    )
+    bt = aot.to_hlo_text(
+        jax.jit(model.batched_fns(v)["client_step_batched"]).lower(
+            *model.batched_shapes(v, 1)["client_step_batched"]
+        )
+    )
+    ub_params = _entry_param_shapes(ub)
+    bt_params = _entry_param_shapes(bt)
+    assert len(ub_params) == len(bt_params) == 10
+    for i, (u, b) in enumerate(zip(ub_params, bt_params)):
+        assert u[0] == b[0], f"param {i} dtype"
+        if i < 4:  # w, x, y, v gain the cohort axis
+            assert b[1] == (1,) + u[1], f"param {i}: {b[1]} vs {u[1]}"
+        else:  # dsign, sidx, eta, lam, mu, gamma are shared
+            assert b[1] == u[1], f"param {i}: {b[1]} vs {u[1]}"

@@ -103,6 +103,33 @@ pub struct ClientCtx<'a> {
     pub rng: Rng,
 }
 
+/// One client's inputs to a device-batched client phase: the same
+/// (client id, pre-forked RNG stream, delivered downlink) triple the
+/// coordinator hands to [`Algorithm::client_round`] through a
+/// [`ClientCtx`], but owned so a whole group can be passed at once.
+pub struct BatchTask {
+    /// client id
+    pub k: usize,
+    /// this client's own pre-forked RNG stream (forked by the coordinator
+    /// in selection order, identical to the per-client path)
+    pub rng: Rng,
+    /// the downlink copy this client's channel delivered
+    pub downlink: Option<Downlink>,
+}
+
+/// Shared (RNG-free) context for a device-batched client phase; per-client
+/// RNG streams ride in each [`BatchTask`].
+pub struct BatchCtx<'a> {
+    /// compiled model runtime (shared, `&self` execution)
+    pub model: &'a ModelRuntime,
+    /// the generated federated dataset
+    pub data: &'a FederatedData,
+    /// the run configuration
+    pub cfg: &'a RunConfig,
+    /// rust-side mirror of Φ
+    pub projection: &'a Projection,
+}
+
 /// Server-side aggregation context. Deliberately excludes the model
 /// runtime: server math is pure rust, which keeps the aggregation phase
 /// unit-testable without PJRT artifacts.
@@ -173,6 +200,43 @@ pub trait Algorithm: Send + Sync {
         downlink: Option<&Downlink>,
         ctx: &mut ClientCtx,
     ) -> Result<ClientOutput>;
+
+    /// True when this algorithm's [`Self::client_round_batched`] can pack
+    /// a whole group into the model runtime's cohort-batched executables
+    /// (one device dispatch per local step for up to B clients). The
+    /// coordinator only takes the batched path when this returns true AND
+    /// the loaded runtime carries batched executables
+    /// (`ModelRuntime::device_batch() > 1`); results must be bit-identical
+    /// to per-client execution.
+    fn supports_batched_rounds(&self) -> bool {
+        false
+    }
+
+    /// Phase 2 (batched): run a group of up to `device_batch` clients'
+    /// local rounds. The default just loops [`Self::client_round`] —
+    /// algorithms opting in via [`Self::supports_batched_rounds`] override
+    /// this with a stacked-dispatch implementation. Must return one
+    /// [`ClientOutput`] per task, in task order.
+    fn client_round_batched(
+        &self,
+        t: usize,
+        tasks: Vec<BatchTask>,
+        ctx: &BatchCtx,
+    ) -> Result<Vec<ClientOutput>> {
+        tasks
+            .into_iter()
+            .map(|task| {
+                let mut cctx = ClientCtx {
+                    model: ctx.model,
+                    data: ctx.data,
+                    cfg: ctx.cfg,
+                    projection: ctx.projection,
+                    rng: task.rng,
+                };
+                self.client_round(t, task.k, task.downlink.as_ref(), &mut cctx)
+            })
+            .collect()
+    }
 
     /// Phase 3a: create round `t`'s empty streaming aggregator (O(m) /
     /// O(n) state — DESIGN.md §9). `&self` because the engine begins

@@ -32,10 +32,10 @@
 
 use anyhow::Result;
 
-use crate::algorithms::common::{axpy, init_params, local_pfed_steps};
+use crate::algorithms::common::{axpy, hash3, init_params, local_pfed_steps};
 use crate::algorithms::{
-    AggKind, Algorithm, Capabilities, ClientCtx, ClientOutput, ClientStats, Downlink,
-    InitCtx, RoundAggregator, RoundOutcome, ServerCtx, Uplink,
+    AggKind, Algorithm, BatchCtx, BatchTask, Capabilities, ClientCtx, ClientOutput,
+    ClientStats, Downlink, InitCtx, RoundAggregator, RoundOutcome, ServerCtx, Uplink,
 };
 use crate::comm::Payload;
 use crate::config::ProjectionKind;
@@ -78,6 +78,81 @@ impl PFed1BS {
     pub fn with_state(wks: Vec<Vec<f32>>, v: Vec<f32>) -> Self {
         let v_packed = SignVec::from_signs(&v);
         PFed1BS { wks, v, v_packed, projection_kind: ProjectionKind::Fht }
+    }
+
+    /// Decode the consensus a client's channel delivered (f32 lanes at the
+    /// compute boundary); zeros when nothing came. Shared by the
+    /// per-client and batched client phases.
+    fn decode_v(&self, downlink: Option<&Downlink>) -> Result<Vec<f32>> {
+        match downlink {
+            Some(d) => {
+                let Payload::Signs(v) = &d.payload else {
+                    anyhow::bail!("pfed1bs downlink must be a sign payload");
+                };
+                Ok(v.to_signs())
+            }
+            None => Ok(vec![0.0f32; self.v.len()]),
+        }
+    }
+
+    /// One stacked group (≤ B tasks) through the cohort-batched
+    /// executables: one dispatch per local step + one for the sketches.
+    /// Each lane forks the SAME batch sub-stream tag off its task RNG as
+    /// `local_pfed_steps` does — that, plus vmap lane independence, is
+    /// what makes this bit-identical to the per-client path
+    /// (DESIGN.md §15).
+    fn run_batched_group(
+        &self,
+        t: usize,
+        group: Vec<BatchTask>,
+        ctx: &BatchCtx,
+    ) -> Result<Vec<ClientOutput>> {
+        let cfg = ctx.cfg;
+        let tb = ctx.model.geom.train_batch;
+        let ws: Vec<Vec<f32>> = group.iter().map(|task| self.wks[task.k].clone()).collect();
+        let vs: Vec<Vec<f32>> = group
+            .iter()
+            .map(|task| self.decode_v(task.downlink.as_ref()))
+            .collect::<Result<_>>()?;
+        let mut iters: Vec<BatchIter> = group
+            .iter()
+            .map(|task| {
+                let mut rng = task.rng.clone();
+                BatchIter::new(
+                    &ctx.data.clients[task.k],
+                    tb,
+                    rng.fork(hash3(task.k as u64, t as u64, 0x5046_4544)),
+                )
+            })
+            .collect();
+        let w_refs: Vec<&[f32]> = ws.iter().map(|w| w.as_slice()).collect();
+        let v_refs: Vec<&[f32]> = vs.iter().map(|v| v.as_slice()).collect();
+        let results = ctx.model.client_round_batched(
+            &w_refs,
+            &v_refs,
+            |lane| {
+                let (x, y) = iters[lane].next_batch();
+                (x.to_vec(), y.to_vec())
+            },
+            cfg.local_steps,
+            cfg.eta,
+            cfg.lambda,
+            cfg.mu,
+            cfg.gamma,
+        )?;
+        let w_new_refs: Vec<&[f32]> = results.iter().map(|(w, _)| w.as_slice()).collect();
+        let zs = ctx.model.sketch_sign_batched_packed(&w_new_refs)?;
+        Ok(group
+            .into_iter()
+            .zip(results)
+            .zip(zs)
+            .map(|((task, (w, loss)), z)| ClientOutput {
+                client: task.k,
+                uplink: Some(Uplink::new(t, Payload::Signs(z))),
+                state: Some(w),
+                stats: ClientStats { loss: loss as f64 },
+            })
+            .collect())
     }
 }
 
@@ -210,6 +285,45 @@ impl Algorithm for PFed1BS {
             state: Some(w),
             stats: ClientStats { loss },
         })
+    }
+
+    fn supports_batched_rounds(&self) -> bool {
+        // the dense-Gaussian ablation computes its regularizer in rust
+        // per client and has no stacked artifact — FHT only
+        self.projection_kind == ProjectionKind::Fht
+    }
+
+    fn client_round_batched(
+        &self,
+        t: usize,
+        tasks: Vec<BatchTask>,
+        ctx: &BatchCtx,
+    ) -> Result<Vec<ClientOutput>> {
+        let b = ctx.model.device_batch();
+        if self.projection_kind != ProjectionKind::Fht || b <= 1 {
+            // no stacked path available — fall back to the per-client loop
+            return tasks
+                .into_iter()
+                .map(|task| {
+                    let mut cctx = ClientCtx {
+                        model: ctx.model,
+                        data: ctx.data,
+                        cfg: ctx.cfg,
+                        projection: ctx.projection,
+                        rng: task.rng,
+                    };
+                    self.client_round(t, task.k, task.downlink.as_ref(), &mut cctx)
+                })
+                .collect();
+        }
+        let mut outputs = Vec::with_capacity(tasks.len());
+        let mut remaining = tasks;
+        while !remaining.is_empty() {
+            let tail = remaining.split_off(b.min(remaining.len()));
+            let group = std::mem::replace(&mut remaining, tail);
+            outputs.extend(self.run_batched_group(t, group, ctx)?);
+        }
+        Ok(outputs)
     }
 
     fn begin_aggregate(&self, _t: usize) -> RoundAggregator {

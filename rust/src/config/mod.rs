@@ -177,6 +177,12 @@ pub struct RunConfig {
     /// `PFED1BS_CLIENT_THREADS` env var, else available parallelism);
     /// results are bit-identical for any value
     pub client_threads: usize,
+    /// cohort device-batch width B: up to B clients advance per PJRT
+    /// dispatch through the `*_batched` artifacts (DESIGN.md §15).
+    /// 0 = auto: `PFED1BS_DEVICE_BATCH` env var, else 1. Like
+    /// `client_threads`, results are bit-identical for any value —
+    /// 1 runs today's per-client path byte-for-byte.
+    pub device_batch: usize,
     /// extra clients selected beyond S each round (over-selection: the
     /// round still closes after S deliveries, so stragglers beyond the
     /// target are cut — DESIGN.md §9). 0 = exactly S, the default.
@@ -265,6 +271,7 @@ impl RunConfig {
             // c = zsign_noise · mean|Δ| (see zsignfed.rs on why mean)
             zsign_noise: 2.0,
             client_threads: 0,
+            device_batch: 0,
             over_select: 0,
             deadline_ms: 0.0,
             dropout_prob: 0.0,
@@ -337,6 +344,7 @@ impl RunConfig {
             "server-lr" | "server_lr" => self.server_lr = num!(),
             "zsign-noise" | "zsign_noise" => self.zsign_noise = num!(),
             "threads" | "client-threads" | "client_threads" => self.client_threads = num!(),
+            "device-batch" | "device_batch" => self.device_batch = num!(),
             "over-select" | "over_select" => self.over_select = num!(),
             "deadline-ms" | "deadline_ms" => self.deadline_ms = num!(),
             "dropout-prob" | "dropout_prob" => self.dropout_prob = num!(),
@@ -469,6 +477,9 @@ impl RunConfig {
         if self.topology != Topology::Flat {
             s.push_str(&format!(" topology={}", self.topology.summary()));
         }
+        if self.effective_device_batch() > 1 {
+            s.push_str(&format!(" device-batch={}", self.effective_device_batch()));
+        }
         if self.has_scenario() {
             s.push_str(&format!(
                 " over={} deadline={}ms dropout={} latency={}",
@@ -512,6 +523,22 @@ impl RunConfig {
         } else {
             self.quorum.min(self.participating)
         }
+    }
+
+    /// The cohort device-batch width the runtime should load: the
+    /// `device_batch` knob, with 0 (auto) deferring to the
+    /// `PFED1BS_DEVICE_BATCH` env var and finally to 1 (per-client
+    /// dispatch, today's path). A perf knob like `client_threads` — it is
+    /// NOT a scenario and never changes results.
+    pub fn effective_device_batch(&self) -> usize {
+        if self.device_batch > 0 {
+            return self.device_batch;
+        }
+        std::env::var("PFED1BS_DEVICE_BATCH")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .filter(|&b| b >= 1)
+            .unwrap_or(1)
     }
 
     /// Does the quorum knob actually close rounds early? An explicit
@@ -724,6 +751,26 @@ mod tests {
         e.staleness_decay = 0.9;
         e.validate().unwrap();
         assert!(!e.has_scenario());
+    }
+
+    #[test]
+    fn device_batch_knob_parses_and_stays_out_of_scenarios() {
+        let mut c = RunConfig::preset(DatasetName::Mnist);
+        assert_eq!(c.device_batch, 0, "preset defaults to auto");
+        c.apply_pairs([("device-batch", "32")].into_iter()).unwrap();
+        assert_eq!(c.device_batch, 32);
+        assert_eq!(c.effective_device_batch(), 32);
+        c.validate().unwrap();
+        // a perf knob, not a scenario: batched execution is bit-identical
+        assert!(!c.has_scenario());
+        assert!(c.summary().contains("device-batch=32"), "{}", c.summary());
+        c.apply_pairs([("device_batch", "1")].into_iter()).unwrap();
+        assert_eq!(c.effective_device_batch(), 1);
+        assert!(!c.summary().contains("device-batch"), "{}", c.summary());
+        assert!(c.apply_pairs([("device-batch", "x")].into_iter()).is_err());
+        // auto (0) resolves to env/1 but never to 0
+        c.device_batch = 0;
+        assert!(c.effective_device_batch() >= 1);
     }
 
     #[test]

@@ -55,8 +55,8 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use crate::algorithms::{
-    Algorithm, CarriedUplink, ClientCtx, ClientOutput, InitCtx, RoundAggregator, RoundOutcome,
-    ServerCtx,
+    Algorithm, BatchCtx, BatchTask, CarriedUplink, ClientCtx, ClientOutput, InitCtx,
+    RoundAggregator, RoundOutcome, ServerCtx,
 };
 use crate::comm::{Downlink, SimNetwork, Transport};
 use crate::config::{ProjectionKind, RunConfig, Topology};
@@ -276,49 +276,94 @@ impl<'a, N: Transport> Coordinator<'a, N> {
         let net = &mut self.net;
         let mut agg_time = Duration::ZERO;
         let mut arrivals = plan.arrivals.iter();
-        parallel::par_map_consume(
-            tasks,
-            threads,
-            &order,
-            |_, task: ClientTask| {
-                let ClientTask { k, rng, downlink } = task;
-                let mut ctx = ClientCtx { model: model.0, data, cfg, projection, rng };
-                alg_shared.client_round(t, k, downlink.as_ref(), &mut ctx)
-            },
-            |task_idx, result: Result<ClientOutput>| -> Result<()> {
-                let arrival = arrivals.next().expect("one arrival per consumed task");
-                debug_assert_eq!(arrival.task, task_idx);
-                let mut out =
-                    result.with_context(|| format!("client phase of round {t}"))?;
-                // the uplink is transported (metered, noise-corrupted)
-                // whether or not the deadline cuts it: the bytes were
-                // spent on the link either way
-                if let Some(up) = out.uplink.as_mut() {
-                    up.payload = net.uplink_from(out.client, &up.payload)?;
-                }
-                let started = Instant::now();
-                let shard = &mut shards[topo.edge_of(out.client)];
-                if arrival.accepted {
-                    shard
-                        .absorb(out, arrival.weight)
-                        .with_context(|| format!("absorbing round-{t} uplink"))?;
-                } else if arrival.buffered {
-                    // missed the quorum close but within max-staleness:
-                    // the write-back lands now, the payload is buffered
-                    // for round t+1 at its decayed raw mass
-                    // p_k · staleness_decay^age (DESIGN.md §13)
-                    let raw = data.weights[out.client]
-                        * (cfg.staleness_decay as f32).powi(arrival.staleness as i32);
-                    shard.buffer_late(out, raw, arrival.staleness);
-                } else {
-                    // straggler (or stranded on a failed edge): payload
-                    // discarded, local state kept
-                    shard.absorb_cut(out);
-                }
-                agg_time += started.elapsed();
-                Ok(())
-            },
-        )?;
+        // the arrival-order absorb body, shared verbatim by the
+        // per-client and device-batched paths below
+        let mut consume = |task_idx: usize, result: Result<ClientOutput>| -> Result<()> {
+            let arrival = arrivals.next().expect("one arrival per consumed task");
+            debug_assert_eq!(arrival.task, task_idx);
+            let mut out = result.with_context(|| format!("client phase of round {t}"))?;
+            // the uplink is transported (metered, noise-corrupted)
+            // whether or not the deadline cuts it: the bytes were
+            // spent on the link either way
+            if let Some(up) = out.uplink.as_mut() {
+                up.payload = net.uplink_from(out.client, &up.payload)?;
+            }
+            let started = Instant::now();
+            let shard = &mut shards[topo.edge_of(out.client)];
+            if arrival.accepted {
+                shard
+                    .absorb(out, arrival.weight)
+                    .with_context(|| format!("absorbing round-{t} uplink"))?;
+            } else if arrival.buffered {
+                // missed the quorum close but within max-staleness:
+                // the write-back lands now, the payload is buffered
+                // for round t+1 at its decayed raw mass
+                // p_k · staleness_decay^age (DESIGN.md §13)
+                let raw = data.weights[out.client]
+                    * (cfg.staleness_decay as f32).powi(arrival.staleness as i32);
+                shard.buffer_late(out, raw, arrival.staleness);
+            } else {
+                // straggler (or stranded on a failed edge): payload
+                // discarded, local state kept
+                shard.absorb_cut(out);
+            }
+            agg_time += started.elapsed();
+            Ok(())
+        };
+        // Device-batched grouping (DESIGN.md §15): when the loaded
+        // runtime carries cohort-batched executables AND the algorithm
+        // can pack a group, consecutive groups of ≤ B tasks (selection
+        // order) each run as one stacked dispatch chain; group outputs
+        // concatenate back to per-task order and the IDENTICAL consume
+        // body replays in simulated-arrival order. `device_batch() == 1`
+        // (the default load) never enters this branch, so the per-client
+        // path below remains byte-for-byte today's code.
+        let device_batch =
+            if alg_shared.supports_batched_rounds() { self.model.device_batch() } else { 1 };
+        if device_batch > 1 {
+            let n_tasks = tasks.len();
+            let mut groups: Vec<Vec<ClientTask>> = Vec::with_capacity(n_tasks.div_ceil(device_batch));
+            let mut tasks = tasks;
+            while !tasks.is_empty() {
+                let tail = tasks.split_off(device_batch.min(tasks.len()));
+                groups.push(std::mem::replace(&mut tasks, tail));
+            }
+            let results = parallel::par_map(groups, threads, |_, group: Vec<ClientTask>| {
+                let batch: Vec<BatchTask> = group
+                    .into_iter()
+                    .map(|ClientTask { k, rng, downlink }| BatchTask { k, rng, downlink })
+                    .collect();
+                let ctx = BatchCtx { model: model.0, data, cfg, projection };
+                alg_shared.client_round_batched(t, batch, &ctx)
+            });
+            let mut slots: Vec<Option<ClientOutput>> = Vec::with_capacity(n_tasks);
+            for res in results {
+                let outs =
+                    res.with_context(|| format!("batched client phase of round {t}"))?;
+                slots.extend(outs.into_iter().map(Some));
+            }
+            anyhow::ensure!(
+                slots.len() == n_tasks,
+                "batched client phase returned {} outputs for {n_tasks} tasks",
+                slots.len()
+            );
+            for &i in &order {
+                let out = slots[i].take().expect("arrival order is a permutation");
+                consume(i, Ok(out))?;
+            }
+        } else {
+            parallel::par_map_consume(
+                tasks,
+                threads,
+                &order,
+                |_, task: ClientTask| {
+                    let ClientTask { k, rng, downlink } = task;
+                    let mut ctx = ClientCtx { model: model.0, data, cfg, projection, rng };
+                    alg_shared.client_round(t, k, downlink.as_ref(), &mut ctx)
+                },
+                consume,
+            )?;
+        }
 
         // edge → root: every live edge that had compute work ships its
         // O(m) merge frame (metered on the edge tier); a failed edge

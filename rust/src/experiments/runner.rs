@@ -34,20 +34,33 @@ impl Lab {
 
     /// Compiled executables for a variant (cached).
     pub fn executables(&self, variant: &str) -> Result<Arc<ModelExecutables>> {
-        if let Some(e) = self.cache.borrow().get(variant) {
+        self.executables_batched(variant, 1)
+    }
+
+    /// Compiled executables for a variant at a cohort batch width
+    /// (cached per `(variant, device_batch)` so a sweep mixing batched
+    /// and unbatched runs never recompiles).
+    pub fn executables_batched(
+        &self,
+        variant: &str,
+        device_batch: usize,
+    ) -> Result<Arc<ModelExecutables>> {
+        let key = format!("{variant}#b{device_batch}");
+        if let Some(e) = self.cache.borrow().get(&key) {
             return Ok(e.clone());
         }
-        crate::info!("compiling artifacts for variant `{variant}` …");
-        let exes = self.runtime.load_variant(variant)?;
-        self.cache
-            .borrow_mut()
-            .insert(variant.to_string(), exes.clone());
+        crate::info!("compiling artifacts for variant `{variant}` (device-batch {device_batch}) …");
+        let exes = self.runtime.load_variant_batched(variant, device_batch)?;
+        self.cache.borrow_mut().insert(key, exes.clone());
         Ok(exes)
     }
 
     /// A model runtime bound to the run's seed-derived SRHT operator.
     pub fn model_for(&self, cfg: &RunConfig) -> Result<ModelRuntime> {
-        let exes = self.executables(cfg.dataset.model_variant())?;
+        let exes = self.executables_batched(
+            cfg.dataset.model_variant(),
+            cfg.effective_device_batch(),
+        )?;
         let op = SrhtOperator::from_seed(cfg.seed, exes.geom.n, exes.geom.m);
         ModelRuntime::bind(exes, &op)
     }

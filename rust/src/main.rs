@@ -101,6 +101,9 @@ multi-process transport roles (DESIGN.md §12 — no artifacts needed):
 
 common options: --artifacts-dir artifacts  --results-dir results
                 --seed N  --seeds K  --rounds N  --dataset name
+                --device-batch B  pack up to B clients per device dispatch
+                                  (0 = auto: PFED1BS_DEVICE_BATCH env, else 1;
+                                   bit-identical for any B — DESIGN.md §15)
 scenario knobs: --over-select N  --deadline-ms MS  --dropout-prob P
                 --latency zero|fixed:MS|uniform:LO:HI|lognormal:MED:SIGMA
                 --topology flat|edge:E  --edge-dropout-prob P
@@ -284,6 +287,11 @@ fn cmd_info(args: &Args) -> Result<()> {
             info.n, info.npad, info.m, info.input_dim, info.classes,
             info.train_batch, info.eval_batch
         );
+        let widths = manifest.batch_sizes(&variant);
+        if !widths.is_empty() {
+            let ws: Vec<String> = widths.iter().map(|b| b.to_string()).collect();
+            println!("    cohort batch widths: {}", ws.join(", "));
+        }
     }
     Ok(())
 }

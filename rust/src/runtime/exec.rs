@@ -74,22 +74,62 @@ impl Runtime {
     }
 
     fn compile(&self, info: &ArtifactInfo) -> Result<PjRtLoadedExecutable> {
+        // Both the parse and the PJRT compile error are wrapped with the
+        // manifest record identity — a bad (batched) artifact must be
+        // diagnosable from the error alone, not just a file path.
+        let record = || match info.batch {
+            Some(b) => format!(
+                "artifact `{}` variant `{}` batch={b} ({})",
+                info.artifact, info.variant, info.file
+            ),
+            None => format!("artifact `{}` variant `{}` ({})", info.artifact, info.variant, info.file),
+        };
         let path = self.manifest.path_for(info);
         let proto = HloModuleProto::from_text_file(
             path.to_str().context("non-utf8 artifact path")?,
         )
-        .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))
+        .with_context(|| format!("loading {}", record()))?;
         let comp = XlaComputation::from_proto(&proto);
         self.client
             .compile(&comp)
-            .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))
+            .map_err(|e| anyhow!("PJRT compile: {e:?}"))
+            .with_context(|| format!("compiling {}", record()))
     }
 
     /// Compile all executables of a model variant (expensive; share the
     /// result across runs via the returned Arc).
     pub fn load_variant(&self, variant: &str) -> Result<Arc<ModelExecutables>> {
+        self.load_variant_batched(variant, 1)
+    }
+
+    /// Compile a variant's executables plus, when `device_batch > 1`, the
+    /// cohort-batched family at the LARGEST manifest width ≤ `device_batch`
+    /// (short cohort tails are padded at execute time, so one width serves
+    /// every group size up to B). When the manifest carries no usable
+    /// width the per-client executables load alone and the runtime
+    /// degrades to per-client dispatch.
+    pub fn load_variant_batched(
+        &self,
+        variant: &str,
+        device_batch: usize,
+    ) -> Result<Arc<ModelExecutables>> {
         let info = self.manifest.get("client_step", variant)?;
         let geom = Geometry::from_info(info);
+        let batched = if device_batch > 1 {
+            match self
+                .manifest
+                .batch_sizes(variant)
+                .into_iter()
+                .rev()
+                .find(|&b| b <= device_batch)
+            {
+                Some(b) => Some(self.load_batched_family(variant, b, &geom)?),
+                None => None,
+            }
+        } else {
+            None
+        };
         Ok(Arc::new(ModelExecutables {
             client: self.client.clone(),
             geom,
@@ -101,13 +141,63 @@ impl Runtime {
             sketch: self.compile(self.manifest.get("sketch", variant)?)?,
             eval: self.compile(self.manifest.get("eval", variant)?)?,
             grad_norm: self.compile(self.manifest.get("grad_norm", variant)?)?,
+            batched,
         }))
+    }
+
+    fn load_batched_family(
+        &self,
+        variant: &str,
+        batch: usize,
+        geom: &Geometry,
+    ) -> Result<BatchedExecutables> {
+        let info = self.manifest.get_batched("client_step_batched", variant, batch)?;
+        if info.n != geom.n || info.npad != geom.npad || info.m != geom.m {
+            bail!(
+                "batched artifact geometry (n={}, n'={}, m={}) does not match variant `{variant}` (n={}, n'={}, m={})",
+                info.n, info.npad, info.m, geom.n, geom.npad, geom.m
+            );
+        }
+        Ok(BatchedExecutables {
+            batch,
+            client_step_batched: self.compile(info)?,
+            client_step_batched_w: self
+                .compile(self.manifest.get_batched("client_step_batched_w", variant, batch)?)?,
+            sketch_batched: self
+                .compile(self.manifest.get_batched("sketch_batched", variant, batch)?)?,
+        })
     }
 
     /// Convenience: compile a variant and bind an operator in one call.
     pub fn model(&self, variant: &str, operator: &SrhtOperator) -> Result<ModelRuntime> {
         ModelRuntime::bind(self.load_variant(variant)?, operator)
     }
+
+    /// Convenience: compile a variant (with the batched family when
+    /// available at ≤ `device_batch`) and bind an operator in one call.
+    pub fn model_with_batch(
+        &self,
+        variant: &str,
+        operator: &SrhtOperator,
+        device_batch: usize,
+    ) -> Result<ModelRuntime> {
+        ModelRuntime::bind(self.load_variant_batched(variant, device_batch)?, operator)
+    }
+}
+
+/// The cohort-batched executable family of one variant at one width B.
+///
+/// One dispatch of `client_step_batched_w` advances B clients one local
+/// step; the stacked `[B, n]` weight buffer stays device-resident across
+/// the whole local round exactly like the per-client `client_step_w` loop
+/// (DESIGN.md §15).
+pub struct BatchedExecutables {
+    /// the lowered cohort width B
+    pub batch: usize,
+    client_step_batched: PjRtLoadedExecutable,
+    /// single-output variant: stacked w' as a non-tuple root
+    client_step_batched_w: PjRtLoadedExecutable,
+    sketch_batched: PjRtLoadedExecutable,
 }
 
 /// The five compiled executables of one model variant.
@@ -125,6 +215,9 @@ pub struct ModelExecutables {
     sketch: PjRtLoadedExecutable,
     eval: PjRtLoadedExecutable,
     grad_norm: PjRtLoadedExecutable,
+    /// cohort-batched family; `None` when loaded at `device_batch=1` or
+    /// when the manifest ships no usable width
+    batched: Option<BatchedExecutables>,
 }
 
 /// Executables + the bound SRHT operator realization (device-resident).
@@ -337,6 +430,206 @@ impl ModelRuntime {
             .to_literal_sync()
             .map_err(|e| anyhow!("device->host: {e:?}"))?;
         Ok((Self::vec_f32(&lit)?, loss))
+    }
+
+    /// Cohort batch width B of the loaded batched executables, or 1 when
+    /// only the per-client family is loaded.
+    pub fn device_batch(&self) -> usize {
+        self.exes.batched.as_ref().map_or(1, |b| b.batch)
+    }
+
+    /// Stack L ≤ B per-lane vectors into one `[B, per]` row-major buffer,
+    /// padding lanes L..B by replicating the last real lane. Padded lanes
+    /// are pure dispatch ballast: their outputs are never read back, and
+    /// replicating a real lane keeps every value finite so no NaN/Inf can
+    /// leak out of a lane (vmap lanes are data-independent — DESIGN.md §15).
+    fn stack_padded(lanes: &[&[f32]], b: usize, per: usize) -> Vec<f32> {
+        debug_assert!(!lanes.is_empty() && lanes.len() <= b);
+        let mut out = Vec::with_capacity(b * per);
+        for lane in lanes {
+            debug_assert_eq!(lane.len(), per);
+            out.extend_from_slice(lane);
+        }
+        let last = lanes[lanes.len() - 1];
+        for _ in lanes.len()..b {
+            out.extend_from_slice(last);
+        }
+        out
+    }
+
+    /// R pFed1BS local steps for up to B clients with ONE device dispatch
+    /// per step instead of B (`local_round_batched` of DESIGN.md §15).
+    ///
+    /// Lane layout: `ws[lane]` / `vs[lane]` are client `lane`'s weights and
+    /// personal sketch; `next_batch(lane)` is called once per (step, lane)
+    /// in step-major, lane-ascending order and must yield that lane's next
+    /// train tile — each lane therefore consumes exactly the batch
+    /// sequence it would in the per-client path. Short cohorts (L < B) are
+    /// padded by replicating the last real lane; padded outputs are
+    /// discarded. The stacked `[B, n]` weight buffer is device-resident
+    /// across steps 1..R exactly like the per-client `client_round`.
+    ///
+    /// Returns one `(w', loss)` per REAL lane, in lane order — bit-identical
+    /// to L separate `client_round` calls (property-tested).
+    #[allow(clippy::too_many_arguments)]
+    pub fn client_round_batched(
+        &self,
+        ws: &[&[f32]],
+        vs: &[&[f32]],
+        mut next_batch: impl FnMut(usize) -> (Vec<f32>, Vec<i32>),
+        r_steps: usize,
+        eta: f32,
+        lambda: f32,
+        mu: f32,
+        gamma: f32,
+    ) -> Result<Vec<(Vec<f32>, f32)>> {
+        assert!(r_steps >= 1);
+        let g = self.geom;
+        let bex = self
+            .exes
+            .batched
+            .as_ref()
+            .ok_or_else(|| anyhow!("no batched executables loaded for `{}`", self.variant))?;
+        let b = bex.batch;
+        let l = ws.len();
+        if l == 0 || l > b {
+            bail!("client_round_batched: {l} lanes for batch width {b}");
+        }
+        if vs.len() != l {
+            bail!("client_round_batched: {} v lanes for {l} w lanes", vs.len());
+        }
+        // One (step, lane) tile gather → stacked [B, tb, d] / [B, tb] literals.
+        let tile = g.train_batch * g.input_dim;
+        let gather_step =
+            |next_batch: &mut dyn FnMut(usize) -> (Vec<f32>, Vec<i32>)| -> (Vec<f32>, Vec<i32>) {
+                let mut xs = Vec::with_capacity(b * tile);
+                let mut ys = Vec::with_capacity(b * g.train_batch);
+                for lane in 0..l {
+                    let (x, y) = next_batch(lane);
+                    debug_assert_eq!(x.len(), tile);
+                    debug_assert_eq!(y.len(), g.train_batch);
+                    xs.extend_from_slice(&x);
+                    ys.extend_from_slice(&y);
+                }
+                for _ in l..b {
+                    // replicate the last real lane's tile (see stack_padded)
+                    let (xl, yl) = (xs[(l - 1) * tile..l * tile].to_vec(), ys[(l - 1) * g.train_batch..l * g.train_batch].to_vec());
+                    xs.extend_from_slice(&xl);
+                    ys.extend_from_slice(&yl);
+                }
+                (xs, ys)
+            };
+        let vb = self.buf_f32(&Self::stack_padded(vs, b, g.m), &[b, g.m])?;
+        let scalars = [
+            self.scalar(eta)?,
+            self.scalar(lambda)?,
+            self.scalar(mu)?,
+            self.scalar(gamma)?,
+        ];
+        // step 0: tuple-rooted artifact → per-lane losses; stacked w' comes
+        // back to host once, mirroring the per-client path's step 0.
+        let w0 = Self::stack_padded(ws, b, g.n);
+        let wb = self.buf_f32(&w0, &[b, g.n])?;
+        let (x0, y0) = gather_step(&mut next_batch);
+        let x0b = self.buf_f32(&x0, &[b, g.train_batch, g.input_dim])?;
+        let y0b = self.buf_i32(&y0, &[b, g.train_batch])?;
+        let args = [
+            &wb,
+            &x0b,
+            &y0b,
+            &vb,
+            &self.dsign_buf,
+            &self.sidx_buf,
+            &scalars[0],
+            &scalars[1],
+            &scalars[2],
+            &scalars[3],
+        ];
+        let out = self.run(&bex.client_step_batched, &args)?;
+        if out.len() != 2 {
+            bail!("client_step_batched returned {} outputs, want 2", out.len());
+        }
+        let w_host = Self::vec_f32(&out[0])?;
+        let losses = Self::vec_f32(&out[1])?;
+        if w_host.len() != b * g.n || losses.len() != b {
+            bail!(
+                "client_step_batched output shape mismatch: {} weights / {} losses for B={b}",
+                w_host.len(),
+                losses.len()
+            );
+        }
+        let mut w_dev = self.buf_f32(&w_host, &[b, g.n])?;
+        // steps 1..R: non-tuple artifact, stacked output buffer loops back
+        for _ in 1..r_steps {
+            let (x, y) = gather_step(&mut next_batch);
+            let xb = self.buf_f32(&x, &[b, g.train_batch, g.input_dim])?;
+            let yb = self.buf_i32(&y, &[b, g.train_batch])?;
+            let args = [
+                &w_dev,
+                &xb,
+                &yb,
+                &vb,
+                &self.dsign_buf,
+                &self.sidx_buf,
+                &scalars[0],
+                &scalars[1],
+                &scalars[2],
+                &scalars[3],
+            ];
+            let mut out = bex
+                .client_step_batched_w
+                .execute_b(&args)
+                .map_err(|e| anyhow!("client_step_batched_w execute: {e:?}"))?;
+            w_dev = out
+                .get_mut(0)
+                .and_then(|v| {
+                    if v.is_empty() {
+                        None
+                    } else {
+                        Some(v.remove(0))
+                    }
+                })
+                .ok_or_else(|| anyhow!("client_step_batched_w returned no buffer"))?;
+        }
+        let lit = w_dev
+            .to_literal_sync()
+            .map_err(|e| anyhow!("device->host: {e:?}"))?;
+        let stacked = Self::vec_f32(&lit)?;
+        if stacked.len() != b * g.n {
+            bail!("stacked w' length {} != B·n", stacked.len());
+        }
+        Ok((0..l)
+            .map(|lane| (stacked[lane * g.n..(lane + 1) * g.n].to_vec(), losses[lane]))
+            .collect())
+    }
+
+    /// Packed one-bit sketches for up to B clients in one dispatch —
+    /// the batched form of [`Self::sketch_sign_packed`]. Lane order and
+    /// padding semantics match [`Self::client_round_batched`].
+    pub fn sketch_sign_batched_packed(
+        &self,
+        ws: &[&[f32]],
+    ) -> Result<Vec<crate::sketch::bitpack::SignVec>> {
+        let g = self.geom;
+        let bex = self
+            .exes
+            .batched
+            .as_ref()
+            .ok_or_else(|| anyhow!("no batched executables loaded for `{}`", self.variant))?;
+        let b = bex.batch;
+        let l = ws.len();
+        if l == 0 || l > b {
+            bail!("sketch_sign_batched_packed: {l} lanes for batch width {b}");
+        }
+        let wb = self.buf_f32(&Self::stack_padded(ws, b, g.n), &[b, g.n])?;
+        let out = self.run(&bex.sketch_batched, &[&wb, &self.dsign_buf, &self.sidx_buf])?;
+        let z = Self::vec_f32(&out[0])?;
+        if z.len() != b * g.m {
+            bail!("sketch_batched output length {} != B·m", z.len());
+        }
+        Ok((0..l)
+            .map(|lane| crate::sketch::bitpack::SignVec::from_signs(&z[lane * g.m..(lane + 1) * g.m]))
+            .collect())
     }
 
     /// R plain SGD steps with device-resident w (baselines' ClientUpdate;

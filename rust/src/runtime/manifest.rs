@@ -32,16 +32,23 @@ pub struct ArtifactInfo {
     pub train_batch: usize,
     /// evaluation batch rows
     pub eval_batch: usize,
+    /// cohort batch width B for `*_batched` artifacts; `None` for the
+    /// per-client artifacts (legacy rows carry no `batch=` key)
+    pub batch: Option<usize>,
     /// content hash of the HLO file (build provenance)
     pub sha256: String,
 }
 
-/// Parsed manifest, indexed by (artifact, variant).
+/// Parsed manifest. Per-client records are indexed by (artifact, variant);
+/// cohort-batched records (those carrying `batch=B`) live in a separate
+/// index keyed (artifact, variant, B) so one variant can ship several
+/// batch widths.
 #[derive(Clone, Debug, Default)]
 pub struct Manifest {
     /// the artifacts directory the file paths resolve against
     pub dir: PathBuf,
     entries: HashMap<(String, String), ArtifactInfo>,
+    batched: HashMap<(String, String, usize), ArtifactInfo>,
 }
 
 impl Manifest {
@@ -62,6 +69,7 @@ impl Manifest {
     /// one artifact per line).
     pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
         let mut entries = HashMap::new();
+        let mut batched = HashMap::new();
         for (lineno, line) in text.lines().enumerate() {
             let line = line.trim();
             if line.is_empty() || line.starts_with('#') {
@@ -84,6 +92,24 @@ impl Manifest {
                     .parse()
                     .with_context(|| format!("manifest line {}: bad number for `{k}`", lineno + 1))
             };
+            // `batch=` marks a cohort-batched record. Parse through i64 so
+            // zero/negative widths get a geometry error, not a bare
+            // integer-parse failure.
+            let batch = match kv.get("batch").copied() {
+                None => None,
+                Some(raw) => {
+                    let b: i64 = raw.parse().with_context(|| {
+                        format!("manifest line {}: bad number for `batch`", lineno + 1)
+                    })?;
+                    if b < 1 {
+                        bail!(
+                            "manifest line {}: batch={b} — cohort batch width must be a positive integer",
+                            lineno + 1
+                        );
+                    }
+                    Some(b as usize)
+                }
+            };
             let info = ArtifactInfo {
                 artifact: get("artifact")?.to_string(),
                 variant: get("variant")?.to_string(),
@@ -95,14 +121,25 @@ impl Manifest {
                 classes: num("classes")?,
                 train_batch: num("train_batch")?,
                 eval_batch: num("eval_batch")?,
+                batch,
                 sha256: get("sha256")?.to_string(),
             };
-            let key = (info.artifact.clone(), info.variant.clone());
-            if entries.insert(key, info).is_some() {
-                bail!("manifest line {}: duplicate record", lineno + 1);
+            match info.batch {
+                None => {
+                    let key = (info.artifact.clone(), info.variant.clone());
+                    if entries.insert(key, info).is_some() {
+                        bail!("manifest line {}: duplicate record", lineno + 1);
+                    }
+                }
+                Some(b) => {
+                    let key = (info.artifact.clone(), info.variant.clone(), b);
+                    if batched.insert(key, info).is_some() {
+                        bail!("manifest line {}: duplicate batched record", lineno + 1);
+                    }
+                }
             }
         }
-        Ok(Manifest { dir, entries })
+        Ok(Manifest { dir, entries, batched })
     }
 
     /// Look up a record by (artifact kind, variant).
@@ -112,6 +149,38 @@ impl Manifest {
             .with_context(|| {
                 format!("artifact `{artifact}` for variant `{variant}` not in manifest")
             })
+    }
+
+    /// Look up a cohort-batched record by (artifact kind, variant, batch width).
+    pub fn get_batched(&self, artifact: &str, variant: &str, batch: usize) -> Result<&ArtifactInfo> {
+        self.batched
+            .get(&(artifact.to_string(), variant.to_string(), batch))
+            .with_context(|| {
+                format!(
+                    "batched artifact `{artifact}` (B={batch}) for variant `{variant}` not in manifest"
+                )
+            })
+    }
+
+    /// Cohort batch widths available for a variant, sorted ascending.
+    ///
+    /// A width counts only when the full batched family
+    /// (`client_step_batched`, `client_step_batched_w`, `sketch_batched`)
+    /// is present — the runtime needs all three to run a batched round.
+    pub fn batch_sizes(&self, variant: &str) -> Vec<usize> {
+        let mut bs: Vec<usize> = self
+            .batched
+            .keys()
+            .filter(|(a, v, b)| {
+                a == "client_step_batched"
+                    && v == variant
+                    && self.get_batched("client_step_batched_w", variant, *b).is_ok()
+                    && self.get_batched("sketch_batched", variant, *b).is_ok()
+            })
+            .map(|(_, _, b)| *b)
+            .collect();
+        bs.sort_unstable();
+        bs
     }
 
     /// Every distinct model variant, sorted.
@@ -131,14 +200,14 @@ impl Manifest {
         self.dir.join(&info.file)
     }
 
-    /// Number of artifact records.
+    /// Number of artifact records (per-client + batched).
     pub fn len(&self) -> usize {
-        self.entries.len()
+        self.entries.len() + self.batched.len()
     }
 
     /// True when the manifest has no records.
     pub fn is_empty(&self) -> bool {
-        self.entries.is_empty()
+        self.entries.is_empty() && self.batched.is_empty()
     }
 }
 
@@ -183,5 +252,76 @@ artifact=eval variant=mlp784 file=eval_mlp784.hlo.txt n=159010 npad=262144 m=159
     fn comments_and_blanks_skipped() {
         let m = Manifest::parse("# only comments\n\n", PathBuf::new()).unwrap();
         assert!(m.is_empty());
+    }
+
+    fn batched_row(artifact: &str, batch: &str) -> String {
+        format!(
+            "artifact={artifact} variant=mlp784 file={artifact}_b{batch}_mlp784.hlo.txt \
+             n=159010 npad=262144 m=15901 input_dim=784 classes=10 train_batch=32 \
+             eval_batch=256 batch={batch} sha256=abc"
+        )
+    }
+
+    fn batched_family(batch: &str) -> String {
+        [
+            batched_row("client_step_batched", batch),
+            batched_row("client_step_batched_w", batch),
+            batched_row("sketch_batched", batch),
+        ]
+        .join("\n")
+    }
+
+    #[test]
+    fn batched_records_indexed_separately() {
+        let text = format!("{SAMPLE}{}\n{}\n", batched_family("4"), batched_family("8"));
+        let m = Manifest::parse(&text, PathBuf::from("/tmp")).unwrap();
+        assert_eq!(m.len(), 8);
+        // per-client index is untouched by batched rows
+        assert!(m.get("client_step_batched", "mlp784").is_err());
+        assert_eq!(m.get("client_step", "mlp784").unwrap().batch, None);
+        let b4 = m.get_batched("client_step_batched", "mlp784", 4).unwrap();
+        assert_eq!(b4.batch, Some(4));
+        assert_eq!(b4.n, 159010);
+        assert!(m.get_batched("client_step_batched", "mlp784", 16).is_err());
+        assert_eq!(m.batch_sizes("mlp784"), vec![4, 8]);
+        assert!(m.batch_sizes("bogus").is_empty());
+    }
+
+    #[test]
+    fn incomplete_batched_family_not_advertised() {
+        // only two of the three artifacts at B=4 -> width must not be offered
+        let text = format!(
+            "{SAMPLE}{}\n{}\n",
+            batched_row("client_step_batched", "4"),
+            batched_row("client_step_batched_w", "4"),
+        );
+        let m = Manifest::parse(&text, PathBuf::from("/tmp")).unwrap();
+        assert!(m.batch_sizes("mlp784").is_empty());
+    }
+
+    #[test]
+    fn bad_batch_values_rejected_with_clear_error() {
+        for bad in ["0", "-3"] {
+            let text = format!("{SAMPLE}{}\n", batched_row("client_step_batched", bad));
+            let err = Manifest::parse(&text, PathBuf::new()).unwrap_err().to_string();
+            assert!(
+                err.contains("batch width must be a positive integer"),
+                "batch={bad}: unexpected error `{err}`"
+            );
+        }
+        let text = format!("{SAMPLE}{}\n", batched_row("client_step_batched", "wide"));
+        let err = Manifest::parse(&text, PathBuf::new()).unwrap_err().to_string();
+        assert!(err.contains("bad number for `batch`"), "unexpected error `{err}`");
+    }
+
+    #[test]
+    fn duplicate_batched_record_rejected() {
+        let dup = format!(
+            "{SAMPLE}{}\n{}\n",
+            batched_row("sketch_batched", "8"),
+            batched_row("sketch_batched", "8"),
+        );
+        let err = Manifest::parse(&dup, PathBuf::new()).unwrap_err().to_string();
+        assert!(err.contains("duplicate batched record"), "unexpected error `{err}`");
     }
 }

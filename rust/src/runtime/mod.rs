@@ -6,5 +6,5 @@
 pub mod exec;
 pub mod manifest;
 
-pub use exec::{Geometry, ModelExecutables, ModelRuntime, Runtime};
+pub use exec::{BatchedExecutables, Geometry, ModelExecutables, ModelRuntime, Runtime};
 pub use manifest::{ArtifactInfo, Manifest};

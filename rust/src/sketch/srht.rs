@@ -183,8 +183,9 @@ impl SrhtOperator {
 /// schedule's dispatch level. The comparison is the same as
 /// `sketch_sign`: sign of the *scaled* coordinate (scale > 0, kept for
 /// exact f32 parity), bit set ⇔ sign is +1 (sign(0) := +1). Every level
-/// is bit-identical — the AVX2 gather path evaluates the identical
-/// per-lane `buf[idx]·scale >= 0.0` predicate.
+/// is bit-identical — the AVX2 gather path and the gather-free NEON
+/// path evaluate the identical per-lane `buf[idx]·scale >= 0.0`
+/// predicate.
 fn pack_signs_scaled(isa: Isa, buf: &[f32], sidx: &[u32], scale: f32, m: usize) -> SignVec {
     debug_assert_eq!(sidx.len(), m);
     #[cfg(target_arch = "x86_64")]
@@ -193,8 +194,14 @@ fn pack_signs_scaled(isa: Isa, buf: &[f32], sidx: &[u32], scale: f32, m: usize) 
         // `is_x86_feature_detected!("avx2")` returned true.
         return unsafe { pack_signs_avx2(buf, sidx, scale, m) };
     }
-    #[cfg(not(target_arch = "x86_64"))]
-    let _ = isa; // no gather unit on NEON — the packed loop stays scalar
+    #[cfg(target_arch = "aarch64")]
+    if isa == Isa::Neon {
+        // SAFETY: NEON is a baseline feature of the aarch64 target
+        // (same justification as the kernel butterflies).
+        return unsafe { pack_signs_neon(buf, sidx, scale, m) };
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    let _ = isa;
     SignVec::from_fn(m, |j| buf[sidx[j] as usize] * scale >= 0.0)
 }
 
@@ -220,6 +227,50 @@ fn pack_signs_avx2(buf: &[f32], sidx: &[u32], scale: f32, m: usize) -> SignVec {
             let scaled = _mm256_mul_ps(vals, _mm256_set1_ps(scale));
             let ge = _mm256_cmp_ps::<_CMP_GE_OQ>(scaled, _mm256_setzero_ps());
             let bits = _mm256_movemask_ps(ge) as u32 as u64;
+            words[j / 64] |= bits << (j % 64);
+        }
+        j += 8;
+    }
+    for k in j..m {
+        if buf[sidx[k] as usize] * scale >= 0.0 {
+            words[k / 64] |= 1u64 << (k % 64);
+        }
+    }
+    SignVec::from_words(words, m)
+}
+
+/// Gather-free NEON sign-pack: 8 sampled lanes per iteration, writing
+/// whole 8-bit groups into the packed words (64 % 8 == 0 — a group
+/// never straddles a word). NEON has no gather unit, so the eight
+/// `buf[sidx[j]]` loads land in a stack tile first; the scale-multiply,
+/// compare, and movemask (two narrowing moves, a weighted AND, one
+/// horizontal add) then run vectorized.
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+fn pack_signs_neon(buf: &[f32], sidx: &[u32], scale: f32, m: usize) -> SignVec {
+    use std::arch::aarch64::*;
+    // lane i of the comparison mask contributes bit i of the group
+    const WEIGHTS: [u16; 8] = [1, 2, 4, 8, 16, 32, 64, 128];
+    let mut words = vec![0u64; m.div_ceil(64)];
+    let mut j = 0;
+    while j + 8 <= m {
+        let mut tile = [0.0f32; 8];
+        for (t, &i) in tile.iter_mut().zip(&sidx[j..j + 8]) {
+            *t = buf[i as usize]; // bounds-checked: sidx entries < n′
+        }
+        // SAFETY: `tile` and `WEIGHTS` are 8-lane stack arrays, exactly
+        // covering the 128-bit loads. `vcgeq_f32` is exactly Rust's
+        // `>= 0.0` (NaN → false, -0.0 >= 0.0 → true); each true lane's
+        // all-ones mask narrows to 0xFFFF, the AND keeps that lane's
+        // bit weight, and the horizontal add (≤ 255, no u16 overflow)
+        // yields the 8-bit movemask.
+        unsafe {
+            let s = vdupq_n_f32(scale);
+            let z = vdupq_n_f32(0.0);
+            let ge_lo = vcgeq_f32(vmulq_f32(vld1q_f32(tile.as_ptr()), s), z);
+            let ge_hi = vcgeq_f32(vmulq_f32(vld1q_f32(tile.as_ptr().add(4)), s), z);
+            let mask = vcombine_u16(vmovn_u32(ge_lo), vmovn_u32(ge_hi));
+            let bits = vaddvq_u16(vandq_u16(mask, vld1q_u16(WEIGHTS.as_ptr()))) as u64;
             words[j / 64] |= bits << (j % 64);
         }
         j += 8;

@@ -1,0 +1,198 @@
+//! Mega-batched dispatch (DESIGN.md §15): the cohort-batched executable
+//! family must be BIT-IDENTICAL to the per-client path — first at
+//! runtime level (one local round + one sketch, full and tail-padded
+//! groups), then at full engine level (a seeded 5-round pFed1BS run at
+//! `device_batch` ∈ {1, 4, 8} reproduces identical per-round losses,
+//! personalized models, and consensus words).
+//!
+//! Requires `make artifacts` with the batched families in the manifest
+//! (skips gracefully otherwise — e.g. against pre-batch artifacts).
+
+use pfed1bs::algorithms;
+use pfed1bs::config::RunConfig;
+use pfed1bs::coordinator::Coordinator;
+use pfed1bs::data::DatasetName;
+use pfed1bs::experiments::Lab;
+use pfed1bs::runtime::Runtime;
+use pfed1bs::sketch::SrhtOperator;
+use pfed1bs::util::rng::Rng;
+
+fn artifacts_available() -> bool {
+    std::path::Path::new("artifacts/manifest.txt").exists()
+}
+
+/// Widths this suite exercises: B=4 (full groups) and B=8 (padded tail).
+fn batched_families_built(widths: &[usize]) -> bool {
+    widths.contains(&4) && widths.contains(&8)
+}
+
+/// Runtime-level parity: B lanes through one batched dispatch chain vs B
+/// independent `client_round` calls, with distinct per-lane weights,
+/// sketches, and data tiles. Covers a full group (4-of-4) and a padded
+/// tail (5-of-8, where lanes 5..8 are replicated ballast whose outputs
+/// are discarded).
+#[test]
+fn batched_round_and_sketch_bit_identical_to_per_client() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let rt = Runtime::new("artifacts").expect("runtime");
+    let widths = rt.manifest.batch_sizes("mlp784");
+    if !batched_families_built(&widths) {
+        eprintln!("skipping: batched artifact families not built (got {widths:?})");
+        return;
+    }
+    let info = rt.manifest.get("client_step", "mlp784").unwrap();
+    let op = SrhtOperator::from_seed(7, info.n, info.m);
+    let model = rt.model("mlp784", &op).expect("per-client model");
+
+    for (bw, lanes) in [(4usize, 4usize), (8, 5)] {
+        let bmodel = rt.model_with_batch("mlp784", &op, bw).expect("batched model");
+        assert_eq!(bmodel.device_batch(), bw);
+        let g = model.geom;
+        let mut rng = Rng::new(99 + bw as u64);
+        let ws: Vec<Vec<f32>> = (0..lanes)
+            .map(|_| (0..g.n).map(|_| 0.1 * rng.normal()).collect())
+            .collect();
+        let vs: Vec<Vec<f32>> = (0..lanes)
+            .map(|_| {
+                (0..g.m)
+                    .map(|_| if rng.next_u64() & 1 == 0 { 1.0 } else { -1.0 })
+                    .collect()
+            })
+            .collect();
+        let data: Vec<(Vec<f32>, Vec<i32>)> = (0..lanes)
+            .map(|_| {
+                (
+                    (0..g.train_batch * g.input_dim).map(|_| rng.normal()).collect(),
+                    (0..g.train_batch).map(|_| rng.below(g.classes) as i32).collect(),
+                )
+            })
+            .collect();
+        let r_steps = 3;
+
+        let mut want = Vec::new();
+        for lane in 0..lanes {
+            let (w, loss) = model
+                .client_round(
+                    &ws[lane],
+                    || (data[lane].0.clone(), data[lane].1.clone()),
+                    r_steps,
+                    &vs[lane],
+                    0.05,
+                    5e-4,
+                    1e-5,
+                    1e4,
+                )
+                .unwrap();
+            let z = model.sketch_sign_packed(&w).unwrap();
+            want.push((w, loss, z));
+        }
+
+        let w_refs: Vec<&[f32]> = ws.iter().map(|w| &w[..]).collect();
+        let v_refs: Vec<&[f32]> = vs.iter().map(|v| &v[..]).collect();
+        let got = bmodel
+            .client_round_batched(
+                &w_refs,
+                &v_refs,
+                |lane| (data[lane].0.clone(), data[lane].1.clone()),
+                r_steps,
+                0.05,
+                5e-4,
+                1e-5,
+                1e4,
+            )
+            .unwrap();
+        assert_eq!(got.len(), lanes);
+        let updated: Vec<&[f32]> = got.iter().map(|(w, _)| &w[..]).collect();
+        let zs = bmodel.sketch_sign_batched_packed(&updated).unwrap();
+        assert_eq!(zs.len(), lanes);
+
+        for lane in 0..lanes {
+            let (want_w, want_loss, want_z) = &want[lane];
+            let (got_w, got_loss) = &got[lane];
+            assert_eq!(got_w.len(), want_w.len());
+            for i in 0..got_w.len() {
+                assert_eq!(
+                    got_w[i].to_bits(),
+                    want_w[i].to_bits(),
+                    "B={bw} lane {lane} w[{i}]"
+                );
+            }
+            assert_eq!(got_loss.to_bits(), want_loss.to_bits(), "B={bw} lane {lane} loss");
+            assert_eq!(zs[lane].words(), want_z.words(), "B={bw} lane {lane} sketch words");
+        }
+    }
+}
+
+/// Engine-level golden equivalence: the same seeded 5-round pFed1BS run
+/// at `device_batch` 1 (today's per-client path, byte-for-byte) vs 4 and
+/// 8 must produce identical per-round train losses, final accuracy,
+/// personalized model snapshots, and consensus words. participating=20
+/// at B=4 packs five full groups; participating=5 at B=8 drives a
+/// single tail-padded 5-of-8 dispatch every round.
+#[test]
+fn five_round_run_identical_across_device_batch() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let lab = Lab::new("artifacts").expect("lab");
+    let widths = lab.runtime.manifest.batch_sizes("mlp784");
+    if !batched_families_built(&widths) {
+        eprintln!("skipping: batched artifact families not built (got {widths:?})");
+        return;
+    }
+
+    for (participating, batches) in [(20usize, &[1usize, 4][..]), (5, &[1, 4, 8][..])] {
+        let mut snaps = Vec::new();
+        for &db in batches {
+            let mut cfg = RunConfig::preset(DatasetName::Mnist);
+            cfg.algorithm = "pfed1bs".to_string();
+            cfg.rounds = 5;
+            cfg.local_steps = 5;
+            cfg.eval_every = 3;
+            cfg.seed = 1234;
+            cfg.participating = participating;
+            cfg.device_batch = db;
+            cfg.validate().unwrap();
+            let model = lab.model_for(&cfg).unwrap();
+            assert_eq!(model.device_batch(), if db > 1 { db } else { 1 });
+            let mut alg = algorithms::build("pfed1bs").unwrap();
+            let mut coord = Coordinator::new(cfg, &model);
+            let result = coord.run(alg.as_mut()).unwrap();
+            let losses: Vec<u64> = result
+                .history
+                .records
+                .iter()
+                .map(|r| r.train_loss.to_bits())
+                .collect();
+            let consensus = alg
+                .consensus_packed()
+                .expect("pfed1bs exposes its packed consensus")
+                .words()
+                .to_vec();
+            snaps.push((losses, result.final_accuracy, alg.snapshot(), consensus));
+        }
+        for (i, snap) in snaps.iter().enumerate().skip(1) {
+            let db = batches[i];
+            assert_eq!(
+                snaps[0].0, snap.0,
+                "S={participating}: per-round losses diverged at device_batch={db}"
+            );
+            assert_eq!(
+                snaps[0].1, snap.1,
+                "S={participating}: final accuracy diverged at device_batch={db}"
+            );
+            assert_eq!(
+                snaps[0].2, snap.2,
+                "S={participating}: personalized models diverged at device_batch={db}"
+            );
+            assert_eq!(
+                snaps[0].3, snap.3,
+                "S={participating}: consensus words diverged at device_batch={db}"
+            );
+        }
+    }
+}
