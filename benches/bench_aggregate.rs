@@ -15,7 +15,7 @@
 
 use pfed1bs::bench_harness::{black_box, Bench};
 use pfed1bs::sketch::bitpack::{
-    majority_vote_uniform, majority_vote_weighted, SignVec, VoteAccumulator,
+    majority_vote_uniform, majority_vote_weighted, GroupedTally, SignVec, VoteAccumulator,
 };
 use pfed1bs::util::rng::Rng;
 
@@ -86,6 +86,33 @@ fn main() {
                 },
             );
         }
+
+        // robust tallies (DESIGN.md §16): per-client buckets absorbed
+        // then both tails trimmed coordinate-wise before the sign —
+        // O(K·m) state vs the plain vote's O(m), priced here
+        b.bench_elems(&format!("trimmed_absorb_K{k}_m{m}"), (k * m) as u64, || {
+            let mut tally = GroupedTally::new(m, k);
+            for (i, (z, &p)) in sketches.iter().zip(&weights).enumerate() {
+                tally.absorb(i, black_box(z), p as f64);
+            }
+            black_box(tally.finish_trimmed(0.2));
+        });
+
+        // median-of-means: 5 group buckets folded on 4 shards, merged
+        // in canonical order, coordinate-wise median of group means
+        b.bench_elems(&format!("mom_merge_K{k}_m{m}"), (k * m) as u64, || {
+            let shards = 4usize;
+            let mut parts: Vec<GroupedTally> =
+                (0..shards).map(|_| GroupedTally::new(m, 5)).collect();
+            for (i, (z, &p)) in sketches.iter().zip(&weights).enumerate() {
+                parts[i % shards].absorb(i, black_box(z), p as f64);
+            }
+            let mut tally = parts.remove(0);
+            for part in parts {
+                tally.merge(part);
+            }
+            black_box(tally.finish_median());
+        });
     }
     b.report();
     b.emit_json("aggregate");

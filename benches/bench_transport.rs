@@ -28,6 +28,7 @@ fn main() {
             loss_sum: 1.5,
             scalar: 0,
             quanta: (0..m).map(|_| rng.next_u64() as i128).collect(),
+            groups: Vec::new(),
         }),
     };
 

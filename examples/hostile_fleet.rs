@@ -1,0 +1,79 @@
+//! Hostile-fleet scenario sweep — Byzantine sign-flipping clients
+//! versus the three sign-tally aggregators, driven through the round
+//! engine with attack injection at the uplink boundary.
+//!
+//! Question a practitioner actually asks: *how large an adversarial
+//! fraction can the one-bit consensus absorb before the personalized
+//! models feel it, and how much does a robust tally buy back?* Each
+//! cell reports the final personalized accuracy, the total consensus
+//! sign churn over the run (a corrupted tally keeps flipping bits the
+//! honest majority had settled), and the adversarial uplinks marked.
+//!
+//! ```bash
+//! cargo run --release --example hostile_fleet [ROUNDS]
+//! ```
+
+use anyhow::Result;
+use pfed1bs::algorithms;
+use pfed1bs::config::{Attack, RunConfig};
+use pfed1bs::coordinator::Coordinator;
+use pfed1bs::data::DatasetName;
+use pfed1bs::experiments::Lab;
+
+fn main() -> Result<()> {
+    pfed1bs::util::log::init_from_env();
+    let rounds: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(15);
+
+    // attack fraction × aggregator grid: the same sign-flip fleet seen
+    // by the plain majority vote, the coordinate-wise trimmed vote
+    // (trim 30% per tail), and a 5-group median-of-means tally
+    let fractions = [0.0, 0.15, 0.3, 0.45];
+    let aggregators: [(&str, f64, usize); 3] =
+        [("vote", 0.0, 1), ("trimmed:0.3", 0.3, 1), ("mom:5", 0.0, 5)];
+
+    println!("hostile fleet: pfed1bs, signflip adversaries, {rounds} rounds");
+    println!(
+        "{:>9} {:>12} {:>12} {:>12} {:>11}",
+        "attack F", "aggregator", "final acc %", "flips", "adversaries"
+    );
+
+    let lab = Lab::new("artifacts")?;
+    for &frac in &fractions {
+        for &(label, trim_frac, mom_groups) in &aggregators {
+            let mut cfg = RunConfig::preset(DatasetName::Mnist);
+            cfg.rounds = rounds;
+            cfg.trim_frac = trim_frac;
+            cfg.mom_groups = mom_groups;
+            if frac > 0.0 {
+                cfg.attack = Attack::SignFlip { frac };
+            }
+            cfg.validate()?;
+
+            let model = lab.model_for(&cfg)?;
+            let mut alg = algorithms::build("pfed1bs")?;
+            let mut coord = Coordinator::new(cfg, &model);
+            let result = coord.run(alg.as_mut())?;
+
+            let recs = &result.history.records;
+            let flips: usize = recs.iter().filter_map(|r| r.consensus_flips).sum();
+            let marked: usize = recs.iter().map(|r| r.adversaries).sum();
+            println!(
+                "{:>9.2} {:>12} {:>12.2} {:>12} {:>11}",
+                frac,
+                label,
+                100.0 * result.final_accuracy,
+                flips,
+                marked,
+            );
+        }
+    }
+    println!(
+        "\nreading: the plain vote rides on its honest margin — small fleets of \
+         flippers only thin it, but past ~1/3 the consensus churns and accuracy \
+         follows. The trimmed vote discards both tails of every coordinate's \
+         per-client quanta before summing, and median-of-means outvotes corrupted \
+         groups; both hold the floor at fractions where the raw vote has already \
+         given the adversary the broadcast."
+    );
+    Ok(())
+}

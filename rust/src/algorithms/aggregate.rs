@@ -26,9 +26,9 @@ use anyhow::{bail, ensure, Result};
 
 use crate::algorithms::common::axpy;
 use crate::algorithms::{ClientOutput, RoundOutcome};
-use crate::comm::codec::{TallyFrame, TallyFrameView};
+use crate::comm::codec::{GroupFrame, TallyFrame, TallyFrameView};
 use crate::comm::Payload;
-use crate::sketch::bitpack::{ScalarTally, VoteAccumulator};
+use crate::sketch::bitpack::{GroupedTally, ScalarTally, VoteAccumulator};
 
 /// The algorithm-specific accumulation state, O(payload length) each.
 pub enum AggKind {
@@ -51,6 +51,25 @@ pub enum AggKind {
     /// f32 lanes: NOT order-invariant — the engine's canonical arrival
     /// order is what makes this deterministic (DESIGN.md §9).
     DenseSum(Vec<f32>),
+    /// Byzantine-robust vote over `Signs` sketches (DESIGN.md §16): each
+    /// client's contribution lands in its identity bucket and the finish
+    /// is the per-coordinate trimmed sum over the active buckets'
+    /// exact i128 quanta. `trim_frac = 0` is bit-for-bit `Vote`.
+    TrimmedVote {
+        /// identity-bucketed group partials (one bucket per fleet
+        /// client when built by pFed1BS, so trimming is per-client)
+        tally: GroupedTally,
+        /// fraction trimmed from each end of the sorted per-coordinate
+        /// values at finish
+        trim_frac: f64,
+    },
+    /// Median-of-means vote over `Signs` sketches (DESIGN.md §16): the
+    /// finish signs the per-coordinate median of the group tallies.
+    /// One group is bit-for-bit `Vote`.
+    MedianOfMeans {
+        /// the identity-bucketed group partials (client k → k mod G)
+        groups: GroupedTally,
+    },
 }
 
 /// A late uplink buffered across a round boundary (quorum mode,
@@ -118,6 +137,12 @@ impl RoundAggregator {
             (AggKind::Passthrough, None) => {}
             (AggKind::Vote(tally), Some(Payload::Signs(z))) => {
                 tally.absorb(&z, weight as f64);
+            }
+            (AggKind::TrimmedVote { tally, .. }, Some(Payload::Signs(z))) => {
+                tally.absorb(client, &z, weight as f64);
+            }
+            (AggKind::MedianOfMeans { groups }, Some(Payload::Signs(z))) => {
+                groups.absorb(client, &z, weight as f64);
             }
             (
                 AggKind::ScaledVote { tally, scale },
@@ -213,6 +238,26 @@ impl RoundAggregator {
                 loss_sum: self.loss_sum,
                 scalar,
                 quanta: tally.quanta().to_vec(),
+                groups: Vec::new(),
+            })
+        };
+        // the robust kinds ship their per-group partials instead of the
+        // flat quanta (tag-5 frames, DESIGN.md §16) — the root needs the
+        // groups, not their sum, to trim or take medians exactly
+        let grouped_frame = |tally: &GroupedTally| {
+            Payload::TallyFrame(TallyFrame {
+                absorbed: self.absorbed as u32,
+                loss_sum: self.loss_sum,
+                scalar: 0,
+                quanta: Vec::new(),
+                groups: tally
+                    .groups()
+                    .iter()
+                    .map(|g| GroupFrame {
+                        absorbed: g.absorbed() as u32,
+                        quanta: g.quanta().to_vec(),
+                    })
+                    .collect(),
             })
         };
         match &self.kind {
@@ -222,6 +267,8 @@ impl RoundAggregator {
             AggKind::SignSum(t) => Some(tally_frame(t, 0)),
             AggKind::SketchSum { tally, norm } => Some(tally_frame(tally, norm.quanta())),
             AggKind::DenseSum(sum) => Some(Payload::Dense(sum.clone())),
+            AggKind::TrimmedVote { tally, .. } => Some(grouped_frame(tally)),
+            AggKind::MedianOfMeans { groups } => Some(grouped_frame(groups)),
         }
     }
 
@@ -239,6 +286,10 @@ impl RoundAggregator {
         };
         let adopt = |tally: &mut VoteAccumulator, f: &TallyFrame| -> Result<()> {
             ensure!(
+                f.groups.is_empty(),
+                "plain tally kinds do not accept grouped merge frames"
+            );
+            ensure!(
                 f.quanta.len() == tally.m(),
                 "merge frame has {} tallies, aggregator expects {}",
                 f.quanta.len(),
@@ -248,6 +299,26 @@ impl RoundAggregator {
                 f.quanta.clone(),
                 f.absorbed as usize,
             ));
+            Ok(())
+        };
+        // grouped (tag-5) frames fold group-by-group; all shape checks
+        // run before any merge so an Err leaves the tally untouched
+        let adopt_grouped = |tally: &mut GroupedTally, f: &TallyFrame| -> Result<()> {
+            ensure!(f.scalar == 0, "unexpected scalar tally in grouped merge frame");
+            ensure!(
+                f.groups.len() == tally.group_count(),
+                "merge frame has {} groups, aggregator expects {}",
+                f.groups.len(),
+                tally.group_count()
+            );
+            ensure!(
+                f.groups.iter().all(|g| g.quanta.len() == tally.m()),
+                "merge frame group length does not match aggregator m {}",
+                tally.m()
+            );
+            for (g, grp) in f.groups.iter().enumerate() {
+                tally.merge_group_quanta(g, grp.absorbed as usize, |i| grp.quanta[i]);
+            }
             Ok(())
         };
         match &mut self.kind {
@@ -263,6 +334,8 @@ impl RoundAggregator {
                 adopt(tally, &f)?;
                 norm.merge(ScalarTally::from_quanta(f.scalar));
             }
+            AggKind::TrimmedVote { tally, .. } => adopt_grouped(tally, &f)?,
+            AggKind::MedianOfMeans { groups } => adopt_grouped(groups, &f)?,
             AggKind::Passthrough | AggKind::DenseSum(_) => {
                 bail!("this aggregator kind does not accept tally merge frames")
             }
@@ -281,12 +354,37 @@ impl RoundAggregator {
     pub fn absorb_frame_view(&mut self, f: &TallyFrameView<'_>) -> Result<()> {
         let adopt = |tally: &mut VoteAccumulator, f: &TallyFrameView<'_>| -> Result<()> {
             ensure!(
+                f.group_count() == 0,
+                "plain tally kinds do not accept grouped merge frames"
+            );
+            ensure!(
                 f.quanta_len() == tally.m(),
                 "merge frame has {} tallies, aggregator expects {}",
                 f.quanta_len(),
                 tally.m()
             );
             tally.merge_quanta(f.absorbed as usize, |i| f.quantum(i));
+            Ok(())
+        };
+        let adopt_grouped = |tally: &mut GroupedTally, f: &TallyFrameView<'_>| -> Result<()> {
+            ensure!(f.scalar == 0, "unexpected scalar tally in grouped merge frame");
+            ensure!(
+                f.group_count() == tally.group_count(),
+                "merge frame has {} groups, aggregator expects {}",
+                f.group_count(),
+                tally.group_count()
+            );
+            ensure!(
+                f.group_count() > 0 && f.m() == tally.m(),
+                "merge frame group length {} does not match aggregator m {}",
+                f.m(),
+                tally.m()
+            );
+            for g in 0..f.group_count() {
+                tally.merge_group_quanta(g, f.group_absorbed(g) as usize, |i| {
+                    f.group_quantum(g, i)
+                });
+            }
             Ok(())
         };
         match &mut self.kind {
@@ -302,6 +400,8 @@ impl RoundAggregator {
                 adopt(tally, f)?;
                 norm.merge(ScalarTally::from_quanta(f.scalar));
             }
+            AggKind::TrimmedVote { tally, .. } => adopt_grouped(tally, f)?,
+            AggKind::MedianOfMeans { groups } => adopt_grouped(groups, f)?,
             AggKind::Passthrough | AggKind::DenseSum(_) => {
                 bail!("this aggregator kind does not accept tally merge frames")
             }
@@ -336,6 +436,27 @@ impl RoundAggregator {
             (AggKind::DenseSum(a), AggKind::DenseSum(b)) => {
                 ensure!(a.len() == b.len(), "merging dense sums of different lengths");
                 axpy(a, 1.0, &b);
+            }
+            (
+                AggKind::TrimmedVote { tally: a, trim_frac: fa },
+                AggKind::TrimmedVote { tally: b, trim_frac: fb },
+            ) => {
+                ensure!(
+                    fa.to_bits() == fb.to_bits(),
+                    "merging trimmed votes with different trim fractions"
+                );
+                ensure!(
+                    a.group_count() == b.group_count(),
+                    "merging grouped tallies with different group counts"
+                );
+                a.merge(b);
+            }
+            (AggKind::MedianOfMeans { groups: a }, AggKind::MedianOfMeans { groups: b }) => {
+                ensure!(
+                    a.group_count() == b.group_count(),
+                    "merging grouped tallies with different group counts"
+                );
+                a.merge(b);
             }
             _ => bail!("merging aggregators of different kinds"),
         }
@@ -618,6 +739,146 @@ mod tests {
         let mut short = RoundAggregator::new(AggKind::Vote(VoteAccumulator::new(5)));
         assert!(short.absorb_frame(frame).is_err());
         assert_eq!(short.absorbed(), 0);
+    }
+
+    #[test]
+    fn robust_kinds_stream_and_reduce_to_vote_when_disarmed() {
+        // trim=0 and groups=1 must leave the robust kinds bit-for-bit
+        // equal to today's Vote on the same uplinks
+        let zs: Vec<SignVec> = [
+            &[1.0f32, -1.0, 1.0][..],
+            &[-1.0, -1.0, 1.0],
+            &[1.0, 1.0, -1.0],
+        ]
+        .iter()
+        .map(|s| SignVec::from_signs(s))
+        .collect();
+        let weights = [0.5f32, 0.25, 0.25];
+
+        let mut vote = RoundAggregator::new(AggKind::Vote(VoteAccumulator::new(3)));
+        let mut trimmed = RoundAggregator::new(AggKind::TrimmedVote {
+            tally: GroupedTally::new(3, 3),
+            trim_frac: 0.0,
+        });
+        let mut mom = RoundAggregator::new(AggKind::MedianOfMeans {
+            groups: GroupedTally::new(3, 1),
+        });
+        for (k, (z, &w)) in zs.iter().zip(&weights).enumerate() {
+            for agg in [&mut vote, &mut trimmed, &mut mom] {
+                agg.absorb(out(k, Some(Payload::Signs(z.clone())), 1.0), w).unwrap();
+            }
+        }
+        let (AggKind::Vote(v), _, 3, _) = vote.into_parts() else { panic!() };
+        let (AggKind::TrimmedVote { tally: t, .. }, _, 3, _) = trimmed.into_parts() else {
+            panic!()
+        };
+        let (AggKind::MedianOfMeans { groups: g }, _, 3, _) = mom.into_parts() else {
+            panic!()
+        };
+        assert_eq!(t.total_quanta(), v.quanta(), "grouped total != vote quanta");
+        assert_eq!(t.finish_trimmed(0.0), v.finish());
+        assert_eq!(g.finish_median(), v.finish());
+    }
+
+    #[test]
+    fn grouped_merge_frame_round_trip_is_bit_identical_to_in_memory_merge() {
+        use crate::comm::codec::{decode, encode, PayloadView};
+        // an edge shard absorbs three clients into a 2-group tally; the
+        // root folding the shard's wire frame (owned AND borrowed) must
+        // land on exactly the in-memory merge's per-group quanta
+        let zs: Vec<SignVec> = [
+            &[1.0f32, -1.0, 1.0][..],
+            &[-1.0, -1.0, 1.0],
+            &[1.0, 1.0, -1.0],
+        ]
+        .iter()
+        .map(|s| SignVec::from_signs(s))
+        .collect();
+        let fresh = || {
+            RoundAggregator::new(AggKind::TrimmedVote {
+                tally: GroupedTally::new(3, 2),
+                trim_frac: 0.25,
+            })
+        };
+        let mut shard = fresh();
+        for (k, z) in zs.iter().enumerate() {
+            let mut o = out(k, Some(Payload::Signs(z.clone())), 2.0);
+            o.state = None;
+            shard.absorb(o, 0.25 + k as f32 * 0.25).unwrap();
+        }
+        let frame = shard.merge_payload().expect("robust kinds ship a frame");
+        let bytes = encode(&frame);
+
+        let mut via_owned = fresh();
+        via_owned.absorb_frame(decode(&bytes).unwrap()).unwrap();
+        let mut via_view = fresh();
+        let Ok(PayloadView::TallyFrame(view)) = Payload::decode_borrowed(&bytes) else {
+            panic!("grouped merge frame must decode as a tally view")
+        };
+        via_view.absorb_frame_view(&view).unwrap();
+        let mut via_merge = fresh();
+        via_merge.merge(shard).unwrap();
+
+        let unpack = |agg: RoundAggregator| {
+            let (AggKind::TrimmedVote { tally, .. }, _, 3, o) = agg.into_parts() else {
+                panic!("kind changed")
+            };
+            (tally, o)
+        };
+        let (ta, oa) = unpack(via_owned);
+        let (tb, ob) = unpack(via_merge);
+        let (tc, oc) = unpack(via_view);
+        for (x, y) in [(&ta, &tb), (&tc, &tb)] {
+            for (ga, gb) in x.groups().iter().zip(y.groups()) {
+                assert_eq!(ga.quanta(), gb.quanta(), "wire frame altered a group");
+                assert_eq!(ga.absorbed(), gb.absorbed());
+            }
+        }
+        assert_eq!(oa.train_loss.to_bits(), ob.train_loss.to_bits());
+        assert_eq!(oc.train_loss.to_bits(), ob.train_loss.to_bits());
+
+        // shape guards: wrong group count, wrong m, plain kinds
+        let mut wrong_g = RoundAggregator::new(AggKind::MedianOfMeans {
+            groups: GroupedTally::new(3, 5),
+        });
+        assert!(wrong_g.absorb_frame_view(&view).is_err());
+        assert_eq!(wrong_g.absorbed(), 0, "failed adopt must stay untouched");
+        let mut wrong_m = RoundAggregator::new(AggKind::TrimmedVote {
+            tally: GroupedTally::new(7, 2),
+            trim_frac: 0.25,
+        });
+        assert!(wrong_m.absorb_frame(decode(&bytes).unwrap()).is_err());
+        let mut plain = RoundAggregator::new(AggKind::Vote(VoteAccumulator::new(3)));
+        assert!(plain.absorb_frame(decode(&bytes).unwrap()).is_err());
+        assert!(plain.absorb_frame_view(&view).is_err());
+        assert_eq!(plain.absorbed(), 0);
+    }
+
+    #[test]
+    fn robust_merges_require_matching_shapes() {
+        let a = || AggKind::TrimmedVote {
+            tally: GroupedTally::new(2, 3),
+            trim_frac: 0.2,
+        };
+        let mut base = RoundAggregator::new(a());
+        base.merge(RoundAggregator::new(a())).unwrap();
+        // a different trim fraction is a config split, not a shard
+        let other = RoundAggregator::new(AggKind::TrimmedVote {
+            tally: GroupedTally::new(2, 3),
+            trim_frac: 0.3,
+        });
+        assert!(base.merge(other).is_err());
+        // a different group count can't fold group-by-group
+        let wrong_g = RoundAggregator::new(AggKind::MedianOfMeans {
+            groups: GroupedTally::new(2, 4),
+        });
+        let mut mom = RoundAggregator::new(AggKind::MedianOfMeans {
+            groups: GroupedTally::new(2, 3),
+        });
+        assert!(mom.merge(wrong_g).is_err());
+        // and robust kinds never merge into plain Vote
+        let mut vote = RoundAggregator::new(AggKind::Vote(VoteAccumulator::new(2)));
+        assert!(vote.merge(RoundAggregator::new(a())).is_err());
     }
 
     #[test]

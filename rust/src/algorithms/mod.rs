@@ -296,6 +296,27 @@ pub trait Algorithm: Send + Sync {
     fn restore(&mut self, _models: Vec<Vec<f32>>, _consensus: Vec<f32>) -> Result<()> {
         anyhow::bail!("{} does not support checkpoint restore", self.name())
     }
+
+    /// Auxiliary per-client checkpoint state beyond the models: pFed1BS
+    /// returns its error-feedback residuals here (DESIGN.md §16), rides
+    /// in checkpoint format v3. Empty = none, and the checkpoint stays
+    /// byte-identical to the v2 layout.
+    fn snapshot_aux(&self) -> Vec<Vec<f32>> {
+        Vec::new()
+    }
+
+    /// Restore the auxiliary state produced by `snapshot_aux`. The
+    /// default accepts only an empty vector (v2-and-earlier
+    /// checkpoints); algorithms with auxiliary state override it.
+    fn restore_aux(&mut self, aux: Vec<Vec<f32>>) -> Result<()> {
+        anyhow::ensure!(
+            aux.is_empty(),
+            "{} carries no auxiliary checkpoint state, got {} vectors",
+            self.name(),
+            aux.len()
+        );
+        Ok(())
+    }
 }
 
 /// All registered algorithm names, in Table-2 row order.

@@ -40,7 +40,7 @@ use crate::algorithms::{
 use crate::comm::Payload;
 use crate::config::ProjectionKind;
 use crate::data::BatchIter;
-use crate::sketch::bitpack::{SignVec, VoteAccumulator};
+use crate::sketch::bitpack::{GroupedTally, SignVec, VoteAccumulator};
 use crate::sketch::Projection;
 
 /// The paper's Algorithm 1: personalized models with one-bit,
@@ -58,6 +58,22 @@ pub struct PFed1BS {
     /// never broadcasts.
     v_packed: SignVec,
     projection_kind: ProjectionKind,
+    /// coordinate-wise trimmed vote when > 0 (DESIGN.md §16): each
+    /// client is its own group, the `trim_frac` tails of per-client
+    /// weighted quanta are dropped per bit. 0.0 = plain vote.
+    trim_frac: f64,
+    /// median-of-means groups when > 1 (DESIGN.md §16): clients bucket
+    /// by `k % groups`, the per-bit median of group tallies is signed.
+    /// 1 = plain vote.
+    mom_groups: usize,
+    /// one-bit error feedback (DESIGN.md §16): each client sketches
+    /// s_k = Φw_k + e_k and carries forward e_k' = s_k − α·sign(s_k),
+    /// the residual of its one-bit quantization (α = mean |s_k|)
+    error_feedback: bool,
+    /// per-client residuals e_k, length m once client k has uplinked
+    /// under error feedback (empty before, and the whole vec is empty —
+    /// zero bytes in checkpoints — while the knob is off)
+    efs: Vec<Vec<f32>>,
 }
 
 impl PFed1BS {
@@ -68,6 +84,10 @@ impl PFed1BS {
             v: Vec::new(),
             v_packed: SignVec::default(),
             projection_kind: ProjectionKind::Fht,
+            trim_frac: 0.0,
+            mom_groups: 1,
+            error_feedback: false,
+            efs: Vec::new(),
         }
     }
 
@@ -77,7 +97,26 @@ impl PFed1BS {
     /// without the PJRT `init` path.
     pub fn with_state(wks: Vec<Vec<f32>>, v: Vec<f32>) -> Self {
         let v_packed = SignVec::from_signs(&v);
-        PFed1BS { wks, v, v_packed, projection_kind: ProjectionKind::Fht }
+        PFed1BS {
+            wks,
+            v,
+            v_packed,
+            projection_kind: ProjectionKind::Fht,
+            trim_frac: 0.0,
+            mom_groups: 1,
+            error_feedback: false,
+            efs: Vec::new(),
+        }
+    }
+
+    /// Select a robust tally for the server phase (DESIGN.md §16):
+    /// `trim_frac > 0` arms the coordinate-wise trimmed vote,
+    /// `mom_groups > 1` the median-of-means. Both zeroed/one = the plain
+    /// vote, bit-for-bit. Tests drive the hand-built state path through
+    /// this; real runs set it from the config in `init`.
+    pub fn set_robust_aggregation(&mut self, trim_frac: f64, mom_groups: usize) {
+        self.trim_frac = trim_frac;
+        self.mom_groups = mom_groups.max(1);
     }
 
     /// Decode the consensus a client's channel delivered (f32 lanes at the
@@ -231,6 +270,16 @@ impl Algorithm for PFed1BS {
         self.wks = (0..ctx.data.num_clients()).map(|_| w0.clone()).collect();
         self.v = vec![0.0f32; m]; // v^0 = 0 (Algorithm 1 line 2)
         self.v_packed = SignVec::from_signs(&self.v);
+        self.trim_frac = ctx.cfg.trim_frac;
+        self.mom_groups = ctx.cfg.mom_groups.max(1);
+        self.error_feedback = ctx.cfg.error_feedback;
+        // empty per-client residuals until first uplink; fully empty
+        // (zero checkpoint bytes) while the knob is off
+        self.efs = if self.error_feedback {
+            vec![Vec::new(); self.wks.len()]
+        } else {
+            Vec::new()
+        };
         Ok(())
     }
 
@@ -273,6 +322,36 @@ impl Algorithm for PFed1BS {
                 dense_reg_steps(ctx, k, &mut w, v, t as u64)?
             }
         };
+        if self.error_feedback {
+            // error-feedback sketch (DESIGN.md §16): quantize the
+            // residual-compensated sketch s = Φw + e and carry forward
+            // what the one bit lost, e' = s − α·sign(s) with α = mean|s|
+            // (the per-round scale EDEN/FedBAT-style quantizers fit).
+            // Uses the rust projection operator for BOTH projection
+            // kinds — the EF mode needs the pre-sign lanes, which the
+            // fused HLO sketch never materializes.
+            let mut s = ctx.projection.forward(&w);
+            if let Some(e) = self.efs.get(k) {
+                for (si, &ei) in s.iter_mut().zip(e) {
+                    *si += ei;
+                }
+            }
+            let z = SignVec::from_signs(&s);
+            let alpha = s.iter().map(|x| x.abs()).sum::<f32>() / s.len().max(1) as f32;
+            let residual: Vec<f32> =
+                s.iter().enumerate().map(|(i, &si)| si - alpha * z.sign(i)).collect();
+            // the residual rides home inside the write-back state
+            // (w ++ e', split back apart in finish_aggregate) — the
+            // uplink payload itself stays the same m bits
+            let mut state = w;
+            state.extend_from_slice(&residual);
+            return Ok(ClientOutput {
+                client: k,
+                uplink: Some(Uplink::new(t, Payload::Signs(z))),
+                state: Some(state),
+                stats: ClientStats { loss },
+            });
+        }
         // one-bit sketch of the updated personalized model, packed at
         // the compression boundary — the payload ships as u64 words
         let z = match self.projection_kind {
@@ -289,8 +368,11 @@ impl Algorithm for PFed1BS {
 
     fn supports_batched_rounds(&self) -> bool {
         // the dense-Gaussian ablation computes its regularizer in rust
-        // per client and has no stacked artifact — FHT only
-        self.projection_kind == ProjectionKind::Fht
+        // per client and has no stacked artifact — FHT only. Error
+        // feedback needs the pre-sign sketch lanes per client, which the
+        // stacked sketch dispatch never materializes, so it stays on the
+        // per-client path too.
+        self.projection_kind == ProjectionKind::Fht && !self.error_feedback
     }
 
     fn client_round_batched(
@@ -327,8 +409,26 @@ impl Algorithm for PFed1BS {
     }
 
     fn begin_aggregate(&self, _t: usize) -> RoundAggregator {
-        // O(m) tally state, however many clients end up delivering
-        RoundAggregator::new(AggKind::Vote(VoteAccumulator::new(self.v.len())))
+        // O(m) tally state, however many clients end up delivering.
+        // The robust knobs swap in the grouped exact tallies
+        // (DESIGN.md §16); disarmed they ARE the plain vote bit-for-bit,
+        // but the plain accumulator stays the default so honest-fleet
+        // rounds keep today's state layout and wire frames byte-for-byte.
+        let m = self.v.len();
+        if self.trim_frac > 0.0 {
+            // one group per client: the coordinate-wise trimmed mean
+            // over per-client weighted sign quanta (Yin et al. style)
+            RoundAggregator::new(AggKind::TrimmedVote {
+                tally: GroupedTally::new(m, self.wks.len().max(1)),
+                trim_frac: self.trim_frac,
+            })
+        } else if self.mom_groups > 1 {
+            RoundAggregator::new(AggKind::MedianOfMeans {
+                groups: GroupedTally::new(m, self.mom_groups),
+            })
+        } else {
+            RoundAggregator::new(AggKind::Vote(VoteAccumulator::new(m)))
+        }
     }
 
     fn finish_aggregate(
@@ -339,16 +439,35 @@ impl Algorithm for PFed1BS {
     ) -> Result<RoundOutcome> {
         let (kind, states, absorbed, outcome) = agg.into_parts();
         for (k, w) in states {
+            if self.error_feedback {
+                // split the ridden-along residual back off the
+                // personalized write-back (w ++ e', length n + m)
+                let n = self.wks[k].len();
+                if w.len() == n + self.v.len() {
+                    let mut w = w;
+                    self.efs[k] = w.split_off(n);
+                    self.wks[k] = w;
+                    continue;
+                }
+            }
             self.wks[k] = w;
         }
-        let AggKind::Vote(tally) = kind else {
-            anyhow::bail!("pfed1bs aggregator must be the majority-vote tally");
+        // sign the streamed tally into the next consensus (Lemma 1 for
+        // the plain vote; its trimmed / median-of-means robustification
+        // under attack — DESIGN.md §16); a round that delivered nothing
+        // keeps v^{t} — voting over zero sketches would fabricate an
+        // all-+1 consensus
+        let vote = match kind {
+            AggKind::Vote(tally) => (absorbed > 0).then(|| tally.finish()),
+            AggKind::TrimmedVote { tally, trim_frac } => {
+                (absorbed > 0).then(|| tally.finish_trimmed(trim_frac))
+            }
+            AggKind::MedianOfMeans { groups } => {
+                (absorbed > 0).then(|| groups.finish_median())
+            }
+            _ => anyhow::bail!("pfed1bs aggregator must be a sign-tally kind"),
         };
-        // sign the streamed tally into the next consensus (Lemma 1);
-        // a round that delivered nothing keeps v^{t} — voting over zero
-        // sketches would fabricate an all-+1 consensus
-        if absorbed > 0 {
-            let vote = tally.finish();
+        if let Some(vote) = vote {
             self.v = vote.to_signs();
             self.v_packed = vote;
         }
@@ -387,6 +506,34 @@ impl Algorithm for PFed1BS {
         self.wks = models;
         self.v_packed = SignVec::from_signs(&consensus);
         self.v = consensus;
+        Ok(())
+    }
+
+    fn snapshot_aux(&self) -> Vec<Vec<f32>> {
+        self.efs.clone()
+    }
+
+    fn restore_aux(&mut self, aux: Vec<Vec<f32>>) -> Result<()> {
+        if aux.is_empty() {
+            // pre-v3 checkpoint (or error feedback was off when saved):
+            // resume with cold residuals
+            if self.error_feedback {
+                self.efs = vec![Vec::new(); self.wks.len()];
+            }
+            return Ok(());
+        }
+        anyhow::ensure!(
+            aux.len() == self.wks.len(),
+            "checkpoint has {} residuals, run has {} clients",
+            aux.len(),
+            self.wks.len()
+        );
+        anyhow::ensure!(
+            aux.iter().all(|e| e.is_empty() || e.len() == self.v.len()),
+            "checkpoint residual length != m {}",
+            self.v.len()
+        );
+        self.efs = aux;
         Ok(())
     }
 }

@@ -42,6 +42,36 @@ pub struct TallyFrame {
     pub scalar: i128,
     /// per-bit tally quanta, length m
     pub quanta: Vec<i128>,
+    /// per-group partial tallies of the robust kinds (DESIGN.md §16).
+    /// A frame carries EITHER flat `quanta` OR `groups`, never both:
+    /// empty here means a plain tag-4 frame, byte-identical to the
+    /// pre-robust wire format; non-empty means a tag-5 frame whose
+    /// groups all carry the same m quanta.
+    pub groups: Vec<GroupFrame>,
+}
+
+impl TallyFrame {
+    /// Logical sketch length m, whichever section carries it.
+    pub fn m(&self) -> usize {
+        match self.groups.first() {
+            Some(g) => g.quanta.len(),
+            None => self.quanta.len(),
+        }
+    }
+}
+
+/// One group's partial tally inside a grouped (tag-5) merge frame: the
+/// exact per-bit i128 quanta plus how many uplinks the group absorbed
+/// on this shard — everything [`GroupedTally::merge_group_quanta`]
+/// needs to fold the shard in bit-for-bit.
+///
+/// [`GroupedTally::merge_group_quanta`]: crate::sketch::bitpack::GroupedTally::merge_group_quanta
+#[derive(Clone, Debug, PartialEq)]
+pub struct GroupFrame {
+    /// uplinks this group absorbed on this shard
+    pub absorbed: u32,
+    /// the group's per-bit tally quanta, length m
+    pub quanta: Vec<i128>,
 }
 
 /// A decoded payload.
@@ -66,7 +96,7 @@ impl Payload {
             Payload::Dense(v) => v.len(),
             Payload::Signs(z) => z.m(),
             Payload::ScaledSigns { signs, .. } => signs.m(),
-            Payload::TallyFrame(f) => f.quanta.len(),
+            Payload::TallyFrame(f) => f.m(),
         }
     }
 
@@ -124,10 +154,51 @@ impl Payload {
                     loss_sum: f64::from_le_bytes(bytes[9..17].try_into().unwrap()),
                     scalar: i128::from_le_bytes(bytes[17..33].try_into().unwrap()),
                     quanta: &bytes[33..],
+                    groups: &[],
+                    group_m: 0,
+                    group_count: 0,
+                }))
+            }
+            TAG_GROUPED => {
+                let (g, need) = grouped_frame_need(bytes, len)?;
+                if bytes.len() != need {
+                    bail!("grouped tally frame: expected {need} bytes, got {}", bytes.len());
+                }
+                Ok(PayloadView::TallyFrame(TallyFrameView {
+                    absorbed: u32::from_le_bytes(bytes[5..9].try_into().unwrap()),
+                    loss_sum: f64::from_le_bytes(bytes[9..17].try_into().unwrap()),
+                    scalar: i128::from_le_bytes(bytes[17..33].try_into().unwrap()),
+                    quanta: &[],
+                    groups: &bytes[37..],
+                    group_m: len,
+                    group_count: g,
                 }))
             }
             t => bail!("unknown payload tag {t}"),
         }
+    }
+}
+
+/// Validate a grouped (tag-5) frame header: reads the group count and
+/// returns `(g, exact frame size)`. All arithmetic is checked so an
+/// adversarial `m × g` product can only produce `Err`, never an
+/// overflow panic or a bogus small size that over-reads the buffer.
+fn grouped_frame_need(bytes: &[u8], m: usize) -> Result<(usize, usize)> {
+    if bytes.len() < 37 {
+        bail!("grouped tally frame too short ({} bytes)", bytes.len());
+    }
+    let g = u32::from_le_bytes(bytes[33..37].try_into().unwrap()) as usize;
+    if g == 0 {
+        bail!("grouped tally frame with zero groups");
+    }
+    let need = 16usize
+        .checked_mul(m)
+        .and_then(|q| q.checked_add(4))
+        .and_then(|stride| stride.checked_mul(g))
+        .and_then(|body| body.checked_add(37));
+    match need {
+        Some(need) => Ok((g, need)),
+        None => bail!("grouped tally frame size overflows (m={m}, groups={g})"),
     }
 }
 
@@ -179,10 +250,14 @@ pub struct TallyFrameView<'a> {
     /// companion scalar tally quanta
     pub scalar: i128,
     quanta: &'a [u8],
+    groups: &'a [u8],
+    group_m: usize,
+    group_count: usize,
 }
 
 impl<'a> TallyFrameView<'a> {
-    /// Number of tally quanta carried (the shard's m).
+    /// Number of flat tally quanta carried (the shard's m for tag-4
+    /// frames; 0 for grouped frames).
     pub fn quanta_len(&self) -> usize {
         self.quanta.len() / 16
     }
@@ -194,6 +269,40 @@ impl<'a> TallyFrameView<'a> {
         i128::from_le_bytes(self.quanta[16 * i..16 * i + 16].try_into().unwrap())
     }
 
+    /// Number of group partials carried (0 for plain tag-4 frames).
+    pub fn group_count(&self) -> usize {
+        self.group_count
+    }
+
+    /// Logical sketch length m, whichever section carries it — the
+    /// borrowed twin of [`TallyFrame::m`].
+    pub fn m(&self) -> usize {
+        if self.group_count > 0 {
+            self.group_m
+        } else {
+            self.quanta_len()
+        }
+    }
+
+    /// Wire byte stride of one group record: absorbed u32 + m quanta.
+    fn group_stride(&self) -> usize {
+        4 + 16 * self.group_m
+    }
+
+    /// Uplinks group `g` absorbed on this shard.
+    #[inline]
+    pub fn group_absorbed(&self, g: usize) -> u32 {
+        let lo = g * self.group_stride();
+        u32::from_le_bytes(self.groups[lo..lo + 4].try_into().unwrap())
+    }
+
+    /// The i-th quantum of group `g`, decoded bit-exact off the wire.
+    #[inline]
+    pub fn group_quantum(&self, g: usize, i: usize) -> i128 {
+        let lo = g * self.group_stride() + 4 + 16 * i;
+        i128::from_le_bytes(self.groups[lo..lo + 16].try_into().unwrap())
+    }
+
     /// Materialize the owned [`TallyFrame`].
     pub fn to_frame(self) -> TallyFrame {
         TallyFrame {
@@ -201,6 +310,12 @@ impl<'a> TallyFrameView<'a> {
             loss_sum: self.loss_sum,
             scalar: self.scalar,
             quanta: (0..self.quanta_len()).map(|i| self.quantum(i)).collect(),
+            groups: (0..self.group_count)
+                .map(|g| GroupFrame {
+                    absorbed: self.group_absorbed(g),
+                    quanta: (0..self.group_m).map(|i| self.group_quantum(g, i)).collect(),
+                })
+                .collect(),
         }
     }
 }
@@ -235,7 +350,7 @@ impl<'a> PayloadView<'a> {
             PayloadView::Dense(v) => v.len(),
             PayloadView::Signs(z) => z.m(),
             PayloadView::ScaledSigns { signs, .. } => signs.m(),
-            PayloadView::TallyFrame(f) => f.quanta_len(),
+            PayloadView::TallyFrame(f) => f.m(),
         }
     }
 
@@ -262,6 +377,7 @@ const TAG_DENSE: u8 = 1;
 const TAG_SIGNS: u8 = 2;
 const TAG_SCALED: u8 = 3;
 const TAG_TALLY: u8 = 4;
+const TAG_GROUPED: u8 = 5;
 
 fn put_words(out: &mut Vec<u8>, z: &SignVec) {
     for w in z.words() {
@@ -305,20 +421,53 @@ pub fn encode(p: &Payload) -> Vec<u8> {
             out
         }
         Payload::TallyFrame(f) => {
-            // tag | m u32 | absorbed u32 | loss_sum f64 bits | scalar
-            // i128 | quanta i128 × m — all little-endian. i128 LE bytes
-            // round-trip exactly, so the frame carries the shard's
-            // fixed-point state without any precision cliff.
-            let mut out = Vec::with_capacity(33 + 16 * f.quanta.len());
-            out.push(TAG_TALLY);
-            out.extend_from_slice(&(f.quanta.len() as u32).to_le_bytes());
-            out.extend_from_slice(&f.absorbed.to_le_bytes());
-            out.extend_from_slice(&f.loss_sum.to_le_bytes());
-            out.extend_from_slice(&f.scalar.to_le_bytes());
-            for q in &f.quanta {
-                out.extend_from_slice(&q.to_le_bytes());
+            if f.groups.is_empty() {
+                // tag | m u32 | absorbed u32 | loss_sum f64 bits | scalar
+                // i128 | quanta i128 × m — all little-endian. i128 LE
+                // bytes round-trip exactly, so the frame carries the
+                // shard's fixed-point state without any precision cliff.
+                let mut out = Vec::with_capacity(33 + 16 * f.quanta.len());
+                out.push(TAG_TALLY);
+                out.extend_from_slice(&(f.quanta.len() as u32).to_le_bytes());
+                out.extend_from_slice(&f.absorbed.to_le_bytes());
+                out.extend_from_slice(&f.loss_sum.to_le_bytes());
+                out.extend_from_slice(&f.scalar.to_le_bytes());
+                for q in &f.quanta {
+                    out.extend_from_slice(&q.to_le_bytes());
+                }
+                out
+            } else {
+                // tag | m u32 | absorbed u32 | loss_sum f64 bits |
+                // scalar i128 | g u32 | g × (absorbed u32 | quanta i128
+                // × m) — the grouped shard state of the robust tallies
+                // (DESIGN.md §16). A frame carries either section, never
+                // both, so plain frames keep their tag-4 bytes.
+                debug_assert!(
+                    f.quanta.is_empty(),
+                    "grouped tally frames must not carry flat quanta"
+                );
+                let m = f.m();
+                let mut out =
+                    Vec::with_capacity(37 + f.groups.len() * (4 + 16 * m));
+                out.push(TAG_GROUPED);
+                out.extend_from_slice(&(m as u32).to_le_bytes());
+                out.extend_from_slice(&f.absorbed.to_le_bytes());
+                out.extend_from_slice(&f.loss_sum.to_le_bytes());
+                out.extend_from_slice(&f.scalar.to_le_bytes());
+                out.extend_from_slice(&(f.groups.len() as u32).to_le_bytes());
+                for grp in &f.groups {
+                    debug_assert_eq!(
+                        grp.quanta.len(),
+                        m,
+                        "every group of a frame carries the same m"
+                    );
+                    out.extend_from_slice(&grp.absorbed.to_le_bytes());
+                    for q in &grp.quanta {
+                        out.extend_from_slice(&q.to_le_bytes());
+                    }
+                }
+                out
             }
-            out
         }
     }
 }
@@ -372,7 +521,42 @@ pub fn decode(bytes: &[u8]) -> Result<Payload> {
                 .chunks_exact(16)
                 .map(|c| i128::from_le_bytes(c.try_into().unwrap()))
                 .collect();
-            Ok(Payload::TallyFrame(TallyFrame { absorbed, loss_sum, scalar, quanta }))
+            Ok(Payload::TallyFrame(TallyFrame {
+                absorbed,
+                loss_sum,
+                scalar,
+                quanta,
+                groups: Vec::new(),
+            }))
+        }
+        TAG_GROUPED => {
+            let (g, need) = grouped_frame_need(bytes, len)?;
+            if bytes.len() != need {
+                bail!("grouped tally frame: expected {need} bytes, got {}", bytes.len());
+            }
+            let absorbed = u32::from_le_bytes(bytes[5..9].try_into().unwrap());
+            let loss_sum = f64::from_le_bytes(bytes[9..17].try_into().unwrap());
+            let scalar = i128::from_le_bytes(bytes[17..33].try_into().unwrap());
+            let stride = 4 + 16 * len;
+            let groups = (0..g)
+                .map(|gi| {
+                    let lo = 37 + gi * stride;
+                    GroupFrame {
+                        absorbed: u32::from_le_bytes(bytes[lo..lo + 4].try_into().unwrap()),
+                        quanta: bytes[lo + 4..lo + stride]
+                            .chunks_exact(16)
+                            .map(|c| i128::from_le_bytes(c.try_into().unwrap()))
+                            .collect(),
+                    }
+                })
+                .collect();
+            Ok(Payload::TallyFrame(TallyFrame {
+                absorbed,
+                loss_sum,
+                scalar,
+                quanta: Vec::new(),
+                groups,
+            }))
         }
         t => bail!("unknown payload tag {t}"),
     }
@@ -384,7 +568,8 @@ pub fn frame_bytes(p: &Payload) -> usize {
         Payload::Dense(v) => 5 + 4 * v.len(),
         Payload::Signs(z) => 5 + packed_bytes(z.m()),
         Payload::ScaledSigns { signs, .. } => 9 + packed_bytes(signs.m()),
-        Payload::TallyFrame(f) => 33 + 16 * f.quanta.len(),
+        Payload::TallyFrame(f) if f.groups.is_empty() => 33 + 16 * f.quanta.len(),
+        Payload::TallyFrame(f) => 37 + f.groups.len() * (4 + 16 * f.m()),
     }
 }
 
@@ -458,6 +643,26 @@ mod tests {
             loss_sum: rng.f64() * 10.0,
             scalar: wide(rng),
             quanta: (0..m).map(|_| wide(rng)).collect(),
+            groups: Vec::new(),
+        }
+    }
+
+    fn rand_grouped(rng: &mut Rng, m: usize) -> TallyFrame {
+        let wide = |rng: &mut Rng| {
+            ((rng.next_u64() as u128) << 64 | rng.next_u64() as u128) as i128
+        };
+        let g = rng.below(6) + 1;
+        TallyFrame {
+            absorbed: rng.next_u32(),
+            loss_sum: rng.f64() * 10.0,
+            scalar: wide(rng),
+            quanta: Vec::new(),
+            groups: (0..g)
+                .map(|_| GroupFrame {
+                    absorbed: rng.next_u32(),
+                    quanta: (0..m).map(|_| wide(rng)).collect(),
+                })
+                .collect(),
         }
     }
 
@@ -477,6 +682,47 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn grouped_tally_frame_round_trip_is_exact() {
+        // the robust kinds' grouped shard state (tag 5) must round-trip
+        // every group's i128 quanta and absorb count bit-for-bit
+        check("codec_grouped_round_trip", 40, |rng| {
+            let m = rng.below(200);
+            let p = Payload::TallyFrame(rand_grouped(rng, m));
+            let bytes = encode(&p);
+            if bytes.len() != frame_bytes(&p) {
+                return Err("frame_bytes mismatch".into());
+            }
+            if decode(&bytes).map_err(|e| e.to_string())? != p {
+                return Err("grouped frame round trip".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn grouped_frame_rejects_zero_groups_and_overflowing_sizes() {
+        // g=0 has no legitimate producer (encode picks tag 4 for group-
+        // less frames), so the decoders reject it instead of creating a
+        // second wire spelling of the same payload
+        let mut zero_g = vec![TAG_GROUPED];
+        zero_g.extend_from_slice(&1u32.to_le_bytes()); // m = 1
+        zero_g.extend_from_slice(&[0u8; 28]); // absorbed, loss, scalar
+        zero_g.extend_from_slice(&0u32.to_le_bytes()); // g = 0
+        assert_eq!(zero_g.len(), 37);
+        assert!(decode(&zero_g).is_err());
+        assert!(Payload::decode_borrowed(&zero_g).is_err());
+
+        // an adversarial m × g product that overflows usize must Err,
+        // not panic or wrap into a small bogus size
+        let mut huge = vec![TAG_GROUPED];
+        huge.extend_from_slice(&u32::MAX.to_le_bytes()); // m
+        huge.extend_from_slice(&[0u8; 28]);
+        huge.extend_from_slice(&u32::MAX.to_le_bytes()); // g
+        assert!(decode(&huge).is_err());
+        assert!(Payload::decode_borrowed(&huge).is_err());
     }
 
     #[test]
@@ -515,7 +761,7 @@ mod tests {
     /// from the encoder under test — they are written out by hand.
     #[test]
     fn golden_wire_frames() {
-        let cases: [(Payload, &str); 7] = [
+        let cases: [(Payload, &str); 8] = [
             // tag 1 (dense), [1.0, -2.5]:
             // 01 | len=2 le | 1.0 = 0x3f800000 le | -2.5 = 0xc0200000 le
             (Payload::Dense(vec![1.0, -2.5]), "01020000000000803f000020c0"),
@@ -558,6 +804,7 @@ mod tests {
                     loss_sum: 0.5,
                     scalar: 3,
                     quanta: vec![1, -2],
+                    groups: vec![],
                 }),
                 "040200000002000000000000000000e03f\
                  03000000000000000000000000000000\
@@ -571,9 +818,32 @@ mod tests {
                     loss_sum: 0.0,
                     scalar: -1,
                     quanta: vec![],
+                    groups: vec![],
                 }),
                 "0400000000000000000000000000000000\
                  ffffffffffffffffffffffffffffffff",
+            ),
+            // tag 5 (grouped tally frame), m=1, absorbed=3, loss=0,
+            // scalar=0, two groups {absorbed=2, quanta [+5]} and
+            // {absorbed=1, quanta [−1]}:
+            // 05 | m=1 le | absorbed=3 le | 0.0 f64 | 0 i128 | g=2 le |
+            // 2 le | 5 i128 le | 1 le | −1 i128 le
+            (
+                Payload::TallyFrame(TallyFrame {
+                    absorbed: 3,
+                    loss_sum: 0.0,
+                    scalar: 0,
+                    quanta: vec![],
+                    groups: vec![
+                        GroupFrame { absorbed: 2, quanta: vec![5] },
+                        GroupFrame { absorbed: 1, quanta: vec![-1] },
+                    ],
+                }),
+                "0501000000030000000000000000000000\
+                 00000000000000000000000000000000\
+                 02000000\
+                 0200000005000000000000000000000000000000\
+                 01000000ffffffffffffffffffffffffffffffff",
             ),
         ];
         for (p, want) in &cases {
@@ -628,11 +898,12 @@ mod tests {
         check("codec_fuzz_mutations", 150, |rng| {
             // a random valid frame of a random kind
             let n = rng.below(200) + 1;
-            let p = match rng.below(4) {
+            let p = match rng.below(5) {
                 0 => Payload::Dense((0..n).map(|_| rng.normal()).collect()),
                 1 => Payload::Signs(rand_signs(rng, n)),
                 2 => Payload::ScaledSigns { signs: rand_signs(rng, n), scale: rng.f32() },
-                _ => Payload::TallyFrame(rand_tally(rng, n)),
+                3 => Payload::TallyFrame(rand_tally(rng, n)),
+                _ => Payload::TallyFrame(rand_grouped(rng, n)),
             };
             let frame = encode(&p);
 
@@ -667,11 +938,12 @@ mod tests {
     fn borrowed_decode_matches_owned_on_unaligned_and_dirty_buffers() {
         check("codec_borrowed_identity", 80, |rng| {
             let n = rng.below(200) + 1;
-            let p = match rng.below(4) {
+            let p = match rng.below(5) {
                 0 => Payload::Dense((0..n).map(|_| rng.normal()).collect()),
                 1 => Payload::Signs(rand_signs(rng, n)),
                 2 => Payload::ScaledSigns { signs: rand_signs(rng, n), scale: rng.f32() },
-                _ => Payload::TallyFrame(rand_tally(rng, n)),
+                3 => Payload::TallyFrame(rand_tally(rng, n)),
+                _ => Payload::TallyFrame(rand_grouped(rng, n)),
             };
             let mut frame = encode(&p);
 
@@ -718,8 +990,20 @@ mod tests {
                 }
                 (PayloadView::TallyFrame(v), Payload::TallyFrame(f)) => {
                     let i = rng.below(n);
-                    if v.quantum(i) != f.quanta[i] || v.absorbed != f.absorbed {
-                        return Err(format!("tally quantum {i} mismatch"));
+                    if f.groups.is_empty() {
+                        if v.quantum(i) != f.quanta[i] || v.absorbed != f.absorbed {
+                            return Err(format!("tally quantum {i} mismatch"));
+                        }
+                    } else {
+                        if v.group_count() != f.groups.len() || v.m() != f.m() {
+                            return Err("grouped section shape mismatch".into());
+                        }
+                        let g = rng.below(f.groups.len());
+                        if v.group_absorbed(g) != f.groups[g].absorbed
+                            || v.group_quantum(g, i) != f.groups[g].quanta[i]
+                        {
+                            return Err(format!("group {g} quantum {i} mismatch"));
+                        }
                     }
                     if v.loss_sum.to_bits() != f.loss_sum.to_bits() || v.scalar != f.scalar {
                         return Err("tally header mismatch".into());
@@ -746,9 +1030,10 @@ mod tests {
                 // truncated valid frame
                 1 => {
                     let n = rng.below(120) + 1;
-                    let frame = encode(&match rng.below(2) {
+                    let frame = encode(&match rng.below(3) {
                         0 => Payload::Signs(rand_signs(rng, n)),
-                        _ => Payload::TallyFrame(rand_tally(rng, n)),
+                        1 => Payload::TallyFrame(rand_tally(rng, n)),
+                        _ => Payload::TallyFrame(rand_grouped(rng, n)),
                     });
                     let cut = rng.below(frame.len());
                     frame[..cut].to_vec()

@@ -381,6 +381,7 @@ mod tests {
             loss_sum: 1.25,
             scalar: -7,
             quanta: vec![i128::MAX, i128::MIN, 0, 42],
+            groups: Vec::new(),
         });
         let got = net.edge_uplink(0, &frame).unwrap();
         assert_eq!(got, frame, "edge links must be lossless");

@@ -660,6 +660,7 @@ mod tests {
                     loss_sum: 0.5,
                     scalar: -3,
                     quanta: vec![7, -9],
+                    groups: Vec::new(),
                 }),
             },
             Frame::Ack { round: 7, client: 8 },

@@ -665,6 +665,7 @@ mod tests {
             loss_sum: 0.5,
             scalar: -3,
             quanta: vec![i128::MAX, -1, 0],
+            groups: Vec::new(),
         });
         assert_eq!(t.edge_uplink(1, &tally).unwrap(), tally);
         assert!(t.wire_overhead() > 0, "envelope bytes must be visible");
@@ -682,6 +683,7 @@ mod tests {
             loss_sum: 1.0,
             scalar: 0,
             quanta: vec![5; 257],
+            groups: Vec::new(),
         });
         for net in [&mut sim as &mut dyn Transport, &mut sock as &mut dyn Transport] {
             for k in 0..6 {

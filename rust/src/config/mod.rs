@@ -132,6 +132,114 @@ impl Topology {
     }
 }
 
+/// Byzantine attack model for hostile-fleet runs (DESIGN.md §16).
+///
+/// An attack designates a deterministic adversarial fraction of each
+/// round's computing clients — drawn statelessly per `(seed, t, k)`
+/// like the churn/outage lifecycle draws, so `Attack::None` consumes
+/// zero RNG draws and leaves every honest trace byte-for-byte — and
+/// corrupts the adversaries' uplink payloads *after* honest local
+/// compute, at the wire boundary. Local personalized state stays
+/// honest: the attack is on the channel's content, not the client's
+/// own training.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub enum Attack {
+    /// honest fleet — today's behavior, bit-for-bit
+    #[default]
+    None,
+    /// adversaries flip every sign bit of their uplink (negate dense
+    /// lanes), the classic sign-flipping Byzantine attack
+    SignFlip {
+        /// adversarial fraction F of each round's computing clients
+        frac: f64,
+    },
+    /// adversaries rescale their uplink by γ (flip-and-amplify when
+    /// γ < 0). One-bit `Signs` payloads carry no magnitude, so only
+    /// the sign of γ can bite there: γ < 0 flips, γ > 0 is absorbed
+    /// by sign().
+    Scale {
+        /// adversarial fraction F
+        frac: f64,
+        /// the multiplier γ applied to the uplink
+        gamma: f64,
+    },
+    /// adversaries replace their uplink with ONE shared malicious
+    /// sketch, derived statelessly per `(seed, t)` — the coordinated
+    /// worst case for a majority vote
+    Collude {
+        /// adversarial fraction F
+        frac: f64,
+    },
+}
+
+impl Attack {
+    /// Parse a config value: `none | signflip:F | scale:F:GAMMA |
+    /// collude:F`.
+    pub fn parse(s: &str) -> Result<Attack> {
+        let lower = s.to_ascii_lowercase();
+        let num = |part: &str, what: &str| -> Result<f64> {
+            part.parse()
+                .map_err(|e| anyhow::anyhow!("attack `{s}`: bad {what}: {e}"))
+        };
+        let attack = if lower == "none" {
+            Attack::None
+        } else if let Some(f) = lower.strip_prefix("signflip:") {
+            Attack::SignFlip { frac: num(f, "fraction")? }
+        } else if let Some(rest) = lower.strip_prefix("scale:") {
+            let Some((f, g)) = rest.split_once(':') else {
+                bail!("attack `{s}`: scale needs `scale:F:GAMMA`");
+            };
+            Attack::Scale { frac: num(f, "fraction")?, gamma: num(g, "gamma")? }
+        } else if let Some(f) = lower.strip_prefix("collude:") {
+            Attack::Collude { frac: num(f, "fraction")? }
+        } else {
+            bail!("unknown attack `{s}` (none|signflip:F|scale:F:GAMMA|collude:F)");
+        };
+        attack.validate()?;
+        Ok(attack)
+    }
+
+    /// Reject fractions outside [0, 1) and non-finite multipliers.
+    pub fn validate(&self) -> Result<()> {
+        let frac = self.fraction();
+        if !(0.0..1.0).contains(&frac) {
+            bail!("attack fraction must be in [0, 1) (got {frac})");
+        }
+        if let Attack::Scale { gamma, .. } = self {
+            if !gamma.is_finite() {
+                bail!("attack scale gamma must be finite (got {gamma})");
+            }
+        }
+        Ok(())
+    }
+
+    /// The adversarial fraction F (0 for `none`).
+    pub fn fraction(&self) -> f64 {
+        match self {
+            Attack::None => 0.0,
+            Attack::SignFlip { frac }
+            | Attack::Scale { frac, .. }
+            | Attack::Collude { frac } => *frac,
+        }
+    }
+
+    /// Does this attack actually mark adversaries? A zero fraction is
+    /// the honest fleet spelled out.
+    pub fn is_active(&self) -> bool {
+        self.fraction() > 0.0
+    }
+
+    /// One-line form for run summaries (inverse of [`Attack::parse`]).
+    pub fn summary(&self) -> String {
+        match self {
+            Attack::None => "none".to_string(),
+            Attack::SignFlip { frac } => format!("signflip:{frac}"),
+            Attack::Scale { frac, gamma } => format!("scale:{frac}:{gamma}"),
+            Attack::Collude { frac } => format!("collude:{frac}"),
+        }
+    }
+}
+
 /// Full configuration of one federated training run.
 #[derive(Clone, Debug)]
 pub struct RunConfig {
@@ -230,6 +338,22 @@ pub struct RunConfig {
     /// `churn_period` consecutive rounds, then redrawn. Ignored while
     /// `churn_prob = 0`.
     pub churn_period: usize,
+    /// Byzantine attack model: `none` (honest fleet, the default) or
+    /// `signflip:F | scale:F:GAMMA | collude:F` — adversaries corrupt
+    /// their uplink after honest local compute (DESIGN.md §16)
+    pub attack: Attack,
+    /// fraction trimmed from each end of the per-coordinate sorted
+    /// client contributions under the robust `TrimmedVote` tally
+    /// (DESIGN.md §16). 0 = plain vote, bit-for-bit.
+    pub trim_frac: f64,
+    /// median-of-means group count G for the robust `MedianOfMeans`
+    /// tally (client k → group k mod G). 1 = plain vote, bit-for-bit.
+    pub mom_groups: usize,
+    /// pFed1BS error feedback: carry each client's one-bit quantization
+    /// residual of the sketch into its next round's compression
+    /// (Bergou-style EF for the biased sign compressor). Off =
+    /// byte-identical runs and v2-layout checkpoints.
+    pub error_feedback: bool,
     /// directory holding the AOT HLO artifacts (`make artifacts`)
     pub artifacts_dir: String,
     /// directory experiment CSVs/tables are written to
@@ -283,6 +407,10 @@ impl RunConfig {
             staleness_decay: 0.5,
             churn_prob: 0.0,
             churn_period: 10,
+            attack: Attack::None,
+            trim_frac: 0.0,
+            mom_groups: 1,
+            error_feedback: false,
             artifacts_dir: "artifacts".to_string(),
             results_dir: "results".to_string(),
         }
@@ -356,6 +484,16 @@ impl RunConfig {
             "staleness-decay" | "staleness_decay" => self.staleness_decay = num!(),
             "churn-prob" | "churn_prob" => self.churn_prob = num!(),
             "churn-period" | "churn_period" => self.churn_period = num!(),
+            "attack" => self.attack = Attack::parse(val)?,
+            "trim-frac" | "trim_frac" => self.trim_frac = num!(),
+            "mom-groups" | "mom_groups" => self.mom_groups = num!(),
+            "error-feedback" | "error_feedback" => {
+                self.error_feedback = match val {
+                    "on" | "true" | "1" => true,
+                    "off" | "false" | "0" => false,
+                    other => bail!("error-feedback={other}: expected on|off"),
+                }
+            }
             "artifacts-dir" | "artifacts_dir" => self.artifacts_dir = val.to_string(),
             "results-dir" | "results_dir" => self.results_dir = val.to_string(),
             other => bail!("unknown config key `{other}`"),
@@ -438,6 +576,19 @@ impl RunConfig {
         if self.churn_period == 0 {
             bail!("churn-period must be >= 1 rounds");
         }
+        self.attack.validate()?;
+        if !(0.0..0.5).contains(&self.trim_frac) {
+            bail!("trim-frac must be in [0, 0.5) (got {})", self.trim_frac);
+        }
+        if self.mom_groups == 0 {
+            bail!("mom-groups must be >= 1 (1 means the plain vote)");
+        }
+        if self.trim_frac > 0.0 && self.mom_groups > 1 {
+            bail!(
+                "trim-frac and mom-groups select competing robust tallies — set one, \
+                 not both"
+            );
+        }
         Ok(())
     }
 
@@ -480,6 +631,15 @@ impl RunConfig {
         if self.effective_device_batch() > 1 {
             s.push_str(&format!(" device-batch={}", self.effective_device_batch()));
         }
+        if self.trim_frac > 0.0 {
+            s.push_str(&format!(" trim-frac={}", self.trim_frac));
+        }
+        if self.mom_groups > 1 {
+            s.push_str(&format!(" mom-groups={}", self.mom_groups));
+        }
+        if self.error_feedback {
+            s.push_str(" error-feedback=on");
+        }
         if self.has_scenario() {
             s.push_str(&format!(
                 " over={} deadline={}ms dropout={} latency={}",
@@ -509,6 +669,9 @@ impl RunConfig {
                     " churn-prob={} churn-period={}",
                     self.churn_prob, self.churn_period
                 ));
+            }
+            if self.attack.is_active() {
+                s.push_str(&format!(" attack={}", self.attack.summary()));
             }
         }
         s
@@ -558,6 +721,7 @@ impl RunConfig {
             || self.quorum_active()
             || self.max_staleness > 0
             || self.churn_prob > 0.0
+            || self.attack.is_active()
     }
 }
 
@@ -771,6 +935,85 @@ mod tests {
         // auto (0) resolves to env/1 but never to 0
         c.device_batch = 0;
         assert!(c.effective_device_batch() >= 1);
+    }
+
+    #[test]
+    fn attack_and_robust_knobs_parse_validate_and_summarize() {
+        // attack grammar: none | signflip:F | scale:F:GAMMA | collude:F
+        assert_eq!(Attack::parse("none").unwrap(), Attack::None);
+        assert_eq!(
+            Attack::parse("signflip:0.4").unwrap(),
+            Attack::SignFlip { frac: 0.4 }
+        );
+        assert_eq!(
+            Attack::parse("scale:0.25:-1").unwrap(),
+            Attack::Scale { frac: 0.25, gamma: -1.0 }
+        );
+        assert_eq!(
+            Attack::parse("collude:0.3").unwrap(),
+            Attack::Collude { frac: 0.3 }
+        );
+        for bad in [
+            "signflip",
+            "signflip:x",
+            "signflip:1.0",
+            "signflip:-0.1",
+            "scale:0.2",
+            "scale:0.2:inf",
+            "collude:2",
+            "ddos:0.5",
+        ] {
+            assert!(Attack::parse(bad).is_err(), "{bad} should be rejected");
+        }
+        for s in ["none", "signflip:0.4", "scale:0.25:-1", "collude:0.3"] {
+            assert_eq!(Attack::parse(s).unwrap().summary(), s);
+        }
+        assert!(!Attack::None.is_active());
+        assert!(!Attack::SignFlip { frac: 0.0 }.is_active(), "F=0 is honest");
+        assert!(Attack::Collude { frac: 0.3 }.is_active());
+
+        let mut c = RunConfig::preset(DatasetName::Mnist);
+        assert_eq!(c.attack, Attack::None);
+        assert_eq!((c.trim_frac, c.mom_groups, c.error_feedback), (0.0, 1, false));
+        assert!(!c.has_scenario());
+
+        c.apply_pairs(
+            [("attack", "signflip:0.4"), ("trim-frac", "0.3"), ("error-feedback", "on")]
+                .into_iter(),
+        )
+        .unwrap();
+        c.validate().unwrap();
+        assert!(c.has_scenario(), "an active attack is a scenario");
+        let s = c.summary();
+        assert!(s.contains("attack=signflip:0.4"), "{s}");
+        assert!(s.contains("trim-frac=0.3") && s.contains("error-feedback=on"), "{s}");
+
+        // the two robust tallies are mutually exclusive
+        c.apply_pairs([("mom-groups", "5")].into_iter()).unwrap();
+        assert!(c.validate().is_err(), "trim-frac + mom-groups must conflict");
+        c.trim_frac = 0.0;
+        c.validate().unwrap();
+        assert!(c.summary().contains("mom-groups=5"), "{}", c.summary());
+
+        // bounds
+        c.trim_frac = 0.5;
+        c.mom_groups = 1;
+        assert!(c.validate().is_err(), "trim-frac=0.5 leaves no majority");
+        c.trim_frac = 0.0;
+        c.mom_groups = 0;
+        assert!(c.validate().is_err());
+        c.mom_groups = 1;
+        c.validate().unwrap();
+        assert!(c.apply_pairs([("error-feedback", "maybe")].into_iter()).is_err());
+        assert!(c.apply_pairs([("attack", "signflip:0.5x")].into_iter()).is_err());
+
+        // off-defaults keep the honest summary clean
+        let d = RunConfig::preset(DatasetName::Mnist);
+        let ds = d.summary();
+        assert!(
+            !ds.contains("attack") && !ds.contains("trim") && !ds.contains("error-feedback"),
+            "{ds}"
+        );
     }
 
     #[test]

@@ -24,7 +24,19 @@
 //!   crc     u32               4 B      (FNV-1a over all preceding bytes)
 //!
 //! Version 1 is the same layout without the `edges` field; `decode`
-//! reads both (v1 loads with `edges = 0`), `encode` always writes v2.
+//! reads v1–v3.
+//!
+//! Version 3 (error feedback — DESIGN.md §16) appends after the models,
+//! before the CRC:
+//!   r       u32               4 B      (residual vector count)
+//!   rn u32, e f32 × rn        r times  (per-residual length + lanes;
+//!                                       rn is 0 for a client that has
+//!                                       not uplinked yet, m otherwise)
+//!
+//! `encode` writes the residual section — and stamps version 3 — ONLY
+//! when `residuals` is non-empty: a run without error feedback saves
+//! bytes identical to the v2 encoder's, so old tooling keeps reading
+//! today's checkpoints.
 
 use std::io::{Read, Write};
 use std::path::Path;
@@ -32,7 +44,10 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 const MAGIC: &[u8; 4] = b"PF1B";
-const VERSION: u32 = 2;
+const VERSION: u32 = 3;
+/// What `encode` stamps when there is no residual section — the exact
+/// pre-error-feedback format.
+const VERSION_V2: u32 = 2;
 
 /// Federated training state snapshot.
 #[derive(Clone, Debug, PartialEq)]
@@ -49,6 +64,10 @@ pub struct Checkpoint {
     pub consensus: Vec<f32>,
     /// per-client personalized models (global algorithms store one)
     pub models: Vec<Vec<f32>>,
+    /// per-client error-feedback residuals (v3 — DESIGN.md §16); empty
+    /// when error feedback is off, and the file is then byte-identical
+    /// to the v2 layout
+    pub residuals: Vec<Vec<f32>>,
 }
 
 impl Checkpoint {
@@ -68,7 +87,7 @@ impl Checkpoint {
         Ok(())
     }
 
-    /// Read and decode a checkpoint file (v1 or v2).
+    /// Read and decode a checkpoint file (v1, v2, or v3).
     pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
         let mut bytes = Vec::new();
         std::fs::File::open(path.as_ref())
@@ -77,17 +96,19 @@ impl Checkpoint {
         Self::decode(&bytes)
     }
 
-    /// Serialize to the v2 wire bytes (CRC included).
+    /// Serialize to wire bytes (CRC included): the exact v2 layout when
+    /// `residuals` is empty, v3 with the residual section otherwise.
     pub fn encode(&self) -> Result<Vec<u8>> {
         let n = self.models.first().map(|m| m.len()).unwrap_or(0);
         if self.models.iter().any(|m| m.len() != n) {
             bail!("all client models must have equal length");
         }
+        let version = if self.residuals.is_empty() { VERSION_V2 } else { VERSION };
         let mut out = Vec::with_capacity(
             40 + 4 * self.consensus.len() + self.models.len() * 4 * n,
         );
         out.extend_from_slice(MAGIC);
-        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&version.to_le_bytes());
         out.extend_from_slice(&self.round.to_le_bytes());
         out.extend_from_slice(&self.seed.to_le_bytes());
         out.extend_from_slice(&self.edges.to_le_bytes());
@@ -102,13 +123,23 @@ impl Checkpoint {
                 out.extend_from_slice(&x.to_le_bytes());
             }
         }
+        if version >= 3 {
+            out.extend_from_slice(&(self.residuals.len() as u32).to_le_bytes());
+            for e in &self.residuals {
+                out.extend_from_slice(&(e.len() as u32).to_le_bytes());
+                for x in e {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+        }
         let crc = fnv1a(&out);
         out.extend_from_slice(&crc.to_le_bytes());
         Ok(out)
     }
 
-    /// Parse v1 or v2 wire bytes (CRC-checked). v1 files predate the
-    /// topology metadata and load with `edges = 0`.
+    /// Parse v1–v3 wire bytes (CRC-checked). v1 files predate the
+    /// topology metadata and load with `edges = 0`; v1/v2 files predate
+    /// error feedback and load with empty `residuals`.
     pub fn decode(bytes: &[u8]) -> Result<Checkpoint> {
         if bytes.len() < 36 {
             bail!("checkpoint too short ({} bytes)", bytes.len());
@@ -138,10 +169,20 @@ impl Checkpoint {
         for _ in 0..k {
             models.push(cur.f32s(n)?);
         }
+        // the v3 error-feedback residual section; absent in v1/v2 files
+        let mut residuals = Vec::new();
+        if version >= 3 {
+            let r = cur.u32()? as usize;
+            residuals.reserve(r);
+            for _ in 0..r {
+                let rn = cur.u32()? as usize;
+                residuals.push(cur.f32s(rn)?);
+            }
+        }
         if cur.pos != body.len() {
             bail!("trailing bytes in checkpoint");
         }
-        Ok(Checkpoint { round, seed, edges, consensus, models })
+        Ok(Checkpoint { round, seed, edges, consensus, models, residuals })
     }
 }
 
@@ -198,6 +239,7 @@ mod tests {
             edges: 4,
             consensus: vec![1.0, -1.0, 1.0],
             models: vec![vec![0.1, 0.2], vec![-0.3, 0.4]],
+            residuals: Vec::new(),
         }
     }
 
@@ -251,14 +293,21 @@ mod tests {
             edges: 0,
             consensus: vec![],
             models: vec![vec![1.0], vec![1.0, 2.0]],
+            residuals: Vec::new(),
         };
         assert!(c.encode().is_err());
     }
 
     #[test]
     fn empty_state_round_trips() {
-        let c =
-            Checkpoint { round: 0, seed: 0, edges: 0, consensus: vec![], models: vec![] };
+        let c = Checkpoint {
+            round: 0,
+            seed: 0,
+            edges: 0,
+            consensus: vec![],
+            models: vec![],
+            residuals: vec![],
+        };
         assert_eq!(Checkpoint::decode(&c.encode().unwrap()).unwrap(), c);
     }
 
@@ -293,6 +342,7 @@ mod tests {
                 edges: 0,
                 consensus: vec![1.0, -1.0],
                 models: vec![vec![0.5, -0.25, 2.0]],
+                residuals: vec![],
             }
         );
         // and the v1 CRC/truncation protections still apply
@@ -321,6 +371,68 @@ mod tests {
         assert_eq!(Checkpoint::decode(&flat.encode().unwrap()).unwrap().edges, 0);
     }
 
+    /// A v2 file, byte-for-byte as the pre-error-feedback encoder wrote
+    /// it (no residual section). Built by hand — NOT by the encoder
+    /// under test — and it must load with empty residuals; the same CRC
+    /// and truncation protections the v1 fixture test pins apply.
+    #[test]
+    fn v2_fixture_loads_with_empty_residuals() {
+        let mut v2 = Vec::new();
+        v2.extend_from_slice(b"PF1B");
+        v2.extend_from_slice(&2u32.to_le_bytes()); // version 2
+        v2.extend_from_slice(&9u64.to_le_bytes()); // round
+        v2.extend_from_slice(&23u64.to_le_bytes()); // seed
+        v2.extend_from_slice(&4u32.to_le_bytes()); // edges
+        v2.extend_from_slice(&2u32.to_le_bytes()); // m
+        v2.extend_from_slice(&1.0f32.to_le_bytes());
+        v2.extend_from_slice(&(-1.0f32).to_le_bytes());
+        v2.extend_from_slice(&1u32.to_le_bytes()); // k
+        v2.extend_from_slice(&2u32.to_le_bytes()); // n
+        for x in [0.75f32, -1.5] {
+            v2.extend_from_slice(&x.to_le_bytes());
+        }
+        let crc = super::fnv1a(&v2);
+        v2.extend_from_slice(&crc.to_le_bytes());
+
+        let want = Checkpoint {
+            round: 9,
+            seed: 23,
+            edges: 4,
+            consensus: vec![1.0, -1.0],
+            models: vec![vec![0.75, -1.5]],
+            residuals: vec![],
+        };
+        let got = Checkpoint::decode(&v2).expect("v2 files must stay readable");
+        assert_eq!(got, want);
+        // and the encoder still writes EXACTLY these bytes for a
+        // residual-free state — old tooling keeps reading new files
+        assert_eq!(want.encode().unwrap(), v2);
+        // v2 CRC/truncation protections are unchanged
+        let mut corrupt = v2.clone();
+        corrupt[14] ^= 0xFF;
+        assert!(Checkpoint::decode(&corrupt).is_err());
+        assert!(Checkpoint::decode(&v2[..v2.len() - 2]).is_err());
+    }
+
+    #[test]
+    fn v3_residuals_round_trip_and_stay_crc_protected() {
+        let c = Checkpoint {
+            residuals: vec![vec![0.5, -0.5, 0.125], vec![], vec![1.0, 2.0, -3.0]],
+            ..sample()
+        };
+        let bytes = c.encode().unwrap();
+        // version word stamps 3 only because residuals are present
+        assert_eq!(u32::from_le_bytes(bytes[4..8].try_into().unwrap()), 3);
+        assert_eq!(Checkpoint::decode(&bytes).unwrap(), c);
+        // a flipped byte INSIDE the residual section trips the CRC
+        let mut corrupt = bytes.clone();
+        let off = bytes.len() - 8; // inside the last residual's lanes
+        corrupt[off] ^= 0xFF;
+        assert!(Checkpoint::decode(&corrupt).is_err());
+        // truncating the residual section is caught too
+        assert!(Checkpoint::decode(&bytes[..bytes.len() - 6]).is_err());
+    }
+
     #[test]
     fn prop_arbitrary_states_round_trip() {
         check("checkpoint_round_trip", 30, |rng| {
@@ -337,6 +449,11 @@ mod tests {
                 models: (0..k)
                     .map(|_| (0..n).map(|_| rng.normal()).collect())
                     .collect(),
+                residuals: if rng.f32() < 0.5 {
+                    Vec::new()
+                } else {
+                    (0..k).map(|_| (0..m).map(|_| rng.normal()).collect()).collect()
+                },
             };
             let back = Checkpoint::decode(&c.encode().map_err(|e| e.to_string())?)
                 .map_err(|e| e.to_string())?;

@@ -37,8 +37,9 @@
 //! no arrival is ever buffered, and the plan is bit-identical to the
 //! barrier engine.
 
-use crate::comm::Transport;
-use crate::config::{RunConfig, Topology};
+use crate::comm::{Payload, Transport};
+use crate::config::{Attack, RunConfig, Topology};
+use crate::sketch::bitpack::SignVec;
 use crate::util::rng::{splitmix64, Rng};
 
 /// One scheduled uplink arrival.
@@ -64,6 +65,11 @@ pub struct Arrival {
     /// buffered arrivals — a buffered uplink's weight materializes next
     /// round, decayed and renormalized there
     pub weight: f32,
+    /// this round's Byzantine adversary (DESIGN.md §16): the client
+    /// computes honestly but its uplink payload is corrupted by the
+    /// configured [`Attack`] at the wire boundary. Drawn statelessly
+    /// per `(seed, t, k)`; always false under `attack = none`.
+    pub adversarial: bool,
 }
 
 /// A fully planned round: who was selected, who computes, and in what
@@ -99,6 +105,9 @@ pub struct RoundPlan {
     /// delivered or the degenerate-mass guard fired (in which case the
     /// coordinator absorbs nothing, carry included).
     pub norm_total: f32,
+    /// computing clients marked adversarial this round (DESIGN.md §16);
+    /// 0 under `attack = none`
+    pub adversaries: usize,
 }
 
 impl RoundPlan {
@@ -119,6 +128,7 @@ impl RoundPlan {
                 buffered: false,
                 staleness: 0,
                 weight: w,
+                adversarial: false,
             })
             .collect();
         RoundPlan {
@@ -134,6 +144,7 @@ impl RoundPlan {
             buffered_late: 0,
             // caller-supplied weights arrive pre-normalized
             norm_total: 1.0,
+            adversaries: 0,
         }
     }
 }
@@ -165,6 +176,86 @@ fn churn_wave_draw(seed: u64, wave: usize, client: usize) -> f64 {
         ^ (client as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15);
     let _ = splitmix64(&mut s); // whiten once before drawing
     (splitmix64(&mut s) >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+/// The per-(seed, round, client) adversary draw (DESIGN.md §16): a
+/// stateless SplitMix64 stream like [`churn_wave_draw`], so arming an
+/// attack consumes nothing from any client channel or the coordinator
+/// RNG — `attack = none` planning stays byte-identical. Redrawn every
+/// round: a client hostile in round t may be honest in t+1 (mobile
+/// Byzantine model).
+fn adversary_draw(seed: u64, t: usize, client: usize) -> f64 {
+    let mut s = seed
+        ^ 0x4154_434B_u64 // "ATCK"
+        ^ (t as u64).wrapping_mul(0xD6E8_FEB8_6659_FD93)
+        ^ (client as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    let _ = splitmix64(&mut s); // whiten once before drawing
+    (splitmix64(&mut s) >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+/// The shared malicious sketch colluders submit (DESIGN.md §16): one
+/// sign vector per `(seed, t)`, derived statelessly so every colluder —
+/// on any shard, any thread, any transport — lands on the same bits
+/// without coordinating through an RNG.
+fn collusion_sketch(seed: u64, t: usize, m: usize) -> SignVec {
+    let mut s = seed
+        ^ 0x434F_4C4C_u64 // "COLL"
+        ^ (t as u64).wrapping_mul(0xD6E8_FEB8_6659_FD93);
+    let _ = splitmix64(&mut s); // whiten once before drawing
+    SignVec::from_words((0..m.div_ceil(64)).map(|_| splitmix64(&mut s)).collect(), m)
+}
+
+/// Corrupt an adversarial client's uplink payload in place (DESIGN.md
+/// §16). Called by the coordinator AFTER honest local compute and
+/// BEFORE the payload is metered onto the wire, so the attack costs the
+/// adversary nothing extra and the wire ledger bills the corrupted
+/// bytes. Deterministic per `(seed, t)`: the same hostile fleet replays
+/// bit-for-bit across shards, threads, and transports.
+///
+/// - `SignFlip`: every uplink sign negated (Dense lanes negated) — the
+///   strongest direction-reversal a one-bit channel admits.
+/// - `Scale { gamma }`: Dense lanes and `ScaledSigns` scales multiply
+///   by `gamma`; plain one-bit `Signs` carry no magnitude, so only the
+///   sign of `gamma` acts (negative flips, positive is a no-op — the
+///   documented degenerate case).
+/// - `Collude`: the payload's signs are replaced by the round's shared
+///   [`collusion_sketch`], concentrating the colluders' mass on one
+///   adversarial direction instead of cancelling.
+pub fn corrupt_payload(payload: &mut Payload, attack: &Attack, seed: u64, t: usize) {
+    match *attack {
+        Attack::None => {}
+        Attack::SignFlip { .. } => match payload {
+            Payload::Signs(z) => z.flip_bits_where(|_| true),
+            Payload::ScaledSigns { signs, .. } => signs.flip_bits_where(|_| true),
+            Payload::Dense(v) => v.iter_mut().for_each(|x| *x = -*x),
+            Payload::TallyFrame(_) => {}
+        },
+        Attack::Scale { gamma, .. } => match payload {
+            Payload::Dense(v) => {
+                v.iter_mut().for_each(|x| *x = (*x as f64 * gamma) as f32)
+            }
+            Payload::ScaledSigns { scale, .. } => *scale = (*scale as f64 * gamma) as f32,
+            Payload::Signs(z) => {
+                if gamma < 0.0 {
+                    z.flip_bits_where(|_| true);
+                }
+            }
+            Payload::TallyFrame(_) => {}
+        },
+        Attack::Collude { .. } => match payload {
+            Payload::Signs(z) => *z = collusion_sketch(seed, t, z.len()),
+            Payload::ScaledSigns { signs, .. } => {
+                *signs = collusion_sketch(seed, t, signs.len())
+            }
+            Payload::Dense(v) => {
+                let sketch = collusion_sketch(seed, t, v.len());
+                for (i, x) in v.iter_mut().enumerate() {
+                    *x = sketch.sign(i);
+                }
+            }
+            Payload::TallyFrame(_) => {}
+        },
+    }
 }
 
 /// How many rounds stale a post-close arrival is: 1 if it lands within
@@ -243,6 +334,11 @@ pub fn plan_round_buffered<N: Transport>(
             continue;
         }
         let at_ms = net.draw_latency(k, &cfg.latency);
+        // Byzantine marking (DESIGN.md §16): stateless per-(seed, t, k)
+        // draw, so `attack = none` plans stay byte-identical and no
+        // channel or coordinator draw is ever consumed by the check
+        let adversarial = cfg.attack.is_active()
+            && adversary_draw(cfg.seed, t, k) < cfg.attack.fraction();
         arrivals.push(Arrival {
             task: computing.len(),
             client: k,
@@ -251,6 +347,7 @@ pub fn plan_round_buffered<N: Transport>(
             buffered: false,
             staleness: 0,
             weight: 0.0,
+            adversarial,
         });
         computing.push(k);
     }
@@ -355,6 +452,7 @@ pub fn plan_round_buffered<N: Transport>(
     };
 
     let stragglers_cut = arrivals.len() - delivered - buffered_late;
+    let adversaries = arrivals.iter().filter(|a| a.adversarial).count();
     RoundPlan {
         t,
         selected,
@@ -367,6 +465,7 @@ pub fn plan_round_buffered<N: Transport>(
         quorum_closed,
         buffered_late,
         norm_total,
+        adversaries,
     }
 }
 
@@ -770,5 +869,135 @@ mod tests {
         }
         let total_dropped: usize = plans.iter().map(|p| p.dropped).sum();
         assert!(total_dropped > 0, "0.4 churn produced no departure in 8 rounds");
+    }
+
+    #[test]
+    fn arming_an_attack_changes_only_the_marks_and_consumes_no_draws() {
+        let honest = RunConfig::preset(DatasetName::Mnist);
+        let mut hostile = honest.clone();
+        hostile.attack = Attack::SignFlip { frac: 0.5 };
+        hostile.validate().unwrap();
+        let weights = fleet_weights(honest.clients);
+
+        let run = |cfg: &RunConfig| {
+            let mut net = SimNetwork::new(cfg.seed);
+            let mut rng = Rng::new(7);
+            let plans: Vec<RoundPlan> =
+                (0..5).map(|t| plan_round(t, cfg, &weights, &mut net, &mut rng)).collect();
+            // the sentinel draw proves the planner consumed exactly the
+            // same RNG stream whether or not the attack was armed
+            (plans, rng.next_u64())
+        };
+        let (clean, clean_sentinel) = run(&honest);
+        let (marked, marked_sentinel) = run(&hostile);
+        assert_eq!(clean_sentinel, marked_sentinel, "attack marking consumed RNG draws");
+
+        let mut total_marked = 0usize;
+        for (p, q) in clean.iter().zip(&marked) {
+            // everything except the Byzantine marks is bit-identical
+            assert_eq!(p.selected, q.selected);
+            assert_eq!(p.computing, q.computing);
+            assert_eq!(p.delivered, q.delivered);
+            assert_eq!(p.norm_total.to_bits(), q.norm_total.to_bits());
+            for (a, b) in p.arrivals.iter().zip(&q.arrivals) {
+                assert_eq!(a.client, b.client);
+                assert_eq!(a.at_ms.to_bits(), b.at_ms.to_bits());
+                assert_eq!(a.weight.to_bits(), b.weight.to_bits());
+                assert!(!a.adversarial, "attack=none must never mark an arrival");
+            }
+            assert_eq!(p.adversaries, 0);
+            assert_eq!(q.adversaries, q.arrivals.iter().filter(|a| a.adversarial).count());
+            total_marked += q.adversaries;
+        }
+        assert!(total_marked > 0, "frac=0.5 marked nobody across 5 rounds");
+
+        // the marks themselves are a pure function of (seed, t, k)
+        let (again, _) = run(&hostile);
+        for (p, q) in marked.iter().zip(&again) {
+            let pm: Vec<bool> = p.arrivals.iter().map(|a| a.adversarial).collect();
+            let qm: Vec<bool> = q.arrivals.iter().map(|a| a.adversarial).collect();
+            assert_eq!(pm, qm, "adversary marks must replay bit-for-bit");
+        }
+    }
+
+    #[test]
+    fn corrupt_payload_covers_every_attack_and_payload_shape() {
+        let mut rng = Rng::new(41);
+        let m = 130; // straddles a word boundary with a ragged tail
+        let z = SignVec::from_fn(m, |_| rng.next_u64() & 1 == 1);
+        let dense: Vec<f32> = (0..m).map(|i| (i as f32 - 60.0) * 0.25).collect();
+
+        // none: byte-identical no-op on every shape
+        let mut p = Payload::Signs(z.clone());
+        corrupt_payload(&mut p, &Attack::None, 1, 2);
+        assert_eq!(p, Payload::Signs(z.clone()));
+
+        // signflip: every sign negated, dense lanes negated
+        let mut p = Payload::Signs(z.clone());
+        corrupt_payload(&mut p, &Attack::SignFlip { frac: 0.3 }, 1, 2);
+        match &p {
+            Payload::Signs(f) => assert_eq!(f.hamming(&z), m, "signflip missed a bit"),
+            _ => unreachable!(),
+        }
+        let mut p = Payload::ScaledSigns { signs: z.clone(), scale: 0.75 };
+        corrupt_payload(&mut p, &Attack::SignFlip { frac: 0.3 }, 1, 2);
+        match &p {
+            Payload::ScaledSigns { signs, scale } => {
+                assert_eq!(signs.hamming(&z), m);
+                assert_eq!(scale.to_bits(), 0.75f32.to_bits(), "signflip touched the scale");
+            }
+            _ => unreachable!(),
+        }
+        let mut p = Payload::Dense(dense.clone());
+        corrupt_payload(&mut p, &Attack::SignFlip { frac: 0.3 }, 1, 2);
+        match &p {
+            Payload::Dense(v) => {
+                for (a, b) in v.iter().zip(&dense) {
+                    assert_eq!(a.to_bits(), (-b).to_bits());
+                }
+            }
+            _ => unreachable!(),
+        }
+
+        // scale: γ multiplies magnitudes; γ < 0 flips a one-bit uplink
+        let gamma = Attack::Scale { frac: 0.3, gamma: -3.0 };
+        let mut p = Payload::ScaledSigns { signs: z.clone(), scale: 0.5 };
+        corrupt_payload(&mut p, &gamma, 1, 2);
+        match &p {
+            Payload::ScaledSigns { signs, scale } => {
+                assert_eq!(signs, &z, "scale must not touch packed signs");
+                assert_eq!(*scale, -1.5);
+            }
+            _ => unreachable!(),
+        }
+        let mut p = Payload::Signs(z.clone());
+        corrupt_payload(&mut p, &gamma, 1, 2);
+        match &p {
+            Payload::Signs(f) => assert_eq!(f.hamming(&z), m, "negative γ must flip signs"),
+            _ => unreachable!(),
+        }
+        let mut p = Payload::Signs(z.clone());
+        corrupt_payload(&mut p, &Attack::Scale { frac: 0.3, gamma: 3.0 }, 1, 2);
+        assert_eq!(p, Payload::Signs(z.clone()), "positive γ is absorbed by sign()");
+
+        // collude: every colluder lands on the SAME sketch per (seed, t)
+        let mut a = Payload::Signs(z.clone());
+        let mut b = Payload::Signs(SignVec::from_fn(m, |i| i % 3 == 0));
+        corrupt_payload(&mut a, &Attack::Collude { frac: 0.3 }, 9, 4);
+        corrupt_payload(&mut b, &Attack::Collude { frac: 0.3 }, 9, 4);
+        assert_eq!(a, b, "colluders diverged within one round");
+        let mut c = Payload::Signs(z.clone());
+        corrupt_payload(&mut c, &Attack::Collude { frac: 0.3 }, 9, 5);
+        assert_ne!(a, c, "collusion sketch failed to rotate across rounds");
+        let mut d = Payload::Dense(dense.clone());
+        corrupt_payload(&mut d, &Attack::Collude { frac: 0.3 }, 9, 4);
+        match (&a, &d) {
+            (Payload::Signs(sig), Payload::Dense(v)) => {
+                for (i, x) in v.iter().enumerate() {
+                    assert_eq!(x.to_bits(), sig.sign(i).to_bits());
+                }
+            }
+            _ => unreachable!(),
+        }
     }
 }

@@ -49,6 +49,9 @@ pub struct RoundRecord {
     /// fraction of this round's normalization mass contributed by
     /// carried-in stale uplinks (0.0 for barrier rounds)
     pub stale_weight: f64,
+    /// computing clients whose uplink was Byzantine-corrupted this round
+    /// (0 under `attack = none` — DESIGN.md §16)
+    pub adversaries: usize,
 }
 
 /// Full run history + summary.
@@ -108,10 +111,11 @@ impl History {
     /// Write `round,train_loss,test_acc,test_loss,uplink_bytes,
     /// downlink_bytes,duration_ms,grad_norm,consensus_flips,delivered,
     /// stragglers_cut,aggregate_ms,edges,edge_merges,edge_bytes_up,
-    /// edge_bytes_down,quorum_closed,buffered_late,stale_weight` CSV
-    /// (the edge columns are all zero under the default `flat`
-    /// topology — DESIGN.md §11 — and the quorum columns are
-    /// `0,0,0.000000` for barrier rounds — DESIGN.md §13).
+    /// edge_bytes_down,quorum_closed,buffered_late,stale_weight,
+    /// adversaries` CSV (the edge columns are all zero under the
+    /// default `flat` topology — DESIGN.md §11 — the quorum columns are
+    /// `0,0,0.000000` for barrier rounds — DESIGN.md §13 — and
+    /// `adversaries` is 0 for honest fleets — DESIGN.md §16).
     pub fn write_csv(&self, path: impl AsRef<Path>, header_comment: &str) -> Result<()> {
         let path = path.as_ref();
         if let Some(dir) = path.parent() {
@@ -124,12 +128,12 @@ impl History {
         }
         writeln!(
             f,
-            "round,train_loss,test_acc,test_loss,uplink_bytes,downlink_bytes,duration_ms,grad_norm,consensus_flips,delivered,stragglers_cut,aggregate_ms,edges,edge_merges,edge_bytes_up,edge_bytes_down,quorum_closed,buffered_late,stale_weight"
+            "round,train_loss,test_acc,test_loss,uplink_bytes,downlink_bytes,duration_ms,grad_norm,consensus_flips,delivered,stragglers_cut,aggregate_ms,edges,edge_merges,edge_bytes_up,edge_bytes_down,quorum_closed,buffered_late,stale_weight,adversaries"
         )?;
         for r in &self.records {
             writeln!(
                 f,
-                "{},{:.6},{},{},{},{},{:.3},{},{},{},{},{:.4},{},{},{},{},{},{},{:.6}",
+                "{},{:.6},{},{},{},{},{:.3},{},{},{},{},{:.4},{},{},{},{},{},{},{:.6},{}",
                 r.round,
                 r.train_loss,
                 fmt_opt(r.test_acc),
@@ -151,6 +155,7 @@ impl History {
                 r.quorum_closed as u8,
                 r.buffered_late,
                 r.stale_weight,
+                r.adversaries,
             )?;
         }
         Ok(())
@@ -191,6 +196,7 @@ mod tests {
             quorum_closed: round % 2 == 1,
             buffered_late: round % 2,
             stale_weight: 0.0,
+            adversaries: round % 3,
         }
     }
 
@@ -222,13 +228,14 @@ mod tests {
         assert!(lines[0].starts_with("# unit test"));
         assert!(lines[1].starts_with("round,train_loss"));
         assert!(lines[1].ends_with(
-            "edge_bytes_up,edge_bytes_down,quorum_closed,buffered_late,stale_weight"
+            "edge_bytes_up,edge_bytes_down,quorum_closed,buffered_late,stale_weight,adversaries"
         ));
         assert_eq!(lines.len(), 3);
         assert!(lines[2].starts_with("0,"));
-        // round 0: quorum_closed false, buffered_late 0, stale_weight 0
+        // round 0: quorum_closed false, buffered_late 0, stale_weight 0,
+        // adversaries 0
         assert!(
-            lines[2].ends_with(",2,0,0.2500,4,4,64,32,0,0,0.000000"),
+            lines[2].ends_with(",2,0,0.2500,4,4,64,32,0,0,0.000000,0"),
             "{}",
             lines[2]
         );

@@ -282,6 +282,15 @@ impl<'a, N: Transport> Coordinator<'a, N> {
             let arrival = arrivals.next().expect("one arrival per consumed task");
             debug_assert_eq!(arrival.task, task_idx);
             let mut out = result.with_context(|| format!("client phase of round {t}"))?;
+            // Byzantine corruption (DESIGN.md §16) lands AFTER honest
+            // local compute and BEFORE the wire: the adversary's
+            // personalized state evolves normally, but the bytes it
+            // ships — and the wire ledger bills — are the corrupted ones
+            if arrival.adversarial {
+                if let Some(up) = out.uplink.as_mut() {
+                    engine::corrupt_payload(&mut up.payload, &cfg.attack, cfg.seed, t);
+                }
+            }
             // the uplink is transported (metered, noise-corrupted)
             // whether or not the deadline cuts it: the bytes were
             // spent on the link either way
@@ -520,6 +529,7 @@ impl<'a, N: Transport> Coordinator<'a, N> {
                 quorum_closed: plan.quorum_closed,
                 buffered_late: plan.buffered_late,
                 stale_weight,
+                adversaries: plan.adversaries,
             });
             if let Some((path, every)) = &self.checkpoint {
                 if (t + 1) % every == 0 || t + 1 == self.cfg.rounds {
@@ -531,6 +541,7 @@ impl<'a, N: Transport> Coordinator<'a, N> {
                             edges: self.cfg.topology.edges() as u32,
                             consensus,
                             models,
+                            residuals: alg.snapshot_aux(),
                         }
                         .save(path)?;
                         crate::debug!("checkpoint saved to {path} at round {t}");

@@ -109,6 +109,9 @@ scenario knobs: --over-select N  --deadline-ms MS  --dropout-prob P
                 --topology flat|edge:E  --edge-dropout-prob P
                 --quorum Q  --max-staleness A  --staleness-decay D
                 --churn-prob P  --churn-period W
+hostile knobs:  --attack none|signflip:F|scale:F:GAMMA|collude:F
+                --trim-frac F  --mom-groups G  --error-feedback true
+                (robust tallies + EF — DESIGN.md §16)
 run `make artifacts` once before any train/table/fig subcommand.
 ";
 

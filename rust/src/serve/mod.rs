@@ -411,6 +411,14 @@ pub fn run_root_on(listener: &Listener, cfg: &ServeConfig) -> Result<RootReport>
                 FrameView::Tally { round, edge, payload: tf } => {
                     ensure!(round == t32, "round {t}: got a round-{round} merge frame");
                     tally_bytes += (body.len() - 9) as u64;
+                    // the mock root speaks the plain vote only: a tag-5
+                    // grouped frame (robust tallies — DESIGN.md §16) is
+                    // a protocol error here, not silently mis-merged
+                    ensure!(
+                        tf.group_count() == 0,
+                        "round {t}: edge {edge} sent a grouped tally frame \
+                         (robust kinds are not part of the serve protocol)"
+                    );
                     ensure!(
                         tf.quanta_len() == m,
                         "round {t}: edge {edge} tally over {} bits (want {m})",
@@ -617,6 +625,7 @@ pub fn run_edge_on(listener: &Listener, cfg: &ServeConfig) -> Result<()> {
                                 loss_sum: 0.0,
                                 scalar: 0,
                                 quanta: sh.acc.quanta().to_vec(),
+                                groups: Vec::new(),
                             }),
                         })?;
                     }

@@ -486,6 +486,171 @@ impl ScalarTally {
     }
 }
 
+/// Identity-bucketed robust tally: G independent [`VoteAccumulator`]
+/// partials, client `k` always folding into group `k mod G` (DESIGN.md
+/// §16). Because the bucket is a pure function of the client identity —
+/// never of arrival order, shard, or thread — every group tally inherits
+/// the 64.64 fixed-point exactness of its `VoteAccumulator`, so a
+/// grouped tally is bit-identical under any absorb order, shard count,
+/// and merge order, exactly like the plain vote.
+///
+/// Two robust closes read the same state:
+///
+/// * [`finish_trimmed`](GroupedTally::finish_trimmed) — per-coordinate
+///   trimmed sum over the *active* (absorbed > 0) group tallies. With
+///   `G = K` fleet clients each active group holds exactly one client's
+///   ±q contribution, making this the coordinate-wise trimmed mean over
+///   clients; `trim_frac = 0` sums every group and is bit-for-bit the
+///   plain [`VoteAccumulator::finish`] (inactive groups contribute
+///   exact zeros).
+/// * [`finish_median`](GroupedTally::finish_median) — per-coordinate
+///   median of the active group tallies (median-of-means over the i128
+///   quanta; an even count signs the exact sum of the two middle
+///   values). `G = 1` reduces to the plain vote verbatim.
+#[derive(Clone, Debug)]
+pub struct GroupedTally {
+    groups: Vec<VoteAccumulator>,
+}
+
+impl GroupedTally {
+    /// Empty grouped tally: `groups` ≥ 1 partials over m bits each.
+    pub fn new(m: usize, groups: usize) -> GroupedTally {
+        assert!(groups >= 1, "a grouped tally needs at least one group");
+        GroupedTally { groups: (0..groups).map(|_| VoteAccumulator::new(m)).collect() }
+    }
+
+    /// Logical sketch length m.
+    pub fn m(&self) -> usize {
+        self.groups[0].m()
+    }
+
+    /// Number of group partials G.
+    pub fn group_count(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// Sketches folded across all groups (including merged shards).
+    pub fn absorbed(&self) -> usize {
+        self.groups.iter().map(|g| g.absorbed()).sum()
+    }
+
+    /// The group partials, in group order (what a merge frame ships).
+    pub fn groups(&self) -> &[VoteAccumulator] {
+        &self.groups
+    }
+
+    /// The bucket client `k` folds into: `k mod G`. Identity-keyed so
+    /// the assignment is invariant under arrival order and sharding.
+    pub fn group_of(&self, client: usize) -> usize {
+        client % self.groups.len()
+    }
+
+    /// Fold client `k`'s sketch into its identity bucket.
+    pub fn absorb(&mut self, client: usize, z: &SignVec, weight: f64) {
+        let g = self.group_of(client);
+        self.groups[g].absorb(z, weight);
+    }
+
+    /// Zero-copy twin of [`absorb`](Self::absorb) over a borrowed wire
+    /// view — bit-identical by the same argument as
+    /// [`VoteAccumulator::absorb_view`].
+    pub fn absorb_view(&mut self, client: usize, z: &SignVecView<'_>, weight: f64) {
+        let g = self.group_of(client);
+        self.groups[g].absorb_view(z, weight);
+    }
+
+    /// Fold a sibling shard group-by-group (exact: each group pair is a
+    /// plain integer tally merge).
+    pub fn merge(&mut self, other: GroupedTally) {
+        assert_eq!(
+            other.group_count(),
+            self.group_count(),
+            "merging grouped tallies with different group counts"
+        );
+        for (a, b) in self.groups.iter_mut().zip(other.groups) {
+            a.merge(b);
+        }
+    }
+
+    /// Fold one group of a sibling shard read lazily off the wire —
+    /// the grouped counterpart of [`VoteAccumulator::merge_quanta`].
+    pub fn merge_group_quanta(
+        &mut self,
+        group: usize,
+        absorbed: usize,
+        quantum: impl Fn(usize) -> i128,
+    ) {
+        self.groups[group].merge_quanta(absorbed, quantum);
+    }
+
+    /// The ungrouped tally this state refines: the exact per-bit sum
+    /// over all groups (equals the plain [`VoteAccumulator`] the same
+    /// absorbs would have built).
+    pub fn total_quanta(&self) -> Vec<i128> {
+        let m = self.m();
+        let mut total = vec![0i128; m];
+        for g in &self.groups {
+            for (t, &q) in total.iter_mut().zip(g.quanta()) {
+                *t += q;
+            }
+        }
+        total
+    }
+
+    /// Coordinate-wise trimmed vote: per bit, sort the active groups'
+    /// quanta, drop `⌊trim_frac · active⌋` from each end (clamped so at
+    /// least one value survives), sign the exact sum of the rest (ties
+    /// → +1). `trim_frac = 0` is bit-for-bit the plain vote. Zero active
+    /// groups finish all-+1 like an empty [`VoteAccumulator`]; callers
+    /// gate on [`absorbed`](Self::absorbed) instead of adopting that.
+    pub fn finish_trimmed(&self, trim_frac: f64) -> SignVec {
+        let active: Vec<&VoteAccumulator> =
+            self.groups.iter().filter(|g| g.absorbed() > 0).collect();
+        let m = self.m();
+        if active.is_empty() {
+            return SignVec::from_fn(m, |_| true);
+        }
+        let mut t = (trim_frac * active.len() as f64).floor() as usize;
+        if 2 * t >= active.len() {
+            t = (active.len() - 1) / 2;
+        }
+        let mut vals = vec![0i128; active.len()];
+        SignVec::from_fn(m, |i| {
+            for (v, g) in vals.iter_mut().zip(&active) {
+                *v = g.quanta()[i];
+            }
+            vals.sort_unstable();
+            vals[t..vals.len() - t].iter().sum::<i128>() >= 0
+        })
+    }
+
+    /// Coordinate-wise median-of-means vote: per bit, the sign of the
+    /// median of the active groups' quanta (an even count signs the
+    /// exact i128 sum of the two middle values; ties → +1). One group
+    /// reduces to the plain vote verbatim.
+    pub fn finish_median(&self) -> SignVec {
+        let active: Vec<&VoteAccumulator> =
+            self.groups.iter().filter(|g| g.absorbed() > 0).collect();
+        let m = self.m();
+        if active.is_empty() {
+            return SignVec::from_fn(m, |_| true);
+        }
+        let mut vals = vec![0i128; active.len()];
+        SignVec::from_fn(m, |i| {
+            for (v, g) in vals.iter_mut().zip(&active) {
+                *v = g.quanta()[i];
+            }
+            vals.sort_unstable();
+            let n = vals.len();
+            if n % 2 == 1 {
+                vals[n / 2] >= 0
+            } else {
+                vals[n / 2 - 1] + vals[n / 2] >= 0
+            }
+        })
+    }
+}
+
 /// Uniform-weight majority vote on packed words via per-bit counters —
 /// the optimized path: one popcount-style pass, no f32 accumulator array
 /// walk per client bit. For K clients bit i wins (+1) iff
@@ -1001,5 +1166,234 @@ mod tests {
         let z = SignVec::from_signs(&[1.0, -1.0, 1.0, -1.0, -1.0]);
         let v = majority_vote_uniform(&[z.clone()], 5);
         assert_eq!(v, z);
+    }
+
+    /// Brute-force oracle for the robust closes: per coordinate, the
+    /// signed contributions of the active groups as exact i128 quanta.
+    fn grouped_reference(
+        sketches: &[SignVec],
+        weights: &[f64],
+        m: usize,
+        groups: usize,
+    ) -> Vec<Vec<i128>> {
+        // per-group per-bit quanta, identity-bucketed like GroupedTally
+        let mut per_group = vec![vec![0i128; m]; groups];
+        for (k, (z, &w)) in sketches.iter().zip(weights).enumerate() {
+            let q = quantize_weight(w);
+            for i in 0..m {
+                per_group[k % groups][i] += if z.bit(i) { q } else { -q };
+            }
+        }
+        per_group
+    }
+
+    #[test]
+    fn grouped_tally_trim_zero_and_one_group_reduce_to_vote() {
+        check("grouped_reduces_to_vote", 40, |rng| {
+            let m = rng.below(200) + 1;
+            let k = rng.below(12) + 1;
+            let groups = rng.below(6) + 1;
+            let sketches: Vec<SignVec> = (0..k)
+                .map(|_| {
+                    SignVec::from_words(
+                        (0..m.div_ceil(64)).map(|_| rng.next_u64()).collect(),
+                        m,
+                    )
+                })
+                .collect();
+            let weights: Vec<f64> =
+                (0..k).map(|_| rng.f64() + 0.01).collect();
+
+            let mut vote = VoteAccumulator::new(m);
+            let mut grouped = GroupedTally::new(m, groups);
+            let mut one_group = GroupedTally::new(m, 1);
+            for (c, (z, &w)) in sketches.iter().zip(&weights).enumerate() {
+                vote.absorb(z, w);
+                grouped.absorb(c, z, w);
+                one_group.absorb(c, z, w);
+            }
+            // trim=0 sums every active group; inactive groups hold exact
+            // zeros, so the total IS the plain vote tally bit for bit
+            if grouped.total_quanta() != vote.quanta() {
+                return Err(format!("total_quanta != vote quanta (m={m} k={k} g={groups})"));
+            }
+            if grouped.finish_trimmed(0.0) != vote.finish() {
+                return Err(format!("trim=0 finish != vote finish (m={m} k={k} g={groups})"));
+            }
+            // one group: the median of a single value is that value
+            if one_group.finish_median() != vote.finish() {
+                return Err(format!("groups=1 median != vote finish (m={m} k={k})"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn grouped_tally_matches_brute_force_references() {
+        check("grouped_vs_reference", 40, |rng| {
+            let m = rng.below(150) + 1;
+            let k = rng.below(15) + 1;
+            let groups = rng.below(8) + 1;
+            let trim_frac = rng.f64() * 0.49;
+            let sketches: Vec<SignVec> = (0..k)
+                .map(|_| {
+                    SignVec::from_words(
+                        (0..m.div_ceil(64)).map(|_| rng.next_u64()).collect(),
+                        m,
+                    )
+                })
+                .collect();
+            let weights: Vec<f64> =
+                (0..k).map(|_| rng.f64() + 0.01).collect();
+
+            let mut tally = GroupedTally::new(m, groups);
+            for (c, (z, &w)) in sketches.iter().zip(&weights).enumerate() {
+                tally.absorb(c, z, w);
+            }
+
+            let per_group = grouped_reference(&sketches, &weights, m, groups);
+            // a group is active iff some client index maps to it
+            let active: Vec<usize> = (0..groups)
+                .filter(|&g| (0..k).any(|c| c % groups == g))
+                .collect();
+
+            let mut t = (trim_frac * active.len() as f64).floor() as usize;
+            if 2 * t >= active.len() {
+                t = (active.len() - 1) / 2;
+            }
+            let want_trim = SignVec::from_fn(m, |i| {
+                let mut vals: Vec<i128> =
+                    active.iter().map(|&g| per_group[g][i]).collect();
+                vals.sort_unstable();
+                vals[t..vals.len() - t].iter().sum::<i128>() >= 0
+            });
+            if tally.finish_trimmed(trim_frac) != want_trim {
+                return Err(format!(
+                    "trimmed finish != reference (m={m} k={k} g={groups} trim={trim_frac})"
+                ));
+            }
+
+            let want_med = SignVec::from_fn(m, |i| {
+                let mut vals: Vec<i128> =
+                    active.iter().map(|&g| per_group[g][i]).collect();
+                vals.sort_unstable();
+                let n = vals.len();
+                if n % 2 == 1 {
+                    vals[n / 2] >= 0
+                } else {
+                    vals[n / 2 - 1] + vals[n / 2] >= 0
+                }
+            });
+            if tally.finish_median() != want_med {
+                return Err(format!(
+                    "median finish != reference (m={m} k={k} g={groups})"
+                ));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn grouped_tally_is_order_shard_and_merge_invariant() {
+        // the grouped analogue of the streaming-accumulator oracle test:
+        // any absorb order, any shard split, any merge order → the same
+        // bits, because buckets are identity-keyed and quanta are i128
+        check("grouped_order_shard_invariance", 30, |rng| {
+            let m = rng.below(200) + 1;
+            let k = rng.below(14) + 2;
+            let groups = rng.below(5) + 1;
+            let trim_frac = rng.f64() * 0.49;
+            let sketches: Vec<SignVec> = (0..k)
+                .map(|_| {
+                    SignVec::from_words(
+                        (0..m.div_ceil(64)).map(|_| rng.next_u64()).collect(),
+                        m,
+                    )
+                })
+                .collect();
+            let weights: Vec<f64> =
+                (0..k).map(|_| rng.f64() + 0.01).collect();
+
+            // reference: absorb in client order into one tally
+            let mut reference = GroupedTally::new(m, groups);
+            for (c, (z, &w)) in sketches.iter().zip(&weights).enumerate() {
+                reference.absorb(c, z, w);
+            }
+
+            // permuted absorb order across 1..5 shards, merged shuffled
+            let mut order: Vec<usize> = (0..k).collect();
+            for i in (1..k).rev() {
+                order.swap(i, rng.below(i + 1));
+            }
+            let shards = rng.below(5) + 1;
+            let mut parts: Vec<GroupedTally> =
+                (0..shards).map(|_| GroupedTally::new(m, groups)).collect();
+            for (pos, &c) in order.iter().enumerate() {
+                parts[pos % shards].absorb(c, &sketches[c], weights[c]);
+            }
+            for i in (1..parts.len()).rev() {
+                parts.swap(i, rng.below(i + 1));
+            }
+            let mut merged = parts.remove(0);
+            for p in parts {
+                merged.merge(p);
+            }
+
+            if merged.total_quanta() != reference.total_quanta() {
+                return Err("sharded total_quanta diverged".into());
+            }
+            for (a, b) in merged.groups().iter().zip(reference.groups()) {
+                if a.quanta() != b.quanta() || a.absorbed() != b.absorbed() {
+                    return Err("per-group quanta diverged under sharding".into());
+                }
+            }
+            if merged.finish_trimmed(trim_frac)
+                != reference.finish_trimmed(trim_frac)
+            {
+                return Err("trimmed finish diverged under sharding".into());
+            }
+            if merged.finish_median() != reference.finish_median() {
+                return Err("median finish diverged under sharding".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn grouped_tally_trim_drops_outlier_groups() {
+        // 5 clients in 5 groups vote +1 with weight 1 on every bit; one
+        // adversary votes -1 with weight 100. trim_frac=0.25 trims one
+        // value from each end, dropping the adversary's group entirely.
+        let m = 67;
+        let honest = SignVec::from_fn(m, |_| true);
+        let hostile = SignVec::from_fn(m, |_| false);
+        let mut tally = GroupedTally::new(m, 5);
+        for c in 0..4 {
+            tally.absorb(c, &honest, 1.0);
+        }
+        tally.absorb(4, &hostile, 100.0);
+        // untrimmed: the heavy adversary wins every coordinate
+        assert_eq!(tally.finish_trimmed(0.0), hostile);
+        // trimmed: the adversary (sole minimum) is dropped, honest wins
+        assert_eq!(tally.finish_trimmed(0.25), honest);
+        // median of [−100, 1, 1, 1, 1] sorted quanta is +1: honest wins
+        assert_eq!(tally.finish_median(), honest);
+    }
+
+    #[test]
+    fn grouped_tally_empty_and_clamped_trim_edges() {
+        // zero absorbs → all-+1, mirroring the empty VoteAccumulator
+        let empty = GroupedTally::new(33, 4);
+        assert_eq!(empty.absorbed(), 0);
+        assert_eq!(empty.finish_trimmed(0.3), SignVec::from_fn(33, |_| true));
+        assert_eq!(empty.finish_median(), SignVec::from_fn(33, |_| true));
+        // a trim that would drop every active group clamps so at least
+        // one value survives: with 2 active groups and trim 0.49 → t=0
+        let z = SignVec::from_fn(10, |_| false);
+        let mut two = GroupedTally::new(10, 8);
+        two.absorb(0, &z, 1.0);
+        two.absorb(1, &z, 1.0);
+        assert_eq!(two.absorbed(), 2);
+        assert_eq!(two.finish_trimmed(0.49), z);
     }
 }

@@ -1,0 +1,213 @@
+//! Adversarial training battery: Byzantine clients injected at the
+//! uplink boundary versus the three sign-tally aggregators.
+//!
+//! Every attack in the matrix (`signflip`, `scale`, `collude`) is run
+//! against every aggregation kind (plain `Vote`, `TrimmedVote`,
+//! `MedianOfMeans`); the robust tallies must hold an accuracy floor
+//! relative to the clean baseline, while the unprotected majority vote
+//! must measurably degrade under a heavy sign-flip fleet.
+//!
+//! Requires `make artifacts` (skips gracefully otherwise). PJRT handles
+//! are not Send/Sync, so each #[test] builds its own Lab.
+
+use pfed1bs::config::{Attack, RunConfig};
+use pfed1bs::coordinator::RunResult;
+use pfed1bs::data::DatasetName;
+use pfed1bs::experiments::Lab;
+
+fn artifacts_available() -> bool {
+    std::path::Path::new("artifacts/manifest.txt").exists()
+}
+
+fn hostile_cfg() -> RunConfig {
+    let mut cfg = RunConfig::preset(DatasetName::Mnist);
+    cfg.algorithm = "pfed1bs".to_string();
+    cfg.rounds = 4;
+    cfg.local_steps = 5;
+    cfg.eval_every = 3;
+    cfg.seed = 41;
+    cfg
+}
+
+fn with_attack(mut cfg: RunConfig, spec: &str) -> RunConfig {
+    cfg.attack = Attack::parse(spec).unwrap_or_else(|e| panic!("{spec}: {e:#}"));
+    cfg
+}
+
+/// Total consensus churn over the run: sum of per-round sign flips in
+/// the broadcast consensus (the stability metric from DESIGN.md §8).
+fn total_flips(result: &RunResult) -> usize {
+    result
+        .history
+        .records
+        .iter()
+        .filter_map(|r| r.consensus_flips)
+        .sum()
+}
+
+fn total_adversaries(result: &RunResult) -> usize {
+    result.history.records.iter().map(|r| r.adversaries).sum()
+}
+
+#[test]
+fn vote_degrades_under_signflip_while_robust_tallies_hold() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let lab = Lab::new("artifacts").expect("lab");
+
+    // Clean baseline: no attack, plain majority vote.
+    let clean = lab.run(hostile_cfg()).unwrap_or_else(|e| panic!("clean: {e:#}"));
+    assert!(
+        clean.final_accuracy > 0.60,
+        "clean baseline below floor: {:.3}",
+        clean.final_accuracy
+    );
+    assert!(
+        clean.history.records.iter().all(|r| r.adversaries == 0),
+        "clean run must record zero adversaries every round"
+    );
+
+    // (a) heavy sign-flip fleet vs the unprotected majority vote:
+    // either the personalized accuracy drops or the consensus churns
+    // far more than the converging clean run — both are the visible
+    // signatures of a corrupted tally.
+    let attacked = lab
+        .run(with_attack(hostile_cfg(), "signflip:0.4"))
+        .unwrap_or_else(|e| panic!("signflip vote: {e:#}"));
+    assert!(
+        total_adversaries(&attacked) > 0,
+        "signflip:0.4 marked no adversaries across the run"
+    );
+    let acc_degraded = attacked.final_accuracy < clean.final_accuracy - 0.02;
+    let consensus_churned = total_flips(&attacked) > (2 * total_flips(&clean)).max(4);
+    assert!(
+        acc_degraded || consensus_churned,
+        "plain Vote showed no damage under signflip:0.4 \
+         (acc {:.3} vs clean {:.3}, flips {} vs clean {})",
+        attacked.final_accuracy,
+        clean.final_accuracy,
+        total_flips(&attacked),
+        total_flips(&clean)
+    );
+
+    // (b) full matrix: each attack at F = 0.25 against each robust
+    // tally must stay within a fixed margin of the clean baseline.
+    let floor = clean.final_accuracy - 0.15;
+    for spec in ["signflip:0.25", "scale:0.25:-1", "collude:0.25"] {
+        // Plain Vote row: must run to completion and mark adversaries
+        // (no accuracy floor — Vote is the unprotected baseline).
+        let vote = lab
+            .run(with_attack(hostile_cfg(), spec))
+            .unwrap_or_else(|e| panic!("{spec} vote: {e:#}"));
+        assert!(
+            total_adversaries(&vote) > 0,
+            "{spec}: vote run marked no adversaries"
+        );
+
+        // Coordinate-wise trimmed vote.
+        let mut trimmed_cfg = with_attack(hostile_cfg(), spec);
+        trimmed_cfg.trim_frac = 0.3;
+        let trimmed = lab
+            .run(trimmed_cfg)
+            .unwrap_or_else(|e| panic!("{spec} trimmed: {e:#}"));
+        assert!(
+            trimmed.final_accuracy > floor,
+            "{spec}: trimmed vote accuracy {:.3} below floor {:.3}",
+            trimmed.final_accuracy,
+            floor
+        );
+
+        // Median-of-means over 5 client groups.
+        let mut mom_cfg = with_attack(hostile_cfg(), spec);
+        mom_cfg.mom_groups = 5;
+        let mom = lab
+            .run(mom_cfg)
+            .unwrap_or_else(|e| panic!("{spec} mom: {e:#}"));
+        assert!(
+            mom.final_accuracy > floor,
+            "{spec}: median-of-means accuracy {:.3} below floor {:.3}",
+            mom.final_accuracy,
+            floor
+        );
+    }
+}
+
+#[test]
+fn robust_tallies_match_clean_vote_without_adversaries() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let lab = Lab::new("artifacts").expect("lab");
+
+    // With no attack armed, trim = 0 and groups = 1 reduce bit-for-bit
+    // to the plain vote, so the training trajectory is identical.
+    let vote = lab.run(hostile_cfg()).unwrap_or_else(|e| panic!("vote: {e:#}"));
+
+    let mut trim0 = hostile_cfg();
+    trim0.trim_frac = 0.0;
+    trim0.mom_groups = 1;
+    let reduced = lab.run(trim0).unwrap_or_else(|e| panic!("reduced: {e:#}"));
+    assert_eq!(
+        vote.final_accuracy, reduced.final_accuracy,
+        "trim=0/groups=1 must reproduce the plain vote exactly"
+    );
+    let losses = |r: &RunResult| -> Vec<f64> {
+        r.history.records.iter().map(|x| x.train_loss).collect()
+    };
+    assert_eq!(losses(&vote), losses(&reduced));
+
+    // A robust tally on an honest fleet still has to learn: trimming
+    // 30% of an all-honest cohort costs accuracy, not correctness.
+    let mut trimmed_cfg = hostile_cfg();
+    trimmed_cfg.trim_frac = 0.3;
+    let trimmed = lab
+        .run(trimmed_cfg)
+        .unwrap_or_else(|e| panic!("honest trimmed: {e:#}"));
+    assert!(
+        trimmed.final_accuracy > 0.50,
+        "honest trimmed vote below floor: {:.3}",
+        trimmed.final_accuracy
+    );
+}
+
+#[test]
+fn error_feedback_learns_and_is_deterministic() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let lab = Lab::new("artifacts").expect("lab");
+
+    let mut cfg = hostile_cfg();
+    cfg.error_feedback = true;
+    let a = lab.run(cfg.clone()).unwrap_or_else(|e| panic!("ef a: {e:#}"));
+    assert!(
+        a.final_accuracy > 0.50,
+        "error feedback run below floor: {:.3}",
+        a.final_accuracy
+    );
+
+    // Same seed, same residual trajectory: byte-identical history.
+    let b = lab.run(cfg).unwrap_or_else(|e| panic!("ef b: {e:#}"));
+    assert_eq!(a.final_accuracy, b.final_accuracy);
+    let losses = |r: &RunResult| -> Vec<f64> {
+        r.history.records.iter().map(|x| x.train_loss).collect()
+    };
+    assert_eq!(losses(&a), losses(&b));
+
+    // Error feedback also composes with a hostile fleet + robust tally.
+    let mut hostile = with_attack(hostile_cfg(), "signflip:0.25");
+    hostile.error_feedback = true;
+    hostile.trim_frac = 0.3;
+    let robust = lab
+        .run(hostile)
+        .unwrap_or_else(|e| panic!("ef hostile: {e:#}"));
+    assert!(
+        robust.final_accuracy > 0.45,
+        "EF + trimmed vote under signflip:0.25 below floor: {:.3}",
+        robust.final_accuracy
+    );
+}

@@ -8,12 +8,14 @@
 use pfed1bs::algorithms::{
     AggKind, Algorithm, ClientOutput, ClientStats, RoundAggregator, ServerCtx, Uplink,
 };
-use pfed1bs::comm::{encode, Direction, LatencyModel, Ledger, Payload, SimNetwork};
-use pfed1bs::config::{RunConfig, Topology};
+use pfed1bs::comm::{decode, encode, Direction, LatencyModel, Ledger, Payload, SimNetwork};
+use pfed1bs::config::{Attack, RunConfig, Topology};
 use pfed1bs::coordinator::parallel::par_map_consume;
 use pfed1bs::coordinator::{plan_round, plan_round_buffered, RoundPlan};
 use pfed1bs::data::{generate, DatasetName, DatasetSpec, Partition};
-use pfed1bs::sketch::bitpack::{majority_vote_weighted, SignVec, VoteAccumulator};
+use pfed1bs::sketch::bitpack::{
+    majority_vote_weighted, GroupedTally, SignVec, VoteAccumulator,
+};
 use pfed1bs::sketch::{Projection, SrhtOperator};
 use pfed1bs::util::proptest::check;
 use pfed1bs::util::rng::Rng;
@@ -482,11 +484,15 @@ fn assert_barrier_identical(a: &RoundPlan, b: &RoundPlan) -> Result<(), String> 
     if a.arrivals.len() != b.arrivals.len() {
         return Err("arrival counts diverged".into());
     }
+    if a.adversaries != b.adversaries {
+        return Err("adversary counts diverged".into());
+    }
     for (x, y) in a.arrivals.iter().zip(&b.arrivals) {
         if x.buffered || y.buffered || x.staleness != 0 || y.staleness != 0 {
             return Err("barrier arrival carried staleness state".into());
         }
-        if (x.task, x.client, x.accepted) != (y.task, y.client, y.accepted)
+        if (x.task, x.client, x.accepted, x.adversarial)
+            != (y.task, y.client, y.accepted, y.adversarial)
             || x.at_ms.to_bits() != y.at_ms.to_bits()
             || x.weight.to_bits() != y.weight.to_bits()
         {
@@ -628,6 +634,231 @@ fn prop_default_quorum_knobs_reduce_to_the_barrier_engine_bit_for_bit() {
                 }
                 if bytes[0] != bytes[1] {
                     return Err("wire bytes diverged between barrier spellings".into());
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Arming an attack must not perturb planning (DESIGN.md §16): the
+/// adversary draw is a stateless SplitMix64 stream, so across random
+/// scenario knobs the armed plan matches the honest plan bit for bit in
+/// every field except the marks themselves; under `attack = none` no
+/// arrival is ever marked; and the marks replay identically — they are
+/// a pure function of `(seed, t, k)`, not of planner state.
+#[test]
+fn prop_attack_marks_are_stateless_and_plan_inert() {
+    check("attack_plan_inert", 20, |rng| {
+        let mut cfg = RunConfig::preset(DatasetName::Mnist);
+        cfg.clients = rng.below(20) + 6;
+        cfg.participating = rng.below(cfg.clients - 2) + 2;
+        cfg.dropout_prob = rng.f64() * 0.3;
+        if rng.f32() < 0.5 {
+            cfg.latency = LatencyModel::Uniform { lo_ms: 1.0, hi_ms: 20.0 };
+            cfg.deadline_ms = 10.0;
+        }
+        cfg.validate().map_err(|e| e.to_string())?;
+        let mut armed = cfg.clone();
+        armed.attack = Attack::SignFlip { frac: 0.2 + rng.f64() * 0.6 };
+        armed.validate().map_err(|e| e.to_string())?;
+
+        let seed = rng.next_u64();
+        let raw: Vec<f32> = (0..cfg.clients).map(|_| rng.f32() + 0.01).collect();
+        let total: f32 = raw.iter().sum();
+        let weights: Vec<f32> = raw.iter().map(|&p| p / total).collect();
+        let honest = three_plans(&cfg, seed, &weights);
+        let hostile = three_plans(&armed, seed, &weights);
+        let replay = three_plans(&armed, seed, &weights);
+        for ((h, a), a2) in honest.iter().zip(&hostile).zip(&replay) {
+            if h.adversaries != 0 || h.arrivals.iter().any(|x| x.adversarial) {
+                return Err("attack=none marked an arrival".into());
+            }
+            if h.selected != a.selected
+                || h.computing != a.computing
+                || h.delivered != a.delivered
+                || h.dropped != a.dropped
+                || h.stragglers_cut != a.stragglers_cut
+                || h.norm_total.to_bits() != a.norm_total.to_bits()
+            {
+                return Err("arming the attack perturbed the plan".into());
+            }
+            for (x, y) in h.arrivals.iter().zip(&a.arrivals) {
+                if (x.task, x.client, x.accepted) != (y.task, y.client, y.accepted)
+                    || x.at_ms.to_bits() != y.at_ms.to_bits()
+                    || x.weight.to_bits() != y.weight.to_bits()
+                {
+                    return Err("arrival bits diverged under the attack knob".into());
+                }
+            }
+            let marks: Vec<bool> = a.arrivals.iter().map(|x| x.adversarial).collect();
+            let marks2: Vec<bool> = a2.arrivals.iter().map(|x| x.adversarial).collect();
+            if marks != marks2 {
+                return Err("adversary marks failed to replay".into());
+            }
+            if a.adversaries != marks.iter().filter(|&&b| b).count() {
+                return Err("plan adversary count != marked arrivals".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+/// DESIGN.md §16's robust tallies at the aggregator level: disarmed
+/// (`trim = 0` / one group) they reproduce the plain vote bit for bit,
+/// and armed or disarmed the per-group quanta and finished consensus
+/// are invariant to shard count 1..5, absorb permutation, worker
+/// threads {1, 4}, and whether shards merge in memory or over tag-5
+/// wire frames — both the owned decode and the zero-copy view.
+#[test]
+fn prop_robust_tallies_reduce_to_vote_and_merge_exactly() {
+    // pull (per-group quanta, per-group absorbed, finished consensus)
+    // out of a closed robust aggregator
+    fn robust_parts(
+        kind: AggKind,
+    ) -> Result<(Vec<Vec<i128>>, Vec<usize>, SignVec), String> {
+        match kind {
+            AggKind::TrimmedVote { tally, trim_frac } => Ok((
+                tally.groups().iter().map(|g| g.quanta().to_vec()).collect(),
+                tally.groups().iter().map(|g| g.absorbed()).collect(),
+                tally.finish_trimmed(trim_frac),
+            )),
+            AggKind::MedianOfMeans { groups } => Ok((
+                groups.groups().iter().map(|g| g.quanta().to_vec()).collect(),
+                groups.groups().iter().map(|g| g.absorbed()).collect(),
+                groups.finish_median(),
+            )),
+            _ => Err("not a robust aggregator kind".into()),
+        }
+    }
+
+    check("robust_tally_exactness", 8, |rng| {
+        let m = rng.below(180) + 1;
+        let clients = rng.below(10) + 3;
+        let weights: Vec<f32> = (0..clients).map(|_| rng.f32() + 0.05).collect();
+        let mut outs: Vec<ClientOutput> = Vec::with_capacity(clients);
+        for k in 0..clients {
+            let z = SignVec::from_fn(m, |_| rng.f32() < 0.5);
+            outs.push(ClientOutput {
+                client: k,
+                uplink: Some(Uplink::new(0, Payload::Signs(z))),
+                state: None,
+                stats: ClientStats::default(),
+            });
+        }
+
+        // the plain-vote oracle over the same uplinks
+        let mut vote = RoundAggregator::new(AggKind::Vote(VoteAccumulator::new(m)));
+        for (k, out) in outs.iter().enumerate() {
+            vote.absorb(out.clone(), weights[k]).map_err(|e| e.to_string())?;
+        }
+        let (AggKind::Vote(vt), _, _, _) = vote.into_parts() else {
+            return Err("vote oracle kind".into());
+        };
+
+        // (trimmed?, trim_frac, group count, reduces-to-vote?)
+        let mom_g = rng.below(3) + 2;
+        let arms: [(bool, f64, usize, bool); 4] = [
+            (true, 0.0, clients, true),
+            (false, 0.0, 1, true),
+            (true, 0.25, clients, false),
+            (false, 0.0, mom_g, false),
+        ];
+        for (trimmed, trim_frac, g, disarmed) in arms {
+            let fresh = || {
+                if trimmed {
+                    RoundAggregator::new(AggKind::TrimmedVote {
+                        tally: GroupedTally::new(m, g),
+                        trim_frac,
+                    })
+                } else {
+                    RoundAggregator::new(AggKind::MedianOfMeans {
+                        groups: GroupedTally::new(m, g),
+                    })
+                }
+            };
+            // flat reference in selection order
+            let mut flat = fresh();
+            for (k, out) in outs.iter().enumerate() {
+                flat.absorb(out.clone(), weights[k]).map_err(|e| e.to_string())?;
+            }
+            let (want_q, want_a, want_v) = robust_parts(flat.into_parts().0)?;
+            if disarmed {
+                let total: Vec<i128> = (0..m)
+                    .map(|i| want_q.iter().map(|gq| gq[i]).sum::<i128>())
+                    .collect();
+                if total != vt.quanta() {
+                    return Err("disarmed robust quanta != vote quanta".into());
+                }
+                if want_v != vt.finish() {
+                    return Err("disarmed robust finish != vote finish".into());
+                }
+            }
+
+            for shards in 1..=5usize {
+                let mut order: Vec<usize> = (0..clients).collect();
+                rng.shuffle(&mut order);
+                let mut parts: Vec<RoundAggregator> =
+                    (0..shards).map(|_| fresh()).collect();
+                for &k in &order {
+                    parts[k % shards]
+                        .absorb(outs[k].clone(), weights[k])
+                        .map_err(|e| e.to_string())?;
+                }
+
+                // wire merges first (merge_payload borrows the shards):
+                // one root over owned decodes, one over zero-copy views
+                let mut root_owned = fresh();
+                let mut root_view = fresh();
+                for p in &parts {
+                    let frame = p.merge_payload().ok_or("robust kind shipped no frame")?;
+                    let bytes = encode(&frame);
+                    root_owned
+                        .absorb_frame(decode(&bytes).map_err(|e| e.to_string())?)
+                        .map_err(|e| e.to_string())?;
+                    let view = Payload::decode_borrowed(&bytes).map_err(|e| e.to_string())?;
+                    let pfed1bs::comm::codec::PayloadView::TallyFrame(tv) = view else {
+                        return Err("grouped frame decoded to a non-tally view".into());
+                    };
+                    root_view.absorb_frame_view(&tv).map_err(|e| e.to_string())?;
+                }
+                // then the in-memory merge, consuming the shards
+                let mut it = parts.into_iter();
+                let mut root_mem = it.next().unwrap();
+                for s in it {
+                    root_mem.merge(s).map_err(|e| e.to_string())?;
+                }
+
+                for (label, root) in
+                    [("memory", root_mem), ("owned-wire", root_owned), ("view-wire", root_view)]
+                {
+                    let (q, a, v) = robust_parts(root.into_parts().0)?;
+                    if q != want_q || a != want_a || v != want_v {
+                        return Err(format!(
+                            "{label} merge diverged (shards={shards}, trimmed={trimmed}, g={g})"
+                        ));
+                    }
+                }
+            }
+
+            // engine-shaped threading: worker threads map, the caller
+            // thread folds in a fixed order — quanta must not care
+            let order: Vec<usize> = (0..clients).collect();
+            for threads in [1usize, 4] {
+                let mut agg = fresh();
+                par_map_consume(
+                    outs.clone(),
+                    threads,
+                    &order,
+                    |_, out: ClientOutput| out,
+                    |_, out: ClientOutput| -> Result<(), String> {
+                        let w = weights[out.client];
+                        agg.absorb(out, w).map_err(|e| e.to_string())
+                    },
+                )?;
+                let (q, a, v) = robust_parts(agg.into_parts().0)?;
+                if q != want_q || a != want_a || v != want_v {
+                    return Err(format!("threads={threads} diverged"));
                 }
             }
         }

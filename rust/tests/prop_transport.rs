@@ -85,6 +85,7 @@ fn rand_frame(rng: &mut Rng) -> Frame {
                 loss_sum: rng.f64(),
                 scalar: rand_i128(rng),
                 quanta: (0..1 + rng.below(40)).map(|_| rand_i128(rng)).collect(),
+                groups: Vec::new(),
             }),
         },
         5 => Frame::Ack { round: rng.next_u32() >> 20, client: rng.next_u32() >> 16 },
@@ -120,6 +121,7 @@ fn sample_frames() -> Vec<Frame> {
                 loss_sum: 1.25,
                 scalar: -7,
                 quanta: vec![i128::MAX, i128::MIN, 0, 1, -1],
+                groups: Vec::new(),
             }),
         },
         Frame::Ack { round: 9, client: 1023 },
